@@ -1,0 +1,115 @@
+//! END-TO-END VALIDATION DRIVER (the serving-paper e2e required by
+//! DESIGN.md): load real AOT-compiled models and serve batched requests
+//! through the full three-layer stack —
+//!
+//!   L1 Pallas matmul kernels → L2 JAX variant graphs (AOT, HLO text) →
+//!   L3 Rust: PJRT executor pool + central batching queues +
+//!   thread-per-replica serving + LSTM predictor (also via PJRT) +
+//!   the IP optimizer reconfiguring variants/batches/replicas live.
+//!
+//! Python is not running anywhere in this process.  The run reports
+//! throughput, latency percentiles, SLA attainment, and the adapter's
+//! live reconfiguration log; EXPERIMENTS.md records a reference run.
+//!
+//! Requires artifacts: `make artifacts` first.
+//! Run: `cargo run --release --example e2e_serve [-- --seconds 60 --time-scale 0.5]`
+
+use ipa::coordinator::adapter::Policy;
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines;
+use ipa::serving::engine::{serve, ServeConfig};
+use ipa::serving::loadgen::LoadGenConfig;
+use ipa::util::cli::Args;
+use ipa::workload::trace::Trace;
+use ipa::workload::tracegen::Pattern;
+
+fn main() {
+    let args = Args::from_env();
+    let pipeline = args.get_or("pipeline", "video").to_string();
+    let seconds = args.get_usize("seconds", 60);
+    let time_scale = args.get_f64("time-scale", 0.5);
+    let pattern =
+        Pattern::from_name(args.get_or("pattern", "fluctuating")).unwrap_or(Pattern::Fluctuating);
+
+    let Some(spec) = pipelines::by_name(&pipeline) else {
+        eprintln!("unknown pipeline {pipeline}");
+        std::process::exit(2);
+    };
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let cfg = ServeConfig {
+        artifact_dir: "artifacts".into(),
+        executors: 2,
+        max_workers: 6,
+        interval: 4.0,
+        apply_delay: 0.5,
+        use_lstm: true,
+        profile_batches: vec![1, 4, 16, 64],
+        profile_reps: 3,
+        sla_floor: args.get_f64("sla-floor", 0.25),
+    };
+    let lg = LoadGenConfig { time_scale, seed: args.get_u64("seed", 11) };
+    let trace = Trace::synthetic(pattern, seconds);
+
+    println!(
+        "e2e live serve: pipeline={pipeline} workload={} trace={seconds}s \
+         at {time_scale}x wall compression",
+        pattern.name()
+    );
+    println!("startup: compiling artifacts + measuring live profiles ...");
+    let t0 = std::time::Instant::now();
+    let rep = serve(&spec, Policy::Ipa(AccuracyMetric::Pas), &cfg, lg, &trace)
+        .expect("live serve");
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = &rep.metrics;
+    let s = m.latency_summary();
+    println!("\n--- measured live profiles (ms, batch-1 under 1 replica) ---");
+    for st in &rep.profiles.stages {
+        for vp in &st.variants {
+            println!(
+                "  {:<26} l(1)={:>7.2}ms l(64)={:>8.2}ms tput(64)={:>7.1}/s",
+                vp.variant.key(),
+                vp.latency.latency(1) * 1e3,
+                vp.latency.latency(64) * 1e3,
+                vp.latency.throughput(64)
+            );
+        }
+    }
+    println!("\n--- run results ---");
+    println!("live SLA (Swayam rule over measured profiles): {:.1} ms", rep.sla * 1e3);
+    println!(
+        "requests {} | completed {} | dropped {:.2}% | SLA attainment {:.1}%",
+        m.requests.len(),
+        m.latencies().len(),
+        m.drop_rate() * 100.0,
+        m.sla_attainment() * 100.0
+    );
+    println!(
+        "latency p50 {:.1} ms | p95 {:.1} ms | p99 {:.1} ms | max {:.1} ms",
+        s.p50 * 1e3,
+        s.p95 * 1e3,
+        s.p99 * 1e3,
+        s.max * 1e3
+    );
+    println!(
+        "throughput {:.1} req/s over {:.1}s wall",
+        m.latencies().len() as f64 / wall.max(1e-9),
+        wall
+    );
+    println!("\n--- adapter reconfiguration log ---");
+    for iv in &m.intervals {
+        println!(
+            "  t={:>6.1}s λ_obs={:>6.1} λ_lstm={:>6.1} pas={:>6.2} cost={:>5.1} [{}]",
+            iv.t,
+            iv.lambda_observed,
+            iv.lambda_predicted,
+            iv.pas,
+            iv.cost,
+            iv.variants.join(", ")
+        );
+    }
+}

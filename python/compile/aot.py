@@ -1,0 +1,162 @@
+"""AOT compiler: lower every L2 graph to HLO text + write the manifest.
+
+This is the single build-time entry point (`make artifacts`).  Python
+never runs again after this: the Rust coordinator loads the HLO text via
+`HloModuleProto::from_text_file` on the PJRT CPU client.
+
+Interchange format is HLO *text*, not `.serialize()` — the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction ids;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  variants/<stage>.<name>_b<batch>.hlo.txt   29 variants x 7 batch sizes
+  predictor/lstm.hlo.txt                     trained LSTM forward pass
+  manifest.json                              index + check values + metrics
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, predictor, registry
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals
+    # as "{...}", which the rust-side HLO parser reads as zeros — the
+    # baked LSTM weights would silently vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_variant(spec: registry.VariantSpec, batch: int) -> str:
+    fwd = model.make_forward(spec, batch)
+    args = [model.input_spec(spec, batch)] + model.param_specs(spec)
+    lowered = jax.jit(fwd).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_predictor(params_np) -> str:
+    fwd = predictor.make_export_forward(params_np)
+    spec = jax.ShapeDtypeStruct((1, predictor.HISTORY), np.float32)
+    lowered = jax.jit(fwd).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def emit_variants(out_dir, stages, batches, log):
+    entries = []
+    os.makedirs(os.path.join(out_dir, "variants"), exist_ok=True)
+    todo = [v for v in registry.VARIANTS if v.stage_type in stages]
+    for vi, spec in enumerate(todo):
+        check = model.check_value(spec, batch=1)
+        for batch in batches:
+            name = f"{spec.key}_b{batch}.hlo.txt"
+            path = os.path.join("variants", name)
+            t0 = time.time()
+            text = lower_variant(spec, batch)
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(text)
+            entries.append({
+                "kind": "variant",
+                "stage_type": spec.stage_type,
+                "variant": spec.name,
+                "key": spec.key,
+                "batch": batch,
+                "path": path,
+                "hidden": spec.hidden,
+                "layers": spec.layers,
+                "params_m": spec.params_m,
+                "base_alloc": spec.base_alloc,
+                "accuracy": spec.accuracy,
+                "flops": spec.flops(batch),
+                # batch-1 check value (same params for every batch)
+                "check_sum_b1": check,
+            })
+            log(f"[{vi + 1}/{len(todo)}] {spec.key} b={batch} "
+                f"({time.time() - t0:.1f}s, {len(text)} chars)")
+    return entries
+
+
+def emit_predictor(out_dir, log, steps=400):
+    os.makedirs(os.path.join(out_dir, "predictor"), exist_ok=True)
+    log("training LSTM predictor ...")
+    params_np, metrics = predictor.train(steps=steps, log=log)
+    log(f"predictor test SMAPE: {metrics['test_smape_pct']:.2f}% "
+        f"(paper: 6.6%)")
+    text = lower_predictor(params_np)
+    path = os.path.join("predictor", "lstm.hlo.txt")
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+
+    # Deterministic check: prediction on a fixed ramp window.
+    window = np.linspace(5.0, 25.0, predictor.HISTORY,
+                         dtype=np.float32)[None, :]
+    fwd = predictor.make_export_forward(params_np)
+    (check,) = fwd(window)
+    entry = {
+        "kind": "predictor",
+        "path": path,
+        "history": predictor.HISTORY,
+        "horizon": predictor.HORIZON,
+        "hidden": predictor.HIDDEN,
+        "scale": predictor.SCALE,
+        "metrics": metrics,
+        "check_window": "linspace(5,25,120)",
+        "check_pred": float(np.asarray(check)[0]),
+    }
+    return [entry]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--stages", default="all",
+                    help="comma-separated stage types, or 'all'")
+    ap.add_argument("--batches", default=",".join(
+        str(b) for b in registry.BATCH_SIZES))
+    ap.add_argument("--skip-predictor", action="store_true")
+    ap.add_argument("--skip-variants", action="store_true")
+    ap.add_argument("--predictor-steps", type=int, default=400)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    log = (lambda *a: None) if args.quiet else (
+        lambda *a: print(*a, file=sys.stderr, flush=True))
+
+    stages = (set(registry.STAGE_THRESHOLDS) if args.stages == "all"
+              else set(args.stages.split(",")))
+    batches = [int(b) for b in args.batches.split(",")]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+    entries = []
+    if not args.skip_variants:
+        entries += emit_variants(args.out_dir, stages, batches, log)
+    if not args.skip_predictor:
+        entries += emit_predictor(args.out_dir, log,
+                                  steps=args.predictor_steps)
+
+    manifest = {
+        "version": 1,
+        "generated_by": "python/compile/aot.py",
+        "batch_sizes": batches,
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"wrote {len(entries)} artifacts in {time.time() - t0:.1f}s "
+        f"-> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

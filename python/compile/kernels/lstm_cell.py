@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused LSTM cell.
+
+One cell step of the IPA load predictor (§3 "Predictor"): the two gate
+GEMMs, the bias add, all four gate nonlinearities, and the state update
+are fused into a single kernel so the (tiny) recurrent state never leaves
+VMEM between the matmuls and the elementwise tail — the TPU equivalent of
+the fused-gate CUDA LSTM kernels in cuDNN.
+
+Shapes are small (hidden=32 for the predictor) so a single-block kernel
+(no grid) is the right schedule; the block IS the VMEM tile.
+
+interpret=True for CPU PJRT; oracle in ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                      h_out_ref, c_out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+
+    gates = (
+        jnp.dot(x, wx_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+        + b_ref[...].astype(jnp.float32)
+    )
+    hidden = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, 0 * hidden:1 * hidden])
+    f = jax.nn.sigmoid(gates[:, 1 * hidden:2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden:4 * hidden])
+
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@jax.jit
+def lstm_cell(x, h, c, wx, wh, b):
+    """Fused LSTM cell step.
+
+    Args:
+      x:  [B, I] input at time t
+      h:  [B, H] hidden state
+      c:  [B, H] cell state
+      wx: [I, 4H] input->gates weights (gate order: i, f, g, o)
+      wh: [H, 4H] hidden->gates weights
+      b:  [4H]   gate bias
+    Returns:
+      (h', c') each [B, H]
+    """
+    batch, hidden = h.shape
+    return pl.pallas_call(
+        _lstm_cell_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((batch, hidden), h.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), c.dtype),
+        ),
+        interpret=True,
+    )(x, h, c, wx, wh, b)

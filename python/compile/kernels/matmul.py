@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: block-tiled matmul.
+
+This is the compute hot-spot of every synthetic model variant (the MLP
+towers in model.py) — the IPA-equivalent of the conv/attention GEMMs
+inside YOLOv5/ResNet/RoBERTa.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation):
+  * 3-D grid over (M/bm, N/bn, K/bk); the K axis is the innermost,
+    sequential ("arbitrary") dimension so the output block stays resident
+    in VMEM across the K sweep — the BlockSpec index_map expresses the
+    HBM<->VMEM schedule that a CUDA kernel would express with threadblock
+    tiling + shared-memory staging.
+  * Accumulation happens in the f32 output block (revisited across k),
+    with an @pl.when(k == 0) zero-init — the classic MXU accumulate
+    pattern.
+  * Default tiles are MXU-shaped (128x128) but are clamped to the operand
+    shape so batch-1 inference (M=1) still works.
+
+interpret=True is mandatory on CPU PJRT: real TPU lowering emits a Mosaic
+custom-call that the CPU plugin cannot execute.  Correctness is pinned to
+the pure-jnp oracle in ref.py by python/tests/test_kernel.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ w[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulation regardless of operand dtype (MXU-style).
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def _clamp_tile(dim: int, tile: int) -> int:
+    """Largest divisor of `dim` that is <= tile (dims here are powers of two
+    times 16, so walking down powers of two terminates quickly)."""
+    t = min(tile, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128) -> jax.Array:
+    """Block-tiled Pallas matmul: x[M,K] @ w[K,N] -> [M,N] (f32 accum).
+
+    Tile sizes are clamped to divisors of the operand dims; use
+    tile-friendly shapes (multiples of 16 or powers of two) for the
+    intended schedule.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    bm = _clamp_tile(m, bm)
+    bn = _clamp_tile(n, bn)
+    bk = _clamp_tile(k, bk)
+    nk = k // bk
+
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w)
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array, *, activation=None,
+           bm: int = 128, bn: int = 128, bk: int = 128) -> jax.Array:
+    """Affine layer on the Pallas matmul: act(x @ w + b)."""
+    y = matmul(x, w, bm=bm, bn=bn, bk=bk) + b
+    if activation is not None:
+        y = activation(y)
+    return y
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step (x tile + w tile + out tile).
+
+    Used by the §Perf analysis to check the schedule against the ~16 MiB
+    VMEM budget of a TPU core.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(bm: int, bn: int, bk: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes a (bm,bn,bk) tile keeps busy, as an estimate
+    for the real-TPU efficiency of this schedule (interpret-mode wallclock
+    is NOT a TPU proxy)."""
+    eff_m = min(bm, mxu) / mxu
+    eff_n = min(bn, mxu) / mxu
+    eff_k = min(bk, mxu) / mxu
+    return eff_m * eff_n * eff_k

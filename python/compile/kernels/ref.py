@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: python/tests/test_kernel.py sweeps
+shapes/dtypes with hypothesis and asserts the Pallas kernels match these
+references to tight tolerances.  They are also used by model.py's
+reference tower (which the AOT check values are computed from).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x[M,K] @ w[K,N] with f32 accumulation, like the Pallas kernel."""
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)
+
+
+def ref_linear(x, w, b, activation=None):
+    y = ref_matmul(x, w) + b
+    if activation is not None:
+        y = activation(y)
+    return y
+
+
+def ref_lstm_cell(x, h, c, wx, wh, b):
+    """Reference LSTM cell, gate order (i, f, g, o) — mirrors lstm_cell.py."""
+    gates = (x.astype(jnp.float32) @ wx.astype(jnp.float32)
+             + h.astype(jnp.float32) @ wh.astype(jnp.float32)
+             + b.astype(jnp.float32))
+    hidden = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, 0 * hidden:1 * hidden])
+    f = jax.nn.sigmoid(gates[:, 1 * hidden:2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden:4 * hidden])
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new.astype(h.dtype), c_new.astype(c.dtype)
+
+
+def ref_tower(x, params, activation=jax.nn.relu):
+    """Reference MLP tower: relu(x@W+b) per layer, linear last layer.
+
+    `params` is a flat list [W1, b1, W2, b2, ...] matching model.py.
+    """
+    n_layers = len(params) // 2
+    for li in range(n_layers):
+        w, b = params[2 * li], params[2 * li + 1]
+        x = ref_linear(x, w, b,
+                       activation=activation if li < n_layers - 1 else None)
+    return x

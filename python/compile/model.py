@@ -1,0 +1,129 @@
+"""L2: JAX compute graphs for the synthetic model variants.
+
+Each of the 29 registry variants (registry.py, mirroring the paper's
+Tables 7-14) becomes an MLP tower whose every layer runs the L1 Pallas
+matmul kernel.  The towers are what the Rust serving engine executes per
+batched request — the stand-in for YOLOv5/ResNet/RoBERTa forward passes
+(see DESIGN.md substitution table).
+
+Weights are *runtime inputs*, not baked constants: this keeps the HLO
+text small (no dense literals) and lets the Rust runtime keep the weight
+literals resident as device buffers across calls.  The Rust side
+generates the same seeded weights (util::rng::SplitMix64) so the AOT
+check values in the manifest can be verified end-to-end.
+"""
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.matmul import linear
+from .kernels import ref
+from .registry import VariantSpec
+
+
+def make_forward(spec: VariantSpec, batch: int):
+    """Build the jittable forward fn for `spec` at a fixed batch size.
+
+    Signature: fwd(x[batch, hidden], W1, b1, ..., WL, bL) -> ([batch, hidden],)
+    (1-tuple because aot.py lowers with return_tuple=True).
+    """
+
+    n_layers = spec.layers
+
+    def fwd(x, *params):
+        assert len(params) == 2 * n_layers
+        for li in range(n_layers):
+            w, b = params[2 * li], params[2 * li + 1]
+            act = jax.nn.relu if li < n_layers - 1 else None
+            x = linear(x, w, b, activation=act)
+        return (x,)
+
+    return fwd
+
+
+def make_ref_forward(spec: VariantSpec):
+    """Pure-jnp oracle tower (any batch), for tests and AOT check values."""
+
+    def fwd(x, *params):
+        return (ref.ref_tower(x, list(params)),)
+
+    return fwd
+
+
+def input_spec(spec: VariantSpec, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, spec.hidden), jnp.float32)
+
+
+def param_specs(spec: VariantSpec) -> List[jax.ShapeDtypeStruct]:
+    out = []
+    for (w_shape, b_shape) in spec.param_shapes():
+        out.append(jax.ShapeDtypeStruct(w_shape, jnp.float32))
+        out.append(jax.ShapeDtypeStruct(b_shape, jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Deterministic weight generation shared with the Rust runtime.
+#
+# SplitMix64 seeded by fnv1a64(variant_key) XOR a per-tensor index; each u64
+# is mapped to f32 in [-0.5, 0.5) scaled by 1/sqrt(fan_in).  The Rust side
+# (rust/src/runtime/weights.rs) reimplements exactly this.
+# ---------------------------------------------------------------------------
+
+_MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(s: str) -> int:
+    h = 0xCBF29CE484222325
+    for ch in s.encode():
+        h ^= ch
+        h = (h * 0x100000001B3) & _MASK64
+    return h
+
+
+def splitmix64_fill(seed: int, n: int) -> np.ndarray:
+    """n uniform f32 in [-0.5, 0.5), bit-exact with the Rust generator."""
+    out = np.empty(n, dtype=np.float32)
+    state = seed & _MASK64
+    for idx in range(n):
+        state = (state + 0x9E3779B97F4A7C15) & _MASK64
+        z = state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+        z = z ^ (z >> 31)
+        # top 24 bits -> [0, 1) with exact f32 representation
+        out[idx] = np.float32((z >> 40) / float(1 << 24)) - np.float32(0.5)
+    return out
+
+
+def make_params(spec: VariantSpec) -> List[np.ndarray]:
+    """Seeded weights for `spec`, scaled by 1/sqrt(fan_in) (keeps
+    activations O(1) through the tower so check values are well-behaved)."""
+    base = fnv1a64(spec.key)
+    params: List[np.ndarray] = []
+    for ti, (w_shape, b_shape) in enumerate(spec.param_shapes()):
+        fan_in = w_shape[0]
+        scale = np.float32(1.0 / np.sqrt(fan_in))
+        w = splitmix64_fill(base ^ (2 * ti + 1), w_shape[0] * w_shape[1])
+        params.append((w * scale).reshape(w_shape))
+        b = splitmix64_fill(base ^ (2 * ti + 2), b_shape[0])
+        params.append((b * np.float32(0.1)).reshape(b_shape))
+    return params
+
+
+def check_input(spec: VariantSpec, batch: int) -> np.ndarray:
+    """Deterministic check input: ones / sqrt(hidden)."""
+    return np.full((batch, spec.hidden),
+                   1.0 / np.sqrt(spec.hidden), dtype=np.float32)
+
+
+def check_value(spec: VariantSpec, batch: int = 1) -> float:
+    """Sum of the reference tower output on the check input — stored in the
+    manifest and re-verified by the Rust runtime tests."""
+    x = jnp.asarray(check_input(spec, batch))
+    params = [jnp.asarray(p) for p in make_params(spec)]
+    (y,) = make_ref_forward(spec)(x, *params)
+    return float(jnp.sum(y))

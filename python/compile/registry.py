@@ -1,0 +1,141 @@
+"""Model-variant registry (build-path mirror of rust/src/models/registry.rs).
+
+The paper's Tables 7-14 define 29 model variants across 8 stage types.
+Each variant here gets a *synthetic* compute graph (an MLP tower built on
+the L1 Pallas matmul kernel) sized so that FLOPs ratios across variants of
+a stage track the paper's parameter-count ratios.  Accuracy values are the
+paper's static metadata — IPA treats accuracy as an offline property, so
+carrying the published numbers is faithful to the system.
+
+Hidden sizes are multiples of 16 to stay tile-friendly for the Pallas
+kernel's BlockSpec grid.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+# Batch sizes profiled/served, powers of two 1..64 (paper §4.2).
+BATCH_SIZES = [1, 2, 4, 8, 16, 32, 64]
+
+# Global scale knob: paper models are 1.9M-560M params on 96-core nodes;
+# we target sub-ms..tens-of-ms CPU latency, so towers are ~100x smaller.
+_HIDDEN_MULT = 20.0
+_MIN_HIDDEN = 32
+_MAX_HIDDEN = 512
+_LAYERS = 3
+
+
+def _hidden_for_params(params_m: float) -> int:
+    """Map a paper parameter count (millions) to a tile-friendly hidden dim.
+
+    FLOPs of the tower scale as layers*h^2, so h ~ sqrt(params) keeps the
+    FLOPs ratio between two variants equal to their parameter ratio.
+    """
+    h = int(round((params_m ** 0.5) * _HIDDEN_MULT / 16.0)) * 16
+    return max(_MIN_HIDDEN, min(_MAX_HIDDEN, h))
+
+
+@dataclass(frozen=True)
+class VariantSpec:
+    """One model variant: identity + synthetic tower geometry."""
+
+    stage_type: str          # e.g. "detect"
+    name: str                # e.g. "yolov5n"
+    params_m: float          # paper parameter count, millions
+    base_alloc: int          # paper base allocation (CPU cores)
+    accuracy: float          # paper accuracy metric (mAP/acc/1-WER/F1/...)
+    hidden: int = 0          # synthetic tower width (derived)
+    layers: int = _LAYERS
+
+    def __post_init__(self):
+        if self.hidden == 0:
+            object.__setattr__(self, "hidden", _hidden_for_params(self.params_m))
+
+    @property
+    def key(self) -> str:
+        return f"{self.stage_type}.{self.name}"
+
+    def param_shapes(self) -> List[Tuple[Tuple[int, int], Tuple[int]]]:
+        """[(W_shape, b_shape)] per layer; square tower in->hidden->...->hidden."""
+        h = self.hidden
+        return [((h, h), (h,)) for _ in range(self.layers)]
+
+    def flops(self, batch: int) -> int:
+        """MACs*2 for one forward pass at the given batch size."""
+        return 2 * batch * self.layers * self.hidden * self.hidden
+
+
+# Stage type -> RPS threshold `th` used by the Eq-1 base-allocation solver
+# (paper Appendix A).
+STAGE_THRESHOLDS = {
+    "detect": 4,
+    "classify": 4,
+    "audio": 1,
+    "qa": 1,
+    "summarize": 5,
+    "sentiment": 1,
+    "langid": 4,
+    "nmt": 4,
+}
+
+# Paper Tables 7-14, verbatim.
+VARIANTS: List[VariantSpec] = [
+    # Table 7: object detection (YOLOv5, mAP)
+    VariantSpec("detect", "yolov5n", 1.9, 1, 45.7),
+    VariantSpec("detect", "yolov5s", 7.2, 1, 56.8),
+    VariantSpec("detect", "yolov5m", 21.2, 2, 64.1),
+    VariantSpec("detect", "yolov5l", 46.5, 4, 67.3),
+    VariantSpec("detect", "yolov5x", 86.7, 8, 68.9),
+    # Table 8: object classification (ResNet, top-1 accuracy)
+    VariantSpec("classify", "resnet18", 11.7, 1, 69.75),
+    VariantSpec("classify", "resnet34", 21.8, 1, 73.31),
+    VariantSpec("classify", "resnet50", 25.5, 1, 76.13),
+    VariantSpec("classify", "resnet101", 44.54, 1, 77.37),
+    VariantSpec("classify", "resnet152", 60.2, 2, 78.31),
+    # Table 9: audio-to-text (1 - WER)
+    VariantSpec("audio", "s2t-small", 29.5, 1, 58.72),
+    VariantSpec("audio", "s2t-medium", 71.2, 2, 64.88),
+    VariantSpec("audio", "wav2vec2-base", 94.4, 2, 66.15),
+    VariantSpec("audio", "s2t-large", 267.8, 4, 66.74),
+    VariantSpec("audio", "wav2vec2-large", 315.5, 8, 72.35),
+    # Table 10: question answering (F1)
+    VariantSpec("qa", "roberta-base", 277.45, 1, 77.14),
+    VariantSpec("qa", "roberta-large", 558.8, 1, 83.79),
+    # Table 11: summarization (ROUGE-L)
+    VariantSpec("summarize", "distilbart-1-1", 82.9, 1, 32.26),
+    VariantSpec("summarize", "distilbart-12-1", 221.5, 2, 33.37),
+    VariantSpec("summarize", "distilbart-6-6", 229.9, 4, 35.73),
+    VariantSpec("summarize", "distilbart-12-3", 255.1, 8, 36.39),
+    VariantSpec("summarize", "distilbart-9-6", 267.7, 8, 36.61),
+    VariantSpec("summarize", "distilbart-12-6", 305.5, 16, 36.99),
+    # Table 12: sentiment analysis (accuracy)
+    VariantSpec("sentiment", "distilbert", 66.9, 1, 79.6),
+    VariantSpec("sentiment", "bert", 109.4, 1, 79.9),
+    VariantSpec("sentiment", "roberta", 355.3, 1, 83.0),
+    # Table 13: language identification (accuracy)
+    VariantSpec("langid", "roberta-lid", 278.0, 1, 79.62),
+    # Table 14: neural machine translation (BLEU)
+    VariantSpec("nmt", "opus-mt-fr-en", 74.6, 4, 33.1),
+    VariantSpec("nmt", "opus-mt-big-fr-en", 230.6, 8, 34.4),
+]
+
+
+def variants_of(stage_type: str) -> List[VariantSpec]:
+    return [v for v in VARIANTS if v.stage_type == stage_type]
+
+
+def by_key(key: str) -> VariantSpec:
+    for v in VARIANTS:
+        if v.key == key:
+            return v
+    raise KeyError(key)
+
+
+# The five paper pipelines (Figure 6), stage types in order.
+PIPELINES = {
+    "video": ["detect", "classify"],
+    "audio-qa": ["audio", "qa"],
+    "audio-sent": ["audio", "sentiment"],
+    "sum-qa": ["summarize", "qa"],
+    "nlp": ["langid", "summarize", "nmt"],
+}

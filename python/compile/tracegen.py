@@ -1,0 +1,145 @@
+"""Synthetic Twitter-shaped workload traces (build-path side).
+
+The paper evaluates on four excerpts of the archiveteam Twitter stream
+trace (bursty / fluctuating / steady-low / steady-high) plus a 14-day
+training prefix for the LSTM predictor.  The real trace is not available
+here (repro gate), so this module generates deterministic synthetic
+traces reproducing those archetypes.
+
+DETERMINISM CONTRACT: this file is a line-for-line algorithmic twin of
+rust/src/workload/tracegen.rs.  Both use SplitMix64 and only +,-,*,/ on
+f64 (no libm transcendentals), so the two implementations produce
+bit-identical rate sequences for the same (pattern, seed).  The LSTM is
+trained on traces from this generator and serves predictions (in Rust,
+via PJRT) on traces from the Rust twin.
+"""
+
+from typing import List
+
+_MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Tiny deterministic PRNG; twin of rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+        return z ^ (z >> 31)
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1), using the top 53 bits (bit-exact across langs)."""
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def range_f64(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.next_f64()
+
+
+def bump(phase: float) -> float:
+    """Smooth periodic bump in [0,1]: parabola 1-(2p-1)^2 over each period.
+
+    Deterministic substitute for sin() — libm results differ across
+    languages, polynomials do not.
+    """
+    p = phase - int(phase)
+    if p < 0.0:
+        p += 1.0
+    d = 2.0 * p - 1.0
+    return 1.0 - d * d
+
+
+class _Burst:
+    __slots__ = ("start", "ramp", "hold", "decay", "amp")
+
+    def __init__(self, start, ramp, hold, decay, amp):
+        self.start, self.ramp, self.hold, self.decay, self.amp = \
+            start, ramp, hold, decay, amp
+
+    def value(self, t: float) -> float:
+        dt = t - self.start
+        if dt < 0.0:
+            return 0.0
+        if dt < self.ramp:
+            return self.amp * dt / self.ramp
+        dt -= self.ramp
+        if dt < self.hold:
+            return self.amp
+        dt -= self.hold
+        if dt < self.decay:
+            return self.amp * (1.0 - dt / self.decay)
+        return 0.0
+
+
+def _gen_bursts(rng: SplitMix64, seconds: int, mean_gap: float,
+                amp_lo: float, amp_hi: float) -> List[_Burst]:
+    bursts = []
+    t = rng.range_f64(5.0, mean_gap)
+    while t < seconds:
+        ramp = rng.range_f64(3.0, 8.0)
+        hold = rng.range_f64(10.0, 30.0)
+        decay = rng.range_f64(5.0, 15.0)
+        amp = rng.range_f64(amp_lo, amp_hi)
+        bursts.append(_Burst(t, ramp, hold, decay, amp))
+        t += ramp + hold + decay + rng.range_f64(0.5 * mean_gap, 1.5 * mean_gap)
+    return bursts
+
+
+PATTERNS = ("steady_low", "steady_high", "fluctuating", "bursty", "composite")
+
+# Length of one synthetic "day" in the composite (LSTM-training) trace.
+DAY_SECONDS = 2400
+
+
+def generate(pattern: str, seconds: int, seed: int) -> List[float]:
+    """Per-second arrival rates (RPS), length `seconds`.
+
+    Archetypes (paper Fig 7): steady_low ~6 RPS, steady_high ~26 RPS,
+    fluctuating 6..26 RPS waves, bursty 8 RPS base with 20-35 RPS spikes.
+    `composite` is the 21-"day" diurnal+bursts trace used to train and
+    evaluate the LSTM predictor (14 days train / 7 days held out).
+    """
+    rng = SplitMix64(seed)
+    rates = [0.0] * seconds
+
+    if pattern == "steady_low":
+        for t in range(seconds):
+            rates[t] = 6.0 + rng.range_f64(-0.8, 0.8)
+    elif pattern == "steady_high":
+        for t in range(seconds):
+            rates[t] = 26.0 + rng.range_f64(-2.0, 2.0)
+    elif pattern == "fluctuating":
+        for t in range(seconds):
+            wave = 20.0 * bump(t / 300.0)
+            rates[t] = 6.0 + wave + rng.range_f64(-1.5, 1.5)
+    elif pattern == "bursty":
+        bursts = _gen_bursts(rng, seconds, 120.0, 18.0, 30.0)
+        for t in range(seconds):
+            v = 8.0 + rng.range_f64(-1.0, 1.0)
+            for b in bursts:
+                v += b.value(float(t))
+            rates[t] = v
+    elif pattern == "composite":
+        # burst distribution matches the bursty eval archetype (amp
+        # 18-30) so the LSTM learns to anticipate real burst onsets
+        bursts = _gen_bursts(rng, seconds, 150.0, 16.0, 30.0)
+        for t in range(seconds):
+            day_phase = t / float(DAY_SECONDS)
+            diurnal = 16.0 * bump(day_phase)
+            # slow multi-day modulation (period ~5.3 days)
+            weekly = 4.0 * bump(day_phase / 5.3)
+            v = 5.0 + diurnal + weekly + rng.range_f64(-1.2, 1.2)
+            for b in bursts:
+                v += b.value(float(t))
+            rates[t] = v
+    else:
+        raise ValueError(f"unknown pattern {pattern!r}")
+
+    for t in range(seconds):
+        if rates[t] < 0.5:
+            rates[t] = 0.5
+    return rates

@@ -1,0 +1,71 @@
+"""AOT pipeline tests: lowering produces loadable HLO text, the manifest
+is consistent, and large constants are never elided."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model, registry
+
+
+@pytest.fixture(scope="module")
+def small_manifest(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.main([
+        "--out-dir", str(out),
+        "--stages", "qa",
+        "--batches", "1,8",
+        "--skip-predictor",
+        "--quiet",
+    ])
+    return out
+
+
+def test_emits_expected_files(small_manifest):
+    files = sorted(os.listdir(small_manifest / "variants"))
+    assert files == [
+        "qa.roberta-base_b1.hlo.txt",
+        "qa.roberta-base_b8.hlo.txt",
+        "qa.roberta-large_b1.hlo.txt",
+        "qa.roberta-large_b8.hlo.txt",
+    ]
+
+
+def test_manifest_consistent(small_manifest):
+    m = json.loads((small_manifest / "manifest.json").read_text())
+    arts = [a for a in m["artifacts"] if a["kind"] == "variant"]
+    assert len(arts) == 4
+    for a in arts:
+        assert (small_manifest / a["path"]).exists()
+        spec = registry.by_key(a["key"])
+        assert a["hidden"] == spec.hidden
+        assert a["accuracy"] == spec.accuracy
+        assert a["flops"] == spec.flops(a["batch"])
+        assert np.isfinite(a["check_sum_b1"])
+
+
+def test_hlo_text_structure(small_manifest):
+    text = (small_manifest / "variants" / "qa.roberta-base_b1.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # weights are runtime parameters, not baked constants
+    assert text.count("parameter(") >= 7  # x + 3x(W, b)
+    assert "{...}" not in text, "elided constants would break the rust parser"
+
+
+def test_lowering_batch_shapes():
+    spec = registry.by_key("qa.roberta-base")
+    t1 = aot.lower_variant(spec, 1)
+    t8 = aot.lower_variant(spec, 8)
+    assert f"f32[1,{spec.hidden}]" in t1
+    assert f"f32[8,{spec.hidden}]" in t8
+
+
+def test_check_value_matches_manifest(small_manifest):
+    m = json.loads((small_manifest / "manifest.json").read_text())
+    a = next(x for x in m["artifacts"]
+             if x["kind"] == "variant" and x["key"] == "qa.roberta-base")
+    spec = registry.by_key("qa.roberta-base")
+    assert a["check_sum_b1"] == pytest.approx(model.check_value(spec), rel=1e-6)

@@ -1,0 +1,142 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracles (ref.py).
+
+This is the core correctness signal of the compile path — hypothesis
+sweeps shapes and dtypes, assert_allclose against the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lstm_cell import lstm_cell
+from compile.kernels.matmul import linear, matmul, mxu_utilization, vmem_bytes
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, dtype=np.float32, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+dims = st.sampled_from([16, 32, 48, 64, 128])
+batches = st.sampled_from([1, 2, 4, 8, 16, 32, 64])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=batches, k=dims, n=dims)
+def test_matmul_matches_ref_f32(m, k, n):
+    x, w = rand((m, k)), rand((k, n))
+    got = np.asarray(matmul(jnp.asarray(x), jnp.asarray(w)))
+    want = np.asarray(ref.ref_matmul(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=batches, k=dims, n=dims)
+def test_matmul_bf16_loose(m, k, n):
+    x = rand((m, k)).astype(jnp.bfloat16)
+    w = rand((k, n)).astype(jnp.bfloat16)
+    got = np.asarray(matmul(jnp.asarray(x), jnp.asarray(w)).astype(jnp.float32))
+    want = np.asarray(ref.ref_matmul(x, w).astype(jnp.float32))
+    # bf16 storage, f32 accumulation: tolerances follow bf16 mantissa
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=batches,
+    k=dims,
+    n=dims,
+    bm=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([16, 64, 128]),
+    bn=st.sampled_from([16, 64, 128]),
+)
+def test_matmul_tile_invariance(m, k, n, bm, bk, bn):
+    """Result must not depend on the BlockSpec tiling (up to f32
+    accumulation-order noise: different bk splits sum in different
+    orders)."""
+    x, w = rand((m, k)), rand((k, n))
+    a = np.asarray(matmul(jnp.asarray(x), jnp.asarray(w), bm=bm, bk=bk, bn=bn))
+    b = np.asarray(matmul(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_mismatched_contraction():
+    with pytest.raises(AssertionError):
+        matmul(jnp.zeros((4, 32)), jnp.zeros((16, 8)))
+
+
+def test_linear_applies_bias_and_activation():
+    x, w = rand((4, 32)), rand((32, 16))
+    b = rand((16,))
+    got = np.asarray(linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                            activation=jax.nn.relu))
+    want = np.asarray(ref.ref_linear(x, w, b, activation=jax.nn.relu))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert (got >= 0).all()
+
+
+def test_vmem_and_mxu_estimates():
+    # §Perf helpers: sanity of the analytic schedule estimators.
+    assert vmem_bytes(128, 128, 128) == 4 * 3 * 128 * 128
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert mxu_utilization(8, 128, 128) == pytest.approx(8 / 128)
+    assert vmem_bytes(128, 128, 128) < 16 * 2 ** 20, "fits VMEM budget"
+
+
+# ---------------------------------------------------------------------------
+# lstm_cell
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    i=st.sampled_from([1, 4, 8]),
+    h=st.sampled_from([16, 32, 64]),
+)
+def test_lstm_cell_matches_ref(b, i, h):
+    x = rand((b, i))
+    hh = rand((b, h))
+    c = rand((b, h))
+    wx = rand((i, 4 * h), scale=0.3)
+    wh = rand((h, 4 * h), scale=0.3)
+    bias = rand((4 * h,), scale=0.1)
+    got_h, got_c = lstm_cell(*map(jnp.asarray, (x, hh, c, wx, wh, bias)))
+    want_h, want_c = ref.ref_lstm_cell(x, hh, c, wx, wh, bias)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lstm_cell_state_bounds():
+    # h = o * tanh(c') is bounded by (0,1)*(-1,1)
+    x = rand((2, 1))
+    h = rand((2, 32))
+    c = rand((2, 32))
+    wx = rand((1, 128))
+    wh = rand((32, 128))
+    b = rand((128,))
+    got_h, _ = lstm_cell(*map(jnp.asarray, (x, h, c, wx, wh, b)))
+    assert np.abs(np.asarray(got_h)).max() <= 1.0
+
+
+def test_lstm_cell_gate_order_is_ifgo():
+    """A huge forget-gate bias must preserve the cell state."""
+    b_, h_ = 1, 16
+    x = np.zeros((b_, 1), np.float32)
+    h = np.zeros((b_, h_), np.float32)
+    c = np.full((b_, h_), 0.7, np.float32)
+    wx = np.zeros((1, 4 * h_), np.float32)
+    wh = np.zeros((h_, 4 * h_), np.float32)
+    bias = np.zeros(4 * h_, np.float32)
+    bias[h_:2 * h_] = 25.0  # forget gate -> 1
+    _, c2 = lstm_cell(*map(jnp.asarray, (x, h, c, wx, wh, bias)))
+    np.testing.assert_allclose(np.asarray(c2), c, rtol=1e-5)

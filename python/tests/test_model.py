@@ -1,0 +1,94 @@
+"""L2 model-tower tests: registry geometry, Pallas tower vs oracle,
+deterministic weights, check values."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model, registry
+
+
+def test_registry_counts():
+    assert len(registry.VARIANTS) == 29
+    assert len(registry.variants_of("detect")) == 5
+    assert len(registry.variants_of("summarize")) == 6
+    assert set(registry.PIPELINES) == {
+        "video", "audio-qa", "audio-sent", "sum-qa", "nlp"}
+
+
+def test_hidden_dims_monotone_in_params():
+    for stage in registry.STAGE_THRESHOLDS:
+        vs = registry.variants_of(stage)
+        for a, b in zip(vs, vs[1:]):
+            assert a.params_m < b.params_m
+            assert a.hidden <= b.hidden
+
+
+def test_hidden_dims_tile_friendly():
+    for v in registry.VARIANTS:
+        assert v.hidden % 16 == 0
+        assert 32 <= v.hidden <= 512
+
+
+@settings(max_examples=8, deadline=None)
+@given(key=st.sampled_from([v.key for v in registry.VARIANTS]),
+       batch=st.sampled_from([1, 4, 16]))
+def test_tower_matches_reference(key, batch):
+    spec = registry.by_key(key)
+    params = [jnp.asarray(p) for p in model.make_params(spec)]
+    x = jnp.asarray(model.check_input(spec, batch))
+    (got,) = model.make_forward(spec, batch)(x, *params)
+    (want,) = model.make_ref_forward(spec)(x, *params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_weights_deterministic_and_key_dependent():
+    s1 = registry.by_key("detect.yolov5n")
+    a = model.make_params(s1)
+    b = model.make_params(s1)
+    for t1, t2 in zip(a, b):
+        np.testing.assert_array_equal(t1, t2)
+    s2 = registry.by_key("detect.yolov5s")
+    c = model.make_params(s2)
+    assert not np.array_equal(a[0][: c[0].shape[0], : c[0].shape[1]], c[0][: a[0].shape[0], : a[0].shape[1]])
+
+
+def test_check_value_stable():
+    spec = registry.by_key("classify.resnet18")
+    v1 = model.check_value(spec)
+    v2 = model.check_value(spec)
+    assert v1 == v2
+    assert np.isfinite(v1)
+
+
+def test_param_shapes_square_tower():
+    spec = registry.by_key("qa.roberta-large")
+    shapes = spec.param_shapes()
+    assert len(shapes) == spec.layers
+    for (w, b) in shapes:
+        assert w == (spec.hidden, spec.hidden)
+        assert b == (spec.hidden,)
+
+
+def test_flops_ratio_tracks_params_ratio():
+    # The sizing contract: FLOPs ratios approximate parameter ratios.
+    vs = registry.variants_of("detect")
+    small, large = vs[0], vs[-1]
+    flops_ratio = large.flops(1) / small.flops(1)
+    params_ratio = large.params_m / small.params_m
+    assert 0.2 * params_ratio < flops_ratio < 5 * params_ratio
+
+
+def test_splitmix_twin_values():
+    """Pin the first SplitMix64-derived f32s (rust twin asserts the same
+    stream in runtime::weights tests)."""
+    v = model.splitmix64_fill(1, 3)
+    mask = (1 << 64) - 1
+    state = (1 + 0x9E3779B97F4A7C15) & mask
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & mask
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & mask
+    z = z ^ (z >> 31)
+    expect0 = np.float32((z >> 40) / float(1 << 24)) - np.float32(0.5)
+    assert v[0] == expect0

@@ -1,0 +1,57 @@
+"""Workload generator tests (python side of the determinism contract)."""
+
+import numpy as np
+import pytest
+
+from compile import tracegen
+
+
+def test_deterministic():
+    a = tracegen.generate("bursty", 300, 42)
+    b = tracegen.generate("bursty", 300, 42)
+    assert a == b
+    assert a != tracegen.generate("bursty", 300, 43)
+
+
+def test_pinned_values_for_rust_twin():
+    """These exact values are asserted by rust tracegen tests — if this
+    test changes, update rust/src/workload/tracegen.rs too."""
+    r = tracegen.generate("bursty", 50, 42)
+    assert r[0] == pytest.approx(7.3198207857538407, abs=0)
+    assert r[4] == pytest.approx(8.736456153093064, abs=0)
+    c = tracegen.generate("composite", 30, 0x77177E2A)
+    assert c[0] == pytest.approx(4.0840338748544189, abs=0)
+
+
+def test_pattern_shapes():
+    lo = np.mean(tracegen.generate("steady_low", 1000, 1))
+    hi = np.mean(tracegen.generate("steady_high", 1000, 1))
+    assert hi > lo + 15
+    fl = tracegen.generate("fluctuating", 600, 2)
+    assert max(fl) > 22 and min(fl) < 9
+    bu = tracegen.generate("bursty", 1200, 3)
+    assert max(bu) > 24
+
+
+def test_composite_diurnal():
+    r = tracegen.generate("composite", 2 * tracegen.DAY_SECONDS, 5)
+    midnight = np.mean(r[:100])
+    mid = tracegen.DAY_SECONDS // 2
+    midday = np.mean(r[mid - 50:mid + 50])
+    assert midday > midnight + 5
+
+
+def test_rates_floored_positive():
+    for p in tracegen.PATTERNS:
+        assert min(tracegen.generate(p, 200, 9)) >= 0.5
+
+
+def test_bump_polynomial():
+    assert tracegen.bump(0.0) == pytest.approx(0.0)
+    assert tracegen.bump(0.5) == pytest.approx(1.0)
+    assert tracegen.bump(1.25) == tracegen.bump(0.25)
+
+
+def test_unknown_pattern_raises():
+    with pytest.raises(ValueError):
+        tracegen.generate("nope", 10, 0)

@@ -1,0 +1,165 @@
+//! `cargo bench` entry point (benchkit harness, criterion substitute).
+//!
+//! Two halves:
+//!  1. REPRODUCTION — regenerate every paper table and figure
+//!     (Tables 2/3/5/6, Figs 2, 7–18) and print them verbatim, so
+//!     `bench_output.txt` carries the full evaluation.
+//!  2. MICRO — timed benchmarks of the hot paths: IP solver across the
+//!     Fig. 13 grid, simulator event loop, option enumeration, trace
+//!     generation, quadratic fits, and (when artifacts are present)
+//!     real PJRT execution latency per variant/batch.
+//!
+//! Trace length via IPA_BENCH_SECONDS (default 420).
+
+use ipa::benchkit::{print_section, Bencher};
+use ipa::coordinator::adapter::{Adapter, AdapterConfig, Policy};
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines;
+use ipa::optimizer::ip;
+use ipa::predictor::ReactivePredictor;
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::reports::{figures, figures::EvalOpts, tables};
+use ipa::simulator::sim::{SimConfig, Simulation};
+use ipa::workload::trace::Trace;
+use ipa::workload::tracegen::{self, Pattern};
+
+fn main() {
+    let seconds: usize = std::env::var("IPA_BENCH_SECONDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(420);
+    let artifacts = std::path::Path::new("artifacts/manifest.json")
+        .exists()
+        .then(|| "artifacts".to_string());
+    println!(
+        "ipa paper bench harness | trace length {seconds}s | artifacts: {}",
+        artifacts.as_deref().unwrap_or("absent (LSTM -> reactive)")
+    );
+
+    // ---------------- 1. paper reproduction -------------------------
+    let mut opts = EvalOpts::new(seconds, artifacts.clone());
+    println!("\n################ PAPER REPRODUCTION ################");
+    print!("{}", tables::fig2());
+    print!("{}", tables::table2());
+    print!("{}", tables::table3());
+    print!("{}", tables::table5());
+    print!("{}", tables::table6());
+    print!("{}", figures::fig7(&mut opts));
+    for p in ["video", "audio-qa", "audio-sent", "sum-qa", "nlp"] {
+        print!("{}", figures::fig_e2e(p, &mut opts));
+    }
+    print!("{}", figures::fig13());
+    print!("{}", figures::fig14(&mut opts));
+    print!("{}", figures::fig15(&mut opts));
+    print!("{}", figures::fig16(&mut opts));
+    print!("{}", figures::fig17(&mut opts));
+
+    // ---------------- 2. micro benchmarks ----------------------------
+    println!("\n################ MICRO BENCHMARKS ################");
+    let b = Bencher::new(2, 10);
+
+    // IP solver across the Fig. 13 grid.
+    let mut rows = Vec::new();
+    for (s, m) in [(2usize, 5usize), (5, 5), (10, 10)] {
+        let (spec, prof) = figures::synthetic_problem(s, m);
+        rows.push(b.run(&format!("ip_solve/{s}stages_x_{m}variants"), || {
+            let p = ip::Problem::new(&spec, &prof, 12.0);
+            ip::solve(&p)
+        }));
+    }
+    // Paper pipelines at representative load.
+    for name in ["video", "nlp"] {
+        let spec = pipelines::by_name(name).unwrap();
+        let prof = pipeline_profiles(&spec);
+        rows.push(b.run(&format!("ip_solve/{name}"), || {
+            ip::solve(&ip::Problem::new(&spec, &prof, 20.0))
+        }));
+    }
+    print_section("optimizer (paper budget: <2s at 10x10)", &rows);
+
+    // Ablation: §7 future-work heuristic vs the exact IP (optimality
+    // gap + speedup).
+    let mut rows = Vec::new();
+    for (s, m) in [(5usize, 5usize), (10, 10)] {
+        let (spec, prof) = figures::synthetic_problem(s, m);
+        let p = ip::Problem::new(&spec, &prof, 12.0);
+        let exact = ip::solve(&p).map(|(c, _)| c.objective).unwrap_or(f64::NAN);
+        let heur = ipa::optimizer::heuristic::solve(&p)
+            .map(|h| h.config.objective)
+            .unwrap_or(f64::NAN);
+        println!(
+            "ablation heuristic/{s}x{m}: exact obj {exact:.3} vs heuristic {heur:.3} \
+             (gap {:.2}%)",
+            (exact - heur) / exact.abs().max(1e-9) * 100.0
+        );
+        rows.push(b.run(&format!("heuristic_solve/{s}stages_x_{m}variants"), || {
+            ipa::optimizer::heuristic::solve(&p)
+        }));
+    }
+    print_section("heuristic solver (future-work ablation)", &rows);
+
+    // Option enumeration.
+    let spec = pipelines::by_name("nlp").unwrap();
+    let prof = pipeline_profiles(&spec);
+    let rows = vec![b.run("options/enumerate_nlp", || {
+        ip::Problem::new(&spec, &prof, 18.0).stage_options()
+    })];
+    print_section("option enumeration", &rows);
+
+    // Simulator throughput: events/sec on a bursty video run.
+    let trace = Trace::synthetic(Pattern::Bursty, 300);
+    let n_requests = trace.arrivals(7).len() as f64;
+    let mk_sim = || {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        Simulation::new(
+            Adapter::new(
+                spec,
+                prof,
+                Policy::Ipa(AccuracyMetric::Pas),
+                AdapterConfig::default(),
+                Box::new(ReactivePredictor::default()),
+            ),
+            SimConfig::default(),
+        )
+    };
+    let rows = vec![b.run_throughput("simulator/video_bursty_300s", n_requests, || {
+        mk_sim().run(&trace)
+    })];
+    print_section("simulator (items/s = simulated requests/s)", &rows);
+
+    // Trace generation + fits.
+    let rows = vec![
+        b.run_throughput("tracegen/bursty_3600s", 3600.0, || {
+            tracegen::generate(Pattern::Bursty, 3600, 1)
+        }),
+        b.run("profiler/quadratic_fit_x29", || {
+            pipeline_profiles(&pipelines::by_name("video").unwrap())
+        }),
+    ];
+    print_section("workload + profiler", &rows);
+
+    // Real PJRT execution latency (L1/L2 through the runtime).
+    if let Some(dir) = &artifacts {
+        let mut engine = ipa::runtime::engine::Engine::new(dir).expect("engine");
+        let mut rows = Vec::new();
+        for (key, hidden) in [("detect.yolov5n", 32usize), ("qa.roberta-large", 480)] {
+            for batch in [1usize, 64] {
+                let x = vec![0.1f32; batch * hidden];
+                // warm compile outside the timer
+                engine.execute_variant(key, batch, &x).unwrap();
+                rows.push(b.run_throughput(
+                    &format!("pjrt_exec/{key}/b{batch}"),
+                    batch as f64,
+                    || engine.execute_variant(key, batch, &x).unwrap(),
+                ));
+            }
+        }
+        let window = vec![10.0f32; 120];
+        engine.predict(&window).unwrap();
+        rows.push(b.run("pjrt_exec/lstm_predict", || engine.predict(&window).unwrap()));
+        print_section("PJRT runtime (real artifact execution)", &rows);
+    }
+
+    println!("\nbench harness complete");
+}

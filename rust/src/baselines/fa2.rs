@@ -1,0 +1,222 @@
+//! FA2 baseline (Razavi et al., RTAS'22) as used in the paper's §5.1:
+//! joint batching + horizontal scaling with a **fixed model variant**
+//! per stage (FA2 has no model switching).  `FA2-low` pins the lightest
+//! variant, `FA2-high` a heavy combination.
+//!
+//! Given the fixed variants, the optimal batch/replica assignment
+//! minimizes `β·Σ n·R + δ·Σ b` under the Eq. 10 constraints; the space
+//! is |B|^S ≤ 343, so exact enumeration replaces FA2's dynamic program
+//! (same optimum, simpler — noted in DESIGN.md).
+
+use crate::models::registry::BATCH_SIZES;
+use crate::optimizer::ip::{PipelineConfig, Problem, StageConfig};
+use crate::queueing::worst_case_delay;
+
+/// Which fixed variant each stage uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VariantPin {
+    /// Lightest (cheapest base allocation, then fastest) — FA2-low.
+    Lightest,
+    /// Most accurate — FA2-high (the paper pins "a heavy combination";
+    /// we use the top variant).
+    Heaviest,
+}
+
+/// Pick the pinned variant index for a stage.
+fn pin_index(p: &Problem, stage_idx: usize, pin: VariantPin) -> usize {
+    let vars = &p.profiles.stages[stage_idx].variants;
+    match pin {
+        VariantPin::Lightest => vars
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                (a.cost_per_replica(), a.latency.latency(1))
+                    .partial_cmp(&(b.cost_per_replica(), b.latency.latency(1)))
+                    .unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap(),
+        VariantPin::Heaviest => vars
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| {
+                a.variant.accuracy.partial_cmp(&b.variant.accuracy).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap(),
+    }
+}
+
+/// FA2 decision: min-cost batches/replicas for the pinned variants.
+/// Infeasible inputs fall back to (throughput-best batch, replica cap)
+/// per stage — FA2 sheds the rest via dropping, like the paper's runs
+/// under bursts.
+pub fn decide(p: &Problem, pin: VariantPin) -> PipelineConfig {
+    let s = p.profiles.stages.len();
+    let pins: Vec<usize> = (0..s).map(|i| pin_index(p, i, pin)).collect();
+    let sla = p.spec.sla_e2e();
+    let w = p.spec.weights;
+
+    // Enumerate batch combos (odometer), track min-cost feasible combo.
+    let mut idx = vec![0usize; s];
+    let mut best: Option<(f64, Vec<(usize, u32)>)> = None; // (cost, [(batch, n)])
+    'outer: loop {
+        let mut lat = 0.0;
+        let mut cost = 0.0;
+        let mut picks = Vec::with_capacity(s);
+        let mut feasible = true;
+        for (si, &bi) in idx.iter().enumerate() {
+            let b = BATCH_SIZES[bi];
+            let vp = &p.profiles.stages[si].variants[pins[si]];
+            let l = vp.latency.latency(b);
+            lat += l + worst_case_delay(b, p.lambda);
+            let tput = vp.latency.throughput(b);
+            let n = (p.lambda / tput).ceil().max(1.0) as u32;
+            if n > p.max_replicas {
+                feasible = false;
+                break;
+            }
+            cost += n as f64 * vp.cost_per_replica() * w.beta + w.delta * b as f64;
+            picks.push((b, n));
+        }
+        if feasible && lat <= sla && best.as_ref().is_none_or(|(c, _)| cost < *c) {
+            best = Some((cost, picks));
+        }
+        // odometer
+        let mut d = 0;
+        loop {
+            idx[d] += 1;
+            if idx[d] < BATCH_SIZES.len() {
+                break;
+            }
+            idx[d] = 0;
+            d += 1;
+            if d == s {
+                break 'outer;
+            }
+        }
+    }
+
+    let picks = match best {
+        Some((_, picks)) => picks,
+        None => (0..s)
+            .map(|si| {
+                let vp = &p.profiles.stages[si].variants[pins[si]];
+                let b = vp.latency.best_batch();
+                (b, p.max_replicas)
+            })
+            .collect(),
+    };
+
+    build_config(p, &pins, &picks)
+}
+
+/// Assemble a [`PipelineConfig`] from explicit per-stage picks.
+pub fn build_config(
+    p: &Problem,
+    variant_idx: &[usize],
+    picks: &[(usize, u32)],
+) -> PipelineConfig {
+    let w = p.spec.weights;
+    let mut stages = Vec::new();
+    let mut cost = 0.0;
+    let mut batch_sum = 0usize;
+    let mut lat = 0.0;
+    let mut pas_frac = 1.0;
+    for (si, (&vi, &(b, n))) in variant_idx.iter().zip(picks).enumerate() {
+        let vp = &p.profiles.stages[si].variants[vi];
+        let l = vp.latency.latency(b);
+        stages.push(StageConfig {
+            variant_idx: vi,
+            variant_key: vp.variant.key(),
+            batch: b,
+            replicas: n,
+            cost: n as f64 * vp.cost_per_replica(),
+            accuracy: vp.variant.accuracy,
+            latency: l,
+        });
+        cost += n as f64 * vp.cost_per_replica();
+        batch_sum += b;
+        lat += l + worst_case_delay(b, p.lambda);
+        pas_frac *= vp.variant.accuracy / 100.0;
+    }
+    PipelineConfig {
+        stages,
+        pas: 100.0 * pas_frac,
+        cost,
+        batch_sum,
+        objective: w.alpha * 100.0 * pas_frac - w.beta * cost - w.delta * batch_sum as f64,
+        latency_e2e: lat,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::pipelines;
+    use crate::profiler::analytic::pipeline_profiles;
+
+    fn prob(name: &str, lambda: f64) -> (crate::models::pipelines::PipelineSpec, crate::profiler::profile::PipelineProfiles, f64) {
+        let spec = pipelines::by_name(name).unwrap();
+        let prof = pipeline_profiles(&spec);
+        (spec, prof, lambda)
+    }
+
+    #[test]
+    fn low_pins_lightest_high_pins_heaviest() {
+        let (spec, prof, l) = prob("video", 10.0);
+        let p = Problem::new(&spec, &prof, l);
+        let low = decide(&p, VariantPin::Lightest);
+        let high = decide(&p, VariantPin::Heaviest);
+        assert_eq!(low.stages[0].variant_key, "detect.yolov5n");
+        assert_eq!(high.stages[0].variant_key, "detect.yolov5x");
+        assert!(high.pas > low.pas);
+    }
+
+    #[test]
+    fn fa2_low_cheapest_fa2_high_most_accurate() {
+        // §5.2: FA2-low/high bracket the PAS range; FA2-high costs more.
+        let (spec, prof, l) = prob("sum-qa", 12.0);
+        let p = Problem::new(&spec, &prof, l);
+        let low = decide(&p, VariantPin::Lightest);
+        let high = decide(&p, VariantPin::Heaviest);
+        assert!(high.cost > low.cost);
+    }
+
+    #[test]
+    fn meets_sla_when_feasible() {
+        for name in ["video", "audio-qa", "audio-sent", "sum-qa", "nlp"] {
+            let (spec, prof, l) = prob(name, 8.0);
+            let p = Problem::new(&spec, &prof, l);
+            let cfg = decide(&p, VariantPin::Lightest);
+            assert!(cfg.latency_e2e <= spec.sla_e2e() + 1e-9, "{name}");
+        }
+    }
+
+    #[test]
+    fn ipa_objective_at_least_fa2() {
+        // IPA searches a superset of FA2's space: its objective can
+        // never be worse than either FA2 pin.
+        let (spec, prof, l) = prob("video", 15.0);
+        let p = Problem::new(&spec, &prof, l);
+        let ipa = crate::optimizer::ip::solve(&p).unwrap().0;
+        for pin in [VariantPin::Lightest, VariantPin::Heaviest] {
+            let fa2 = decide(&p, pin);
+            if fa2.latency_e2e <= spec.sla_e2e() {
+                assert!(ipa.objective >= fa2.objective - 1e-9, "{pin:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn replicas_scale_with_load() {
+        let (spec, prof, _) = prob("video", 0.0);
+        let p5 = Problem::new(&spec, &prof, 5.0);
+        let p30 = Problem::new(&spec, &prof, 30.0);
+        let lo = decide(&p5, VariantPin::Lightest);
+        let hi = decide(&p30, VariantPin::Lightest);
+        let lo_n: u32 = lo.stages.iter().map(|s| s.replicas).sum();
+        let hi_n: u32 = hi.stages.iter().map(|s| s.replicas).sum();
+        assert!(hi_n >= lo_n);
+    }
+}

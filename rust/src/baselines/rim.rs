@@ -1,0 +1,183 @@
+//! RIM baseline (Hu et al., IoTDI'21) as used in the paper's §5.1:
+//! model switching to adapt to load, **no autoscaling** — the paper
+//! statically sets each stage's replica count to a high value and (for
+//! fairness) adds batching.
+//!
+//! Decision rule: with replicas fixed at `fixed_replicas`, choose the
+//! most accurate (variant, batch) combination that satisfies the
+//! latency SLA and the throughput constraint `n·h ≥ λ`.  Under bursts
+//! RIM must trade accuracy down to keep throughput — the Fig. 8-12
+//! behaviour — while its cost stays pinned high.
+
+use crate::baselines::fa2::build_config;
+use crate::models::registry::BATCH_SIZES;
+use crate::optimizer::ip::{PipelineConfig, Problem};
+use crate::queueing::worst_case_delay;
+
+/// RIM settings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RimParams {
+    /// Static replica count per stage ("set to a high value", §5.1).
+    pub fixed_replicas: u32,
+}
+
+impl Default for RimParams {
+    fn default() -> Self {
+        RimParams { fixed_replicas: 8 }
+    }
+}
+
+/// RIM decision.  Exhaustive over (variant × batch) per stage with a
+/// cross-stage latency check (spaces are ≤ 42 options/stage).
+/// Falls back to the lightest variant at throughput-best batch when the
+/// SLA cannot be met at the fixed scale.
+pub fn decide(p: &Problem, rp: RimParams) -> PipelineConfig {
+    let s = p.profiles.stages.len();
+    let sla = p.spec.sla_e2e();
+    let n = rp.fixed_replicas;
+
+    // Per-stage candidate lists: (variant_idx, batch, latency, accuracy)
+    // that satisfy the throughput constraint at fixed n.
+    let mut cands: Vec<Vec<(usize, usize, f64, f64)>> = Vec::with_capacity(s);
+    for st in &p.profiles.stages {
+        let mut list = Vec::new();
+        for (vi, vp) in st.variants.iter().enumerate() {
+            for &b in &BATCH_SIZES {
+                let tput = n as f64 * vp.latency.throughput(b);
+                if tput < p.lambda {
+                    continue;
+                }
+                let l = vp.latency.latency(b) + worst_case_delay(b, p.lambda);
+                list.push((vi, b, l, vp.variant.accuracy));
+            }
+        }
+        // keep, per variant, the lowest-latency batch choice first; sort
+        // descending accuracy then ascending latency for greedy pruning
+        list.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap().then(a.2.partial_cmp(&b.2).unwrap()));
+        cands.push(list);
+    }
+
+    if cands.iter().all(|c| !c.is_empty()) {
+        // Exhaustive with the latency budget; maximize PAS (product).
+        let mut best: Option<(f64, Vec<(usize, usize)>)> = None;
+        let mut idx = vec![0usize; s];
+        'outer: loop {
+            let mut lat = 0.0;
+            let mut acc = 1.0;
+            for (si, &ci) in idx.iter().enumerate() {
+                let (_, _, l, a) = cands[si][ci];
+                lat += l;
+                acc *= a / 100.0;
+            }
+            if lat <= sla && best.as_ref().is_none_or(|(b, _)| acc > *b) {
+                best = Some((
+                    acc,
+                    idx.iter()
+                        .enumerate()
+                        .map(|(si, &ci)| (cands[si][ci].0, cands[si][ci].1))
+                        .collect(),
+                ));
+            }
+            let mut d = 0;
+            loop {
+                idx[d] += 1;
+                if idx[d] < cands[d].len() {
+                    break;
+                }
+                idx[d] = 0;
+                d += 1;
+                if d == s {
+                    break 'outer;
+                }
+            }
+        }
+        if let Some((_, picks)) = best {
+            let vids: Vec<usize> = picks.iter().map(|&(v, _)| v).collect();
+            let bn: Vec<(usize, u32)> = picks.iter().map(|&(_, b)| (b, n)).collect();
+            return build_config(p, &vids, &bn);
+        }
+    }
+
+    // Fallback: lightest variant, throughput-best batch, fixed scale.
+    let vids: Vec<usize> = p
+        .profiles
+        .stages
+        .iter()
+        .map(|st| {
+            st.variants
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    a.latency.latency(1).partial_cmp(&b.latency.latency(1)).unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect();
+    let bn: Vec<(usize, u32)> = p
+        .profiles
+        .stages
+        .iter()
+        .zip(&vids)
+        .map(|(st, &vi)| (st.variants[vi].latency.best_batch(), n))
+        .collect();
+    build_config(p, &vids, &bn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::pipelines;
+    use crate::profiler::analytic::pipeline_profiles;
+
+    #[test]
+    fn rim_cost_pinned_by_fixed_scale() {
+        let spec = pipelines::by_name("audio-qa").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let rp = RimParams { fixed_replicas: 8 };
+        let lo = decide(&Problem::new(&spec, &prof, 2.0), rp);
+        for st in &lo.stages {
+            assert_eq!(st.replicas, 8);
+        }
+    }
+
+    #[test]
+    fn rim_downgrades_variants_under_load() {
+        // Fig. 8 behaviour: under bursts RIM trades accuracy for
+        // throughput because it cannot scale.
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let rp = RimParams { fixed_replicas: 4 };
+        let low_load = decide(&Problem::new(&spec, &prof, 2.0), rp);
+        let high_load = decide(&Problem::new(&spec, &prof, 60.0), rp);
+        assert!(high_load.pas <= low_load.pas, "{} -> {}", low_load.pas, high_load.pas);
+    }
+
+    #[test]
+    fn rim_more_expensive_than_ipa_at_low_load() {
+        // §5.4: RIM's latency advantage comes at ~3x resource cost.
+        let spec = pipelines::by_name("audio-qa").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let p = Problem::new(&spec, &prof, 3.0);
+        let rim = decide(&p, RimParams { fixed_replicas: 8 });
+        let ipa = crate::optimizer::ip::solve(&p).unwrap().0;
+        assert!(rim.cost > ipa.cost, "rim {} vs ipa {}", rim.cost, ipa.cost);
+    }
+
+    #[test]
+    fn rim_meets_sla_when_possible() {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let cfg = decide(&Problem::new(&spec, &prof, 10.0), RimParams::default());
+        assert!(cfg.latency_e2e <= spec.sla_e2e() + 1e-9);
+    }
+
+    #[test]
+    fn rim_picks_accurate_variants_at_low_load() {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let cfg = decide(&Problem::new(&spec, &prof, 1.0), RimParams { fixed_replicas: 8 });
+        // With ample fixed capacity RIM should sit at/near the top PAS.
+        assert!(cfg.pas > 50.0, "pas {}", cfg.pas);
+    }
+}

@@ -1,0 +1,141 @@
+//! Micro/macro benchmark harness (criterion substitute).
+//!
+//! `cargo bench` runs `rust/benches/paper_benches.rs` with
+//! `harness = false`; that binary uses this module to time closures with
+//! warmup, report mean/p50/p99, and print rows in a stable format that
+//! `bench_output.txt` captures.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time, seconds.
+    pub summary: Summary,
+    pub iters: usize,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// items/second if `items_per_iter` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.summary.mean.max(1e-12))
+    }
+}
+
+/// Benchmark runner with warmup + fixed iteration count.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, iters: 12 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Bencher { warmup_iters, iters }
+    }
+
+    /// Time `f` (result is returned to prevent dead-code elimination of
+    /// the workload; callers usually `let _ =` it).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&times),
+            iters: self.iters,
+            items_per_iter: None,
+        }
+    }
+
+    /// Like [`run`](Self::run) but records items/iteration for
+    /// throughput reporting.
+    pub fn run_throughput<T, F: FnMut() -> T>(
+        &self,
+        name: &str,
+        items_per_iter: f64,
+        f: F,
+    ) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.items_per_iter = Some(items_per_iter);
+        r
+    }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper, kept here so bench
+/// code has a single import).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render one result as the canonical bench row.
+pub fn format_row(r: &BenchResult) -> String {
+    let s = &r.summary;
+    let tput = r
+        .throughput()
+        .map(|t| format!("  {:>12.1} items/s", t))
+        .unwrap_or_default();
+    format!(
+        "bench {:<44} mean {:>10.4} ms  p50 {:>10.4} ms  p99 {:>10.4} ms  (n={}){}",
+        r.name,
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p99 * 1e3,
+        r.iters,
+        tput
+    )
+}
+
+/// Print a section header followed by rows.
+pub fn print_section(title: &str, rows: &[BenchResult]) {
+    println!("\n=== {title} ===");
+    for r in rows {
+        println!("{}", format_row(r));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::new(1, 5);
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.summary.mean > 0.0);
+        assert!(r.summary.p50 <= r.summary.p99 + 1e-12);
+    }
+
+    #[test]
+    fn throughput_row() {
+        let b = Bencher::new(0, 3);
+        let r = b.run_throughput("noop", 100.0, || 1 + 1);
+        assert!(r.throughput().unwrap() > 0.0);
+        let row = format_row(&r);
+        assert!(row.contains("items/s"), "{row}");
+    }
+}

@@ -1,0 +1,200 @@
+//! The IPA adapter (§3): every adaptation interval it
+//! (1) fetches the monitored load history, (2) predicts the
+//! next-interval peak with the configured predictor, (3) solves for the
+//! optimal configuration under the active policy, and (4) emits the new
+//! configuration (the simulator / live engine applies it after the
+//! reconfiguration delay).
+//!
+//! Baselines (FA2-low/high, RIM) are expressed as alternative policies
+//! behind the same adapter so all four systems share the monitoring,
+//! prediction and application machinery — exactly the paper's setup
+//! ("the three systems compared benefit from the LSTM predictor").
+
+use crate::baselines::{fa2, rim};
+use crate::models::accuracy::AccuracyMetric;
+use crate::models::pipelines::PipelineSpec;
+use crate::optimizer::ip::{self, PipelineConfig, Problem};
+use crate::predictor::Predictor;
+use crate::profiler::profile::PipelineProfiles;
+use std::time::Instant;
+
+/// Which decision policy the adapter runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// The paper's system: joint variant/batch/replica IP.
+    Ipa(AccuracyMetric),
+    /// FA2 pinned to the lightest variants.
+    Fa2Low,
+    /// FA2 pinned to the heaviest variants.
+    Fa2High,
+    /// RIM: model switching at a fixed high scale.
+    Rim(rim::RimParams),
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Ipa(AccuracyMetric::Pas) => "ipa",
+            Policy::Ipa(AccuracyMetric::PasPrime) => "ipa-pas-prime",
+            Policy::Fa2Low => "fa2-low",
+            Policy::Fa2High => "fa2-high",
+            Policy::Rim(_) => "rim",
+        }
+    }
+}
+
+/// Adapter settings (§5.3: decision + application ≈ 2 s + 8 s, summed to
+/// the 10 s monitoring interval).
+#[derive(Debug, Clone, Copy)]
+pub struct AdapterConfig {
+    /// Seconds between adaptation decisions.
+    pub interval: f64,
+    /// Delay before a new configuration takes effect (rolling update).
+    pub apply_delay: f64,
+    /// Horizontal scaling cap per stage.
+    pub max_replicas: u32,
+}
+
+impl Default for AdapterConfig {
+    fn default() -> Self {
+        AdapterConfig { interval: 10.0, apply_delay: 8.0, max_replicas: 32 }
+    }
+}
+
+/// One adaptation decision with bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub config: PipelineConfig,
+    pub lambda_predicted: f64,
+    /// Solver wall time, seconds.
+    pub decision_time: f64,
+    /// True when the IP was infeasible and the fallback was used.
+    pub fallback: bool,
+}
+
+/// The adapter: owns the pipeline model, the profiles, the predictor and
+/// the policy.  Both the simulator and the live engine call
+/// [`Adapter::decide`] at each interval.
+pub struct Adapter {
+    pub spec: PipelineSpec,
+    pub profiles: PipelineProfiles,
+    pub policy: Policy,
+    pub config: AdapterConfig,
+    pub predictor: Box<dyn Predictor + Send>,
+}
+
+impl Adapter {
+    pub fn new(
+        spec: PipelineSpec,
+        profiles: PipelineProfiles,
+        policy: Policy,
+        config: AdapterConfig,
+        predictor: Box<dyn Predictor + Send>,
+    ) -> Self {
+        Adapter { spec, profiles, policy, config, predictor }
+    }
+
+    /// Produce the next configuration from the observed load history.
+    pub fn decide(&mut self, now: f64, history: &[f64]) -> Decision {
+        let lambda = self.predictor.predict(now, history).max(0.5);
+        self.decide_for_lambda(lambda)
+    }
+
+    /// Decision for an explicit λ (used by sweeps and tests).
+    pub fn decide_for_lambda(&mut self, lambda: f64) -> Decision {
+        let t0 = Instant::now();
+        let problem = Problem {
+            spec: &self.spec,
+            profiles: &self.profiles,
+            lambda,
+            metric: match self.policy {
+                Policy::Ipa(m) => m,
+                _ => AccuracyMetric::Pas,
+            },
+            max_replicas: self.config.max_replicas,
+        };
+        let (config, fallback) = match self.policy {
+            Policy::Ipa(_) => match ip::solve(&problem) {
+                Some((cfg, _)) => (cfg, false),
+                None => (ip::fallback_config(&problem), true),
+            },
+            Policy::Fa2Low => (fa2::decide(&problem, fa2::VariantPin::Lightest), false),
+            Policy::Fa2High => (fa2::decide(&problem, fa2::VariantPin::Heaviest), false),
+            Policy::Rim(rp) => (rim::decide(&problem, rp), false),
+        };
+        Decision {
+            config,
+            lambda_predicted: lambda,
+            decision_time: t0.elapsed().as_secs_f64(),
+            fallback,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::pipelines;
+    use crate::predictor::ReactivePredictor;
+    use crate::profiler::analytic::pipeline_profiles;
+
+    fn adapter(policy: Policy) -> Adapter {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        Adapter::new(
+            spec,
+            prof,
+            policy,
+            AdapterConfig::default(),
+            Box::new(ReactivePredictor::default()),
+        )
+    }
+
+    #[test]
+    fn ipa_decides_within_sla() {
+        let mut a = adapter(Policy::Ipa(AccuracyMetric::Pas));
+        let d = a.decide(100.0, &[10.0; 120]);
+        assert!(!d.fallback);
+        assert!(d.config.latency_e2e <= a.spec.sla_e2e() + 1e-9);
+        assert!(d.decision_time < 2.0, "Fig 13 budget: {}", d.decision_time);
+    }
+
+    #[test]
+    fn all_policies_produce_configs() {
+        for policy in [
+            Policy::Ipa(AccuracyMetric::Pas),
+            Policy::Fa2Low,
+            Policy::Fa2High,
+            Policy::Rim(rim::RimParams::default()),
+        ] {
+            let mut a = adapter(policy);
+            let d = a.decide(50.0, &[8.0; 60]);
+            assert_eq!(d.config.stages.len(), 2, "{}", policy.name());
+            assert!(d.config.cost > 0.0);
+        }
+    }
+
+    #[test]
+    fn ipa_falls_back_when_infeasible() {
+        let mut a = adapter(Policy::Ipa(AccuracyMetric::Pas));
+        a.config.max_replicas = 1;
+        let d = a.decide_for_lambda(10_000.0);
+        assert!(d.fallback);
+        assert!(!d.config.stages.is_empty());
+    }
+
+    #[test]
+    fn ipa_adapts_variants_to_load() {
+        // Fig. 5: low load -> accurate models; high load -> light models.
+        let mut a = adapter(Policy::Ipa(AccuracyMetric::Pas));
+        let low = a.decide_for_lambda(1.0).config;
+        let high = a.decide_for_lambda(35.0).config;
+        assert!(low.pas >= high.pas, "low {} vs high {}", low.pas, high.pas);
+    }
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(Policy::Fa2Low.name(), "fa2-low");
+        assert_eq!(Policy::Ipa(AccuracyMetric::Pas).name(), "ipa");
+    }
+}

@@ -1,0 +1,132 @@
+//! Monitoring daemon (Prometheus substitute, §3): per-second arrival
+//! counters in a ring buffer, queried by the adapter for the LSTM's
+//! 2-minute history window.
+
+/// Per-second arrival counter ring.
+#[derive(Debug, Clone)]
+pub struct Monitor {
+    /// counts[i] = arrivals in second (base + i)
+    counts: Vec<f64>,
+    base: usize,
+    capacity: usize,
+}
+
+impl Monitor {
+    /// `capacity`: how many seconds of history to retain (≥ the LSTM's
+    /// 120-second window).
+    pub fn new(capacity: usize) -> Self {
+        Monitor { counts: Vec::new(), base: 0, capacity: capacity.max(1) }
+    }
+
+    /// Record one request arrival at time `t` (seconds).
+    pub fn record_arrival(&mut self, t: f64) {
+        self.record_n(t, 1.0);
+    }
+
+    /// Record `n` arrivals at time `t`.
+    pub fn record_n(&mut self, t: f64, n: f64) {
+        let sec = t.max(0.0) as usize;
+        if sec < self.base {
+            return; // too old, outside the ring
+        }
+        while self.base + self.counts.len() <= sec {
+            self.counts.push(0.0);
+        }
+        self.counts[sec - self.base] += n;
+        // trim to capacity
+        if self.counts.len() > self.capacity {
+            let drop = self.counts.len() - self.capacity;
+            self.counts.drain(..drop);
+            self.base += drop;
+        }
+    }
+
+    /// Per-second history up to and including second `floor(now)-1`
+    /// (the current, incomplete second is excluded), most recent last,
+    /// at most `window` entries.
+    pub fn history(&self, now: f64, window: usize) -> Vec<f64> {
+        let end_sec = now.max(0.0) as usize; // exclusive
+        let mut out = Vec::new();
+        let start = end_sec.saturating_sub(window).max(self.base);
+        for s in start..end_sec {
+            if s < self.base {
+                continue;
+            }
+            let i = s - self.base;
+            out.push(self.counts.get(i).copied().unwrap_or(0.0));
+        }
+        out
+    }
+
+    /// Observed rate over the last `window` seconds (mean RPS).
+    pub fn recent_rate(&self, now: f64, window: usize) -> f64 {
+        let h = self.history(now, window);
+        if h.is_empty() {
+            0.0
+        } else {
+            h.iter().sum::<f64>() / h.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_bucketed_per_second() {
+        let mut m = Monitor::new(300);
+        m.record_arrival(0.1);
+        m.record_arrival(0.9);
+        m.record_arrival(1.5);
+        assert_eq!(m.history(2.0, 10), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn current_second_excluded() {
+        let mut m = Monitor::new(300);
+        m.record_arrival(0.5);
+        m.record_arrival(1.2);
+        // at t=1.5 only second 0 is complete
+        assert_eq!(m.history(1.5, 10), vec![1.0]);
+    }
+
+    #[test]
+    fn window_limits_history() {
+        let mut m = Monitor::new(300);
+        for s in 0..50 {
+            m.record_n(s as f64 + 0.5, s as f64);
+        }
+        let h = m.history(50.0, 10);
+        assert_eq!(h.len(), 10);
+        assert_eq!(*h.last().unwrap(), 49.0);
+        assert_eq!(h[0], 40.0);
+    }
+
+    #[test]
+    fn capacity_trims_old() {
+        let mut m = Monitor::new(5);
+        for s in 0..20 {
+            m.record_n(s as f64, 1.0);
+        }
+        let h = m.history(20.0, 100);
+        assert_eq!(h.len(), 5);
+    }
+
+    #[test]
+    fn gaps_read_as_zero() {
+        let mut m = Monitor::new(100);
+        m.record_arrival(0.5);
+        m.record_arrival(3.5);
+        assert_eq!(m.history(4.0, 10), vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn recent_rate() {
+        let mut m = Monitor::new(100);
+        for s in 0..10 {
+            m.record_n(s as f64, 4.0);
+        }
+        assert!((m.recent_rate(10.0, 5) - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,129 @@
+//! # IPA — Inference Pipeline Adaptation
+//!
+//! A reproduction of *"IPA: Inference Pipeline Adaptation to Achieve High
+//! Accuracy and Cost-Efficiency"* (Ghafouri et al., 2023) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's contribution: an online adapter
+//!   that jointly picks a *model variant*, *batch size*, and *replica
+//!   count* per pipeline stage by solving an Integer Program
+//!   (maximize `α·PAS − β·Σ nR − δ·Σ b` under latency/throughput
+//!   constraints), plus every substrate it needs: profiler, queueing,
+//!   discrete-event cluster simulator, live serving engine, workload
+//!   generation, predictors, baselines (FA2, RIM), metrics and report
+//!   harnesses for every table/figure in the paper.
+//! * **L2 (python/compile, build-time only)** — JAX compute graphs for
+//!   29 synthetic model variants and the LSTM load predictor, lowered
+//!   once to HLO text by `make artifacts`.
+//! * **L1 (python/compile/kernels)** — Pallas kernels (tiled matmul,
+//!   fused LSTM cell) that every L2 graph bottoms out in.
+//!
+//! Python is never on the request path: the [`runtime`] module loads the
+//! HLO artifacts through the PJRT C API (`xla` crate) and serves them
+//! from Rust threads.
+//!
+//! Start with [`coordinator::adapter::Adapter`] (the control loop),
+//! [`optimizer::ip::solve`] (the IP), and [`simulator::sim::Simulation`]
+//! (the evaluation substrate), or run `cargo run --release -- help`.
+
+pub mod util {
+    //! Self-contained substrates (the offline build has no serde / clap /
+    //! criterion / proptest / rand — we implement what we need).
+    pub mod cli;
+    pub mod json;
+    pub mod log;
+    pub mod quickcheck;
+    pub mod rng;
+    pub mod stats;
+}
+
+pub mod models {
+    //! Model-variant registry (paper Tables 7–14), the five paper
+    //! pipelines (Fig. 6) and the pipeline accuracy metrics (PAS, PAS′).
+    pub mod accuracy;
+    pub mod pipelines;
+    pub mod registry;
+}
+
+pub mod profiler {
+    //! §4.2: offline latency profiles — quadratic fits `l(b)=ab²+βb+γ`,
+    //! the Eq. 1 base-allocation solver, paper-scale analytic profiles
+    //! and measured (runtime) profiles.
+    pub mod analytic;
+    pub mod base_alloc;
+    pub mod fit;
+    pub mod profile;
+}
+
+pub mod queueing;
+
+pub mod optimizer {
+    //! §4.3/4.4: the IP formulation and the exact branch-and-bound
+    //! solver (Gurobi substitute), plus a brute-force oracle.
+    pub mod brute;
+    pub mod heuristic;
+    pub mod ip;
+    pub mod options;
+}
+
+pub mod baselines {
+    //! §5.1: FA2 (batch+scale, fixed variant) and RIM (+batching,
+    //! variant switching with fixed high scale).
+    pub mod fa2;
+    pub mod rim;
+}
+
+pub mod workload {
+    //! Synthetic Twitter-shaped traces (deterministic twin of
+    //! python/compile/tracegen.py) and arrival generation.
+    pub mod trace;
+    pub mod tracegen;
+}
+
+pub mod predictor;
+
+pub mod simulator {
+    //! Discrete-event cluster simulator: central per-stage queues,
+    //! batch dispatch, replica service, §4.5 dropping, reconfiguration
+    //! transitions — the Kubernetes-cluster substitute.
+    pub mod events;
+    pub mod sim;
+}
+
+pub mod coordinator {
+    //! §3: the adapter loop — monitor → predict → optimize → apply.
+    pub mod adapter;
+    pub mod monitoring;
+}
+
+pub mod runtime {
+    //! PJRT runtime: manifest, artifact loading, executor pool, and the
+    //! deterministic weight generator (twin of python model.make_params).
+    pub mod engine;
+    pub mod manifest;
+    pub mod pool;
+    pub mod weights;
+}
+
+pub mod serving {
+    //! Live serving engine: thread-per-replica execution of the real
+    //! HLO artifacts behind central batching queues, with the adapter
+    //! reconfiguring it on a live clock.
+    pub mod engine;
+    pub mod loadgen;
+}
+
+pub mod metrics;
+
+pub mod reports {
+    //! Regeneration harness for every paper table and figure.
+    pub mod figures;
+    pub mod tables;
+}
+
+pub mod benchkit;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

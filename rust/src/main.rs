@@ -1,0 +1,361 @@
+//! `ipa` — CLI for the IPA reproduction.
+//!
+//! Subcommands:
+//!   report <id>     regenerate a paper table/figure
+//!                   (fig2|table2|table3|table5|table6|fig7|fig8..fig12|
+//!                    fig13|fig14|fig15|fig16|fig17|all)
+//!   simulate        one simulator run (--pipeline --pattern --policy)
+//!   serve           live engine over real PJRT artifacts
+//!   solve           one IP decision (--pipeline --lambda)
+//!   tracegen        dump a synthetic trace
+//!   check           verify artifact numerics vs the manifest oracle
+//!   version         print version
+
+use ipa::coordinator::adapter::Policy;
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines;
+use ipa::reports::{figures, figures::EvalOpts, tables};
+use ipa::util::cli::Args;
+use ipa::workload::trace::Trace;
+use ipa::workload::tracegen::Pattern;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("report") => cmd_report(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("tracegen") => cmd_tracegen(&args),
+        Some("check") => cmd_check(&args),
+        Some("version") => {
+            println!("ipa {}", ipa::version());
+            0
+        }
+        _ => {
+            print_help();
+            if args.command.is_none() { 0 } else { 2 }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "ipa {} — Inference Pipeline Adaptation (paper reproduction)\n\n\
+         usage: ipa <command> [--options]\n\n\
+         commands:\n\
+           report <id>   regenerate a paper table/figure: fig2 table2 table3\n\
+                         table5 table6 fig7 fig8 fig9 fig10 fig11 fig12 fig13\n\
+                         fig14 fig15 fig16 fig17 all   [--seconds N] [--artifacts DIR]\n\
+           simulate      --pipeline video --pattern bursty --policy ipa --seconds 600\n\
+           serve         live engine: --pipeline video --seconds 30 [--artifacts DIR]\n\
+           solve         --pipeline video --lambda 12 [--pas-prime]\n\
+           tracegen      --pattern bursty --seconds 300 [--seed N]\n\
+           check         --artifacts DIR [--key detect.yolov5n]\n\
+           version",
+        ipa::version()
+    );
+}
+
+fn opts_from(args: &Args) -> EvalOpts {
+    let seconds = args.get_usize("seconds", 600);
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let art = if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("note: no artifacts at {dir}; LSTM predictor falls back to reactive");
+        None
+    };
+    EvalOpts::new(seconds, art)
+}
+
+fn cmd_report(args: &Args) -> i32 {
+    let id = args.positional.first().map(String::as_str).unwrap_or("all");
+    let mut opts = opts_from(args);
+    let emit = |s: String| print!("{s}");
+    match id {
+        "fig2" => emit(tables::fig2()),
+        "table2" => emit(tables::table2()),
+        "table3" => emit(tables::table3()),
+        "table5" => emit(tables::table5()),
+        "table6" => emit(tables::table6()),
+        "fig7" => emit(figures::fig7(&mut opts)),
+        "fig8" => emit(figures::fig_e2e("video", &mut opts)),
+        "fig9" => emit(figures::fig_e2e("audio-qa", &mut opts)),
+        "fig10" => emit(figures::fig_e2e("audio-sent", &mut opts)),
+        "fig11" => emit(figures::fig_e2e("sum-qa", &mut opts)),
+        "fig12" => emit(figures::fig_e2e("nlp", &mut opts)),
+        "fig13" => emit(figures::fig13()),
+        "fig14" => emit(figures::fig14(&mut opts)),
+        "fig15" => emit(figures::fig15(&mut opts)),
+        "fig16" => emit(figures::fig16(&mut opts)),
+        "fig17" | "fig18" => emit(figures::fig17(&mut opts)),
+        "all" => {
+            emit(tables::fig2());
+            emit(tables::table2());
+            emit(tables::table3());
+            emit(tables::table5());
+            emit(tables::table6());
+            emit(figures::fig7(&mut opts));
+            for p in ["video", "audio-qa", "audio-sent", "sum-qa", "nlp"] {
+                emit(figures::fig_e2e(p, &mut opts));
+            }
+            emit(figures::fig13());
+            emit(figures::fig14(&mut opts));
+            emit(figures::fig15(&mut opts));
+            emit(figures::fig16(&mut opts));
+            emit(figures::fig17(&mut opts));
+        }
+        other => {
+            eprintln!("unknown report id: {other}");
+            return 2;
+        }
+    }
+    0
+}
+
+fn parse_policy(name: &str) -> Option<Policy> {
+    match name {
+        "ipa" => Some(Policy::Ipa(AccuracyMetric::Pas)),
+        "ipa-pas-prime" => Some(Policy::Ipa(AccuracyMetric::PasPrime)),
+        "fa2-low" => Some(Policy::Fa2Low),
+        "fa2-high" => Some(Policy::Fa2High),
+        "rim" => Some(Policy::Rim(Default::default())),
+        _ => None,
+    }
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let pipeline = args.get_or("pipeline", "video").to_string();
+    let pattern = match Pattern::from_name(args.get_or("pattern", "bursty")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown pattern");
+            return 2;
+        }
+    };
+    let Some(policy) = parse_policy(args.get_or("policy", "ipa")) else {
+        eprintln!("unknown policy (ipa|ipa-pas-prime|fa2-low|fa2-high|rim)");
+        return 2;
+    };
+    let mut opts = opts_from(args);
+    let pred = match args.get_or("predictor", "lstm") {
+        "lstm" => figures::PredKind::Lstm,
+        "reactive" => figures::PredKind::Reactive,
+        "oracle" => figures::PredKind::Oracle,
+        _ => {
+            eprintln!("unknown predictor");
+            return 2;
+        }
+    };
+    let m = figures::run_cell(&pipeline, policy, pattern, pred, &mut opts);
+    let s = m.latency_summary();
+    println!(
+        "system={} pipeline={} workload={} requests={}",
+        m.system,
+        m.pipeline,
+        m.workload,
+        m.requests.len()
+    );
+    println!(
+        "avg PAS {:.2} | avg cost {:.1} cores | SLA attainment {:.1}% | drops {:.2}% | \
+         latency p50 {:.2}s p99 {:.2}s | switches {}",
+        m.avg_pas(),
+        m.avg_cost(),
+        m.sla_attainment() * 100.0,
+        m.drop_rate() * 100.0,
+        s.p50,
+        s.p99,
+        m.variant_switches()
+    );
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use ipa::serving::engine::{serve, ServeConfig};
+    use ipa::serving::loadgen::LoadGenConfig;
+    let pipeline = args.get_or("pipeline", "video").to_string();
+    let Some(spec) = pipelines::by_name(&pipeline) else {
+        eprintln!("unknown pipeline");
+        return 2;
+    };
+    let seconds = args.get_usize("seconds", 30);
+    let pattern =
+        Pattern::from_name(args.get_or("pattern", "fluctuating")).unwrap_or(Pattern::Fluctuating);
+    let Some(policy) = parse_policy(args.get_or("policy", "ipa")) else {
+        eprintln!("unknown policy");
+        return 2;
+    };
+    let cfg = ServeConfig {
+        artifact_dir: args.get_or("artifacts", "artifacts").to_string(),
+        use_lstm: !args.flag("no-lstm"),
+        interval: args.get_f64("interval", 5.0),
+        ..Default::default()
+    };
+    let lg = LoadGenConfig {
+        time_scale: args.get_f64("time-scale", 1.0),
+        seed: args.get_u64("seed", 11),
+    };
+    let trace = Trace::synthetic(pattern, seconds);
+    match serve(&spec, policy, &cfg, lg, &trace) {
+        Ok(rep) => {
+            let m = &rep.metrics;
+            let s = m.latency_summary();
+            println!(
+                "LIVE serve: pipeline={} policy={} workload={} | measured SLA {:.1} ms",
+                pipeline,
+                m.system,
+                m.workload,
+                rep.sla * 1e3
+            );
+            println!(
+                "requests {} | completed {} | drops {:.2}% | SLA attainment {:.1}% | \
+                 latency p50 {:.1} ms p99 {:.1} ms | throughput {:.1} rps",
+                m.requests.len(),
+                m.latencies().len(),
+                m.drop_rate() * 100.0,
+                m.sla_attainment() * 100.0,
+                s.p50 * 1e3,
+                s.p99 * 1e3,
+                m.latencies().len() as f64 / (seconds as f64 * lg.time_scale)
+            );
+            for i in &m.intervals {
+                println!(
+                    "  t={:>6.1}s pas={:>6.2} cost={:>5.1} λ_obs={:>6.1} λ_pred={:>6.1} [{}]",
+                    i.t,
+                    i.pas,
+                    i.cost,
+                    i.lambda_observed,
+                    i.lambda_predicted,
+                    i.variants.join(",")
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let pipeline = args.get_or("pipeline", "video").to_string();
+    let Some(spec) = pipelines::by_name(&pipeline) else {
+        eprintln!("unknown pipeline");
+        return 2;
+    };
+    let lambda = args.get_f64("lambda", 10.0);
+    let prof = ipa::profiler::analytic::pipeline_profiles(&spec);
+    let mut p = ipa::optimizer::ip::Problem::new(&spec, &prof, lambda);
+    if args.flag("pas-prime") {
+        p.metric = AccuracyMetric::PasPrime;
+    }
+    match ipa::optimizer::ip::solve(&p) {
+        Some((cfg, stats)) => {
+            println!(
+                "λ={lambda} PAS={:.2} cost={:.1} cores latency={:.2}s/{:.2}s objective={:.3}",
+                cfg.pas,
+                cfg.cost,
+                cfg.latency_e2e,
+                spec.sla_e2e(),
+                cfg.objective
+            );
+            for (i, sc) in cfg.stages.iter().enumerate() {
+                println!(
+                    "  stage {i}: {} batch={} replicas={} (n·R={:.0} cores, acc={:.2})",
+                    sc.variant_key, sc.batch, sc.replicas, sc.cost, sc.accuracy
+                );
+            }
+            println!(
+                "  solver: {} nodes, {} bound-pruned, {} infeasible-pruned",
+                stats.nodes, stats.pruned_bound, stats.pruned_infeasible
+            );
+            0
+        }
+        None => {
+            println!("infeasible at λ={lambda}");
+            1
+        }
+    }
+}
+
+fn cmd_tracegen(args: &Args) -> i32 {
+    let Some(pattern) = Pattern::from_name(args.get_or("pattern", "bursty")) else {
+        eprintln!("unknown pattern");
+        return 2;
+    };
+    let seconds = args.get_usize("seconds", 300);
+    let seed = args.get_u64("seed", ipa::workload::tracegen::eval_seed(pattern));
+    let rates = ipa::workload::tracegen::generate(pattern, seconds, seed);
+    for (t, r) in rates.iter().enumerate() {
+        println!("{t},{r:.3}");
+    }
+    0
+}
+
+fn cmd_check(args: &Args) -> i32 {
+    use ipa::runtime::engine::Engine;
+    let dir = args.get_or("artifacts", "artifacts");
+    let mut engine = match Engine::new(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine init failed: {e:#}");
+            return 1;
+        }
+    };
+    let keys: Vec<String> = match args.get("key") {
+        Some(k) => vec![k.to_string()],
+        None => engine.manifest.keys(),
+    };
+    let mut failures = 0;
+    for key in keys {
+        match engine.check_variant(&key) {
+            Ok((got, want)) => {
+                let rel = (got - want).abs() / want.abs().max(1e-6);
+                let ok = rel < 1e-3;
+                println!(
+                    "{key:<28} got {got:>12.5} want {want:>12.5} rel {rel:.2e} {}",
+                    if ok { "OK" } else { "FAIL" }
+                );
+                if !ok {
+                    failures += 1;
+                }
+            }
+            Err(e) => {
+                println!("{key:<28} ERROR {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    // LSTM check
+    if engine.manifest.predictor.is_some() {
+        let window: Vec<f32> = (0..120)
+            .map(|i| 5.0 + 20.0 * i as f32 / 119.0)
+            .collect();
+        match engine.predict(&window) {
+            Ok(p) => {
+                let want = engine.manifest.predictor.as_ref().unwrap().check_pred;
+                let ok = ((p as f64) - want).abs() < 1e-2 * want.abs().max(1.0);
+                println!(
+                    "predictor/lstm               got {p:>12.5} want {want:>12.5} {}",
+                    if ok { "OK" } else { "FAIL" }
+                );
+                if !ok {
+                    failures += 1;
+                }
+            }
+            Err(e) => {
+                println!("predictor/lstm               ERROR {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("{failures} numerics check(s) failed");
+        1
+    } else {
+        0
+    }
+}

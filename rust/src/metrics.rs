@@ -1,0 +1,201 @@
+//! Run metrics: per-request records, per-interval configuration series,
+//! and the aggregates the paper reports (SLA attainment, average PAS,
+//! average cost, latency CDFs).
+
+use crate::util::stats::{self, Summary};
+
+/// Outcome of one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival: f64,
+    /// Completion time; `None` if dropped (§4.5).
+    pub completion: Option<f64>,
+}
+
+impl RequestRecord {
+    pub fn latency(&self) -> Option<f64> {
+        self.completion.map(|c| c - self.arrival)
+    }
+
+    pub fn dropped(&self) -> bool {
+        self.completion.is_none()
+    }
+}
+
+/// Configuration state sampled at each adaptation interval.
+#[derive(Debug, Clone)]
+pub struct IntervalRecord {
+    pub t: f64,
+    /// PAS of the active configuration.
+    pub pas: f64,
+    /// Σ n·R of the active configuration, CPU cores.
+    pub cost: f64,
+    /// Observed arrival rate over the last interval.
+    pub lambda_observed: f64,
+    /// Predictor output used for the decision.
+    pub lambda_predicted: f64,
+    /// Solver wall time, seconds.
+    pub decision_time: f64,
+    /// Active variant keys per stage (for temporal plots).
+    pub variants: Vec<String>,
+}
+
+/// Full result of one run (simulated or live).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub system: String,
+    pub pipeline: String,
+    pub workload: String,
+    pub requests: Vec<RequestRecord>,
+    pub intervals: Vec<IntervalRecord>,
+    /// SLA the run was evaluated against (seconds).
+    pub sla: f64,
+}
+
+impl RunMetrics {
+    /// Completed-request latencies.
+    pub fn latencies(&self) -> Vec<f64> {
+        self.requests.iter().filter_map(|r| r.latency()).collect()
+    }
+
+    /// Fraction of *completed* requests within SLA (the paper's SLA
+    /// attainment; drops are reported separately).
+    pub fn sla_attainment(&self) -> f64 {
+        let lats = self.latencies();
+        if lats.is_empty() {
+            return 0.0;
+        }
+        lats.iter().filter(|&&l| l <= self.sla).count() as f64 / lats.len() as f64
+    }
+
+    /// Fraction of all requests that violated SLA or were dropped.
+    pub fn violation_rate(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        let bad = self
+            .requests
+            .iter()
+            .filter(|r| r.latency().map(|l| l > self.sla).unwrap_or(true))
+            .count();
+        bad as f64 / self.requests.len() as f64
+    }
+
+    pub fn drop_rate(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().filter(|r| r.dropped()).count() as f64 / self.requests.len() as f64
+    }
+
+    /// Time-average PAS across intervals.
+    pub fn avg_pas(&self) -> f64 {
+        stats::mean(&self.intervals.iter().map(|i| i.pas).collect::<Vec<_>>())
+    }
+
+    /// Time-average cost (CPU cores).
+    pub fn avg_cost(&self) -> f64 {
+        stats::mean(&self.intervals.iter().map(|i| i.cost).collect::<Vec<_>>())
+    }
+
+    pub fn peak_cost(&self) -> f64 {
+        self.intervals.iter().map(|i| i.cost).fold(0.0, f64::max)
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.latencies())
+    }
+
+    /// Latency CDF for Fig. 15.
+    pub fn latency_cdf(&self, points: usize) -> Vec<(f64, f64)> {
+        stats::cdf(&self.latencies(), points)
+    }
+
+    /// Prediction SMAPE across intervals (predictor quality).
+    pub fn prediction_smape(&self) -> f64 {
+        let pred: Vec<f64> = self.intervals.iter().map(|i| i.lambda_predicted).collect();
+        let obs: Vec<f64> = self.intervals.iter().map(|i| i.lambda_observed).collect();
+        stats::smape(&pred, &obs)
+    }
+
+    /// Count of model switches across the run (stability metric).
+    pub fn variant_switches(&self) -> usize {
+        self.intervals
+            .windows(2)
+            .filter(|w| w[0].variants != w[1].variants)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64, completion: Option<f64>) -> RequestRecord {
+        RequestRecord { id, arrival, completion }
+    }
+
+    fn interval(t: f64, pas: f64, cost: f64) -> IntervalRecord {
+        IntervalRecord {
+            t,
+            pas,
+            cost,
+            lambda_observed: 10.0,
+            lambda_predicted: 11.0,
+            decision_time: 0.001,
+            variants: vec!["a".into()],
+        }
+    }
+
+    #[test]
+    fn attainment_and_violations() {
+        let m = RunMetrics {
+            sla: 1.0,
+            requests: vec![
+                req(0, 0.0, Some(0.5)),  // ok
+                req(1, 0.0, Some(2.0)),  // violate
+                req(2, 0.0, None),       // drop
+                req(3, 0.0, Some(0.9)),  // ok
+            ],
+            ..Default::default()
+        };
+        assert!((m.sla_attainment() - 2.0 / 3.0).abs() < 1e-9);
+        assert!((m.violation_rate() - 0.5).abs() < 1e-9);
+        assert!((m.drop_rate() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn averages() {
+        let m = RunMetrics {
+            intervals: vec![interval(0.0, 50.0, 4.0), interval(10.0, 60.0, 8.0)],
+            ..Default::default()
+        };
+        assert!((m.avg_pas() - 55.0).abs() < 1e-9);
+        assert!((m.avg_cost() - 6.0).abs() < 1e-9);
+        assert_eq!(m.peak_cost(), 8.0);
+    }
+
+    #[test]
+    fn switches_counted() {
+        let mut a = interval(0.0, 1.0, 1.0);
+        let mut b = interval(1.0, 1.0, 1.0);
+        let c = interval(2.0, 1.0, 1.0);
+        a.variants = vec!["x".into()];
+        b.variants = vec!["y".into()];
+        let m = RunMetrics {
+            intervals: vec![a, b.clone(), c.clone()],
+            ..Default::default()
+        };
+        // x->y is a switch; y->"a" (c) is another
+        assert_eq!(m.variant_switches(), 2);
+    }
+
+    #[test]
+    fn empty_run_safe() {
+        let m = RunMetrics::default();
+        assert_eq!(m.sla_attainment(), 0.0);
+        assert_eq!(m.avg_pas(), 0.0);
+        assert_eq!(m.latency_cdf(10).len(), 0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Pipeline accuracy metrics.
+//!
+//! §4.1: with independent per-stage errors, IPA scores a pipeline
+//! configuration by the *product* of the active variants' accuracies —
+//! the Pipeline Accuracy Score (PAS).  Appendix C defines an alternative
+//! PAS′ that sums rank-normalized per-stage accuracies; Figs. 17/18 show
+//! both metrics produce the same system ordering.
+
+use super::registry::{variants_of, StageType};
+
+/// PAS (Eq. 8): percent-scale product, `100 · Π (aₛ/100)`.
+///
+/// For a two-stage pipeline with accuracies 72.35 and 83.0 this yields
+/// ~60.1 — matching the "average PAS of 59" scale in §5.4.
+pub fn pas(stage_accuracies: &[f64]) -> f64 {
+    100.0 * stage_accuracies.iter().map(|a| a / 100.0).product::<f64>()
+}
+
+/// Rank-normalized accuracy of one variant within its stage's option set
+/// (Appendix C): least-accurate → 0, most-accurate → 1, linear in rank.
+pub fn normalized_rank(stage: StageType, accuracy: f64) -> f64 {
+    let vs = variants_of(stage);
+    if vs.len() <= 1 {
+        return 1.0;
+    }
+    // Registry order is ascending accuracy (tested in registry.rs).
+    let mut rank = 0usize;
+    for (i, v) in vs.iter().enumerate() {
+        if (v.accuracy - accuracy).abs() < 1e-9 {
+            rank = i;
+            break;
+        }
+    }
+    rank as f64 / (vs.len() - 1) as f64
+}
+
+/// PAS′ (Eq. 11): sum of rank-normalized per-stage accuracies.
+pub fn pas_prime(stages: &[StageType], stage_accuracies: &[f64]) -> f64 {
+    assert_eq!(stages.len(), stage_accuracies.len());
+    stages
+        .iter()
+        .zip(stage_accuracies)
+        .map(|(s, a)| normalized_rank(*s, *a))
+        .sum()
+}
+
+/// Which accuracy metric the optimizer maximizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccuracyMetric {
+    /// Eq. 8 product (the paper's primary metric).
+    Pas,
+    /// Eq. 11 normalized sum (Appendix C ablation).
+    PasPrime,
+}
+
+impl AccuracyMetric {
+    /// Evaluate the metric for a configuration's per-stage accuracies.
+    pub fn eval(self, stages: &[StageType], accs: &[f64]) -> f64 {
+        match self {
+            AccuracyMetric::Pas => pas(accs),
+            AccuracyMetric::PasPrime => pas_prime(stages, accs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pas_product_scale() {
+        // audio-sent best config: wav2vec2-large (72.35) x roberta (83.0)
+        let v = pas(&[72.35, 83.0]);
+        assert!((v - 60.05).abs() < 0.05, "{v}");
+        // single stage degenerates to the stage accuracy
+        assert!((pas(&[70.0]) - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pas_monotone_in_each_stage() {
+        assert!(pas(&[50.0, 80.0]) < pas(&[60.0, 80.0]));
+        assert!(pas(&[50.0, 80.0]) < pas(&[50.0, 90.0]));
+    }
+
+    #[test]
+    fn normalized_rank_endpoints() {
+        // detect: yolov5n is least accurate (0), yolov5x most (1).
+        assert_eq!(normalized_rank(StageType::Detect, 45.7), 0.0);
+        assert_eq!(normalized_rank(StageType::Detect, 68.9), 1.0);
+        // middle variant of 5 -> 0.5
+        assert!((normalized_rank(StageType::Detect, 64.1) - 0.5).abs() < 1e-9);
+        // single-variant stage -> 1.0
+        assert_eq!(normalized_rank(StageType::LangId, 79.62), 1.0);
+    }
+
+    #[test]
+    fn pas_prime_sum() {
+        let stages = [StageType::Detect, StageType::Classify];
+        // second-most-accurate of 5 in each stage -> 0.75 + 0.75
+        let v = pas_prime(&stages, &[67.3, 77.37]);
+        assert!((v - 1.5).abs() < 1e-9, "{v}");
+    }
+
+    #[test]
+    fn both_metrics_agree_on_ordering() {
+        // Appendix C claim: PAS and PAS' rank configurations the same way
+        // when moving a single stage up the accuracy ladder.
+        let stages = [StageType::Detect, StageType::Classify];
+        let lo = [45.7, 69.75];
+        let hi = [68.9, 78.31];
+        assert!(pas(&lo) < pas(&hi));
+        assert!(pas_prime(&stages, &lo) < pas_prime(&stages, &hi));
+    }
+}

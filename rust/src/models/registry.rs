@@ -1,0 +1,241 @@
+//! Model-variant registry — the paper's Tables 7–14, verbatim, plus the
+//! synthetic-tower geometry shared with `python/compile/registry.py`.
+//!
+//! Accuracy is *static per-model metadata* in IPA (§4.1: per-stage
+//! accuracies are computed offline and are a property of the model), so
+//! carrying the published numbers is faithful; the latency/throughput
+//! side comes from profiling our real artifacts (or the paper-calibrated
+//! analytic profiles — see `profiler::analytic`).
+
+/// Inference task types (one per paper appendix table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StageType {
+    Detect,
+    Classify,
+    Audio,
+    Qa,
+    Summarize,
+    Sentiment,
+    LangId,
+    Nmt,
+}
+
+impl StageType {
+    pub const ALL: [StageType; 8] = [
+        StageType::Detect,
+        StageType::Classify,
+        StageType::Audio,
+        StageType::Qa,
+        StageType::Summarize,
+        StageType::Sentiment,
+        StageType::LangId,
+        StageType::Nmt,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StageType::Detect => "detect",
+            StageType::Classify => "classify",
+            StageType::Audio => "audio",
+            StageType::Qa => "qa",
+            StageType::Summarize => "summarize",
+            StageType::Sentiment => "sentiment",
+            StageType::LangId => "langid",
+            StageType::Nmt => "nmt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<StageType> {
+        StageType::ALL.iter().copied().find(|t| t.name() == s)
+    }
+
+    /// RPS threshold `th` for the Eq. 1 base-allocation solver
+    /// (paper Appendix A).
+    pub fn threshold_rps(self) -> f64 {
+        match self {
+            StageType::Detect => 4.0,
+            StageType::Classify => 4.0,
+            StageType::Audio => 1.0,
+            StageType::Qa => 1.0,
+            StageType::Summarize => 5.0,
+            StageType::Sentiment => 1.0,
+            StageType::LangId => 4.0,
+            StageType::Nmt => 4.0,
+        }
+    }
+
+    /// Accuracy-metric name for reports (mAP, Accuracy, 1-WER, ...).
+    pub fn metric(self) -> &'static str {
+        match self {
+            StageType::Detect => "mAP",
+            StageType::Classify => "Accuracy",
+            StageType::Audio => "1-WER",
+            StageType::Qa => "F1",
+            StageType::Summarize => "ROUGE-L",
+            StageType::Sentiment => "Accuracy",
+            StageType::LangId => "Accuracy",
+            StageType::Nmt => "BLEU",
+        }
+    }
+}
+
+/// One model variant (a row of Tables 7–14).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub stage_type: StageType,
+    pub name: &'static str,
+    /// Paper parameter count, millions.
+    pub params_m: f64,
+    /// Paper base allocation, CPU cores (cost per replica).
+    pub base_alloc: u32,
+    /// Paper accuracy metric value, percent-scale.
+    pub accuracy: f64,
+}
+
+impl Variant {
+    /// `stage.name` key — matches artifact file names and the manifest.
+    pub fn key(&self) -> String {
+        format!("{}.{}", self.stage_type.name(), self.name)
+    }
+
+    /// Synthetic tower width — MUST mirror
+    /// `python/compile/registry._hidden_for_params`.
+    pub fn hidden(&self) -> usize {
+        let h = ((self.params_m.sqrt() * 20.0 / 16.0).round() as i64) * 16;
+        h.clamp(32, 512) as usize
+    }
+
+    /// Tower depth (python `_LAYERS`).
+    pub fn layers(&self) -> usize {
+        3
+    }
+
+    /// Forward-pass FLOPs at `batch` (2·MACs), mirrors python `flops`.
+    pub fn flops(&self, batch: usize) -> u64 {
+        let h = self.hidden() as u64;
+        2 * batch as u64 * self.layers() as u64 * h * h
+    }
+}
+
+/// Batch sizes profiled/served: powers of two 1..64 (paper §4.2).
+pub const BATCH_SIZES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// The full registry (paper Tables 7–14).
+pub const VARIANTS: [Variant; 29] = [
+    // Table 7: object detection (YOLOv5, mAP)
+    Variant { stage_type: StageType::Detect, name: "yolov5n", params_m: 1.9, base_alloc: 1, accuracy: 45.7 },
+    Variant { stage_type: StageType::Detect, name: "yolov5s", params_m: 7.2, base_alloc: 1, accuracy: 56.8 },
+    Variant { stage_type: StageType::Detect, name: "yolov5m", params_m: 21.2, base_alloc: 2, accuracy: 64.1 },
+    Variant { stage_type: StageType::Detect, name: "yolov5l", params_m: 46.5, base_alloc: 4, accuracy: 67.3 },
+    Variant { stage_type: StageType::Detect, name: "yolov5x", params_m: 86.7, base_alloc: 8, accuracy: 68.9 },
+    // Table 8: object classification (ResNet, top-1)
+    Variant { stage_type: StageType::Classify, name: "resnet18", params_m: 11.7, base_alloc: 1, accuracy: 69.75 },
+    Variant { stage_type: StageType::Classify, name: "resnet34", params_m: 21.8, base_alloc: 1, accuracy: 73.31 },
+    Variant { stage_type: StageType::Classify, name: "resnet50", params_m: 25.5, base_alloc: 1, accuracy: 76.13 },
+    Variant { stage_type: StageType::Classify, name: "resnet101", params_m: 44.54, base_alloc: 1, accuracy: 77.37 },
+    Variant { stage_type: StageType::Classify, name: "resnet152", params_m: 60.2, base_alloc: 2, accuracy: 78.31 },
+    // Table 9: audio-to-text (1 - WER)
+    Variant { stage_type: StageType::Audio, name: "s2t-small", params_m: 29.5, base_alloc: 1, accuracy: 58.72 },
+    Variant { stage_type: StageType::Audio, name: "s2t-medium", params_m: 71.2, base_alloc: 2, accuracy: 64.88 },
+    Variant { stage_type: StageType::Audio, name: "wav2vec2-base", params_m: 94.4, base_alloc: 2, accuracy: 66.15 },
+    Variant { stage_type: StageType::Audio, name: "s2t-large", params_m: 267.8, base_alloc: 4, accuracy: 66.74 },
+    Variant { stage_type: StageType::Audio, name: "wav2vec2-large", params_m: 315.5, base_alloc: 8, accuracy: 72.35 },
+    // Table 10: question answering (F1)
+    Variant { stage_type: StageType::Qa, name: "roberta-base", params_m: 277.45, base_alloc: 1, accuracy: 77.14 },
+    Variant { stage_type: StageType::Qa, name: "roberta-large", params_m: 558.8, base_alloc: 1, accuracy: 83.79 },
+    // Table 11: summarization (ROUGE-L)
+    Variant { stage_type: StageType::Summarize, name: "distilbart-1-1", params_m: 82.9, base_alloc: 1, accuracy: 32.26 },
+    Variant { stage_type: StageType::Summarize, name: "distilbart-12-1", params_m: 221.5, base_alloc: 2, accuracy: 33.37 },
+    Variant { stage_type: StageType::Summarize, name: "distilbart-6-6", params_m: 229.9, base_alloc: 4, accuracy: 35.73 },
+    Variant { stage_type: StageType::Summarize, name: "distilbart-12-3", params_m: 255.1, base_alloc: 8, accuracy: 36.39 },
+    Variant { stage_type: StageType::Summarize, name: "distilbart-9-6", params_m: 267.7, base_alloc: 8, accuracy: 36.61 },
+    Variant { stage_type: StageType::Summarize, name: "distilbart-12-6", params_m: 305.5, base_alloc: 16, accuracy: 36.99 },
+    // Table 12: sentiment analysis (accuracy)
+    Variant { stage_type: StageType::Sentiment, name: "distilbert", params_m: 66.9, base_alloc: 1, accuracy: 79.6 },
+    Variant { stage_type: StageType::Sentiment, name: "bert", params_m: 109.4, base_alloc: 1, accuracy: 79.9 },
+    Variant { stage_type: StageType::Sentiment, name: "roberta", params_m: 355.3, base_alloc: 1, accuracy: 83.0 },
+    // Table 13: language identification (accuracy)
+    Variant { stage_type: StageType::LangId, name: "roberta-lid", params_m: 278.0, base_alloc: 1, accuracy: 79.62 },
+    // Table 14: neural machine translation (BLEU)
+    Variant { stage_type: StageType::Nmt, name: "opus-mt-fr-en", params_m: 74.6, base_alloc: 4, accuracy: 33.1 },
+    Variant { stage_type: StageType::Nmt, name: "opus-mt-big-fr-en", params_m: 230.6, base_alloc: 8, accuracy: 34.4 },
+];
+
+/// All variants of a stage type, in registry (ascending-size) order.
+pub fn variants_of(t: StageType) -> Vec<&'static Variant> {
+    VARIANTS.iter().filter(|v| v.stage_type == t).collect()
+}
+
+/// Look up a variant by `stage.name` key.
+pub fn by_key(key: &str) -> Option<&'static Variant> {
+    VARIANTS.iter().find(|v| v.key() == key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_counts_match_paper() {
+        assert_eq!(variants_of(StageType::Detect).len(), 5);
+        assert_eq!(variants_of(StageType::Classify).len(), 5);
+        assert_eq!(variants_of(StageType::Audio).len(), 5);
+        assert_eq!(variants_of(StageType::Qa).len(), 2);
+        assert_eq!(variants_of(StageType::Summarize).len(), 6);
+        assert_eq!(variants_of(StageType::Sentiment).len(), 3);
+        assert_eq!(variants_of(StageType::LangId).len(), 1);
+        assert_eq!(variants_of(StageType::Nmt).len(), 2);
+        assert_eq!(VARIANTS.len(), 29);
+    }
+
+    #[test]
+    fn accuracy_monotone_in_params_within_stage() {
+        // The paper's premise: bigger variants of a task are more accurate.
+        for t in StageType::ALL {
+            let vs = variants_of(t);
+            for w in vs.windows(2) {
+                assert!(w[0].params_m < w[1].params_m, "{t:?} ordering");
+                assert!(w[0].accuracy <= w[1].accuracy, "{t:?} accuracy monotone");
+            }
+        }
+    }
+
+    #[test]
+    fn hidden_dims_tile_friendly_and_bounded() {
+        for v in &VARIANTS {
+            let h = v.hidden();
+            assert_eq!(h % 16, 0, "{}", v.key());
+            assert!((32..=512).contains(&h), "{}", v.key());
+        }
+    }
+
+    #[test]
+    fn known_hidden_values_match_python_registry() {
+        // Spot values pinned against python/compile/registry.py.
+        assert_eq!(by_key("detect.yolov5n").unwrap().hidden(), 32);
+        assert_eq!(by_key("qa.roberta-large").unwrap().hidden(), 480);
+        assert_eq!(by_key("classify.resnet18").unwrap().hidden(), 64);
+    }
+
+    #[test]
+    fn key_lookup() {
+        assert!(by_key("detect.yolov5x").is_some());
+        assert!(by_key("detect.nonexistent").is_none());
+        assert_eq!(by_key("audio.s2t-large").unwrap().base_alloc, 4);
+    }
+
+    #[test]
+    fn flops_scale_linearly_with_batch() {
+        let v = by_key("classify.resnet50").unwrap();
+        assert_eq!(v.flops(64), 64 * v.flops(1));
+    }
+
+    #[test]
+    fn table5_paper_base_allocs() {
+        // Table 7 BA column (used as cost weights in the e2e experiments).
+        let d: Vec<u32> = variants_of(StageType::Detect).iter().map(|v| v.base_alloc).collect();
+        assert_eq!(d, vec![1, 1, 2, 4, 8]);
+        let s: Vec<u32> = variants_of(StageType::Summarize).iter().map(|v| v.base_alloc).collect();
+        assert_eq!(s, vec![1, 2, 4, 8, 8, 16]);
+    }
+}

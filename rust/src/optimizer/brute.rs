@@ -1,0 +1,131 @@
+//! Brute-force oracle for the IP — exhaustive Cartesian enumeration of
+//! the per-stage options, used to certify that the branch-and-bound in
+//! [`super::ip`] is exact (the Gurobi-optimality substitute proof
+//! obligation).  Only usable on small spaces; the tests keep |options|
+//! per stage in the tens.
+
+use super::ip::{materialize, PipelineConfig, Problem};
+use super::options::StageOption;
+
+/// Exhaustively find the optimal configuration, or `None` if infeasible.
+pub fn solve(p: &Problem) -> Option<PipelineConfig> {
+    let options = p.stage_options();
+    solve_with_options(p, &options)
+}
+
+/// Exhaustive solve over pre-enumerated options.
+pub fn solve_with_options(
+    p: &Problem,
+    options: &[Vec<StageOption>],
+) -> Option<PipelineConfig> {
+    if options.iter().any(Vec::is_empty) {
+        return None;
+    }
+    let sla = p.spec.sla_e2e();
+    let s = options.len();
+    let mut idx = vec![0usize; s];
+    let mut best: Option<PipelineConfig> = None;
+    loop {
+        // evaluate current combination
+        let lat: f64 = idx
+            .iter()
+            .zip(options)
+            .map(|(&i, o)| o[i].total_latency())
+            .sum();
+        if lat <= sla {
+            let cfg = materialize(p, options, &idx);
+            if best.as_ref().is_none_or(|b| cfg.objective > b.objective) {
+                best = Some(cfg);
+            }
+        }
+        // odometer increment
+        let mut d = 0;
+        loop {
+            idx[d] += 1;
+            if idx[d] < options[d].len() {
+                break;
+            }
+            idx[d] = 0;
+            d += 1;
+            if d == s {
+                return best;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::accuracy::AccuracyMetric;
+    use crate::models::pipelines;
+    use crate::profiler::analytic::pipeline_profiles;
+    use crate::util::quickcheck::{check, prop_assert, prop_close};
+
+    #[test]
+    fn bnb_matches_brute_on_all_pipelines() {
+        for spec in pipelines::all() {
+            let prof = pipeline_profiles(&spec);
+            for &lambda in &[2.0, 8.0, 20.0, 35.0] {
+                let p = Problem::new(&spec, &prof, lambda);
+                let bnb = super::super::ip::solve(&p).map(|(c, _)| c);
+                let brute = solve(&p);
+                match (bnb, brute) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert!(
+                            (a.objective - b.objective).abs() < 1e-9,
+                            "{} λ={lambda}: bnb {} vs brute {}",
+                            spec.name,
+                            a.objective,
+                            b.objective
+                        );
+                    }
+                    (a, b) => panic!(
+                        "{} λ={lambda}: feasibility disagreement bnb={} brute={}",
+                        spec.name,
+                        a.is_some(),
+                        b.is_some()
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bnb_matches_brute_pas_prime() {
+        let spec = pipelines::by_name("sum-qa").unwrap();
+        let prof = pipeline_profiles(&spec);
+        for &lambda in &[3.0, 12.0] {
+            let mut p = Problem::new(&spec, &prof, lambda);
+            p.metric = AccuracyMetric::PasPrime;
+            let a = super::super::ip::solve(&p).unwrap().0;
+            let b = solve(&p).unwrap();
+            assert!((a.objective - b.objective).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bnb_matches_brute_randomized() {
+        // Property: for random λ, weights and replica caps, B&B == brute.
+        let specs = pipelines::all();
+        check("bnb == brute", 40, |g| {
+            let spec0 = g.choose(&specs);
+            let mut spec = spec0.clone();
+            spec.weights.alpha = g.f64(0.5, 50.0);
+            spec.weights.beta = g.f64(0.05, 5.0);
+            let prof = pipeline_profiles(&spec);
+            let mut p = Problem::new(&spec, &prof, g.f64(0.5, 40.0));
+            p.max_replicas = g.usize(2, 40) as u32;
+            let a = super::super::ip::solve(&p).map(|(c, _)| c);
+            let b = solve(&p);
+            match (a, b) {
+                (None, None) => Ok(()),
+                (Some(a), Some(b)) => {
+                    prop_close(a.objective, b.objective, 1e-9, "objective mismatch")
+                }
+                _ => prop_assert(false, "feasibility mismatch"),
+            }
+        });
+    }
+}

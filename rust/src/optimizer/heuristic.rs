@@ -1,0 +1,201 @@
+//! Heuristic solver — the paper's §7 future-work direction ("designing
+//! new heuristic methods that can find a good enough but not
+//! necessarily optimal solution" for sub-second adaptation on very
+//! large graphs).  Implemented as an ablation against the exact B&B:
+//!
+//! 1. **Greedy construction**: stages most-constrained-first, pick the
+//!    best local-utility option that keeps the remaining minimum
+//!    latency feasible.
+//! 2. **Local search**: hill-climb single-stage swaps until no swap
+//!    improves the objective (first-improvement, bounded passes).
+//!
+//! `reports::figures::fig13`-style sweeps and the bench harness report
+//! the optimality gap and speedup vs `optimizer::ip`.
+
+use super::ip::{materialize, PipelineConfig, Problem};
+use super::options::StageOption;
+
+/// Result with gap bookkeeping.
+#[derive(Debug, Clone)]
+pub struct HeuristicResult {
+    pub config: PipelineConfig,
+    /// Local-search passes executed.
+    pub passes: usize,
+    /// Options evaluated.
+    pub evals: u64,
+}
+
+/// Greedy + local-search solve.  Returns `None` iff no feasible
+/// configuration exists (same feasibility as the exact solver).
+pub fn solve(p: &Problem) -> Option<HeuristicResult> {
+    let options = p.stage_options();
+    solve_with_options(p, &options)
+}
+
+/// Solve over pre-enumerated options.
+pub fn solve_with_options(
+    p: &Problem,
+    options: &[Vec<StageOption>],
+) -> Option<HeuristicResult> {
+    let s = options.len();
+    if options.iter().any(Vec::is_empty) {
+        return None;
+    }
+    let w = p.spec.weights;
+    let sla = p.spec.sla_e2e();
+    let mut evals = 0u64;
+
+    // Suffix minimum latencies in most-constrained-first order.
+    let mut perm: Vec<usize> = (0..s).collect();
+    perm.sort_by_key(|&i| options[i].len());
+    let mut suf_min_lat = vec![0.0; s + 1];
+    for d in (0..s).rev() {
+        let si = perm[d];
+        let min_lat =
+            options[si].iter().map(StageOption::total_latency).fold(f64::MAX, f64::min);
+        suf_min_lat[d] = suf_min_lat[d + 1] + min_lat;
+    }
+
+    // Greedy construction.
+    let utility = |si: usize, o: &StageOption| {
+        // local surrogate: treat the accuracy term linearly (exact for
+        // PAS', log-approximation for PAS)
+        w.alpha * acc_term(p, si, o) - w.beta * o.cost - w.delta * o.batch as f64
+    };
+    let mut picks = vec![usize::MAX; s];
+    let mut lat = 0.0;
+    for d in 0..s {
+        let si = perm[d];
+        let mut best: Option<(f64, usize)> = None;
+        for (oi, o) in options[si].iter().enumerate() {
+            evals += 1;
+            if lat + o.total_latency() + suf_min_lat[d + 1] > sla {
+                continue;
+            }
+            let u = utility(si, o);
+            if best.is_none_or(|(bu, _)| u > bu) {
+                best = Some((u, oi));
+            }
+        }
+        let (_, oi) = best?;
+        picks[si] = oi;
+        lat += options[si][oi].total_latency();
+    }
+
+    // Local search: single-stage swaps, first-improvement.
+    let mut cur = materialize(p, options, &picks);
+    let mut passes = 0usize;
+    loop {
+        passes += 1;
+        let mut improved = false;
+        for si in 0..s {
+            let cur_lat: f64 = picks
+                .iter()
+                .zip(options)
+                .map(|(&oi, os)| os[oi].total_latency())
+                .sum();
+            let slack = sla - (cur_lat - options[si][picks[si]].total_latency());
+            let old = picks[si];
+            for oi in 0..options[si].len() {
+                if oi == old {
+                    continue;
+                }
+                evals += 1;
+                if options[si][oi].total_latency() > slack {
+                    continue;
+                }
+                picks[si] = oi;
+                let cand = materialize(p, options, &picks);
+                if cand.objective > cur.objective + 1e-12 {
+                    cur = cand;
+                    improved = true;
+                    break; // first improvement; re-scan from this state
+                }
+                picks[si] = old;
+            }
+        }
+        if !improved || passes >= 8 {
+            break;
+        }
+    }
+    Some(HeuristicResult { config: cur, passes, evals })
+}
+
+fn acc_term(p: &Problem, si: usize, o: &StageOption) -> f64 {
+    use crate::models::accuracy::{normalized_rank, AccuracyMetric};
+    match p.metric {
+        AccuracyMetric::Pas => (o.accuracy / 100.0).ln(),
+        AccuracyMetric::PasPrime => normalized_rank(p.spec.stages[si], o.accuracy),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::pipelines;
+    use crate::optimizer::ip;
+    use crate::profiler::analytic::pipeline_profiles;
+    use crate::util::quickcheck::{check, prop_assert};
+
+    #[test]
+    fn feasible_and_near_optimal_on_paper_pipelines() {
+        for spec in pipelines::all() {
+            let prof = pipeline_profiles(&spec);
+            for &lambda in &[3.0, 12.0, 28.0] {
+                let p = Problem::new(&spec, &prof, lambda);
+                let exact = ip::solve(&p);
+                let heur = solve(&p);
+                match (exact, heur) {
+                    (Some((e, _)), Some(h)) => {
+                        assert!(h.config.latency_e2e <= spec.sla_e2e() + 1e-9);
+                        // optimality gap bounded on the real pipelines
+                        let gap = (e.objective - h.config.objective)
+                            / e.objective.abs().max(1e-9);
+                        assert!(gap < 0.15, "{} λ={lambda}: gap {gap}", spec.name);
+                    }
+                    (None, None) => {}
+                    (e, h) => {
+                        panic!("feasibility mismatch: exact={} heur={}", e.is_some(), h.is_some())
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_never_beats_exact_and_always_feasible() {
+        let specs = pipelines::all();
+        check("heuristic bounded by exact", 40, |g| {
+            let mut spec = g.choose(&specs).clone();
+            spec.weights.alpha = g.f64(0.1, 50.0);
+            spec.weights.beta = g.f64(0.05, 5.0);
+            let prof = pipeline_profiles(&spec);
+            let p = Problem::new(&spec, &prof, g.f64(0.5, 40.0));
+            match (ip::solve(&p), solve(&p)) {
+                (Some((e, _)), Some(h)) => {
+                    prop_assert(
+                        h.config.objective <= e.objective + 1e-9,
+                        "heuristic exceeded exact optimum",
+                    )?;
+                    prop_assert(
+                        h.config.latency_e2e <= spec.sla_e2e() + 1e-9,
+                        "heuristic infeasible",
+                    )
+                }
+                (None, None) => Ok(()),
+                _ => prop_assert(false, "feasibility mismatch"),
+            }
+        });
+    }
+
+    #[test]
+    fn fast_on_large_grids() {
+        let (spec, prof) = crate::reports::figures::synthetic_problem(10, 10);
+        let p = Problem::new(&spec, &prof, 12.0);
+        let t0 = std::time::Instant::now();
+        let h = solve(&p).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt < 0.1, "heuristic at 10x10 took {dt}s");
+        assert!(h.config.cost > 0.0);
+    }
+}

@@ -1,0 +1,524 @@
+//! The IPA Integer Program (Eq. 9/10) and its exact solver.
+//!
+//! Gurobi is not available offline (repro gate), so we implement an
+//! exact branch-and-bound over the per-stage option sets produced by
+//! [`super::options`]:
+//!
+//! * **Branching**: one level per pipeline stage; each node picks one
+//!   (variant, batch, induced-replicas) option.
+//! * **Infeasibility pruning**: partial latency + Σ remaining minimum
+//!   latencies > SLA_P.
+//! * **Bound pruning**: an admissible upper bound on the objective —
+//!   `α · (best achievable accuracy completion) − β · (cost so far +
+//!   Σ remaining minimum costs) − δ · (batch so far + Σ remaining
+//!   minimum batches)` — is compared against the incumbent.
+//!
+//! Optimality is certified against brute-force enumeration in
+//! `optimizer::brute` tests and `rust/tests/optimizer_invariants.rs`.
+
+use super::options::{enumerate, EnumParams, StageOption};
+use crate::models::accuracy::{normalized_rank, AccuracyMetric};
+use crate::models::pipelines::PipelineSpec;
+use crate::profiler::profile::PipelineProfiles;
+
+/// Chosen configuration for one stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageConfig {
+    pub variant_idx: usize,
+    pub variant_key: String,
+    pub batch: usize,
+    pub replicas: u32,
+    /// `n·R`, CPU cores.
+    pub cost: f64,
+    pub accuracy: f64,
+    /// Model latency at the chosen batch, seconds.
+    pub latency: f64,
+}
+
+/// Full pipeline configuration + objective breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    pub stages: Vec<StageConfig>,
+    /// PAS (Eq. 8) of the chosen variants (always the product metric,
+    /// for reporting comparability even in PAS′ mode).
+    pub pas: f64,
+    /// Σ n·R, CPU cores.
+    pub cost: f64,
+    /// Σ batch sizes (the δ term).
+    pub batch_sum: usize,
+    /// Objective value f(n, s, I) (Eq. 9) under the requested metric.
+    pub objective: f64,
+    /// Σ (l + q), seconds — must be ≤ SLA_P.
+    pub latency_e2e: f64,
+}
+
+/// Solver instrumentation (Fig. 13 reports decision time).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SolveStats {
+    pub nodes: u64,
+    pub pruned_bound: u64,
+    pub pruned_infeasible: u64,
+    pub options_total: usize,
+}
+
+/// Solver inputs.
+#[derive(Debug, Clone)]
+pub struct Problem<'a> {
+    pub spec: &'a PipelineSpec,
+    pub profiles: &'a PipelineProfiles,
+    /// Predicted arrival rate λ_P (RPS).
+    pub lambda: f64,
+    pub metric: AccuracyMetric,
+    pub max_replicas: u32,
+}
+
+impl<'a> Problem<'a> {
+    pub fn new(spec: &'a PipelineSpec, profiles: &'a PipelineProfiles, lambda: f64) -> Self {
+        Problem { spec, profiles, lambda, metric: AccuracyMetric::Pas, max_replicas: 32 }
+    }
+
+    /// Per-stage option sets (enumerated + Pareto-pruned).
+    pub fn stage_options(&self) -> Vec<Vec<StageOption>> {
+        let p = EnumParams {
+            lambda: self.lambda,
+            sla_e2e: self.spec.sla_e2e(),
+            max_replicas: self.max_replicas,
+        };
+        self.profiles.stages.iter().map(|s| enumerate(s, p)).collect()
+    }
+
+    /// Accuracy contribution of an option under the active metric,
+    /// in the *additive* domain the solver accumulates:
+    /// PAS — log of the fraction (product → sum);
+    /// PAS′ — the normalized rank itself.
+    fn acc_term(&self, stage_idx: usize, o: &StageOption) -> f64 {
+        match self.metric {
+            AccuracyMetric::Pas => (o.accuracy / 100.0).ln(),
+            AccuracyMetric::PasPrime => {
+                normalized_rank(self.spec.stages[stage_idx], o.accuracy)
+            }
+        }
+    }
+
+    /// Map the accumulated additive accuracy back to the metric value.
+    fn acc_value(&self, additive: f64) -> f64 {
+        match self.metric {
+            AccuracyMetric::Pas => 100.0 * additive.exp(),
+            AccuracyMetric::PasPrime => additive,
+        }
+    }
+}
+
+/// Exact solve.  Returns `None` when no configuration satisfies the SLA
+/// and throughput constraints (the adapter then falls back to
+/// [`fallback_config`]).
+pub fn solve(p: &Problem) -> Option<(PipelineConfig, SolveStats)> {
+    let options = p.stage_options();
+    solve_with_options(p, &options)
+}
+
+/// Solve over pre-enumerated options (reused by Fig. 13 sweeps).
+///
+/// Search strategy (perf-tuned — see EXPERIMENTS.md §Perf):
+/// 1. stages are visited most-constrained-first (fewest options);
+/// 2. within a stage, options are visited in descending local-utility
+///    order (`α·accterm − β·cost − δ·b`) so strong incumbents appear
+///    early;
+/// 3. a greedy feasible solution seeds the incumbent before the DFS,
+///    so the admissible bound prunes from node one.
+pub fn solve_with_options(
+    p: &Problem,
+    options: &[Vec<StageOption>],
+) -> Option<(PipelineConfig, SolveStats)> {
+    let s = options.len();
+    if options.iter().any(|o| o.is_empty()) {
+        return None;
+    }
+    let mut stats = SolveStats {
+        options_total: options.iter().map(Vec::len).sum(),
+        ..Default::default()
+    };
+    let w = p.spec.weights;
+
+    // Stage visit order: most constrained first, with *identical*
+    // stages grouped adjacently so the symmetry break below applies
+    // (Fig. 13 grids have s identical stages → s! symmetric solutions).
+    let mut perm: Vec<usize> = (0..s).collect();
+    perm.sort_by_key(|&i| options[i].len());
+    {
+        let mut grouped: Vec<usize> = Vec::with_capacity(s);
+        let mut used = vec![false; s];
+        for k in 0..s {
+            if used[k] {
+                continue;
+            }
+            grouped.push(perm[k]);
+            used[k] = true;
+            for j in k + 1..s {
+                if !used[j] && options[perm[j]] == options[perm[k]] {
+                    grouped.push(perm[j]);
+                    used[j] = true;
+                }
+            }
+        }
+        perm = grouped;
+    }
+    // same_group[d] = true if permuted stage d has identical options to
+    // stage d-1 → restrict its pick position to ≥ the previous pick
+    // (canonical sorted representative; exact, any solution has one).
+    let same_group: Vec<bool> = (0..s)
+        .map(|d| d > 0 && options[perm[d]] == options[perm[d - 1]])
+        .collect();
+
+    // Per-stage option visit order: descending local utility.
+    let order: Vec<Vec<usize>> = perm
+        .iter()
+        .map(|&si| {
+            let mut idx: Vec<usize> = (0..options[si].len()).collect();
+            idx.sort_by(|&a, &b| {
+                let u = |o: &StageOption| {
+                    w.alpha * p.acc_term(si, o) - w.beta * o.cost - w.delta * o.batch as f64
+                };
+                u(&options[si][b]).partial_cmp(&u(&options[si][a])).unwrap()
+            });
+            idx
+        })
+        .collect();
+
+    // Suffix minima/maxima over the PERMUTED stage order.
+    let mut suf_min_lat = vec![0.0; s + 1];
+    let mut suf_min_cost = vec![0.0; s + 1];
+    let mut suf_min_batch = vec![0.0; s + 1];
+    let mut suf_max_acc = vec![0.0; s + 1];
+    for d in (0..s).rev() {
+        let si = perm[d];
+        let min_lat =
+            options[si].iter().map(StageOption::total_latency).fold(f64::MAX, f64::min);
+        let min_cost = options[si].iter().map(|o| o.cost).fold(f64::MAX, f64::min);
+        let min_batch = options[si].iter().map(|o| o.batch as f64).fold(f64::MAX, f64::min);
+        let max_acc =
+            options[si].iter().map(|o| p.acc_term(si, o)).fold(f64::MIN, f64::max);
+        suf_min_lat[d] = suf_min_lat[d + 1] + min_lat;
+        suf_min_cost[d] = suf_min_cost[d + 1] + min_cost;
+        suf_min_batch[d] = suf_min_batch[d + 1] + min_batch;
+        suf_max_acc[d] = suf_max_acc[d + 1] + max_acc;
+    }
+
+    let sla = p.spec.sla_e2e();
+    let mut best_obj = f64::MIN;
+    let mut best: Option<Vec<usize>> = None;
+
+    // Greedy incumbent: best-utility option per stage that keeps the
+    // remaining minimum latency feasible.
+    {
+        let mut picks = vec![usize::MAX; s];
+        let mut lat = 0.0;
+        let mut ok = true;
+        for d in 0..s {
+            let si = perm[d];
+            let mut found = false;
+            for &oi in &order[d] {
+                let o = &options[si][oi];
+                if lat + o.total_latency() + suf_min_lat[d + 1] <= sla {
+                    picks[si] = oi;
+                    lat += o.total_latency();
+                    found = true;
+                    break;
+                }
+            }
+            if !found {
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            let cfg = materialize(p, options, &picks);
+            best_obj = cfg.objective;
+            best = Some(picks);
+        }
+    }
+
+    // DFS over the permuted stages.
+    struct Ctx<'a> {
+        p: &'a Problem<'a>,
+        options: &'a [Vec<StageOption>],
+        perm: &'a [usize],
+        order: &'a [Vec<usize>],
+        same_group: &'a [bool],
+        suf_min_lat: &'a [f64],
+        suf_min_cost: &'a [f64],
+        suf_min_batch: &'a [f64],
+        suf_max_acc: &'a [f64],
+        sla: f64,
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dfs(
+        c: &Ctx,
+        depth: usize,
+        start_pos: usize,
+        lat: f64,
+        cost: f64,
+        batch: f64,
+        acc: f64,
+        chosen: &mut Vec<usize>,
+        best_obj: &mut f64,
+        best: &mut Option<Vec<usize>>,
+        stats: &mut SolveStats,
+    ) {
+        let w = c.p.spec.weights;
+        if depth == c.options.len() {
+            let obj = w.alpha * c.p.acc_value(acc) - w.beta * cost - w.delta * batch;
+            if obj > *best_obj {
+                *best_obj = obj;
+                *best = Some(chosen.clone());
+            }
+            return;
+        }
+        let si = c.perm[depth];
+        let from = if c.same_group[depth] { start_pos } else { 0 };
+        for pos in from..c.order[depth].len() {
+            let oi = c.order[depth][pos];
+            let o = &c.options[si][oi];
+            stats.nodes += 1;
+            let nlat = lat + o.total_latency();
+            if nlat + c.suf_min_lat[depth + 1] > c.sla {
+                stats.pruned_infeasible += 1;
+                continue;
+            }
+            let ncost = cost + o.cost;
+            let nbatch = batch + o.batch as f64;
+            let nacc = acc + c.p.acc_term(si, o);
+            // Admissible bound: best accuracy completion, cheapest
+            // cost/batch completion.
+            let ub = w.alpha * c.p.acc_value(nacc + c.suf_max_acc[depth + 1])
+                - w.beta * (ncost + c.suf_min_cost[depth + 1])
+                - w.delta * (nbatch + c.suf_min_batch[depth + 1]);
+            if ub <= *best_obj {
+                stats.pruned_bound += 1;
+                continue;
+            }
+            chosen[si] = oi;
+            dfs(c, depth + 1, pos, nlat, ncost, nbatch, nacc, chosen, best_obj, best, stats);
+        }
+    }
+
+    let ctx = Ctx {
+        p,
+        options,
+        perm: &perm,
+        order: &order,
+        same_group: &same_group,
+        suf_min_lat: &suf_min_lat,
+        suf_min_cost: &suf_min_cost,
+        suf_min_batch: &suf_min_batch,
+        suf_max_acc: &suf_max_acc,
+        sla,
+    };
+    let mut chosen = vec![0usize; s];
+    dfs(&ctx, 0, 0, 0.0, 0.0, 0.0, 0.0, &mut chosen, &mut best_obj, &mut best, &mut stats);
+
+    let picks = best?;
+    Some((materialize(p, options, &picks), stats))
+}
+
+/// Build the [`PipelineConfig`] for a vector of per-stage option picks.
+pub fn materialize(
+    p: &Problem,
+    options: &[Vec<StageOption>],
+    picks: &[usize],
+) -> PipelineConfig {
+    let w = p.spec.weights;
+    let mut stages = Vec::new();
+    let mut cost = 0.0;
+    let mut batch_sum = 0usize;
+    let mut lat = 0.0;
+    let mut pas_frac = 1.0;
+    let mut acc_additive = 0.0;
+    for (si, (&oi, opts)) in picks.iter().zip(options).enumerate() {
+        let o = &opts[oi];
+        let vp = &p.profiles.stages[si].variants[o.variant_idx];
+        stages.push(StageConfig {
+            variant_idx: o.variant_idx,
+            variant_key: vp.variant.key(),
+            batch: o.batch,
+            replicas: o.replicas,
+            cost: o.cost,
+            accuracy: o.accuracy,
+            latency: o.latency,
+        });
+        cost += o.cost;
+        batch_sum += o.batch;
+        lat += o.total_latency();
+        pas_frac *= o.accuracy / 100.0;
+        acc_additive += p.acc_term(si, o);
+    }
+    let objective =
+        w.alpha * p.acc_value(acc_additive) - w.beta * cost - w.delta * batch_sum as f64;
+    PipelineConfig {
+        stages,
+        pas: 100.0 * pas_frac,
+        cost,
+        batch_sum,
+        objective,
+        latency_e2e: lat,
+    }
+}
+
+/// Fallback when the IP is infeasible under the predicted load: the
+/// lightest variant per stage at its throughput-optimal batch with the
+/// replica cap — maximize survivability, accept SLA violations (§4.5
+/// dropping sheds the excess).
+pub fn fallback_config(p: &Problem) -> PipelineConfig {
+    let mut stages = Vec::new();
+    let mut cost = 0.0;
+    let mut batch_sum = 0usize;
+    let mut lat = 0.0;
+    let mut pas_frac = 1.0;
+    for st in &p.profiles.stages {
+        // lightest = lowest cost-per-replica, then lowest batch-1 latency
+        let (vi, vp) = st
+            .variants
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                (a.cost_per_replica(), a.latency.latency(1))
+                    .partial_cmp(&(b.cost_per_replica(), b.latency.latency(1)))
+                    .unwrap()
+            })
+            .unwrap();
+        let batch = vp.latency.best_batch();
+        let tput = vp.latency.throughput(batch);
+        let replicas = ((p.lambda / tput).ceil().max(1.0) as u32).min(p.max_replicas);
+        stages.push(StageConfig {
+            variant_idx: vi,
+            variant_key: vp.variant.key(),
+            batch,
+            replicas,
+            cost: replicas as f64 * vp.cost_per_replica(),
+            accuracy: vp.variant.accuracy,
+            latency: vp.latency.latency(batch),
+        });
+        cost += replicas as f64 * vp.cost_per_replica();
+        batch_sum += batch;
+        lat += vp.latency.latency(batch) + crate::queueing::worst_case_delay(batch, p.lambda);
+        pas_frac *= vp.variant.accuracy / 100.0;
+    }
+    let w = p.spec.weights;
+    PipelineConfig {
+        stages,
+        pas: 100.0 * pas_frac,
+        cost,
+        batch_sum,
+        objective: w.alpha * 100.0 * pas_frac - w.beta * cost - w.delta * batch_sum as f64,
+        latency_e2e: lat,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::pipelines;
+    use crate::profiler::analytic::pipeline_profiles;
+
+    fn problem_for(name: &str, lambda: f64) -> (PipelineConfig, SolveStats) {
+        let spec = pipelines::by_name(name).unwrap();
+        let prof = pipeline_profiles(&spec);
+        let p = Problem::new(&spec, &prof, lambda);
+        solve(&p).expect("feasible")
+    }
+
+    #[test]
+    fn video_feasible_and_within_sla() {
+        let (cfg, _) = problem_for("video", 10.0);
+        assert!(cfg.latency_e2e <= 6.89 + 1e-9);
+        assert_eq!(cfg.stages.len(), 2);
+        assert!(cfg.pas > 0.0 && cfg.cost > 0.0);
+    }
+
+    #[test]
+    fn all_pipelines_feasible_at_moderate_load() {
+        for spec in pipelines::all() {
+            let prof = pipeline_profiles(&spec);
+            let p = Problem::new(&spec, &prof, 12.0);
+            let (cfg, _) = solve(&p).unwrap_or_else(|| panic!("{} infeasible", spec.name));
+            assert!(cfg.latency_e2e <= spec.sla_e2e() + 1e-9, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn higher_load_not_cheaper() {
+        let (lo, _) = problem_for("video", 5.0);
+        let (hi, _) = problem_for("video", 30.0);
+        assert!(hi.cost >= lo.cost, "cost {} -> {}", lo.cost, hi.cost);
+    }
+
+    #[test]
+    fn accuracy_priority_raises_pas() {
+        // Fig. 14 mechanism: raising α (or lowering β) must not lower PAS.
+        let spec = pipelines::by_name("audio-sent").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let mut spec_hi = spec.clone();
+        spec_hi.weights.alpha *= 20.0;
+        let base = solve(&Problem::new(&spec, &prof, 10.0)).unwrap().0;
+        let hi = solve(&Problem::new(&spec_hi, &prof, 10.0)).unwrap().0;
+        assert!(hi.pas >= base.pas, "{} -> {}", base.pas, hi.pas);
+    }
+
+    #[test]
+    fn cost_priority_lowers_cost() {
+        let spec = pipelines::by_name("audio-sent").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let mut spec_cheap = spec.clone();
+        spec_cheap.weights.beta *= 50.0;
+        let base = solve(&Problem::new(&spec, &prof, 10.0)).unwrap().0;
+        let cheap = solve(&Problem::new(&spec_cheap, &prof, 10.0)).unwrap().0;
+        assert!(cheap.cost <= base.cost, "{} -> {}", base.cost, cheap.cost);
+    }
+
+    #[test]
+    fn throughput_constraint_satisfied() {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let lambda = 22.0;
+        let p = Problem::new(&spec, &prof, lambda);
+        let (cfg, _) = solve(&p).unwrap();
+        for (si, sc) in cfg.stages.iter().enumerate() {
+            let vp = &prof.stages[si].variants[sc.variant_idx];
+            let tput = sc.replicas as f64 * vp.latency.throughput(sc.batch);
+            assert!(tput >= lambda - 1e-9, "stage {si}: {tput} < {lambda}");
+        }
+    }
+
+    #[test]
+    fn pas_prime_mode_solves() {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let mut p = Problem::new(&spec, &prof, 10.0);
+        p.metric = AccuracyMetric::PasPrime;
+        let (cfg, _) = solve(&p).unwrap();
+        assert!(cfg.latency_e2e <= spec.sla_e2e() + 1e-9);
+    }
+
+    #[test]
+    fn infeasible_returns_none_and_fallback_works() {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let mut p = Problem::new(&spec, &prof, 100_000.0);
+        p.max_replicas = 2;
+        assert!(solve(&p).is_none());
+        let fb = fallback_config(&p);
+        assert_eq!(fb.stages.len(), 2);
+        assert!(fb.cost > 0.0);
+    }
+
+    #[test]
+    fn stats_populated() {
+        let spec = pipelines::by_name("nlp").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let p = Problem::new(&spec, &prof, 15.0);
+        let (_, stats) = solve(&p).unwrap();
+        assert!(stats.nodes > 0);
+        assert!(stats.options_total > 0);
+    }
+}

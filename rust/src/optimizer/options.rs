@@ -1,0 +1,230 @@
+//! Per-stage option enumeration for the IP (§4.3).
+//!
+//! For each (variant, batch) pair we derive the *induced* decision:
+//! the minimum replica count that satisfies the throughput constraint
+//! (Eq. 10c) — cost is strictly increasing in replicas and no other
+//! constraint involves them, so `n = ⌈λ / h(b)⌉` is optimal given
+//! (m, b).  This collapses the per-stage space from |M|·|B|·n_max to
+//! |M|·|B| and makes the branch-and-bound exact and fast.
+//!
+//! Options that cannot fit the end-to-end SLA even alone, or that need
+//! more than `max_replicas`, are dropped; the survivors are then
+//! Pareto-pruned (an option dominated on accuracy, latency+queue, cost
+//! AND batch simultaneously can never appear in an optimal solution).
+
+use crate::models::registry::BATCH_SIZES;
+use crate::profiler::profile::StageProfile;
+use crate::queueing::worst_case_delay;
+
+/// One feasible (variant, batch) choice for a stage, with the induced
+/// replica count and derived quantities.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageOption {
+    pub variant_idx: usize,
+    pub batch: usize,
+    /// Model latency `l_{s,m}(b)`, seconds.
+    pub latency: f64,
+    /// Worst-case queueing delay `q_s(b) = (b-1)/λ`, seconds.
+    pub queue_delay: f64,
+    /// Induced replica count `⌈λ / h(b)⌉`.
+    pub replicas: u32,
+    /// `n · R_m` in CPU cores.
+    pub cost: f64,
+    /// The variant's accuracy metric (percent scale).
+    pub accuracy: f64,
+}
+
+impl StageOption {
+    /// Stage contribution to the Eq. 10b latency sum.
+    pub fn total_latency(&self) -> f64 {
+        self.latency + self.queue_delay
+    }
+}
+
+/// Enumeration parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct EnumParams {
+    /// Predicted arrival rate λ (RPS).
+    pub lambda: f64,
+    /// End-to-end SLA (Eq. 10b right-hand side).
+    pub sla_e2e: f64,
+    /// Horizontal-scaling cap per stage.
+    pub max_replicas: u32,
+}
+
+/// Enumerate the feasible, Pareto-pruned options of one stage.
+pub fn enumerate(stage: &StageProfile, p: EnumParams) -> Vec<StageOption> {
+    let mut opts = Vec::new();
+    for (vi, vp) in stage.variants.iter().enumerate() {
+        for &b in &BATCH_SIZES {
+            let latency = vp.latency.latency(b);
+            let queue_delay = worst_case_delay(b, p.lambda);
+            if latency + queue_delay > p.sla_e2e {
+                continue; // cannot fit even with zero-latency other stages
+            }
+            let tput = vp.latency.throughput(b);
+            if tput <= 0.0 {
+                continue;
+            }
+            let replicas = (p.lambda / tput).ceil().max(1.0) as u32;
+            if replicas > p.max_replicas {
+                continue;
+            }
+            opts.push(StageOption {
+                variant_idx: vi,
+                batch: b,
+                latency,
+                queue_delay,
+                replicas,
+                cost: replicas as f64 * vp.cost_per_replica(),
+                accuracy: vp.variant.accuracy,
+            });
+        }
+    }
+    pareto_prune(opts)
+}
+
+/// Remove options dominated on (accuracy↑, total latency↓, cost↓, batch↓).
+pub fn pareto_prune(mut opts: Vec<StageOption>) -> Vec<StageOption> {
+    let mut keep = vec![true; opts.len()];
+    for i in 0..opts.len() {
+        if !keep[i] {
+            continue;
+        }
+        for j in 0..opts.len() {
+            if i == j || !keep[i] || !keep[j] {
+                continue;
+            }
+            if dominates(&opts[j], &opts[i]) {
+                keep[i] = false;
+            }
+        }
+    }
+    let mut it = keep.iter();
+    opts.retain(|_| *it.next().unwrap());
+    opts
+}
+
+/// True if `a` dominates `b`: no worse on all four axes, strictly better
+/// on at least one.
+fn dominates(a: &StageOption, b: &StageOption) -> bool {
+    let no_worse = a.accuracy >= b.accuracy
+        && a.total_latency() <= b.total_latency()
+        && a.cost <= b.cost
+        && a.batch <= b.batch;
+    let strictly = a.accuracy > b.accuracy
+        || a.total_latency() < b.total_latency()
+        || a.cost < b.cost
+        || a.batch < b.batch;
+    no_worse && strictly
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::pipelines;
+    use crate::profiler::analytic::pipeline_profiles;
+
+    fn video_stage0() -> StageProfile {
+        let spec = pipelines::by_name("video").unwrap();
+        pipeline_profiles(&spec).stages.remove(0)
+    }
+
+    fn params(lambda: f64) -> EnumParams {
+        EnumParams { lambda, sla_e2e: 6.89, max_replicas: 32 }
+    }
+
+    #[test]
+    fn options_nonempty_and_feasible() {
+        let st = video_stage0();
+        let p = params(10.0);
+        let opts = enumerate(&st, p);
+        assert!(!opts.is_empty());
+        for o in &opts {
+            assert!(o.total_latency() <= p.sla_e2e);
+            assert!(o.replicas >= 1 && o.replicas <= p.max_replicas);
+            // throughput constraint holds by construction
+            let vp = &st.variants[o.variant_idx];
+            assert!(o.replicas as f64 * vp.latency.throughput(o.batch) >= p.lambda - 1e-9);
+        }
+    }
+
+    #[test]
+    fn replicas_grow_with_lambda() {
+        let st = video_stage0();
+        let lo = enumerate(&st, params(5.0));
+        let hi = enumerate(&st, params(25.0));
+        // compare the same (variant,batch) choice present in both
+        for o in &lo {
+            if let Some(h) =
+                hi.iter().find(|h| h.variant_idx == o.variant_idx && h.batch == o.batch)
+            {
+                assert!(h.replicas >= o.replicas);
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_removes_dominated() {
+        let mk = |acc, lat, cost, batch| StageOption {
+            variant_idx: 0,
+            batch,
+            latency: lat,
+            queue_delay: 0.0,
+            replicas: 1,
+            cost,
+            accuracy: acc,
+        };
+        let opts = vec![
+            mk(50.0, 0.1, 1.0, 1),  // kept
+            mk(50.0, 0.2, 2.0, 1),  // dominated by [0]
+            mk(60.0, 0.3, 3.0, 1),  // kept (best accuracy)
+        ];
+        let pruned = pareto_prune(opts);
+        assert_eq!(pruned.len(), 2);
+        assert!(pruned.iter().any(|o| o.accuracy == 60.0));
+        assert!(pruned.iter().all(|o| !(o.accuracy == 50.0 && o.cost == 2.0)));
+    }
+
+    #[test]
+    fn pareto_keeps_tradeoff_frontier() {
+        let mk = |acc, cost| StageOption {
+            variant_idx: 0,
+            batch: 1,
+            latency: 0.1,
+            queue_delay: 0.0,
+            replicas: 1,
+            cost,
+            accuracy: acc,
+        };
+        // strictly increasing accuracy and cost: nothing dominated
+        let opts = vec![mk(10.0, 1.0), mk(20.0, 2.0), mk(30.0, 3.0)];
+        assert_eq!(pareto_prune(opts).len(), 3);
+    }
+
+    #[test]
+    fn identical_options_collapse() {
+        let mk = || StageOption {
+            variant_idx: 0,
+            batch: 1,
+            latency: 0.1,
+            queue_delay: 0.0,
+            replicas: 1,
+            cost: 1.0,
+            accuracy: 10.0,
+        };
+        // identical options do not dominate each other (no strict axis) —
+        // both are kept; the solver tolerates ties.
+        assert_eq!(pareto_prune(vec![mk(), mk()]).len(), 2);
+    }
+
+    #[test]
+    fn tight_sla_filters_everything() {
+        let st = video_stage0();
+        let opts = enumerate(
+            &st,
+            EnumParams { lambda: 10.0, sla_e2e: 1e-6, max_replicas: 32 },
+        );
+        assert!(opts.is_empty());
+    }
+}

@@ -1,0 +1,180 @@
+//! Load predictors (§3 "Predictor", §5.5 ablation).
+//!
+//! The adapter asks a predictor for the *maximum* arrival rate over the
+//! next `HORIZON` seconds given the last `HISTORY` seconds of observed
+//! per-second load.  Three implementations (Fig. 16):
+//!
+//! * [`LstmPredictor`] — the paper's LSTM, trained at build time in JAX
+//!   and served via a PJRT-compiled artifact (the inference closure is
+//!   injected by `runtime::engine` so this module stays runtime-free).
+//! * [`ReactivePredictor`] — no prediction: the recent observed max
+//!   (what reactive autoscalers like InferLine/FA2 use).
+//! * [`OraclePredictor`] — ground-truth future max from the trace (the
+//!   paper's "baseline predictor with complete knowledge").
+
+use crate::workload::trace::Trace;
+
+/// Window the LSTM consumes (seconds) — matches
+/// `python/compile/predictor.HISTORY`.
+pub const HISTORY: usize = 120;
+/// Prediction horizon (seconds) — matches python `HORIZON`.
+pub const HORIZON: usize = 20;
+
+/// A load predictor.
+pub trait Predictor {
+    /// Predicted max RPS over `[now, now+HORIZON)`.
+    ///
+    /// `history` holds per-second observed loads, oldest first, with the
+    /// most recent second last; it may be shorter than [`HISTORY`] during
+    /// warm-up.
+    fn predict(&mut self, now: f64, history: &[f64]) -> f64;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Reactive baseline: max over the trailing `window` seconds (plus a
+/// small safety headroom, as reactive autoscalers typically configure).
+pub struct ReactivePredictor {
+    pub window: usize,
+    pub headroom: f64,
+}
+
+impl Default for ReactivePredictor {
+    fn default() -> Self {
+        ReactivePredictor { window: 30, headroom: 1.0 }
+    }
+}
+
+impl Predictor for ReactivePredictor {
+    fn predict(&mut self, _now: f64, history: &[f64]) -> f64 {
+        let n = history.len();
+        let lo = n.saturating_sub(self.window);
+        let m = history[lo..].iter().fold(0.0f64, |a, &b| a.max(b));
+        (m * self.headroom).max(0.5)
+    }
+
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+}
+
+/// Oracle: reads the future from the trace.
+pub struct OraclePredictor {
+    pub trace: Trace,
+}
+
+impl Predictor for OraclePredictor {
+    fn predict(&mut self, now: f64, _history: &[f64]) -> f64 {
+        self.trace.max_in_window(now, HORIZON as f64)
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+/// The trained LSTM, behind an injected inference function
+/// (`runtime::engine::Engine::lstm_closure` produces one that executes
+/// the PJRT artifact).  Histories shorter than [`HISTORY`] are
+/// left-padded with their first value.
+pub struct LstmPredictor {
+    infer: Box<dyn FnMut(&[f32]) -> f32 + Send>,
+}
+
+impl LstmPredictor {
+    pub fn new(infer: Box<dyn FnMut(&[f32]) -> f32 + Send>) -> Self {
+        LstmPredictor { infer }
+    }
+
+    /// Build the fixed-size input window from a history slice.
+    pub fn window(history: &[f64]) -> [f32; HISTORY] {
+        let mut w = [0f32; HISTORY];
+        if history.is_empty() {
+            return w;
+        }
+        let pad = history.first().copied().unwrap_or(0.0) as f32;
+        let n = history.len();
+        for (i, slot) in w.iter_mut().enumerate() {
+            *slot = if n >= HISTORY {
+                history[n - HISTORY + i] as f32
+            } else if i < HISTORY - n {
+                pad
+            } else {
+                history[i - (HISTORY - n)] as f32
+            };
+        }
+        w
+    }
+}
+
+impl Predictor for LstmPredictor {
+    fn predict(&mut self, _now: f64, history: &[f64]) -> f64 {
+        let w = Self::window(history);
+        let raw = (self.infer)(&w) as f64;
+        // Floor at the recently observed max: the solver treats λ as a
+        // hard throughput requirement, and provisioning below load that
+        // is *currently arriving* is never sound.  This also gives the
+        // LSTM the post-burst hysteresis a trailing-max baseline gets
+        // for free (without it, fast post-burst downscaling re-enters
+        // heavy variants right before the next burst).
+        let recent = history.iter().rev().take(15).fold(0.0f64, |a, &b| a.max(b));
+        raw.max(recent).max(0.5)
+    }
+
+    fn name(&self) -> &'static str {
+        "lstm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::tracegen::Pattern;
+
+    #[test]
+    fn reactive_takes_recent_max() {
+        let mut p = ReactivePredictor { window: 3, headroom: 1.0 };
+        let h = vec![10.0, 50.0, 1.0, 2.0, 3.0];
+        assert_eq!(p.predict(0.0, &h), 3.0);
+        let h2 = vec![1.0, 9.0, 2.0];
+        assert_eq!(p.predict(0.0, &h2), 9.0);
+    }
+
+    #[test]
+    fn oracle_sees_future() {
+        let trace = Trace::new("t", vec![1.0; 100].into_iter().chain(vec![40.0; 10]).collect());
+        let mut p = OraclePredictor { trace };
+        // standing at t=95, the burst at t=100 is inside the horizon
+        assert_eq!(p.predict(95.0, &[]), 40.0);
+        assert_eq!(p.predict(10.0, &[]), 1.0);
+    }
+
+    #[test]
+    fn lstm_window_padding() {
+        let w = LstmPredictor::window(&[5.0, 6.0]);
+        assert_eq!(w[0], 5.0);
+        assert_eq!(w[HISTORY - 2], 5.0);
+        assert_eq!(w[HISTORY - 1], 6.0);
+        let full: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let w2 = LstmPredictor::window(&full);
+        assert_eq!(w2[0], 80.0);
+        assert_eq!(w2[HISTORY - 1], 199.0);
+    }
+
+    #[test]
+    fn lstm_wrapper_floors() {
+        // An LSTM stub predicting 0 is floored by recent load.
+        let mut p = LstmPredictor::new(Box::new(|_| 0.0));
+        let h = vec![20.0; 130];
+        assert!(p.predict(0.0, &h) >= 10.0);
+    }
+
+    #[test]
+    fn reactive_tracks_synthetic_trace_roughly() {
+        let tr = Trace::synthetic(Pattern::SteadyLow, 300);
+        let mut p = ReactivePredictor::default();
+        let pred = p.predict(150.0, &tr.rates[..150]);
+        assert!((4.0..10.0).contains(&pred), "{pred}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Paper-scale analytic profiles.
+//!
+//! The paper profiles real DNNs on 96-core Chameleon nodes; we cannot
+//! (repro gate), so simulator-mode experiments use analytic profiles
+//! constructed to be *self-consistent with the paper's own numbers*:
+//!
+//! * Within a stage, the batch-1 latency of variant `m` under its base
+//!   allocation is proportional to `params_m^0.75 / BA_m` — heavier
+//!   models are slower, extra base cores buy sub-linear speedup.  This
+//!   preserves the accuracy↔latency trade-off that drives every result.
+//! * The per-(pipeline, stage) scale factor is calibrated so that
+//!   `SLA_s = 5 × avg(batch-1 latency)` reproduces Table 6 exactly
+//!   (the SLAs the e2e experiments run against).
+//! * Batch scaling follows `g(b) = 0.35 + 0.6·b + 0.004·b²` (normalized
+//!   to g(1)=1), matching the sub-linear per-item batching gains in
+//!   Table 3 (e.g. ResNet18: 73 ms at b=1 → 383 ms at b=8 ≈ 5.2×).
+//!
+//! The same construction exposes a *hardware model* (1-core latencies +
+//! a `cores^0.7` speedup law) for the Eq. 1 base-allocation solver and
+//! the Table 2 / Table 5 reports.
+//!
+//! Live-engine runs use measured profiles of the real artifacts instead
+//! (`profiler::measured` path via `runtime`).
+
+use super::fit::ProfileSamples;
+use super::profile::{LatencyProfile, PipelineProfiles, StageProfile, VariantProfile};
+use crate::models::pipelines::PipelineSpec;
+use crate::models::registry::{variants_of, StageType, Variant, BATCH_SIZES};
+
+/// Batch-scaling shape `g(b)`, normalized so `g(1) = 1`.
+pub fn batch_shape(b: usize) -> f64 {
+    let x = b as f64;
+    let g = 0.35 + 0.6 * x + 0.004 * x * x;
+    let g1 = 0.35 + 0.6 + 0.004;
+    g / g1
+}
+
+/// Relative weight of a variant under base allocation:
+/// `params^0.75 / BA`.
+pub fn variant_weight(v: &Variant) -> f64 {
+    v.params_m.powf(0.75) / v.base_alloc as f64
+}
+
+/// Sub-linear multi-core speedup law (hardware model).
+pub fn core_speedup(cores: u32) -> f64 {
+    (cores as f64).powf(0.7)
+}
+
+/// 1-core batch-1 latency anchors per stage type, seconds — calibrated
+/// to the paper's published single measurements (Table 2: ResNet18 at
+/// 75 ms / 1 core; Table 3: YOLOv5n at 80 ms) and to plausible scales
+/// for the NLP/audio stages.
+pub fn stage_anchor_1core(t: StageType) -> f64 {
+    match t {
+        StageType::Detect => 0.080,    // yolov5n, Table 3
+        StageType::Classify => 0.075,  // resnet18, Table 2
+        StageType::Audio => 1.00,
+        StageType::Qa => 0.15,
+        StageType::Summarize => 0.40,
+        StageType::Sentiment => 0.18,
+        StageType::LangId => 0.19,
+        StageType::Nmt => 0.50,
+    }
+}
+
+/// Hardware model: latency of `v` at batch `b` on `cores` CPU cores.
+/// Anchored so the *smallest* variant of the stage at 1 core / batch 1
+/// hits [`stage_anchor_1core`].
+pub fn hw_latency(v: &Variant, b: usize, cores: u32) -> f64 {
+    let vs = variants_of(v.stage_type);
+    let smallest = vs[0];
+    let k = stage_anchor_1core(v.stage_type) / smallest.params_m.powf(0.75);
+    k * v.params_m.powf(0.75) * batch_shape(b) / core_speedup(cores)
+}
+
+/// Hardware-model throughput (RPS) at batch `b` on `cores`.
+pub fn hw_throughput(v: &Variant, b: usize, cores: u32) -> f64 {
+    b as f64 / hw_latency(v, b, cores)
+}
+
+/// Build the paper-calibrated profiles for one pipeline.
+///
+/// Profiles are constructed by *sampling* the analytic curve at the
+/// seven profiled batch sizes and running the §4.2 quadratic fit — the
+/// same path measured profiles take — so the fit machinery is exercised
+/// end-to-end.
+pub fn pipeline_profiles(spec: &PipelineSpec) -> PipelineProfiles {
+    let mut stages = Vec::new();
+    for (si, &stage_type) in spec.stages.iter().enumerate() {
+        let vs = variants_of(stage_type);
+        // Calibrate k so 5 * mean(batch-1 latency) == Table 6 SLA_s.
+        let mean_w: f64 = vs.iter().map(|v| variant_weight(v)).sum::<f64>() / vs.len() as f64;
+        let target_mean_l1 = spec.stage_slas[si] / 5.0;
+        let k = target_mean_l1 / mean_w;
+
+        let mut variants = Vec::new();
+        for v in vs {
+            let l1 = k * variant_weight(v);
+            let mut samples = ProfileSamples::default();
+            for &b in &BATCH_SIZES {
+                samples.push(b, l1 * batch_shape(b));
+            }
+            let latency: LatencyProfile = samples.fit().expect("7 batch points fit");
+            variants.push(VariantProfile { variant: v, latency });
+        }
+        stages.push(StageProfile { stage_type, variants });
+    }
+    PipelineProfiles { pipeline: spec.name.to_string(), stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::pipelines;
+
+    #[test]
+    fn batch_shape_normalized() {
+        assert!((batch_shape(1) - 1.0).abs() < 1e-12);
+        assert!(batch_shape(8) > 4.0 && batch_shape(8) < 8.0, "sub-linear batching");
+        assert!(batch_shape(64) < 64.0);
+    }
+
+    #[test]
+    fn table6_slas_reproduced() {
+        // The calibration target: stage SLAs computed from the profiles
+        // must reproduce Table 6 to float precision.
+        for spec in pipelines::all() {
+            let prof = pipeline_profiles(&spec);
+            for (si, st) in prof.stages.iter().enumerate() {
+                let sla = st.stage_sla();
+                assert!(
+                    (sla - spec.stage_slas[si]).abs() < 1e-6,
+                    "{} stage {si}: {sla} vs {}",
+                    spec.name,
+                    spec.stage_slas[si]
+                );
+            }
+            assert!((prof.sla_e2e() - spec.sla_e2e()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn heavier_variants_slower_within_stage() {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        for st in &prof.stages {
+            // params/BA weight ordering, not strictly params ordering.
+            for pair in st.variants.windows(2) {
+                let w0 = variant_weight(pair[0].variant);
+                let w1 = variant_weight(pair[1].variant);
+                let l0 = pair[0].latency.latency(1);
+                let l1 = pair[1].latency.latency(1);
+                assert_eq!(w0 < w1, l0 < l1, "latency follows weight ordering");
+            }
+        }
+    }
+
+    #[test]
+    fn hw_model_anchors() {
+        let v = crate::models::registry::by_key("classify.resnet18").unwrap();
+        assert!((hw_latency(v, 1, 1) - 0.075).abs() < 1e-9);
+        let y = crate::models::registry::by_key("detect.yolov5n").unwrap();
+        assert!((hw_latency(y, 1, 1) - 0.080).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hw_model_table2_shape() {
+        // Table 2 shape: more cores -> lower latency, higher throughput;
+        // ResNet50 slower than ResNet18 at equal cores.
+        let r18 = crate::models::registry::by_key("classify.resnet18").unwrap();
+        let r50 = crate::models::registry::by_key("classify.resnet50").unwrap();
+        for &c in &[1u32, 4, 8] {
+            assert!(hw_latency(r50, 1, c) > hw_latency(r18, 1, c));
+        }
+        assert!(hw_latency(r18, 1, 8) < hw_latency(r18, 1, 4));
+        assert!(hw_throughput(r18, 1, 8) > hw_throughput(r18, 1, 1));
+    }
+
+    #[test]
+    fn speedup_sublinear() {
+        assert!(core_speedup(4) < 4.0);
+        assert!(core_speedup(4) > 2.0);
+        assert!((core_speedup(1) - 1.0).abs() < 1e-12);
+    }
+}

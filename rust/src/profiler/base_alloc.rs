@@ -1,0 +1,89 @@
+//! Eq. 1 base-allocation solver.
+//!
+//! §4.2: for each model variant, find the minimum per-container CPU
+//! allocation `R_m` such that (1b) the variant sustains a threshold
+//! throughput `th` and (1c) it can serve the largest batch size within
+//! the per-stage SLA.  The allocation is then fixed at runtime; the
+//! optimizer scales *horizontally* with that base allocation.
+
+use super::analytic::{hw_latency, hw_throughput};
+use crate::models::registry::Variant;
+
+/// Candidate allocations, capped at 32 cores like Table 5.
+pub const CORE_STEPS: [u32; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Result of Eq. 1 for one variant/threshold: `None` = infeasible within
+/// the 32-core cap (the "×" entries in Table 5).
+pub fn solve(v: &Variant, threshold_rps: f64, stage_sla: f64, max_batch: usize) -> Option<u32> {
+    CORE_STEPS.iter().copied().find(|&c| {
+        hw_throughput(v, 1, c) >= threshold_rps && hw_latency(v, max_batch, c) <= stage_sla
+    })
+}
+
+/// Table 5 row: base allocations of every variant of a stage under a
+/// given RPS threshold (None = ×).
+pub fn table_row(
+    variants: &[&'static Variant],
+    threshold_rps: f64,
+    stage_sla: f64,
+    max_batch: usize,
+) -> Vec<Option<u32>> {
+    variants
+        .iter()
+        .map(|v| solve(v, threshold_rps, stage_sla, max_batch))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::registry::{variants_of, StageType};
+
+    #[test]
+    fn alloc_monotone_in_model_size() {
+        // Table 5 shape: heavier variants need >= cores at equal threshold.
+        let vs = variants_of(StageType::Detect);
+        let allocs = table_row(&vs, 5.0, 4.62, 8);
+        let got: Vec<u32> = allocs.iter().map(|a| a.unwrap_or(64)).collect();
+        for w in got.windows(2) {
+            assert!(w[0] <= w[1], "{got:?}");
+        }
+    }
+
+    #[test]
+    fn alloc_monotone_in_threshold() {
+        // Higher RPS thresholds require >= cores (Table 5 columns).
+        let vs = variants_of(StageType::Detect);
+        let v = vs[2]; // yolov5m
+        let a5 = solve(v, 5.0, 4.62, 8).unwrap_or(64);
+        let a10 = solve(v, 10.0, 4.62, 8).unwrap_or(64);
+        let a15 = solve(v, 15.0, 4.62, 8).unwrap_or(64);
+        assert!(a5 <= a10 && a10 <= a15, "{a5} {a10} {a15}");
+    }
+
+    #[test]
+    fn heavy_variant_at_high_threshold_infeasible() {
+        // Table 5 has x entries: the cap binds for heavy models at high RPS.
+        let vs = variants_of(StageType::Detect);
+        let heavy = vs[4]; // yolov5x
+        assert!(solve(heavy, 60.0, 1.0, 8).is_none());
+    }
+
+    #[test]
+    fn light_variant_cheap() {
+        let vs = variants_of(StageType::Detect);
+        let light = vs[0]; // yolov5n: 80ms @1 core => 12.5 RPS >= 5
+        assert_eq!(solve(light, 5.0, 4.62, 8), Some(1));
+    }
+
+    #[test]
+    fn sla_constraint_binds() {
+        // With a tight SLA for max batch, more cores are needed even at
+        // a trivial throughput threshold (Eq. 1c).
+        let vs = variants_of(StageType::Detect);
+        let v = vs[2];
+        let loose = solve(v, 0.1, 100.0, 64).unwrap();
+        let tight = solve(v, 0.1, 2.0, 64).unwrap_or(64);
+        assert!(tight >= loose, "{tight} vs {loose}");
+    }
+}

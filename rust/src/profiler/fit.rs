@@ -1,0 +1,98 @@
+//! §4.2 profiling methodology: measure latency at power-of-two batch
+//! sizes 1..64, fit a quadratic `l(b) = αb² + βb + γ`, and use the fit
+//! to infer latencies at unmeasured batch sizes ("decreases the
+//! profiling cost by an order of magnitude").
+
+use super::profile::LatencyProfile;
+use crate::util::stats;
+
+/// Raw measurements: (batch, latency-seconds) pairs.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileSamples {
+    pub points: Vec<(usize, f64)>,
+}
+
+impl ProfileSamples {
+    pub fn push(&mut self, batch: usize, latency_s: f64) {
+        self.points.push((batch, latency_s));
+    }
+
+    /// Fit the quadratic latency model.  Returns `None` with <3 distinct
+    /// batch sizes (the paper profiles 7).
+    pub fn fit(&self) -> Option<LatencyProfile> {
+        let xs: Vec<f64> = self.points.iter().map(|&(b, _)| b as f64).collect();
+        let ys: Vec<f64> = self.points.iter().map(|&(_, l)| l).collect();
+        let coef = stats::quadratic_fit(&xs, &ys)?;
+        Some(LatencyProfile::new(coef))
+    }
+
+    /// MSE of the quadratic fit over the samples.
+    pub fn quadratic_mse(&self) -> Option<f64> {
+        let xs: Vec<f64> = self.points.iter().map(|&(b, _)| b as f64).collect();
+        let ys: Vec<f64> = self.points.iter().map(|&(_, l)| l).collect();
+        let coef = stats::quadratic_fit(&xs, &ys)?;
+        Some(stats::fit_mse(&coef, &xs, &ys))
+    }
+
+    /// MSE of the *linear* fit (the paper compares and picks quadratic).
+    pub fn linear_mse(&self) -> Option<f64> {
+        let xs: Vec<f64> = self.points.iter().map(|&(b, _)| b as f64).collect();
+        let ys: Vec<f64> = self.points.iter().map(|&(_, l)| l).collect();
+        let c = stats::linear_fit(&xs, &ys)?;
+        let errs: Vec<f64> = xs
+            .iter()
+            .zip(&ys)
+            .map(|(&x, &y)| {
+                let p = c[0] * x + c[1];
+                (p - y) * (p - y)
+            })
+            .collect();
+        Some(stats::mean(&errs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::registry::BATCH_SIZES;
+
+    fn curved_samples() -> ProfileSamples {
+        let mut s = ProfileSamples::default();
+        for &b in &BATCH_SIZES {
+            let x = b as f64;
+            s.push(b, 0.002 * x * x + 0.03 * x + 0.05);
+        }
+        s
+    }
+
+    #[test]
+    fn fit_recovers_coefficients() {
+        let p = curved_samples().fit().unwrap();
+        assert!((p.coef[0] - 0.002).abs() < 1e-9);
+        assert!((p.coef[1] - 0.03).abs() < 1e-7);
+        assert!((p.coef[2] - 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn quadratic_beats_linear() {
+        // The §4.2 model-selection claim.
+        let s = curved_samples();
+        assert!(s.quadratic_mse().unwrap() < s.linear_mse().unwrap());
+    }
+
+    #[test]
+    fn interpolates_unmeasured_batches() {
+        let p = curved_samples().fit().unwrap();
+        // batch 12 was never measured; the fit should land on the curve.
+        let expected = 0.002 * 144.0 + 0.03 * 12.0 + 0.05;
+        assert!((p.latency(12) - expected).abs() < 1e-6);
+    }
+
+    #[test]
+    fn too_few_points() {
+        let mut s = ProfileSamples::default();
+        s.push(1, 0.1);
+        s.push(2, 0.2);
+        assert!(s.fit().is_none());
+    }
+}

@@ -1,0 +1,120 @@
+//! Latency profiles — the §4.2 representation of a model variant's
+//! performance: latency as a quadratic in batch size, under its base
+//! resource allocation.
+
+use crate::models::registry::{StageType, Variant, BATCH_SIZES};
+
+/// Quadratic latency model `l(b) = a·b² + β·b + γ` (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyProfile {
+    pub coef: [f64; 3],
+}
+
+impl LatencyProfile {
+    pub fn new(coef: [f64; 3]) -> Self {
+        Self { coef }
+    }
+
+    /// Batch-processing latency at batch size `b`, seconds.
+    pub fn latency(&self, b: usize) -> f64 {
+        let x = b as f64;
+        (self.coef[0] * x * x + self.coef[1] * x + self.coef[2]).max(1e-9)
+    }
+
+    /// Per-replica throughput at batch size `b`, requests/second.
+    pub fn throughput(&self, b: usize) -> f64 {
+        b as f64 / self.latency(b)
+    }
+
+    /// The batch size (from the profiled set) maximizing throughput.
+    pub fn best_batch(&self) -> usize {
+        BATCH_SIZES
+            .iter()
+            .copied()
+            .max_by(|&a, &b| self.throughput(a).partial_cmp(&self.throughput(b)).unwrap())
+            .unwrap()
+    }
+}
+
+/// Profile of one variant in one pipeline stage: the latency model plus
+/// the per-replica cost (base allocation) and accuracy.
+#[derive(Debug, Clone)]
+pub struct VariantProfile {
+    pub variant: &'static Variant,
+    pub latency: LatencyProfile,
+}
+
+impl VariantProfile {
+    /// Cost of one replica, in CPU cores (paper: the base allocation).
+    pub fn cost_per_replica(&self) -> f64 {
+        self.variant.base_alloc as f64
+    }
+}
+
+/// All variant profiles for one pipeline stage.
+#[derive(Debug, Clone)]
+pub struct StageProfile {
+    pub stage_type: StageType,
+    pub variants: Vec<VariantProfile>,
+}
+
+impl StageProfile {
+    /// §4.2 / Swayam rule: `SLA_s = 5 × avg(batch-1 latency)` across the
+    /// stage's variants under base allocation.
+    pub fn stage_sla(&self) -> f64 {
+        let avg: f64 = self.variants.iter().map(|v| v.latency.latency(1)).sum::<f64>()
+            / self.variants.len() as f64;
+        5.0 * avg
+    }
+}
+
+/// Complete profile set for one pipeline: one [`StageProfile`] per stage.
+#[derive(Debug, Clone)]
+pub struct PipelineProfiles {
+    pub pipeline: String,
+    pub stages: Vec<StageProfile>,
+}
+
+impl PipelineProfiles {
+    /// `SLA_P = Σ SLA_s` (§4.2).
+    pub fn sla_e2e(&self) -> f64 {
+        self.stages.iter().map(|s| s.stage_sla()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_monotone_in_batch() {
+        let p = LatencyProfile::new([0.004, 0.6, 0.35]);
+        for w in BATCH_SIZES.windows(2) {
+            assert!(p.latency(w[0]) < p.latency(w[1]));
+        }
+    }
+
+    #[test]
+    fn throughput_improves_with_batching() {
+        // With a sub-linear latency curve, batching buys throughput.
+        let p = LatencyProfile::new([0.0005, 0.01, 0.05]);
+        assert!(p.throughput(8) > p.throughput(1));
+        // optimum batch is b* = sqrt(γ/α) = 10 → nearest profiled is 8
+        assert_eq!(p.best_batch(), 8);
+    }
+
+    #[test]
+    fn throughput_batch_identity() {
+        let p = LatencyProfile::new([0.001, 0.02, 0.08]);
+        for &b in &BATCH_SIZES {
+            let t = p.throughput(b);
+            assert!((t * p.latency(b) - b as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn latency_floor() {
+        let p = LatencyProfile::new([0.0, 0.0, -5.0]);
+        assert!(p.latency(1) > 0.0);
+    }
+}

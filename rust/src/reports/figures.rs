@@ -1,0 +1,388 @@
+//! Regeneration of the paper's figures (7–18) on the simulator
+//! substrate.  Every function returns the printed report as a String
+//! (the CLI and the bench harness write it to stdout / bench_output).
+
+use std::sync::Arc;
+
+use crate::baselines::rim::RimParams;
+use crate::coordinator::adapter::{Adapter, AdapterConfig, Policy};
+use crate::metrics::RunMetrics;
+use crate::models::accuracy::AccuracyMetric;
+use crate::models::pipelines::{self, ObjectiveWeights, PipelineSpec};
+use crate::models::registry::{StageType, Variant};
+use crate::optimizer::ip::{self, Problem};
+use crate::predictor::{LstmPredictor, OraclePredictor, Predictor, ReactivePredictor};
+use crate::profiler::analytic::pipeline_profiles;
+use crate::profiler::fit::ProfileSamples;
+use crate::profiler::profile::{PipelineProfiles, StageProfile, VariantProfile};
+use crate::runtime::pool::ExecutorPool;
+use crate::simulator::sim::{SimConfig, Simulation};
+use crate::workload::trace::Trace;
+use crate::workload::tracegen::Pattern;
+
+/// Which predictor a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredKind {
+    Lstm,
+    Reactive,
+    Oracle,
+}
+
+impl PredKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PredKind::Lstm => "lstm",
+            PredKind::Reactive => "reactive",
+            PredKind::Oracle => "oracle",
+        }
+    }
+}
+
+/// Report options.
+#[derive(Clone)]
+pub struct EvalOpts {
+    /// Trace length, seconds.
+    pub seconds: usize,
+    /// Artifact dir for the LSTM predictor (None → reactive fallback).
+    pub artifact_dir: Option<String>,
+    /// Shared executor pool (lazily created).
+    pool: Option<Arc<ExecutorPool>>,
+}
+
+impl EvalOpts {
+    pub fn new(seconds: usize, artifact_dir: Option<String>) -> Self {
+        EvalOpts { seconds, artifact_dir, pool: None }
+    }
+
+    /// Quick defaults for tests.
+    pub fn quick() -> Self {
+        EvalOpts::new(180, None)
+    }
+
+    fn pool(&mut self) -> Option<Arc<ExecutorPool>> {
+        if self.pool.is_none() {
+            if let Some(dir) = &self.artifact_dir {
+                match ExecutorPool::new(dir, 1) {
+                    Ok(p) => self.pool = Some(Arc::new(p)),
+                    Err(e) => {
+                        crate::log_warn!("reports", "no artifact pool: {e:#}");
+                        self.artifact_dir = None;
+                    }
+                }
+            }
+        }
+        self.pool.clone()
+    }
+
+    fn make_predictor(&mut self, kind: PredKind, trace: &Trace) -> Box<dyn Predictor + Send> {
+        match kind {
+            PredKind::Oracle => Box::new(OraclePredictor { trace: trace.clone() }),
+            PredKind::Reactive => Box::new(ReactivePredictor::default()),
+            PredKind::Lstm => match self.pool() {
+                Some(p) => Box::new(LstmPredictor::new(p.lstm_closure())),
+                None => Box::new(ReactivePredictor::default()),
+            },
+        }
+    }
+}
+
+/// Run one (pipeline, policy, pattern, predictor) cell on the simulator.
+pub fn run_cell(
+    pipeline: &str,
+    policy: Policy,
+    pattern: Pattern,
+    pred: PredKind,
+    opts: &mut EvalOpts,
+) -> RunMetrics {
+    let spec = pipelines::by_name(pipeline).expect("pipeline");
+    run_cell_spec(&spec, policy, pattern, pred, opts)
+}
+
+/// Like [`run_cell`] with an explicit (possibly reweighted) spec.
+pub fn run_cell_spec(
+    spec: &PipelineSpec,
+    policy: Policy,
+    pattern: Pattern,
+    pred: PredKind,
+    opts: &mut EvalOpts,
+) -> RunMetrics {
+    let prof = pipeline_profiles(spec);
+    let trace = Trace::synthetic(pattern, opts.seconds);
+    let predictor = opts.make_predictor(pred, &trace);
+    let adapter = Adapter::new(spec.clone(), prof, policy, AdapterConfig::default(), predictor);
+    let mut sim = Simulation::new(adapter, SimConfig::default());
+    sim.run(&trace)
+}
+
+const SYSTEMS: [(&str, fn() -> Policy); 4] = [
+    ("IPA", || Policy::Ipa(AccuracyMetric::Pas)),
+    ("FA2-low", || Policy::Fa2Low),
+    ("FA2-high", || Policy::Fa2High),
+    ("RIM", || Policy::Rim(RimParams { fixed_replicas: 8 })),
+];
+
+fn cell_row(name: &str, m: &RunMetrics) -> String {
+    format!(
+        "  {:<9} PAS {:>6.2}  cost {:>7.1}  SLA-att {:>5.1}%  drops {:>4.1}%  p99 {:>6.2}s  switches {}\n",
+        name,
+        m.avg_pas(),
+        m.avg_cost(),
+        m.sla_attainment() * 100.0,
+        m.drop_rate() * 100.0,
+        m.latency_summary().p99,
+        m.variant_switches(),
+    )
+}
+
+/// Figs. 8–12: per-pipeline temporal + average analysis across the four
+/// workloads and four systems.
+pub fn fig_e2e(pipeline: &str, opts: &mut EvalOpts) -> String {
+    let mut out = format!("Fig 8-12 style evaluation: pipeline={pipeline}\n");
+    for pattern in Pattern::EVAL {
+        out.push_str(&format!("\nworkload: {}\n", pattern.name()));
+        for (name, mk) in SYSTEMS {
+            let m = run_cell(pipeline, mk(), pattern, PredKind::Lstm, opts);
+            out.push_str(&cell_row(name, &m));
+            // temporal excerpt: every 6th interval
+            if pattern == Pattern::Bursty {
+                let pts: Vec<String> = m
+                    .intervals
+                    .iter()
+                    .step_by(6)
+                    .map(|i| format!("(t={:.0} pas={:.1} cost={:.0})", i.t, i.pas, i.cost))
+                    .collect();
+                out.push_str(&format!("           temporal: {}\n", pts.join(" ")));
+            }
+        }
+    }
+    out
+}
+
+/// Fig. 7: the four trace excerpts with LSTM predictions.
+pub fn fig7(opts: &mut EvalOpts) -> String {
+    let mut out = String::from("Fig 7: workload excerpts + LSTM predictions\n");
+    for pattern in Pattern::EVAL {
+        let trace = Trace::synthetic(pattern, opts.seconds);
+        let mut pred = opts.make_predictor(PredKind::Lstm, &trace);
+        let mut preds = Vec::new();
+        let mut truths = Vec::new();
+        let mut t = 130.0;
+        while t + 20.0 < trace.seconds() as f64 {
+            let hist_start = (t as usize).saturating_sub(120);
+            let history = &trace.rates[hist_start..t as usize];
+            preds.push(pred.predict(t, history));
+            truths.push(trace.max_in_window(t, 20.0));
+            t += 10.0;
+        }
+        let smape = crate::util::stats::smape(&preds, &truths);
+        let peak = trace.peak();
+        let mean = crate::util::stats::mean(&trace.rates);
+        out.push_str(&format!(
+            "  {:<12} mean {:>5.1} peak {:>5.1} RPS | predictor {} SMAPE {:>5.1}% (paper LSTM: 6.6%)\n",
+            pattern.name(),
+            mean,
+            peak,
+            pred.name(),
+            smape
+        ));
+    }
+    out
+}
+
+/// Fig. 13: solver decision time vs pipeline length × variants/stage.
+pub fn fig13() -> String {
+    let mut out = String::from(
+        "Fig 13: IP decision time (ms) vs #stages x #variants (paper: <2s at 10x10)\n",
+    );
+    out.push_str(&format!("{:<8}", "stages"));
+    let variant_counts = [2usize, 4, 6, 8, 10];
+    for m in variant_counts {
+        out.push_str(&format!("{:>10}", format!("m={m}")));
+    }
+    out.push('\n');
+    for s in [2usize, 4, 6, 8, 10] {
+        out.push_str(&format!("{:<8}", s));
+        for m in variant_counts {
+            let (spec, prof) = synthetic_problem(s, m);
+            let p = Problem::new(&spec, &prof, 12.0);
+            let t0 = std::time::Instant::now();
+            let _ = ip::solve(&p);
+            out.push_str(&format!("{:>10.2}", t0.elapsed().as_secs_f64() * 1e3));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Build a synthetic s-stage, m-variants/stage problem (Fig. 13 grid).
+pub fn synthetic_problem(s: usize, m: usize) -> (PipelineSpec, PipelineProfiles) {
+    let mut stages_prof = Vec::new();
+    for si in 0..s {
+        let mut variants = Vec::new();
+        for vi in 0..m {
+            // leaked static variants: bench-only, bounded by grid size
+            let v: &'static Variant = Box::leak(Box::new(Variant {
+                stage_type: StageType::Detect,
+                name: Box::leak(format!("syn-{si}-{vi}").into_boxed_str()),
+                params_m: 2.0 + 10.0 * vi as f64,
+                base_alloc: 1 + (vi as u32 / 2),
+                accuracy: 50.0 + 40.0 * vi as f64 / m.max(2) as f64,
+            }));
+            let l1 = 0.05 + 0.08 * vi as f64;
+            let mut samples = ProfileSamples::default();
+            for &b in &crate::models::registry::BATCH_SIZES {
+                samples.push(b, l1 * crate::profiler::analytic::batch_shape(b));
+            }
+            variants.push(VariantProfile { variant: v, latency: samples.fit().unwrap() });
+        }
+        stages_prof.push(StageProfile { stage_type: StageType::Detect, variants });
+    }
+    let spec = PipelineSpec {
+        name: "synthetic",
+        stages: vec![StageType::Detect; s],
+        weights: ObjectiveWeights { alpha: 5.0, beta: 0.5, delta: 1e-6 },
+        stage_slas: vec![2.0; s],
+    };
+    (
+        spec,
+        PipelineProfiles { pipeline: "synthetic".into(), stages: stages_prof },
+    )
+}
+
+/// Fig. 14: accuracy/cost trade-off under different (α, β) preferences.
+pub fn fig14(opts: &mut EvalOpts) -> String {
+    let mut out = String::from("Fig 14: cost vs PAS under objective preferences\n");
+    let scenarios: [(&str, f64, f64); 3] = [
+        ("resource-prio", 0.2, 10.0),
+        ("balanced", 1.0, 1.0),
+        ("accuracy-prio", 10.0, 0.1),
+    ];
+    for spec0 in pipelines::all() {
+        out.push_str(&format!("  {}\n", spec0.name));
+        for (label, am, bm) in scenarios {
+            let mut spec = spec0.clone();
+            spec.weights.alpha *= am;
+            spec.weights.beta *= bm;
+            let m = run_cell_spec(
+                &spec,
+                Policy::Ipa(AccuracyMetric::Pas),
+                Pattern::Fluctuating,
+                PredKind::Lstm,
+                opts,
+            );
+            out.push_str(&format!(
+                "    {:<15} cost {:>7.1}  PAS {:>6.2}\n",
+                label,
+                m.avg_cost(),
+                m.avg_pas()
+            ));
+        }
+    }
+    out
+}
+
+/// Fig. 15: end-to-end latency CDFs (bursty workload).
+pub fn fig15(opts: &mut EvalOpts) -> String {
+    let mut out = String::from("Fig 15: E2E latency CDF (bursty)\n");
+    for spec in pipelines::all() {
+        out.push_str(&format!("  {}\n", spec.name));
+        for (name, mk) in SYSTEMS {
+            let m = run_cell(spec.name, mk(), Pattern::Bursty, PredKind::Lstm, opts);
+            let s = m.latency_summary();
+            out.push_str(&format!(
+                "    {:<9} p50 {:>6.2}s p90 {:>6.2}s p99 {:>6.2}s (sla {:.2}s, n={})\n",
+                name,
+                s.p50,
+                crate::util::stats::percentile(&m.latencies(), 90.0),
+                s.p99,
+                m.sla,
+                s.n
+            ));
+        }
+    }
+    out
+}
+
+/// Fig. 16: predictor ablation — SLA violations and cost for
+/// LSTM vs reactive vs oracle on the bursty workload.
+pub fn fig16(opts: &mut EvalOpts) -> String {
+    let mut out = String::from("Fig 16: predictor ablation (bursty, IPA policy)\n");
+    for spec in pipelines::all() {
+        out.push_str(&format!("  {}\n", spec.name));
+        for kind in [PredKind::Lstm, PredKind::Reactive, PredKind::Oracle] {
+            let m = run_cell(
+                spec.name,
+                Policy::Ipa(AccuracyMetric::Pas),
+                Pattern::Bursty,
+                kind,
+                opts,
+            );
+            out.push_str(&format!(
+                "    {:<9} violations {:>5.2}%  cost {:>7.1}  pred-SMAPE {:>6.1}%\n",
+                kind.name(),
+                m.violation_rate() * 100.0,
+                m.avg_cost(),
+                m.prediction_smape()
+            ));
+        }
+    }
+    out
+}
+
+/// Figs. 17/18 (Appendix C): PAS′ metric replication on video + sum-qa.
+pub fn fig17(opts: &mut EvalOpts) -> String {
+    let mut out = String::from("Fig 17/18: PAS' (normalized-sum) metric replication\n");
+    for pipeline in ["video", "sum-qa"] {
+        out.push_str(&format!("  {pipeline}\n"));
+        for pattern in [Pattern::Bursty, Pattern::SteadyLow] {
+            out.push_str(&format!("    workload {}\n", pattern.name()));
+            for (name, mk) in [
+                ("IPA-PAS'", (|| Policy::Ipa(AccuracyMetric::PasPrime)) as fn() -> Policy),
+                ("FA2-low", || Policy::Fa2Low),
+                ("FA2-high", || Policy::Fa2High),
+            ] {
+                let m = run_cell(pipeline, mk(), pattern, PredKind::Lstm, opts);
+                out.push_str(&cell_row(name, &m));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13_fast_at_10x10() {
+        let (spec, prof) = synthetic_problem(10, 10);
+        let p = Problem::new(&spec, &prof, 12.0);
+        let t0 = std::time::Instant::now();
+        let r = ip::solve(&p);
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(r.is_some());
+        assert!(dt < 2.0, "paper budget: {dt}s");
+    }
+
+    #[test]
+    fn synthetic_problem_shapes() {
+        let (spec, prof) = synthetic_problem(3, 4);
+        assert_eq!(spec.stages.len(), 3);
+        assert_eq!(prof.stages.len(), 3);
+        assert_eq!(prof.stages[0].variants.len(), 4);
+    }
+
+    #[test]
+    fn run_cell_smoke() {
+        let mut opts = EvalOpts::new(120, None);
+        let m = run_cell(
+            "video",
+            Policy::Fa2Low,
+            Pattern::SteadyLow,
+            PredKind::Reactive,
+            &mut opts,
+        );
+        assert!(m.requests.len() > 300);
+        assert!(!m.intervals.is_empty());
+    }
+}

@@ -1,0 +1,179 @@
+//! PJRT runtime engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, keeps variant weights resident as device buffers,
+//! and executes forward passes from the Rust request path.
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos with 64-bit instruction ids; the text
+//! parser reassigns ids — see DESIGN.md).
+//!
+//! PJRT wrapper types hold raw pointers and are not `Send`; the engine
+//! is therefore confined to whichever thread created it.  Cross-thread
+//! serving goes through [`super::pool::ExecutorPool`].
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+use super::weights::{self, VariantWeights};
+
+/// A compiled artifact with its resident weight buffers.
+struct LoadedVariant {
+    exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    hidden: usize,
+    batch: usize,
+}
+
+/// The runtime engine.  One per executor thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    variants: HashMap<(String, usize), LoadedVariant>,
+    predictor: Option<xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Engine { client, manifest, variants: HashMap::new(), predictor: None })
+    }
+
+    fn compile_file(&self, rel: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.abs_path(rel);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(to_anyhow)
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(to_anyhow)
+    }
+
+    /// Ensure (key, batch) is compiled with weights staged on device.
+    pub fn load_variant(&mut self, key: &str, batch: usize) -> Result<()> {
+        if self.variants.contains_key(&(key.to_string(), batch)) {
+            return Ok(());
+        }
+        let art = self
+            .manifest
+            .variant(key, batch)
+            .ok_or_else(|| anyhow!("no artifact for {key} b={batch}"))?
+            .clone();
+        let exe = self.compile_file(&art.path)?;
+        let w: VariantWeights = weights::make_params(key, art.hidden, art.layers);
+        let mut weight_bufs = Vec::with_capacity(w.tensors.len());
+        for (t, shape) in w.tensors.iter().zip(&w.shapes) {
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(t, shape, None)
+                .map_err(to_anyhow)?;
+            weight_bufs.push(buf);
+        }
+        self.variants.insert(
+            (key.to_string(), batch),
+            LoadedVariant { exe, weight_bufs, hidden: art.hidden, batch },
+        );
+        Ok(())
+    }
+
+    /// Execute a forward pass.  `input` is row-major `[batch, hidden]`.
+    /// Returns (output, device wall time).
+    pub fn execute_variant(
+        &mut self,
+        key: &str,
+        batch: usize,
+        input: &[f32],
+    ) -> Result<(Vec<f32>, Duration)> {
+        self.load_variant(key, batch)?;
+        let lv = &self.variants[&(key.to_string(), batch)];
+        if input.len() != lv.batch * lv.hidden {
+            return Err(anyhow!(
+                "input len {} != {}x{}",
+                input.len(),
+                lv.batch,
+                lv.hidden
+            ));
+        }
+        let in_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(input, &[lv.batch, lv.hidden], None)
+            .map_err(to_anyhow)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + lv.weight_bufs.len());
+        args.push(&in_buf);
+        args.extend(lv.weight_bufs.iter());
+        let t0 = Instant::now();
+        let out = lv.exe.execute_b(&args).map_err(to_anyhow)?;
+        let lit = out[0][0].to_literal_sync().map_err(to_anyhow)?;
+        let dt = t0.elapsed();
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let inner = lit.to_tuple1().map_err(to_anyhow)?;
+        Ok((inner.to_vec::<f32>().map_err(to_anyhow)?, dt))
+    }
+
+    /// Run the manifest's deterministic numerics check for a variant at
+    /// batch 1: returns (measured sum, expected sum).
+    pub fn check_variant(&mut self, key: &str) -> Result<(f64, f64)> {
+        let art = self
+            .manifest
+            .variant(key, 1)
+            .ok_or_else(|| anyhow!("no b=1 artifact for {key}"))?;
+        let expected = art.check_sum_b1;
+        let hidden = art.hidden;
+        let x = weights::check_input(hidden, 1);
+        let (y, _) = self.execute_variant(key, 1, &x)?;
+        Ok((y.iter().map(|&v| v as f64).sum(), expected))
+    }
+
+    /// Compile the LSTM predictor artifact.
+    pub fn load_predictor(&mut self) -> Result<()> {
+        if self.predictor.is_some() {
+            return Ok(());
+        }
+        let art = self
+            .manifest
+            .predictor
+            .as_ref()
+            .ok_or_else(|| anyhow!("manifest has no predictor artifact"))?
+            .clone();
+        self.predictor = Some(self.compile_file(&art.path)?);
+        Ok(())
+    }
+
+    /// Predict the next-horizon max RPS from a 120-second load window.
+    pub fn predict(&mut self, window: &[f32]) -> Result<f32> {
+        self.load_predictor()?;
+        let history = self
+            .manifest
+            .predictor
+            .as_ref()
+            .map(|p| p.history)
+            .unwrap_or(crate::predictor::HISTORY);
+        if window.len() != history {
+            return Err(anyhow!("window len {} != {history}", window.len()));
+        }
+        let exe = self.predictor.as_ref().unwrap();
+        let lit = xla::Literal::vec1(window)
+            .reshape(&[1, history as i64])
+            .map_err(to_anyhow)?;
+        let out = exe.execute::<xla::Literal>(&[lit]).map_err(to_anyhow)?;
+        let res = out[0][0].to_literal_sync().map_err(to_anyhow)?;
+        let inner = res.to_tuple1().map_err(to_anyhow)?;
+        let v = inner.to_vec::<f32>().map_err(to_anyhow)?;
+        Ok(v[0])
+    }
+
+    /// Number of compiled variants (cache introspection).
+    pub fn loaded_count(&self) -> usize {
+        self.variants.len()
+    }
+}
+
+/// xla::Error is not std::error::Error-compatible with anyhow directly;
+/// stringify.
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e:?}")
+}

@@ -1,0 +1,193 @@
+//! AOT artifact manifest — the contract between `python/compile/aot.py`
+//! (which writes `artifacts/manifest.json`) and the Rust runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered model-variant graph (a `variants/<key>_b<batch>.hlo.txt`).
+#[derive(Debug, Clone)]
+pub struct VariantArtifact {
+    pub key: String,
+    pub stage_type: String,
+    pub variant: String,
+    pub batch: usize,
+    /// Path relative to the artifact root.
+    pub path: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub params_m: f64,
+    pub base_alloc: u32,
+    pub accuracy: f64,
+    pub flops: u64,
+    /// Reference output sum on the deterministic check input (batch 1),
+    /// computed by the python oracle — verified by the runtime tests.
+    pub check_sum_b1: f64,
+}
+
+/// The trained LSTM predictor artifact.
+#[derive(Debug, Clone)]
+pub struct PredictorArtifact {
+    pub path: String,
+    pub history: usize,
+    pub horizon: usize,
+    pub hidden: usize,
+    pub scale: f64,
+    /// Held-out SMAPE measured at training time (paper: 6.6%).
+    pub test_smape_pct: f64,
+    /// Reference prediction for window = linspace(5, 25, HISTORY).
+    pub check_pred: f64,
+}
+
+/// Parsed manifest + artifact root.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub variants: Vec<VariantArtifact>,
+    pub predictor: Option<PredictorArtifact>,
+    index: HashMap<(String, usize), usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, root)
+    }
+
+    /// Parse manifest JSON text (split out for tests).
+    pub fn parse(text: &str, root: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing artifacts[]"))?;
+        let mut variants = Vec::new();
+        let mut predictor = None;
+        for a in arts {
+            match a.get("kind").and_then(Json::as_str) {
+                Some("variant") => variants.push(VariantArtifact {
+                    key: field_str(a, "key")?,
+                    stage_type: field_str(a, "stage_type")?,
+                    variant: field_str(a, "variant")?,
+                    batch: field_num(a, "batch")? as usize,
+                    path: field_str(a, "path")?,
+                    hidden: field_num(a, "hidden")? as usize,
+                    layers: field_num(a, "layers")? as usize,
+                    params_m: field_num(a, "params_m")?,
+                    base_alloc: field_num(a, "base_alloc")? as u32,
+                    accuracy: field_num(a, "accuracy")?,
+                    flops: field_num(a, "flops")? as u64,
+                    check_sum_b1: field_num(a, "check_sum_b1")?,
+                }),
+                Some("predictor") => {
+                    predictor = Some(PredictorArtifact {
+                        path: field_str(a, "path")?,
+                        history: field_num(a, "history")? as usize,
+                        horizon: field_num(a, "horizon")? as usize,
+                        hidden: field_num(a, "hidden")? as usize,
+                        scale: field_num(a, "scale")?,
+                        test_smape_pct: a
+                            .path(&["metrics", "test_smape_pct"])
+                            .and_then(Json::as_f64)
+                            .unwrap_or(f64::NAN),
+                        check_pred: field_num(a, "check_pred")?,
+                    })
+                }
+                _ => {}
+            }
+        }
+        let mut index = HashMap::new();
+        for (i, v) in variants.iter().enumerate() {
+            index.insert((v.key.clone(), v.batch), i);
+        }
+        Ok(Manifest { root, variants, predictor, index })
+    }
+
+    /// Look up the artifact for (variant key, batch size).
+    pub fn variant(&self, key: &str, batch: usize) -> Option<&VariantArtifact> {
+        self.index.get(&(key.to_string(), batch)).map(|&i| &self.variants[i])
+    }
+
+    /// Absolute path of an artifact.
+    pub fn abs_path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Distinct variant keys present, sorted.
+    pub fn keys(&self) -> Vec<String> {
+        self.index
+            .keys()
+            .map(|(k, _)| k.clone())
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect()
+    }
+}
+
+fn field_str(j: &Json, k: &str) -> Result<String> {
+    j.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("manifest: missing string field {k}"))
+}
+
+fn field_num(j: &Json, k: &str) -> Result<f64> {
+    j.get(k)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("manifest: missing numeric field {k}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"kind":"variant","key":"detect.yolov5n","stage_type":"detect",
+         "variant":"yolov5n","batch":1,"path":"variants/detect.yolov5n_b1.hlo.txt",
+         "hidden":32,"layers":3,"params_m":1.9,"base_alloc":1,"accuracy":45.7,
+         "flops":6144,"check_sum_b1":1.25},
+        {"kind":"predictor","path":"predictor/lstm.hlo.txt","history":120,
+         "horizon":20,"hidden":32,"scale":50.0,
+         "metrics":{"test_smape_pct":7.9},"check_pred":23.5}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.variants.len(), 1);
+        let v = m.variant("detect.yolov5n", 1).unwrap();
+        assert_eq!(v.hidden, 32);
+        assert_eq!(v.base_alloc, 1);
+        assert!((v.check_sum_b1 - 1.25).abs() < 1e-12);
+        let p = m.predictor.as_ref().unwrap();
+        assert_eq!(p.history, 120);
+        assert!((p.test_smape_pct - 7.9).abs() < 1e-12);
+        assert!(m.variant("detect.yolov5n", 2).is_none());
+        assert_eq!(m.keys(), vec!["detect.yolov5n".to_string()]);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"artifacts":[{"kind":"variant","key":"x"}]}"#;
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn abs_path_joins_root() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/art")).unwrap();
+        assert_eq!(
+            m.abs_path("variants/x.hlo.txt"),
+            PathBuf::from("/art/variants/x.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Executor pool: PJRT wrapper types are not `Send`, so each executor
+//! thread owns its own [`Engine`] (its own PJRT client + compiled
+//! executables) and work arrives over channels.  The live serving
+//! engine's replicas submit batch executions here; the adapter submits
+//! LSTM predictions.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::Engine;
+
+/// A unit of work for an executor thread.
+enum Job {
+    ExecVariant {
+        key: String,
+        batch: usize,
+        input: Vec<f32>,
+        reply: Sender<Result<(Vec<f32>, Duration)>>,
+    },
+    Predict {
+        window: Vec<f32>,
+        reply: Sender<Result<f32>>,
+    },
+    Warm {
+        key: String,
+        batch: usize,
+        reply: Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Handle to a pool of executor threads, each owning one [`Engine`].
+pub struct ExecutorPool {
+    tx: Sender<Job>,
+    rx_shared: Arc<Mutex<Receiver<Job>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ExecutorPool {
+    /// Spawn `n_threads` executors over `artifact_dir`.
+    pub fn new(artifact_dir: &str, n_threads: usize) -> Result<ExecutorPool> {
+        let (tx, rx) = channel::<Job>();
+        let rx_shared = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for i in 0..n_threads.max(1) {
+            let rx = Arc::clone(&rx_shared);
+            let dir = artifact_dir.to_string();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ipa-exec-{i}"))
+                    .spawn(move || {
+                        let mut engine = match Engine::new(&dir) {
+                            Ok(e) => e,
+                            Err(e) => {
+                                crate::log_error!("pool", "engine init failed: {e:#}");
+                                return;
+                            }
+                        };
+                        loop {
+                            let job = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match job {
+                                Ok(Job::ExecVariant { key, batch, input, reply }) => {
+                                    let r = engine.execute_variant(&key, batch, &input);
+                                    let _ = reply.send(r);
+                                }
+                                Ok(Job::Predict { window, reply }) => {
+                                    let _ = reply.send(engine.predict(&window));
+                                }
+                                Ok(Job::Warm { key, batch, reply }) => {
+                                    let _ = reply.send(engine.load_variant(&key, batch));
+                                }
+                                Ok(Job::Shutdown) | Err(_) => return,
+                            }
+                        }
+                    })
+                    .expect("spawn executor"),
+            );
+        }
+        Ok(ExecutorPool { tx, rx_shared, handles })
+    }
+
+    /// Synchronous batched forward pass on some executor.
+    pub fn execute(&self, key: &str, batch: usize, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::ExecVariant { key: key.to_string(), batch, input, reply })
+            .map_err(|_| anyhow!("pool closed"))?;
+        rx.recv().map_err(|_| anyhow!("executor died"))?
+    }
+
+    /// Synchronous LSTM prediction.
+    pub fn predict(&self, window: Vec<f32>) -> Result<f32> {
+        let (reply, rx) = channel();
+        self.tx.send(Job::Predict { window, reply }).map_err(|_| anyhow!("pool closed"))?;
+        rx.recv().map_err(|_| anyhow!("executor died"))?
+    }
+
+    /// Pre-compile (key, batch) on one executor (first-touch warmup).
+    pub fn warm(&self, key: &str, batch: usize) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Warm { key: key.to_string(), batch, reply })
+            .map_err(|_| anyhow!("pool closed"))?;
+        rx.recv().map_err(|_| anyhow!("executor died"))?
+    }
+
+    /// A `Send` closure for [`crate::predictor::LstmPredictor`] that
+    /// routes predictions through this pool.
+    pub fn lstm_closure(self: &Arc<Self>) -> Box<dyn FnMut(&[f32]) -> f32 + Send> {
+        let pool = Arc::clone(self);
+        Box::new(move |window: &[f32]| match pool.predict(window.to_vec()) {
+            Ok(v) => v,
+            Err(e) => {
+                crate::log_warn!("pool", "lstm predict failed: {e:#}");
+                0.0
+            }
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        // Senders for all workers: closing tx ends recv loops.
+        let _ = &self.rx_shared;
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

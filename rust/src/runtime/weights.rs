@@ -1,0 +1,141 @@
+//! Deterministic variant-weight generation — bit-exact twin of
+//! `python/compile/model.make_params`.
+//!
+//! Weights never cross the build boundary as data: both sides derive
+//! them from `SplitMix64(fnv1a64(key) ^ tensor_index)` so the Rust
+//! runtime can feed the AOT graphs the exact tensors the python oracle
+//! used when computing the manifest check values.
+
+use crate::util::rng::{fnv1a64, SplitMix64};
+
+/// Shapes of one tower layer's parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerShape {
+    pub w: (usize, usize),
+    pub b: usize,
+}
+
+/// Parameter tensors of a variant tower, flattened per tensor in
+/// row-major order, ordered `[W1, b1, W2, b2, ...]`.
+#[derive(Debug, Clone)]
+pub struct VariantWeights {
+    pub key: String,
+    pub tensors: Vec<Vec<f32>>,
+    pub shapes: Vec<Vec<usize>>,
+}
+
+/// Fill `n` f32s in [-0.5, 0.5) from SplitMix64 — python
+/// `splitmix64_fill` twin.
+pub fn splitmix_fill(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.next_f32_centered()).collect()
+}
+
+/// Generate the weights for a tower of `layers` square layers of width
+/// `hidden` (python `make_params` twin: W scaled by 1/sqrt(fan_in),
+/// biases by 0.1).
+pub fn make_params(key: &str, hidden: usize, layers: usize) -> VariantWeights {
+    let base = fnv1a64(key);
+    let mut tensors = Vec::with_capacity(2 * layers);
+    let mut shapes = Vec::with_capacity(2 * layers);
+    for ti in 0..layers {
+        let fan_in = hidden;
+        let scale = 1.0 / (fan_in as f32).sqrt();
+        let mut w = splitmix_fill(base ^ (2 * ti as u64 + 1), hidden * hidden);
+        for x in w.iter_mut() {
+            *x *= scale;
+        }
+        tensors.push(w);
+        shapes.push(vec![hidden, hidden]);
+        let mut b = splitmix_fill(base ^ (2 * ti as u64 + 2), hidden);
+        for x in b.iter_mut() {
+            *x *= 0.1;
+        }
+        tensors.push(b);
+        shapes.push(vec![hidden]);
+    }
+    VariantWeights { key: key.to_string(), tensors, shapes }
+}
+
+/// The deterministic check input: `ones / sqrt(hidden)` (python
+/// `check_input` twin).
+pub fn check_input(hidden: usize, batch: usize) -> Vec<f32> {
+    vec![1.0 / (hidden as f32).sqrt(); batch * hidden]
+}
+
+/// CPU reference forward pass of the tower (f32 accumulation in f64 for
+/// stability is NOT used — plain f32 to mirror the XLA numerics).  Used
+/// by tests to cross-check the PJRT execution path.
+pub fn reference_forward(x: &[f32], batch: usize, hidden: usize, w: &VariantWeights) -> Vec<f32> {
+    let layers = w.tensors.len() / 2;
+    let mut cur = x.to_vec();
+    for li in 0..layers {
+        let wt = &w.tensors[2 * li];
+        let bt = &w.tensors[2 * li + 1];
+        let mut out = vec![0f32; batch * hidden];
+        for r in 0..batch {
+            for c in 0..hidden {
+                let mut acc = 0f32;
+                for k in 0..hidden {
+                    acc += cur[r * hidden + k] * wt[k * hidden + c];
+                }
+                acc += bt[c];
+                out[r * hidden + c] = if li < layers - 1 { acc.max(0.0) } else { acc };
+            }
+        }
+        cur = out;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_key() {
+        let a = make_params("detect.yolov5n", 32, 3);
+        let b = make_params("detect.yolov5n", 32, 3);
+        assert_eq!(a.tensors, b.tensors);
+        let c = make_params("detect.yolov5s", 32, 3);
+        assert_ne!(a.tensors[0], c.tensors[0]);
+    }
+
+    #[test]
+    fn shapes_and_counts() {
+        let w = make_params("x", 64, 3);
+        assert_eq!(w.tensors.len(), 6);
+        assert_eq!(w.tensors[0].len(), 64 * 64);
+        assert_eq!(w.tensors[1].len(), 64);
+        assert_eq!(w.shapes[0], vec![64, 64]);
+        assert_eq!(w.shapes[5], vec![64]);
+    }
+
+    #[test]
+    fn weight_scale_bounded() {
+        let w = make_params("x", 64, 3);
+        let lim = 0.5 / 8.0; // 0.5 * 1/sqrt(64)
+        assert!(w.tensors[0].iter().all(|v| v.abs() <= lim + 1e-7));
+        assert!(w.tensors[1].iter().all(|v| v.abs() <= 0.05 + 1e-7));
+    }
+
+    #[test]
+    fn fill_matches_rng_contract() {
+        let v = splitmix_fill(1, 4);
+        let mut rng = SplitMix64::new(1);
+        for x in v {
+            assert_eq!(x, rng.next_f32_centered());
+        }
+    }
+
+    #[test]
+    fn reference_forward_identity_shapes() {
+        let w = make_params("k", 32, 3);
+        let x = check_input(32, 2);
+        let y = reference_forward(&x, 2, 32, &w);
+        assert_eq!(y.len(), 2 * 32);
+        assert!(y.iter().all(|v| v.is_finite()));
+        // batch rows identical for identical inputs
+        assert_eq!(&y[..32], &y[32..]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Event queue for the discrete-event simulator: a min-heap on
+//! (time, sequence) — the sequence number makes simultaneous events
+//! deterministic (FIFO among ties).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulator event kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Request `id` arrives at the pipeline entrance.
+    Arrival { id: u64 },
+    /// A replica of `stage` finishes the batch it was serving.
+    ServiceDone { stage: usize, ids: Vec<u64>, started: f64 },
+    /// Re-check `stage`'s queue (batch timeout wakeup).
+    QueueCheck { stage: usize },
+    /// Run the adapter.
+    Adapt,
+    /// A previously decided configuration becomes active.
+    ApplyConfig { decision_idx: usize },
+    /// End of simulation.
+    End,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed for min-heap semantics on BinaryHeap (max-heap)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic min-time event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, event: Event) {
+        self.seq += 1;
+        self.heap.push(Entry { time, seq: self.seq, event });
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::Adapt);
+        q.push(1.0, Event::Arrival { id: 1 });
+        q.push(2.0, Event::QueueCheck { stage: 0 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::Arrival { id: 10 });
+        q.push(1.0, Event::Arrival { id: 20 });
+        q.push(1.0, Event::Arrival { id: 30 });
+        let ids: Vec<u64> = std::iter::from_fn(|| {
+            q.pop().map(|(_, e)| match e {
+                Event::Arrival { id } => id,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(ids, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(0.0, Event::End);
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,375 @@
+//! The discrete-event cluster simulator — our Kubernetes substitute.
+//!
+//! Faithfully models the paper's serving stack (§3): per-stage central
+//! queues with batch formation, round-robin dispatch to replicas,
+//! request dropping (§4.5), the adapter loop at a fixed monitoring
+//! interval, and a reconfiguration delay before new configurations take
+//! effect (§5.3's ~8 s adaptation process).
+//!
+//! Service times come from the latency profiles (optionally with
+//! multiplicative noise); replicas are capacity slots — when a
+//! reconfiguration shrinks a stage, in-flight batches finish at the old
+//! latency while new batches use the new profile (rolling update
+//! semantics).
+
+use super::events::{Event, EventQueue};
+use crate::coordinator::adapter::{Adapter, Decision};
+use crate::coordinator::monitoring::Monitor;
+use crate::metrics::{IntervalRecord, RequestRecord, RunMetrics};
+use crate::optimizer::ip::PipelineConfig;
+use crate::queueing::{worst_case_delay, CentralQueue, Request};
+use crate::util::rng::SplitMix64;
+use crate::workload::trace::Trace;
+
+/// Simulation settings.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Multiplicative service-time noise stddev (0 = deterministic).
+    pub service_noise: f64,
+    /// Arrival sampling seed.
+    pub seed: u64,
+    /// §4.5: drop at stage entry if age > SLA (for stages after the
+    /// first), and anywhere if age > 2×SLA.
+    pub drop_enabled: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { service_noise: 0.03, seed: 7, drop_enabled: true }
+    }
+}
+
+struct StageState {
+    queue: CentralQueue,
+    /// Active variant index into the profiles.
+    variant_idx: usize,
+    batch: usize,
+    replicas: u32,
+    busy: u32,
+}
+
+/// One simulated request in flight.
+#[derive(Debug, Clone, Copy)]
+struct Flight {
+    arrival: f64,
+    completion: Option<f64>,
+    dropped: bool,
+}
+
+/// The simulator.
+pub struct Simulation {
+    pub adapter: Adapter,
+    pub sim: SimConfig,
+}
+
+impl Simulation {
+    pub fn new(adapter: Adapter, sim: SimConfig) -> Self {
+        Simulation { adapter, sim }
+    }
+
+    /// Run the full trace; returns the collected metrics.
+    pub fn run(&mut self, trace: &Trace) -> RunMetrics {
+        let n_stages = self.adapter.profiles.stages.len();
+        let sla = self.adapter.spec.sla_e2e();
+        let interval = self.adapter.config.interval;
+        let apply_delay = self.adapter.config.apply_delay;
+        let horizon = trace.seconds() as f64;
+
+        let mut rng = SplitMix64::new(self.sim.seed ^ 0x51A7_E);
+        let mut events = EventQueue::new();
+        let mut monitor = Monitor::new(600);
+
+        // Request table.
+        let arrivals = trace.arrivals(self.sim.seed);
+        let mut flights: Vec<Flight> = arrivals
+            .iter()
+            .map(|&t| Flight { arrival: t, completion: None, dropped: false })
+            .collect();
+        for (id, &t) in arrivals.iter().enumerate() {
+            events.push(t, Event::Arrival { id: id as u64 });
+        }
+
+        // Initial configuration: decide on the trace's first-second rate.
+        let first_rate = trace.rate_at(0.0);
+        let init = self.adapter.decide_for_lambda(first_rate);
+        let mut stages: Vec<StageState> = (0..n_stages)
+            .map(|si| {
+                let sc = &init.config.stages[si];
+                StageState {
+                    queue: CentralQueue::new(
+                        sc.batch,
+                        batch_timeout(sc.batch, init.lambda_predicted),
+                    ),
+                    variant_idx: sc.variant_idx,
+                    batch: sc.batch,
+                    replicas: sc.replicas,
+                    busy: 0,
+                }
+            })
+            .collect();
+        let mut active_cfg: PipelineConfig = init.config.clone();
+        let mut decisions: Vec<Decision> = vec![init];
+        let mut intervals: Vec<IntervalRecord> = Vec::new();
+
+        events.push(interval, Event::Adapt);
+        events.push(horizon, Event::End);
+
+        // Stage request sub-queues carry (Request) through; flights index
+        // by id for final bookkeeping.
+        while let Some((now, ev)) = events.pop() {
+            match ev {
+                Event::End => break,
+                Event::Arrival { id } => {
+                    monitor.record_arrival(now);
+                    let req = Request { id, arrival: now, stage_arrival: now };
+                    stages[0].queue.push(req);
+                    self.dispatch(0, now, &mut stages, &mut events, &mut flights, sla, &mut rng);
+                }
+                Event::QueueCheck { stage } => {
+                    self.dispatch(stage, now, &mut stages, &mut events, &mut flights, sla, &mut rng);
+                }
+                Event::ServiceDone { stage, ids, started: _ } => {
+                    stages[stage].busy = stages[stage].busy.saturating_sub(1);
+                    if stage + 1 < n_stages {
+                        for id in ids {
+                            let f = &flights[id as usize];
+                            if f.dropped {
+                                continue;
+                            }
+                            stages[stage + 1].queue.push(Request {
+                                id,
+                                arrival: f.arrival,
+                                stage_arrival: now,
+                            });
+                        }
+                        self.dispatch(
+                            stage + 1, now, &mut stages, &mut events, &mut flights, sla, &mut rng,
+                        );
+                    } else {
+                        for id in ids {
+                            let f = &mut flights[id as usize];
+                            if !f.dropped {
+                                f.completion = Some(now);
+                            }
+                        }
+                    }
+                    // freed replica may unblock this stage's queue
+                    self.dispatch(stage, now, &mut stages, &mut events, &mut flights, sla, &mut rng);
+                }
+                Event::Adapt => {
+                    let history = monitor.history(now, crate::predictor::HISTORY);
+                    let decision = self.adapter.decide(now, &history);
+                    let observed = monitor.recent_rate(now, interval as usize);
+                    intervals.push(IntervalRecord {
+                        t: now,
+                        pas: active_cfg.pas,
+                        cost: active_cfg.cost,
+                        lambda_observed: observed,
+                        lambda_predicted: decision.lambda_predicted,
+                        decision_time: decision.decision_time,
+                        variants: active_cfg
+                            .stages
+                            .iter()
+                            .map(|s| s.variant_key.clone())
+                            .collect(),
+                    });
+                    decisions.push(decision);
+                    events.push(now + apply_delay, Event::ApplyConfig {
+                        decision_idx: decisions.len() - 1,
+                    });
+                    if now + interval < horizon {
+                        events.push(now + interval, Event::Adapt);
+                    }
+                }
+                Event::ApplyConfig { decision_idx } => {
+                    let d = &decisions[decision_idx];
+                    active_cfg = d.config.clone();
+                    for (si, sc) in d.config.stages.iter().enumerate() {
+                        let st = &mut stages[si];
+                        st.variant_idx = sc.variant_idx;
+                        st.batch = sc.batch;
+                        st.replicas = sc.replicas;
+                        st.queue
+                            .set_batch(sc.batch, batch_timeout(sc.batch, d.lambda_predicted));
+                        self.dispatch(si, now, &mut stages, &mut events, &mut flights, sla, &mut rng);
+                    }
+                }
+            }
+        }
+
+        // Whatever is still queued/in-flight at the end never completed.
+        let requests: Vec<RequestRecord> = flights
+            .iter()
+            .enumerate()
+            .map(|(id, f)| RequestRecord {
+                id: id as u64,
+                arrival: f.arrival,
+                completion: if f.dropped { None } else { f.completion },
+            })
+            .collect();
+
+        RunMetrics {
+            system: self.adapter.policy.name().to_string(),
+            pipeline: self.adapter.spec.name.to_string(),
+            workload: trace.name.clone(),
+            requests,
+            intervals,
+            sla,
+        }
+    }
+
+    /// Try to start service on `stage` while batches and replicas allow;
+    /// applies the §4.5 drop policy when forming batches.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch(
+        &mut self,
+        stage: usize,
+        now: f64,
+        stages: &mut [StageState],
+        events: &mut EventQueue,
+        flights: &mut [Flight],
+        sla: f64,
+        rng: &mut SplitMix64,
+    ) {
+        loop {
+            let st = &mut stages[stage];
+            if st.busy >= st.replicas {
+                return;
+            }
+            let Some(batch) = st.queue.pop_batch(now) else {
+                // nothing ready: if a partial batch is pending, schedule
+                // its timeout wakeup
+                if let Some(at) = st.queue.next_timeout_at() {
+                    if at > now {
+                        events.push(at, Event::QueueCheck { stage });
+                    }
+                }
+                return;
+            };
+            // §4.5 dropping at batch formation.
+            let mut ids = Vec::with_capacity(batch.len());
+            for req in batch {
+                let age = now - req.arrival;
+                let drop = self.sim.drop_enabled
+                    && ((stage > 0 && age > sla) || age > 2.0 * sla);
+                if drop {
+                    flights[req.id as usize].dropped = true;
+                } else {
+                    ids.push(req.id);
+                }
+            }
+            if ids.is_empty() {
+                continue; // batch fully dropped; try to form another
+            }
+            let vp = &self.adapter.profiles.stages[stage].variants[st.variant_idx];
+            let mut service = vp.latency.latency(st.batch);
+            if self.sim.service_noise > 0.0 {
+                let f = 1.0 + self.sim.service_noise * rng.next_normal();
+                service *= f.clamp(0.5, 2.0);
+            }
+            st.busy += 1;
+            events.push(now + service, Event::ServiceDone { stage, ids, started: now });
+        }
+    }
+}
+
+/// Batch-formation timeout: 1.5× the Eq. 7 worst-case wait, floored to
+/// 50 ms — partial batches keep latency bounded under thin load.
+fn batch_timeout(batch: usize, lambda: f64) -> f64 {
+    (1.5 * worst_case_delay(batch, lambda)).max(0.05)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::adapter::{Adapter, AdapterConfig, Policy};
+    use crate::models::accuracy::AccuracyMetric;
+    use crate::models::pipelines;
+    use crate::predictor::ReactivePredictor;
+    use crate::profiler::analytic::pipeline_profiles;
+    use crate::workload::tracegen::Pattern;
+
+    fn make_sim(pipeline: &str, policy: Policy) -> Simulation {
+        let spec = pipelines::by_name(pipeline).unwrap();
+        let prof = pipeline_profiles(&spec);
+        let adapter = Adapter::new(
+            spec,
+            prof,
+            policy,
+            AdapterConfig::default(),
+            Box::new(ReactivePredictor::default()),
+        );
+        Simulation::new(adapter, SimConfig { seed: 3, ..Default::default() })
+    }
+
+    #[test]
+    fn video_steady_low_mostly_within_sla() {
+        let mut sim = make_sim("video", Policy::Ipa(AccuracyMetric::Pas));
+        let trace = Trace::synthetic(Pattern::SteadyLow, 240);
+        let m = sim.run(&trace);
+        assert!(m.requests.len() > 800, "{}", m.requests.len());
+        let att = m.sla_attainment();
+        assert!(att > 0.85, "attainment {att}");
+        assert!(m.drop_rate() < 0.1, "drops {}", m.drop_rate());
+        assert!(!m.intervals.is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let t = Trace::synthetic(Pattern::SteadyLow, 120);
+        let m1 = make_sim("video", Policy::Fa2Low).run(&t);
+        let m2 = make_sim("video", Policy::Fa2Low).run(&t);
+        assert_eq!(m1.requests.len(), m2.requests.len());
+        assert_eq!(m1.latencies(), m2.latencies());
+    }
+
+    #[test]
+    fn fa2_low_cheaper_than_fa2_high() {
+        let t = Trace::synthetic(Pattern::SteadyLow, 180);
+        let low = make_sim("video", Policy::Fa2Low).run(&t);
+        let high = make_sim("video", Policy::Fa2High).run(&t);
+        assert!(low.avg_cost() < high.avg_cost());
+        assert!(low.avg_pas() < high.avg_pas());
+    }
+
+    #[test]
+    fn ipa_between_fa2_bounds_on_pas() {
+        // §5.2: FA2-low/high provide the PAS floor/ceiling.
+        let t = Trace::synthetic(Pattern::Fluctuating, 240);
+        let low = make_sim("video", Policy::Fa2Low).run(&t);
+        let high = make_sim("video", Policy::Fa2High).run(&t);
+        let ipa = make_sim("video", Policy::Ipa(AccuracyMetric::Pas)).run(&t);
+        assert!(ipa.avg_pas() >= low.avg_pas() - 1e-9, "{} vs {}", ipa.avg_pas(), low.avg_pas());
+        assert!(ipa.avg_pas() <= high.avg_pas() + 1e-9);
+    }
+
+    #[test]
+    fn completions_never_precede_arrivals() {
+        let t = Trace::synthetic(Pattern::Bursty, 150);
+        let m = make_sim("video", Policy::Ipa(AccuracyMetric::Pas)).run(&t);
+        for r in &m.requests {
+            if let Some(c) = r.completion {
+                assert!(c >= r.arrival);
+            }
+        }
+    }
+
+    #[test]
+    fn drops_bounded_by_2sla_rule() {
+        // With dropping enabled, completed latencies stay under ~2×SLA
+        // plus one service time.
+        let t = Trace::synthetic(Pattern::Bursty, 200);
+        let mut sim = make_sim("video", Policy::Fa2Low);
+        sim.sim.drop_enabled = true;
+        let m = sim.run(&t);
+        let max_lat = m.latencies().iter().fold(0.0f64, |a, &b| a.max(b));
+        assert!(max_lat < 3.0 * m.sla, "max latency {max_lat} vs sla {}", m.sla);
+    }
+
+    #[test]
+    fn three_stage_pipeline_runs() {
+        let t = Trace::synthetic(Pattern::SteadyLow, 120);
+        let m = make_sim("nlp", Policy::Ipa(AccuracyMetric::Pas)).run(&t);
+        assert!(m.sla_attainment() > 0.5, "{}", m.sla_attainment());
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (clap substitute).
+//!
+//! Grammar: `ipa <subcommand> [--key value]... [--flag]... [positional]...`
+//! Unknown keys are kept and can be validated by the caller.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` pairs; bare `--flag` maps to "true".
+    pub opts: BTreeMap<String, String>,
+    /// Remaining positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // --key=value or --key value or bare --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.opts.insert(key.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = parse("simulate --pipeline video --seconds 600 --verbose");
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.get("pipeline"), Some("video"));
+        assert_eq!(a.get_usize("seconds", 0), 600);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn eq_form_and_positionals() {
+        let a = parse("report fig8 --alpha=2.5 extra");
+        assert_eq!(a.command.as_deref(), Some("report"));
+        assert_eq!(a.positional, vec!["fig8", "extra"]);
+        assert_eq!(a.get_f64("alpha", 0.0), 2.5);
+    }
+
+    #[test]
+    fn flag_before_value_opt() {
+        let a = parse("x --dry-run --out file.txt");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("out"), Some("file.txt"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("mode", "sim"), "sim");
+        assert_eq!(a.get_f64("beta", 1.5), 1.5);
+    }
+}

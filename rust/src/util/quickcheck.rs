@@ -1,0 +1,173 @@
+//! Minimal property-based testing harness (proptest substitute).
+//!
+//! A property is a closure over a [`Gen`]; the runner executes it for
+//! `cases` seeded generations and, on failure, retries the failing seed
+//! with progressively smaller `size` to report a smaller counterexample.
+//!
+//! ```ignore
+//! check("sort is idempotent", 200, |g| {
+//!     let v = g.vec_f64(0.0, 100.0, 64);
+//!     let mut a = v.clone(); a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+//!     let mut b = a.clone(); b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+//!     prop_assert(a == b, "double sort differs")
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Value generator handed to properties.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Soft size bound: collections/magnitudes scale with this.
+    pub size: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen { rng: SplitMix64::new(seed), size, seed }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        if hi <= lo {
+            return lo;
+        }
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// Vector with length in [1, max_len.min(size)].
+    pub fn vec_f64(&mut self, lo: f64, hi: f64, max_len: usize) -> Vec<f64> {
+        let cap = max_len.min(self.size).max(1);
+        let n = self.usize(1, cap + 1);
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, lo: usize, hi: usize, max_len: usize) -> Vec<usize> {
+        let cap = max_len.min(self.size).max(1);
+        let n = self.usize(1, cap + 1);
+        (0..n).map(|_| self.usize(lo, hi)).collect()
+    }
+
+    /// Power of two in [1, max_pow2] (batch sizes).
+    pub fn pow2(&mut self, max_pow2: u32) -> usize {
+        1usize << self.u64(0, max_pow2 as u64 + 1)
+    }
+}
+
+/// Property outcome.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert `|a-b| <= tol` inside a property.
+pub fn prop_close(a: f64, b: f64, tol: f64, msg: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `prop` for `cases` generated inputs; panics with the seed and the
+/// smallest failing size on failure (rerun with `Gen::new(seed, size)` to
+/// reproduce deterministically).
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let base = crate::util::rng::fnv1a64(name);
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let size = 4 + (case as usize % 64);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // "Shrink": find the smallest size at which this seed fails.
+            let mut min_size = size;
+            let mut min_msg = msg;
+            let mut s = 1;
+            while s < size {
+                let mut g2 = Gen::new(seed, s);
+                if let Err(m2) = prop(&mut g2) {
+                    min_size = s;
+                    min_msg = m2;
+                    break;
+                }
+                s *= 2;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {min_size}): {min_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add commutes", 100, |g| {
+            let a = g.f64(-1e6, 1e6);
+            let b = g.f64(-1e6, 1e6);
+            prop_close(a + b, b + a, 0.0, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 5, |g| {
+            let _ = g.u64(0, 10);
+            prop_assert(false, "nope")
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut g1 = Gen::new(123, 16);
+        let mut g2 = Gen::new(123, 16);
+        for _ in 0..100 {
+            assert_eq!(g1.u64(0, 1000), g2.u64(0, 1000));
+        }
+    }
+
+    #[test]
+    fn pow2_is_power_of_two() {
+        check("pow2", 200, |g| {
+            let b = g.pow2(6);
+            prop_assert(b.is_power_of_two() && b <= 64, "pow2 range")
+        });
+    }
+
+    #[test]
+    fn vec_len_respects_size() {
+        check("vec len", 100, |g| {
+            let v = g.vec_f64(0.0, 1.0, 1000);
+            prop_assert(!v.is_empty() && v.len() <= g.size.max(1), "len")
+        });
+    }
+}

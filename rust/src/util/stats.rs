@@ -1,0 +1,282 @@
+//! Statistics helpers: summary stats, percentiles, CDFs, SMAPE, and the
+//! least-squares quadratic fit used by the §4.2 latency profiler.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile (linear interpolation), `p` in [0,100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Symmetric mean absolute percentage error, in percent (paper §5.1
+/// reports the LSTM at 6.6% SMAPE).
+pub fn smape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for (p, t) in pred.iter().zip(truth) {
+        let denom = ((p.abs() + t.abs()) / 2.0).max(1e-9);
+        acc += (p - t).abs() / denom;
+    }
+    acc / pred.len() as f64 * 100.0
+}
+
+/// Summary stats bundle for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: v.len(),
+            mean: mean(&v),
+            std: stddev(&v),
+            min: v[0],
+            p50: percentile_sorted(&v, 50.0),
+            p95: percentile_sorted(&v, 95.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
+/// Empirical CDF: returns (sorted values, cumulative fraction) pairs,
+/// downsampled to at most `points` entries — used for Fig. 15.
+pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let step = (n / points.max(1)).max(1);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        out.push((v[i], (i + 1) as f64 / n as f64));
+        i += step;
+    }
+    if out.last().map(|&(x, _)| x) != Some(v[n - 1]) {
+        out.push((v[n - 1], 1.0));
+    }
+    out
+}
+
+/// Least-squares fit of `y = a·x² + b·x + c` (the paper's §4.2 latency
+/// model `l(b) = αb² + βb + γ`).  Returns `[a, b, c]`.
+///
+/// Solves the 3×3 normal equations with Gaussian elimination + partial
+/// pivoting; needs ≥3 distinct x values.
+pub fn quadratic_fit(xs: &[f64], ys: &[f64]) -> Option<[f64; 3]> {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 3 {
+        return None;
+    }
+    // Normal matrix for basis [x², x, 1].
+    let (mut s4, mut s3, mut s2, mut s1) = (0.0, 0.0, 0.0, 0.0);
+    let (mut t2, mut t1, mut t0) = (0.0, 0.0, 0.0);
+    let n = xs.len() as f64;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let x2 = x * x;
+        s4 += x2 * x2;
+        s3 += x2 * x;
+        s2 += x2;
+        s1 += x;
+        t2 += x2 * y;
+        t1 += x * y;
+        t0 += y;
+    }
+    let mut m = [
+        [s4, s3, s2, t2],
+        [s3, s2, s1, t1],
+        [s2, s1, n, t0],
+    ];
+    // Gaussian elimination with partial pivoting.
+    for col in 0..3 {
+        let piv = (col..3).max_by(|&a, &b| m[a][col].abs().partial_cmp(&m[b][col].abs()).unwrap())?;
+        if m[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        m.swap(col, piv);
+        for row in 0..3 {
+            if row != col {
+                let f = m[row][col] / m[col][col];
+                for k in col..4 {
+                    m[row][k] -= f * m[col][k];
+                }
+            }
+        }
+    }
+    Some([m[0][3] / m[0][0], m[1][3] / m[1][1], m[2][3] / m[2][2]])
+}
+
+/// Mean squared error of a quadratic fit (for the §4.2 claim that the
+/// quadratic beats the linear fit).
+pub fn fit_mse(coef: &[f64; 3], xs: &[f64], ys: &[f64]) -> f64 {
+    let errs: Vec<f64> = xs
+        .iter()
+        .zip(ys)
+        .map(|(&x, &y)| {
+            let p = coef[0] * x * x + coef[1] * x + coef[2];
+            (p - y) * (p - y)
+        })
+        .collect();
+    mean(&errs)
+}
+
+/// Least-squares line fit `y = b·x + c`; returns `[b, c]`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Option<[f64; 2]> {
+    if xs.len() < 2 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let c = (sy - b * sx) / n;
+    Some([b, c])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!(stddev(&[2.0, 2.0, 2.0]) < 1e-12);
+        assert!((stddev(&[1.0, 3.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&v, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert!((percentile(&v, 99.0) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn smape_basics() {
+        assert_eq!(smape(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        let s = smape(&[11.0], &[10.0]);
+        assert!((s - 100.0 / 10.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quad_fit_exact() {
+        let xs: Vec<f64> = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.003 * x * x + 1.2 * x + 0.7).collect();
+        let c = quadratic_fit(&xs, &ys).unwrap();
+        assert!((c[0] - 0.003).abs() < 1e-9, "{c:?}");
+        assert!((c[1] - 1.2).abs() < 1e-7, "{c:?}");
+        assert!((c[2] - 0.7).abs() < 1e-6, "{c:?}");
+        assert!(fit_mse(&c, &xs, &ys) < 1e-12);
+    }
+
+    #[test]
+    fn quad_beats_linear_on_curved_data() {
+        // The §4.2 claim: quadratic fit has lower MSE than linear on
+        // batch-latency curves.
+        let xs: Vec<f64> = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.01 * x * x + 0.8 * x + 2.0).collect();
+        let q = quadratic_fit(&xs, &ys).unwrap();
+        let l = linear_fit(&xs, &ys).unwrap();
+        let lin_mse = mean(
+            &xs.iter()
+                .zip(&ys)
+                .map(|(&x, &y)| {
+                    let p = l[0] * x + l[1];
+                    (p - y) * (p - y)
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert!(fit_mse(&q, &xs, &ys) < lin_mse);
+    }
+
+    #[test]
+    fn quad_fit_degenerate() {
+        assert!(quadratic_fit(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]).is_none());
+        assert!(quadratic_fit(&[1.0, 2.0], &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn cdf_shape() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let c = cdf(&xs, 50);
+        assert!(c.len() <= 52);
+        assert_eq!(c.last().unwrap().1, 1.0);
+        for w in c.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn summary_of() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-9);
+    }
+}

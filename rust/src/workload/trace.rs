@@ -1,0 +1,118 @@
+//! Trace handling: a [`Trace`] wraps per-second rates and produces the
+//! concrete request arrival times the simulator / load generator
+//! replays (Poisson arrivals within each second, seeded).
+
+use super::tracegen::{self, Pattern};
+use crate::util::rng::SplitMix64;
+
+/// A workload trace: per-second arrival rates (RPS).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub rates: Vec<f64>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>, rates: Vec<f64>) -> Self {
+        Trace { name: name.into(), rates }
+    }
+
+    /// Generate one of the synthetic patterns at its default eval seed.
+    pub fn synthetic(pattern: Pattern, seconds: usize) -> Self {
+        Trace::new(
+            pattern.name(),
+            tracegen::generate(pattern, seconds, tracegen::eval_seed(pattern)),
+        )
+    }
+
+    pub fn seconds(&self) -> usize {
+        self.rates.len()
+    }
+
+    /// Rate at time `t` (clamped to the last second).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let i = (t.max(0.0) as usize).min(self.rates.len().saturating_sub(1));
+        self.rates[i]
+    }
+
+    /// Ground-truth maximum rate in `[t, t+horizon)` — the oracle
+    /// predictor's answer and the LSTM's training target.
+    pub fn max_in_window(&self, t: f64, horizon: f64) -> f64 {
+        let lo = (t.max(0.0) as usize).min(self.rates.len().saturating_sub(1));
+        let hi = ((t + horizon).ceil() as usize).min(self.rates.len());
+        self.rates[lo..hi.max(lo + 1)]
+            .iter()
+            .fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    /// Materialize request arrival timestamps: Poisson(rate) arrivals
+    /// per second, uniformly spread within the second (seeded,
+    /// deterministic).
+    pub fn arrivals(&self, seed: u64) -> Vec<f64> {
+        let mut rng = SplitMix64::new(seed ^ 0xA11C_E5);
+        let mut out = Vec::new();
+        for (sec, &rate) in self.rates.iter().enumerate() {
+            let n = rng.next_poisson(rate);
+            let mut ts: Vec<f64> =
+                (0..n).map(|_| sec as f64 + rng.next_f64()).collect();
+            ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            out.extend(ts);
+        }
+        out
+    }
+
+    /// Peak rate over the whole trace.
+    pub fn peak(&self) -> f64 {
+        self.rates.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_match_rates_in_aggregate() {
+        let tr = Trace::synthetic(Pattern::SteadyLow, 500);
+        let arr = tr.arrivals(1);
+        let expected: f64 = tr.rates.iter().sum();
+        let got = arr.len() as f64;
+        assert!(
+            (got - expected).abs() / expected < 0.1,
+            "{got} vs {expected}"
+        );
+    }
+
+    #[test]
+    fn arrivals_sorted_and_in_range() {
+        let tr = Trace::synthetic(Pattern::Bursty, 200);
+        let arr = tr.arrivals(2);
+        for w in arr.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!(arr.iter().all(|&t| t >= 0.0 && t < 200.0));
+    }
+
+    #[test]
+    fn arrivals_deterministic() {
+        let tr = Trace::synthetic(Pattern::Fluctuating, 100);
+        assert_eq!(tr.arrivals(7), tr.arrivals(7));
+        assert_ne!(tr.arrivals(7), tr.arrivals(8));
+    }
+
+    #[test]
+    fn max_in_window() {
+        let tr = Trace::new("t", vec![1.0, 5.0, 2.0, 9.0, 3.0]);
+        assert_eq!(tr.max_in_window(0.0, 2.0), 5.0);
+        assert_eq!(tr.max_in_window(2.0, 2.0), 9.0);
+        assert_eq!(tr.max_in_window(4.0, 10.0), 3.0);
+    }
+
+    #[test]
+    fn rate_at_clamps() {
+        let tr = Trace::new("t", vec![1.0, 2.0]);
+        assert_eq!(tr.rate_at(-1.0), 1.0);
+        assert_eq!(tr.rate_at(0.5), 1.0);
+        assert_eq!(tr.rate_at(100.0), 2.0);
+    }
+}

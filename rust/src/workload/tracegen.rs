@@ -1,0 +1,306 @@
+//! Synthetic Twitter-shaped workload generator.
+//!
+//! DETERMINISM CONTRACT: this is a line-for-line algorithmic twin of
+//! `python/compile/tracegen.py` — SplitMix64 plus only +,-,*,/ on f64
+//! (no libm transcendentals), so both languages produce bit-identical
+//! rate sequences for the same (pattern, seed).  The LSTM predictor is
+//! trained (python side) on `composite` traces from this algorithm and
+//! serves predictions (rust side, via PJRT) on traces from this twin.
+
+use crate::util::rng::SplitMix64;
+
+/// The four paper workload archetypes (Fig. 7) plus the LSTM-training
+/// composite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    SteadyLow,
+    SteadyHigh,
+    Fluctuating,
+    Bursty,
+    Composite,
+}
+
+impl Pattern {
+    pub const ALL: [Pattern; 5] = [
+        Pattern::SteadyLow,
+        Pattern::SteadyHigh,
+        Pattern::Fluctuating,
+        Pattern::Bursty,
+        Pattern::Composite,
+    ];
+
+    /// The four evaluation patterns of Figs. 8–12.
+    pub const EVAL: [Pattern; 4] = [
+        Pattern::Bursty,
+        Pattern::SteadyHigh,
+        Pattern::SteadyLow,
+        Pattern::Fluctuating,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Pattern::SteadyLow => "steady_low",
+            Pattern::SteadyHigh => "steady_high",
+            Pattern::Fluctuating => "fluctuating",
+            Pattern::Bursty => "bursty",
+            Pattern::Composite => "composite",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Pattern> {
+        Pattern::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+/// Length of one synthetic "day" in the composite trace (python twin:
+/// `DAY_SECONDS`).
+pub const DAY_SECONDS: usize = 2400;
+
+/// Smooth periodic bump in [0,1]: parabola `1-(2p-1)²` per period —
+/// a deterministic sin() substitute (libm differs across languages,
+/// polynomials do not).
+pub fn bump(phase: f64) -> f64 {
+    let mut p = phase - phase.trunc();
+    if p < 0.0 {
+        p += 1.0;
+    }
+    let d = 2.0 * p - 1.0;
+    1.0 - d * d
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Burst {
+    start: f64,
+    ramp: f64,
+    hold: f64,
+    decay: f64,
+    amp: f64,
+}
+
+impl Burst {
+    fn value(&self, t: f64) -> f64 {
+        let mut dt = t - self.start;
+        if dt < 0.0 {
+            return 0.0;
+        }
+        if dt < self.ramp {
+            return self.amp * dt / self.ramp;
+        }
+        dt -= self.ramp;
+        if dt < self.hold {
+            return self.amp;
+        }
+        dt -= self.hold;
+        if dt < self.decay {
+            return self.amp * (1.0 - dt / self.decay);
+        }
+        0.0
+    }
+}
+
+fn gen_bursts(
+    rng: &mut SplitMix64,
+    seconds: usize,
+    mean_gap: f64,
+    amp_lo: f64,
+    amp_hi: f64,
+) -> Vec<Burst> {
+    let mut bursts = Vec::new();
+    let mut t = rng.range_f64(5.0, mean_gap);
+    while t < seconds as f64 {
+        let ramp = rng.range_f64(3.0, 8.0);
+        let hold = rng.range_f64(10.0, 30.0);
+        let decay = rng.range_f64(5.0, 15.0);
+        let amp = rng.range_f64(amp_lo, amp_hi);
+        bursts.push(Burst { start: t, ramp, hold, decay, amp });
+        t += ramp + hold + decay + rng.range_f64(0.5 * mean_gap, 1.5 * mean_gap);
+    }
+    bursts
+}
+
+/// Generate per-second arrival rates (RPS).  Twin of python `generate`.
+pub fn generate(pattern: Pattern, seconds: usize, seed: u64) -> Vec<f64> {
+    let mut rng = SplitMix64::new(seed);
+    let mut rates = vec![0.0f64; seconds];
+
+    match pattern {
+        Pattern::SteadyLow => {
+            for r in rates.iter_mut() {
+                *r = 6.0 + rng.range_f64(-0.8, 0.8);
+            }
+        }
+        Pattern::SteadyHigh => {
+            for r in rates.iter_mut() {
+                *r = 26.0 + rng.range_f64(-2.0, 2.0);
+            }
+        }
+        Pattern::Fluctuating => {
+            for (t, r) in rates.iter_mut().enumerate() {
+                let wave = 20.0 * bump(t as f64 / 300.0);
+                *r = 6.0 + wave + rng.range_f64(-1.5, 1.5);
+            }
+        }
+        Pattern::Bursty => {
+            let bursts = gen_bursts(&mut rng, seconds, 120.0, 18.0, 30.0);
+            for (t, r) in rates.iter_mut().enumerate() {
+                let mut v = 8.0 + rng.range_f64(-1.0, 1.0);
+                for b in &bursts {
+                    v += b.value(t as f64);
+                }
+                *r = v;
+            }
+        }
+        Pattern::Composite => {
+            // burst distribution matches the bursty eval archetype (amp
+            // 18-30) so the LSTM learns to anticipate real burst onsets
+            let bursts = gen_bursts(&mut rng, seconds, 150.0, 16.0, 30.0);
+            for (t, r) in rates.iter_mut().enumerate() {
+                let day_phase = t as f64 / DAY_SECONDS as f64;
+                let diurnal = 16.0 * bump(day_phase);
+                let weekly = 4.0 * bump(day_phase / 5.3);
+                let mut v = 5.0 + diurnal + weekly + rng.range_f64(-1.2, 1.2);
+                for b in &bursts {
+                    v += b.value(t as f64);
+                }
+                *r = v;
+            }
+        }
+    }
+
+    for r in rates.iter_mut() {
+        if *r < 0.5 {
+            *r = 0.5;
+        }
+    }
+    rates
+}
+
+/// Seed the python LSTM trainer used for the composite trace — MUST
+/// match `python/compile/predictor.TRACE_SEED`.
+pub const TRAIN_SEED: u64 = 0x7717_7E2A;
+
+/// Default seeds for the four evaluation excerpts (Fig. 7) — distinct
+/// from [`TRAIN_SEED`] so the excerpts are "unseen" by the LSTM.
+pub fn eval_seed(pattern: Pattern) -> u64 {
+    match pattern {
+        Pattern::SteadyLow => 0x0051_EAD1,
+        Pattern::SteadyHigh => 0x0051_EAD2,
+        Pattern::Fluctuating => 0x00F1_0C70,
+        Pattern::Bursty => 0x00B0_B570,
+        Pattern::Composite => TRAIN_SEED,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(Pattern::Bursty, 500, 42);
+        let b = generate(Pattern::Bursty, 500, 42);
+        assert_eq!(a, b);
+        let c = generate(Pattern::Bursty, 500, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn steady_low_mean_and_spread() {
+        let r = generate(Pattern::SteadyLow, 2000, 1);
+        let m = mean(&r);
+        assert!((m - 6.0).abs() < 0.2, "mean {m}");
+        assert!(r.iter().all(|&x| (4.0..8.5).contains(&x)));
+    }
+
+    #[test]
+    fn steady_high_above_low() {
+        let hi = mean(&generate(Pattern::SteadyHigh, 2000, 2));
+        let lo = mean(&generate(Pattern::SteadyLow, 2000, 2));
+        assert!(hi > lo + 15.0);
+    }
+
+    #[test]
+    fn fluctuating_has_waves() {
+        let r = generate(Pattern::Fluctuating, 600, 3);
+        let max = r.iter().fold(0.0f64, |a, &b| a.max(b));
+        let min = r.iter().fold(f64::MAX, |a, &b| a.min(b));
+        assert!(max > 22.0, "max {max}");
+        assert!(min < 9.0, "min {min}");
+    }
+
+    #[test]
+    fn bursty_has_bursts_and_base() {
+        let r = generate(Pattern::Bursty, 1200, 4);
+        let max = r.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert!(max > 24.0, "burst peak {max}");
+        // most of the time we are near base
+        let near_base = r.iter().filter(|&&x| x < 12.0).count();
+        assert!(near_base > r.len() / 3, "{near_base}");
+    }
+
+    #[test]
+    fn composite_diurnal_structure() {
+        let r = generate(Pattern::Composite, 2 * DAY_SECONDS, 5);
+        // mid-day (phase 0.5) should exceed midnight (phase ~0)
+        let midnight = mean(&r[0..100]);
+        let midday = mean(&r[DAY_SECONDS / 2 - 50..DAY_SECONDS / 2 + 50]);
+        assert!(midday > midnight + 5.0, "{midnight} vs {midday}");
+    }
+
+    #[test]
+    fn rates_floored() {
+        for p in Pattern::ALL {
+            let r = generate(p, 300, 9);
+            assert!(r.iter().all(|&x| x >= 0.5));
+        }
+    }
+
+    #[test]
+    fn bump_properties() {
+        assert!(bump(0.0).abs() < 1e-12);
+        assert!((bump(0.5) - 1.0).abs() < 1e-12);
+        assert!((bump(1.25) - bump(0.25)).abs() < 1e-12, "periodic");
+        assert!((bump(-0.25) - bump(0.75)).abs() < 1e-12, "negative phase");
+    }
+
+    #[test]
+    fn bit_exact_with_python_twin() {
+        // Values produced by python/compile/tracegen.py (printed with
+        // %.17g) — the determinism contract between the two languages.
+        let r = generate(Pattern::Bursty, 50, 42);
+        let expect = [
+            7.3198207857538407,
+            7.5572022605102775,
+            7.6883814330472751,
+            7.0760603370804924,
+            8.736456153093064,
+            7.4368103874243685,
+            8.6012637534270073,
+            7.6798620778340414,
+            8.23696413271227,
+            7.4098036635975513,
+        ];
+        for (a, b) in r[..10].iter().zip(expect) {
+            assert_eq!(*a, b, "bursty stream diverged from python");
+        }
+        let c = generate(Pattern::Composite, 30, TRAIN_SEED);
+        let expect_c = [
+            4.0840338748544189,
+            5.9074476338245239,
+            4.6472281555517601,
+            5.4241581155432517,
+            4.3530485527439486,
+        ];
+        for (a, b) in c[..5].iter().zip(expect_c) {
+            assert_eq!(*a, b, "composite stream diverged from python");
+        }
+    }
+
+    #[test]
+    fn eval_seeds_distinct_from_training() {
+        for p in Pattern::EVAL {
+            assert_ne!(eval_seed(p), TRAIN_SEED);
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Property-based invariants of the IP solver (the Gurobi-optimality
+//! substitute proof obligations) — run via the quickcheck-lite harness.
+
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines;
+use ipa::optimizer::{brute, ip};
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::util::quickcheck::{check, prop_assert, prop_close};
+
+/// B&B equals exhaustive enumeration for random weights/loads/caps on
+/// random pipelines — optimality certification.
+#[test]
+fn prop_bnb_optimal() {
+    let specs = pipelines::all();
+    check("bnb matches brute oracle", 60, |g| {
+        let mut spec = g.choose(&specs).clone();
+        spec.weights.alpha = g.f64(0.1, 60.0);
+        spec.weights.beta = g.f64(0.01, 8.0);
+        spec.weights.delta = g.f64(0.0, 1e-3);
+        let prof = pipeline_profiles(&spec);
+        let mut p = ip::Problem::new(&spec, &prof, g.f64(0.5, 45.0));
+        p.max_replicas = g.usize(1, 48) as u32;
+        if g.bool() {
+            p.metric = AccuracyMetric::PasPrime;
+        }
+        match (ip::solve(&p), brute::solve(&p)) {
+            (None, None) => Ok(()),
+            (Some((a, _)), Some(b)) => {
+                prop_close(a.objective, b.objective, 1e-9, "objective")
+            }
+            (a, b) => prop_assert(
+                false,
+                &format!("feasibility mismatch: bnb={} brute={}", a.is_some(), b.is_some()),
+            ),
+        }
+    });
+}
+
+/// Every solution satisfies the Eq. 10 constraints.
+#[test]
+fn prop_solutions_feasible() {
+    let specs = pipelines::all();
+    check("solutions satisfy constraints", 80, |g| {
+        let spec = g.choose(&specs).clone();
+        let prof = pipeline_profiles(&spec);
+        let lambda = g.f64(0.5, 45.0);
+        let p = ip::Problem::new(&spec, &prof, lambda);
+        let Some((cfg, _)) = ip::solve(&p) else {
+            return Ok(());
+        };
+        // (10b) latency
+        prop_assert(cfg.latency_e2e <= spec.sla_e2e() + 1e-9, "latency SLA")?;
+        // (10c) throughput per stage
+        for (si, sc) in cfg.stages.iter().enumerate() {
+            let vp = &prof.stages[si].variants[sc.variant_idx];
+            let tput = sc.replicas as f64 * vp.latency.throughput(sc.batch);
+            prop_assert(tput >= lambda - 1e-9, "throughput")?;
+            // (10d/10e) integrality + one active variant is structural
+            prop_assert(sc.replicas >= 1, "positive replicas")?;
+            prop_assert(sc.batch.is_power_of_two() && sc.batch <= 64, "batch domain")?;
+        }
+        Ok(())
+    });
+}
+
+/// Objective monotonicity: adding load can only keep or worsen the
+/// optimal objective (the feasible set shrinks).
+#[test]
+fn prop_objective_monotone_in_load() {
+    let specs = pipelines::all();
+    check("objective monotone in lambda", 40, |g| {
+        let spec = g.choose(&specs).clone();
+        let prof = pipeline_profiles(&spec);
+        let l1 = g.f64(0.5, 20.0);
+        let l2 = l1 + g.f64(0.5, 20.0);
+        let a = ip::solve(&ip::Problem::new(&spec, &prof, l1));
+        let b = ip::solve(&ip::Problem::new(&spec, &prof, l2));
+        match (a, b) {
+            (Some((ca, _)), Some((cb, _))) => prop_assert(
+                cb.objective <= ca.objective + 1e-9,
+                &format!("obj rose with load: {} -> {}", ca.objective, cb.objective),
+            ),
+            (None, Some(_)) => prop_assert(false, "feasible at higher load only"),
+            _ => Ok(()),
+        }
+    });
+}
+
+/// Raising α (accuracy weight) never lowers the chosen PAS; raising β
+/// never raises the chosen cost.
+#[test]
+fn prop_weight_monotonicity() {
+    let specs = pipelines::all();
+    check("alpha/beta monotonicity", 40, |g| {
+        let spec0 = g.choose(&specs).clone();
+        let prof = pipeline_profiles(&spec0);
+        let lambda = g.f64(1.0, 30.0);
+        let base = ip::solve(&ip::Problem::new(&spec0, &prof, lambda));
+        let Some((base_cfg, _)) = base else { return Ok(()) };
+
+        let mut spec_a = spec0.clone();
+        spec_a.weights.alpha *= g.f64(2.0, 50.0);
+        if let Some((cfg, _)) = ip::solve(&ip::Problem::new(&spec_a, &prof, lambda)) {
+            prop_assert(cfg.pas >= base_cfg.pas - 1e-9, "alpha up -> PAS not down")?;
+        }
+
+        let mut spec_b = spec0.clone();
+        spec_b.weights.beta *= g.f64(2.0, 50.0);
+        if let Some((cfg, _)) = ip::solve(&ip::Problem::new(&spec_b, &prof, lambda)) {
+            prop_assert(cfg.cost <= base_cfg.cost + 1e-9, "beta up -> cost not up")?;
+        }
+        Ok(())
+    });
+}
+
+/// The solver is deterministic.
+#[test]
+fn prop_deterministic() {
+    let specs = pipelines::all();
+    check("solver deterministic", 20, |g| {
+        let spec = g.choose(&specs).clone();
+        let prof = pipeline_profiles(&spec);
+        let lambda = g.f64(0.5, 40.0);
+        let p = ip::Problem::new(&spec, &prof, lambda);
+        let a = ip::solve(&p).map(|(c, _)| c);
+        let b = ip::solve(&p).map(|(c, _)| c);
+        prop_assert(a == b, "nondeterministic solve")
+    });
+}
+
+/// Baselines never beat IPA's objective on IPA's own objective function
+/// (IPA's search space is a superset).
+#[test]
+fn prop_ipa_dominates_baselines_on_objective() {
+    use ipa::baselines::{fa2, rim};
+    let specs = pipelines::all();
+    check("ipa objective dominates", 30, |g| {
+        let spec = g.choose(&specs).clone();
+        let prof = pipeline_profiles(&spec);
+        let lambda = g.f64(1.0, 30.0);
+        let p = ip::Problem::new(&spec, &prof, lambda);
+        let Some((ipa_cfg, _)) = ip::solve(&p) else { return Ok(()) };
+        // Baselines may return *infeasible* fallback configs (shed load
+        // via dropping) when their restricted space cannot serve λ —
+        // only fully feasible configs participate in the dominance check.
+        let feasible = |cfg: &ip::PipelineConfig| {
+            cfg.latency_e2e <= spec.sla_e2e() + 1e-9
+                && cfg.stages.iter().enumerate().all(|(si, sc)| {
+                    let vp = &prof.stages[si].variants[sc.variant_idx];
+                    sc.replicas as f64 * vp.latency.throughput(sc.batch) >= lambda - 1e-9
+                })
+        };
+        for cfg in [
+            fa2::decide(&p, fa2::VariantPin::Lightest),
+            fa2::decide(&p, fa2::VariantPin::Heaviest),
+            rim::decide(&p, rim::RimParams { fixed_replicas: g.usize(2, 12) as u32 }),
+        ] {
+            if feasible(&cfg) {
+                prop_assert(
+                    ipa_cfg.objective >= cfg.objective - 1e-9,
+                    &format!("baseline beat IPA: {} > {}", cfg.objective, ipa_cfg.objective),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,134 @@
+//! End-to-end simulator behaviour: queueing/batching/drop invariants
+//! checked over full runs, plus property tests on the serving
+//! substrate's conservation laws.
+
+use ipa::coordinator::adapter::{Adapter, AdapterConfig, Policy};
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines;
+use ipa::predictor::{OraclePredictor, ReactivePredictor};
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::simulator::sim::{SimConfig, Simulation};
+use ipa::util::quickcheck::{check, prop_assert};
+use ipa::workload::trace::Trace;
+use ipa::workload::tracegen::{self, Pattern};
+
+fn sim_with(
+    pipeline: &str,
+    policy: Policy,
+    seed: u64,
+    oracle_trace: Option<Trace>,
+) -> Simulation {
+    let spec = pipelines::by_name(pipeline).unwrap();
+    let prof = pipeline_profiles(&spec);
+    let predictor: Box<dyn ipa::predictor::Predictor + Send> = match oracle_trace {
+        Some(t) => Box::new(OraclePredictor { trace: t }),
+        None => Box::new(ReactivePredictor::default()),
+    };
+    let adapter = Adapter::new(spec, prof, policy, AdapterConfig::default(), predictor);
+    Simulation::new(adapter, SimConfig { seed, ..Default::default() })
+}
+
+/// Conservation: every arrival is either completed, dropped, or still
+/// in flight at horizon; nothing is duplicated or invented.
+#[test]
+fn prop_request_conservation() {
+    check("request conservation", 8, |g| {
+        let pattern = *g.choose(&[Pattern::SteadyLow, Pattern::Bursty, Pattern::Fluctuating]);
+        let seed = g.u64(1, 1000);
+        let trace = Trace::new(
+            pattern.name(),
+            tracegen::generate(pattern, 150, seed),
+        );
+        let mut sim = sim_with("video", Policy::Ipa(AccuracyMetric::Pas), seed, None);
+        let m = sim.run(&trace);
+        let arrivals = trace.arrivals(seed).len();
+        prop_assert(m.requests.len() == arrivals, "record per arrival")?;
+        let completed = m.latencies().len();
+        let dropped = m.requests.iter().filter(|r| r.completion.is_none()).count();
+        prop_assert(completed + dropped == arrivals, "partition")?;
+        // ids unique
+        let mut ids: Vec<u64> = m.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        prop_assert(ids.len() == arrivals, "unique ids")
+    });
+}
+
+/// Latency sanity: completions follow arrivals, and with dropping on,
+/// completed latencies stay below 2×SLA + max service time.
+#[test]
+fn prop_latency_bounds() {
+    check("latency bounds", 6, |g| {
+        let seed = g.u64(1, 500);
+        let trace = Trace::new("bursty", tracegen::generate(Pattern::Bursty, 150, seed));
+        let mut sim = sim_with("audio-qa", Policy::Ipa(AccuracyMetric::Pas), seed, None);
+        let m = sim.run(&trace);
+        for r in &m.requests {
+            if let Some(c) = r.completion {
+                prop_assert(c >= r.arrival, "causality")?;
+                prop_assert(c - r.arrival < 3.0 * m.sla, "2xSLA drop ceiling")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Oracle-predicted runs never violate more than reactive runs on
+/// bursty load (Fig. 16 direction), aggregated over pipelines.
+#[test]
+fn oracle_no_worse_than_reactive_on_bursts() {
+    let mut oracle_v = 0.0;
+    let mut reactive_v = 0.0;
+    for pipeline in ["video", "sum-qa", "nlp"] {
+        let trace = Trace::synthetic(Pattern::Bursty, 300);
+        let m1 = sim_with(pipeline, Policy::Ipa(AccuracyMetric::Pas), 5, Some(trace.clone()))
+            .run(&trace);
+        let m2 = sim_with(pipeline, Policy::Ipa(AccuracyMetric::Pas), 5, None).run(&trace);
+        oracle_v += m1.violation_rate();
+        reactive_v += m2.violation_rate();
+    }
+    assert!(
+        oracle_v <= reactive_v + 0.05,
+        "oracle {oracle_v} vs reactive {reactive_v}"
+    );
+}
+
+/// Reconfiguration stability: steady workloads should not thrash model
+/// variants every interval.
+#[test]
+fn steady_load_rarely_switches() {
+    let trace = Trace::synthetic(Pattern::SteadyLow, 300);
+    let m = sim_with("video", Policy::Ipa(AccuracyMetric::Pas), 3, None).run(&trace);
+    let switches = m.variant_switches();
+    assert!(
+        (switches as f64) < m.intervals.len() as f64 * 0.4,
+        "{switches} switches in {} intervals",
+        m.intervals.len()
+    );
+}
+
+/// The monitor's observed rates track the trace's ground truth.
+#[test]
+fn monitoring_tracks_load() {
+    let trace = Trace::synthetic(Pattern::SteadyHigh, 240);
+    let m = sim_with("video", Policy::Fa2Low, 3, None).run(&trace);
+    let observed: Vec<f64> = m.intervals.iter().skip(2).map(|i| i.lambda_observed).collect();
+    let mean_obs = ipa::util::stats::mean(&observed);
+    assert!((mean_obs - 26.0).abs() < 4.0, "observed mean {mean_obs}");
+}
+
+/// FA2-low under bursty load violates more than under steady-low
+/// (bursts hurt a reactive fixed-variant system).
+#[test]
+fn bursts_hurt_attainment() {
+    let steady = sim_with("video", Policy::Fa2Low, 7, None)
+        .run(&Trace::synthetic(Pattern::SteadyLow, 240));
+    let bursty = sim_with("video", Policy::Fa2Low, 7, None)
+        .run(&Trace::synthetic(Pattern::Bursty, 240));
+    assert!(
+        bursty.violation_rate() >= steady.violation_rate() - 0.02,
+        "bursty {} vs steady {}",
+        bursty.violation_rate(),
+        steady.violation_rate()
+    );
+}
