@@ -11,13 +11,21 @@
 //! throughput, latency percentiles, SLA attainment, and the adapter's
 //! live reconfiguration log; EXPERIMENTS.md records a reference run.
 //!
-//! Requires artifacts: `make artifacts` first.
-//! Run: `cargo run --release --example e2e_serve [-- --seconds 60 --time-scale 0.5]`
+//! Requires artifacts (`make artifacts`) for the real PJRT path; with
+//! `--synthetic` (or when artifacts are absent) the same threaded
+//! engine runs on the analytic profiles through a profile-sleeping
+//! executor — the wall-clock driver over the shared cluster core, no
+//! artifacts needed.
+//!
+//! Run: `cargo run --release --example e2e_serve [-- --seconds 60 --time-scale 0.5 --synthetic]`
+
+use std::sync::Arc;
 
 use ipa::coordinator::adapter::Policy;
 use ipa::models::accuracy::AccuracyMetric;
 use ipa::models::pipelines;
-use ipa::serving::engine::{serve, ServeConfig};
+use ipa::predictor::ReactivePredictor;
+use ipa::serving::engine::{serve, serve_with, ServeConfig, SyntheticExecutor};
 use ipa::serving::loadgen::LoadGenConfig;
 use ipa::util::cli::Args;
 use ipa::workload::trace::Trace;
@@ -35,9 +43,10 @@ fn main() {
         eprintln!("unknown pipeline {pipeline}");
         std::process::exit(2);
     };
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(1);
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let synthetic = args.flag("synthetic") || !have_artifacts;
+    if synthetic && !args.flag("synthetic") {
+        eprintln!("artifacts/ missing — falling back to the synthetic executor");
     }
 
     let cfg = ServeConfig {
@@ -46,23 +55,55 @@ fn main() {
         max_workers: 6,
         interval: 4.0,
         apply_delay: 0.5,
-        use_lstm: true,
+        use_lstm: !synthetic,
         profile_batches: vec![1, 4, 16, 64],
         profile_reps: 3,
-        sla_floor: args.get_f64("sla-floor", 0.25),
+        sla_floor: if synthetic { 0.0 } else { args.get_f64("sla-floor", 0.25) },
     };
     let lg = LoadGenConfig { time_scale, seed: args.get_u64("seed", 11) };
     let trace = Trace::synthetic(pattern, seconds);
 
     println!(
-        "e2e live serve: pipeline={pipeline} workload={} trace={seconds}s \
+        "e2e live serve ({}): pipeline={pipeline} workload={} trace={seconds}s \
          at {time_scale}x wall compression",
+        if synthetic { "synthetic executor" } else { "real PJRT artifacts" },
         pattern.name()
     );
-    println!("startup: compiling artifacts + measuring live profiles ...");
+    // Frozen analytic profiles, uniformly scaled into the wall domain
+    // so λ/latency/SLA stay consistent under compression.
+    let run_synthetic = |cfg: &ServeConfig| {
+        let mut cfg = cfg.clone();
+        cfg.sla_floor = 0.0;
+        let prof = ipa::profiler::analytic::pipeline_profiles(&spec).scaled(time_scale);
+        let executor = Arc::new(SyntheticExecutor::from_profiles(&prof, 1.0));
+        serve_with(
+            &spec,
+            prof,
+            Policy::Ipa(AccuracyMetric::Pas),
+            &cfg,
+            lg,
+            &trace,
+            executor,
+            Box::new(ReactivePredictor::default()),
+        )
+        .expect("synthetic serve")
+    };
+
     let t0 = std::time::Instant::now();
-    let rep = serve(&spec, Policy::Ipa(AccuracyMetric::Pas), &cfg, lg, &trace)
-        .expect("live serve");
+    let rep = if synthetic {
+        run_synthetic(&cfg)
+    } else {
+        println!("startup: compiling artifacts + measuring live profiles ...");
+        match serve(&spec, Policy::Ipa(AccuracyMetric::Pas), &cfg, lg, &trace) {
+            Ok(rep) => rep,
+            Err(e) => {
+                // e.g. built with the offline xla stub — the threaded
+                // engine still demonstrates end to end synthetically
+                eprintln!("real PJRT serve failed ({e:#}); falling back to synthetic executor");
+                run_synthetic(&cfg)
+            }
+        }
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     let m = &rep.metrics;

@@ -58,7 +58,8 @@ fn main() {
     println!("\n################ MICRO BENCHMARKS ################");
     let b = Bencher::new(2, 10);
 
-    // IP solver across the Fig. 13 grid.
+    // IP solver across the Fig. 13 grid (solver decision time — the
+    // numbers BENCH_cluster.json carries as the perf baseline).
     let mut rows = Vec::new();
     for (s, m) in [(2usize, 5usize), (5, 5), (10, 10)] {
         let (spec, prof) = figures::synthetic_problem(s, m);
@@ -76,6 +77,7 @@ fn main() {
         }));
     }
     print_section("optimizer (paper budget: <2s at 10x10)", &rows);
+    let solver_rows = rows.clone();
 
     // Ablation: §7 future-work heuristic vs the exact IP (optimality
     // gap + speedup).
@@ -127,6 +129,17 @@ fn main() {
         mk_sim().run(&trace)
     })];
     print_section("simulator (items/s = simulated requests/s)", &rows);
+    let simulator_rows = rows.clone();
+
+    // Perf baseline for future PRs: solver decision time + simulator
+    // throughput, in a stable JSON shape.
+    match ipa::benchkit::write_json(
+        "BENCH_cluster.json",
+        &[("solver", &solver_rows[..]), ("simulator", &simulator_rows[..])],
+    ) {
+        Ok(()) => println!("wrote BENCH_cluster.json"),
+        Err(e) => eprintln!("BENCH_cluster.json not written: {e}"),
+    }
 
     // Trace generation + fits.
     let rows = vec![

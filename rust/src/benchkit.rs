@@ -7,6 +7,7 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// One benchmark measurement.
@@ -111,6 +112,39 @@ pub fn print_section(title: &str, rows: &[BenchResult]) {
     }
 }
 
+/// One result as a JSON object (seconds; throughput in items/s when
+/// measured).
+pub fn result_json(r: &BenchResult) -> Json {
+    let mut j = Json::obj()
+        .set("name", r.name.clone())
+        .set("mean_s", r.summary.mean)
+        .set("p50_s", r.summary.p50)
+        .set("p99_s", r.summary.p99)
+        .set("iters", r.iters);
+    if let Some(t) = r.throughput() {
+        j = j.set("items_per_s", t);
+    }
+    j
+}
+
+/// Serialize named sections of results as the canonical `BENCH_*.json`
+/// shape — a stable perf baseline future PRs diff against.
+pub fn sections_json(sections: &[(&str, &[BenchResult])]) -> Json {
+    let mut root = Json::obj();
+    for (title, rows) in sections {
+        root = root.set(
+            title,
+            Json::Arr(rows.iter().map(result_json).collect()),
+        );
+    }
+    root
+}
+
+/// Write sections to `path` as JSON.
+pub fn write_json(path: &str, sections: &[(&str, &[BenchResult])]) -> std::io::Result<()> {
+    std::fs::write(path, sections_json(sections).to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +171,20 @@ mod tests {
         assert!(r.throughput().unwrap() > 0.0);
         let row = format_row(&r);
         assert!(row.contains("items/s"), "{row}");
+    }
+
+    #[test]
+    fn json_shape_roundtrips() {
+        let b = Bencher::new(0, 3);
+        let plain = [b.run("plain", || 1 + 1)];
+        let tput = [b.run_throughput("tput", 10.0, || 1 + 1)];
+        let j = sections_json(&[("solver", &plain[..]), ("simulator", &tput[..])]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let solver = parsed.get("solver").unwrap().as_arr().unwrap();
+        assert_eq!(solver[0].get("name").unwrap().as_str(), Some("plain"));
+        assert!(solver[0].get("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(solver[0].get("items_per_s").is_none());
+        let sim = parsed.get("simulator").unwrap().as_arr().unwrap();
+        assert!(sim[0].get("items_per_s").unwrap().as_f64().unwrap() > 0.0);
     }
 }

@@ -1,0 +1,218 @@
+//! Per-request and per-interval bookkeeping shared by every driver,
+//! feeding [`RunMetrics`].
+//!
+//! Terminal states are first-wins: once a request is completed it can
+//! never be dropped and vice versa — the conservation invariant the
+//! property tests pin down (each arrival ends completed, dropped, or
+//! still in flight; never two of them).
+
+use crate::coordinator::adapter::Decision;
+use crate::metrics::{IntervalRecord, RequestRecord, RunMetrics};
+use crate::optimizer::ip::PipelineConfig;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Flight {
+    arrival: f64,
+    completion: Option<f64>,
+    dropped: bool,
+    /// An arrival was recorded for this id.
+    seen: bool,
+}
+
+/// Run-scoped accounting: request outcomes + the interval configuration
+/// series.
+#[derive(Debug)]
+pub struct Accounting {
+    flights: Vec<Flight>,
+    intervals: Vec<IntervalRecord>,
+    sla: f64,
+    completed: usize,
+    dropped: usize,
+}
+
+impl Accounting {
+    pub fn new(sla: f64) -> Self {
+        Accounting {
+            flights: Vec::new(),
+            intervals: Vec::new(),
+            sla,
+            completed: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn sla(&self) -> f64 {
+        self.sla
+    }
+
+    fn slot(&mut self, id: u64) -> &mut Flight {
+        let idx = id as usize;
+        if idx >= self.flights.len() {
+            self.flights.resize(idx + 1, Flight::default());
+        }
+        &mut self.flights[idx]
+    }
+
+    /// Record request `id` entering the pipeline at `t`.
+    pub fn record_arrival(&mut self, id: u64, t: f64) {
+        let f = self.slot(id);
+        f.arrival = t;
+        f.seen = true;
+    }
+
+    /// Record a §4.5 drop.  No-op if the request already completed.
+    pub fn record_drop(&mut self, id: u64) {
+        let f = self.slot(id);
+        if !f.dropped && f.completion.is_none() {
+            f.dropped = true;
+            self.dropped += 1;
+        }
+    }
+
+    /// Record a completion at `t`.  No-op if the request was dropped.
+    pub fn record_completion(&mut self, id: u64, t: f64) {
+        let f = self.slot(id);
+        if !f.dropped && f.completion.is_none() {
+            f.completion = Some(t);
+            self.completed += 1;
+        }
+    }
+
+    pub fn is_dropped(&self, id: u64) -> bool {
+        self.flights.get(id as usize).map(|f| f.dropped).unwrap_or(false)
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.completed
+    }
+
+    pub fn dropped_count(&self) -> usize {
+        self.dropped
+    }
+
+    /// Requests that reached a terminal state (live drivers drain on
+    /// this).
+    pub fn done(&self) -> usize {
+        self.completed + self.dropped
+    }
+
+    /// Snapshot one adaptation interval: the ACTIVE configuration's
+    /// PAS/cost (the decision only takes effect after the apply delay)
+    /// plus the observed and predicted rates behind the new decision.
+    pub fn record_interval(
+        &mut self,
+        t: f64,
+        active: &PipelineConfig,
+        lambda_observed: f64,
+        decision: &Decision,
+    ) {
+        self.intervals.push(IntervalRecord {
+            t,
+            pas: active.pas,
+            cost: active.cost,
+            lambda_observed,
+            lambda_predicted: decision.lambda_predicted,
+            decision_time: decision.decision_time,
+            variants: active.stages.iter().map(|s| s.variant_key.clone()).collect(),
+        });
+    }
+
+    /// Finish the run: anything without a terminal state never completed
+    /// (still queued / in flight at the horizon).
+    pub fn into_metrics(self, system: String, pipeline: String, workload: String) -> RunMetrics {
+        let requests: Vec<RequestRecord> = self
+            .flights
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.seen)
+            .map(|(id, f)| RequestRecord {
+                id: id as u64,
+                arrival: f.arrival,
+                completion: if f.dropped { None } else { f.completion },
+            })
+            .collect();
+        RunMetrics {
+            system,
+            pipeline,
+            workload,
+            requests,
+            intervals: self.intervals,
+            sla: self.sla,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, prop_assert};
+
+    #[test]
+    fn lifecycle_counts() {
+        let mut a = Accounting::new(1.0);
+        a.record_arrival(0, 0.1);
+        a.record_arrival(1, 0.2);
+        a.record_arrival(2, 0.3);
+        a.record_completion(0, 0.9);
+        a.record_drop(1);
+        assert_eq!(a.completed_count(), 1);
+        assert_eq!(a.dropped_count(), 1);
+        assert_eq!(a.done(), 2);
+        assert!(a.is_dropped(1));
+        assert!(!a.is_dropped(0));
+        let m = a.into_metrics("s".into(), "p".into(), "w".into());
+        assert_eq!(m.requests.len(), 3);
+        assert_eq!(m.latencies().len(), 1);
+        assert!((m.latencies()[0] - 0.8).abs() < 1e-12);
+        // id 2 never finished -> counts as dropped in the metrics
+        assert_eq!(m.requests.iter().filter(|r| r.dropped()).count(), 2);
+    }
+
+    #[test]
+    fn terminal_states_are_first_wins() {
+        let mut a = Accounting::new(1.0);
+        a.record_arrival(0, 0.0);
+        a.record_completion(0, 1.0);
+        a.record_drop(0); // ignored
+        assert_eq!(a.completed_count(), 1);
+        assert_eq!(a.dropped_count(), 0);
+
+        a.record_arrival(1, 0.0);
+        a.record_drop(1);
+        a.record_completion(1, 2.0); // ignored
+        assert_eq!(a.completed_count(), 1);
+        assert_eq!(a.dropped_count(), 1);
+    }
+
+    /// Property: under any interleaving of drops/completions, no request
+    /// is ever both dropped and completed, and the terminal counts
+    /// partition the terminal set.
+    #[test]
+    fn prop_no_request_both_dropped_and_completed() {
+        check("drop xor complete", 200, |g| {
+            let n = g.usize(1, 30) as u64;
+            let mut a = Accounting::new(1.0);
+            for id in 0..n {
+                a.record_arrival(id, id as f64 * 0.01);
+            }
+            for _ in 0..g.usize(0, 80) {
+                let id = g.u64(0, n);
+                if g.bool() {
+                    a.record_drop(id);
+                } else {
+                    a.record_completion(id, g.f64(0.0, 10.0));
+                }
+            }
+            let (completed, dropped) = (a.completed_count(), a.dropped_count());
+            prop_assert(completed + dropped <= n as usize, "terminal > arrivals")?;
+            let m = a.into_metrics("s".into(), "p".into(), "w".into());
+            prop_assert(m.requests.len() == n as usize, "one record per arrival")?;
+            prop_assert(m.latencies().len() == completed, "completed count")?;
+            // everything not completed reads as dropped-or-in-flight:
+            // exactly n - completed records have no completion time
+            let no_completion = m.requests.iter().filter(|r| r.dropped()).count();
+            prop_assert(no_completion == n as usize - completed, "partition")?;
+            Ok(())
+        });
+    }
+}

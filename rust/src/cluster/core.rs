@@ -1,0 +1,375 @@
+//! The clock-agnostic stage machinery every driver runs on.
+//!
+//! [`StageCore`] holds one stage's variant/batch/replica state plus its
+//! busy slots and batcher; [`ClusterCore`] chains the stages, applies
+//! the §4.5 [`DropPolicy`] at batch formation, and books every outcome
+//! through [`Accounting`].  Time is a parameter — the discrete-event
+//! simulator feeds virtual timestamps, the live engine feeds wall-clock
+//! ones — so batching, dropping, reconfiguration and bookkeeping are
+//! bit-identical across drivers by construction.
+//!
+//! Rolling updates: [`ClusterCore::apply_config`] changes the formation
+//! parameters for FUTURE batches only.  Batches already formed keep the
+//! variant/batch captured in their [`FormedBatch`] (old-profile
+//! semantics), and a shrink leaves `busy > replicas` until those
+//! batches finish — no new work starts on the vanished slots.
+
+use crate::cluster::accounting::Accounting;
+use crate::cluster::dispatch::{batch_timeout, BatchDispatcher};
+use crate::cluster::drop_policy::DropPolicy;
+use crate::optimizer::ip::{PipelineConfig, StageConfig};
+use crate::queueing::Request;
+
+/// One stage's live state: active configuration + busy replica slots.
+#[derive(Debug)]
+pub struct StageCore {
+    pub dispatcher: BatchDispatcher,
+    pub variant_idx: usize,
+    pub variant_key: String,
+    pub batch: usize,
+    pub replicas: u32,
+    /// Replica slots currently serving a batch.
+    pub busy: u32,
+}
+
+impl StageCore {
+    pub fn new(sc: &StageConfig, timeout: f64) -> Self {
+        StageCore {
+            dispatcher: BatchDispatcher::new(sc.batch, timeout, sc.replicas as usize),
+            variant_idx: sc.variant_idx,
+            variant_key: sc.variant_key.clone(),
+            batch: sc.batch,
+            replicas: sc.replicas,
+            busy: 0,
+        }
+    }
+
+    /// Apply a new stage configuration (queued requests stay; in-flight
+    /// batches are untouched — rolling update).
+    pub fn apply(&mut self, sc: &StageConfig, timeout: f64) {
+        self.variant_idx = sc.variant_idx;
+        self.variant_key = sc.variant_key.clone();
+        self.batch = sc.batch;
+        self.replicas = sc.replicas;
+        self.dispatcher.set_batch(sc.batch, timeout);
+        self.dispatcher.set_replicas(sc.replicas as usize);
+    }
+
+    pub fn has_free_replica(&self) -> bool {
+        self.busy < self.replicas
+    }
+}
+
+/// A batch admitted for service, with the configuration captured at
+/// formation time (rolling-update semantics: later reconfigurations do
+/// not retouch it).
+#[derive(Debug, Clone)]
+pub struct FormedBatch {
+    /// Admitted requests (drop policy already applied), FIFO order.
+    pub requests: Vec<Request>,
+    /// Round-robin replica slot *label* for the batch (§3 release
+    /// order, for routing/telemetry).  Capacity itself is enforced by
+    /// [`StageCore`]'s busy/replicas counters, not by this label —
+    /// today's drivers treat replicas as anonymous slots.
+    pub replica: usize,
+    pub variant_idx: usize,
+    pub variant_key: String,
+    /// Configured batch size at formation (service latency / padding).
+    pub batch: usize,
+}
+
+/// Outcome of a formation attempt.
+#[derive(Debug)]
+pub enum FormOutcome {
+    /// All replica slots busy — retry when one frees.
+    Busy,
+    /// Nothing releasable; if a partial batch is pending, the time its
+    /// timeout fires.
+    Idle { next_timeout: Option<f64> },
+    /// A batch started service.
+    Formed(FormedBatch),
+}
+
+/// The shared cluster: per-stage cores + drop policy + accounting.
+#[derive(Debug)]
+pub struct ClusterCore {
+    pub stages: Vec<StageCore>,
+    pub drop_policy: DropPolicy,
+    pub accounting: Accounting,
+}
+
+impl ClusterCore {
+    /// Build from an initial configuration.  `lambda` shapes the batch
+    /// timeouts ([`batch_timeout`]); wall-clock drivers pass
+    /// `f64::INFINITY` for the bare 50 ms floor.
+    pub fn new(init: &PipelineConfig, lambda: f64, drop: DropPolicy) -> Self {
+        ClusterCore {
+            stages: init
+                .stages
+                .iter()
+                .map(|sc| StageCore::new(sc, batch_timeout(sc.batch, lambda)))
+                .collect(),
+            accounting: Accounting::new(drop.sla),
+            drop_policy: drop,
+        }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// A new request enters the pipeline at `now`.
+    pub fn ingest(&mut self, id: u64, now: f64) {
+        self.accounting.record_arrival(id, now);
+        self.stages[0]
+            .dispatcher
+            .push(Request { id, arrival: now, stage_arrival: now });
+    }
+
+    /// Forward a request that finished stage `stage - 1` into `stage`'s
+    /// queue at `now`.
+    pub fn forward(&mut self, stage: usize, mut req: Request, now: f64) {
+        req.stage_arrival = now;
+        self.stages[stage].dispatcher.push(req);
+    }
+
+    /// Try to start service on `stage` at `now`: forms a batch if a
+    /// replica slot is free and the batcher releases one, applying the
+    /// §4.5 drop policy (fully-dropped batches are consumed and the next
+    /// one is tried).  Claims a busy slot on success — the driver must
+    /// pair every `Formed` with one [`finish_service`](Self::finish_service).
+    pub fn try_form(&mut self, stage: usize, now: f64) -> FormOutcome {
+        loop {
+            let st = &mut self.stages[stage];
+            if !st.has_free_replica() {
+                return FormOutcome::Busy;
+            }
+            let Some((batch, replica)) = st.dispatcher.pop_batch(now) else {
+                return FormOutcome::Idle { next_timeout: st.dispatcher.next_timeout_at() };
+            };
+            let (admitted, dropped) = self.drop_policy.split(stage, now, batch);
+            for r in &dropped {
+                self.accounting.record_drop(r.id);
+            }
+            if admitted.is_empty() {
+                continue; // batch fully dropped; try to form another
+            }
+            let st = &mut self.stages[stage];
+            st.busy += 1;
+            return FormOutcome::Formed(FormedBatch {
+                requests: admitted,
+                replica,
+                variant_idx: st.variant_idx,
+                variant_key: st.variant_key.clone(),
+                batch: st.batch,
+            });
+        }
+    }
+
+    /// A replica slot of `stage` finished its batch.
+    pub fn finish_service(&mut self, stage: usize) {
+        let st = &mut self.stages[stage];
+        st.busy = st.busy.saturating_sub(1);
+    }
+
+    /// Record a request leaving the last stage at `now`.
+    pub fn complete(&mut self, id: u64, now: f64) {
+        self.accounting.record_completion(id, now);
+    }
+
+    /// Activate a staged configuration (see [`crate::cluster::reconfig`]).
+    pub fn apply_config(&mut self, cfg: &PipelineConfig, lambda: f64) {
+        for (st, sc) in self.stages.iter_mut().zip(&cfg.stages) {
+            st.apply(sc, batch_timeout(sc.batch, lambda));
+        }
+    }
+
+    /// Consume the core, yielding its accounting (end of run).
+    pub fn into_accounting(self) -> Accounting {
+        self.accounting
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, prop_assert};
+
+    fn config(stages: &[(usize, u32)]) -> PipelineConfig {
+        PipelineConfig {
+            stages: stages
+                .iter()
+                .enumerate()
+                .map(|(i, &(batch, replicas))| StageConfig {
+                    variant_idx: 0,
+                    variant_key: format!("v{i}"),
+                    batch,
+                    replicas,
+                    cost: 1.0,
+                    accuracy: 90.0,
+                    latency: 0.1,
+                })
+                .collect(),
+            pas: 90.0,
+            cost: 2.0,
+            batch_sum: stages.iter().map(|s| s.0).sum(),
+            objective: 0.0,
+            latency_e2e: 0.2,
+        }
+    }
+
+    #[test]
+    fn forms_batch_when_full_and_replica_free() {
+        let mut core =
+            ClusterCore::new(&config(&[(2, 1), (1, 1)]), 10.0, DropPolicy::new(1.0, true));
+        core.ingest(0, 0.0);
+        assert!(matches!(core.try_form(0, 0.0), FormOutcome::Idle { .. }));
+        core.ingest(1, 0.01);
+        let FormOutcome::Formed(fb) = core.try_form(0, 0.01) else {
+            panic!("expected a batch")
+        };
+        assert_eq!(fb.requests.len(), 2);
+        assert_eq!(fb.variant_key, "v0");
+        assert_eq!(fb.batch, 2);
+        // single replica now busy
+        core.ingest(2, 0.02);
+        core.ingest(3, 0.02);
+        assert!(matches!(core.try_form(0, 0.02), FormOutcome::Busy));
+        core.finish_service(0);
+        assert!(matches!(core.try_form(0, 0.02), FormOutcome::Formed(_)));
+    }
+
+    #[test]
+    fn fully_dropped_batch_is_consumed_and_next_tried() {
+        let mut core =
+            ClusterCore::new(&config(&[(1, 2), (1, 1)]), 10.0, DropPolicy::new(1.0, true));
+        core.ingest(0, 0.0);
+        core.ingest(1, 5.0);
+        // at t=5 the first request is 5s old (> 2×SLA) -> dropped; the
+        // second forms the next batch
+        let FormOutcome::Formed(fb) = core.try_form(0, 5.0) else {
+            panic!("expected a batch")
+        };
+        assert_eq!(fb.requests[0].id, 1);
+        assert!(core.accounting.is_dropped(0));
+        assert_eq!(core.accounting.dropped_count(), 1);
+    }
+
+    #[test]
+    fn rolling_shrink_keeps_inflight_until_done() {
+        let mut core =
+            ClusterCore::new(&config(&[(1, 2), (1, 1)]), 10.0, DropPolicy::new(1.0, true));
+        core.ingest(0, 0.0);
+        core.ingest(1, 0.0);
+        assert!(matches!(core.try_form(0, 0.0), FormOutcome::Formed(_)));
+        assert!(matches!(core.try_form(0, 0.0), FormOutcome::Formed(_)));
+        // shrink to 1 replica while 2 batches are in flight
+        core.apply_config(&config(&[(1, 1), (1, 1)]), 10.0);
+        core.ingest(2, 0.1);
+        assert!(matches!(core.try_form(0, 0.1), FormOutcome::Busy));
+        core.finish_service(0);
+        // still 1 busy >= 1 replica
+        assert!(matches!(core.try_form(0, 0.1), FormOutcome::Busy));
+        core.finish_service(0);
+        assert!(matches!(core.try_form(0, 0.1), FormOutcome::Formed(_)));
+    }
+
+    #[test]
+    fn reconfig_changes_future_batches_only() {
+        let mut core =
+            ClusterCore::new(&config(&[(1, 2), (1, 1)]), 10.0, DropPolicy::new(1.0, true));
+        core.ingest(0, 0.0);
+        let FormOutcome::Formed(before) = core.try_form(0, 0.0) else {
+            panic!()
+        };
+        let mut next = config(&[(4, 2), (1, 1)]);
+        next.stages[0].variant_key = "v0b".into();
+        next.stages[0].variant_idx = 1;
+        core.apply_config(&next, 10.0);
+        for id in 1..5 {
+            core.ingest(id, 0.1);
+        }
+        let FormOutcome::Formed(after) = core.try_form(0, 0.1) else {
+            panic!()
+        };
+        assert_eq!(before.variant_key, "v0");
+        assert_eq!(before.batch, 1);
+        assert_eq!(after.variant_key, "v0b");
+        assert_eq!(after.batch, 4);
+        assert_eq!(after.variant_idx, 1);
+    }
+
+    /// Property: under random driving, conservation holds — every
+    /// arrival is completed, dropped, or still in the system, never
+    /// more than one of them; busy slots never go negative and formed
+    /// batches respect the configured size.
+    #[test]
+    fn prop_core_conserves_requests() {
+        check("core conservation", 60, |g| {
+            let n_stages = g.usize(1, 4);
+            let mk = |g: &mut crate::util::quickcheck::Gen| {
+                let stages: Vec<(usize, u32)> =
+                    (0..n_stages).map(|_| (g.pow2(3), g.u64(1, 4) as u32)).collect();
+                config(&stages)
+            };
+            let cfg0 = mk(g);
+            let sla = g.f64(0.5, 3.0);
+            let mut core = ClusterCore::new(&cfg0, 5.0, DropPolicy::new(sla, g.bool()));
+            let mut now = 0.0;
+            let mut next_id = 0u64;
+            let mut in_service: Vec<(usize, Vec<Request>)> = Vec::new();
+            for _ in 0..g.usize(10, 120) {
+                now += g.f64(0.0, 0.4);
+                match g.usize(0, 4) {
+                    0 => {
+                        core.ingest(next_id, now);
+                        next_id += 1;
+                    }
+                    1 => {
+                        let stage = g.usize(0, n_stages);
+                        if let FormOutcome::Formed(fb) = core.try_form(stage, now) {
+                            prop_assert(
+                                fb.requests.len() <= fb.batch.max(1),
+                                "batch over size",
+                            )?;
+                            in_service.push((stage, fb.requests));
+                        }
+                    }
+                    2 => {
+                        if !in_service.is_empty() {
+                            let i = g.usize(0, in_service.len());
+                            let (stage, reqs) = in_service.swap_remove(i);
+                            core.finish_service(stage);
+                            if stage + 1 < n_stages {
+                                for r in reqs {
+                                    core.forward(stage + 1, r, now);
+                                }
+                            } else {
+                                for r in &reqs {
+                                    core.complete(r.id, now);
+                                }
+                            }
+                        }
+                    }
+                    _ => {
+                        let cfg = mk(g);
+                        core.apply_config(&cfg, 5.0);
+                    }
+                }
+                for st in &core.stages {
+                    prop_assert(st.busy as usize <= 64, "busy sane")?;
+                }
+            }
+            let queued: usize = core.stages.iter().map(|s| s.dispatcher.len()).sum();
+            let in_flight: usize = in_service.iter().map(|(_, r)| r.len()).sum();
+            let acc = core.into_accounting();
+            let terminal = acc.completed_count() + acc.dropped_count();
+            prop_assert(
+                terminal + queued + in_flight == next_id as usize,
+                "requests not conserved",
+            )?;
+            let m = acc.into_metrics("s".into(), "p".into(), "w".into());
+            prop_assert(m.requests.len() == next_id as usize, "record per arrival")
+        });
+    }
+}

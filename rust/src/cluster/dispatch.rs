@@ -1,0 +1,355 @@
+//! Batch formation + release: the central per-stage queue (§3) and the
+//! round-robin replica dispatcher, fused into [`BatchDispatcher`].
+//!
+//! §3: each pipeline stage has ONE centralized queue (deterministic
+//! queueing behaviour, analytically modelable); the queue forms batches
+//! of the configured size and round-robins them across the stage's
+//! replicas.  This module absorbed `CentralQueue` from `queueing.rs` —
+//! the analytic Eq. 7 delay model stays there; the executable machinery
+//! lives here, shared verbatim by the simulator, the live engine and
+//! the replay driver.
+
+use crate::queueing::{worst_case_delay, Request};
+
+/// Batch-formation timeout: 1.5× the Eq. 7 worst-case wait, floored to
+/// 50 ms — partial batches keep latency bounded under thin load.
+/// Wall-clock drivers pass `lambda = f64::INFINITY` to opt into the
+/// bare 50 ms floor (their λ lives in compressed wall time).
+pub fn batch_timeout(batch: usize, lambda: f64) -> f64 {
+    (1.5 * worst_case_delay(batch, lambda)).max(0.05)
+}
+
+/// Central FIFO queue + batcher for one stage.
+///
+/// A batch is released when `batch_size` requests are waiting, or when
+/// the oldest waiting request has been queued for `timeout` seconds
+/// (prevents starvation under low load; the paper's formulation assumes
+/// full batches — the timeout is the engineering escape hatch).
+#[derive(Debug)]
+pub struct CentralQueue {
+    pub batch_size: usize,
+    pub timeout: f64,
+    waiting: std::collections::VecDeque<Request>,
+}
+
+impl CentralQueue {
+    pub fn new(batch_size: usize, timeout: f64) -> Self {
+        Self { batch_size, timeout, waiting: Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.waiting.is_empty()
+    }
+
+    /// Reconfigure (model switch / batch change) — queued requests stay.
+    pub fn set_batch(&mut self, batch_size: usize, timeout: f64) {
+        self.batch_size = batch_size.max(1);
+        self.timeout = timeout;
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.waiting.push_back(req);
+    }
+
+    /// True if a full batch is ready.
+    pub fn full_batch_ready(&self) -> bool {
+        self.waiting.len() >= self.batch_size
+    }
+
+    /// True if the timeout has expired for the oldest request at `now`.
+    pub fn timed_out(&self, now: f64) -> bool {
+        self.waiting
+            .front()
+            .is_some_and(|r| now - r.stage_arrival >= self.timeout)
+    }
+
+    /// Absolute time at which the oldest waiting request times out.
+    pub fn next_timeout_at(&self) -> Option<f64> {
+        self.waiting.front().map(|r| r.stage_arrival + self.timeout)
+    }
+
+    /// Pop a batch if one is ready (full, or timed out at `now`).
+    /// Timed-out batches may be partial.
+    pub fn pop_batch(&mut self, now: f64) -> Option<Vec<Request>> {
+        if self.full_batch_ready() {
+            return Some(self.drain(self.batch_size));
+        }
+        if !self.waiting.is_empty() && self.timed_out(now) {
+            let n = self.waiting.len().min(self.batch_size);
+            return Some(self.drain(n));
+        }
+        None
+    }
+
+    /// Drain everything (used on reconfiguration drains / shutdown).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        self.waiting.drain(..).collect()
+    }
+
+    fn drain(&mut self, n: usize) -> Vec<Request> {
+        self.waiting.drain(..n).collect()
+    }
+}
+
+/// Round-robin replica dispatcher (§3: queues distribute batched
+/// requests across model replicas round-robin).
+#[derive(Debug, Clone)]
+pub struct RoundRobin {
+    n: usize,
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new(n: usize) -> Self {
+        Self { n: n.max(1), next: 0 }
+    }
+
+    pub fn resize(&mut self, n: usize) {
+        self.n = n.max(1);
+        self.next %= self.n;
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn pick(&mut self) -> usize {
+        let i = self.next;
+        self.next = (self.next + 1) % self.n;
+        i
+    }
+}
+
+/// One stage's batcher: central-queue formation + round-robin release.
+///
+/// Every driver (discrete-event, wall-clock, replay) forms batches
+/// through this type, so release rules live in exactly one place.
+#[derive(Debug)]
+pub struct BatchDispatcher {
+    queue: CentralQueue,
+    rr: RoundRobin,
+}
+
+impl BatchDispatcher {
+    pub fn new(batch_size: usize, timeout: f64, replicas: usize) -> Self {
+        BatchDispatcher {
+            queue: CentralQueue::new(batch_size, timeout),
+            rr: RoundRobin::new(replicas),
+        }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.queue.batch_size
+    }
+
+    /// Reconfigure the formation rule — queued requests stay, FIFO
+    /// order preserved.
+    pub fn set_batch(&mut self, batch_size: usize, timeout: f64) {
+        self.queue.set_batch(batch_size, timeout);
+    }
+
+    /// Resize the replica ring for round-robin release.
+    pub fn set_replicas(&mut self, replicas: usize) {
+        self.rr.resize(replicas);
+    }
+
+    /// Absolute time the oldest waiting request times out, if any.
+    pub fn next_timeout_at(&self) -> Option<f64> {
+        self.queue.next_timeout_at()
+    }
+
+    /// Pop a ready batch (full, or timed out at `now`) and assign it a
+    /// replica slot round-robin.
+    pub fn pop_batch(&mut self, now: f64) -> Option<(Vec<Request>, usize)> {
+        let batch = self.queue.pop_batch(now)?;
+        let replica = self.rr.pick();
+        Some((batch, replica))
+    }
+
+    /// Drain everything (shutdown).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        self.queue.drain_all()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, prop_assert};
+
+    fn req(id: u64, t: f64) -> Request {
+        Request { id, arrival: t, stage_arrival: t }
+    }
+
+    #[test]
+    fn full_batch_release() {
+        let mut q = CentralQueue::new(4, 10.0);
+        for i in 0..3 {
+            q.push(req(i, 0.0));
+            assert!(q.pop_batch(0.0).is_none());
+        }
+        q.push(req(3, 0.1));
+        let b = q.pop_batch(0.1).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0].id, 0, "FIFO order");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn timeout_releases_partial_batch() {
+        let mut q = CentralQueue::new(8, 0.5);
+        q.push(req(0, 1.0));
+        q.push(req(1, 1.1));
+        assert!(q.pop_batch(1.4).is_none());
+        let b = q.pop_batch(1.6).unwrap();
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn next_timeout_at_tracks_oldest() {
+        let mut q = CentralQueue::new(8, 0.5);
+        assert_eq!(q.next_timeout_at(), None);
+        q.push(req(0, 2.0));
+        q.push(req(1, 2.3));
+        assert_eq!(q.next_timeout_at(), Some(2.5));
+    }
+
+    #[test]
+    fn reconfigure_keeps_queued() {
+        let mut q = CentralQueue::new(8, 1.0);
+        q.push(req(0, 0.0));
+        q.push(req(1, 0.0));
+        q.set_batch(2, 1.0);
+        let b = q.pop_batch(0.0).unwrap();
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn excess_stays_queued() {
+        let mut q = CentralQueue::new(2, 1.0);
+        for i in 0..5 {
+            q.push(req(i, 0.0));
+        }
+        assert_eq!(q.pop_batch(0.0).unwrap().len(), 2);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut rr = RoundRobin::new(3);
+        assert_eq!(
+            (0..7).map(|_| rr.pick()).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1, 2, 0]
+        );
+        rr.resize(2);
+        let picks: Vec<usize> = (0..4).map(|_| rr.pick()).collect();
+        assert!(picks.iter().all(|&p| p < 2));
+    }
+
+    #[test]
+    fn dispatcher_round_robins_replicas() {
+        let mut d = BatchDispatcher::new(1, 1.0, 3);
+        let mut replicas = Vec::new();
+        for i in 0..6 {
+            d.push(req(i, 0.0));
+            let (b, r) = d.pop_batch(0.0).unwrap();
+            assert_eq!(b.len(), 1);
+            replicas.push(r);
+        }
+        assert_eq!(replicas, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn batch_timeout_floor_and_scaling() {
+        assert_eq!(batch_timeout(1, 10.0), 0.05);
+        // 1.5 * (8-1)/2 = 5.25
+        assert!((batch_timeout(8, 2.0) - 5.25).abs() < 1e-12);
+        // wall-clock drivers: λ = ∞ → bare floor
+        assert_eq!(batch_timeout(64, f64::INFINITY), 0.05);
+    }
+
+    /// Property: released batches never exceed the configured size,
+    /// even while `set_batch` reconfigures mid-stream.
+    #[test]
+    fn prop_batches_never_exceed_configured_size() {
+        check("batch size bound", 200, |g| {
+            let mut d = BatchDispatcher::new(g.pow2(6), 0.5, g.usize(1, 8));
+            let mut next_id = 0u64;
+            let mut now = 0.0;
+            for _ in 0..g.usize(1, 40) {
+                match g.usize(0, 3) {
+                    0 => {
+                        d.push(req(next_id, now));
+                        next_id += 1;
+                    }
+                    1 => {
+                        now += g.f64(0.0, 1.0);
+                        if let Some((b, _)) = d.pop_batch(now) {
+                            prop_assert(!b.is_empty(), "batch non-empty")?;
+                            prop_assert(
+                                b.len() <= d.batch_size(),
+                                "batch exceeds configured size",
+                            )?;
+                        }
+                    }
+                    _ => {
+                        d.set_batch(g.pow2(6), g.f64(0.01, 1.0));
+                        d.set_replicas(g.usize(1, 8));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: FIFO order is preserved across arbitrary `set_batch`
+    /// reconfigurations — ids come out in exactly the order they went
+    /// in, with nothing lost or duplicated.
+    #[test]
+    fn prop_queue_order_preserved_across_reconfig() {
+        check("queue order across set_batch", 200, |g| {
+            let mut d = BatchDispatcher::new(g.pow2(4), 0.2, 2);
+            let mut pushed = 0u64;
+            let mut popped: Vec<u64> = Vec::new();
+            let mut now = 0.0;
+            for _ in 0..g.usize(5, 60) {
+                match g.usize(0, 4) {
+                    0 | 1 => {
+                        d.push(req(pushed, now));
+                        pushed += 1;
+                    }
+                    2 => {
+                        now += g.f64(0.0, 0.6);
+                        while let Some((b, _)) = d.pop_batch(now) {
+                            popped.extend(b.iter().map(|r| r.id));
+                        }
+                    }
+                    _ => d.set_batch(g.pow2(4), g.f64(0.01, 0.5)),
+                }
+            }
+            popped.extend(d.drain_all().iter().map(|r| r.id));
+            let expect: Vec<u64> = (0..pushed).collect();
+            prop_assert(popped == expect, "ids out of order or lost")
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! §4.5 request dropping — the single home of the drop rule shared by
+//! every driver.
+//!
+//! A request is dropped at batch-formation time when its end-to-end age
+//! exceeds the SLA at a non-entry stage (it can no longer finish the
+//! remaining stages in time), or exceeds 2×SLA anywhere (hard ceiling:
+//! even entry-stage stragglers are shed rather than served uselessly).
+
+use crate::queueing::Request;
+
+/// The §4.5 drop rule.
+#[derive(Debug, Clone, Copy)]
+pub struct DropPolicy {
+    /// End-to-end SLA the ages are judged against, seconds.
+    pub sla: f64,
+    /// Disabled → nothing is ever dropped (ablation mode).
+    pub enabled: bool,
+}
+
+impl DropPolicy {
+    pub fn new(sla: f64, enabled: bool) -> Self {
+        DropPolicy { sla, enabled }
+    }
+
+    /// Should a request of end-to-end age `age` be dropped when a batch
+    /// forms at `stage`?
+    pub fn should_drop(&self, stage: usize, age: f64) -> bool {
+        self.enabled && ((stage > 0 && age > self.sla) || age > 2.0 * self.sla)
+    }
+
+    /// Partition a formed batch into (admitted, dropped) by age at
+    /// `now`, preserving order.
+    pub fn split(&self, stage: usize, now: f64, batch: Vec<Request>) -> (Vec<Request>, Vec<Request>) {
+        let mut admitted = Vec::with_capacity(batch.len());
+        let mut dropped = Vec::new();
+        for req in batch {
+            if self.should_drop(stage, now - req.arrival) {
+                dropped.push(req);
+            } else {
+                admitted.push(req);
+            }
+        }
+        (admitted, dropped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, prop_assert};
+
+    fn req(id: u64, arrival: f64) -> Request {
+        Request { id, arrival, stage_arrival: arrival }
+    }
+
+    #[test]
+    fn entry_stage_tolerates_up_to_2x_sla() {
+        let p = DropPolicy::new(1.0, true);
+        assert!(!p.should_drop(0, 1.5));
+        assert!(p.should_drop(0, 2.5));
+        assert!(p.should_drop(1, 1.5));
+        assert!(!p.should_drop(1, 0.9));
+    }
+
+    #[test]
+    fn disabled_never_drops() {
+        let p = DropPolicy::new(1.0, false);
+        assert!(!p.should_drop(1, 100.0));
+        let (kept, dropped) = p.split(1, 100.0, vec![req(0, 0.0), req(1, 0.0)]);
+        assert_eq!(kept.len(), 2);
+        assert!(dropped.is_empty());
+    }
+
+    #[test]
+    fn split_partitions_in_order() {
+        let p = DropPolicy::new(1.0, true);
+        let batch = vec![req(0, 9.5), req(1, 5.0), req(2, 9.8)];
+        let (kept, dropped) = p.split(1, 10.0, batch);
+        assert_eq!(kept.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(dropped.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    /// Property: the rule is monotone in age — if age `a` is dropped at
+    /// a stage, every larger age is dropped there too.
+    #[test]
+    fn prop_drop_monotone_in_age() {
+        check("drop monotone in age", 300, |g| {
+            let p = DropPolicy::new(g.f64(0.1, 10.0), true);
+            let stage = g.usize(0, 4);
+            let a = g.f64(0.0, 30.0);
+            let b = a + g.f64(0.0, 30.0);
+            prop_assert(
+                !p.should_drop(stage, a) || p.should_drop(stage, b),
+                "larger age survived where smaller was dropped",
+            )
+        });
+    }
+
+    /// Property: entry stage is never stricter than later stages, and
+    /// `split` is an order-preserving partition (nothing lost, nothing
+    /// duplicated).
+    #[test]
+    fn prop_split_is_partition() {
+        check("split partitions batch", 300, |g| {
+            let p = DropPolicy::new(g.f64(0.1, 5.0), g.bool());
+            let now = g.f64(10.0, 20.0);
+            let stage = g.usize(0, 3);
+            let n = g.usize(1, 20);
+            let batch: Vec<Request> =
+                (0..n as u64).map(|i| req(i, now - g.f64(0.0, 15.0))).collect();
+            let (kept, dropped) = p.split(stage, now, batch);
+            prop_assert(kept.len() + dropped.len() == n, "sizes don't sum")?;
+            let mut ids: Vec<u64> =
+                kept.iter().chain(dropped.iter()).map(|r| r.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            prop_assert(ids.len() == n, "ids lost or duplicated")?;
+            // order preserved within each side
+            prop_assert(
+                kept.windows(2).all(|w| w[0].id < w[1].id)
+                    && dropped.windows(2).all(|w| w[0].id < w[1].id),
+                "order not preserved",
+            )?;
+            // entry stage never stricter: anything stage 0 drops, stage 1
+            // drops as well
+            for r in &dropped {
+                if stage == 0 {
+                    prop_assert(
+                        p.should_drop(1, now - r.arrival),
+                        "stage 0 stricter than stage 1",
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,104 @@
+//! Rolling reconfiguration: apply-delay staging of adapter decisions
+//! (§5.3's ~8 s adaptation process), shared by every driver.
+//!
+//! A decision made at `t` becomes active at `t + apply_delay`; until
+//! then the old configuration keeps serving.  Batches in flight when
+//! the switch lands finish under the profile they started with (the
+//! drivers schedule/execute service with the parameters captured at
+//! batch formation) — the rolling-update semantics the paper's
+//! Kubernetes deployment exhibits.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::adapter::Decision;
+
+/// One staged decision and its activation time.
+#[derive(Debug, Clone)]
+pub struct Staged {
+    pub decision: Decision,
+    pub at: f64,
+}
+
+/// FIFO stager for decided-but-not-yet-active configurations.
+#[derive(Debug)]
+pub struct Reconfig {
+    pub apply_delay: f64,
+    pending: VecDeque<Staged>,
+}
+
+impl Reconfig {
+    pub fn new(apply_delay: f64) -> Self {
+        Reconfig { apply_delay: apply_delay.max(0.0), pending: VecDeque::new() }
+    }
+
+    /// Stage `decision` at time `now`; returns its activation time.
+    pub fn stage(&mut self, now: f64, decision: Decision) -> f64 {
+        let at = now + self.apply_delay;
+        self.pending.push_back(Staged { decision, at });
+        at
+    }
+
+    /// Pop the oldest staged decision whose activation time has come.
+    pub fn pop_due(&mut self, now: f64) -> Option<Staged> {
+        if self.pending.front().is_some_and(|s| s.at <= now + 1e-9) {
+            self.pending.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Activation time of the next pending decision, if any.
+    pub fn next_due(&self) -> Option<f64> {
+        self.pending.front().map(|s| s.at)
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::ip::PipelineConfig;
+
+    fn decision(pas: f64) -> Decision {
+        Decision {
+            config: PipelineConfig {
+                stages: Vec::new(),
+                pas,
+                cost: 1.0,
+                batch_sum: 0,
+                objective: 0.0,
+                latency_e2e: 0.0,
+            },
+            lambda_predicted: 10.0,
+            decision_time: 0.0,
+            fallback: false,
+        }
+    }
+
+    #[test]
+    fn applies_after_delay_in_fifo_order() {
+        let mut r = Reconfig::new(8.0);
+        assert_eq!(r.stage(10.0, decision(1.0)), 18.0);
+        assert_eq!(r.stage(20.0, decision(2.0)), 28.0);
+        assert_eq!(r.pending_len(), 2);
+        assert!(r.pop_due(17.9).is_none());
+        let first = r.pop_due(18.0).unwrap();
+        assert_eq!(first.decision.config.pas, 1.0);
+        assert!(r.pop_due(18.0).is_none(), "second not due yet");
+        assert_eq!(r.next_due(), Some(28.0));
+        let second = r.pop_due(30.0).unwrap();
+        assert_eq!(second.decision.config.pas, 2.0);
+        assert_eq!(r.pending_len(), 0);
+    }
+
+    #[test]
+    fn zero_delay_is_immediate() {
+        let mut r = Reconfig::new(0.0);
+        let at = r.stage(5.0, decision(1.0));
+        assert_eq!(at, 5.0);
+        assert!(r.pop_due(5.0).is_some());
+    }
+}

@@ -11,6 +11,7 @@
 //! ("the three systems compared benefit from the LSTM predictor").
 
 use crate::baselines::{fa2, rim};
+use crate::cluster::reconfig::Reconfig;
 use crate::models::accuracy::AccuracyMetric;
 use crate::models::pipelines::PipelineSpec;
 use crate::optimizer::ip::{self, PipelineConfig, Problem};
@@ -92,6 +93,13 @@ impl Adapter {
         predictor: Box<dyn Predictor + Send>,
     ) -> Self {
         Adapter { spec, profiles, policy, config, predictor }
+    }
+
+    /// The reconfiguration stager matching this adapter's apply delay.
+    /// Drivers activate decisions only through the returned
+    /// [`Reconfig`], so apply-delay semantics live in one place.
+    pub fn reconfig(&self) -> Reconfig {
+        Reconfig::new(self.config.apply_delay)
     }
 
     /// Produce the next configuration from the observed load history.

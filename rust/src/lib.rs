@@ -9,9 +9,9 @@
 //!   count* per pipeline stage by solving an Integer Program
 //!   (maximize `α·PAS − β·Σ nR − δ·Σ b` under latency/throughput
 //!   constraints), plus every substrate it needs: profiler, queueing,
-//!   discrete-event cluster simulator, live serving engine, workload
-//!   generation, predictors, baselines (FA2, RIM), metrics and report
-//!   harnesses for every table/figure in the paper.
+//!   the shared cluster core with its simulator / live / replay
+//!   drivers, workload generation, predictors, baselines (FA2, RIM),
+//!   metrics and report harnesses for every table/figure in the paper.
 //! * **L2 (python/compile, build-time only)** — JAX compute graphs for
 //!   29 synthetic model variants and the LSTM load predictor, lowered
 //!   once to HLO text by `make artifacts`.
@@ -19,8 +19,29 @@
 //!   fused LSTM cell) that every L2 graph bottoms out in.
 //!
 //! Python is never on the request path: the [`runtime`] module loads the
-//! HLO artifacts through the PJRT C API (`xla` crate) and serves them
-//! from Rust threads.
+//! HLO artifacts through the PJRT C API (stubbed offline — see
+//! `runtime::xla_stub`) and serves them from Rust threads.
+//!
+//! ## The driver/core split
+//!
+//! IPA's evaluation method only works if the simulator is a faithful
+//! twin of the serving cluster, so the serving machinery is factored
+//! into one clock-agnostic core with thin drivers on top:
+//!
+//! * [`cluster`] — **the core**: per-stage state ([`cluster::core`]),
+//!   central batching + round-robin release ([`cluster::dispatch`]),
+//!   §4.5 dropping ([`cluster::drop_policy`]), apply-delay
+//!   reconfiguration ([`cluster::reconfig`]) and request/interval
+//!   accounting ([`cluster::accounting`]).  No clocks, no threads.
+//! * **drivers** — [`simulator::sim`] feeds the core virtual time from
+//!   a discrete-event queue; [`serving::engine`] feeds it wall-clock
+//!   time from worker threads (real PJRT execution or a synthetic
+//!   profile-sleeper); [`simulator::replay`] re-runs a recorded
+//!   decision schedule through the identical loop.
+//!
+//! Every behavioral rule — batch release, drop, rolling reconfig,
+//! bookkeeping — exists exactly once, and `tests/cluster_parity.rs`
+//! pins the drivers to each other.
 //!
 //! Start with [`coordinator::adapter::Adapter`] (the control loop),
 //! [`optimizer::ip::solve`] (the IP), and [`simulator::sim::Simulation`]
@@ -28,8 +49,9 @@
 
 pub mod util {
     //! Self-contained substrates (the offline build has no serde / clap /
-    //! criterion / proptest / rand — we implement what we need).
+    //! criterion / proptest / rand / anyhow — we implement what we need).
     pub mod cli;
+    pub mod error;
     pub mod json;
     pub mod log;
     pub mod quickcheck;
@@ -57,6 +79,21 @@ pub mod profiler {
 
 pub mod queueing;
 
+pub mod cluster {
+    //! The clock-agnostic cluster core shared by every driver (see the
+    //! crate-level "driver/core split"): stage state, batch formation,
+    //! §4.5 dropping, rolling reconfiguration, and accounting.  The
+    //! simulator, the live engine and the replay driver are thin clocks
+    //! over this module — a new driver (deterministic replay landed
+    //! this way; multi-pipeline sharding is next) is one file, not a
+    //! fork of the stack.
+    pub mod accounting;
+    pub mod core;
+    pub mod dispatch;
+    pub mod drop_policy;
+    pub mod reconfig;
+}
+
 pub mod optimizer {
     //! §4.3/4.4: the IP formulation and the exact branch-and-bound
     //! solver (Gurobi substitute), plus a brute-force oracle.
@@ -83,15 +120,18 @@ pub mod workload {
 pub mod predictor;
 
 pub mod simulator {
-    //! Discrete-event cluster simulator: central per-stage queues,
-    //! batch dispatch, replica service, §4.5 dropping, reconfiguration
-    //! transitions — the Kubernetes-cluster substitute.
+    //! Virtual-time drivers over the [`crate::cluster`] core: the
+    //! deterministic event queue ([`events`]), the adapter-driven
+    //! discrete-event simulator ([`sim`] — the Kubernetes-cluster
+    //! substitute) and the decision-log replay driver ([`replay`]).
     pub mod events;
+    pub mod replay;
     pub mod sim;
 }
 
 pub mod coordinator {
-    //! §3: the adapter loop — monitor → predict → optimize → apply.
+    //! §3: the adapter loop — monitor → predict → optimize → apply
+    //! (application is staged through [`crate::cluster::reconfig`]).
     pub mod adapter;
     pub mod monitoring;
 }
@@ -99,16 +139,20 @@ pub mod coordinator {
 pub mod runtime {
     //! PJRT runtime: manifest, artifact loading, executor pool, and the
     //! deterministic weight generator (twin of python model.make_params).
+    //! `xla_stub` stands in for the real PJRT bindings offline.
     pub mod engine;
     pub mod manifest;
     pub mod pool;
     pub mod weights;
+    pub mod xla_stub;
 }
 
 pub mod serving {
-    //! Live serving engine: thread-per-replica execution of the real
-    //! HLO artifacts behind central batching queues, with the adapter
-    //! reconfiguring it on a live clock.
+    //! The wall-clock driver over the [`crate::cluster`] core:
+    //! thread-per-replica-slot workers behind the shared core, a
+    //! pluggable [`engine::BatchExecutor`] (real PJRT artifacts or a
+    //! synthetic profile-sleeper), and the adapter reconfiguring it on
+    //! a live clock.
     pub mod engine;
     pub mod loadgen;
 }

@@ -89,6 +89,17 @@ impl RunMetrics {
         self.requests.iter().filter(|r| r.dropped()).count() as f64 / self.requests.len() as f64
     }
 
+    /// Requests that completed (the parity tests compare these counts
+    /// across drivers).
+    pub fn completed_count(&self) -> usize {
+        self.requests.iter().filter(|r| r.completion.is_some()).count()
+    }
+
+    /// Requests that never completed (§4.5 drops + in-flight at horizon).
+    pub fn dropped_count(&self) -> usize {
+        self.requests.iter().filter(|r| r.dropped()).count()
+    }
+
     /// Time-average PAS across intervals.
     pub fn avg_pas(&self) -> f64 {
         stats::mean(&self.intervals.iter().map(|i| i.pas).collect::<Vec<_>>())
@@ -163,6 +174,8 @@ mod tests {
         assert!((m.sla_attainment() - 2.0 / 3.0).abs() < 1e-9);
         assert!((m.violation_rate() - 0.5).abs() < 1e-9);
         assert!((m.drop_rate() - 0.25).abs() < 1e-9);
+        assert_eq!(m.completed_count(), 3);
+        assert_eq!(m.dropped_count(), 1);
     }
 
     #[test]

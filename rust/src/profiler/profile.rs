@@ -34,6 +34,11 @@ impl LatencyProfile {
             .max_by(|&a, &b| self.throughput(a).partial_cmp(&self.throughput(b)).unwrap())
             .unwrap()
     }
+
+    /// Uniformly time-scaled copy: `l'(b) = s · l(b)`.
+    pub fn scaled(&self, s: f64) -> LatencyProfile {
+        LatencyProfile::new([self.coef[0] * s, self.coef[1] * s, self.coef[2] * s])
+    }
 }
 
 /// Profile of one variant in one pipeline stage: the latency model plus
@@ -80,6 +85,31 @@ impl PipelineProfiles {
     pub fn sla_e2e(&self) -> f64 {
         self.stages.iter().map(|s| s.stage_sla()).sum()
     }
+
+    /// Uniformly time-scaled copy of every variant's latency model —
+    /// used to run paper-scale (seconds) profiles on a compressed wall
+    /// clock (the λ/latency/SLA domain scales consistently, so solver
+    /// decisions are preserved).
+    pub fn scaled(&self, s: f64) -> PipelineProfiles {
+        PipelineProfiles {
+            pipeline: self.pipeline.clone(),
+            stages: self
+                .stages
+                .iter()
+                .map(|st| StageProfile {
+                    stage_type: st.stage_type,
+                    variants: st
+                        .variants
+                        .iter()
+                        .map(|vp| VariantProfile {
+                            variant: vp.variant,
+                            latency: vp.latency.scaled(s),
+                        })
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -116,5 +146,16 @@ mod tests {
     fn latency_floor() {
         let p = LatencyProfile::new([0.0, 0.0, -5.0]);
         assert!(p.latency(1) > 0.0);
+    }
+
+    #[test]
+    fn scaling_is_uniform() {
+        let p = LatencyProfile::new([0.004, 0.6, 0.35]);
+        let s = p.scaled(0.01);
+        for &b in &BATCH_SIZES {
+            assert!((s.latency(b) - 0.01 * p.latency(b)).abs() < 1e-12);
+        }
+        // throughput scales inversely; the optimal batch is unchanged
+        assert_eq!(p.best_batch(), s.best_batch());
     }
 }

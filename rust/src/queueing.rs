@@ -1,10 +1,12 @@
-//! Queueing: the Eq. 7 worst-case delay model and the central per-stage
-//! batcher used by both the simulator and the live engine.
+//! Queueing: the Eq. 7 worst-case delay model and the [`Request`] type
+//! flowing through the pipeline.
 //!
 //! §3: each pipeline stage has ONE centralized queue (deterministic
-//! queueing behaviour, analytically modelable); the queue forms batches
-//! of the configured size and round-robins them across the stage's
-//! replicas.
+//! queueing behaviour, analytically modelable).  This module holds the
+//! *analytic* side the optimizer plans with; the *executable* batcher
+//! that used to live here ([`crate::cluster::dispatch::CentralQueue`])
+//! moved into the shared cluster core so the simulator, the live engine
+//! and the replay driver run the exact same machinery.
 
 /// Eq. 7: worst-case queueing delay at batch size `b` under arrival rate
 /// `λ` — the first request of a batch waits for `b-1` more arrivals.
@@ -15,7 +17,7 @@ pub fn worst_case_delay(batch: usize, lambda: f64) -> f64 {
     (batch as f64 - 1.0) / lambda.max(1e-9)
 }
 
-/// A request flowing through the pipeline (simulator + live engine).
+/// A request flowing through the pipeline (all drivers).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     pub id: u64,
@@ -25,122 +27,9 @@ pub struct Request {
     pub stage_arrival: f64,
 }
 
-/// Central FIFO queue + batcher for one stage.
-///
-/// A batch is released when `batch_size` requests are waiting, or when
-/// the oldest waiting request has been queued for `timeout` seconds
-/// (prevents starvation under low load; the paper's formulation assumes
-/// full batches — the timeout is the engineering escape hatch).
-#[derive(Debug)]
-pub struct CentralQueue {
-    pub batch_size: usize,
-    pub timeout: f64,
-    waiting: std::collections::VecDeque<Request>,
-}
-
-impl CentralQueue {
-    pub fn new(batch_size: usize, timeout: f64) -> Self {
-        Self { batch_size, timeout, waiting: Default::default() }
-    }
-
-    pub fn len(&self) -> usize {
-        self.waiting.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.waiting.is_empty()
-    }
-
-    /// Reconfigure (model switch / batch change) — queued requests stay.
-    pub fn set_batch(&mut self, batch_size: usize, timeout: f64) {
-        self.batch_size = batch_size.max(1);
-        self.timeout = timeout;
-    }
-
-    pub fn push(&mut self, req: Request) {
-        self.waiting.push_back(req);
-    }
-
-    /// True if a full batch is ready.
-    pub fn full_batch_ready(&self) -> bool {
-        self.waiting.len() >= self.batch_size
-    }
-
-    /// True if the timeout has expired for the oldest request at `now`.
-    pub fn timed_out(&self, now: f64) -> bool {
-        self.waiting
-            .front()
-            .is_some_and(|r| now - r.stage_arrival >= self.timeout)
-    }
-
-    /// Absolute time at which the oldest waiting request times out.
-    pub fn next_timeout_at(&self) -> Option<f64> {
-        self.waiting.front().map(|r| r.stage_arrival + self.timeout)
-    }
-
-    /// Pop a batch if one is ready (full, or timed out at `now`).
-    /// Timed-out batches may be partial.
-    pub fn pop_batch(&mut self, now: f64) -> Option<Vec<Request>> {
-        if self.full_batch_ready() {
-            return Some(self.drain(self.batch_size));
-        }
-        if !self.waiting.is_empty() && self.timed_out(now) {
-            let n = self.waiting.len().min(self.batch_size);
-            return Some(self.drain(n));
-        }
-        None
-    }
-
-    /// Drain everything (used on reconfiguration drains / shutdown).
-    pub fn drain_all(&mut self) -> Vec<Request> {
-        self.waiting.drain(..).collect()
-    }
-
-    fn drain(&mut self, n: usize) -> Vec<Request> {
-        self.waiting.drain(..n).collect()
-    }
-}
-
-/// Round-robin replica dispatcher (§3: queues distribute batched
-/// requests across model replicas round-robin).
-#[derive(Debug, Clone)]
-pub struct RoundRobin {
-    n: usize,
-    next: usize,
-}
-
-impl RoundRobin {
-    pub fn new(n: usize) -> Self {
-        Self { n: n.max(1), next: 0 }
-    }
-
-    pub fn resize(&mut self, n: usize) {
-        self.n = n.max(1);
-        self.next %= self.n;
-    }
-
-    pub fn len(&self) -> usize {
-        self.n
-    }
-
-    pub fn is_empty(&self) -> bool {
-        false
-    }
-
-    pub fn pick(&mut self) -> usize {
-        let i = self.next;
-        self.next = (self.next + 1) % self.n;
-        i
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn req(id: u64, t: f64) -> Request {
-        Request { id, arrival: t, stage_arrival: t }
-    }
 
     #[test]
     fn eq7_worst_case() {
@@ -150,67 +39,9 @@ mod tests {
     }
 
     #[test]
-    fn full_batch_release() {
-        let mut q = CentralQueue::new(4, 10.0);
-        for i in 0..3 {
-            q.push(req(i, 0.0));
-            assert!(q.pop_batch(0.0).is_none());
+    fn batch_one_never_waits() {
+        for lambda in [0.1, 1.0, 100.0] {
+            assert_eq!(worst_case_delay(1, lambda), 0.0);
         }
-        q.push(req(3, 0.1));
-        let b = q.pop_batch(0.1).unwrap();
-        assert_eq!(b.len(), 4);
-        assert_eq!(b[0].id, 0, "FIFO order");
-        assert!(q.is_empty());
-    }
-
-    #[test]
-    fn timeout_releases_partial_batch() {
-        let mut q = CentralQueue::new(8, 0.5);
-        q.push(req(0, 1.0));
-        q.push(req(1, 1.1));
-        assert!(q.pop_batch(1.4).is_none());
-        let b = q.pop_batch(1.6).unwrap();
-        assert_eq!(b.len(), 2);
-    }
-
-    #[test]
-    fn next_timeout_at_tracks_oldest() {
-        let mut q = CentralQueue::new(8, 0.5);
-        assert_eq!(q.next_timeout_at(), None);
-        q.push(req(0, 2.0));
-        q.push(req(1, 2.3));
-        assert_eq!(q.next_timeout_at(), Some(2.5));
-    }
-
-    #[test]
-    fn reconfigure_keeps_queued() {
-        let mut q = CentralQueue::new(8, 1.0);
-        q.push(req(0, 0.0));
-        q.push(req(1, 0.0));
-        q.set_batch(2, 1.0);
-        let b = q.pop_batch(0.0).unwrap();
-        assert_eq!(b.len(), 2);
-    }
-
-    #[test]
-    fn excess_stays_queued() {
-        let mut q = CentralQueue::new(2, 1.0);
-        for i in 0..5 {
-            q.push(req(i, 0.0));
-        }
-        assert_eq!(q.pop_batch(0.0).unwrap().len(), 2);
-        assert_eq!(q.len(), 3);
-    }
-
-    #[test]
-    fn round_robin_cycles() {
-        let mut rr = RoundRobin::new(3);
-        assert_eq!(
-            (0..7).map(|_| rr.pick()).collect::<Vec<_>>(),
-            vec![0, 1, 2, 0, 1, 2, 0]
-        );
-        rr.resize(2);
-        let picks: Vec<usize> = (0..4).map(|_| rr.pick()).collect();
-        assert!(picks.iter().all(|&p| p < 2));
     }
 }

@@ -13,9 +13,11 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 use super::manifest::Manifest;
+use super::xla_stub as xla;
 use super::weights::{self, VariantWeights};
 
 /// A compiled artifact with its resident weight buffers.
@@ -172,8 +174,8 @@ impl Engine {
     }
 }
 
-/// xla::Error is not std::error::Error-compatible with anyhow directly;
-/// stringify.
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
+/// xla::Error is not std::error::Error-compatible with our error type
+/// directly; stringify.
+fn to_anyhow(e: xla::Error) -> crate::util::error::Error {
     anyhow!("{e:?}")
 }

@@ -4,8 +4,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 /// One lowered model-variant graph (a `variants/<key>_b<batch>.hlo.txt`).

@@ -9,7 +9,8 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use super::engine::Engine;
 

@@ -1,33 +1,41 @@
-//! Live serving engine: the paper's Kubernetes deployment, in-process.
+//! Live serving engine: the paper's Kubernetes deployment, in-process —
+//! a *wall-clock driver* over the shared [`crate::cluster`] core.
 //!
-//! Real HLO artifacts execute on the PJRT executor pool behind central
-//! per-stage batching queues; replica slots are worker threads gated by
-//! an atomic replica gauge; the adapter thread reconfigures variants /
-//! batch sizes / replica counts on a live clock with the LSTM predictor
-//! running through PJRT as well.  Python is nowhere on this path.
+//! This file owns only the clock and the threads: worker threads claim
+//! replica slots and batches from a [`ClusterCore`] behind a mutex, an
+//! adapter thread stages decisions through [`Reconfig`], and a
+//! [`BatchExecutor`] runs each formed batch.  Batch formation, §4.5
+//! dropping, rolling reconfiguration and accounting are the exact same
+//! machinery the discrete-event simulator drives with virtual time.
 //!
-//! Latency profiles are *measured at startup* by profiling the actual
-//! artifacts (batch ∈ {1,4,16,64}, quadratic fit — the §4.2 method),
-//! and the per-stage SLAs follow the Swayam rule `SLA_s = 5 × avg(b=1)`
-//! — so the live system derives its own millisecond-scale SLA domain
-//! from real measurements (DESIGN.md "scaled-time convention").
+//! Two executors plug in:
+//! * [`PoolExecutor`] — real HLO artifacts on the PJRT executor pool
+//!   (the production path; latency profiles are *measured at startup*
+//!   by profiling the actual artifacts, batch ∈ {1,4,16,64}, quadratic
+//!   fit — the §4.2 method, with per-stage SLAs from the Swayam rule
+//!   `SLA_s = 5 × avg(b=1)`).
+//! * [`SyntheticExecutor`] — sleeps the profiled latency instead of
+//!   executing; lets the full threaded engine run without artifacts and
+//!   anchors the sim/live parity test.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
+use crate::cluster::accounting::Accounting;
+use crate::cluster::core::{ClusterCore, FormOutcome, FormedBatch};
+use crate::cluster::drop_policy::DropPolicy;
 use crate::coordinator::adapter::{Adapter, AdapterConfig, Policy};
 use crate::coordinator::monitoring::Monitor;
-use crate::metrics::{IntervalRecord, RequestRecord, RunMetrics};
+use crate::metrics::RunMetrics;
 use crate::models::pipelines::PipelineSpec;
 use crate::predictor::{LstmPredictor, Predictor, ReactivePredictor};
 use crate::profiler::fit::ProfileSamples;
-use crate::profiler::profile::{PipelineProfiles, StageProfile, VariantProfile};
-use crate::queueing::{CentralQueue, Request};
+use crate::profiler::profile::{LatencyProfile, PipelineProfiles, StageProfile, VariantProfile};
 use crate::runtime::pool::ExecutorPool;
 use crate::serving::loadgen::{self, LoadGenConfig};
+use crate::util::error::Result;
 use crate::workload::trace::Trace;
 
 /// Live-engine settings.
@@ -36,7 +44,8 @@ pub struct ServeConfig {
     pub artifact_dir: String,
     /// Executor threads (PJRT engines).
     pub executors: usize,
-    /// Worker (replica-slot) threads per stage.
+    /// Worker (replica-slot) threads per stage; also the adapter's
+    /// horizontal scaling cap.
     pub max_workers: usize,
     /// Adaptation interval, wall seconds.
     pub interval: f64,
@@ -98,7 +107,7 @@ pub fn measure_profiles(
             }
             let latency = samples
                 .fit()
-                .ok_or_else(|| anyhow::anyhow!("profile fit failed for {key}"))?;
+                .ok_or_else(|| crate::anyhow!("profile fit failed for {key}"))?;
             variants.push(VariantProfile { variant: v, latency });
         }
         stages.push(StageProfile { stage_type, variants });
@@ -106,22 +115,81 @@ pub fn measure_profiles(
     Ok(PipelineProfiles { pipeline: spec.name.to_string(), stages })
 }
 
-struct StageShared {
-    queue: Mutex<CentralQueue>,
-    cv: Condvar,
-    /// Active variant key (guarded for reads by workers).
-    variant: Mutex<String>,
-    batch: AtomicUsize,
-    replicas: AtomicUsize,
-    hidden: AtomicUsize,
+/// What actually runs a formed batch — the only live-engine seam that
+/// differs between production and test drivers.
+///
+/// Everything execution needs (input width included) derives from the
+/// `variant_key` pinned in the [`FormedBatch`] at formation time, so a
+/// reconfiguration landing between formation and execution can never
+/// pair one variant's artifact with another's input shape.
+pub trait BatchExecutor: Send + Sync {
+    /// Execute one padded batch of size `batch` on `variant_key`.
+    fn execute(&self, variant_key: &str, batch: usize) -> Result<()>;
+
+    /// Pre-compile / warm (key, batch); best-effort.
+    fn warm(&self, _variant_key: &str, _batch: usize) {}
 }
 
+/// Real PJRT execution through the executor pool.
+pub struct PoolExecutor(pub Arc<ExecutorPool>);
+
+impl BatchExecutor for PoolExecutor {
+    fn execute(&self, variant_key: &str, batch: usize) -> Result<()> {
+        let hidden = crate::models::registry::by_key(variant_key)
+            .ok_or_else(|| crate::anyhow!("unknown variant {variant_key}"))?
+            .hidden();
+        // pad to the configured batch (artifacts have static shapes)
+        let input = vec![0.1f32; batch * hidden];
+        self.0.execute(variant_key, batch, input).map(|_| ())
+    }
+
+    fn warm(&self, variant_key: &str, batch: usize) {
+        let _ = self.0.warm(variant_key, batch);
+    }
+}
+
+/// Profile-driven executor: sleeps `l(batch) × time_scale` instead of
+/// executing — deterministic service times for parity tests and
+/// artifact-free demos.
+pub struct SyntheticExecutor {
+    latency: HashMap<String, LatencyProfile>,
+    pub time_scale: f64,
+}
+
+impl SyntheticExecutor {
+    pub fn from_profiles(profiles: &PipelineProfiles, time_scale: f64) -> Self {
+        let mut latency = HashMap::new();
+        for st in &profiles.stages {
+            for vp in &st.variants {
+                latency.insert(vp.variant.key(), vp.latency);
+            }
+        }
+        SyntheticExecutor { latency, time_scale }
+    }
+}
+
+impl BatchExecutor for SyntheticExecutor {
+    fn execute(&self, variant_key: &str, batch: usize) -> Result<()> {
+        let lp = self
+            .latency
+            .get(variant_key)
+            .ok_or_else(|| crate::anyhow!("no profile for {variant_key}"))?;
+        let dt = (lp.latency(batch) * self.time_scale).max(0.0);
+        if dt > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(dt));
+        }
+        Ok(())
+    }
+}
+
+/// Shared state between the load generator, workers and the adapter
+/// thread: the cluster core behind one lock, plus live-runtime details
+/// (input widths, monitor, clock) that stay out of the clock-agnostic
+/// core.
 struct Shared {
-    stages: Vec<StageShared>,
+    core: Mutex<ClusterCore>,
+    cv: Condvar,
     monitor: Mutex<Monitor>,
-    completed: Mutex<Vec<RequestRecord>>,
-    dropped: Mutex<Vec<u64>>,
-    sla: f64,
     stop: AtomicBool,
     start: Instant,
 }
@@ -130,19 +198,36 @@ impl Shared {
     fn now(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
+
+    /// Sleep `secs`, waking early on `stop`; returns false if stopped.
+    fn sleep_interruptible(&self, secs: f64) -> bool {
+        let deadline = Instant::now() + Duration::from_secs_f64(secs.max(0.0));
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return true;
+            }
+            let remaining = deadline - now;
+            std::thread::sleep(remaining.min(Duration::from_millis(50)));
+        }
+    }
 }
 
 /// Outcome of a live run.
 pub struct ServeReport {
     pub metrics: RunMetrics,
-    /// Measured profiles used for decisions.
+    /// Profiles used for decisions.
     pub profiles: PipelineProfiles,
     /// Live-domain end-to-end SLA, seconds.
     pub sla: f64,
 }
 
 /// Serve `trace` through the live engine under `policy`; returns the
-/// collected metrics.  `lg.time_scale` compresses trace time.
+/// collected metrics.  `lg.time_scale` compresses trace time.  Requires
+/// artifacts: profiles are measured and batches execute on PJRT.
 pub fn serve(
     spec: &PipelineSpec,
     policy: Policy,
@@ -152,8 +237,32 @@ pub fn serve(
 ) -> Result<ServeReport> {
     let pool = Arc::new(ExecutorPool::new(&cfg.artifact_dir, cfg.executors)?);
     let profiles = measure_profiles(&pool, spec, cfg)?;
+    let predictor: Box<dyn Predictor + Send> = if cfg.use_lstm {
+        Box::new(LstmPredictor::new(pool.lstm_closure()))
+    } else {
+        Box::new(ReactivePredictor::default())
+    };
+    let executor: Arc<dyn BatchExecutor> = Arc::new(PoolExecutor(Arc::clone(&pool)));
+    serve_with(spec, profiles, policy, cfg, lg, trace, executor, predictor)
+}
 
-    // Live spec: same stages/weights, SLAs from measured profiles.
+/// Drive the wall-clock engine over explicit `profiles`, a pluggable
+/// `executor` and `predictor` — no artifacts required.  This is the
+/// whole live driver; [`serve`] is just PJRT measurement + execution
+/// plugged into it.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_with(
+    spec: &PipelineSpec,
+    profiles: PipelineProfiles,
+    policy: Policy,
+    cfg: &ServeConfig,
+    lg: LoadGenConfig,
+    trace: &Trace,
+    executor: Arc<dyn BatchExecutor>,
+    predictor: Box<dyn Predictor + Send>,
+) -> Result<ServeReport> {
+    // Live spec: same stages/weights, SLAs derived from the profiles
+    // (Swayam rule, floored — see ServeConfig::sla_floor).
     let mut live_spec = spec.clone();
     live_spec.stage_slas = profiles
         .stages
@@ -164,11 +273,6 @@ pub fn serve(
 
     // Time compression multiplies observed rates by 1/time_scale; the
     // monitor sees wall time, so decisions see the compressed domain.
-    let predictor: Box<dyn Predictor + Send> = if cfg.use_lstm {
-        Box::new(LstmPredictor::new(pool.lstm_closure()))
-    } else {
-        Box::new(ReactivePredictor::default())
-    };
     let mut adapter = Adapter::new(
         live_spec.clone(),
         profiles.clone(),
@@ -184,237 +288,173 @@ pub fn serve(
     // Initial decision at the trace's first-second (compressed) rate.
     let init = adapter.decide_for_lambda(trace.rate_at(0.0) / lg.time_scale.max(1e-9));
 
+    // Wall-clock drivers use the bare 50 ms batch-timeout floor (λ=∞):
+    // their λ lives in compressed wall time, not the profile domain.
+    let core = ClusterCore::new(&init.config, f64::INFINITY, DropPolicy::new(sla, true));
+    let n_stages = core.n_stages();
+
+    // Warm the initial configuration BEFORE the run clock starts —
+    // compile time must not count against request ages.
+    for sc in &init.config.stages {
+        executor.warm(&sc.variant_key, sc.batch);
+    }
+
     let shared = Arc::new(Shared {
-        stages: (0..live_spec.n_stages())
-            .map(|si| {
-                let sc = &init.config.stages[si];
-                StageShared {
-                    queue: Mutex::new(CentralQueue::new(sc.batch, 0.05)),
-                    cv: Condvar::new(),
-                    variant: Mutex::new(sc.variant_key.clone()),
-                    batch: AtomicUsize::new(sc.batch),
-                    replicas: AtomicUsize::new(sc.replicas as usize),
-                    hidden: AtomicUsize::new(
-                        profiles.stages[si].variants[sc.variant_idx].variant.hidden(),
-                    ),
-                }
-            })
-            .collect(),
+        core: Mutex::new(core),
+        cv: Condvar::new(),
         monitor: Mutex::new(Monitor::new(600)),
-        completed: Mutex::new(Vec::new()),
-        dropped: Mutex::new(Vec::new()),
-        sla,
         stop: AtomicBool::new(false),
         start: Instant::now(),
     });
 
-    // Warm the initial configuration.
-    for sc in &init.config.stages {
-        let _ = pool.warm(&sc.variant_key, sc.batch);
-    }
-
     // ---- worker threads (replica slots) ------------------------------
     let mut workers = Vec::new();
-    for si in 0..live_spec.n_stages() {
-        for wi in 0..cfg.max_workers {
+    for si in 0..n_stages {
+        for _ in 0..cfg.max_workers {
             let sh = Arc::clone(&shared);
-            let pl = Arc::clone(&pool);
-            let n_stages = live_spec.n_stages();
+            let ex = Arc::clone(&executor);
             workers.push(std::thread::spawn(move || {
-                worker_loop(sh, pl, si, wi, n_stages);
+                worker_loop(sh, ex, si, n_stages);
             }));
         }
     }
 
     // ---- adapter thread ----------------------------------------------
-    let intervals = Arc::new(Mutex::new(Vec::<IntervalRecord>::new()));
     let adapter_handle = {
         let sh = Arc::clone(&shared);
-        let pl = Arc::clone(&pool);
-        let iv = Arc::clone(&intervals);
+        let ex = Arc::clone(&executor);
         let mut active_cfg = init.config.clone();
+        let mut reconfig = adapter.reconfig();
         std::thread::spawn(move || {
             loop {
-                std::thread::sleep(Duration::from_secs_f64(adapter.config.interval));
-                if sh.stop.load(Ordering::Relaxed) {
+                if !sh.sleep_interruptible(adapter.config.interval) {
                     break;
                 }
                 let now = sh.now();
-                let history = {
+                let (history, observed) = {
                     let m = sh.monitor.lock().unwrap();
-                    m.history(now, crate::predictor::HISTORY)
-                };
-                let observed = {
-                    let m = sh.monitor.lock().unwrap();
-                    m.recent_rate(now, adapter.config.interval.max(1.0) as usize)
+                    (
+                        m.history(now, crate::predictor::HISTORY),
+                        m.recent_rate(now, adapter.config.interval.max(1.0) as usize),
+                    )
                 };
                 let d = adapter.decide(now, &history);
-                iv.lock().unwrap().push(IntervalRecord {
-                    t: now,
-                    pas: active_cfg.pas,
-                    cost: active_cfg.cost,
-                    lambda_observed: observed,
-                    lambda_predicted: d.lambda_predicted,
-                    decision_time: d.decision_time,
-                    variants: active_cfg.stages.iter().map(|s| s.variant_key.clone()).collect(),
-                });
+                sh.core
+                    .lock()
+                    .unwrap()
+                    .accounting
+                    .record_interval(now, &active_cfg, observed, &d);
                 // warm targets before the switch, then apply after delay
                 for sc in &d.config.stages {
-                    let _ = pl.warm(&sc.variant_key, sc.batch);
+                    ex.warm(&sc.variant_key, sc.batch);
                 }
-                std::thread::sleep(Duration::from_secs_f64(adapter.config.apply_delay));
-                if sh.stop.load(Ordering::Relaxed) {
+                let at = reconfig.stage(now, d);
+                if !sh.sleep_interruptible(at - sh.now()) {
                     break;
                 }
-                for (si, sc) in d.config.stages.iter().enumerate() {
-                    let st = &sh.stages[si];
-                    *st.variant.lock().unwrap() = sc.variant_key.clone();
-                    st.batch.store(sc.batch, Ordering::Relaxed);
-                    st.replicas.store(sc.replicas as usize, Ordering::Relaxed);
-                    st.hidden.store(
-                        adapter.profiles.stages[si].variants[sc.variant_idx].variant.hidden(),
-                        Ordering::Relaxed,
-                    );
-                    let mut q = st.queue.lock().unwrap();
-                    q.set_batch(sc.batch, 0.05);
-                    st.cv.notify_all();
+                while let Some(staged) = reconfig.pop_due(sh.now()) {
+                    let d = staged.decision;
+                    sh.core.lock().unwrap().apply_config(&d.config, f64::INFINITY);
+                    sh.cv.notify_all();
+                    active_cfg = d.config;
                 }
-                active_cfg = d.config.clone();
             }
         })
     };
 
     // ---- load generation (blocking) ----------------------------------
-    let submitted = loadgen::replay(trace, lg, |id, t| {
-        {
-            let mut m = shared.monitor.lock().unwrap();
-            m.record_arrival(t);
-        }
-        let st = &shared.stages[0];
-        let mut q = st.queue.lock().unwrap();
-        q.push(Request { id, arrival: t, stage_arrival: t });
-        drop(q);
-        st.cv.notify_one();
+    // Timestamps come from the shared run clock (not loadgen's own
+    // epoch) so arrival times, drop ages and completions are measured
+    // against the same zero.
+    let submitted = loadgen::replay(trace, lg, |id, _t| {
+        let t = shared.now();
+        shared.monitor.lock().unwrap().record_arrival(t);
+        shared.core.lock().unwrap().ingest(id, t);
+        shared.cv.notify_all();
     });
 
     // ---- drain & stop --------------------------------------------------
     let drain_deadline = Instant::now() + Duration::from_secs_f64(3.0 + 4.0 * sla);
     loop {
-        let done = shared.completed.lock().unwrap().len() + shared.dropped.lock().unwrap().len();
+        let done = shared.core.lock().unwrap().accounting.done();
         if done >= submitted || Instant::now() > drain_deadline {
             break;
         }
         std::thread::sleep(Duration::from_millis(20));
     }
     shared.stop.store(true, Ordering::Relaxed);
-    for st in &shared.stages {
-        st.cv.notify_all();
-    }
+    shared.cv.notify_all();
     for w in workers {
         let _ = w.join();
     }
     let _ = adapter_handle.join();
 
     // ---- assemble metrics ----------------------------------------------
-    let completed = shared.completed.lock().unwrap().clone();
-    let dropped = shared.dropped.lock().unwrap().clone();
-    let mut requests = completed;
-    for id in dropped {
-        requests.push(RequestRecord { id, arrival: 0.0, completion: None });
-    }
-    let metrics = RunMetrics {
-        system: policy.name().to_string(),
-        pipeline: spec.name.to_string(),
-        workload: trace.name.clone(),
-        requests,
-        intervals: intervals.lock().unwrap().clone(),
-        sla,
+    let metrics = {
+        let mut core = shared.core.lock().unwrap();
+        let accounting = std::mem::replace(&mut core.accounting, Accounting::new(sla));
+        accounting.into_metrics(
+            policy.name().to_string(),
+            spec.name.to_string(),
+            trace.name.clone(),
+        )
     };
     Ok(ServeReport { metrics, profiles, sla })
 }
 
-/// One replica-slot worker.
-fn worker_loop(
-    sh: Arc<Shared>,
-    pool: Arc<ExecutorPool>,
-    stage: usize,
-    worker_idx: usize,
-    n_stages: usize,
-) {
+/// One replica-slot worker: claim a batch from the shared core, execute
+/// it, then route survivors forward (or complete them).
+fn worker_loop(sh: Arc<Shared>, exec: Arc<dyn BatchExecutor>, stage: usize, n_stages: usize) {
     loop {
         if sh.stop.load(Ordering::Relaxed) {
             return;
         }
-        let st = &sh.stages[stage];
-        // replica gauge: workers above the active count idle
-        if worker_idx >= st.replicas.load(Ordering::Relaxed) {
-            std::thread::sleep(Duration::from_millis(5));
-            continue;
-        }
-        // wait for a batch
-        let batch = {
-            let mut q = st.queue.lock().unwrap();
+        // Claim a batch: formation + §4.5 dropping + busy-slot gating all
+        // happen inside the shared core.
+        let fb: FormedBatch = {
+            let mut core = sh.core.lock().unwrap();
             loop {
                 if sh.stop.load(Ordering::Relaxed) {
                     return;
                 }
-                if let Some(b) = q.pop_batch(sh.now()) {
-                    break b;
+                match core.try_form(stage, sh.now()) {
+                    FormOutcome::Formed(fb) => break fb,
+                    FormOutcome::Busy | FormOutcome::Idle { .. } => {
+                        let (guard, _) = sh
+                            .cv
+                            .wait_timeout(core, Duration::from_millis(20))
+                            .unwrap();
+                        core = guard;
+                    }
                 }
-                let (qq, _) = st
-                    .cv
-                    .wait_timeout(q, Duration::from_millis(20))
-                    .unwrap();
-                q = qq;
             }
         };
-        let now = sh.now();
-        // §4.5 dropping
-        let mut live: Vec<Request> = Vec::with_capacity(batch.len());
-        for r in batch {
-            let age = now - r.arrival;
-            if (stage > 0 && age > sh.sla) || age > 2.0 * sh.sla {
-                sh.dropped.lock().unwrap().push(r.id);
-            } else {
-                live.push(r);
-            }
-        }
-        if live.is_empty() {
-            continue;
-        }
-        let key = st.variant.lock().unwrap().clone();
-        let b_cfg = st.batch.load(Ordering::Relaxed).max(1);
-        let hidden = st.hidden.load(Ordering::Relaxed);
-        // pad to the configured batch (artifacts have static shapes)
-        let input = vec![0.1f32; b_cfg * hidden];
-        match pool.execute(&key, b_cfg, input) {
-            Ok(_) => {
+        match exec.execute(&fb.variant_key, fb.batch.max(1)) {
+            Ok(()) => {
                 let done = sh.now();
+                let mut core = sh.core.lock().unwrap();
+                core.finish_service(stage);
                 if stage + 1 < n_stages {
-                    let nst = &sh.stages[stage + 1];
-                    let mut q = nst.queue.lock().unwrap();
-                    for mut r in live {
-                        r.stage_arrival = done;
-                        q.push(r);
+                    for r in fb.requests {
+                        core.forward(stage + 1, r, done);
                     }
-                    drop(q);
-                    nst.cv.notify_one();
                 } else {
-                    let mut c = sh.completed.lock().unwrap();
-                    for r in live {
-                        c.push(RequestRecord {
-                            id: r.id,
-                            arrival: r.arrival,
-                            completion: Some(done),
-                        });
+                    for r in &fb.requests {
+                        core.complete(r.id, done);
                     }
                 }
+                drop(core);
+                sh.cv.notify_all();
             }
             Err(e) => {
                 crate::log_warn!("serving", "execute failed: {e:#}");
-                for r in live {
-                    sh.dropped.lock().unwrap().push(r.id);
+                let mut core = sh.core.lock().unwrap();
+                core.finish_service(stage);
+                for r in &fb.requests {
+                    core.accounting.record_drop(r.id);
                 }
+                drop(core);
+                sh.cv.notify_all();
             }
         }
     }

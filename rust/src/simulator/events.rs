@@ -5,19 +5,23 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use crate::queueing::Request;
+
 /// Simulator event kinds.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
     /// Request `id` arrives at the pipeline entrance.
     Arrival { id: u64 },
-    /// A replica of `stage` finishes the batch it was serving.
-    ServiceDone { stage: usize, ids: Vec<u64>, started: f64 },
+    /// A replica of `stage` finishes the batch it was serving (the
+    /// admitted requests ride along for forwarding/completion).
+    ServiceDone { stage: usize, batch: Vec<Request> },
     /// Re-check `stage`'s queue (batch timeout wakeup).
     QueueCheck { stage: usize },
     /// Run the adapter.
     Adapt,
-    /// A previously decided configuration becomes active.
-    ApplyConfig { decision_idx: usize },
+    /// The oldest staged reconfiguration becomes active (see
+    /// [`crate::cluster::reconfig::Reconfig`]).
+    ApplyConfig,
     /// End of simulation.
     End,
 }

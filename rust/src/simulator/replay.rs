@@ -1,0 +1,101 @@
+//! Deterministic replay driver: re-runs a recorded decision schedule
+//! through the shared cluster core.
+//!
+//! This is the "third driver" the `cluster` refactor buys for free —
+//! no adapter, no solver, no predictor: just the [`DecisionLog`] a
+//! previous run captured, pushed through the exact same discrete-event
+//! loop ([`run_des`]) and stage machinery.  With identical trace, seed
+//! and noise settings, a replay reproduces the original run's
+//! per-request outcomes bit-for-bit (the parity test pins this down),
+//! which makes it the substrate for regression bisection and for
+//! auditing production decision schedules offline.
+
+use super::sim::{run_des, DecisionLog, DesController, SimConfig};
+use crate::coordinator::adapter::Decision;
+use crate::metrics::RunMetrics;
+use crate::profiler::profile::PipelineProfiles;
+use crate::workload::trace::Trace;
+
+/// Re-run a recorded decision schedule.  `log` must come from
+/// [`crate::simulator::sim::Simulation::run_logged`] (index 0 is the
+/// initial decision); extra ticks beyond the log replay its last entry.
+#[allow(clippy::too_many_arguments)]
+pub fn replay(
+    profiles: &PipelineProfiles,
+    sla: f64,
+    interval: f64,
+    apply_delay: f64,
+    sim: SimConfig,
+    log: &DecisionLog,
+    trace: &Trace,
+    system: &str,
+) -> RunMetrics {
+    assert!(
+        !log.decisions.is_empty(),
+        "replay needs at least the initial decision (run_logged produces it)"
+    );
+    let mut ctl = ScriptedController { log, next: 0 };
+    run_des(profiles, sla, interval, apply_delay, sim, &mut ctl, trace, system)
+}
+
+/// [`DesController`] that replays a recorded schedule verbatim.
+struct ScriptedController<'a> {
+    log: &'a DecisionLog,
+    next: usize,
+}
+
+impl DesController for ScriptedController<'_> {
+    fn initial(&mut self, _first_rate: f64) -> Decision {
+        self.next = 1;
+        self.log.decisions[0].clone()
+    }
+
+    fn decide(&mut self, _now: f64, _history: &[f64]) -> Decision {
+        let i = self.next.min(self.log.decisions.len() - 1);
+        self.next += 1;
+        self.log.decisions[i].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::adapter::{Adapter, AdapterConfig, Policy};
+    use crate::models::accuracy::AccuracyMetric;
+    use crate::models::pipelines;
+    use crate::predictor::ReactivePredictor;
+    use crate::profiler::analytic::pipeline_profiles;
+    use crate::simulator::sim::Simulation;
+    use crate::workload::tracegen::Pattern;
+
+    #[test]
+    fn replay_reproduces_adaptive_run_exactly() {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let sla = spec.sla_e2e();
+        let cfg = AdapterConfig::default();
+        let adapter = Adapter::new(
+            spec,
+            prof.clone(),
+            Policy::Ipa(AccuracyMetric::Pas),
+            cfg,
+            Box::new(ReactivePredictor::default()),
+        );
+        let sim_cfg = SimConfig { seed: 13, ..Default::default() };
+        let mut sim = Simulation::new(adapter, sim_cfg);
+        let trace = Trace::synthetic(Pattern::Fluctuating, 150);
+        let (original, log) = sim.run_logged(&trace);
+        let replayed = replay(
+            &prof,
+            sla,
+            cfg.interval,
+            cfg.apply_delay,
+            sim_cfg,
+            &log,
+            &trace,
+            "replay",
+        );
+        assert_eq!(original.requests, replayed.requests);
+        assert_eq!(original.intervals.len(), replayed.intervals.len());
+    }
+}

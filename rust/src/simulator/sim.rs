@@ -1,23 +1,32 @@
-//! The discrete-event cluster simulator — our Kubernetes substitute.
+//! The discrete-event driver — our Kubernetes substitute, layered on
+//! the shared [`crate::cluster`] core.
 //!
-//! Faithfully models the paper's serving stack (§3): per-stage central
-//! queues with batch formation, round-robin dispatch to replicas,
-//! request dropping (§4.5), the adapter loop at a fixed monitoring
-//! interval, and a reconfiguration delay before new configurations take
-//! effect (§5.3's ~8 s adaptation process).
+//! This file owns only the *clock*: a deterministic event queue feeding
+//! virtual timestamps into [`ClusterCore`].  Batch formation, §4.5
+//! dropping, rolling reconfiguration and request/interval accounting
+//! all live in `cluster::` and are byte-for-byte the same machinery the
+//! live serving engine runs on a wall clock (`serving::engine`) and the
+//! replay driver re-runs from a decision log (`simulator::replay`).
 //!
 //! Service times come from the latency profiles (optionally with
 //! multiplicative noise); replicas are capacity slots — when a
 //! reconfiguration shrinks a stage, in-flight batches finish at the old
 //! latency while new batches use the new profile (rolling update
-//! semantics).
+//! semantics, §5.3).
+//!
+//! [`run_des`] is generic over a [`DesController`] (the decision
+//! source): [`Simulation`] plugs in the live [`Adapter`], while
+//! `simulator::replay` scripts a recorded [`Decision`] log through the
+//! identical loop.
 
 use super::events::{Event, EventQueue};
+use crate::cluster::core::{ClusterCore, FormOutcome};
+use crate::cluster::drop_policy::DropPolicy;
+use crate::cluster::reconfig::Reconfig;
 use crate::coordinator::adapter::{Adapter, Decision};
 use crate::coordinator::monitoring::Monitor;
-use crate::metrics::{IntervalRecord, RequestRecord, RunMetrics};
-use crate::optimizer::ip::PipelineConfig;
-use crate::queueing::{worst_case_delay, CentralQueue, Request};
+use crate::metrics::RunMetrics;
+use crate::profiler::profile::PipelineProfiles;
 use crate::util::rng::SplitMix64;
 use crate::workload::trace::Trace;
 
@@ -39,24 +48,26 @@ impl Default for SimConfig {
     }
 }
 
-struct StageState {
-    queue: CentralQueue,
-    /// Active variant index into the profiles.
-    variant_idx: usize,
-    batch: usize,
-    replicas: u32,
-    busy: u32,
+/// A decision source for the discrete-event driver.
+pub trait DesController {
+    /// The initial configuration, decided on the trace's first-second
+    /// rate before any request arrives.
+    fn initial(&mut self, first_rate: f64) -> Decision;
+
+    /// One adaptation-tick decision from the observed load history.
+    fn decide(&mut self, now: f64, history: &[f64]) -> Decision;
 }
 
-/// One simulated request in flight.
-#[derive(Debug, Clone, Copy)]
-struct Flight {
-    arrival: f64,
-    completion: Option<f64>,
-    dropped: bool,
+/// Every decision an adaptive run made, in order: index 0 is the
+/// initial configuration, then one entry per adaptation tick.  Feed it
+/// to [`crate::simulator::replay::replay`] to re-run the schedule
+/// deterministically.
+#[derive(Debug, Clone, Default)]
+pub struct DecisionLog {
+    pub decisions: Vec<Decision>,
 }
 
-/// The simulator.
+/// The adapter-driven simulator.
 pub struct Simulation {
     pub adapter: Adapter,
     pub sim: SimConfig,
@@ -69,214 +80,198 @@ impl Simulation {
 
     /// Run the full trace; returns the collected metrics.
     pub fn run(&mut self, trace: &Trace) -> RunMetrics {
-        let n_stages = self.adapter.profiles.stages.len();
+        self.run_logged(trace).0
+    }
+
+    /// Run the full trace, also capturing the decision schedule for
+    /// deterministic replay.
+    pub fn run_logged(&mut self, trace: &Trace) -> (RunMetrics, DecisionLog) {
+        let profiles = self.adapter.profiles.clone();
         let sla = self.adapter.spec.sla_e2e();
         let interval = self.adapter.config.interval;
         let apply_delay = self.adapter.config.apply_delay;
-        let horizon = trace.seconds() as f64;
+        let system = self.adapter.policy.name().to_string();
+        let sim = self.sim;
+        let mut ctl = AdapterController { adapter: &mut self.adapter, log: Vec::new() };
+        let metrics =
+            run_des(&profiles, sla, interval, apply_delay, sim, &mut ctl, trace, &system);
+        (metrics, DecisionLog { decisions: ctl.log })
+    }
+}
 
-        let mut rng = SplitMix64::new(self.sim.seed ^ 0x51A7_E);
-        let mut events = EventQueue::new();
-        let mut monitor = Monitor::new(600);
+/// [`DesController`] over the live [`Adapter`], recording every
+/// decision for replay.
+struct AdapterController<'a> {
+    adapter: &'a mut Adapter,
+    log: Vec<Decision>,
+}
 
-        // Request table.
-        let arrivals = trace.arrivals(self.sim.seed);
-        let mut flights: Vec<Flight> = arrivals
-            .iter()
-            .map(|&t| Flight { arrival: t, completion: None, dropped: false })
-            .collect();
-        for (id, &t) in arrivals.iter().enumerate() {
-            events.push(t, Event::Arrival { id: id as u64 });
-        }
+impl DesController for AdapterController<'_> {
+    fn initial(&mut self, first_rate: f64) -> Decision {
+        let d = self.adapter.decide_for_lambda(first_rate);
+        self.log.push(d.clone());
+        d
+    }
 
-        // Initial configuration: decide on the trace's first-second rate.
-        let first_rate = trace.rate_at(0.0);
-        let init = self.adapter.decide_for_lambda(first_rate);
-        let mut stages: Vec<StageState> = (0..n_stages)
-            .map(|si| {
-                let sc = &init.config.stages[si];
-                StageState {
-                    queue: CentralQueue::new(
-                        sc.batch,
-                        batch_timeout(sc.batch, init.lambda_predicted),
-                    ),
-                    variant_idx: sc.variant_idx,
-                    batch: sc.batch,
-                    replicas: sc.replicas,
-                    busy: 0,
-                }
-            })
-            .collect();
-        let mut active_cfg: PipelineConfig = init.config.clone();
-        let mut decisions: Vec<Decision> = vec![init];
-        let mut intervals: Vec<IntervalRecord> = Vec::new();
+    fn decide(&mut self, now: f64, history: &[f64]) -> Decision {
+        let d = self.adapter.decide(now, history);
+        self.log.push(d.clone());
+        d
+    }
+}
 
-        events.push(interval, Event::Adapt);
-        events.push(horizon, Event::End);
+/// The discrete-event loop over the shared cluster core.
+///
+/// Deterministic given (`trace`, `sim.seed`, controller decisions):
+/// arrivals, batch formation, drops, service times and reconfiguration
+/// instants all derive from those inputs alone.
+#[allow(clippy::too_many_arguments)]
+pub fn run_des(
+    profiles: &PipelineProfiles,
+    sla: f64,
+    interval: f64,
+    apply_delay: f64,
+    sim: SimConfig,
+    ctl: &mut dyn DesController,
+    trace: &Trace,
+    system: &str,
+) -> RunMetrics {
+    let horizon = trace.seconds() as f64;
+    let mut rng = SplitMix64::new(sim.seed ^ 0x51A7_E);
+    let mut events = EventQueue::new();
+    let mut monitor = Monitor::new(600);
 
-        // Stage request sub-queues carry (Request) through; flights index
-        // by id for final bookkeeping.
-        while let Some((now, ev)) = events.pop() {
-            match ev {
-                Event::End => break,
-                Event::Arrival { id } => {
-                    monitor.record_arrival(now);
-                    let req = Request { id, arrival: now, stage_arrival: now };
-                    stages[0].queue.push(req);
-                    self.dispatch(0, now, &mut stages, &mut events, &mut flights, sla, &mut rng);
-                }
-                Event::QueueCheck { stage } => {
-                    self.dispatch(stage, now, &mut stages, &mut events, &mut flights, sla, &mut rng);
-                }
-                Event::ServiceDone { stage, ids, started: _ } => {
-                    stages[stage].busy = stages[stage].busy.saturating_sub(1);
-                    if stage + 1 < n_stages {
-                        for id in ids {
-                            let f = &flights[id as usize];
-                            if f.dropped {
-                                continue;
-                            }
-                            stages[stage + 1].queue.push(Request {
-                                id,
-                                arrival: f.arrival,
-                                stage_arrival: now,
-                            });
+    let arrivals = trace.arrivals(sim.seed);
+    for (id, &t) in arrivals.iter().enumerate() {
+        events.push(t, Event::Arrival { id: id as u64 });
+    }
+
+    // Initial configuration: decide on the trace's first-second rate.
+    let init = ctl.initial(trace.rate_at(0.0));
+    let mut core = ClusterCore::new(
+        &init.config,
+        init.lambda_predicted,
+        DropPolicy::new(sla, sim.drop_enabled),
+    );
+    let mut reconfig = Reconfig::new(apply_delay);
+    let mut active_cfg = init.config.clone();
+    let n_stages = core.n_stages();
+
+    events.push(interval, Event::Adapt);
+    events.push(horizon, Event::End);
+
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            Event::End => break,
+            Event::Arrival { id } => {
+                monitor.record_arrival(now);
+                core.ingest(id, now);
+                drive(&mut core, profiles, 0, now, &mut events, &mut rng, sim.service_noise);
+            }
+            Event::QueueCheck { stage } => {
+                drive(&mut core, profiles, stage, now, &mut events, &mut rng, sim.service_noise);
+            }
+            Event::ServiceDone { stage, batch } => {
+                core.finish_service(stage);
+                if stage + 1 < n_stages {
+                    for req in batch {
+                        if core.accounting.is_dropped(req.id) {
+                            continue;
                         }
-                        self.dispatch(
-                            stage + 1, now, &mut stages, &mut events, &mut flights, sla, &mut rng,
+                        core.forward(stage + 1, req, now);
+                    }
+                    drive(
+                        &mut core,
+                        profiles,
+                        stage + 1,
+                        now,
+                        &mut events,
+                        &mut rng,
+                        sim.service_noise,
+                    );
+                } else {
+                    for req in &batch {
+                        core.complete(req.id, now);
+                    }
+                }
+                // freed replica may unblock this stage's queue
+                drive(&mut core, profiles, stage, now, &mut events, &mut rng, sim.service_noise);
+            }
+            Event::Adapt => {
+                let history = monitor.history(now, crate::predictor::HISTORY);
+                let decision = ctl.decide(now, &history);
+                let observed = monitor.recent_rate(now, interval as usize);
+                core.accounting.record_interval(now, &active_cfg, observed, &decision);
+                let at = reconfig.stage(now, decision);
+                events.push(at, Event::ApplyConfig);
+                if now + interval < horizon {
+                    events.push(now + interval, Event::Adapt);
+                }
+            }
+            Event::ApplyConfig => {
+                while let Some(staged) = reconfig.pop_due(now) {
+                    let d = staged.decision;
+                    core.apply_config(&d.config, d.lambda_predicted);
+                    active_cfg = d.config;
+                    for si in 0..n_stages {
+                        drive(
+                            &mut core,
+                            profiles,
+                            si,
+                            now,
+                            &mut events,
+                            &mut rng,
+                            sim.service_noise,
                         );
-                    } else {
-                        for id in ids {
-                            let f = &mut flights[id as usize];
-                            if !f.dropped {
-                                f.completion = Some(now);
-                            }
-                        }
-                    }
-                    // freed replica may unblock this stage's queue
-                    self.dispatch(stage, now, &mut stages, &mut events, &mut flights, sla, &mut rng);
-                }
-                Event::Adapt => {
-                    let history = monitor.history(now, crate::predictor::HISTORY);
-                    let decision = self.adapter.decide(now, &history);
-                    let observed = monitor.recent_rate(now, interval as usize);
-                    intervals.push(IntervalRecord {
-                        t: now,
-                        pas: active_cfg.pas,
-                        cost: active_cfg.cost,
-                        lambda_observed: observed,
-                        lambda_predicted: decision.lambda_predicted,
-                        decision_time: decision.decision_time,
-                        variants: active_cfg
-                            .stages
-                            .iter()
-                            .map(|s| s.variant_key.clone())
-                            .collect(),
-                    });
-                    decisions.push(decision);
-                    events.push(now + apply_delay, Event::ApplyConfig {
-                        decision_idx: decisions.len() - 1,
-                    });
-                    if now + interval < horizon {
-                        events.push(now + interval, Event::Adapt);
-                    }
-                }
-                Event::ApplyConfig { decision_idx } => {
-                    let d = &decisions[decision_idx];
-                    active_cfg = d.config.clone();
-                    for (si, sc) in d.config.stages.iter().enumerate() {
-                        let st = &mut stages[si];
-                        st.variant_idx = sc.variant_idx;
-                        st.batch = sc.batch;
-                        st.replicas = sc.replicas;
-                        st.queue
-                            .set_batch(sc.batch, batch_timeout(sc.batch, d.lambda_predicted));
-                        self.dispatch(si, now, &mut stages, &mut events, &mut flights, sla, &mut rng);
                     }
                 }
             }
-        }
-
-        // Whatever is still queued/in-flight at the end never completed.
-        let requests: Vec<RequestRecord> = flights
-            .iter()
-            .enumerate()
-            .map(|(id, f)| RequestRecord {
-                id: id as u64,
-                arrival: f.arrival,
-                completion: if f.dropped { None } else { f.completion },
-            })
-            .collect();
-
-        RunMetrics {
-            system: self.adapter.policy.name().to_string(),
-            pipeline: self.adapter.spec.name.to_string(),
-            workload: trace.name.clone(),
-            requests,
-            intervals,
-            sla,
         }
     }
 
-    /// Try to start service on `stage` while batches and replicas allow;
-    /// applies the §4.5 drop policy when forming batches.
-    #[allow(clippy::too_many_arguments)]
-    fn dispatch(
-        &mut self,
-        stage: usize,
-        now: f64,
-        stages: &mut [StageState],
-        events: &mut EventQueue,
-        flights: &mut [Flight],
-        sla: f64,
-        rng: &mut SplitMix64,
-    ) {
-        loop {
-            let st = &mut stages[stage];
-            if st.busy >= st.replicas {
-                return;
-            }
-            let Some(batch) = st.queue.pop_batch(now) else {
-                // nothing ready: if a partial batch is pending, schedule
-                // its timeout wakeup
-                if let Some(at) = st.queue.next_timeout_at() {
+    // Whatever is still queued/in-flight at the end never completed.
+    core.into_accounting().into_metrics(
+        system.to_string(),
+        profiles.pipeline.clone(),
+        trace.name.clone(),
+    )
+}
+
+/// Start service on `stage` while the core can form batches: each
+/// formed batch is scheduled as a `ServiceDone` at the profiled latency
+/// (plus optional multiplicative noise); an idle partial batch gets a
+/// `QueueCheck` wakeup at its timeout.
+fn drive(
+    core: &mut ClusterCore,
+    profiles: &PipelineProfiles,
+    stage: usize,
+    now: f64,
+    events: &mut EventQueue,
+    rng: &mut SplitMix64,
+    noise: f64,
+) {
+    loop {
+        match core.try_form(stage, now) {
+            FormOutcome::Busy => return,
+            FormOutcome::Idle { next_timeout } => {
+                if let Some(at) = next_timeout {
                     if at > now {
                         events.push(at, Event::QueueCheck { stage });
                     }
                 }
                 return;
-            };
-            // §4.5 dropping at batch formation.
-            let mut ids = Vec::with_capacity(batch.len());
-            for req in batch {
-                let age = now - req.arrival;
-                let drop = self.sim.drop_enabled
-                    && ((stage > 0 && age > sla) || age > 2.0 * sla);
-                if drop {
-                    flights[req.id as usize].dropped = true;
-                } else {
-                    ids.push(req.id);
+            }
+            FormOutcome::Formed(fb) => {
+                let vp = &profiles.stages[stage].variants[fb.variant_idx];
+                let mut service = vp.latency.latency(fb.batch);
+                if noise > 0.0 {
+                    let f = 1.0 + noise * rng.next_normal();
+                    service *= f.clamp(0.5, 2.0);
                 }
+                events.push(now + service, Event::ServiceDone { stage, batch: fb.requests });
             }
-            if ids.is_empty() {
-                continue; // batch fully dropped; try to form another
-            }
-            let vp = &self.adapter.profiles.stages[stage].variants[st.variant_idx];
-            let mut service = vp.latency.latency(st.batch);
-            if self.sim.service_noise > 0.0 {
-                let f = 1.0 + self.sim.service_noise * rng.next_normal();
-                service *= f.clamp(0.5, 2.0);
-            }
-            st.busy += 1;
-            events.push(now + service, Event::ServiceDone { stage, ids, started: now });
         }
     }
-}
-
-/// Batch-formation timeout: 1.5× the Eq. 7 worst-case wait, floored to
-/// 50 ms — partial batches keep latency bounded under thin load.
-fn batch_timeout(batch: usize, lambda: f64) -> f64 {
-    (1.5 * worst_case_delay(batch, lambda)).max(0.05)
 }
 
 #[cfg(test)]
@@ -371,5 +366,14 @@ mod tests {
         let t = Trace::synthetic(Pattern::SteadyLow, 120);
         let m = make_sim("nlp", Policy::Ipa(AccuracyMetric::Pas)).run(&t);
         assert!(m.sla_attainment() > 0.5, "{}", m.sla_attainment());
+    }
+
+    #[test]
+    fn decision_log_captures_initial_and_ticks() {
+        let t = Trace::synthetic(Pattern::SteadyLow, 120);
+        let (m, log) = make_sim("video", Policy::Fa2Low).run_logged(&t);
+        // one initial decision + one per recorded interval
+        assert_eq!(log.decisions.len(), m.intervals.len() + 1);
+        assert!(!log.decisions[0].config.stages.is_empty());
     }
 }

@@ -1,0 +1,133 @@
+//! Minimal error type (anyhow substitute — the offline build has no
+//! external crates).
+//!
+//! Provides the small surface the runtime and serving layers use:
+//! a string-backed [`Error`], a defaulted [`Result`] alias, the
+//! [`Context`] extension trait (`.context(..)` / `.with_context(..)`)
+//! and the crate-level `anyhow!` macro for formatted ad-hoc errors.
+
+use std::fmt;
+
+/// A string-backed error with prepended context, `anyhow::Error`-shaped.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Prepend a context layer (outermost first, like anyhow's chain).
+    pub fn wrap(self, context: impl fmt::Display) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both print the full chain.
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error::msg(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+/// Crate-wide result alias (anyhow::Result substitute).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for results and options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Formatted ad-hoc error (anyhow::anyhow! substitute).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(crate::anyhow!("bad value {}", 7))
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "bad value 7");
+        assert_eq!(format!("{e:#}"), "bad value 7");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<u32> = fails().with_context(|| "loading config".to_string());
+        assert_eq!(r.unwrap_err().to_string(), "loading config: bad value 7");
+        let r2: Result<u32> = fails().context("outer");
+        assert_eq!(r2.unwrap_err().to_string(), "outer: bad value 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+    }
+}

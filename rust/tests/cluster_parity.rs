@@ -1,0 +1,189 @@
+//! Driver parity over the shared cluster core.
+//!
+//! The `cluster` refactor's whole point is that the discrete-event
+//! simulator, the live wall-clock engine and the replay driver run the
+//! SAME stage machinery.  These tests pin that down:
+//!
+//! 1. replay parity — a recorded decision schedule re-run through the
+//!    DES loop reproduces the original per-request outcomes exactly,
+//!    including §4.5 drops under bursty overload;
+//! 2. sim/live parity — the same trace with frozen analytic profiles
+//!    and zero service noise through both the simulator and the
+//!    threaded live engine (synthetic executor, compressed wall clock)
+//!    produces identical drop/completion counts.
+
+use std::sync::Arc;
+
+use ipa::coordinator::adapter::{Adapter, AdapterConfig, Policy};
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines;
+use ipa::predictor::ReactivePredictor;
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::serving::engine::{serve_with, ServeConfig, SyntheticExecutor};
+use ipa::serving::loadgen::LoadGenConfig;
+use ipa::simulator::replay::replay;
+use ipa::simulator::sim::{SimConfig, Simulation};
+use ipa::workload::trace::Trace;
+use ipa::workload::tracegen::Pattern;
+
+fn adapter(pipeline: &str, policy: Policy, cfg: AdapterConfig) -> Adapter {
+    let spec = pipelines::by_name(pipeline).unwrap();
+    let prof = pipeline_profiles(&spec);
+    Adapter::new(spec, prof, policy, cfg, Box::new(ReactivePredictor::default()))
+}
+
+/// Replay parity on a calm trace: every request outcome identical.
+#[test]
+fn replay_matches_sim_on_steady_load() {
+    let cfg = AdapterConfig::default();
+    let spec = pipelines::by_name("video").unwrap();
+    let prof = pipeline_profiles(&spec);
+    let sim_cfg = SimConfig { seed: 21, ..Default::default() };
+    let mut sim = Simulation::new(
+        adapter("video", Policy::Ipa(AccuracyMetric::Pas), cfg),
+        sim_cfg,
+    );
+    let trace = Trace::synthetic(Pattern::SteadyLow, 200);
+    let (original, log) = sim.run_logged(&trace);
+    let replayed = replay(
+        &prof,
+        spec.sla_e2e(),
+        cfg.interval,
+        cfg.apply_delay,
+        sim_cfg,
+        &log,
+        &trace,
+        "replay",
+    );
+    assert_eq!(original.requests, replayed.requests);
+}
+
+/// Replay parity under bursty overload — nonzero drops, reproduced
+/// exactly (drop bookkeeping is part of the shared core).
+#[test]
+fn replay_matches_sim_under_bursty_drops() {
+    let cfg = AdapterConfig::default();
+    let spec = pipelines::by_name("video").unwrap();
+    let prof = pipeline_profiles(&spec);
+    let sim_cfg = SimConfig { seed: 9, service_noise: 0.05, drop_enabled: true };
+    let mut sim = Simulation::new(adapter("video", Policy::Fa2Low, cfg), sim_cfg);
+    let trace = Trace::synthetic(Pattern::Bursty, 240);
+    let (original, log) = sim.run_logged(&trace);
+    let replayed = replay(
+        &prof,
+        spec.sla_e2e(),
+        cfg.interval,
+        cfg.apply_delay,
+        sim_cfg,
+        &log,
+        &trace,
+        "replay",
+    );
+    assert_eq!(original.requests, replayed.requests);
+    assert_eq!(original.dropped_count(), replayed.dropped_count());
+    assert_eq!(original.completed_count(), replayed.completed_count());
+    assert!(
+        original.requests.iter().any(|r| r.completion.is_none()),
+        "burst run should exercise drops/incompletions for the parity to be meaningful"
+    );
+}
+
+/// Sim/live parity: same trace + frozen analytic profiles + zero noise
+/// through both drivers → identical drop/completion counts.
+///
+/// Setup: constant low load with a quiet cooldown tail long enough for
+/// both drivers to drain in-run, ample capacity, and no adaptation
+/// ticks (interval > horizon) so both drivers hold the initial
+/// configuration.  Under these conditions the unique correct outcome is
+/// "every arrival completes, nothing drops" — any drift in batching,
+/// dropping or accounting between the drivers breaks the equality.
+///
+/// The live side runs the real threaded engine on a compressed wall
+/// clock with latencies scaled to match (`PipelineProfiles::scaled`),
+/// so solver inputs (λ, l(b), SLA) scale consistently and the engine
+/// picks the equivalent configuration.
+#[test]
+fn sim_and_live_engine_agree_on_counts() {
+    // 20x wall compression: fast enough to keep the test short (~7 s),
+    // slow enough that the wall-domain SLA (≈0.35 s) dwarfs scheduler
+    // jitter on loaded CI machines.
+    const SCALE: f64 = 0.05;
+    let seed = 17u64;
+    let spec = pipelines::by_name("video").unwrap();
+    let prof = pipeline_profiles(&spec);
+
+    // 100 s of λ=1 plus a 30 s quiet tail to drain inside the horizon.
+    // At λ=1 FA2-low provisions batch-1 single replicas per stage with
+    // ~2.5× throughput headroom: stage utilization stays low, ages stay
+    // far under the SLA, and neither formation timeouts nor wall-clock
+    // jitter can push any request near a drop boundary.
+    let mut rates = vec![1.0; 100];
+    rates.extend(vec![0.0; 30]);
+    let trace = Trace::new("parity", rates);
+    let n_arrivals = trace.arrivals(seed).len();
+    assert!(n_arrivals > 60, "trace too thin: {n_arrivals}");
+
+    // --- simulator side (virtual time, paper-scale profiles) ---------
+    // FA2-low: min-cost batches under the SLA constraint — the choice
+    // is invariant under consistent (λ, latency, SLA) time scaling, so
+    // both drivers provision the equivalent configuration.
+    let sim_adapter = Adapter::new(
+        spec.clone(),
+        prof.clone(),
+        Policy::Fa2Low,
+        AdapterConfig { interval: 10_000.0, apply_delay: 8.0, max_replicas: 8 },
+        Box::new(ReactivePredictor::default()),
+    );
+    let mut sim = Simulation::new(
+        sim_adapter,
+        SimConfig { seed, service_noise: 0.0, drop_enabled: true },
+    );
+    let m_sim = sim.run(&trace);
+
+    // --- live side (threaded wall clock, scaled profiles) ------------
+    let cfg = ServeConfig {
+        artifact_dir: String::new(),
+        executors: 0,
+        max_workers: 8,
+        interval: 10_000.0,
+        apply_delay: 8.0 * SCALE,
+        use_lstm: false,
+        profile_batches: vec![],
+        profile_reps: 0,
+        sla_floor: 0.0,
+    };
+    let scaled = prof.scaled(SCALE);
+    let executor = Arc::new(SyntheticExecutor::from_profiles(&scaled, 1.0));
+    let rep = serve_with(
+        &spec,
+        scaled,
+        Policy::Fa2Low,
+        &cfg,
+        LoadGenConfig { time_scale: SCALE, seed },
+        &trace,
+        executor,
+        Box::new(ReactivePredictor::default()),
+    )
+    .expect("live engine");
+    let m_live = rep.metrics;
+
+    assert_eq!(m_sim.requests.len(), n_arrivals, "sim records every arrival");
+    assert_eq!(m_live.requests.len(), n_arrivals, "live records every arrival");
+    assert_eq!(
+        m_sim.completed_count(),
+        m_live.completed_count(),
+        "completion counts diverge (sim {} vs live {})",
+        m_sim.completed_count(),
+        m_live.completed_count()
+    );
+    assert_eq!(
+        m_sim.dropped_count(),
+        m_live.dropped_count(),
+        "drop counts diverge (sim {} vs live {})",
+        m_sim.dropped_count(),
+        m_live.dropped_count()
+    );
+    // and the unique correct outcome for this scenario:
+    assert_eq!(m_sim.completed_count(), n_arrivals, "sim completed everything");
+    assert_eq!(m_sim.dropped_count(), 0, "sim dropped nothing");
+}

@@ -149,6 +149,40 @@ fn all_pipelines_bursty_sanity() {
     }
 }
 
+/// The adaptive headline run is exactly replayable from its decision
+/// log: simulator and replay driver share the cluster core, so the
+/// per-request outcomes and headline aggregates are bit-identical.
+#[test]
+fn headline_run_is_exactly_replayable() {
+    let spec = pipelines::by_name("audio-qa").unwrap();
+    let prof = pipeline_profiles(&spec);
+    let cfg = AdapterConfig::default();
+    let adapter = Adapter::new(
+        spec.clone(),
+        prof.clone(),
+        Policy::Ipa(AccuracyMetric::Pas),
+        cfg,
+        Box::new(ReactivePredictor::default()),
+    );
+    let sim_cfg = SimConfig { seed: 5, ..Default::default() };
+    let mut sim = Simulation::new(adapter, sim_cfg);
+    let trace = Trace::synthetic(Pattern::Fluctuating, 200);
+    let (original, log) = sim.run_logged(&trace);
+    let replayed = ipa::simulator::replay::replay(
+        &prof,
+        spec.sla_e2e(),
+        cfg.interval,
+        cfg.apply_delay,
+        sim_cfg,
+        &log,
+        &trace,
+        "replay",
+    );
+    assert_eq!(original.requests, replayed.requests);
+    assert_eq!(original.latencies(), replayed.latencies());
+    assert!((original.sla_attainment() - replayed.sla_attainment()).abs() < 1e-12);
+}
+
 /// PAS′ (Appendix C): the alternative metric produces the same system
 /// ordering as PAS.
 #[test]

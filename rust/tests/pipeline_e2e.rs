@@ -46,6 +46,13 @@ fn prop_request_conservation() {
         let completed = m.latencies().len();
         let dropped = m.requests.iter().filter(|r| r.completion.is_none()).count();
         prop_assert(completed + dropped == arrivals, "partition")?;
+        // the cluster core's accounting must agree with the raw records
+        prop_assert(m.completed_count() == completed, "completed_count")?;
+        prop_assert(m.dropped_count() == dropped, "dropped_count")?;
+        prop_assert(
+            m.completed_count() + m.dropped_count() == arrivals,
+            "no request both dropped and completed",
+        )?;
         // ids unique
         let mut ids: Vec<u64> = m.requests.iter().map(|r| r.id).collect();
         ids.sort_unstable();
