@@ -131,11 +131,89 @@ fn main() {
     print_section("simulator (items/s = simulated requests/s)", &rows);
     let simulator_rows = rows.clone();
 
+    // Fleet: joint cross-pipeline solver decision time + fleet DES
+    // throughput over the 3-member demo fleet.
+    use ipa::fleet::solver::{solve_fleet, FleetAdapter};
+    use ipa::fleet::spec::FleetSpec;
+    use ipa::optimizer::ip::Problem;
+    use ipa::predictor::Predictor;
+    use ipa::simulator::sim::run_fleet_des;
+
+    let fleet = FleetSpec::demo3();
+    let fleet_specs = fleet.specs().unwrap();
+    let fleet_profs: Vec<_> = fleet_specs.iter().map(pipeline_profiles).collect();
+    let fleet_slas: Vec<f64> = fleet_specs.iter().map(|s| s.sla_e2e()).collect();
+    let budget = fleet.replica_budget;
+
+    let mut rows = Vec::new();
+    for lambdas in [[6.0, 6.0, 6.0], [25.0, 10.0, 4.0]] {
+        let problems: Vec<Problem> = fleet_specs
+            .iter()
+            .zip(&fleet_profs)
+            .zip(lambdas)
+            .map(|((s, p), l)| Problem::new(s, p, l))
+            .collect();
+        rows.push(b.run(
+            &format!("fleet_solve/3pipes_b{budget}_l{}", lambdas[0] as u32),
+            || solve_fleet(&problems, budget),
+        ));
+    }
+    print_section("fleet solver (joint budget split, 3 pipelines)", &rows);
+    let fleet_solver_rows = rows.clone();
+
+    let fleet_seconds = (seconds / 2).max(120);
+    let fleet_seed = 7u64; // shared by the throughput denominator and the run
+    let fleet_traces = fleet.traces(fleet_seconds);
+    let fleet_n_requests: f64 = fleet_traces
+        .iter()
+        .enumerate()
+        .map(|(m, t)| {
+            t.arrivals(ipa::workload::tracegen::member_seed(fleet_seed, m)).len() as f64
+        })
+        .sum();
+    let rows = vec![b.run_throughput(
+        &format!("fleet_sim/demo3_{fleet_seconds}s"),
+        fleet_n_requests,
+        || {
+            let predictors: Vec<Box<dyn Predictor + Send>> = fleet_specs
+                .iter()
+                .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+                .collect();
+            let mut adapter = FleetAdapter::new(
+                fleet_specs.clone(),
+                fleet_profs.clone(),
+                AccuracyMetric::Pas,
+                budget,
+                AdapterConfig::default(),
+                predictors,
+            )
+            .unwrap();
+            run_fleet_des(
+                &fleet_profs,
+                &fleet_slas,
+                10.0,
+                8.0,
+                SimConfig { seed: fleet_seed, ..Default::default() },
+                &mut adapter,
+                &fleet_traces,
+                "fleet-bench",
+                budget,
+            )
+        },
+    )];
+    print_section("fleet simulator (items/s = simulated requests/s)", &rows);
+    let fleet_sim_rows = rows.clone();
+
     // Perf baseline for future PRs: solver decision time + simulator
-    // throughput, in a stable JSON shape.
+    // throughput (single-pipeline and fleet), in a stable JSON shape.
     match ipa::benchkit::write_json(
         "BENCH_cluster.json",
-        &[("solver", &solver_rows[..]), ("simulator", &simulator_rows[..])],
+        &[
+            ("solver", &solver_rows[..]),
+            ("simulator", &simulator_rows[..]),
+            ("fleet_solver", &fleet_solver_rows[..]),
+            ("fleet_sim", &fleet_sim_rows[..]),
+        ],
     ) {
         Ok(()) => println!("wrote BENCH_cluster.json"),
         Err(e) => eprintln!("BENCH_cluster.json not written: {e}"),

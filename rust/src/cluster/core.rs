@@ -118,6 +118,19 @@ impl ClusterCore {
         self.stages.len()
     }
 
+    /// Σ configured replicas across the stages — this core's charge
+    /// against a shared fleet pool.
+    pub fn configured_replicas(&self) -> u32 {
+        self.stages.iter().map(|s| s.replicas).sum()
+    }
+
+    /// Σ busy slots across the stages.  During a rolling shrink this
+    /// can exceed [`configured_replicas`](Self::configured_replicas)
+    /// until the in-flight batches drain.
+    pub fn busy_replicas(&self) -> u32 {
+        self.stages.iter().map(|s| s.busy).sum()
+    }
+
     /// A new request enters the pipeline at `now`.
     pub fn ingest(&mut self, id: u64, now: f64) {
         self.accounting.record_arrival(id, now);

@@ -1,0 +1,343 @@
+//! The shared-pool fleet core: one [`ClusterCore`] per member pipeline
+//! plus the accounting that enforces the global replica budget.
+//!
+//! [`FleetCore`] is clock-agnostic exactly like the single-pipeline
+//! core: the DES fleet driver feeds it virtual time, the live fleet
+//! engine wall-clock time.  Its job beyond fan-out is the *budget
+//! invariant*:
+//!
+//! * configured replicas — Σ over every stage of every member of the
+//!   active replica count — never exceed the pool
+//!   ([`FleetCore::new`] / [`FleetCore::apply`] reject violating
+//!   configurations before touching any member);
+//! * during a rolling reconfiguration, batches in flight on shrunk
+//!   stages keep their old slots busy (`busy > replicas`), so the pool
+//!   can transiently hold more work than it is configured for — the
+//!   core tracks that overshoot ([`PoolUsage::in_use`],
+//!   [`FleetCore::peak_in_use`]) instead of pretending it away, which
+//!   is precisely the §5.3 rolling-update semantics at fleet scope.
+//!
+//! [`FleetReconfig`] is the joint apply-delay stager: one decision
+//! *vector* per tick, activated atomically so the budget check always
+//! sees the whole fleet's next configuration.
+
+use std::collections::VecDeque;
+
+use crate::cluster::core::ClusterCore;
+use crate::cluster::drop_policy::DropPolicy;
+use crate::coordinator::adapter::Decision;
+use crate::optimizer::ip::PipelineConfig;
+
+/// Pool occupancy snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolUsage {
+    /// The global replica budget.
+    pub budget: u32,
+    /// Σ configured replicas across every member stage (≤ `budget`).
+    pub configured: u32,
+    /// Σ busy slots across every member stage.
+    pub busy: u32,
+    /// Σ per-stage `max(busy, replicas)` — what the pool is physically
+    /// holding right now; exceeds `configured` only during a rolling
+    /// shrink while old batches drain.
+    pub in_use: u32,
+}
+
+/// N member cluster cores over one replica pool.
+#[derive(Debug)]
+pub struct FleetCore {
+    cores: Vec<ClusterCore>,
+    budget: u32,
+    /// Highest `in_use` ever observed (rolling-reconfig overshoot
+    /// included); updated by [`FleetCore::note`].
+    peak_in_use: u32,
+}
+
+impl FleetCore {
+    /// Build from per-member initial configurations.  `inits` carries
+    /// (config, λ for batch-timeout shaping, drop policy) per member.
+    /// Errors when the combined configuration exceeds the budget.
+    pub fn new(
+        budget: u32,
+        inits: &[(PipelineConfig, f64, DropPolicy)],
+    ) -> Result<FleetCore, String> {
+        let configured: u32 = inits.iter().map(|(cfg, _, _)| cfg.total_replicas()).sum();
+        if configured > budget {
+            return Err(format!(
+                "fleet initial configuration needs {configured} replicas but the pool \
+                 holds {budget}"
+            ));
+        }
+        let cores = inits
+            .iter()
+            .map(|(cfg, lambda, drop)| ClusterCore::new(cfg, *lambda, *drop))
+            .collect();
+        Ok(FleetCore { cores, budget, peak_in_use: configured })
+    }
+
+    pub fn n_members(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn budget(&self) -> u32 {
+        self.budget
+    }
+
+    pub fn member(&self, m: usize) -> &ClusterCore {
+        &self.cores[m]
+    }
+
+    /// Mutable member access for the drivers (ingest / try_form /
+    /// finish_service / forward / complete all live on [`ClusterCore`]).
+    /// Call [`FleetCore::note`] after a mutation burst so peak pool
+    /// usage stays tracked.
+    pub fn member_mut(&mut self, m: usize) -> &mut ClusterCore {
+        &mut self.cores[m]
+    }
+
+    /// Current pool occupancy.
+    pub fn pool(&self) -> PoolUsage {
+        let mut configured = 0u32;
+        let mut busy = 0u32;
+        let mut in_use = 0u32;
+        for c in &self.cores {
+            configured += c.configured_replicas();
+            busy += c.busy_replicas();
+            for st in &c.stages {
+                in_use += st.busy.max(st.replicas);
+            }
+        }
+        PoolUsage { budget: self.budget, configured, busy, in_use }
+    }
+
+    /// Record the current occupancy into the peak tracker.
+    pub fn note(&mut self) {
+        let u = self.pool().in_use;
+        if u > self.peak_in_use {
+            self.peak_in_use = u;
+        }
+    }
+
+    /// Highest pool occupancy seen so far (includes rolling-shrink
+    /// overshoot — configured replicas never exceed the budget, this
+    /// may).
+    pub fn peak_in_use(&self) -> u32 {
+        self.peak_in_use
+    }
+
+    /// Atomically activate one configuration per member (a joint
+    /// decision).  Validates Σ replicas ≤ budget across the WHOLE new
+    /// fleet configuration before touching any member; on error nothing
+    /// changes.
+    pub fn apply(&mut self, configs: &[(PipelineConfig, f64)]) -> Result<(), String> {
+        if configs.len() != self.cores.len() {
+            return Err(format!(
+                "fleet apply: {} configs for {} members",
+                configs.len(),
+                self.cores.len()
+            ));
+        }
+        let next: u32 = configs.iter().map(|(cfg, _)| cfg.total_replicas()).sum();
+        if next > self.budget {
+            return Err(format!(
+                "fleet apply would configure {next} replicas over a {} budget",
+                self.budget
+            ));
+        }
+        for (core, (cfg, lambda)) in self.cores.iter_mut().zip(configs) {
+            core.apply_config(cfg, *lambda);
+        }
+        self.note();
+        Ok(())
+    }
+
+    /// Σ configured replicas across the fleet.
+    pub fn configured_replicas(&self) -> u32 {
+        self.cores.iter().map(ClusterCore::configured_replicas).sum()
+    }
+
+    /// End of run: per-member accounting, member order preserved.
+    pub fn into_accountings(self) -> Vec<crate::cluster::accounting::Accounting> {
+        self.cores.into_iter().map(ClusterCore::into_accounting).collect()
+    }
+}
+
+/// One staged joint decision (a decision per member) and its activation
+/// time.
+#[derive(Debug, Clone)]
+pub struct StagedFleet {
+    pub decisions: Vec<Decision>,
+    pub at: f64,
+}
+
+/// FIFO apply-delay stager for joint fleet decisions — the fleet twin
+/// of [`crate::cluster::reconfig::Reconfig`], kept separate so a
+/// decision vector activates atomically (a member-by-member stager
+/// could interleave two ticks and transiently violate the budget).
+#[derive(Debug)]
+pub struct FleetReconfig {
+    pub apply_delay: f64,
+    pending: VecDeque<StagedFleet>,
+}
+
+impl FleetReconfig {
+    pub fn new(apply_delay: f64) -> Self {
+        FleetReconfig { apply_delay: apply_delay.max(0.0), pending: VecDeque::new() }
+    }
+
+    /// Stage a joint decision at `now`; returns its activation time.
+    pub fn stage(&mut self, now: f64, decisions: Vec<Decision>) -> f64 {
+        let at = now + self.apply_delay;
+        self.pending.push_back(StagedFleet { decisions, at });
+        at
+    }
+
+    /// Pop the oldest staged decision whose activation time has come.
+    pub fn pop_due(&mut self, now: f64) -> Option<StagedFleet> {
+        if self.pending.front().is_some_and(|s| s.at <= now + 1e-9) {
+            self.pending.pop_front()
+        } else {
+            None
+        }
+    }
+
+    pub fn next_due(&self) -> Option<f64> {
+        self.pending.front().map(|s| s.at)
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::core::FormOutcome;
+    use crate::optimizer::ip::StageConfig;
+
+    fn config(stages: &[(usize, u32)]) -> PipelineConfig {
+        PipelineConfig {
+            stages: stages
+                .iter()
+                .enumerate()
+                .map(|(i, &(batch, replicas))| StageConfig {
+                    variant_idx: 0,
+                    variant_key: format!("v{i}"),
+                    batch,
+                    replicas,
+                    cost: 1.0,
+                    accuracy: 90.0,
+                    latency: 0.1,
+                })
+                .collect(),
+            pas: 90.0,
+            cost: 2.0,
+            batch_sum: stages.iter().map(|s| s.0).sum(),
+            objective: 0.0,
+            latency_e2e: 0.2,
+        }
+    }
+
+    fn two_member_fleet(budget: u32) -> FleetCore {
+        FleetCore::new(
+            budget,
+            &[
+                (config(&[(1, 2), (1, 1)]), 10.0, DropPolicy::new(1.0, true)),
+                (config(&[(1, 1)]), 10.0, DropPolicy::new(1.0, true)),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn new_rejects_over_budget_init() {
+        let inits = vec![
+            (config(&[(1, 4), (1, 4)]), 10.0, DropPolicy::new(1.0, true)),
+            (config(&[(1, 4)]), 10.0, DropPolicy::new(1.0, true)),
+        ];
+        assert!(FleetCore::new(11, &inits).is_err());
+        assert!(FleetCore::new(12, &inits).is_ok());
+    }
+
+    #[test]
+    fn apply_is_atomic_and_budget_checked() {
+        let mut f = two_member_fleet(4);
+        // over budget: 3 + 2 = 5 > 4 — rejected, nothing changes
+        let err = f.apply(&[(config(&[(1, 2), (1, 1)]), 10.0), (config(&[(1, 2)]), 10.0)]);
+        assert!(err.is_err());
+        assert_eq!(f.configured_replicas(), 4);
+        assert_eq!(f.member(1).stages[0].replicas, 1);
+        // wrong arity rejected
+        assert!(f.apply(&[(config(&[(1, 1)]), 10.0)]).is_err());
+        // within budget: applied to every member
+        f.apply(&[(config(&[(2, 1), (1, 1)]), 10.0), (config(&[(4, 2)]), 10.0)]).unwrap();
+        assert_eq!(f.configured_replicas(), 4);
+        assert_eq!(f.member(1).stages[0].replicas, 2);
+        assert_eq!(f.member(1).stages[0].batch, 4);
+    }
+
+    #[test]
+    fn pool_tracks_rolling_shrink_overshoot() {
+        let mut f = two_member_fleet(4);
+        // occupy both replicas of member 0 stage 0
+        f.member_mut(0).ingest(0, 0.0);
+        f.member_mut(0).ingest(1, 0.0);
+        assert!(matches!(f.member_mut(0).try_form(0, 0.0), FormOutcome::Formed(_)));
+        assert!(matches!(f.member_mut(0).try_form(0, 0.0), FormOutcome::Formed(_)));
+        f.note();
+        assert_eq!(f.pool().busy, 2);
+        // shrink member 0 stage 0 to 1 replica while 2 batches in flight
+        f.apply(&[(config(&[(1, 1), (1, 1)]), 10.0), (config(&[(1, 1)]), 10.0)]).unwrap();
+        let u = f.pool();
+        assert_eq!(u.configured, 3);
+        assert!(u.configured <= u.budget);
+        assert_eq!(u.in_use, 4, "old batches keep their slots until done");
+        assert!(f.peak_in_use() >= 4);
+        f.member_mut(0).finish_service(0);
+        f.member_mut(0).finish_service(0);
+        f.note();
+        assert_eq!(f.pool().in_use, 3);
+    }
+
+    #[test]
+    fn member_accounting_is_isolated() {
+        let mut f = two_member_fleet(4);
+        f.member_mut(0).ingest(0, 0.0);
+        f.member_mut(1).ingest(0, 0.0);
+        f.member_mut(1).complete(0, 0.5);
+        let accs = f.into_accountings();
+        assert_eq!(accs.len(), 2);
+        assert_eq!(accs[0].completed_count(), 0);
+        assert_eq!(accs[1].completed_count(), 1);
+    }
+
+    #[test]
+    fn fleet_reconfig_fifo_after_delay() {
+        let d = |pas: f64| Decision {
+            config: PipelineConfig {
+                stages: Vec::new(),
+                pas,
+                cost: 1.0,
+                batch_sum: 0,
+                objective: 0.0,
+                latency_e2e: 0.0,
+            },
+            lambda_predicted: 10.0,
+            decision_time: 0.0,
+            fallback: false,
+        };
+        let mut r = FleetReconfig::new(8.0);
+        assert_eq!(r.stage(10.0, vec![d(1.0), d(2.0)]), 18.0);
+        assert_eq!(r.stage(20.0, vec![d(3.0), d(4.0)]), 28.0);
+        assert_eq!(r.pending_len(), 2);
+        assert!(r.pop_due(17.9).is_none());
+        let first = r.pop_due(18.0).unwrap();
+        assert_eq!(first.decisions.len(), 2);
+        assert_eq!(first.decisions[0].config.pas, 1.0);
+        assert_eq!(r.next_due(), Some(28.0));
+        assert!(r.pop_due(20.0).is_none());
+        assert_eq!(r.pop_due(30.0).unwrap().decisions[1].config.pas, 4.0);
+        assert_eq!(r.pending_len(), 0);
+    }
+}

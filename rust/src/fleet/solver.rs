@@ -1,0 +1,736 @@
+//! The joint cross-pipeline allocator: split one replica budget across
+//! N pipelines so the fleet-total objective (Σ per-pipeline Eq. 9) is
+//! maximized.
+//!
+//! Layering (mirrors the paper's §4.3 multi-objective structure):
+//!
+//! * [`solve_under_budget`] — one pipeline under a *total*-replica cap.
+//!   Fast path: the per-pipeline exact IP ([`ip::solve_with_options`])
+//!   over options filtered to the cap; when its optimum already fits
+//!   the budget it is optimal for the constrained problem too.  Slow
+//!   path: an exact DFS over the (Pareto-pruned, small) option sets
+//!   with the Σ-replica constraint.
+//! * [`solve_fleet`] — greedy marginal-gain allocation: every member
+//!   starts at its one-replica-per-stage floor and each remaining
+//!   replica goes to the pipeline whose next grant buys the most
+//!   objective per replica (with a lookahead jump to a member's minimum
+//!   feasible allocation, so crossing an infeasibility threshold is
+//!   visible to the greedy).  The result is floored at the even-split
+//!   baseline: the solver computes both and returns the better, so a
+//!   fleet allocation is never worse than splitting the pool evenly.
+//! * [`brute_best_split`] — exhaustive split enumeration for tiny
+//!   fleets; the optimality cross-check the tests pin the greedy
+//!   against.
+//!
+//! [`FleetAdapter`] packages the allocator as a [`FleetController`]
+//! (per-member predictors → joint solve → one [`Decision`] per member)
+//! for the fleet drivers in `simulator::sim` and `serving::engine`.
+//!
+//! Modeling note: a member whose IP is infeasible even at the full pool
+//! gets a budget-clamped survival config ([`fallback_under_budget`] —
+//! lightest variants, throughput-greedy replica placement) and sheds
+//! the excess through §4.5 dropping, exactly like the single-pipeline
+//! fallback.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::coordinator::adapter::{AdapterConfig, Decision};
+use crate::models::accuracy::AccuracyMetric;
+use crate::models::pipelines::PipelineSpec;
+use crate::optimizer::ip::{self, materialize, PipelineConfig, Problem, StageConfig};
+use crate::optimizer::options::StageOption;
+use crate::predictor::Predictor;
+use crate::profiler::profile::PipelineProfiles;
+
+/// Exact single-pipeline solve under a total-replica budget.  `None`
+/// when no SLA-feasible configuration fits `budget` replicas.
+pub fn solve_under_budget(
+    p: &Problem,
+    options: &[Vec<StageOption>],
+    budget: u32,
+) -> Option<PipelineConfig> {
+    let s = options.len() as u32;
+    if s == 0 || budget < s {
+        return None;
+    }
+    // Every other stage needs at least one replica.
+    let cap = budget - (s - 1);
+    let filtered: Vec<Vec<StageOption>> = options
+        .iter()
+        .map(|os| os.iter().filter(|o| o.replicas <= cap).cloned().collect())
+        .collect();
+    if filtered.iter().any(Vec::is_empty) {
+        return None;
+    }
+    // Fast path: the unconstrained optimum that already fits the pool
+    // is optimal for the constrained problem as well.
+    if let Some((cfg, _)) = ip::solve_with_options(p, &filtered) {
+        if cfg.total_replicas() <= budget {
+            return Some(cfg);
+        }
+    }
+    budget_dfs(p, &filtered, budget)
+}
+
+/// Exact DFS with the Σ-replica constraint active (slow path of
+/// [`solve_under_budget`]; option sets are Pareto-pruned and small).
+fn budget_dfs(p: &Problem, options: &[Vec<StageOption>], budget: u32) -> Option<PipelineConfig> {
+    let s = options.len();
+    let sla = p.spec.sla_e2e();
+    let mut suf_min_lat = vec![0.0f64; s + 1];
+    let mut suf_min_rep = vec![0u32; s + 1];
+    for d in (0..s).rev() {
+        let min_lat =
+            options[d].iter().map(StageOption::total_latency).fold(f64::MAX, f64::min);
+        let min_rep = options[d].iter().map(|o| o.replicas).min().unwrap_or(1);
+        suf_min_lat[d] = suf_min_lat[d + 1] + min_lat;
+        suf_min_rep[d] = suf_min_rep[d + 1] + min_rep;
+    }
+
+    struct Ctx<'a> {
+        p: &'a Problem<'a>,
+        options: &'a [Vec<StageOption>],
+        suf_min_lat: &'a [f64],
+        suf_min_rep: &'a [u32],
+        sla: f64,
+        budget: u32,
+    }
+
+    fn rec(
+        c: &Ctx,
+        depth: usize,
+        lat: f64,
+        reps: u32,
+        picks: &mut Vec<usize>,
+        best: &mut Option<(f64, Vec<usize>)>,
+    ) {
+        if depth == c.options.len() {
+            let cfg = materialize(c.p, c.options, picks);
+            if best.as_ref().is_none_or(|(obj, _)| cfg.objective > *obj) {
+                *best = Some((cfg.objective, picks.clone()));
+            }
+            return;
+        }
+        for (oi, o) in c.options[depth].iter().enumerate() {
+            let nlat = lat + o.total_latency();
+            if nlat + c.suf_min_lat[depth + 1] > c.sla {
+                continue;
+            }
+            let nreps = reps + o.replicas;
+            if nreps + c.suf_min_rep[depth + 1] > c.budget {
+                continue;
+            }
+            picks[depth] = oi;
+            rec(c, depth + 1, nlat, nreps, picks, best);
+        }
+    }
+
+    let ctx = Ctx { p, options, suf_min_lat: &suf_min_lat, suf_min_rep: &suf_min_rep, sla, budget };
+    let mut picks = vec![0usize; s];
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    rec(&ctx, 0, 0.0, 0, &mut picks, &mut best);
+    best.map(|(_, picks)| materialize(p, options, &picks))
+}
+
+/// Smallest total-replica budget at which the pipeline is SLA-feasible
+/// (searched in `[n_stages, hi]`); `None` if infeasible even at `hi`.
+pub fn min_feasible_replicas(p: &Problem, options: &[Vec<StageOption>], hi: u32) -> Option<u32> {
+    let mut lo = options.len() as u32;
+    if lo == 0 || hi < lo {
+        return None;
+    }
+    solve_under_budget(p, options, hi)?;
+    // feasibility is monotone in the budget: binary search the threshold
+    let mut hi = hi;
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if solve_under_budget(p, options, mid).is_some() {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(lo)
+}
+
+/// Budget-clamped survival configuration (the fleet twin of
+/// [`ip::fallback_config`]): lightest variant per stage at its
+/// throughput-optimal batch, with the granted replicas placed greedily
+/// on the most throughput-starved stage.  Always uses ≤ `budget`
+/// replicas and ≥ 1 per stage; §4.5 dropping sheds what it cannot
+/// serve.
+pub fn fallback_under_budget(p: &Problem, budget: u32) -> PipelineConfig {
+    let s = p.profiles.stages.len();
+    let budget = budget.max(s as u32);
+    let w = p.spec.weights;
+
+    struct Pick<'a> {
+        vi: usize,
+        vp: &'a crate::profiler::profile::VariantProfile,
+        batch: usize,
+        tput1: f64,
+    }
+    let picks: Vec<Pick> = p
+        .profiles
+        .stages
+        .iter()
+        .map(|st| {
+            let (vi, vp) = st
+                .variants
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    (a.cost_per_replica(), a.latency.latency(1))
+                        .partial_cmp(&(b.cost_per_replica(), b.latency.latency(1)))
+                        .unwrap()
+                })
+                .unwrap();
+            let batch = vp.latency.best_batch();
+            Pick { vi, vp, batch, tput1: vp.latency.throughput(batch) }
+        })
+        .collect();
+
+    let mut replicas = vec![1u32; s];
+    let mut left = budget - s as u32;
+    while left > 0 {
+        // most starved stage = lowest provisioned throughput, if any is
+        // still short of λ
+        let (i, headroom) = replicas
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (i, r as f64 * picks[i].tput1))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        if headroom >= p.lambda {
+            break; // every stage keeps up; don't burn pool for nothing
+        }
+        replicas[i] += 1;
+        left -= 1;
+    }
+
+    let mut stages = Vec::with_capacity(s);
+    let mut cost = 0.0;
+    let mut batch_sum = 0usize;
+    let mut lat = 0.0;
+    let mut pas_frac = 1.0;
+    for (pk, &n) in picks.iter().zip(&replicas) {
+        stages.push(StageConfig {
+            variant_idx: pk.vi,
+            variant_key: pk.vp.variant.key(),
+            batch: pk.batch,
+            replicas: n,
+            cost: n as f64 * pk.vp.cost_per_replica(),
+            accuracy: pk.vp.variant.accuracy,
+            latency: pk.vp.latency.latency(pk.batch),
+        });
+        cost += n as f64 * pk.vp.cost_per_replica();
+        batch_sum += pk.batch;
+        lat += pk.vp.latency.latency(pk.batch)
+            + crate::queueing::worst_case_delay(pk.batch, p.lambda);
+        pas_frac *= pk.vp.variant.accuracy / 100.0;
+    }
+    PipelineConfig {
+        stages,
+        pas: 100.0 * pas_frac,
+        cost,
+        batch_sum,
+        objective: w.alpha * 100.0 * pas_frac - w.beta * cost - w.delta * batch_sum as f64,
+        latency_e2e: lat,
+    }
+}
+
+/// One member's share of the pool and the configuration it bought.
+#[derive(Debug, Clone)]
+pub struct MemberAllocation {
+    /// Replicas granted from the shared pool.
+    pub budget: u32,
+    /// Chosen configuration (solved or budget-clamped fallback).
+    pub config: PipelineConfig,
+    /// Replicas the configuration actually occupies (≤ `budget`).
+    pub replicas: u32,
+    /// False when the member IP was infeasible within its share and the
+    /// clamped fallback was used.
+    pub solved: bool,
+}
+
+/// The joint allocation across the fleet.
+#[derive(Debug, Clone)]
+pub struct FleetAllocation {
+    pub members: Vec<MemberAllocation>,
+    /// Σ granted member shares ([`solve_fleet`] resets this to the pool
+    /// size it solved against; greedy may leave part of the pool
+    /// ungranted when no member benefits).
+    pub budget: u32,
+    /// Σ member `replicas` — never exceeds `budget`.
+    pub replicas_used: u32,
+    /// Σ member objectives (the quantity the greedy maximizes).
+    pub total_objective: f64,
+}
+
+/// The even-split baseline shares: every member starts at its stage
+/// floor, the rest of the pool is dealt round-robin.
+pub fn even_shares(budget: u32, floors: &[u32]) -> Vec<u32> {
+    let mut shares = floors.to_vec();
+    let floor_total: u32 = floors.iter().sum();
+    let mut left = budget.saturating_sub(floor_total);
+    let n = floors.len();
+    let mut i = 0usize;
+    while left > 0 && n > 0 {
+        shares[i] += 1;
+        left -= 1;
+        i = (i + 1) % n;
+    }
+    shares
+}
+
+fn eval_member(p: &Problem, options: &[Vec<StageOption>], b: u32) -> (PipelineConfig, bool) {
+    match solve_under_budget(p, options, b) {
+        Some(cfg) => (cfg, true),
+        None => (fallback_under_budget(p, b), false),
+    }
+}
+
+/// Evaluate an explicit share vector (used by the even-split baseline
+/// and the property tests).
+pub fn allocate_at(
+    problems: &[Problem],
+    options: &[Vec<Vec<StageOption>>],
+    shares: &[u32],
+) -> FleetAllocation {
+    let members: Vec<MemberAllocation> = problems
+        .iter()
+        .zip(options)
+        .zip(shares)
+        .map(|((p, os), &b)| {
+            let (config, solved) = eval_member(p, os, b);
+            let replicas = config.total_replicas();
+            MemberAllocation { budget: b, config, replicas, solved }
+        })
+        .collect();
+    FleetAllocation {
+        budget: shares.iter().sum(),
+        replicas_used: members.iter().map(|m| m.replicas).sum(),
+        total_objective: members.iter().map(|m| m.config.objective).sum(),
+        members,
+    }
+}
+
+/// Greedy marginal-gain joint solve.  `None` only when `budget` cannot
+/// cover one replica per stage across the fleet; otherwise the returned
+/// allocation respects the budget and its total objective is at least
+/// the even-split baseline's.
+pub fn solve_fleet(problems: &[Problem], budget: u32) -> Option<FleetAllocation> {
+    let n = problems.len();
+    if n == 0 {
+        return Some(FleetAllocation {
+            members: Vec::new(),
+            budget,
+            replicas_used: 0,
+            total_objective: 0.0,
+        });
+    }
+    let floors: Vec<u32> = problems.iter().map(|p| p.profiles.stages.len() as u32).collect();
+    let floor_total: u32 = floors.iter().sum();
+    if budget < floor_total {
+        return None;
+    }
+    let options: Vec<Vec<Vec<StageOption>>> =
+        problems.iter().map(|p| p.stage_options()).collect();
+
+    // Memoized member evaluation: (member, share) → (objective, solved).
+    let mut cache: Vec<HashMap<u32, (f64, bool)>> = vec![HashMap::new(); n];
+    let obj_at = |cache: &mut [HashMap<u32, (f64, bool)>], i: usize, b: u32| -> f64 {
+        if let Some(&(o, _)) = cache[i].get(&b) {
+            return o;
+        }
+        let (cfg, solved) = eval_member(&problems[i], &options[i], b);
+        let o = cfg.objective;
+        cache[i].insert(b, (o, solved));
+        o
+    };
+
+    // Lookahead targets: each member's minimum feasible allocation, so
+    // the greedy can see across an infeasibility threshold.
+    let min_b: Vec<Option<u32>> =
+        (0..n).map(|i| min_feasible_replicas(&problems[i], &options[i], budget)).collect();
+
+    let mut shares = floors.clone();
+    let mut remaining = budget - floor_total;
+    while remaining > 0 {
+        let mut best: Option<(usize, u32, f64)> = None;
+        for i in 0..n {
+            let cur = obj_at(&mut cache, i, shares[i]);
+            let mut cands = vec![1u32];
+            if let Some(mb) = min_b[i] {
+                if mb > shares[i] {
+                    cands.push(mb - shares[i]);
+                }
+            }
+            for &k in &cands {
+                if k == 0 || k > remaining {
+                    continue;
+                }
+                let gain = obj_at(&mut cache, i, shares[i] + k) - cur;
+                if gain <= 1e-12 {
+                    continue;
+                }
+                let rate = gain / k as f64;
+                if best.as_ref().is_none_or(|&(_, _, r)| rate > r) {
+                    best = Some((i, k, rate));
+                }
+            }
+        }
+        match best {
+            Some((i, k, _)) => {
+                shares[i] += k;
+                remaining -= k;
+            }
+            None => break, // no member benefits from another replica
+        }
+    }
+
+    // Never worse than the even split: compute both, keep the better.
+    let even = even_shares(budget, &floors);
+    let greedy_total: f64 = (0..n).map(|i| obj_at(&mut cache, i, shares[i])).sum();
+    let even_total: f64 = (0..n).map(|i| obj_at(&mut cache, i, even[i])).sum();
+    let final_shares = if greedy_total + 1e-12 >= even_total { shares } else { even };
+
+    let mut alloc = allocate_at(problems, &options, &final_shares);
+    alloc.budget = budget;
+    debug_assert!(alloc.replicas_used <= budget, "fleet allocation exceeds budget");
+    Some(alloc)
+}
+
+/// Exhaustive best split for tiny fleets (the greedy's cross-check):
+/// best Σ objective over every share vector with `shares[i] ≥
+/// n_stages_i` and `Σ shares ≤ budget`.
+pub fn brute_best_split(problems: &[Problem], budget: u32) -> Option<f64> {
+    let n = problems.len();
+    if n == 0 {
+        return Some(0.0);
+    }
+    let floors: Vec<u32> = problems.iter().map(|p| p.profiles.stages.len() as u32).collect();
+    let floor_total: u32 = floors.iter().sum();
+    if budget < floor_total {
+        return None;
+    }
+    let options: Vec<Vec<Vec<StageOption>>> =
+        problems.iter().map(|p| p.stage_options()).collect();
+    let mut eval =
+        |i: usize, b: u32| -> f64 { eval_member(&problems[i], &options[i], b).0.objective };
+
+    fn rec(
+        i: usize,
+        left: u32,
+        floors: &[u32],
+        acc: f64,
+        eval: &mut dyn FnMut(usize, u32) -> f64,
+        best: &mut f64,
+    ) {
+        let n = floors.len();
+        if i == n - 1 {
+            for b in floors[i]..=left {
+                let total = acc + eval(i, b);
+                if total > *best {
+                    *best = total;
+                }
+            }
+            return;
+        }
+        let rest_floor: u32 = floors[i + 1..].iter().sum();
+        for b in floors[i]..=left.saturating_sub(rest_floor) {
+            rec(i + 1, left - b, floors, acc + eval(i, b), eval, best);
+        }
+    }
+
+    let mut best = f64::MIN;
+    rec(0, budget, &floors, 0.0, &mut eval, &mut best);
+    Some(best)
+}
+
+// ---------------------------------------------------------------------------
+// Fleet controller: per-member predictors + the joint solve, packaged
+// for the drivers.
+// ---------------------------------------------------------------------------
+
+/// A joint decision source for the fleet drivers: both the DES fleet
+/// loop and the live fleet engine call this once per adaptation tick
+/// and receive one [`Decision`] per member.
+pub trait FleetController {
+    /// Initial configurations, decided on each trace's first-second
+    /// rate before any request arrives.
+    fn initial(&mut self, first_rates: &[f64]) -> Vec<Decision>;
+
+    /// One adaptation-tick joint decision from the per-member observed
+    /// load histories.
+    fn decide(&mut self, now: f64, histories: &[Vec<f64>]) -> Vec<Decision>;
+}
+
+/// The fleet adapter: one predictor per member feeding the joint
+/// allocator each tick.
+pub struct FleetAdapter {
+    pub specs: Vec<PipelineSpec>,
+    pub profiles: Vec<PipelineProfiles>,
+    pub metric: AccuracyMetric,
+    /// The shared replica pool.
+    pub budget: u32,
+    pub config: AdapterConfig,
+    pub predictors: Vec<Box<dyn Predictor + Send>>,
+}
+
+impl FleetAdapter {
+    /// Errors when member vectors disagree in length or the budget
+    /// cannot cover one replica per stage (the only condition under
+    /// which [`solve_fleet`] returns `None`).
+    pub fn new(
+        specs: Vec<PipelineSpec>,
+        profiles: Vec<PipelineProfiles>,
+        metric: AccuracyMetric,
+        budget: u32,
+        config: AdapterConfig,
+        predictors: Vec<Box<dyn Predictor + Send>>,
+    ) -> Result<FleetAdapter, String> {
+        if specs.len() != profiles.len() || specs.len() != predictors.len() {
+            return Err(format!(
+                "fleet adapter: {} specs vs {} profiles vs {} predictors",
+                specs.len(),
+                profiles.len(),
+                predictors.len()
+            ));
+        }
+        let floor: u32 = specs.iter().map(|s| s.n_stages() as u32).sum();
+        if budget < floor {
+            return Err(format!("fleet budget {budget} below stage floor {floor}"));
+        }
+        Ok(FleetAdapter { specs, profiles, metric, budget, config, predictors })
+    }
+
+    pub fn n_members(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Joint decision for explicit per-member λ (sweeps / tests / the
+    /// initial tick).
+    pub fn decide_for_lambdas(&mut self, lambdas: &[f64]) -> Vec<Decision> {
+        assert_eq!(lambdas.len(), self.specs.len());
+        let t0 = Instant::now();
+        let problems: Vec<Problem> = self
+            .specs
+            .iter()
+            .zip(&self.profiles)
+            .zip(lambdas)
+            .map(|((spec, prof), &l)| Problem {
+                spec,
+                profiles: prof,
+                lambda: l.max(0.5),
+                metric: self.metric,
+                max_replicas: self.config.max_replicas.min(self.budget),
+            })
+            .collect();
+        let alloc = solve_fleet(&problems, self.budget)
+            .expect("budget >= stage floor was checked at construction");
+        let decision_time = t0.elapsed().as_secs_f64();
+        alloc
+            .members
+            .into_iter()
+            .zip(lambdas)
+            .map(|(m, &l)| Decision {
+                config: m.config,
+                lambda_predicted: l.max(0.5),
+                decision_time,
+                fallback: !m.solved,
+            })
+            .collect()
+    }
+}
+
+impl FleetController for FleetAdapter {
+    fn initial(&mut self, first_rates: &[f64]) -> Vec<Decision> {
+        self.decide_for_lambdas(first_rates)
+    }
+
+    fn decide(&mut self, now: f64, histories: &[Vec<f64>]) -> Vec<Decision> {
+        let lambdas: Vec<f64> = self
+            .predictors
+            .iter_mut()
+            .zip(histories)
+            .map(|(p, h)| p.predict(now, h).max(0.5))
+            .collect();
+        self.decide_for_lambdas(&lambdas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::pipelines;
+    use crate::profiler::analytic::pipeline_profiles;
+
+    fn problem<'a>(
+        spec: &'a PipelineSpec,
+        prof: &'a PipelineProfiles,
+        lambda: f64,
+    ) -> Problem<'a> {
+        Problem::new(spec, prof, lambda)
+    }
+
+    #[test]
+    fn budget_inactive_matches_unconstrained() {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let p = problem(&spec, &prof, 12.0);
+        let options = p.stage_options();
+        let free = ip::solve_with_options(&p, &options).unwrap().0;
+        let capped = solve_under_budget(&p, &options, 1000).unwrap();
+        assert!((free.objective - capped.objective).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_constrained_solve_respects_budget_and_sla() {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let p = problem(&spec, &prof, 25.0);
+        let options = p.stage_options();
+        let free = ip::solve_with_options(&p, &options).unwrap().0;
+        // squeeze below the unconstrained usage
+        for b in (2..=free.total_replicas()).rev() {
+            if let Some(cfg) = solve_under_budget(&p, &options, b) {
+                assert!(cfg.total_replicas() <= b);
+                assert!(cfg.latency_e2e <= spec.sla_e2e() + 1e-9);
+                assert!(cfg.objective <= free.objective + 1e-9);
+            }
+        }
+        assert!(solve_under_budget(&p, &options, 1).is_none(), "below stage floor");
+    }
+
+    #[test]
+    fn min_feasible_is_threshold() {
+        let spec = pipelines::by_name("video").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let p = problem(&spec, &prof, 20.0);
+        let options = p.stage_options();
+        let mb = min_feasible_replicas(&p, &options, 64).unwrap();
+        assert!(solve_under_budget(&p, &options, mb).is_some());
+        if mb > 2 {
+            assert!(solve_under_budget(&p, &options, mb - 1).is_none());
+        }
+    }
+
+    #[test]
+    fn fallback_clamped_to_budget() {
+        let spec = pipelines::by_name("nlp").unwrap();
+        let prof = pipeline_profiles(&spec);
+        let p = problem(&spec, &prof, 5_000.0);
+        for budget in [3u32, 5, 9] {
+            let fb = fallback_under_budget(&p, budget);
+            assert_eq!(fb.stages.len(), 3);
+            assert!(fb.total_replicas() <= budget, "budget {budget}");
+            assert!(fb.stages.iter().all(|s| s.replicas >= 1));
+        }
+    }
+
+    #[test]
+    fn greedy_respects_budget_and_beats_even_split() {
+        let specs: Vec<PipelineSpec> = ["video", "audio-sent", "nlp"]
+            .iter()
+            .map(|n| pipelines::by_name(n).unwrap())
+            .collect();
+        let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+        let problems: Vec<Problem> = specs
+            .iter()
+            .zip(&profs)
+            .zip([22.0, 9.0, 6.0])
+            .map(|((s, pf), l)| problem(s, pf, l))
+            .collect();
+        for budget in [7u32, 10, 16, 24] {
+            let alloc = solve_fleet(&problems, budget).unwrap();
+            assert!(alloc.replicas_used <= budget, "budget {budget}");
+            let floors: Vec<u32> =
+                problems.iter().map(|p| p.profiles.stages.len() as u32).collect();
+            let options: Vec<Vec<Vec<StageOption>>> =
+                problems.iter().map(|p| p.stage_options()).collect();
+            let even = allocate_at(&problems, &options, &even_shares(budget, &floors));
+            assert!(
+                alloc.total_objective >= even.total_objective - 1e-9,
+                "budget {budget}: greedy {} < even {}",
+                alloc.total_objective,
+                even.total_objective
+            );
+        }
+        assert!(solve_fleet(&problems, 6).is_none(), "floor is 7");
+    }
+
+    #[test]
+    fn greedy_bounded_by_brute_on_tiny_fleet() {
+        let specs: Vec<PipelineSpec> =
+            ["video", "sum-qa"].iter().map(|n| pipelines::by_name(n).unwrap()).collect();
+        let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+        let problems: Vec<Problem> = specs
+            .iter()
+            .zip(&profs)
+            .zip([15.0, 8.0])
+            .map(|((s, pf), l)| problem(s, pf, l))
+            .collect();
+        for budget in [4u32, 6, 9] {
+            let alloc = solve_fleet(&problems, budget).unwrap();
+            let brute = brute_best_split(&problems, budget).unwrap();
+            assert!(
+                alloc.total_objective <= brute + 1e-9,
+                "budget {budget}: greedy {} above brute optimum {brute}",
+                alloc.total_objective
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_adapter_decides_per_member() {
+        let specs: Vec<PipelineSpec> = ["video", "audio-sent"]
+            .iter()
+            .map(|n| pipelines::by_name(n).unwrap())
+            .collect();
+        let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+        let predictors: Vec<Box<dyn Predictor + Send>> = (0..2)
+            .map(|_| {
+                Box::new(crate::predictor::ReactivePredictor::default())
+                    as Box<dyn Predictor + Send>
+            })
+            .collect();
+        let mut fa = FleetAdapter::new(
+            specs,
+            profs,
+            AccuracyMetric::Pas,
+            20,
+            AdapterConfig::default(),
+            predictors,
+        )
+        .unwrap();
+        let ds = fa.decide_for_lambdas(&[10.0, 5.0]);
+        assert_eq!(ds.len(), 2);
+        let used: u32 = ds.iter().map(|d| d.config.total_replicas()).sum();
+        assert!(used <= 20);
+        assert!(ds.iter().all(|d| !d.config.stages.is_empty()));
+        // controller path with histories
+        let ds2 = fa.decide(60.0, &[vec![8.0; 40], vec![4.0; 40]]);
+        assert_eq!(ds2.len(), 2);
+        // budget below the fleet stage floor is rejected at construction
+        let specs2: Vec<PipelineSpec> =
+            vec![pipelines::by_name("nlp").unwrap(), pipelines::by_name("video").unwrap()];
+        let profs2: Vec<PipelineProfiles> = specs2.iter().map(pipeline_profiles).collect();
+        let preds2: Vec<Box<dyn Predictor + Send>> = (0..2)
+            .map(|_| {
+                Box::new(crate::predictor::ReactivePredictor::default())
+                    as Box<dyn Predictor + Send>
+            })
+            .collect();
+        assert!(FleetAdapter::new(
+            specs2,
+            profs2,
+            AccuracyMetric::Pas,
+            4,
+            AdapterConfig::default(),
+            preds2
+        )
+        .is_err());
+    }
+}

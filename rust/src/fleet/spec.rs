@@ -1,0 +1,353 @@
+//! Fleet description: N heterogeneous pipelines sharing one replica
+//! budget.
+//!
+//! A [`FleetSpec`] names the member pipelines (each a paper pipeline
+//! from [`crate::models::pipelines`] with its own workload pattern,
+//! trace seed and optional SLA scaling) plus the *global* replica
+//! budget every stage of every member draws from.  Specs load from /
+//! dump to JSON through [`crate::util::json`] so fleet scenarios are
+//! shareable files, and [`FleetSpec::traces`] materializes the member
+//! λ traces through the correlated multi-pipeline generator
+//! ([`crate::workload::tracegen::generate_fleet`]).
+
+use crate::models::pipelines::{self, PipelineSpec};
+use crate::util::json::Json;
+use crate::workload::trace::Trace;
+use crate::workload::tracegen::{generate_fleet_seeded, FleetCorrelation, Pattern};
+
+/// One pipeline instance inside a fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetMember {
+    /// Instance label, unique within the fleet (one pipeline type can
+    /// appear under several labels with different workloads).
+    pub name: String,
+    /// Paper pipeline this member runs (`models::pipelines::by_name`).
+    pub pipeline: String,
+    /// Workload archetype driving this member's λ trace.
+    pub pattern: Pattern,
+    /// Trace seed (mixed with the correlation envelope).
+    pub seed: u64,
+    /// Per-member SLA override: multiplies the paper's per-stage SLAs
+    /// (1.0 = verbatim Table 6).
+    pub sla_scale: f64,
+}
+
+impl FleetMember {
+    /// Resolve the member's [`PipelineSpec`] with its SLA scaling
+    /// applied.
+    pub fn spec(&self) -> Option<PipelineSpec> {
+        let mut spec = pipelines::by_name(&self.pipeline)?;
+        if self.sla_scale != 1.0 {
+            for s in spec.stage_slas.iter_mut() {
+                *s *= self.sla_scale;
+            }
+        }
+        Some(spec)
+    }
+}
+
+/// A fleet: members + the shared replica budget they compete for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub name: String,
+    pub members: Vec<FleetMember>,
+    /// Global replica budget: Σ over every stage of every member of the
+    /// configured replica count must never exceed this.
+    pub replica_budget: u32,
+    /// Default trace length, seconds.
+    pub seconds: usize,
+    /// How the member traces co-move (one bursting while another
+    /// decays, a shared surge, or independent streams).
+    pub correlation: FleetCorrelation,
+}
+
+impl FleetSpec {
+    /// Resolved per-member pipeline specs (SLA scaling applied).
+    /// Errors on an unknown pipeline name.
+    pub fn specs(&self) -> Result<Vec<PipelineSpec>, String> {
+        self.members
+            .iter()
+            .map(|m| {
+                m.spec().ok_or_else(|| {
+                    format!("fleet member {}: unknown pipeline {}", m.name, m.pipeline)
+                })
+            })
+            .collect()
+    }
+
+    /// Total stage count across members — the absolute replica floor
+    /// (every stage needs at least one replica).
+    pub fn min_replicas(&self) -> Result<u32, String> {
+        Ok(self.specs()?.iter().map(|s| s.n_stages() as u32).sum())
+    }
+
+    /// Structural validation: nonempty, unique member names, known
+    /// pipelines, budget ≥ one replica per stage.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.members.is_empty() {
+            return Err("fleet has no members".into());
+        }
+        for (i, m) in self.members.iter().enumerate() {
+            if self.members[..i].iter().any(|o| o.name == m.name) {
+                return Err(format!("duplicate fleet member name {}", m.name));
+            }
+            if !m.sla_scale.is_finite() || m.sla_scale <= 0.0 {
+                return Err(format!("fleet member {}: sla_scale must be > 0", m.name));
+            }
+        }
+        let floor = self.min_replicas()?;
+        if self.replica_budget < floor {
+            return Err(format!(
+                "replica budget {} below the one-replica-per-stage floor {floor}",
+                self.replica_budget
+            ));
+        }
+        Ok(())
+    }
+
+    /// Materialize the correlated member traces, each from its member's
+    /// own seed (`seconds` overrides the spec default when nonzero).
+    pub fn traces(&self, seconds: usize) -> Vec<Trace> {
+        let secs = if seconds > 0 { seconds } else { self.seconds };
+        let seeded: Vec<(Pattern, u64)> =
+            self.members.iter().map(|m| (m.pattern, m.seed)).collect();
+        let rates = generate_fleet_seeded(&seeded, secs, self.correlation);
+        self.members
+            .iter()
+            .zip(rates)
+            .map(|(m, r)| Trace::new(format!("{}:{}", m.name, m.pattern.name()), r))
+            .collect()
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    /// Parse a fleet spec from JSON text (see [`FleetSpec::to_json`] for
+    /// the shape).  Validates structurally before returning.
+    pub fn parse(text: &str) -> Result<FleetSpec, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let spec = FleetSpec::from_json(&j)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Build from a parsed [`Json`] value.
+    pub fn from_json(j: &Json) -> Result<FleetSpec, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("fleet: missing string field 'name'")?
+            .to_string();
+        let replica_budget = j
+            .get("replica_budget")
+            .and_then(Json::as_i64)
+            .ok_or("fleet: missing numeric field 'replica_budget'")?;
+        if !(0..=u32::MAX as i64).contains(&replica_budget) {
+            return Err(format!("fleet: replica_budget {replica_budget} out of u32 range"));
+        }
+        let seconds = j.get("seconds").and_then(Json::as_usize).unwrap_or(240);
+        let correlation = match j.get("correlation") {
+            None => FleetCorrelation::Independent,
+            Some(c) => {
+                let mode = c
+                    .get("mode")
+                    .and_then(Json::as_str)
+                    .ok_or("fleet: correlation needs a string 'mode'")?;
+                let period = c.get("period").and_then(Json::as_usize).unwrap_or(300);
+                match mode {
+                    "independent" => FleetCorrelation::Independent,
+                    "antiphase" => FleetCorrelation::Antiphase { period },
+                    "in_phase" => FleetCorrelation::InPhase { period },
+                    other => return Err(format!("fleet: unknown correlation mode {other}")),
+                }
+            }
+        };
+        let members_json = j
+            .get("members")
+            .and_then(Json::as_arr)
+            .ok_or("fleet: missing array field 'members'")?;
+        let mut members = Vec::new();
+        for (i, mj) in members_json.iter().enumerate() {
+            let name = mj
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("fleet member {i}: missing 'name'"))?
+                .to_string();
+            let pipeline = mj
+                .get("pipeline")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("fleet member {name}: missing 'pipeline'"))?
+                .to_string();
+            let pattern_name = mj.get("pattern").and_then(Json::as_str).unwrap_or("steady_low");
+            let pattern = Pattern::from_name(pattern_name)
+                .ok_or_else(|| format!("fleet member {name}: unknown pattern {pattern_name}"))?;
+            let seed = match mj.get("seed").and_then(Json::as_i64) {
+                Some(s) if s < 0 => {
+                    return Err(format!("fleet member {name}: seed must be >= 0"))
+                }
+                Some(s) => s as u64,
+                None => 1 + i as u64,
+            };
+            let sla_scale = mj.get("sla_scale").and_then(Json::as_f64).unwrap_or(1.0);
+            members.push(FleetMember { name, pipeline, pattern, seed, sla_scale });
+        }
+        Ok(FleetSpec {
+            name,
+            members,
+            replica_budget: replica_budget as u32,
+            seconds,
+            correlation,
+        })
+    }
+
+    /// Serialize to the canonical JSON shape ([`FleetSpec::parse`]
+    /// round-trips it).
+    pub fn to_json(&self) -> Json {
+        let corr = match self.correlation {
+            FleetCorrelation::Independent => Json::obj().set("mode", "independent"),
+            FleetCorrelation::Antiphase { period } => {
+                Json::obj().set("mode", "antiphase").set("period", period)
+            }
+            FleetCorrelation::InPhase { period } => {
+                Json::obj().set("mode", "in_phase").set("period", period)
+            }
+        };
+        Json::obj()
+            .set("name", self.name.clone())
+            .set("replica_budget", self.replica_budget as usize)
+            .set("seconds", self.seconds)
+            .set("correlation", corr)
+            .set(
+                "members",
+                Json::Arr(
+                    self.members
+                        .iter()
+                        .map(|m| {
+                            Json::obj()
+                                .set("name", m.name.clone())
+                                .set("pipeline", m.pipeline.clone())
+                                .set("pattern", m.pattern.name())
+                                .set("seed", m.seed as usize)
+                                .set("sla_scale", m.sla_scale)
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    /// The canonical 3-pipeline demo fleet: a bursty video feed, a
+    /// fluctuating audio-sentiment feed and a steady NLP feed in
+    /// antiphase, over one 24-replica pool.
+    pub fn demo3() -> FleetSpec {
+        FleetSpec {
+            name: "demo3".into(),
+            members: vec![
+                FleetMember {
+                    name: "video-edge".into(),
+                    pipeline: "video".into(),
+                    pattern: Pattern::Bursty,
+                    seed: 11,
+                    sla_scale: 1.0,
+                },
+                FleetMember {
+                    name: "audio-social".into(),
+                    pipeline: "audio-sent".into(),
+                    pattern: Pattern::Fluctuating,
+                    seed: 12,
+                    sla_scale: 1.0,
+                },
+                FleetMember {
+                    name: "nlp-batchline".into(),
+                    pipeline: "nlp".into(),
+                    pattern: Pattern::SteadyLow,
+                    seed: 13,
+                    sla_scale: 1.0,
+                },
+            ],
+            replica_budget: 24,
+            seconds: 240,
+            correlation: FleetCorrelation::Antiphase { period: 300 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo3_is_valid_and_resolves() {
+        let f = FleetSpec::demo3();
+        f.validate().unwrap();
+        let specs = f.specs().unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[2].n_stages(), 3); // nlp
+        assert_eq!(f.min_replicas().unwrap(), 2 + 2 + 3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let f = FleetSpec::demo3();
+        let text = f.to_json().to_string();
+        let back = FleetSpec::parse(&text).unwrap();
+        assert_eq!(f, back);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        // unknown pipeline
+        let mut f = FleetSpec::demo3();
+        f.members[0].pipeline = "no-such".into();
+        assert!(FleetSpec::parse(&f.to_json().to_string()).is_err());
+        // duplicate names
+        let mut f = FleetSpec::demo3();
+        f.members[1].name = f.members[0].name.clone();
+        assert!(FleetSpec::parse(&f.to_json().to_string()).is_err());
+        // budget under the floor
+        let mut f = FleetSpec::demo3();
+        f.replica_budget = 3;
+        assert!(FleetSpec::parse(&f.to_json().to_string()).is_err());
+        // garbage
+        assert!(FleetSpec::parse("{").is_err());
+        assert!(FleetSpec::parse("{\"name\":\"x\"}").is_err());
+        // out-of-range numerics are rejected, not silently truncated
+        let budget_overflow = r#"{"name":"x","replica_budget":4294967320,"members":
+            [{"name":"a","pipeline":"video"}]}"#;
+        assert!(FleetSpec::parse(budget_overflow).is_err());
+        let negative_seed = r#"{"name":"x","replica_budget":8,"members":
+            [{"name":"a","pipeline":"video","seed":-1}]}"#;
+        assert!(FleetSpec::parse(negative_seed).is_err());
+    }
+
+    #[test]
+    fn sla_scale_applies() {
+        let mut f = FleetSpec::demo3();
+        f.members[0].sla_scale = 2.0;
+        let spec = f.members[0].spec().unwrap();
+        let base = pipelines::by_name("video").unwrap();
+        assert!((spec.sla_e2e() - 2.0 * base.sla_e2e()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traces_materialize_per_member() {
+        let f = FleetSpec::demo3();
+        let traces = f.traces(60);
+        assert_eq!(traces.len(), 3);
+        for t in &traces {
+            assert_eq!(t.seconds(), 60);
+            assert!(t.rates.iter().all(|&r| r >= 0.5));
+        }
+        assert!(traces[0].name.starts_with("video-edge:"));
+    }
+
+    #[test]
+    fn member_seed_changes_only_that_members_trace() {
+        let f = FleetSpec::demo3();
+        let base = f.traces(120);
+        let mut f2 = f.clone();
+        f2.members[1].seed = 99;
+        let alt = f2.traces(120);
+        assert_eq!(base[0].rates, alt[0].rates);
+        assert_ne!(base[1].rates, alt[1].rates, "member 1 seed must matter");
+        assert_eq!(base[2].rates, alt[2].rates);
+    }
+}

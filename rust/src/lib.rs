@@ -43,6 +43,22 @@
 //! bookkeeping — exists exactly once, and `tests/cluster_parity.rs`
 //! pins the drivers to each other.
 //!
+//! ## The fleet layer
+//!
+//! [`fleet`] lifts the same split one level up: N heterogeneous
+//! pipelines share ONE replica pool.  A [`fleet::spec::FleetSpec`]
+//! names the members and the global budget, the joint allocator
+//! ([`fleet::solver::solve_fleet`]) splits the pool by greedy
+//! marginal gain over per-pipeline IP solves (floored at the
+//! even-split baseline), and [`fleet::core::FleetCore`] owns one
+//! cluster core per member while enforcing the budget invariant
+//! across rolling reconfigurations.  Both clocks drive whole fleets:
+//! [`simulator::sim::run_fleet_des`] interleaves every member's
+//! events in one virtual-time queue, and
+//! [`serving::engine::serve_fleet_with`] runs one wall-clock loop
+//! with per-member adapters — `tests/fleet.rs` pins them to each
+//! other and the allocator to its budget/even-split invariants.
+//!
 //! Start with [`coordinator::adapter::Adapter`] (the control loop),
 //! [`optimizer::ip::solve`] (the IP), and [`simulator::sim::Simulation`]
 //! (the evaluation substrate), or run `cargo run --release -- help`.
@@ -103,6 +119,22 @@ pub mod optimizer {
     pub mod options;
 }
 
+pub mod fleet {
+    //! Multi-pipeline sharding over one replica pool (see the
+    //! crate-level "fleet layer"): the fleet description + JSON IO
+    //! ([`spec`]), the joint cross-pipeline budget allocator
+    //! ([`solver`] — greedy marginal-gain over per-pipeline IP solves,
+    //! even-split floor, brute-force cross-check) and the shared-pool
+    //! core ([`core`] — one [`crate::cluster::core::ClusterCore`] per
+    //! member behind one budget, with rolling-reconfig overshoot
+    //! accounting).  The fleet drivers live with their clocks:
+    //! [`crate::simulator::sim::run_fleet_des`] and
+    //! [`crate::serving::engine::serve_fleet_with`].
+    pub mod core;
+    pub mod solver;
+    pub mod spec;
+}
+
 pub mod baselines {
     //! §5.1: FA2 (batch+scale, fixed variant) and RIM (+batching,
     //! variant switching with fixed high scale).
@@ -152,7 +184,8 @@ pub mod serving {
     //! thread-per-replica-slot workers behind the shared core, a
     //! pluggable [`engine::BatchExecutor`] (real PJRT artifacts or a
     //! synthetic profile-sleeper), and the adapter reconfiguring it on
-    //! a live clock.
+    //! a live clock.  [`engine::serve_fleet_with`] runs the same loop
+    //! over a whole fleet behind one replica budget.
     pub mod engine;
     pub mod loadgen;
 }

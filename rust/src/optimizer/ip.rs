@@ -52,6 +52,14 @@ pub struct PipelineConfig {
     pub latency_e2e: f64,
 }
 
+impl PipelineConfig {
+    /// Total replica slots the configuration occupies — what a shared
+    /// fleet pool charges for it (Σ per-stage replicas).
+    pub fn total_replicas(&self) -> u32 {
+        self.stages.iter().map(|s| s.replicas).sum()
+    }
+}
+
 /// Solver instrumentation (Fig. 13 reports decision time).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SolveStats {

@@ -3,6 +3,7 @@
 //! from the calibrated hardware model / analytic profiles, so the
 //! *shape* (orderings, ratios, crossovers) is the reproduction target.
 
+use crate::metrics::RunMetrics;
 use crate::models::pipelines;
 use crate::models::registry::{by_key, variants_of, StageType};
 use crate::profiler::analytic::{hw_latency, hw_throughput, pipeline_profiles};
@@ -141,6 +142,63 @@ pub fn table6() -> String {
     out
 }
 
+/// Per-pipeline fleet accounting: one row per member (requests,
+/// completions, drops, SLA attainment, average PAS/cost, replica
+/// share), a fleet totals row, and the shared-pool line.  `names`,
+/// `metrics` and `shares` are per member in fleet order.
+pub fn fleet_table(
+    names: &[String],
+    metrics: &[RunMetrics],
+    shares: &[u32],
+    budget: u32,
+) -> String {
+    let mut out = String::new();
+    out.push_str("Fleet accounting: per-pipeline outcomes over one shared replica pool\n");
+    out.push_str(&format!(
+        "{:<16} {:<10} {:<14} {:>8} {:>8} {:>7} {:>7} {:>8} {:>8} {:>6}\n",
+        "member", "pipeline", "workload", "reqs", "done", "drop%", "att%", "avgPAS", "avgCost",
+        "repl"
+    ));
+    let mut tot_reqs = 0usize;
+    let mut tot_done = 0usize;
+    let mut tot_cost = 0.0f64;
+    for ((name, m), &share) in names.iter().zip(metrics).zip(shares) {
+        out.push_str(&format!(
+            "{:<16} {:<10} {:<14} {:>8} {:>8} {:>6.1}% {:>6.1}% {:>8.2} {:>8.1} {:>6}\n",
+            name,
+            m.pipeline,
+            m.workload,
+            m.requests.len(),
+            m.completed_count(),
+            m.drop_rate() * 100.0,
+            m.sla_attainment() * 100.0,
+            m.avg_pas(),
+            m.avg_cost(),
+            share,
+        ));
+        tot_reqs += m.requests.len();
+        tot_done += m.completed_count();
+        tot_cost += m.avg_cost();
+    }
+    // 33 = the drop%/att%/avgPAS/avgCost block (7+1+7+1+8+1+8) so the
+    // total cost lands under the avgCost column.
+    out.push_str(&format!(
+        "{:<16} {:<10} {:<14} {:>8} {:>8} {:>33.1} {:>6}\n",
+        "TOTAL",
+        "-",
+        "-",
+        tot_reqs,
+        tot_done,
+        tot_cost,
+        shares.iter().sum::<u32>(),
+    ));
+    out.push_str(&format!(
+        "shared pool: {} of {budget} replicas granted\n",
+        shares.iter().sum::<u32>()
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +247,37 @@ mod tests {
         let s = table3();
         assert!(s.contains("detect.yolov5n"));
         assert!(s.contains("classify.resnet50"));
+    }
+
+    #[test]
+    fn fleet_table_rows_and_pool_line() {
+        use crate::metrics::{IntervalRecord, RequestRecord};
+        let mk = |pipeline: &str, workload: &str| RunMetrics {
+            system: "fleet-ipa".into(),
+            pipeline: pipeline.into(),
+            workload: workload.into(),
+            requests: vec![
+                RequestRecord { id: 0, arrival: 0.0, completion: Some(0.5) },
+                RequestRecord { id: 1, arrival: 0.0, completion: None },
+            ],
+            intervals: vec![IntervalRecord {
+                t: 10.0,
+                pas: 80.0,
+                cost: 6.0,
+                lambda_observed: 5.0,
+                lambda_predicted: 6.0,
+                decision_time: 0.001,
+                variants: vec!["v".into()],
+            }],
+            sla: 1.0,
+        };
+        let names = vec!["video-edge".to_string(), "nlp-batchline".to_string()];
+        let metrics = vec![mk("video", "bursty"), mk("nlp", "steady_low")];
+        let s = fleet_table(&names, &metrics, &[9, 7], 24);
+        assert!(s.contains("video-edge"), "{s}");
+        assert!(s.contains("nlp-batchline"));
+        assert!(s.contains("TOTAL"));
+        assert!(s.contains("16 of 24 replicas"), "{s}");
+        assert_eq!(s.lines().count(), 2 + 2 + 1 + 1);
     }
 }

@@ -17,6 +17,11 @@
 //! * [`SyntheticExecutor`] — sleeps the profiled latency instead of
 //!   executing; lets the full threaded engine run without artifacts and
 //!   anchors the sim/live parity test.
+//!
+//! [`serve_fleet_with`] scales the same loop to a whole fleet: worker
+//! threads per (member, stage) claim batches from one budget-checked
+//! [`FleetCore`], and a single adapter thread runs the joint
+//! cross-pipeline solver each interval.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -28,14 +33,18 @@ use crate::cluster::core::{ClusterCore, FormOutcome, FormedBatch};
 use crate::cluster::drop_policy::DropPolicy;
 use crate::coordinator::adapter::{Adapter, AdapterConfig, Policy};
 use crate::coordinator::monitoring::Monitor;
+use crate::fleet::core::{FleetCore, FleetReconfig};
+use crate::fleet::solver::{FleetAdapter, FleetController};
 use crate::metrics::RunMetrics;
+use crate::models::accuracy::AccuracyMetric;
 use crate::models::pipelines::PipelineSpec;
+use crate::optimizer::ip::PipelineConfig;
 use crate::predictor::{LstmPredictor, Predictor, ReactivePredictor};
 use crate::profiler::fit::ProfileSamples;
 use crate::profiler::profile::{LatencyProfile, PipelineProfiles, StageProfile, VariantProfile};
 use crate::runtime::pool::ExecutorPool;
 use crate::serving::loadgen::{self, LoadGenConfig};
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 use crate::workload::trace::Trace;
 
 /// Live-engine settings.
@@ -194,25 +203,29 @@ struct Shared {
     start: Instant,
 }
 
+/// Sleep `secs`, waking early on `stop`; returns false if stopped.
+fn sleep_interruptible(stop: &AtomicBool, secs: f64) -> bool {
+    let deadline = Instant::now() + Duration::from_secs_f64(secs.max(0.0));
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return false;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return true;
+        }
+        let remaining = deadline - now;
+        std::thread::sleep(remaining.min(Duration::from_millis(50)));
+    }
+}
+
 impl Shared {
     fn now(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
-    /// Sleep `secs`, waking early on `stop`; returns false if stopped.
     fn sleep_interruptible(&self, secs: f64) -> bool {
-        let deadline = Instant::now() + Duration::from_secs_f64(secs.max(0.0));
-        loop {
-            if self.stop.load(Ordering::Relaxed) {
-                return false;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return true;
-            }
-            let remaining = deadline - now;
-            std::thread::sleep(remaining.min(Duration::from_millis(50)));
-        }
+        sleep_interruptible(&self.stop, secs)
     }
 }
 
@@ -454,6 +467,334 @@ fn worker_loop(sh: Arc<Shared>, exec: Arc<dyn BatchExecutor>, stage: usize, n_st
                     core.accounting.record_drop(r.id);
                 }
                 drop(core);
+                sh.cv.notify_all();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The fleet engine: one wall-clock loop over N member pipelines behind
+// one budget-checked FleetCore.
+// ---------------------------------------------------------------------------
+
+/// Shared state of the fleet engine: every member core behind ONE lock
+/// (the joint budget check must see the whole fleet atomically), one
+/// monitor per member.
+struct FleetShared {
+    fleet: Mutex<FleetCore>,
+    cv: Condvar,
+    monitors: Mutex<Vec<Monitor>>,
+    stop: AtomicBool,
+    start: Instant,
+}
+
+impl FleetShared {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Outcome of a live fleet run: one [`ServeReport`] per member (input
+/// order) plus the shared-pool accounting.
+pub struct FleetServeReport {
+    pub members: Vec<ServeReport>,
+    pub budget: u32,
+    /// Highest pool occupancy observed (rolling-shrink overshoot
+    /// included).
+    pub peak_in_use: u32,
+    /// Per-member configured replicas when the run ended (the last
+    /// allocation actually applied).
+    pub final_replicas: Vec<u32>,
+}
+
+/// Drive the wall-clock engine over a whole fleet: per-member worker
+/// threads claim batches from one budget-checked [`FleetCore`], the
+/// merged load generator replays every member trace on one clock, and
+/// a single adapter thread runs the joint cross-pipeline solver
+/// ([`FleetAdapter`]) each interval — the live twin of
+/// [`crate::simulator::sim::run_fleet_des`].
+///
+/// `executors` and `predictors` are per member (same order as `specs`
+/// / `profiles` / `traces`); `system` labels the per-member
+/// [`RunMetrics`] like [`run_fleet_des`]'s equally-named parameter, so
+/// sim/live pairs group under one name.
+///
+/// [`run_fleet_des`]: crate::simulator::sim::run_fleet_des
+#[allow(clippy::too_many_arguments)]
+pub fn serve_fleet_with(
+    specs: &[PipelineSpec],
+    profiles: Vec<PipelineProfiles>,
+    metric: AccuracyMetric,
+    budget: u32,
+    system: &str,
+    cfg: &ServeConfig,
+    lg: LoadGenConfig,
+    traces: &[Trace],
+    executors: Vec<Arc<dyn BatchExecutor>>,
+    predictors: Vec<Box<dyn Predictor + Send>>,
+) -> Result<FleetServeReport> {
+    let n = specs.len();
+    if profiles.len() != n || traces.len() != n || executors.len() != n || predictors.len() != n {
+        return Err(crate::anyhow!(
+            "fleet serve: member vectors disagree ({n} specs, {} profiles, {} traces, \
+             {} executors, {} predictors)",
+            profiles.len(),
+            traces.len(),
+            executors.len(),
+            predictors.len()
+        ));
+    }
+
+    // Live specs: profile-derived SLAs (Swayam rule, floored), like the
+    // single-pipeline serve_with.
+    let mut live_specs = Vec::with_capacity(n);
+    let mut slas = Vec::with_capacity(n);
+    for (spec, prof) in specs.iter().zip(&profiles) {
+        let mut ls = spec.clone();
+        ls.stage_slas =
+            prof.stages.iter().map(|s| s.stage_sla().max(cfg.sla_floor)).collect();
+        slas.push(ls.sla_e2e());
+        live_specs.push(ls);
+    }
+
+    let mut adapter = FleetAdapter::new(
+        live_specs.clone(),
+        profiles.clone(),
+        metric,
+        budget,
+        AdapterConfig {
+            interval: cfg.interval,
+            apply_delay: cfg.apply_delay,
+            max_replicas: cfg.max_workers as u32,
+        },
+        predictors,
+    )
+    .map_err(Error::from)?;
+
+    // Joint initial decision at the traces' first-second (compressed)
+    // rates.
+    let ts = lg.time_scale.max(1e-9);
+    let first: Vec<f64> = traces.iter().map(|t| t.rate_at(0.0) / ts).collect();
+    let inits = adapter.initial(&first);
+    let fleet_inits: Vec<(PipelineConfig, f64, DropPolicy)> = inits
+        .iter()
+        .zip(&slas)
+        .map(|(d, &sla)| (d.config.clone(), f64::INFINITY, DropPolicy::new(sla, true)))
+        .collect();
+    let fleet = FleetCore::new(budget, &fleet_inits).map_err(Error::from)?;
+    let n_stages: Vec<usize> = live_specs.iter().map(PipelineSpec::n_stages).collect();
+
+    // Warm every member's initial configuration before the clock starts.
+    for (m, d) in inits.iter().enumerate() {
+        for sc in &d.config.stages {
+            executors[m].warm(&sc.variant_key, sc.batch);
+        }
+    }
+
+    let shared = Arc::new(FleetShared {
+        fleet: Mutex::new(fleet),
+        cv: Condvar::new(),
+        monitors: Mutex::new((0..n).map(|_| Monitor::new(600)).collect()),
+        stop: AtomicBool::new(false),
+        start: Instant::now(),
+    });
+
+    // ---- worker threads: replica slots per (member, stage) -----------
+    let mut workers = Vec::new();
+    for (m, &stages) in n_stages.iter().enumerate() {
+        for si in 0..stages {
+            for _ in 0..cfg.max_workers {
+                let sh = Arc::clone(&shared);
+                let ex = Arc::clone(&executors[m]);
+                workers.push(std::thread::spawn(move || {
+                    fleet_worker_loop(sh, ex, m, si, stages);
+                }));
+            }
+        }
+    }
+
+    // ---- adapter thread: the joint solver on a wall clock ------------
+    let adapter_handle = {
+        let sh = Arc::clone(&shared);
+        let exs: Vec<Arc<dyn BatchExecutor>> = executors.clone();
+        let mut active: Vec<PipelineConfig> = inits.iter().map(|d| d.config.clone()).collect();
+        let mut reconfig = FleetReconfig::new(adapter.config.apply_delay);
+        std::thread::spawn(move || {
+            loop {
+                if !sleep_interruptible(&sh.stop, adapter.config.interval) {
+                    break;
+                }
+                let now = sh.now();
+                let window = adapter.config.interval.max(1.0) as usize;
+                let (histories, observed): (Vec<Vec<f64>>, Vec<f64>) = {
+                    let ms = sh.monitors.lock().unwrap();
+                    (
+                        ms.iter().map(|mo| mo.history(now, crate::predictor::HISTORY)).collect(),
+                        ms.iter().map(|mo| mo.recent_rate(now, window)).collect(),
+                    )
+                };
+                let ds = adapter.decide(now, &histories);
+                {
+                    let mut fleet = sh.fleet.lock().unwrap();
+                    for (m, d) in ds.iter().enumerate() {
+                        fleet
+                            .member_mut(m)
+                            .accounting
+                            .record_interval(now, &active[m], observed[m], d);
+                    }
+                }
+                // warm targets before the switch, then apply after delay
+                for (m, d) in ds.iter().enumerate() {
+                    for sc in &d.config.stages {
+                        exs[m].warm(&sc.variant_key, sc.batch);
+                    }
+                }
+                let at = reconfig.stage(now, ds);
+                if !sleep_interruptible(&sh.stop, at - sh.now()) {
+                    break;
+                }
+                while let Some(staged) = reconfig.pop_due(sh.now()) {
+                    let configs: Vec<(PipelineConfig, f64)> = staged
+                        .decisions
+                        .iter()
+                        .map(|d| (d.config.clone(), f64::INFINITY))
+                        .collect();
+                    let mut fleet = sh.fleet.lock().unwrap();
+                    match fleet.apply(&configs) {
+                        Ok(()) => {
+                            active = staged.decisions.into_iter().map(|d| d.config).collect();
+                        }
+                        Err(e) => {
+                            // unreachable for solver-built decisions;
+                            // keep serving on the old configuration
+                            crate::log_warn!("fleet", "joint apply rejected: {e}");
+                        }
+                    }
+                    drop(fleet);
+                    sh.cv.notify_all();
+                }
+            }
+        })
+    };
+
+    // ---- merged load generation (blocking) ---------------------------
+    let submitted = loadgen::replay_fleet(traces, lg, |m, id, _t| {
+        let t = shared.now();
+        shared.monitors.lock().unwrap()[m].record_arrival(t);
+        shared.fleet.lock().unwrap().member_mut(m).ingest(id, t);
+        shared.cv.notify_all();
+    });
+    let total_submitted: usize = submitted.iter().sum();
+
+    // ---- drain & stop -------------------------------------------------
+    let max_sla = slas.iter().fold(0.0f64, |a, &b| a.max(b));
+    let drain_deadline = Instant::now() + Duration::from_secs_f64(3.0 + 4.0 * max_sla);
+    loop {
+        let done: usize = {
+            let f = shared.fleet.lock().unwrap();
+            (0..n).map(|m| f.member(m).accounting.done()).sum()
+        };
+        if done >= total_submitted || Instant::now() > drain_deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    shared.stop.store(true, Ordering::Relaxed);
+    shared.cv.notify_all();
+    for w in workers {
+        let _ = w.join();
+    }
+    let _ = adapter_handle.join();
+
+    // ---- assemble per-member metrics + pool accounting ----------------
+    let (metrics_vec, peak_in_use, final_replicas) = {
+        let mut f = shared.fleet.lock().unwrap();
+        f.note();
+        let peak = f.peak_in_use();
+        let finals: Vec<u32> = (0..n).map(|m| f.member(m).configured_replicas()).collect();
+        let mut out = Vec::with_capacity(n);
+        for m in 0..n {
+            let acc =
+                std::mem::replace(&mut f.member_mut(m).accounting, Accounting::new(slas[m]));
+            out.push(acc.into_metrics(
+                system.to_string(),
+                specs[m].name.to_string(),
+                traces[m].name.clone(),
+            ));
+        }
+        (out, peak, finals)
+    };
+    let members = metrics_vec
+        .into_iter()
+        .zip(profiles)
+        .zip(&slas)
+        .map(|((metrics, profiles), &sla)| ServeReport { metrics, profiles, sla })
+        .collect();
+    Ok(FleetServeReport { members, budget, peak_in_use, final_replicas })
+}
+
+/// One fleet replica-slot worker: claim a batch for (member, stage)
+/// from the shared fleet core, execute it, route survivors forward.
+fn fleet_worker_loop(
+    sh: Arc<FleetShared>,
+    exec: Arc<dyn BatchExecutor>,
+    member: usize,
+    stage: usize,
+    n_stages: usize,
+) {
+    loop {
+        if sh.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let fb: FormedBatch = {
+            let mut fleet = sh.fleet.lock().unwrap();
+            loop {
+                if sh.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                match fleet.member_mut(member).try_form(stage, sh.now()) {
+                    FormOutcome::Formed(fb) => {
+                        fleet.note();
+                        break fb;
+                    }
+                    FormOutcome::Busy | FormOutcome::Idle { .. } => {
+                        let (guard, _) = sh
+                            .cv
+                            .wait_timeout(fleet, Duration::from_millis(20))
+                            .unwrap();
+                        fleet = guard;
+                    }
+                }
+            }
+        };
+        match exec.execute(&fb.variant_key, fb.batch.max(1)) {
+            Ok(()) => {
+                let done = sh.now();
+                let mut fleet = sh.fleet.lock().unwrap();
+                let core = fleet.member_mut(member);
+                core.finish_service(stage);
+                if stage + 1 < n_stages {
+                    for r in fb.requests {
+                        core.forward(stage + 1, r, done);
+                    }
+                } else {
+                    for r in &fb.requests {
+                        core.complete(r.id, done);
+                    }
+                }
+                drop(fleet);
+                sh.cv.notify_all();
+            }
+            Err(e) => {
+                crate::log_warn!("serving", "fleet execute failed: {e:#}");
+                let mut fleet = sh.fleet.lock().unwrap();
+                let core = fleet.member_mut(member);
+                core.finish_service(stage);
+                for r in &fb.requests {
+                    core.accounting.record_drop(r.id);
+                }
+                drop(fleet);
                 sh.cv.notify_all();
             }
         }

@@ -1,13 +1,19 @@
-//! Event queue for the discrete-event simulator: a min-heap on
+//! Event queue for the discrete-event drivers: a min-heap on
 //! (time, sequence) — the sequence number makes simultaneous events
 //! deterministic (FIFO among ties).
+//!
+//! [`TimedQueue`] is generic over the event payload so the
+//! single-pipeline loop ([`EventQueue`] = `TimedQueue<Event>`) and the
+//! fleet loop (member-tagged events) share the same deterministic
+//! ordering machinery.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use crate::queueing::Request;
 
-/// Simulator event kinds.
+/// Simulator event kinds (single-pipeline loop; the fleet loop wraps
+/// these with a member index).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
     /// Request `id` arrives at the pipeline entrance.
@@ -27,20 +33,20 @@ pub enum Event {
 }
 
 #[derive(Debug, Clone)]
-struct Entry {
+struct Entry<E> {
     time: f64,
     seq: u64,
-    event: Event,
+    event: E,
 }
 
-impl PartialEq for Entry {
+impl<E> PartialEq for Entry<E> {
     fn eq(&self, other: &Self) -> bool {
         self.time == other.time && self.seq == other.seq
     }
 }
-impl Eq for Entry {}
+impl<E> Eq for Entry<E> {}
 
-impl Ord for Entry {
+impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // reversed for min-heap semantics on BinaryHeap (max-heap)
         other
@@ -50,30 +56,36 @@ impl Ord for Entry {
             .then(other.seq.cmp(&self.seq))
     }
 }
-impl PartialOrd for Entry {
+impl<E> PartialOrd for Entry<E> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-/// Deterministic min-time event queue.
-#[derive(Debug, Default)]
-pub struct EventQueue {
-    heap: BinaryHeap<Entry>,
+/// Deterministic min-time event queue over an arbitrary payload.
+#[derive(Debug)]
+pub struct TimedQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
     seq: u64,
 }
 
-impl EventQueue {
+impl<E> Default for TimedQueue<E> {
+    fn default() -> Self {
+        TimedQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+}
+
+impl<E> TimedQueue<E> {
     pub fn new() -> Self {
         Self::default()
     }
 
-    pub fn push(&mut self, time: f64, event: Event) {
+    pub fn push(&mut self, time: f64, event: E) {
         self.seq += 1;
         self.heap.push(Entry { time, seq: self.seq, event });
     }
 
-    pub fn pop(&mut self) -> Option<(f64, Event)> {
+    pub fn pop(&mut self) -> Option<(f64, E)> {
         self.heap.pop().map(|e| (e.time, e.event))
     }
 
@@ -85,6 +97,9 @@ impl EventQueue {
         self.heap.len()
     }
 }
+
+/// The single-pipeline event queue.
+pub type EventQueue = TimedQueue<Event>;
 
 #[cfg(test)]
 mod tests {
@@ -124,5 +139,17 @@ mod tests {
         assert_eq!(q.len(), 1);
         q.pop();
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn generic_payload_orders_the_same() {
+        // the fleet loop's member-tagged payload
+        let mut q: TimedQueue<(usize, &str)> = TimedQueue::new();
+        q.push(2.0, (1, "b"));
+        q.push(1.0, (0, "a"));
+        q.push(1.0, (2, "c"));
+        assert_eq!(q.pop(), Some((1.0, (0, "a"))));
+        assert_eq!(q.pop(), Some((1.0, (2, "c"))));
+        assert_eq!(q.pop(), Some((2.0, (1, "b"))));
     }
 }

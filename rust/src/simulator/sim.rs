@@ -18,17 +18,28 @@
 //! source): [`Simulation`] plugs in the live [`Adapter`], while
 //! `simulator::replay` scripts a recorded [`Decision`] log through the
 //! identical loop.
+//!
+//! [`run_fleet_des`] is the same loop fanned out over a whole fleet:
+//! every member pipeline's events interleave in one virtual-time queue,
+//! a [`FleetController`] (usually
+//! [`crate::fleet::solver::FleetAdapter`]) makes one *joint* decision
+//! per tick, and the budget-checked [`FleetCore`] applies it
+//! atomically.
 
-use super::events::{Event, EventQueue};
+use super::events::{Event, EventQueue, TimedQueue};
 use crate::cluster::core::{ClusterCore, FormOutcome};
 use crate::cluster::drop_policy::DropPolicy;
 use crate::cluster::reconfig::Reconfig;
 use crate::coordinator::adapter::{Adapter, Decision};
 use crate::coordinator::monitoring::Monitor;
+use crate::fleet::core::{FleetCore, FleetReconfig};
+use crate::fleet::solver::FleetController;
 use crate::metrics::RunMetrics;
+use crate::optimizer::ip::PipelineConfig;
 use crate::profiler::profile::PipelineProfiles;
 use crate::util::rng::SplitMix64;
 use crate::workload::trace::Trace;
+use crate::workload::tracegen::member_seed;
 
 /// Simulation settings.
 #[derive(Debug, Clone, Copy)]
@@ -166,10 +177,14 @@ pub fn run_des(
             Event::Arrival { id } => {
                 monitor.record_arrival(now);
                 core.ingest(id, now);
-                drive(&mut core, profiles, 0, now, &mut events, &mut rng, sim.service_noise);
+                drive(&mut core, profiles, 0, now, &mut rng, sim.service_noise, &mut |t, e| {
+                    events.push(t, e)
+                });
             }
             Event::QueueCheck { stage } => {
-                drive(&mut core, profiles, stage, now, &mut events, &mut rng, sim.service_noise);
+                drive(&mut core, profiles, stage, now, &mut rng, sim.service_noise, &mut |t, e| {
+                    events.push(t, e)
+                });
             }
             Event::ServiceDone { stage, batch } => {
                 core.finish_service(stage);
@@ -185,9 +200,9 @@ pub fn run_des(
                         profiles,
                         stage + 1,
                         now,
-                        &mut events,
                         &mut rng,
                         sim.service_noise,
+                        &mut |t, e| events.push(t, e),
                     );
                 } else {
                     for req in &batch {
@@ -195,7 +210,9 @@ pub fn run_des(
                     }
                 }
                 // freed replica may unblock this stage's queue
-                drive(&mut core, profiles, stage, now, &mut events, &mut rng, sim.service_noise);
+                drive(&mut core, profiles, stage, now, &mut rng, sim.service_noise, &mut |t, e| {
+                    events.push(t, e)
+                });
             }
             Event::Adapt => {
                 let history = monitor.history(now, crate::predictor::HISTORY);
@@ -219,9 +236,9 @@ pub fn run_des(
                             profiles,
                             si,
                             now,
-                            &mut events,
                             &mut rng,
                             sim.service_noise,
+                            &mut |t, e| events.push(t, e),
                         );
                     }
                 }
@@ -240,15 +257,17 @@ pub fn run_des(
 /// Start service on `stage` while the core can form batches: each
 /// formed batch is scheduled as a `ServiceDone` at the profiled latency
 /// (plus optional multiplicative noise); an idle partial batch gets a
-/// `QueueCheck` wakeup at its timeout.
+/// `QueueCheck` wakeup at its timeout.  `push` is the event sink —
+/// the single-pipeline loop pushes [`Event`]s directly, the fleet loop
+/// wraps them with its member index.
 fn drive(
     core: &mut ClusterCore,
     profiles: &PipelineProfiles,
     stage: usize,
     now: f64,
-    events: &mut EventQueue,
     rng: &mut SplitMix64,
     noise: f64,
+    push: &mut dyn FnMut(f64, Event),
 ) {
     loop {
         match core.try_form(stage, now) {
@@ -256,7 +275,7 @@ fn drive(
             FormOutcome::Idle { next_timeout } => {
                 if let Some(at) = next_timeout {
                     if at > now {
-                        events.push(at, Event::QueueCheck { stage });
+                        push(at, Event::QueueCheck { stage });
                     }
                 }
                 return;
@@ -268,9 +287,256 @@ fn drive(
                     let f = 1.0 + noise * rng.next_normal();
                     service *= f.clamp(0.5, 2.0);
                 }
-                events.push(now + service, Event::ServiceDone { stage, batch: fb.requests });
+                push(now + service, Event::ServiceDone { stage, batch: fb.requests });
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The fleet DES driver: N pipelines' events interleaved in one
+// virtual-time queue, configurations applied jointly through the
+// budget-checked FleetCore.
+// ---------------------------------------------------------------------------
+
+/// One fleet-loop event: a member-scoped simulator event or a global
+/// adaptation/application/end event.
+#[derive(Debug)]
+enum FleetEv {
+    Member { member: usize, ev: Event },
+    Adapt,
+    Apply,
+    End,
+}
+
+/// Result of a fleet DES run: per-member metrics (member order matches
+/// the input traces) plus the shared-pool accounting.
+#[derive(Debug)]
+pub struct FleetRunMetrics {
+    pub members: Vec<RunMetrics>,
+    /// The replica budget the run was driven under.
+    pub budget: u32,
+    /// Highest pool occupancy observed, rolling-reconfig overshoot
+    /// included (configured replicas never exceeded `budget`; this
+    /// may — see [`crate::fleet::core::FleetCore::peak_in_use`]).
+    pub peak_in_use: u32,
+    /// Per-member configured replicas when the run ended (the last
+    /// allocation actually applied — what accounting tables report).
+    pub final_replicas: Vec<u32>,
+}
+
+impl FleetRunMetrics {
+    pub fn total_requests(&self) -> usize {
+        self.members.iter().map(|m| m.requests.len()).sum()
+    }
+
+    pub fn total_completed(&self) -> usize {
+        self.members.iter().map(|m| m.completed_count()).sum()
+    }
+}
+
+/// The fleet discrete-event loop: the single-pipeline [`run_des`]
+/// machinery fanned out over N member cores behind one replica budget.
+/// Every member's arrivals, wakeups and completions interleave in one
+/// deterministic virtual-time queue; adaptation is a *joint* tick (the
+/// controller sees every member's history and returns one decision per
+/// member) applied atomically through the budget-checked
+/// [`FleetCore::apply`].
+///
+/// Panics if the controller emits an allocation that violates the
+/// budget — controllers built on [`crate::fleet::solver::solve_fleet`]
+/// cannot.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_des(
+    profiles: &[PipelineProfiles],
+    slas: &[f64],
+    interval: f64,
+    apply_delay: f64,
+    sim: SimConfig,
+    ctl: &mut dyn FleetController,
+    traces: &[Trace],
+    system: &str,
+    budget: u32,
+) -> FleetRunMetrics {
+    let n = traces.len();
+    assert_eq!(profiles.len(), n, "one profile set per member");
+    assert_eq!(slas.len(), n, "one SLA per member");
+    let horizon = traces.iter().map(Trace::seconds).max().unwrap_or(0) as f64;
+    let mut rng = SplitMix64::new(sim.seed ^ 0xF1EE7);
+    let mut events: TimedQueue<FleetEv> = TimedQueue::new();
+    let mut monitors: Vec<Monitor> = (0..n).map(|_| Monitor::new(600)).collect();
+
+    for (m, trace) in traces.iter().enumerate() {
+        for (id, &t) in trace.arrivals(member_seed(sim.seed, m)).iter().enumerate() {
+            events.push(t, FleetEv::Member { member: m, ev: Event::Arrival { id: id as u64 } });
+        }
+    }
+
+    // Joint initial configuration on each trace's first-second rate.
+    let first_rates: Vec<f64> = traces.iter().map(|t| t.rate_at(0.0)).collect();
+    let inits = ctl.initial(&first_rates);
+    assert_eq!(inits.len(), n, "fleet controller must decide per member");
+    let fleet_inits: Vec<(PipelineConfig, f64, DropPolicy)> = inits
+        .iter()
+        .zip(slas)
+        .map(|(d, &sla)| {
+            (d.config.clone(), d.lambda_predicted, DropPolicy::new(sla, sim.drop_enabled))
+        })
+        .collect();
+    let mut fleet = FleetCore::new(budget, &fleet_inits)
+        .expect("fleet controller must respect the replica budget");
+    let mut reconfig = FleetReconfig::new(apply_delay);
+    let mut active: Vec<PipelineConfig> = inits.iter().map(|d| d.config.clone()).collect();
+    let n_stages: Vec<usize> = profiles.iter().map(|p| p.stages.len()).collect();
+
+    events.push(interval, FleetEv::Adapt);
+    events.push(horizon, FleetEv::End);
+
+    while let Some((now, fe)) = events.pop() {
+        match fe {
+            FleetEv::End => break,
+            FleetEv::Member { member, ev } => match ev {
+                Event::Arrival { id } => {
+                    monitors[member].record_arrival(now);
+                    fleet.member_mut(member).ingest(id, now);
+                    drive_member(&mut fleet, profiles, member, 0, now, &mut events, &mut rng, sim);
+                }
+                Event::QueueCheck { stage } => {
+                    drive_member(
+                        &mut fleet, profiles, member, stage, now, &mut events, &mut rng, sim,
+                    );
+                }
+                Event::ServiceDone { stage, batch } => {
+                    let has_next = stage + 1 < n_stages[member];
+                    {
+                        let core = fleet.member_mut(member);
+                        core.finish_service(stage);
+                        if has_next {
+                            for req in batch {
+                                if core.accounting.is_dropped(req.id) {
+                                    continue;
+                                }
+                                core.forward(stage + 1, req, now);
+                            }
+                        } else {
+                            for req in &batch {
+                                core.complete(req.id, now);
+                            }
+                        }
+                    }
+                    if has_next {
+                        drive_member(
+                            &mut fleet,
+                            profiles,
+                            member,
+                            stage + 1,
+                            now,
+                            &mut events,
+                            &mut rng,
+                            sim,
+                        );
+                    }
+                    // freed replica may unblock this stage's queue
+                    drive_member(
+                        &mut fleet, profiles, member, stage, now, &mut events, &mut rng, sim,
+                    );
+                }
+                Event::Adapt | Event::ApplyConfig | Event::End => {
+                    unreachable!("global events are never member-scoped")
+                }
+            },
+            FleetEv::Adapt => {
+                let histories: Vec<Vec<f64>> = monitors
+                    .iter()
+                    .map(|mo| mo.history(now, crate::predictor::HISTORY))
+                    .collect();
+                let decisions = ctl.decide(now, &histories);
+                assert_eq!(decisions.len(), n, "fleet controller must decide per member");
+                for m in 0..n {
+                    let observed = monitors[m].recent_rate(now, interval as usize);
+                    fleet
+                        .member_mut(m)
+                        .accounting
+                        .record_interval(now, &active[m], observed, &decisions[m]);
+                }
+                let at = reconfig.stage(now, decisions);
+                events.push(at, FleetEv::Apply);
+                if now + interval < horizon {
+                    events.push(now + interval, FleetEv::Adapt);
+                }
+            }
+            FleetEv::Apply => {
+                while let Some(staged) = reconfig.pop_due(now) {
+                    let configs: Vec<(PipelineConfig, f64)> = staged
+                        .decisions
+                        .iter()
+                        .map(|d| (d.config.clone(), d.lambda_predicted))
+                        .collect();
+                    fleet
+                        .apply(&configs)
+                        .expect("fleet controller must respect the replica budget");
+                    active = staged.decisions.into_iter().map(|d| d.config).collect();
+                    for m in 0..n {
+                        for si in 0..n_stages[m] {
+                            drive_member(
+                                &mut fleet, profiles, m, si, now, &mut events, &mut rng, sim,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fleet.note();
+    let peak_in_use = fleet.peak_in_use();
+    let final_replicas: Vec<u32> =
+        (0..n).map(|m| fleet.member(m).configured_replicas()).collect();
+    let members = fleet
+        .into_accountings()
+        .into_iter()
+        .enumerate()
+        .map(|(m, acc)| {
+            acc.into_metrics(
+                system.to_string(),
+                profiles[m].pipeline.clone(),
+                traces[m].name.clone(),
+            )
+        })
+        .collect();
+    FleetRunMetrics { members, budget, peak_in_use, final_replicas }
+}
+
+/// [`drive`] for one fleet member: events come back member-tagged.
+/// Pool peak usage is noted only when a batch actually formed (the
+/// only driver-side transition that can raise `in_use`), so the
+/// O(members × stages) occupancy scan stays off the no-op events.
+#[allow(clippy::too_many_arguments)]
+fn drive_member(
+    fleet: &mut FleetCore,
+    profiles: &[PipelineProfiles],
+    member: usize,
+    stage: usize,
+    now: f64,
+    events: &mut TimedQueue<FleetEv>,
+    rng: &mut SplitMix64,
+    sim: SimConfig,
+) {
+    let mut formed = false;
+    drive(
+        fleet.member_mut(member),
+        &profiles[member],
+        stage,
+        now,
+        rng,
+        sim.service_noise,
+        &mut |t, e| {
+            formed |= matches!(e, Event::ServiceDone { .. });
+            events.push(t, FleetEv::Member { member, ev: e });
+        },
+    );
+    if formed {
+        fleet.note();
     }
 }
 
@@ -375,5 +641,71 @@ mod tests {
         // one initial decision + one per recorded interval
         assert_eq!(log.decisions.len(), m.intervals.len() + 1);
         assert!(!log.decisions[0].config.stages.is_empty());
+    }
+
+    // ---- fleet driver ----------------------------------------------------
+
+    use crate::fleet::solver::FleetAdapter;
+    use crate::fleet::spec::FleetSpec;
+    use crate::predictor::Predictor;
+
+    fn fleet_fixture(budget: u32, seconds: usize) -> (FleetAdapter, Vec<f64>, Vec<Trace>) {
+        let fleet = FleetSpec::demo3();
+        let specs = fleet.specs().unwrap();
+        let profs: Vec<_> = specs.iter().map(pipeline_profiles).collect();
+        let slas: Vec<f64> = specs.iter().map(|s| s.sla_e2e()).collect();
+        let predictors: Vec<Box<dyn Predictor + Send>> = specs
+            .iter()
+            .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+            .collect();
+        let adapter = FleetAdapter::new(
+            specs,
+            profs,
+            AccuracyMetric::Pas,
+            budget,
+            AdapterConfig::default(),
+            predictors,
+        )
+        .unwrap();
+        let traces = fleet.traces(seconds);
+        (adapter, slas, traces)
+    }
+
+    #[test]
+    fn fleet_des_runs_three_pipelines_under_budget() {
+        let (mut adapter, slas, traces) = fleet_fixture(24, 200);
+        let profiles = adapter.profiles.clone();
+        let sim = SimConfig { seed: 5, ..Default::default() };
+        let fm = run_fleet_des(
+            &profiles, &slas, 10.0, 8.0, sim, &mut adapter, &traces, "fleet-ipa", 24,
+        );
+        assert_eq!(fm.members.len(), 3);
+        for m in &fm.members {
+            assert!(m.requests.len() > 100, "{}: {}", m.workload, m.requests.len());
+            assert!(!m.intervals.is_empty());
+            assert!(m.completed_count() > 0, "{}", m.workload);
+        }
+        assert_eq!(fm.budget, 24);
+        // the budget invariant held on every reconfig, so the only
+        // overshoot is rolling-update drain
+        assert!(fm.peak_in_use >= 7, "pool was used: {}", fm.peak_in_use);
+        assert_eq!(fm.final_replicas.len(), 3);
+        assert!(fm.final_replicas.iter().sum::<u32>() <= 24, "{:?}", fm.final_replicas);
+    }
+
+    #[test]
+    fn fleet_des_deterministic_given_seed() {
+        let run = || {
+            let (mut adapter, slas, traces) = fleet_fixture(20, 120);
+            let profiles = adapter.profiles.clone();
+            let sim = SimConfig { seed: 9, ..Default::default() };
+            run_fleet_des(&profiles, &slas, 10.0, 8.0, sim, &mut adapter, &traces, "fleet", 20)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.total_requests(), b.total_requests());
+        for (ma, mb) in a.members.iter().zip(&b.members) {
+            assert_eq!(ma.requests, mb.requests);
+        }
     }
 }

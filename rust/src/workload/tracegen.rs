@@ -175,6 +175,88 @@ pub fn generate(pattern: Pattern, seconds: usize, seed: u64) -> Vec<f64> {
     rates
 }
 
+/// How the member traces of a fleet co-move (see [`generate_fleet`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetCorrelation {
+    /// Every member is an independent stream (distinct derived seeds).
+    Independent,
+    /// Members share one periodic envelope, phase-shifted by `i/N`:
+    /// one pipeline peaks while another decays — the competing-bursts
+    /// scenario the shared replica budget exists for.
+    Antiphase {
+        /// Envelope period, seconds.
+        period: usize,
+    },
+    /// All members ride the same envelope (a correlated global surge —
+    /// the worst case for a shared pool).
+    InPhase {
+        /// Envelope period, seconds.
+        period: usize,
+    },
+}
+
+/// Derive member `i`'s stream seed from a fleet seed (also used by the
+/// drivers to sample per-member arrivals consistently).
+pub fn member_seed(seed: u64, member: usize) -> u64 {
+    seed ^ (member as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Generate correlated per-second rates for a fleet: one rate vector
+/// per member pattern, each member's base stream from a single fleet
+/// seed (derived per member via [`member_seed`]).  Deterministic in
+/// (patterns, seconds, seed, corr); same +,-,*,/-only arithmetic
+/// discipline as [`generate`].
+pub fn generate_fleet(
+    patterns: &[Pattern],
+    seconds: usize,
+    seed: u64,
+    corr: FleetCorrelation,
+) -> Vec<Vec<f64>> {
+    let members: Vec<(Pattern, u64)> = patterns
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| (p, member_seed(seed, i)))
+        .collect();
+    generate_fleet_seeded(&members, seconds, corr)
+}
+
+/// [`generate_fleet`] with an explicit (pattern, seed) per member —
+/// the fleet-spec path, where every member carries its own trace seed.
+pub fn generate_fleet_seeded(
+    members: &[(Pattern, u64)],
+    seconds: usize,
+    corr: FleetCorrelation,
+) -> Vec<Vec<f64>> {
+    let n = members.len().max(1);
+    members
+        .iter()
+        .enumerate()
+        .map(|(i, &(pat, seed))| {
+            let mut rates = generate(pat, seconds, seed);
+            let (period, phase_off) = match corr {
+                FleetCorrelation::Independent => (0usize, 0.0),
+                FleetCorrelation::Antiphase { period } => (period, i as f64 / n as f64),
+                FleetCorrelation::InPhase { period } => (period, 0.0),
+            };
+            if period > 0 {
+                // mean-1 envelope (bump averages 2/3): 0.25 + 1.125·bump
+                // swings each member between 0.25× and 1.375× its base
+                // rate without inflating the fleet-average load.
+                for (t, r) in rates.iter_mut().enumerate() {
+                    let env = 0.25 + 1.125 * bump(t as f64 / period as f64 + phase_off);
+                    *r *= env;
+                }
+            }
+            for r in rates.iter_mut() {
+                if *r < 0.5 {
+                    *r = 0.5;
+                }
+            }
+            rates
+        })
+        .collect()
+}
+
 /// Seed the python LSTM trainer used for the composite trace — MUST
 /// match `python/compile/predictor.TRACE_SEED`.
 pub const TRAIN_SEED: u64 = 0x7717_7E2A;
@@ -302,5 +384,60 @@ mod tests {
         for p in Pattern::EVAL {
             assert_ne!(eval_seed(p), TRAIN_SEED);
         }
+    }
+
+    #[test]
+    fn fleet_deterministic_and_member_streams_distinct() {
+        let pats = [Pattern::SteadyLow, Pattern::SteadyLow, Pattern::Bursty];
+        let corr = FleetCorrelation::Antiphase { period: 200 };
+        let a = generate_fleet(&pats, 400, 7, corr);
+        let b = generate_fleet(&pats, 400, 7, corr);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        // same pattern, different member → different stream
+        assert_ne!(a[0], a[1]);
+        assert!(a.iter().all(|r| r.iter().all(|&x| x >= 0.5)));
+    }
+
+    #[test]
+    fn antiphase_members_move_oppositely() {
+        // Two steady members under an antiphase envelope: when one is
+        // scaled up the other is scaled down — negative correlation of
+        // the deviations from the mean.
+        let pats = [Pattern::SteadyLow, Pattern::SteadyLow];
+        let r = generate_fleet(&pats, 1200, 3, FleetCorrelation::Antiphase { period: 300 });
+        let m0 = mean(&r[0]);
+        let m1 = mean(&r[1]);
+        let cov: f64 = r[0]
+            .iter()
+            .zip(&r[1])
+            .map(|(&a, &b)| (a - m0) * (b - m1))
+            .sum::<f64>()
+            / r[0].len() as f64;
+        assert!(cov < -1.0, "antiphase covariance {cov}");
+        // and the mean-1 envelope keeps the average near the base rate
+        assert!((m0 - 6.0).abs() < 1.5, "mean {m0}");
+    }
+
+    #[test]
+    fn in_phase_members_move_together() {
+        let pats = [Pattern::SteadyLow, Pattern::SteadyLow];
+        let r = generate_fleet(&pats, 1200, 3, FleetCorrelation::InPhase { period: 300 });
+        let m0 = mean(&r[0]);
+        let m1 = mean(&r[1]);
+        let cov: f64 = r[0]
+            .iter()
+            .zip(&r[1])
+            .map(|(&a, &b)| (a - m0) * (b - m1))
+            .sum::<f64>()
+            / r[0].len() as f64;
+        assert!(cov > 1.0, "in-phase covariance {cov}");
+    }
+
+    #[test]
+    fn independent_matches_plain_generate() {
+        let pats = [Pattern::Fluctuating];
+        let r = generate_fleet(&pats, 300, 9, FleetCorrelation::Independent);
+        assert_eq!(r[0], generate(Pattern::Fluctuating, 300, member_seed(9, 0)));
     }
 }

@@ -1,0 +1,229 @@
+//! Fleet invariants and driver parity.
+//!
+//! 1. property — the joint allocator never exceeds the shared replica
+//!    budget, grants every stage at least one replica, and its total
+//!    objective is never worse than the even-split baseline;
+//! 2. brute cross-check — on tiny fleets the greedy never reports more
+//!    than the exhaustive best split;
+//! 3. sim/live fleet parity — the same two-member fleet with frozen
+//!    scaled profiles and zero noise through both the fleet DES loop
+//!    and the threaded fleet engine produces identical per-member
+//!    drop/completion counts (the fleet twin of
+//!    `tests/cluster_parity.rs`).
+
+use std::sync::Arc;
+
+use ipa::coordinator::adapter::AdapterConfig;
+use ipa::fleet::solver::{allocate_at, brute_best_split, even_shares, solve_fleet, FleetAdapter};
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines::{self, PipelineSpec};
+use ipa::optimizer::ip::Problem;
+use ipa::optimizer::options::StageOption;
+use ipa::predictor::{Predictor, ReactivePredictor};
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::profiler::profile::PipelineProfiles;
+use ipa::serving::engine::{serve_fleet_with, BatchExecutor, ServeConfig, SyntheticExecutor};
+use ipa::serving::loadgen::LoadGenConfig;
+use ipa::simulator::sim::{run_fleet_des, SimConfig};
+use ipa::util::quickcheck::{check, prop_assert};
+use ipa::workload::trace::Trace;
+
+const NAMES: [&str; 5] = ["video", "audio-qa", "audio-sent", "sum-qa", "nlp"];
+
+/// Property: for random member sets, λs and budgets, the joint
+/// allocation (a) fits the budget, (b) grants every stage ≥ 1 replica,
+/// (c) totals at least the even-split baseline's objective.
+#[test]
+fn prop_allocator_budget_and_even_split_floor() {
+    let all_specs: Vec<PipelineSpec> =
+        NAMES.iter().map(|n| pipelines::by_name(n).unwrap()).collect();
+    let all_profs: Vec<PipelineProfiles> =
+        all_specs.iter().map(pipeline_profiles).collect();
+    check("fleet allocator invariants", 25, |g| {
+        let n = g.usize(1, 4);
+        let idx: Vec<usize> = (0..n).map(|_| g.usize(0, NAMES.len())).collect();
+        let lambdas: Vec<f64> = (0..n).map(|_| g.f64(0.5, 30.0)).collect();
+        let problems: Vec<Problem> = idx
+            .iter()
+            .zip(&lambdas)
+            .map(|(&i, &l)| Problem::new(&all_specs[i], &all_profs[i], l))
+            .collect();
+        let floors: Vec<u32> =
+            problems.iter().map(|p| p.profiles.stages.len() as u32).collect();
+        let floor_total: u32 = floors.iter().sum();
+        let budget = floor_total + g.u64(0, 24) as u32;
+
+        let alloc = match solve_fleet(&problems, budget) {
+            Some(a) => a,
+            None => return prop_assert(false, "budget >= floor but solve_fleet bailed"),
+        };
+        prop_assert(alloc.replicas_used <= budget, "allocation exceeds budget")?;
+        prop_assert(alloc.members.len() == n, "one allocation per member")?;
+        for m in &alloc.members {
+            prop_assert(
+                m.config.stages.iter().all(|s| s.replicas >= 1),
+                "stage granted zero replicas",
+            )?;
+            prop_assert(m.replicas <= m.budget, "member overspends its share")?;
+        }
+        let options: Vec<Vec<Vec<StageOption>>> =
+            problems.iter().map(|p| p.stage_options()).collect();
+        let even = allocate_at(&problems, &options, &even_shares(budget, &floors));
+        prop_assert(
+            alloc.total_objective >= even.total_objective - 1e-9,
+            "worse than even split",
+        )
+    });
+}
+
+/// The greedy never reports a better total than the exhaustive best
+/// split (it is a lower bound on the optimum by construction).
+#[test]
+fn greedy_bounded_by_brute_across_budgets() {
+    let specs: Vec<PipelineSpec> =
+        ["video", "sum-qa"].iter().map(|n| pipelines::by_name(n).unwrap()).collect();
+    let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+    for (la, lb) in [(3.0, 3.0), (18.0, 4.0), (30.0, 25.0)] {
+        let problems =
+            vec![Problem::new(&specs[0], &profs[0], la), Problem::new(&specs[1], &profs[1], lb)];
+        for budget in 4..=10u32 {
+            let alloc = solve_fleet(&problems, budget).unwrap();
+            let brute = brute_best_split(&problems, budget).unwrap();
+            assert!(
+                alloc.total_objective <= brute + 1e-9,
+                "λ=({la},{lb}) budget {budget}: greedy {} above brute {brute}",
+                alloc.total_objective
+            );
+            assert!(alloc.replicas_used <= budget);
+        }
+    }
+}
+
+/// Sim/live fleet parity: a two-member fleet under calm constant load
+/// with no adaptation ticks through both fleet drivers → identical
+/// per-member completion/drop counts, and the unique correct outcome
+/// (everything completes, nothing drops).
+///
+/// Same construction as the single-pipeline parity test: frozen
+/// analytic profiles uniformly scaled into the wall domain, zero
+/// service noise, quiet cooldown tail, interval > horizon.  The joint
+/// solver's decisions are invariant under consistent (λ, latency, SLA)
+/// time scaling, so both drivers provision the same fleet
+/// configuration out of the same shared budget.
+#[test]
+fn fleet_sim_and_live_engine_agree_on_counts() {
+    const SCALE: f64 = 0.05;
+    const BUDGET: u32 = 16;
+    let seed = 23u64;
+    // Cost-dominated weights (β × 50) make the joint solver pick the
+    // lightest variants at batch 1 with single replicas — ample
+    // throughput headroom at λ=1, so no request ever nears a drop
+    // boundary and the count equality below is the unique correct
+    // outcome (the same construction the single-pipeline parity test
+    // gets from FA2-low).
+    let specs: Vec<PipelineSpec> = ["video", "video"]
+        .iter()
+        .map(|n| {
+            let mut s = pipelines::by_name(n).unwrap();
+            s.weights.beta *= 50.0;
+            s
+        })
+        .collect();
+    let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+    let slas: Vec<f64> = specs.iter().map(|s| s.sla_e2e()).collect();
+
+    // 80 s of λ=1 per member plus a 30 s quiet tail to drain in-run.
+    let mut rates = vec![1.0; 80];
+    rates.extend(vec![0.0; 30]);
+    let traces =
+        vec![Trace::new("fleet-parity-a", rates.clone()), Trace::new("fleet-parity-b", rates)];
+
+    let predictors = || -> Vec<Box<dyn Predictor + Send>> {
+        (0..2)
+            .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+            .collect()
+    };
+
+    // --- fleet DES side (virtual time, paper-scale profiles) ----------
+    let mut sim_adapter = FleetAdapter::new(
+        specs.clone(),
+        profs.clone(),
+        AccuracyMetric::Pas,
+        BUDGET,
+        AdapterConfig { interval: 10_000.0, apply_delay: 8.0, max_replicas: 4 },
+        predictors(),
+    )
+    .unwrap();
+    let fm_sim = run_fleet_des(
+        &profs,
+        &slas,
+        10_000.0,
+        8.0,
+        SimConfig { seed, service_noise: 0.0, drop_enabled: true },
+        &mut sim_adapter,
+        &traces,
+        "fleet-sim",
+        BUDGET,
+    );
+
+    // --- live fleet side (threaded wall clock, scaled profiles) -------
+    let cfg = ServeConfig {
+        artifact_dir: String::new(),
+        executors: 0,
+        max_workers: 4,
+        interval: 10_000.0,
+        apply_delay: 8.0 * SCALE,
+        use_lstm: false,
+        profile_batches: vec![],
+        profile_reps: 0,
+        sla_floor: 0.0,
+    };
+    let scaled: Vec<PipelineProfiles> = profs.iter().map(|p| p.scaled(SCALE)).collect();
+    let executors: Vec<Arc<dyn BatchExecutor>> = scaled
+        .iter()
+        .map(|p| Arc::new(SyntheticExecutor::from_profiles(p, 1.0)) as Arc<dyn BatchExecutor>)
+        .collect();
+    let rep = serve_fleet_with(
+        &specs,
+        scaled,
+        AccuracyMetric::Pas,
+        BUDGET,
+        "fleet-live",
+        &cfg,
+        LoadGenConfig { time_scale: SCALE, seed },
+        &traces,
+        executors,
+        predictors(),
+    )
+    .expect("live fleet engine");
+
+    assert_eq!(rep.members.len(), 2);
+    assert!(rep.peak_in_use <= BUDGET, "no reconfigs, so no overshoot either");
+    for m in 0..2 {
+        let s = &fm_sim.members[m];
+        let l = &rep.members[m].metrics;
+        assert!(s.requests.len() > 40, "member {m}: thin trace ({})", s.requests.len());
+        assert_eq!(
+            s.requests.len(),
+            l.requests.len(),
+            "member {m}: arrival counts diverge"
+        );
+        assert_eq!(
+            s.completed_count(),
+            l.completed_count(),
+            "member {m}: completion counts diverge (sim {} vs live {})",
+            s.completed_count(),
+            l.completed_count()
+        );
+        assert_eq!(
+            s.dropped_count(),
+            l.dropped_count(),
+            "member {m}: drop counts diverge (sim {} vs live {})",
+            s.dropped_count(),
+            l.dropped_count()
+        );
+        // the unique correct outcome for this calm scenario
+        assert_eq!(s.completed_count(), s.requests.len(), "member {m}: sim completed all");
+        assert_eq!(s.dropped_count(), 0, "member {m}: sim dropped nothing");
+    }
+}
