@@ -12,15 +12,24 @@
 //!      behind one budget-checked core on a compressed wall clock
 //!      (synthetic profile-sleeping executors; no artifacts needed).
 //!
-//! Both print the per-pipeline accounting table from `reports::tables`.
+//! Both run the ELASTIC control plane by default (pass `--static 1` to
+//! pin the pool): the autoscaler grows/shrinks the pool against a cost
+//! target, the spec's priority classes guard the video feed with
+//! mid-interval preemption, and ticks where only one member's λ moved
+//! re-solve incrementally.
+//!
+//! Both print the per-pipeline accounting table from `reports::tables`,
+//! now including the preempt column and the pool size/cost lines.
 //!
 //! Run: `cargo run --release --example fleet_serve
-//!       [-- --seconds 240 --budget 24 --time-scale 0.05 --fleet spec.json]`
+//!       [-- --seconds 240 --budget 24 --time-scale 0.05 --fleet spec.json
+//!           --cost-target 30 --static 0]`
 
 use std::sync::Arc;
 
 use ipa::coordinator::adapter::AdapterConfig;
-use ipa::fleet::solver::{solve_fleet, FleetAdapter};
+use ipa::fleet::autoscaler::AutoscalerConfig;
+use ipa::fleet::solver::{solve_fleet, FleetAdapter, FleetTuning, PreemptionConfig};
 use ipa::fleet::spec::FleetSpec;
 use ipa::models::accuracy::AccuracyMetric;
 use ipa::optimizer::ip::Problem;
@@ -44,6 +53,7 @@ fn main() {
     let args = Args::from_env();
     let seconds = args.get_usize("seconds", 240);
     let time_scale = args.get_f64("time-scale", 0.05);
+    let static_pool = args.get_usize("static", 0) != 0;
 
     let mut fleet = match args.get("fleet") {
         Some(path) => {
@@ -103,6 +113,35 @@ fn main() {
         alloc.replicas_used, alloc.total_objective
     );
 
+    // Elastic control plane: priorities from the spec, a pool
+    // autoscaler capped at ~25% above the starting budget, the
+    // preemption fast path, and incremental re-solves for quiet ticks.
+    let cost_target = args.get_f64("cost-target", budget as f64 * 1.25);
+    let tuning = if static_pool {
+        FleetTuning::default()
+    } else {
+        FleetTuning {
+            priorities: Some(fleet.priorities()),
+            autoscaler: Some(AutoscalerConfig {
+                cost_per_replica: 1.0,
+                cost_target,
+                min_pool: 0,
+                max_step_up: 4,
+                max_step_down: 2,
+                headroom: 1.25,
+                shrink_after: 3,
+            }),
+            preemption: Some(PreemptionConfig::default()),
+            resolve_threshold: 0.15,
+        }
+    };
+    println!(
+        "control plane: {} (priorities {:?}, pool cap {})",
+        if static_pool { "static pool" } else { "elastic" },
+        fleet.priorities(),
+        if static_pool { budget as f64 } else { cost_target },
+    );
+
     // ---- clock 1: the fleet DES driver -------------------------------
     println!("\n=== fleet DES driver (virtual time) ===");
     let mut des_adapter = FleetAdapter::new(
@@ -113,6 +152,7 @@ fn main() {
         AdapterConfig::default(),
         predictors(specs.len()),
     )
+    .and_then(|a| a.with_tuning(tuning.clone()))
     .expect("valid fleet");
     let t0 = std::time::Instant::now();
     let fm = run_fleet_des(
@@ -127,13 +167,18 @@ fn main() {
         budget,
     );
     println!(
-        "simulated {} requests in {:.2}s wall | pool peak in use {} / {budget}\n",
+        "simulated {} requests in {:.2}s wall | pool peak in use {} / {} (final size; \
+         started at {budget}) | {} incremental / {} full solves",
         fm.total_requests(),
         t0.elapsed().as_secs_f64(),
-        fm.peak_in_use
+        fm.peak_in_use,
+        fm.budget,
+        des_adapter.incremental_solves,
+        des_adapter.full_solves,
     );
+    println!();
     // `repl` column = the allocation the run actually ended on
-    print!("{}", tables::fleet_table(&names, &fm.members, &fm.final_replicas, budget));
+    print!("{}", tables::fleet_table(&names, &fm.members, &fm.final_replicas, &fm.pool));
 
     // ---- clock 2: the live fleet engine ------------------------------
     println!(
@@ -167,16 +212,19 @@ fn main() {
         &traces,
         executors,
         predictors(specs.len()),
+        tuning,
     )
     .expect("live fleet serve");
     let live_metrics: Vec<_> = rep.members.iter().map(|r| r.metrics.clone()).collect();
     println!(
-        "served {} requests in {:.2}s wall | pool peak in use {} / {budget}\n",
+        "served {} requests in {:.2}s wall | pool peak in use {} / {} (final size; \
+         started at {budget})\n",
         live_metrics.iter().map(|m| m.requests.len()).sum::<usize>(),
         t0.elapsed().as_secs_f64(),
-        rep.peak_in_use
+        rep.peak_in_use,
+        rep.budget,
     );
-    print!("{}", tables::fleet_table(&names, &live_metrics, &rep.final_replicas, budget));
+    print!("{}", tables::fleet_table(&names, &live_metrics, &rep.final_replicas, &rep.pool));
 
     println!("\nfleet e2e complete: both clocks drove the same shared-budget machinery");
 }

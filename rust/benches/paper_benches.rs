@@ -204,8 +204,72 @@ fn main() {
     print_section("fleet simulator (items/s = simulated requests/s)", &rows);
     let fleet_sim_rows = rows.clone();
 
+    // Elastic control plane: autoscaler resize decision time (demand
+    // estimation + the grow/shrink policy), the preemption fast path
+    // (incl. re-priming the solve cache each iteration), and the
+    // incremental re-solve of a single moved member.
+    use ipa::fleet::autoscaler::AutoscalerConfig;
+    use ipa::fleet::solver::{FleetTuning, PreemptionConfig};
+    let mk_elastic = |threshold: f64| {
+        let predictors: Vec<Box<dyn Predictor + Send>> = fleet_specs
+            .iter()
+            .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+            .collect();
+        FleetAdapter::new(
+            fleet_specs.clone(),
+            fleet_profs.clone(),
+            AccuracyMetric::Pas,
+            budget,
+            AdapterConfig::default(),
+            predictors,
+        )
+        .and_then(|a| {
+            a.with_tuning(FleetTuning {
+                priorities: Some(fleet.priorities()),
+                autoscaler: Some(AutoscalerConfig {
+                    cost_target: budget as f64 * 1.25,
+                    ..Default::default()
+                }),
+                preemption: Some(PreemptionConfig::default()),
+                resolve_threshold: threshold,
+            })
+        })
+        .unwrap()
+    };
+    let mut rows = Vec::new();
+    {
+        let mut ad = mk_elastic(0.15);
+        let histories: Vec<Vec<f64>> = vec![vec![8.0; 60], vec![6.0; 60], vec![5.0; 60]];
+        rows.push(b.run("fleet_autoscaler/resize_decision_3pipes", || {
+            ad.resize(0.0, &histories)
+        }));
+    }
+    {
+        let mut ad = mk_elastic(0.15);
+        rows.push(b.run("fleet_autoscaler/preempt_fast_path_incl_reprime", || {
+            ad.decide_for_lambdas(&[4.0, 4.0, 4.0]);
+            ad.preempt(0.0, &[30.0, 4.0, 4.0])
+        }));
+    }
+    {
+        let mut ad = mk_elastic(0.15);
+        ad.decide_for_lambdas(&[6.0, 6.0, 6.0]);
+        let mut flip = false;
+        rows.push(b.run("fleet_autoscaler/incremental_resolve_1of3", || {
+            flip = !flip;
+            ad.decide_for_lambdas(&[if flip { 12.0 } else { 6.0 }, 6.0, 6.0])
+        }));
+        println!(
+            "fleet incremental telemetry: {} incremental vs {} full solves",
+            ad.incremental_solves, ad.full_solves
+        );
+    }
+    print_section("fleet elastic control plane", &rows);
+    let fleet_autoscaler_rows = rows.clone();
+
     // Perf baseline for future PRs: solver decision time + simulator
-    // throughput (single-pipeline and fleet), in a stable JSON shape.
+    // throughput (single-pipeline and fleet) + elastic control-plane
+    // latencies, in a stable JSON shape.
     match ipa::benchkit::write_json(
         "BENCH_cluster.json",
         &[
@@ -213,6 +277,7 @@ fn main() {
             ("simulator", &simulator_rows[..]),
             ("fleet_solver", &fleet_solver_rows[..]),
             ("fleet_sim", &fleet_sim_rows[..]),
+            ("fleet_autoscaler", &fleet_autoscaler_rows[..]),
         ],
     ) {
         Ok(()) => println!("wrote BENCH_cluster.json"),

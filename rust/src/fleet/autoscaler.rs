@@ -1,0 +1,248 @@
+//! The pool autoscaler: grow/shrink the *fleet's replica budget itself*
+//! against a cost target.
+//!
+//! IPA (§4) adapts within a fixed cluster; this module is the missing
+//! outer loop — the cluster-autoscaler twin that decides how many
+//! replicas the pool should even hold.  It is pure policy: callers
+//! (normally [`crate::fleet::solver::FleetAdapter::resize`]) feed it
+//! the current pool size, a *demand* estimate (the replicas the joint
+//! solver would need to keep every member SLA-feasible at the predicted
+//! λs — Σ per-member `min_feasible_replicas`) and the fleet's
+//! min-feasible floor; it answers with a bounded step toward the
+//! demand, clamped to the cost-derived cap.
+//!
+//! Asymmetric response, like real cluster autoscalers:
+//!
+//! * **scale-up eagerness** — demand is padded by a headroom factor and
+//!   growth happens on the first tick that needs it (an under-provisioned
+//!   pool drops requests *now*);
+//! * **scale-down hysteresis** — the pool shrinks only after
+//!   `shrink_after` consecutive low-demand ticks, and then by at most
+//!   `max_step_down` replicas (rolling shrinks strand in-flight work;
+//!   flapping wastes the apply delay twice).
+//!
+//! Invariants (pinned by `tests/fleet_elastic.rs`): a proposed target is
+//! never above [`Autoscaler::max_pool`] (the cost cap) unless the
+//! fleet's feasibility floor itself exceeds the cap — feasibility wins
+//! over cost — and never below that floor.
+
+/// Autoscaler knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscalerConfig {
+    /// Cost of holding one replica for one second (abstract $ — the
+    /// same unit `cost_target` is expressed in).
+    pub cost_per_replica: f64,
+    /// Maximum spend rate the operator accepts ($ per second).  The
+    /// pool cap is `floor(cost_target / cost_per_replica)` replicas.
+    pub cost_target: f64,
+    /// Never shrink below this many replicas (the fleet's stage floor
+    /// is enforced on top of it — the effective floor is the max).
+    pub min_pool: u32,
+    /// Max replicas added in one decision (scale-up slew rate).
+    pub max_step_up: u32,
+    /// Max replicas removed in one decision (scale-down slew rate).
+    pub max_step_down: u32,
+    /// Scale-up eagerness: demand is padded to `demand × headroom`
+    /// before comparing against the pool (≥ 1.0).
+    pub headroom: f64,
+    /// Scale-down hysteresis: consecutive low-demand ticks required
+    /// before a shrink step is proposed.
+    pub shrink_after: u32,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            cost_per_replica: 1.0,
+            cost_target: 32.0,
+            min_pool: 0,
+            max_step_up: 8,
+            max_step_down: 2,
+            headroom: 1.25,
+            shrink_after: 3,
+        }
+    }
+}
+
+/// What the autoscaler decided this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolAction {
+    /// Grow the pool by this many replicas.
+    Grow(u32),
+    /// Shrink the pool by this many replicas.
+    Shrink(u32),
+    /// Keep the current size (includes "low demand but hysteresis not
+    /// yet expired").
+    Hold,
+}
+
+/// One autoscaling decision: the proposed pool size and how it differs
+/// from the current one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolDecision {
+    /// Proposed pool size (equals the input pool on [`PoolAction::Hold`]).
+    pub target: u32,
+    pub action: PoolAction,
+}
+
+/// The stateful autoscaler (state = the scale-down hysteresis counter
+/// plus decision telemetry).
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub cfg: AutoscalerConfig,
+    /// Consecutive ticks with padded demand below the pool.
+    low_ticks: u32,
+    /// Telemetry: decisions taken, by kind.
+    pub grows: u32,
+    pub shrinks: u32,
+    pub holds: u32,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerConfig) -> Autoscaler {
+        Autoscaler { cfg, low_ticks: 0, grows: 0, shrinks: 0, holds: 0 }
+    }
+
+    /// The cost-derived pool cap: the largest pool whose spend rate
+    /// stays within `cost_target`.
+    pub fn max_pool(&self) -> u32 {
+        if self.cfg.cost_per_replica <= 0.0 {
+            return u32::MAX;
+        }
+        let cap = (self.cfg.cost_target / self.cfg.cost_per_replica).floor();
+        if cap <= 0.0 {
+            0
+        } else if cap >= u32::MAX as f64 {
+            u32::MAX
+        } else {
+            cap as u32
+        }
+    }
+
+    /// One decision: compare padded `demand` against `pool` and propose
+    /// a bounded step.  `floor` is the fleet's min-feasible replica
+    /// floor (one replica per stage of every member); the target never
+    /// drops below `max(floor, min_pool)` and never rises above the
+    /// cost cap — except that a floor above the cap wins (an infeasible
+    /// cost target cannot be honored without breaking the fleet).
+    pub fn decide(&mut self, pool: u32, demand: u32, floor: u32) -> PoolDecision {
+        let lo = floor.max(self.cfg.min_pool);
+        let cap = self.max_pool().max(lo);
+        let padded = (demand as f64 * self.cfg.headroom.max(1.0)).ceil();
+        let want = if padded >= cap as f64 { cap } else { (padded as u32).max(lo) };
+
+        if want > pool {
+            self.low_ticks = 0;
+            let step = (want - pool).min(self.cfg.max_step_up.max(1));
+            self.grows += 1;
+            PoolDecision { target: pool + step, action: PoolAction::Grow(step) }
+        } else if want < pool {
+            self.low_ticks += 1;
+            if self.low_ticks >= self.cfg.shrink_after.max(1) {
+                self.low_ticks = 0;
+                let step = (pool - want).min(self.cfg.max_step_down.max(1));
+                self.shrinks += 1;
+                PoolDecision { target: pool - step, action: PoolAction::Shrink(step) }
+            } else {
+                self.holds += 1;
+                PoolDecision { target: pool, action: PoolAction::Hold }
+            }
+        } else {
+            self.low_ticks = 0;
+            self.holds += 1;
+            PoolDecision { target: pool, action: PoolAction::Hold }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler(cost_target: f64, shrink_after: u32) -> Autoscaler {
+        Autoscaler::new(AutoscalerConfig {
+            cost_per_replica: 1.0,
+            cost_target,
+            min_pool: 0,
+            max_step_up: 4,
+            max_step_down: 2,
+            headroom: 1.0,
+            shrink_after,
+        })
+    }
+
+    #[test]
+    fn cost_cap_derivation() {
+        assert_eq!(scaler(32.0, 1).max_pool(), 32);
+        assert_eq!(scaler(31.5, 1).max_pool(), 31);
+        assert_eq!(scaler(0.0, 1).max_pool(), 0);
+        let free = Autoscaler::new(AutoscalerConfig {
+            cost_per_replica: 0.0,
+            ..Default::default()
+        });
+        assert_eq!(free.max_pool(), u32::MAX);
+    }
+
+    #[test]
+    fn grows_eagerly_with_bounded_step() {
+        let mut a = scaler(64.0, 3);
+        let d = a.decide(10, 30, 5);
+        assert_eq!(d.action, PoolAction::Grow(4), "step capped at max_step_up");
+        assert_eq!(d.target, 14);
+        // headroom pads the demand before comparing
+        let mut h = Autoscaler::new(AutoscalerConfig {
+            headroom: 1.5,
+            max_step_up: 32,
+            cost_target: 64.0,
+            ..Default::default()
+        });
+        assert_eq!(h.decide(10, 10, 2).target, 15, "10 × 1.5 = 15");
+    }
+
+    #[test]
+    fn shrink_waits_for_hysteresis() {
+        let mut a = scaler(64.0, 3);
+        assert_eq!(a.decide(10, 4, 2).action, PoolAction::Hold);
+        assert_eq!(a.decide(10, 4, 2).action, PoolAction::Hold);
+        let d = a.decide(10, 4, 2);
+        assert_eq!(d.action, PoolAction::Shrink(2), "third low tick shrinks, step capped");
+        assert_eq!(d.target, 8);
+        // a demand spike resets the counter
+        let mut b = scaler(64.0, 3);
+        assert_eq!(b.decide(10, 4, 2).action, PoolAction::Hold);
+        assert_eq!(b.decide(10, 30, 2).action, PoolAction::Grow(4));
+        assert_eq!(b.decide(14, 4, 2).action, PoolAction::Hold, "counter was reset");
+    }
+
+    #[test]
+    fn target_clamped_to_cap_and_floor() {
+        let mut a = scaler(12.0, 1);
+        // demand far over the cap: grow toward the cap, never past it
+        let mut pool = 6u32;
+        for _ in 0..10 {
+            let d = a.decide(pool, 1000, 6);
+            assert!(d.target <= 12, "target {} over cost cap", d.target);
+            pool = d.target;
+        }
+        assert_eq!(pool, 12);
+        // demand far under the floor: shrink toward the floor, never below
+        let mut pool = 12u32;
+        for _ in 0..20 {
+            let d = a.decide(pool, 0, 6);
+            assert!(d.target >= 6, "target {} below floor", d.target);
+            pool = d.target;
+        }
+        assert_eq!(pool, 6);
+    }
+
+    #[test]
+    fn floor_above_cap_wins() {
+        // cost target allows 4 replicas but the fleet needs 7 to exist
+        let mut a = scaler(4.0, 1);
+        let d = a.decide(7, 3, 7);
+        assert_eq!(d.action, PoolAction::Hold, "feasibility wins over cost");
+        let d = a.decide(5, 3, 7);
+        assert!(matches!(d.action, PoolAction::Grow(_)), "grow back to the floor");
+        assert_eq!(d.target, 7);
+    }
+}

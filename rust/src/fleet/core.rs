@@ -19,7 +19,17 @@
 //!
 //! [`FleetReconfig`] is the joint apply-delay stager: one decision
 //! *vector* per tick, activated atomically so the budget check always
-//! sees the whole fleet's next configuration.
+//! sees the whole fleet's next configuration.  [`FleetReconfig::pop_due`]
+//! *coalesces*: it drains every staged fleet whose time has come and
+//! returns only the newest, so a slow tick can never leave stale
+//! reconfigurations queued behind the current one.
+//!
+//! The pool itself is elastic: [`FleetCore::resize_pool`] grows or
+//! shrinks the budget (never below the currently configured replicas),
+//! and the core keeps the cost ledger — replica-seconds *bought*
+//! (∫ budget dt) vs *used* (∫ configured dt) via [`FleetCore::accrue`]
+//! — plus pool-size extremes and preemption counts, all surfaced
+//! through [`FleetCore::pool_report`].
 
 use std::collections::VecDeque;
 
@@ -43,6 +53,40 @@ pub struct PoolUsage {
     pub in_use: u32,
 }
 
+/// End-of-run pool accounting: size extremes, resize/preemption counts
+/// and the replica-second cost ledger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolReport {
+    /// Pool size when the run ended.
+    pub budget: u32,
+    /// Smallest pool size ever held.
+    pub pool_min: u32,
+    /// Largest pool size ever held.
+    pub pool_max: u32,
+    /// Highest occupancy observed (rolling-shrink overshoot included).
+    pub peak_in_use: u32,
+    /// Number of [`FleetCore::resize_pool`] calls that changed the size.
+    pub resizes: u32,
+    /// Number of preemption events applied.
+    pub preemptions: u32,
+    /// Replicas taken from each member by preemptions (fleet order).
+    pub preempted: Vec<u32>,
+    /// ∫ budget dt — replica-seconds the pool was *paid for*.
+    pub bought_replica_secs: f64,
+    /// ∫ configured dt — replica-seconds actually *provisioned*.
+    pub used_replica_secs: f64,
+}
+
+impl PoolReport {
+    /// Fraction of bought replica-seconds that were provisioned.
+    pub fn utilization(&self) -> f64 {
+        if self.bought_replica_secs <= 0.0 {
+            return 1.0;
+        }
+        self.used_replica_secs / self.bought_replica_secs
+    }
+}
+
 /// N member cluster cores over one replica pool.
 #[derive(Debug)]
 pub struct FleetCore {
@@ -51,6 +95,19 @@ pub struct FleetCore {
     /// Highest `in_use` ever observed (rolling-reconfig overshoot
     /// included); updated by [`FleetCore::note`].
     peak_in_use: u32,
+    /// Pool-size extremes over the core's lifetime.
+    pool_min: u32,
+    pool_max: u32,
+    /// Size-changing [`FleetCore::resize_pool`] calls.
+    resizes: u32,
+    /// Preemption events recorded via [`FleetCore::note_preemption`].
+    preemptions: u32,
+    /// Replicas reclaimed from each member by preemptions.
+    preempted: Vec<u32>,
+    /// Cost ledger (see [`FleetCore::accrue`]).
+    last_accrual: f64,
+    bought_replica_secs: f64,
+    used_replica_secs: f64,
 }
 
 impl FleetCore {
@@ -68,11 +125,24 @@ impl FleetCore {
                  holds {budget}"
             ));
         }
-        let cores = inits
+        let cores: Vec<ClusterCore> = inits
             .iter()
             .map(|(cfg, lambda, drop)| ClusterCore::new(cfg, *lambda, *drop))
             .collect();
-        Ok(FleetCore { cores, budget, peak_in_use: configured })
+        let n = cores.len();
+        Ok(FleetCore {
+            cores,
+            budget,
+            peak_in_use: configured,
+            pool_min: budget,
+            pool_max: budget,
+            resizes: 0,
+            preemptions: 0,
+            preempted: vec![0; n],
+            last_accrual: 0.0,
+            bought_replica_secs: 0.0,
+            used_replica_secs: 0.0,
+        })
     }
 
     pub fn n_members(&self) -> usize {
@@ -156,18 +226,97 @@ impl FleetCore {
         self.cores.iter().map(ClusterCore::configured_replicas).sum()
     }
 
+    /// Advance the cost ledger to `now`: the elapsed span is charged at
+    /// the current pool size (bought) and the current configured
+    /// replica count (used).  Drivers call this at every boundary that
+    /// changes either quantity — adaptation tick, joint apply,
+    /// preemption, resize — and once at the end of the run, so the
+    /// integrals are piecewise-exact.  Time never runs backwards: a
+    /// stale `now` is a no-op.
+    pub fn accrue(&mut self, now: f64) {
+        let dt = now - self.last_accrual;
+        if dt <= 0.0 {
+            return;
+        }
+        self.bought_replica_secs += dt * self.budget as f64;
+        self.used_replica_secs += dt * self.configured_replicas() as f64;
+        self.last_accrual = now;
+    }
+
+    /// Grow or shrink the pool itself (the autoscaler's actuator).
+    /// Accrues cost at the old size first, then changes the budget.
+    /// Shrinking below the currently configured replicas is rejected —
+    /// callers shrink configurations first (a joint apply under the
+    /// smaller budget), then the pool.
+    pub fn resize_pool(&mut self, now: f64, new_budget: u32) -> Result<(), String> {
+        if new_budget == self.budget {
+            return Ok(());
+        }
+        let configured = self.configured_replicas();
+        if new_budget < configured {
+            return Err(format!(
+                "pool resize to {new_budget} below {configured} configured replicas"
+            ));
+        }
+        self.accrue(now);
+        self.budget = new_budget;
+        self.pool_min = self.pool_min.min(new_budget);
+        self.pool_max = self.pool_max.max(new_budget);
+        self.resizes += 1;
+        Ok(())
+    }
+
+    /// Record one applied preemption event: `from` lists (member,
+    /// replicas reclaimed) per donor.
+    pub fn note_preemption(&mut self, from: &[(usize, u32)]) {
+        self.preemptions += 1;
+        for &(m, k) in from {
+            if let Some(c) = self.preempted.get_mut(m) {
+                *c += k;
+            }
+        }
+    }
+
+    /// The end-of-run pool accounting snapshot (callers usually
+    /// [`FleetCore::accrue`] the final instant first).
+    pub fn pool_report(&self) -> PoolReport {
+        PoolReport {
+            budget: self.budget,
+            pool_min: self.pool_min,
+            pool_max: self.pool_max,
+            peak_in_use: self.peak_in_use,
+            resizes: self.resizes,
+            preemptions: self.preemptions,
+            preempted: self.preempted.clone(),
+            bought_replica_secs: self.bought_replica_secs,
+            used_replica_secs: self.used_replica_secs,
+        }
+    }
+
     /// End of run: per-member accounting, member order preserved.
     pub fn into_accountings(self) -> Vec<crate::cluster::accounting::Accounting> {
         self.cores.into_iter().map(ClusterCore::into_accounting).collect()
     }
 }
 
-/// One staged joint decision (a decision per member) and its activation
-/// time.
+/// One staged joint decision (a decision per member), its activation
+/// time, the pool budget it was solved under, and an optional pool
+/// *shrink* to perform after the decisions activate (growth happens
+/// immediately at decision time — only the shrink must wait until the
+/// smaller configuration is in force, or [`FleetCore::resize_pool`]
+/// would reject it).
 #[derive(Debug, Clone)]
 pub struct StagedFleet {
     pub decisions: Vec<Decision>,
     pub at: f64,
+    /// Controller pool budget the decisions were solved under.  A
+    /// pending stage with a larger `budget` than a due shrink target
+    /// means that shrink is unsafe to execute yet (the larger
+    /// configuration is still in flight) — see
+    /// [`FleetReconfig::max_pending_budget`].
+    pub budget: u32,
+    /// Pool size to shrink to once `decisions` are applied.
+    pub shrink_to: Option<u32>,
 }
 
 /// FIFO apply-delay stager for joint fleet decisions — the fleet twin
@@ -185,20 +334,58 @@ impl FleetReconfig {
         FleetReconfig { apply_delay: apply_delay.max(0.0), pending: VecDeque::new() }
     }
 
-    /// Stage a joint decision at `now`; returns its activation time.
-    pub fn stage(&mut self, now: f64, decisions: Vec<Decision>) -> f64 {
+    /// Stage a joint decision at `now`, recording the pool `budget` it
+    /// was solved under (and optionally a pool shrink to perform after
+    /// activation); returns its activation time.
+    pub fn stage(
+        &mut self,
+        now: f64,
+        decisions: Vec<Decision>,
+        budget: u32,
+        shrink_to: Option<u32>,
+    ) -> f64 {
         let at = now + self.apply_delay;
-        self.pending.push_back(StagedFleet { decisions, at });
+        self.pending.push_back(StagedFleet { decisions, at, budget, shrink_to });
         at
     }
 
-    /// Pop the oldest staged decision whose activation time has come.
+    /// Largest solve budget among still-pending stages — a due shrink
+    /// below this would strand an in-flight (bigger) configuration,
+    /// so drivers skip it.  `None` when nothing is pending.
+    pub fn max_pending_budget(&self) -> Option<u32> {
+        self.pending.iter().map(|s| s.budget).max()
+    }
+
+    /// Drain every staged decision whose activation time has come and
+    /// return only the NEWEST of them (coalescing).  A joint decision
+    /// fully supersedes any older one — applying a stale configuration
+    /// for an instant before the current one would churn every member
+    /// core for nothing — so when a slow tick lets several stages come
+    /// due together, the older ones (and any pool shrink they carried,
+    /// which was computed against a budget that no longer reflects the
+    /// controller's view) are discarded, never left queued.
     pub fn pop_due(&mut self, now: f64) -> Option<StagedFleet> {
-        if self.pending.front().is_some_and(|s| s.at <= now + 1e-9) {
-            self.pending.pop_front()
-        } else {
-            None
+        let mut newest = None;
+        while self.pending.front().is_some_and(|s| s.at <= now + 1e-9) {
+            newest = self.pending.pop_front();
         }
+        newest
+    }
+
+    /// Staged fleets discarded by coalescing so far would be invisible;
+    /// expose how many entries are due at `now` for diagnostics/tests.
+    pub fn due_len(&self, now: f64) -> usize {
+        self.pending.iter().take_while(|s| s.at <= now + 1e-9).count()
+    }
+
+    /// Discard everything staged (a preemption superseded it: the fast
+    /// path's decision vector is newer than any queued slow-path one,
+    /// and letting a stale stage activate later would silently revert
+    /// the preemption).  Returns how many stages were discarded.
+    pub fn clear(&mut self) -> usize {
+        let n = self.pending.len();
+        self.pending.clear();
+        n
     }
 
     pub fn next_due(&self) -> Option<f64> {
@@ -328,8 +515,8 @@ mod tests {
             fallback: false,
         };
         let mut r = FleetReconfig::new(8.0);
-        assert_eq!(r.stage(10.0, vec![d(1.0), d(2.0)]), 18.0);
-        assert_eq!(r.stage(20.0, vec![d(3.0), d(4.0)]), 28.0);
+        assert_eq!(r.stage(10.0, vec![d(1.0), d(2.0)], 8, None), 18.0);
+        assert_eq!(r.stage(20.0, vec![d(3.0), d(4.0)], 8, None), 28.0);
         assert_eq!(r.pending_len(), 2);
         assert!(r.pop_due(17.9).is_none());
         let first = r.pop_due(18.0).unwrap();
@@ -339,5 +526,89 @@ mod tests {
         assert!(r.pop_due(20.0).is_none());
         assert_eq!(r.pop_due(30.0).unwrap().decisions[1].config.pas, 4.0);
         assert_eq!(r.pending_len(), 0);
+    }
+
+    /// Regression: several stages due together must all drain in ONE
+    /// pop — the oldest superseded, the newest returned, nothing left
+    /// queued for a later (stale) application.
+    #[test]
+    fn fleet_reconfig_pop_due_coalesces_all_due_stages() {
+        let d = |pas: f64| Decision {
+            config: PipelineConfig {
+                stages: Vec::new(),
+                pas,
+                cost: 1.0,
+                batch_sum: 0,
+                objective: 0.0,
+                latency_e2e: 0.0,
+            },
+            lambda_predicted: 10.0,
+            decision_time: 0.0,
+            fallback: false,
+        };
+        let mut r = FleetReconfig::new(8.0);
+        r.stage(10.0, vec![d(1.0)], 9, Some(9));
+        r.stage(20.0, vec![d(2.0)], 12, None);
+        r.stage(30.0, vec![d(3.0)], 10, None);
+        // a slow tick: all three are due by t=40
+        assert_eq!(r.due_len(40.0), 3);
+        assert_eq!(r.max_pending_budget(), Some(12));
+        let s = r.pop_due(40.0).expect("newest staged fleet");
+        assert_eq!(s.decisions[0].config.pas, 3.0, "newest wins");
+        assert_eq!(s.shrink_to, None, "stale shrink discarded with its stage");
+        assert_eq!(s.budget, 10);
+        assert_eq!(r.pending_len(), 0, "nothing stale left queued");
+        assert_eq!(r.max_pending_budget(), None);
+        assert!(r.pop_due(100.0).is_none());
+    }
+
+    #[test]
+    fn resize_pool_bounds_and_extremes() {
+        let mut f = two_member_fleet(4);
+        assert_eq!(f.configured_replicas(), 4);
+        // grow is always fine
+        f.resize_pool(10.0, 9).unwrap();
+        assert_eq!(f.budget(), 9);
+        // shrink below configured replicas is rejected
+        assert!(f.resize_pool(20.0, 3).is_err());
+        assert_eq!(f.budget(), 9);
+        // shrink to exactly configured is fine
+        f.resize_pool(30.0, 4).unwrap();
+        let rep = f.pool_report();
+        assert_eq!((rep.pool_min, rep.pool_max), (4, 9));
+        assert_eq!(rep.resizes, 2);
+        // no-op resize does not count
+        f.resize_pool(31.0, 4).unwrap();
+        assert_eq!(f.pool_report().resizes, 2);
+    }
+
+    #[test]
+    fn cost_ledger_integrates_bought_vs_used() {
+        let mut f = two_member_fleet(8); // 4 configured of 8 bought
+        f.accrue(10.0);
+        let r = f.pool_report();
+        assert!((r.bought_replica_secs - 80.0).abs() < 1e-9, "{}", r.bought_replica_secs);
+        assert!((r.used_replica_secs - 40.0).abs() < 1e-9, "{}", r.used_replica_secs);
+        assert!((r.utilization() - 0.5).abs() < 1e-9);
+        // time never runs backwards
+        f.accrue(5.0);
+        assert!((f.pool_report().bought_replica_secs - 80.0).abs() < 1e-9);
+        // a resize accrues at the old size first, then charges the new
+        f.resize_pool(20.0, 16).unwrap();
+        f.accrue(30.0);
+        let r = f.pool_report();
+        // 10s × 8 + 10s × 16 = 240 bought; 30s × 4 = 120 used
+        assert!((r.bought_replica_secs - 240.0).abs() < 1e-9, "{}", r.bought_replica_secs);
+        assert!((r.used_replica_secs - 120.0).abs() < 1e-9, "{}", r.used_replica_secs);
+    }
+
+    #[test]
+    fn preemption_counters_accumulate_per_member() {
+        let mut f = two_member_fleet(4);
+        f.note_preemption(&[(1, 2)]);
+        f.note_preemption(&[(0, 1), (1, 1)]);
+        let r = f.pool_report();
+        assert_eq!(r.preemptions, 2);
+        assert_eq!(r.preempted, vec![1, 3]);
     }
 }

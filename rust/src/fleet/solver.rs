@@ -22,9 +22,21 @@
 //!   fleets; the optimality cross-check the tests pin the greedy
 //!   against.
 //!
+//! * [`solve_fleet_tiers`] — the same greedy run lexicographically over
+//!   priority classes (higher class claims the pool first); with one
+//!   distinct class it IS [`solve_fleet`].
+//!
 //! [`FleetAdapter`] packages the allocator as a [`FleetController`]
 //! (per-member predictors → joint solve → one [`Decision`] per member)
-//! for the fleet drivers in `simulator::sim` and `serving::engine`.
+//! for the fleet drivers in `simulator::sim` and `serving::engine` —
+//! and, when tuned via [`FleetTuning`], runs the *elastic* control
+//! plane on top: an InferLine-style slow/fast split where the slow path
+//! is the joint solve plus a pool-resize proposal
+//! ([`FleetAdapter::resize`], backed by
+//! [`crate::fleet::autoscaler::Autoscaler`]) and the fast path is
+//! mid-interval priority preemption ([`FleetAdapter::preempt`]) plus
+//! incremental re-solves that skip members whose predicted λ barely
+//! moved.
 //!
 //! Modeling note: a member whose IP is infeasible even at the full pool
 //! gets a budget-clamped survival config ([`fallback_under_budget`] —
@@ -36,6 +48,7 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::coordinator::adapter::{AdapterConfig, Decision};
+use crate::fleet::autoscaler::{Autoscaler, AutoscalerConfig};
 use crate::models::accuracy::AccuracyMetric;
 use crate::models::pipelines::PipelineSpec;
 use crate::optimizer::ip::{self, materialize, PipelineConfig, Problem, StageConfig};
@@ -316,6 +329,107 @@ pub fn allocate_at(
     }
 }
 
+/// Memoized member evaluation used by the greedy passes:
+/// (member, share) → objective.
+fn obj_at(
+    problems: &[Problem],
+    options: &[Vec<Vec<StageOption>>],
+    cache: &mut [HashMap<u32, (f64, bool)>],
+    i: usize,
+    b: u32,
+) -> f64 {
+    if let Some(&(o, _)) = cache[i].get(&b) {
+        return o;
+    }
+    let (cfg, solved) = eval_member(&problems[i], &options[i], b);
+    let o = cfg.objective;
+    cache[i].insert(b, (o, solved));
+    o
+}
+
+/// The greedy marginal-gain pass over a *subset* of members: while
+/// `remaining` replicas are left, grant the next one (or a lookahead
+/// jump to a member's minimum feasible allocation) to whichever listed
+/// member buys the most objective per replica.  Mutates `shares` and
+/// `remaining` in place; stops when no listed member benefits.
+fn greedy_grant(
+    problems: &[Problem],
+    options: &[Vec<Vec<StageOption>>],
+    cache: &mut [HashMap<u32, (f64, bool)>],
+    min_b: &[Option<u32>],
+    members: &[usize],
+    shares: &mut [u32],
+    remaining: &mut u32,
+) {
+    while *remaining > 0 {
+        let mut best: Option<(usize, u32, f64)> = None;
+        for &i in members {
+            let cur = obj_at(problems, options, cache, i, shares[i]);
+            let mut cands = vec![1u32];
+            if let Some(mb) = min_b[i] {
+                if mb > shares[i] {
+                    cands.push(mb - shares[i]);
+                }
+            }
+            for &k in &cands {
+                if k == 0 || k > *remaining {
+                    continue;
+                }
+                let gain = obj_at(problems, options, cache, i, shares[i] + k) - cur;
+                if gain <= 1e-12 {
+                    continue;
+                }
+                let rate = gain / k as f64;
+                if best.as_ref().is_none_or(|&(_, _, r)| rate > r) {
+                    best = Some((i, k, rate));
+                }
+            }
+        }
+        match best {
+            Some((i, k, _)) => {
+                shares[i] += k;
+                *remaining -= k;
+            }
+            None => break, // no listed member benefits from another replica
+        }
+    }
+}
+
+/// Shared prologue of the joint solvers: per-member floors (one
+/// replica per stage), Pareto-pruned option sets, the memoized
+/// evaluation cache and the min-feasible lookahead targets, plus the
+/// replicas left after the floors.  `None` when `budget` cannot cover
+/// the floors.
+struct GreedyCtx {
+    floors: Vec<u32>,
+    options: Vec<Vec<Vec<StageOption>>>,
+    cache: Vec<HashMap<u32, (f64, bool)>>,
+    min_b: Vec<Option<u32>>,
+    remaining: u32,
+}
+
+fn greedy_ctx(problems: &[Problem], budget: u32) -> Option<GreedyCtx> {
+    let n = problems.len();
+    let floors: Vec<u32> = problems.iter().map(|p| p.profiles.stages.len() as u32).collect();
+    let floor_total: u32 = floors.iter().sum();
+    if budget < floor_total {
+        return None;
+    }
+    let options: Vec<Vec<Vec<StageOption>>> =
+        problems.iter().map(|p| p.stage_options()).collect();
+    // Lookahead targets: each member's minimum feasible allocation, so
+    // the greedy can see across an infeasibility threshold.
+    let min_b: Vec<Option<u32>> =
+        (0..n).map(|i| min_feasible_replicas(&problems[i], &options[i], budget)).collect();
+    Some(GreedyCtx {
+        floors,
+        options,
+        cache: vec![HashMap::new(); n],
+        min_b,
+        remaining: budget - floor_total,
+    })
+}
+
 /// Greedy marginal-gain joint solve.  `None` only when `budget` cannot
 /// cover one replica per stage across the fleet; otherwise the returned
 /// allocation respects the budget and its total objective is at least
@@ -330,75 +444,77 @@ pub fn solve_fleet(problems: &[Problem], budget: u32) -> Option<FleetAllocation>
             total_objective: 0.0,
         });
     }
-    let floors: Vec<u32> = problems.iter().map(|p| p.profiles.stages.len() as u32).collect();
-    let floor_total: u32 = floors.iter().sum();
-    if budget < floor_total {
-        return None;
-    }
-    let options: Vec<Vec<Vec<StageOption>>> =
-        problems.iter().map(|p| p.stage_options()).collect();
+    let mut ctx = greedy_ctx(problems, budget)?;
 
-    // Memoized member evaluation: (member, share) → (objective, solved).
-    let mut cache: Vec<HashMap<u32, (f64, bool)>> = vec![HashMap::new(); n];
-    let obj_at = |cache: &mut [HashMap<u32, (f64, bool)>], i: usize, b: u32| -> f64 {
-        if let Some(&(o, _)) = cache[i].get(&b) {
-            return o;
-        }
-        let (cfg, solved) = eval_member(&problems[i], &options[i], b);
-        let o = cfg.objective;
-        cache[i].insert(b, (o, solved));
-        o
-    };
-
-    // Lookahead targets: each member's minimum feasible allocation, so
-    // the greedy can see across an infeasibility threshold.
-    let min_b: Vec<Option<u32>> =
-        (0..n).map(|i| min_feasible_replicas(&problems[i], &options[i], budget)).collect();
-
-    let mut shares = floors.clone();
-    let mut remaining = budget - floor_total;
-    while remaining > 0 {
-        let mut best: Option<(usize, u32, f64)> = None;
-        for i in 0..n {
-            let cur = obj_at(&mut cache, i, shares[i]);
-            let mut cands = vec![1u32];
-            if let Some(mb) = min_b[i] {
-                if mb > shares[i] {
-                    cands.push(mb - shares[i]);
-                }
-            }
-            for &k in &cands {
-                if k == 0 || k > remaining {
-                    continue;
-                }
-                let gain = obj_at(&mut cache, i, shares[i] + k) - cur;
-                if gain <= 1e-12 {
-                    continue;
-                }
-                let rate = gain / k as f64;
-                if best.as_ref().is_none_or(|&(_, _, r)| rate > r) {
-                    best = Some((i, k, rate));
-                }
-            }
-        }
-        match best {
-            Some((i, k, _)) => {
-                shares[i] += k;
-                remaining -= k;
-            }
-            None => break, // no member benefits from another replica
-        }
-    }
+    let mut shares = ctx.floors.clone();
+    let mut remaining = ctx.remaining;
+    let all: Vec<usize> = (0..n).collect();
+    greedy_grant(
+        problems, &ctx.options, &mut ctx.cache, &ctx.min_b, &all, &mut shares, &mut remaining,
+    );
 
     // Never worse than the even split: compute both, keep the better.
-    let even = even_shares(budget, &floors);
-    let greedy_total: f64 = (0..n).map(|i| obj_at(&mut cache, i, shares[i])).sum();
-    let even_total: f64 = (0..n).map(|i| obj_at(&mut cache, i, even[i])).sum();
+    let even = even_shares(budget, &ctx.floors);
+    let greedy_total: f64 =
+        (0..n).map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, i, shares[i])).sum();
+    let even_total: f64 =
+        (0..n).map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, i, even[i])).sum();
     let final_shares = if greedy_total + 1e-12 >= even_total { shares } else { even };
 
-    let mut alloc = allocate_at(problems, &options, &final_shares);
+    let mut alloc = allocate_at(problems, &ctx.options, &final_shares);
     alloc.budget = budget;
     debug_assert!(alloc.replicas_used <= budget, "fleet allocation exceeds budget");
+    Some(alloc)
+}
+
+/// Priority-tiered joint solve: members are grouped by priority class
+/// (HIGHER value = more important, like a Kubernetes PriorityClass) and
+/// the pool is granted *lexicographically* — the top tier's greedy pass
+/// claims whatever it can benefit from first, then the next tier runs
+/// on the remainder, and so on.  Every member still holds its
+/// one-replica-per-stage floor regardless of class (a starved tier
+/// would be a dead pipeline, not a deprioritized one).
+///
+/// With a single distinct priority this is exactly [`solve_fleet`]
+/// (even-split floor included); with several tiers the even-split floor
+/// is intentionally dropped — precedence is the point.
+pub fn solve_fleet_tiers(
+    problems: &[Problem],
+    budget: u32,
+    priorities: &[u32],
+) -> Option<FleetAllocation> {
+    let n = problems.len();
+    assert_eq!(priorities.len(), n, "one priority class per member");
+    if n == 0 || priorities.iter().all(|&p| p == priorities[0]) {
+        return solve_fleet(problems, budget);
+    }
+    let mut ctx = greedy_ctx(problems, budget)?;
+
+    let mut classes: Vec<u32> = priorities.to_vec();
+    classes.sort_unstable();
+    classes.dedup();
+
+    let mut shares = ctx.floors.clone();
+    let mut remaining = ctx.remaining;
+    for &class in classes.iter().rev() {
+        let tier: Vec<usize> = (0..n).filter(|&i| priorities[i] == class).collect();
+        greedy_grant(
+            problems,
+            &ctx.options,
+            &mut ctx.cache,
+            &ctx.min_b,
+            &tier,
+            &mut shares,
+            &mut remaining,
+        );
+        if remaining == 0 {
+            break;
+        }
+    }
+
+    let mut alloc = allocate_at(problems, &ctx.options, &shares);
+    alloc.budget = budget;
+    debug_assert!(alloc.replicas_used <= budget, "tiered allocation exceeds budget");
     Some(alloc)
 }
 
@@ -456,7 +572,10 @@ pub fn brute_best_split(problems: &[Problem], budget: u32) -> Option<f64> {
 
 /// A joint decision source for the fleet drivers: both the DES fleet
 /// loop and the live fleet engine call this once per adaptation tick
-/// and receive one [`Decision`] per member.
+/// and receive one [`Decision`] per member.  The two defaulted hooks
+/// make the control plane *elastic*: a pool-resize proposal before each
+/// joint decision, and a mid-interval preemption fast path between
+/// ticks.  Plain controllers ignore both and behave exactly as before.
 pub trait FleetController {
     /// Initial configurations, decided on each trace's first-second
     /// rate before any request arrives.
@@ -465,18 +584,146 @@ pub trait FleetController {
     /// One adaptation-tick joint decision from the per-member observed
     /// load histories.
     fn decide(&mut self, now: f64, histories: &[Vec<f64>]) -> Vec<Decision>;
+
+    /// Pool-resize proposal for this tick, called by the driver right
+    /// BEFORE [`FleetController::decide`] with the same histories.
+    /// `Some(p)` means the controller now budgets against a pool of
+    /// `p`: the driver grows the physical pool immediately (so the
+    /// joint solve can use it) and defers a shrink until the smaller
+    /// configurations activate.  Default: never resize.
+    fn resize(&mut self, _now: f64, _histories: &[Vec<f64>]) -> Option<u32> {
+        None
+    }
+
+    /// Whether this controller can ever preempt.  Drivers skip the
+    /// mid-interval check entirely (no monitor scans, no events) when
+    /// false, so the fixed-pool path pays nothing.  Default: false.
+    fn wants_preemption(&self) -> bool {
+        false
+    }
+
+    /// Mid-interval preemption fast path: called by the driver BETWEEN
+    /// adaptation ticks with the per-member observed rates.  `Some`
+    /// carries a full replacement decision vector (reclaimed replicas
+    /// moved from strictly lower-priority members to a bursting
+    /// higher-priority one) that the driver applies immediately,
+    /// bypassing both the joint IP and the apply delay.  Default:
+    /// never preempt.
+    fn preempt(&mut self, _now: f64, _observed: &[f64]) -> Option<FleetPreemption> {
+        None
+    }
+}
+
+/// Preemption knobs (see [`FleetAdapter::preempt`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PreemptionConfig {
+    /// Trigger: a member's observed rate must exceed
+    /// `burst_factor ×` its last predicted λ.
+    pub burst_factor: f64,
+    /// Max replicas reclaimed by one preemption event.
+    pub max_reclaim: u32,
+}
+
+impl Default for PreemptionConfig {
+    fn default() -> Self {
+        PreemptionConfig { burst_factor: 1.5, max_reclaim: 4 }
+    }
+}
+
+/// One preemption fast-path outcome: the full post-preemption decision
+/// vector plus who paid for it.
+#[derive(Debug, Clone)]
+pub struct FleetPreemption {
+    /// One decision per member.  Unchanged members carry the
+    /// controller's *currently intended* configuration — the last
+    /// joint solve, which may still be inside its apply-delay window.
+    /// Applying this vector therefore fast-forwards any such pending
+    /// reconfiguration along with the preemption (the fast path jumps
+    /// the whole queue; drivers clear the stager so the superseded
+    /// stage never re-applies).
+    pub decisions: Vec<Decision>,
+    /// The bursting member that received the reclaimed replicas.
+    pub to: usize,
+    /// (member, replicas taken) per donor — all strictly lower
+    /// priority than `to`.
+    pub from: Vec<(usize, u32)>,
+    /// Σ replicas moved.
+    pub reclaimed: u32,
+    /// The pool size the controller budgets against.  The decision
+    /// vector fits this, so after applying it the driver syncs the
+    /// physical pool down to it (executing any still-pending shrink
+    /// early — a preemption clears the reconfiguration queue).
+    pub budget: u32,
+}
+
+/// Elastic-control-plane options bundled for callers that build the
+/// adapter indirectly (the live fleet engine).  `Default` = the PR-2
+/// behavior: equal priorities, fixed pool, full joint re-solve every
+/// tick, no preemption.
+#[derive(Debug, Clone, Default)]
+pub struct FleetTuning {
+    /// Per-member priority classes (higher = more important); `None` =
+    /// all equal.
+    pub priorities: Option<Vec<u32>>,
+    /// Pool autoscaler; `None` = the pool is fixed at the budget.
+    pub autoscaler: Option<AutoscalerConfig>,
+    /// Mid-interval preemption fast path; `None` = disabled.
+    pub preemption: Option<PreemptionConfig>,
+    /// Incremental re-solve threshold: members whose predicted λ moved
+    /// relatively less than this keep their cached configuration and
+    /// share (0 = always full joint solve).
+    pub resolve_threshold: f64,
+}
+
+/// The last joint solution, kept for incremental re-solves and the
+/// preemption fast path.
+struct SolveCache {
+    /// Predicted λ per member the solution was computed for (≥ 0.5).
+    lambdas: Vec<f64>,
+    /// Granted pool share per member.
+    shares: Vec<u32>,
+    configs: Vec<PipelineConfig>,
+    solved: Vec<bool>,
+    /// Pool size the shares were solved against.
+    budget: u32,
 }
 
 /// The fleet adapter: one predictor per member feeding the joint
-/// allocator each tick.
+/// allocator each tick — plus the elastic control plane (priority
+/// tiers, pool autoscaling, mid-interval preemption, incremental
+/// re-solves) when tuned on.
 pub struct FleetAdapter {
     pub specs: Vec<PipelineSpec>,
     pub profiles: Vec<PipelineProfiles>,
     pub metric: AccuracyMetric,
-    /// The shared replica pool.
+    /// The shared replica pool (moves when an autoscaler is attached).
     pub budget: u32,
     pub config: AdapterConfig,
     pub predictors: Vec<Box<dyn Predictor + Send>>,
+    /// Per-member priority class, higher = more important (all equal by
+    /// default — plain joint solving, no preemption donors).
+    pub priorities: Vec<u32>,
+    /// Pool autoscaler (None = fixed pool).
+    pub autoscaler: Option<Autoscaler>,
+    /// Preemption fast-path knobs (None = disabled).
+    pub preemption: Option<PreemptionConfig>,
+    /// Relative λ-move threshold for incremental re-solves (0 = always
+    /// run the full joint solve).
+    pub resolve_threshold: f64,
+    /// Telemetry: how many decisions ran the full joint solve vs the
+    /// incremental per-member path.
+    pub full_solves: usize,
+    pub incremental_solves: usize,
+    cache: Option<SolveCache>,
+    /// λs predicted by [`FleetAdapter::resize`] this tick, consumed by
+    /// the following [`FleetAdapter::decide`] so stateful predictors
+    /// are only asked once per tick.
+    pending_lambdas: Option<Vec<f64>>,
+    /// Last demand estimate (clamped λs it was computed for, Σ min
+    /// feasible) — reused on quiet ticks so the autoscaler's demand
+    /// estimation doesn't cost a full feasibility search when the
+    /// incremental path is skipping the joint solve anyway.
+    last_demand: Option<(Vec<f64>, u32)>,
 }
 
 impl FleetAdapter {
@@ -503,46 +750,324 @@ impl FleetAdapter {
         if budget < floor {
             return Err(format!("fleet budget {budget} below stage floor {floor}"));
         }
-        Ok(FleetAdapter { specs, profiles, metric, budget, config, predictors })
+        let n = specs.len();
+        Ok(FleetAdapter {
+            specs,
+            profiles,
+            metric,
+            budget,
+            config,
+            predictors,
+            priorities: vec![0; n],
+            autoscaler: None,
+            preemption: None,
+            resolve_threshold: 0.0,
+            full_solves: 0,
+            incremental_solves: 0,
+            cache: None,
+            pending_lambdas: None,
+            last_demand: None,
+        })
+    }
+
+    /// Apply an elastic-control-plane tuning bundle.  Errors when the
+    /// priority vector length disagrees with the member count.
+    pub fn with_tuning(mut self, tuning: FleetTuning) -> Result<FleetAdapter, String> {
+        if let Some(prio) = tuning.priorities {
+            if prio.len() != self.specs.len() {
+                return Err(format!(
+                    "fleet tuning: {} priorities for {} members",
+                    prio.len(),
+                    self.specs.len()
+                ));
+            }
+            self.priorities = prio;
+        }
+        self.autoscaler = tuning.autoscaler.map(Autoscaler::new);
+        self.preemption = tuning.preemption;
+        self.resolve_threshold = tuning.resolve_threshold;
+        Ok(self)
     }
 
     pub fn n_members(&self) -> usize {
         self.specs.len()
     }
 
+    /// The fleet's min-feasible replica floor (one replica per stage of
+    /// every member) — the pool never shrinks below it.
+    pub fn stage_floor(&self) -> u32 {
+        self.specs.iter().map(|s| s.n_stages() as u32).sum()
+    }
+
+    /// Member `i`'s solver problem at λ, replica options capped by the
+    /// current pool.
+    fn member_problem(&self, i: usize, lambda: f64) -> Problem<'_> {
+        Problem {
+            spec: &self.specs[i],
+            profiles: &self.profiles[i],
+            lambda: lambda.max(0.5),
+            metric: self.metric,
+            max_replicas: self.config.max_replicas.min(self.budget),
+        }
+    }
+
+    /// Member `i`'s problem for *demand estimation*: options capped by
+    /// the adapter limit only, NOT the current pool — demand above the
+    /// pool is exactly what the autoscaler needs to see.
+    fn demand_problem(&self, i: usize, lambda: f64) -> Problem<'_> {
+        Problem {
+            spec: &self.specs[i],
+            profiles: &self.profiles[i],
+            lambda: lambda.max(0.5),
+            metric: self.metric,
+            max_replicas: self.config.max_replicas,
+        }
+    }
+
+    /// Incremental path: when only a strict subset of members moved
+    /// (relative λ change ≤ `resolve_threshold` for the rest), keep
+    /// everyone's share fixed and re-run the budget-capped solve for
+    /// the moved members alone.  Shares are unchanged, so the joint
+    /// budget invariant holds trivially.  Returns `None` when the full
+    /// joint solve is required (feature off, no/stale cache, pool
+    /// resized, or every member moved).
+    fn try_incremental(&mut self, lambdas: &[f64], t0: Instant) -> Option<Vec<Decision>> {
+        if self.resolve_threshold <= 0.0 {
+            return None;
+        }
+        {
+            let cache = self.cache.as_ref()?;
+            if cache.budget != self.budget || cache.lambdas.len() != lambdas.len() {
+                return None;
+            }
+            let moved = lambdas
+                .iter()
+                .zip(&cache.lambdas)
+                .filter(|&(&l, &old)| {
+                    (l.max(0.5) - old).abs() / old.max(0.5) > self.resolve_threshold
+                })
+                .count();
+            if moved >= lambdas.len() {
+                return None; // cache-busting: everyone moved, solve jointly
+            }
+        }
+        let mut cache = self.cache.take().expect("checked above");
+        for (i, &l) in lambdas.iter().enumerate() {
+            let l = l.max(0.5);
+            if (l - cache.lambdas[i]).abs() / cache.lambdas[i].max(0.5) <= self.resolve_threshold
+            {
+                continue;
+            }
+            let p = self.member_problem(i, l);
+            let opts = p.stage_options();
+            let (cfg, solved) = eval_member(&p, &opts, cache.shares[i]);
+            cache.configs[i] = cfg;
+            cache.solved[i] = solved;
+            cache.lambdas[i] = l;
+        }
+        self.incremental_solves += 1;
+        let decision_time = t0.elapsed().as_secs_f64();
+        let ds = cache_decisions(&cache, decision_time);
+        self.cache = Some(cache);
+        Some(ds)
+    }
+
     /// Joint decision for explicit per-member λ (sweeps / tests / the
-    /// initial tick).
+    /// initial tick).  Runs the incremental path when possible,
+    /// otherwise the full (priority-tiered) joint solve.
     pub fn decide_for_lambdas(&mut self, lambdas: &[f64]) -> Vec<Decision> {
         assert_eq!(lambdas.len(), self.specs.len());
         let t0 = Instant::now();
-        let problems: Vec<Problem> = self
-            .specs
-            .iter()
-            .zip(&self.profiles)
-            .zip(lambdas)
-            .map(|((spec, prof), &l)| Problem {
-                spec,
-                profiles: prof,
-                lambda: l.max(0.5),
-                metric: self.metric,
-                max_replicas: self.config.max_replicas.min(self.budget),
-            })
+        if let Some(ds) = self.try_incremental(lambdas, t0) {
+            return ds;
+        }
+        let problems: Vec<Problem> = (0..self.specs.len())
+            .map(|i| self.member_problem(i, lambdas[i]))
             .collect();
-        let alloc = solve_fleet(&problems, self.budget)
+        let alloc = solve_fleet_tiers(&problems, self.budget, &self.priorities)
             .expect("budget >= stage floor was checked at construction");
+        self.full_solves += 1;
         let decision_time = t0.elapsed().as_secs_f64();
-        alloc
-            .members
-            .into_iter()
-            .zip(lambdas)
-            .map(|(m, &l)| Decision {
-                config: m.config,
-                lambda_predicted: l.max(0.5),
-                decision_time,
-                fallback: !m.solved,
-            })
-            .collect()
+        let cache = SolveCache {
+            lambdas: lambdas.iter().map(|l| l.max(0.5)).collect(),
+            shares: alloc.members.iter().map(|m| m.budget).collect(),
+            configs: alloc.members.iter().map(|m| m.config.clone()).collect(),
+            solved: alloc.members.iter().map(|m| m.solved).collect(),
+            budget: self.budget,
+        };
+        let ds = cache_decisions(&cache, decision_time);
+        self.cache = Some(cache);
+        ds
     }
+
+    /// Autoscaler tick (the slow path's outer loop): predict this
+    /// tick's λs (stashed for the following [`FleetAdapter::decide`] so
+    /// stateful predictors run once per tick), estimate fleet-wide
+    /// demand as Σ per-member minimum feasible replicas at those λs,
+    /// and ask the autoscaler for a bounded pool step.  Returns the new
+    /// pool size when it changed; the adapter immediately budgets
+    /// against it.
+    pub fn resize(&mut self, now: f64, histories: &[Vec<f64>]) -> Option<u32> {
+        let lambdas: Vec<f64> = self
+            .predictors
+            .iter_mut()
+            .zip(histories)
+            .map(|(p, h)| p.predict(now, h).max(0.5))
+            .collect();
+        self.pending_lambdas = Some(lambdas.clone());
+        self.autoscaler.as_ref()?;
+        let floor = self.stage_floor();
+        let cap = self.autoscaler.as_ref().expect("checked").max_pool().max(floor);
+        let clamped: Vec<f64> = lambdas.iter().map(|l| l.max(0.5)).collect();
+        // Quiet ticks reuse the last estimate: re-running the
+        // per-member feasibility search when no λ moved past the
+        // incremental threshold would cost about what the skipped
+        // joint solve saves.
+        let cached = self.last_demand.as_ref().and_then(|(ls, d)| {
+            let quiet = self.resolve_threshold > 0.0
+                && ls.len() == clamped.len()
+                && clamped
+                    .iter()
+                    .zip(ls)
+                    .all(|(&l, &old)| (l - old).abs() / old.max(0.5) <= self.resolve_threshold);
+            quiet.then_some(*d)
+        });
+        let demand = match cached {
+            Some(d) => d,
+            None => {
+                let mut demand = 0u32;
+                for (i, &l) in clamped.iter().enumerate() {
+                    let p = self.demand_problem(i, l);
+                    let opts = p.stage_options();
+                    let member_floor = self.specs[i].n_stages() as u32;
+                    demand += min_feasible_replicas(&p, &opts, cap).unwrap_or(member_floor);
+                }
+                self.last_demand = Some((clamped, demand));
+                demand
+            }
+        };
+        let decision =
+            self.autoscaler.as_mut().expect("checked").decide(self.budget, demand, floor);
+        if decision.target != self.budget {
+            self.budget = decision.target;
+            Some(decision.target)
+        } else {
+            None
+        }
+    }
+
+    /// The preemption fast path: find the highest-priority member whose
+    /// observed rate burst past `burst_factor ×` its last predicted λ
+    /// *and* whose current share leaves it SLA-infeasible, then reclaim
+    /// up to `max_reclaim` replicas from strictly lower-priority
+    /// members (lowest class first, fattest share first, never below a
+    /// donor's stage floor).  Only the burster and the donors are
+    /// re-solved — single-member budget-capped solves, no joint IP —
+    /// so this is cheap enough to run between adaptation ticks.
+    pub fn preempt(&mut self, _now: f64, observed: &[f64]) -> Option<FleetPreemption> {
+        let pc = self.preemption?;
+        let n = self.specs.len();
+        assert_eq!(observed.len(), n);
+        {
+            let cache = self.cache.as_ref()?;
+            if cache.budget != self.budget || cache.shares.len() != n {
+                return None;
+            }
+        }
+        let floors: Vec<u32> = self.specs.iter().map(|s| s.n_stages() as u32).collect();
+        let t0 = Instant::now();
+
+        // Bursting members, most important (then hottest) first.
+        let mut bursters: Vec<(usize, f64)> = {
+            let cache = self.cache.as_ref().expect("checked");
+            (0..n)
+                .filter_map(|i| {
+                    let ratio = observed[i].max(0.5) / cache.lambdas[i].max(0.5);
+                    (ratio > pc.burst_factor).then_some((i, ratio))
+                })
+                .collect()
+        };
+        bursters.sort_by(|a, b| {
+            self.priorities[b.0]
+                .cmp(&self.priorities[a.0])
+                .then(b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
+        });
+
+        for (bi, _) in bursters {
+            let mut cache = self.cache.take().expect("checked");
+            let lam_new = observed[bi].max(0.5);
+            let p = self.member_problem(bi, lam_new);
+            let opts = p.stage_options();
+            // How many more replicas feasibility at the burst λ needs.
+            let need = match min_feasible_replicas(&p, &opts, self.budget) {
+                Some(m) if m > cache.shares[bi] => m - cache.shares[bi],
+                _ => {
+                    self.cache = Some(cache);
+                    continue; // share already suffices, or hopeless at any size
+                }
+            };
+            let want = need.min(pc.max_reclaim.max(1));
+            let mut shares = cache.shares.clone();
+            let mut from: Vec<(usize, u32)> = Vec::new();
+            let mut got = 0u32;
+            while got < want {
+                // lowest priority class first; within it, fattest share
+                let donor = (0..n)
+                    .filter(|&j| {
+                        self.priorities[j] < self.priorities[bi] && shares[j] > floors[j]
+                    })
+                    .min_by_key(|&j| (self.priorities[j], u32::MAX - shares[j], j));
+                let Some(j) = donor else { break };
+                shares[j] -= 1;
+                got += 1;
+                match from.iter_mut().find(|(m, _)| *m == j) {
+                    Some((_, k)) => *k += 1,
+                    None => from.push((j, 1)),
+                }
+            }
+            if got == 0 {
+                self.cache = Some(cache);
+                continue; // no strictly-lower-priority replica to reclaim
+            }
+            shares[bi] += got;
+            // Re-solve only the members whose share changed.
+            let (cfg, solved) = eval_member(&p, &opts, shares[bi]);
+            cache.configs[bi] = cfg;
+            cache.solved[bi] = solved;
+            cache.lambdas[bi] = lam_new;
+            for &(j, _) in &from {
+                let pj = self.member_problem(j, cache.lambdas[j]);
+                let oj = pj.stage_options();
+                let (cfg, solved) = eval_member(&pj, &oj, shares[j]);
+                cache.configs[j] = cfg;
+                cache.solved[j] = solved;
+            }
+            cache.shares = shares;
+            let decisions = cache_decisions(&cache, t0.elapsed().as_secs_f64());
+            let budget = cache.budget;
+            self.cache = Some(cache);
+            let reclaimed = got;
+            return Some(FleetPreemption { decisions, to: bi, from, reclaimed, budget });
+        }
+        None
+    }
+}
+
+/// Decisions straight from the solve cache (shared by the full,
+/// incremental and preemption paths).
+fn cache_decisions(cache: &SolveCache, decision_time: f64) -> Vec<Decision> {
+    cache
+        .configs
+        .iter()
+        .zip(&cache.lambdas)
+        .zip(&cache.solved)
+        .map(|((cfg, &l), &solved)| Decision {
+            config: cfg.clone(),
+            lambda_predicted: l,
+            decision_time,
+            fallback: !solved,
+        })
+        .collect()
 }
 
 impl FleetController for FleetAdapter {
@@ -551,13 +1076,29 @@ impl FleetController for FleetAdapter {
     }
 
     fn decide(&mut self, now: f64, histories: &[Vec<f64>]) -> Vec<Decision> {
-        let lambdas: Vec<f64> = self
-            .predictors
-            .iter_mut()
-            .zip(histories)
-            .map(|(p, h)| p.predict(now, h).max(0.5))
-            .collect();
+        // resize() may already have predicted this tick's λs.
+        let lambdas: Vec<f64> = match self.pending_lambdas.take() {
+            Some(l) => l,
+            None => self
+                .predictors
+                .iter_mut()
+                .zip(histories)
+                .map(|(p, h)| p.predict(now, h).max(0.5))
+                .collect(),
+        };
         self.decide_for_lambdas(&lambdas)
+    }
+
+    fn resize(&mut self, now: f64, histories: &[Vec<f64>]) -> Option<u32> {
+        FleetAdapter::resize(self, now, histories)
+    }
+
+    fn wants_preemption(&self) -> bool {
+        self.preemption.is_some()
+    }
+
+    fn preempt(&mut self, now: f64, observed: &[f64]) -> Option<FleetPreemption> {
+        FleetAdapter::preempt(self, now, observed)
     }
 }
 
@@ -679,6 +1220,60 @@ mod tests {
                 alloc.total_objective <= brute + 1e-9,
                 "budget {budget}: greedy {} above brute optimum {brute}",
                 alloc.total_objective
+            );
+        }
+    }
+
+    #[test]
+    fn tiers_with_one_class_match_plain_solve() {
+        let specs: Vec<PipelineSpec> = ["video", "audio-sent", "nlp"]
+            .iter()
+            .map(|n| pipelines::by_name(n).unwrap())
+            .collect();
+        let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+        let problems: Vec<Problem> = specs
+            .iter()
+            .zip(&profs)
+            .zip([20.0, 8.0, 5.0])
+            .map(|((s, pf), l)| problem(s, pf, l))
+            .collect();
+        for budget in [8u32, 14, 24] {
+            let plain = solve_fleet(&problems, budget).unwrap();
+            let tiered = solve_fleet_tiers(&problems, budget, &[3, 3, 3]).unwrap();
+            assert_eq!(
+                plain.members.iter().map(|m| m.budget).collect::<Vec<_>>(),
+                tiered.members.iter().map(|m| m.budget).collect::<Vec<_>>(),
+                "budget {budget}"
+            );
+            assert!((plain.total_objective - tiered.total_objective).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn tiers_grant_high_priority_first_under_contention() {
+        let specs: Vec<PipelineSpec> =
+            ["video", "video"].iter().map(|n| pipelines::by_name(n).unwrap()).collect();
+        let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+        // both members want replicas badly at this λ
+        let problems =
+            vec![problem(&specs[0], &profs[0], 25.0), problem(&specs[1], &profs[1], 25.0)];
+        for budget in [6u32, 8, 10] {
+            let hi_first = solve_fleet_tiers(&problems, budget, &[9, 1]).unwrap();
+            let lo_first = solve_fleet_tiers(&problems, budget, &[1, 9]).unwrap();
+            assert!(hi_first.replicas_used <= budget);
+            // identical members: precedence is the only asymmetry, so
+            // member 0's share under [9,1] equals member 1's under [1,9]
+            assert_eq!(hi_first.members[0].budget, lo_first.members[1].budget);
+            assert!(
+                hi_first.members[0].budget >= hi_first.members[1].budget,
+                "budget {budget}: high-priority member got {} vs {}",
+                hi_first.members[0].budget,
+                hi_first.members[1].budget
+            );
+            // the top tier is never worse off than under plain joint solving
+            let plain = solve_fleet(&problems, budget).unwrap();
+            assert!(
+                hi_first.members[0].config.objective >= plain.members[0].config.objective - 1e-9
             );
         }
     }

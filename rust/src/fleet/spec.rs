@@ -30,6 +30,11 @@ pub struct FleetMember {
     /// Per-member SLA override: multiplies the paper's per-stage SLAs
     /// (1.0 = verbatim Table 6).
     pub sla_scale: f64,
+    /// Priority class, HIGHER = more important (a Kubernetes
+    /// PriorityClass value).  The tiered joint solver grants the pool
+    /// to higher classes first, and the preemption fast path reclaims
+    /// replicas only from strictly lower classes.  Default 0.
+    pub priority: u32,
 }
 
 impl FleetMember {
@@ -81,13 +86,31 @@ impl FleetSpec {
         Ok(self.specs()?.iter().map(|s| s.n_stages() as u32).sum())
     }
 
-    /// Structural validation: nonempty, unique member names, known
-    /// pipelines, budget ≥ one replica per stage.
+    /// Per-member priority classes in fleet order (what
+    /// [`crate::fleet::solver::FleetTuning::priorities`] takes).
+    pub fn priorities(&self) -> Vec<u32> {
+        self.members.iter().map(|m| m.priority).collect()
+    }
+
+    /// Structural validation: nonempty, unique non-blank member names,
+    /// known pipelines, budget ≥ one replica per stage.  Names are the
+    /// aliasing keys of reports/tables and trace labels, so blank or
+    /// whitespace-padded names (visually identical rows) are rejected
+    /// alongside exact duplicates.
     pub fn validate(&self) -> Result<(), String> {
         if self.members.is_empty() {
             return Err("fleet has no members".into());
         }
         for (i, m) in self.members.iter().enumerate() {
+            if m.name.trim().is_empty() {
+                return Err(format!("fleet member {i}: blank name"));
+            }
+            if m.name.trim() != m.name {
+                return Err(format!(
+                    "fleet member name {:?} has surrounding whitespace",
+                    m.name
+                ));
+            }
             if self.members[..i].iter().any(|o| o.name == m.name) {
                 return Err(format!("duplicate fleet member name {}", m.name));
             }
@@ -188,7 +211,16 @@ impl FleetSpec {
                 None => 1 + i as u64,
             };
             let sla_scale = mj.get("sla_scale").and_then(Json::as_f64).unwrap_or(1.0);
-            members.push(FleetMember { name, pipeline, pattern, seed, sla_scale });
+            let priority = match mj.get("priority").and_then(Json::as_i64) {
+                Some(p) if !(0..=u32::MAX as i64).contains(&p) => {
+                    return Err(format!(
+                        "fleet member {name}: priority {p} out of u32 range"
+                    ))
+                }
+                Some(p) => p as u32,
+                None => 0,
+            };
+            members.push(FleetMember { name, pipeline, pattern, seed, sla_scale, priority });
         }
         Ok(FleetSpec {
             name,
@@ -228,15 +260,20 @@ impl FleetSpec {
                                 .set("pattern", m.pattern.name())
                                 .set("seed", m.seed as usize)
                                 .set("sla_scale", m.sla_scale)
+                                .set("priority", m.priority as usize)
                         })
                         .collect(),
                 ),
             )
     }
 
-    /// The canonical 3-pipeline demo fleet: a bursty video feed, a
-    /// fluctuating audio-sentiment feed and a steady NLP feed in
-    /// antiphase, over one 24-replica pool.
+    /// The canonical 3-pipeline demo fleet: a bursty video feed
+    /// (latency-critical, priority 2), a fluctuating audio-sentiment
+    /// feed (priority 1) and a steady NLP batch line (best-effort,
+    /// priority 0) in antiphase, over one 24-replica pool.  Priorities
+    /// only bite when a caller wires them into the tuned solver — the
+    /// plain [`crate::fleet::solver::FleetAdapter::new`] path treats
+    /// every member equally.
     pub fn demo3() -> FleetSpec {
         FleetSpec {
             name: "demo3".into(),
@@ -247,6 +284,7 @@ impl FleetSpec {
                     pattern: Pattern::Bursty,
                     seed: 11,
                     sla_scale: 1.0,
+                    priority: 2,
                 },
                 FleetMember {
                     name: "audio-social".into(),
@@ -254,6 +292,7 @@ impl FleetSpec {
                     pattern: Pattern::Fluctuating,
                     seed: 12,
                     sla_scale: 1.0,
+                    priority: 1,
                 },
                 FleetMember {
                     name: "nlp-batchline".into(),
@@ -261,6 +300,7 @@ impl FleetSpec {
                     pattern: Pattern::SteadyLow,
                     seed: 13,
                     sla_scale: 1.0,
+                    priority: 0,
                 },
             ],
             replica_budget: 24,
@@ -298,10 +338,18 @@ mod tests {
         let mut f = FleetSpec::demo3();
         f.members[0].pipeline = "no-such".into();
         assert!(FleetSpec::parse(&f.to_json().to_string()).is_err());
-        // duplicate names
+        // duplicate names (they would silently alias in reports/tables
+        // and per-member trace labels)
         let mut f = FleetSpec::demo3();
         f.members[1].name = f.members[0].name.clone();
         assert!(FleetSpec::parse(&f.to_json().to_string()).is_err());
+        // blank / whitespace-padded names alias visually — rejected too
+        let mut f = FleetSpec::demo3();
+        f.members[0].name = "   ".into();
+        assert!(f.validate().is_err());
+        let mut f = FleetSpec::demo3();
+        f.members[0].name = " video-edge".into();
+        assert!(f.validate().is_err());
         // budget under the floor
         let mut f = FleetSpec::demo3();
         f.replica_budget = 3;
@@ -316,6 +364,21 @@ mod tests {
         let negative_seed = r#"{"name":"x","replica_budget":8,"members":
             [{"name":"a","pipeline":"video","seed":-1}]}"#;
         assert!(FleetSpec::parse(negative_seed).is_err());
+        let negative_priority = r#"{"name":"x","replica_budget":8,"members":
+            [{"name":"a","pipeline":"video","priority":-2}]}"#;
+        assert!(FleetSpec::parse(negative_priority).is_err());
+    }
+
+    #[test]
+    fn priority_parses_and_defaults() {
+        let f = FleetSpec::demo3();
+        assert_eq!(f.priorities(), vec![2, 1, 0]);
+        // omitted priority defaults to 0 (best effort)
+        let text = r#"{"name":"x","replica_budget":8,"members":
+            [{"name":"a","pipeline":"video"},
+             {"name":"b","pipeline":"video","priority":7}]}"#;
+        let f = FleetSpec::parse(text).unwrap();
+        assert_eq!(f.priorities(), vec![0, 7]);
     }
 
     #[test]

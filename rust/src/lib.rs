@@ -47,17 +47,28 @@
 //!
 //! [`fleet`] lifts the same split one level up: N heterogeneous
 //! pipelines share ONE replica pool.  A [`fleet::spec::FleetSpec`]
-//! names the members and the global budget, the joint allocator
-//! ([`fleet::solver::solve_fleet`]) splits the pool by greedy
+//! names the members (each with a priority class) and the global
+//! budget, the joint allocator ([`fleet::solver::solve_fleet`] /
+//! [`fleet::solver::solve_fleet_tiers`]) splits the pool by greedy
 //! marginal gain over per-pipeline IP solves (floored at the
-//! even-split baseline), and [`fleet::core::FleetCore`] owns one
-//! cluster core per member while enforcing the budget invariant
-//! across rolling reconfigurations.  Both clocks drive whole fleets:
-//! [`simulator::sim::run_fleet_des`] interleaves every member's
-//! events in one virtual-time queue, and
+//! even-split baseline; lexicographic over priority tiers), and
+//! [`fleet::core::FleetCore`] owns one cluster core per member while
+//! enforcing the budget invariant across rolling reconfigurations.
+//! Both clocks drive whole fleets: [`simulator::sim::run_fleet_des`]
+//! interleaves every member's events in one virtual-time queue, and
 //! [`serving::engine::serve_fleet_with`] runs one wall-clock loop
 //! with per-member adapters — `tests/fleet.rs` pins them to each
 //! other and the allocator to its budget/even-split invariants.
+//!
+//! The pool itself is *elastic* (InferLine-style slow/fast split,
+//! `tests/fleet_elastic.rs`): each tick the slow path may resize the
+//! pool against a cost target ([`fleet::autoscaler`], actuated by
+//! [`fleet::core::FleetCore::resize_pool`] with a replica-seconds
+//! bought/used ledger) before the joint solve — which re-solves only
+//! the members whose predicted λ actually moved — while between ticks
+//! a preemption fast path ([`fleet::solver::FleetAdapter::preempt`])
+//! moves replicas from strictly lower-priority members to a bursting
+//! high-priority one without touching the joint IP.
 //!
 //! Start with [`coordinator::adapter::Adapter`] (the control loop),
 //! [`optimizer::ip::solve`] (the IP), and [`simulator::sim::Simulation`]
@@ -120,16 +131,23 @@ pub mod optimizer {
 }
 
 pub mod fleet {
-    //! Multi-pipeline sharding over one replica pool (see the
+    //! Multi-pipeline sharding over one *elastic* replica pool (see the
     //! crate-level "fleet layer"): the fleet description + JSON IO
-    //! ([`spec`]), the joint cross-pipeline budget allocator
-    //! ([`solver`] — greedy marginal-gain over per-pipeline IP solves,
-    //! even-split floor, brute-force cross-check) and the shared-pool
-    //! core ([`core`] — one [`crate::cluster::core::ClusterCore`] per
-    //! member behind one budget, with rolling-reconfig overshoot
-    //! accounting).  The fleet drivers live with their clocks:
+    //! ([`spec`] — members carry priority classes), the joint
+    //! cross-pipeline budget allocator ([`solver`] — greedy
+    //! marginal-gain over per-pipeline IP solves, priority tiers,
+    //! even-split floor, brute-force cross-check, incremental
+    //! re-solves and the mid-interval preemption fast path), the pool
+    //! autoscaler ([`autoscaler`] — grow/shrink steps against a cost
+    //! target with scale-up eagerness and scale-down hysteresis) and
+    //! the shared-pool core ([`core`] — one
+    //! [`crate::cluster::core::ClusterCore`] per member behind one
+    //! budget, with rolling-reconfig overshoot accounting, pool
+    //! resizing and the replica-seconds bought/used cost ledger).  The
+    //! fleet drivers live with their clocks:
     //! [`crate::simulator::sim::run_fleet_des`] and
     //! [`crate::serving::engine::serve_fleet_with`].
+    pub mod autoscaler;
     pub mod core;
     pub mod solver;
     pub mod spec;

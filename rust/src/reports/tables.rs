@@ -3,6 +3,7 @@
 //! from the calibrated hardware model / analytic profiles, so the
 //! *shape* (orderings, ratios, crossovers) is the reproduction target.
 
+use crate::fleet::core::PoolReport;
 use crate::metrics::RunMetrics;
 use crate::models::pipelines;
 use crate::models::registry::{by_key, variants_of, StageType};
@@ -144,27 +145,31 @@ pub fn table6() -> String {
 
 /// Per-pipeline fleet accounting: one row per member (requests,
 /// completions, drops, SLA attainment, average PAS/cost, replica
-/// share), a fleet totals row, and the shared-pool line.  `names`,
-/// `metrics` and `shares` are per member in fleet order.
+/// share, replicas lost to preemption), a fleet totals row, and the
+/// shared-pool block — final size, size range over the run with the
+/// resize count, preemption events, and the replica-second cost ledger
+/// (bought vs used with the utilization percentage).  `names`,
+/// `metrics` and `shares` are per member in fleet order; `pool` is the
+/// run's [`PoolReport`].
 pub fn fleet_table(
     names: &[String],
     metrics: &[RunMetrics],
     shares: &[u32],
-    budget: u32,
+    pool: &PoolReport,
 ) -> String {
     let mut out = String::new();
     out.push_str("Fleet accounting: per-pipeline outcomes over one shared replica pool\n");
     out.push_str(&format!(
-        "{:<16} {:<10} {:<14} {:>8} {:>8} {:>7} {:>7} {:>8} {:>8} {:>6}\n",
+        "{:<16} {:<10} {:<14} {:>8} {:>8} {:>7} {:>7} {:>8} {:>8} {:>6} {:>8}\n",
         "member", "pipeline", "workload", "reqs", "done", "drop%", "att%", "avgPAS", "avgCost",
-        "repl"
+        "repl", "preempt"
     ));
     let mut tot_reqs = 0usize;
     let mut tot_done = 0usize;
     let mut tot_cost = 0.0f64;
-    for ((name, m), &share) in names.iter().zip(metrics).zip(shares) {
+    for (i, ((name, m), &share)) in names.iter().zip(metrics).zip(shares).enumerate() {
         out.push_str(&format!(
-            "{:<16} {:<10} {:<14} {:>8} {:>8} {:>6.1}% {:>6.1}% {:>8.2} {:>8.1} {:>6}\n",
+            "{:<16} {:<10} {:<14} {:>8} {:>8} {:>6.1}% {:>6.1}% {:>8.2} {:>8.1} {:>6} {:>8}\n",
             name,
             m.pipeline,
             m.workload,
@@ -175,6 +180,7 @@ pub fn fleet_table(
             m.avg_pas(),
             m.avg_cost(),
             share,
+            pool.preempted.get(i).copied().unwrap_or(0),
         ));
         tot_reqs += m.requests.len();
         tot_done += m.completed_count();
@@ -183,7 +189,7 @@ pub fn fleet_table(
     // 33 = the drop%/att%/avgPAS/avgCost block (7+1+7+1+8+1+8) so the
     // total cost lands under the avgCost column.
     out.push_str(&format!(
-        "{:<16} {:<10} {:<14} {:>8} {:>8} {:>33.1} {:>6}\n",
+        "{:<16} {:<10} {:<14} {:>8} {:>8} {:>33.1} {:>6} {:>8}\n",
         "TOTAL",
         "-",
         "-",
@@ -191,10 +197,23 @@ pub fn fleet_table(
         tot_done,
         tot_cost,
         shares.iter().sum::<u32>(),
+        pool.preempted.iter().sum::<u32>(),
     ));
     out.push_str(&format!(
-        "shared pool: {} of {budget} replicas granted\n",
-        shares.iter().sum::<u32>()
+        "shared pool: {} of {} replicas granted | size {}..{} over the run ({} resizes) | \
+         {} preemptions\n",
+        shares.iter().sum::<u32>(),
+        pool.budget,
+        pool.pool_min,
+        pool.pool_max,
+        pool.resizes,
+        pool.preemptions,
+    ));
+    out.push_str(&format!(
+        "pool cost: {:.0} replica-s bought, {:.0} used ({:.0}% utilized)\n",
+        pool.bought_replica_secs,
+        pool.used_replica_secs,
+        pool.utilization() * 100.0,
     ));
     out
 }
@@ -273,11 +292,27 @@ mod tests {
         };
         let names = vec!["video-edge".to_string(), "nlp-batchline".to_string()];
         let metrics = vec![mk("video", "bursty"), mk("nlp", "steady_low")];
-        let s = fleet_table(&names, &metrics, &[9, 7], 24);
+        let pool = PoolReport {
+            budget: 24,
+            pool_min: 20,
+            pool_max: 26,
+            peak_in_use: 18,
+            resizes: 3,
+            preemptions: 2,
+            preempted: vec![0, 5],
+            bought_replica_secs: 4800.0,
+            used_replica_secs: 3600.0,
+        };
+        let s = fleet_table(&names, &metrics, &[9, 7], &pool);
         assert!(s.contains("video-edge"), "{s}");
         assert!(s.contains("nlp-batchline"));
         assert!(s.contains("TOTAL"));
         assert!(s.contains("16 of 24 replicas"), "{s}");
-        assert_eq!(s.lines().count(), 2 + 2 + 1 + 1);
+        assert!(s.contains("size 20..26 over the run (3 resizes)"), "{s}");
+        assert!(s.contains("2 preemptions"), "{s}");
+        assert!(s.contains("4800 replica-s bought, 3600 used (75% utilized)"), "{s}");
+        // per-member preempt column + totals
+        assert!(s.contains("preempt"), "{s}");
+        assert_eq!(s.lines().count(), 2 + 2 + 1 + 2);
     }
 }

@@ -21,7 +21,10 @@
 //! [`serve_fleet_with`] scales the same loop to a whole fleet: worker
 //! threads per (member, stage) claim batches from one budget-checked
 //! [`FleetCore`], and a single adapter thread runs the joint
-//! cross-pipeline solver each interval.
+//! cross-pipeline solver each interval — splitting every interval in
+//! two so the elastic fast path (mid-interval priority preemption) and
+//! the slow path (autoscaler pool resize + joint solve) mirror the DES
+//! driver's Preempt/Adapt events on a wall clock.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -33,8 +36,8 @@ use crate::cluster::core::{ClusterCore, FormOutcome, FormedBatch};
 use crate::cluster::drop_policy::DropPolicy;
 use crate::coordinator::adapter::{Adapter, AdapterConfig, Policy};
 use crate::coordinator::monitoring::Monitor;
-use crate::fleet::core::{FleetCore, FleetReconfig};
-use crate::fleet::solver::{FleetAdapter, FleetController};
+use crate::fleet::core::{FleetCore, FleetReconfig, PoolReport};
+use crate::fleet::solver::{FleetAdapter, FleetController, FleetTuning};
 use crate::metrics::RunMetrics;
 use crate::models::accuracy::AccuracyMetric;
 use crate::models::pipelines::PipelineSpec;
@@ -499,6 +502,9 @@ impl FleetShared {
 /// order) plus the shared-pool accounting.
 pub struct FleetServeReport {
     pub members: Vec<ServeReport>,
+    /// The replica budget the run ENDED under (the autoscaler may have
+    /// moved it from the initial value).  Convenience mirror of
+    /// `pool.budget`, kept for the common fixed-pool callers.
     pub budget: u32,
     /// Highest pool occupancy observed (rolling-shrink overshoot
     /// included).
@@ -506,6 +512,9 @@ pub struct FleetServeReport {
     /// Per-member configured replicas when the run ended (the last
     /// allocation actually applied).
     pub final_replicas: Vec<u32>,
+    /// Pool-size extremes, resize/preemption counts and the
+    /// replica-seconds bought/used cost ledger.
+    pub pool: PoolReport,
 }
 
 /// Drive the wall-clock engine over a whole fleet: per-member worker
@@ -518,7 +527,10 @@ pub struct FleetServeReport {
 /// `executors` and `predictors` are per member (same order as `specs`
 /// / `profiles` / `traces`); `system` labels the per-member
 /// [`RunMetrics`] like [`run_fleet_des`]'s equally-named parameter, so
-/// sim/live pairs group under one name.
+/// sim/live pairs group under one name.  `tuning` switches on the
+/// elastic control plane (priority tiers, pool autoscaling,
+/// mid-interval preemption, incremental re-solves);
+/// `FleetTuning::default()` reproduces the fixed-pool behavior.
 ///
 /// [`run_fleet_des`]: crate::simulator::sim::run_fleet_des
 #[allow(clippy::too_many_arguments)]
@@ -533,6 +545,7 @@ pub fn serve_fleet_with(
     traces: &[Trace],
     executors: Vec<Arc<dyn BatchExecutor>>,
     predictors: Vec<Box<dyn Predictor + Send>>,
+    tuning: FleetTuning,
 ) -> Result<FleetServeReport> {
     let n = specs.len();
     if profiles.len() != n || traces.len() != n || executors.len() != n || predictors.len() != n {
@@ -570,6 +583,7 @@ pub fn serve_fleet_with(
         },
         predictors,
     )
+    .and_then(|a| a.with_tuning(tuning))
     .map_err(Error::from)?;
 
     // Joint initial decision at the traces' first-second (compressed)
@@ -615,16 +629,73 @@ pub fn serve_fleet_with(
     }
 
     // ---- adapter thread: the joint solver on a wall clock ------------
+    // Each interval splits in two: a mid-interval preemption check (the
+    // fast path — no joint IP, applied immediately), then the slow path
+    // at the full interval (autoscaler resize proposal → joint decide →
+    // staged apply), mirroring run_fleet_des' Adapt/Preempt events.
     let adapter_handle = {
         let sh = Arc::clone(&shared);
         let exs: Vec<Arc<dyn BatchExecutor>> = executors.clone();
         let mut active: Vec<PipelineConfig> = inits.iter().map(|d| d.config.clone()).collect();
         let mut reconfig = FleetReconfig::new(adapter.config.apply_delay);
+        // The controller's current pool view; staged shrinks below it
+        // are stale (a later tick re-grew the budget) and are skipped.
+        let mut ctl_budget = budget;
         std::thread::spawn(move || {
             loop {
-                if !sleep_interruptible(&sh.stop, adapter.config.interval) {
+                let half = adapter.config.interval * 0.5;
+                if !sleep_interruptible(&sh.stop, half) {
                     break;
                 }
+                // ---- fast path: mid-interval preemption check -------
+                // Skipped entirely when the tuning has no preemption:
+                // the fixed-pool path must not even touch the monitors
+                // here.
+                if adapter.wants_preemption() {
+                    let nowp = sh.now();
+                    let pwindow = half.max(1.0) as usize;
+                    let observed_p: Vec<f64> = {
+                        let ms = sh.monitors.lock().unwrap();
+                        ms.iter().map(|mo| mo.recent_rate(nowp, pwindow)).collect()
+                    };
+                    if let Some(p) = adapter.preempt(nowp, &observed_p) {
+                        for (m, d) in p.decisions.iter().enumerate() {
+                            for sc in &d.config.stages {
+                                exs[m].warm(&sc.variant_key, sc.batch);
+                            }
+                        }
+                        let configs: Vec<(PipelineConfig, f64)> = p
+                            .decisions
+                            .iter()
+                            .map(|d| (d.config.clone(), f64::INFINITY))
+                            .collect();
+                        let mut fleet = sh.fleet.lock().unwrap();
+                        fleet.accrue(nowp);
+                        match fleet.apply(&configs) {
+                            Ok(()) => {
+                                // Only a preemption that actually took
+                                // effect supersedes the staged slow-path
+                                // decision (clearing on a rejected one
+                                // would strand the fleet on its stale
+                                // configuration for a full interval).
+                                reconfig.clear();
+                                let floor = fleet.configured_replicas();
+                                let _ = fleet.resize_pool(nowp, p.budget.max(floor));
+                                fleet.note_preemption(&p.from);
+                                active = p.decisions.into_iter().map(|d| d.config).collect();
+                            }
+                            Err(e) => {
+                                crate::log_warn!("fleet", "preemption apply rejected: {e}");
+                            }
+                        }
+                        drop(fleet);
+                        sh.cv.notify_all();
+                    }
+                }
+                if !sleep_interruptible(&sh.stop, half) {
+                    break;
+                }
+                // ---- slow path: autoscale + joint decide ------------
                 let now = sh.now();
                 let window = adapter.config.interval.max(1.0) as usize;
                 let (histories, observed): (Vec<Vec<f64>>, Vec<f64>) = {
@@ -634,6 +705,30 @@ pub fn serve_fleet_with(
                         ms.iter().map(|mo| mo.recent_rate(now, window)).collect(),
                     )
                 };
+                let mut phys_budget = sh.fleet.lock().unwrap().budget();
+                // Drift correction: a staged shrink dropped on the way
+                // (coalescing, or a preemption clearing the stager)
+                // would otherwise strand the physical pool above the
+                // controller's view forever — re-sync once nothing is
+                // pending (best-effort: never below configured).
+                if reconfig.pending_len() == 0 && phys_budget > ctl_budget {
+                    let mut fleet = sh.fleet.lock().unwrap();
+                    fleet.accrue(now);
+                    let floor = fleet.configured_replicas();
+                    let _ = fleet.resize_pool(now, ctl_budget.max(floor));
+                    phys_budget = fleet.budget();
+                }
+                let pool_to = adapter.resize(now, &histories);
+                if let Some(pnew) = pool_to {
+                    if pnew > phys_budget {
+                        let mut fleet = sh.fleet.lock().unwrap();
+                        fleet.accrue(now);
+                        if let Err(e) = fleet.resize_pool(now, pnew) {
+                            crate::log_warn!("fleet", "pool grow rejected: {e}");
+                        }
+                    }
+                    ctl_budget = pnew;
+                }
                 let ds = adapter.decide(now, &histories);
                 {
                     let mut fleet = sh.fleet.lock().unwrap();
@@ -650,10 +745,13 @@ pub fn serve_fleet_with(
                         exs[m].warm(&sc.variant_key, sc.batch);
                     }
                 }
-                let at = reconfig.stage(now, ds);
+                let shrink_to = pool_to.filter(|&p| p < phys_budget);
+                let at = reconfig.stage(now, ds, ctl_budget, shrink_to);
                 if !sleep_interruptible(&sh.stop, at - sh.now()) {
                     break;
                 }
+                // pop_due coalesces: every due stage drains, only the
+                // newest applies.
                 while let Some(staged) = reconfig.pop_due(sh.now()) {
                     let configs: Vec<(PipelineConfig, f64)> = staged
                         .decisions
@@ -661,8 +759,22 @@ pub fn serve_fleet_with(
                         .map(|d| (d.config.clone(), f64::INFINITY))
                         .collect();
                     let mut fleet = sh.fleet.lock().unwrap();
+                    fleet.accrue(sh.now());
                     match fleet.apply(&configs) {
                         Ok(()) => {
+                            // a shrink is only safe when it covers the
+                            // controller's current budget AND every
+                            // pending stage's solve budget (nothing
+                            // bigger still in flight)
+                            if let Some(pb) = staged.shrink_to {
+                                let in_flight = ctl_budget
+                                    .max(reconfig.max_pending_budget().unwrap_or(0));
+                                if pb >= in_flight {
+                                    if let Err(e) = fleet.resize_pool(sh.now(), pb) {
+                                        crate::log_warn!("fleet", "pool shrink rejected: {e}");
+                                    }
+                                }
+                            }
                             active = staged.decisions.into_iter().map(|d| d.config).collect();
                         }
                         Err(e) => {
@@ -708,11 +820,13 @@ pub fn serve_fleet_with(
     let _ = adapter_handle.join();
 
     // ---- assemble per-member metrics + pool accounting ----------------
-    let (metrics_vec, peak_in_use, final_replicas) = {
+    let (metrics_vec, peak_in_use, final_replicas, pool) = {
         let mut f = shared.fleet.lock().unwrap();
+        f.accrue(shared.now());
         f.note();
         let peak = f.peak_in_use();
         let finals: Vec<u32> = (0..n).map(|m| f.member(m).configured_replicas()).collect();
+        let pool = f.pool_report();
         let mut out = Vec::with_capacity(n);
         for m in 0..n {
             let acc =
@@ -723,7 +837,7 @@ pub fn serve_fleet_with(
                 traces[m].name.clone(),
             ));
         }
-        (out, peak, finals)
+        (out, peak, finals, pool)
     };
     let members = metrics_vec
         .into_iter()
@@ -731,7 +845,7 @@ pub fn serve_fleet_with(
         .zip(&slas)
         .map(|((metrics, profiles), &sla)| ServeReport { metrics, profiles, sla })
         .collect();
-    Ok(FleetServeReport { members, budget, peak_in_use, final_replicas })
+    Ok(FleetServeReport { members, budget: pool.budget, peak_in_use, final_replicas, pool })
 }
 
 /// One fleet replica-slot worker: claim a batch for (member, stage)

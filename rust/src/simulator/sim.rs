@@ -24,7 +24,12 @@
 //! a [`FleetController`] (usually
 //! [`crate::fleet::solver::FleetAdapter`]) makes one *joint* decision
 //! per tick, and the budget-checked [`FleetCore`] applies it
-//! atomically.
+//! atomically.  The elastic hooks ride the same queue: each Adapt tick
+//! first offers the controller a pool resize (growth immediate, shrink
+//! staged with the decisions), and a mid-interval Preempt event lets a
+//! tuned controller move replicas to a bursting high-priority member
+//! without waiting for the next tick — both no-ops for plain
+//! controllers, so the classic fixed-pool behavior is unchanged.
 
 use super::events::{Event, EventQueue, TimedQueue};
 use crate::cluster::core::{ClusterCore, FormOutcome};
@@ -32,7 +37,7 @@ use crate::cluster::drop_policy::DropPolicy;
 use crate::cluster::reconfig::Reconfig;
 use crate::coordinator::adapter::{Adapter, Decision};
 use crate::coordinator::monitoring::Monitor;
-use crate::fleet::core::{FleetCore, FleetReconfig};
+use crate::fleet::core::{FleetCore, FleetReconfig, PoolReport};
 use crate::fleet::solver::FleetController;
 use crate::metrics::RunMetrics;
 use crate::optimizer::ip::PipelineConfig;
@@ -300,12 +305,15 @@ fn drive(
 // ---------------------------------------------------------------------------
 
 /// One fleet-loop event: a member-scoped simulator event or a global
-/// adaptation/application/end event.
+/// adaptation/application/preemption/end event.
 #[derive(Debug)]
 enum FleetEv {
     Member { member: usize, ev: Event },
     Adapt,
     Apply,
+    /// Mid-interval preemption check (the fast path between Adapt
+    /// ticks; self-rearming every `interval`, offset by `interval/2`).
+    Preempt,
     End,
 }
 
@@ -314,15 +322,21 @@ enum FleetEv {
 #[derive(Debug)]
 pub struct FleetRunMetrics {
     pub members: Vec<RunMetrics>,
-    /// The replica budget the run was driven under.
+    /// The replica budget the run ENDED under (the autoscaler may have
+    /// moved it from the initial value).  Convenience mirror of
+    /// `pool.budget`, kept for the common fixed-pool callers.
     pub budget: u32,
     /// Highest pool occupancy observed, rolling-reconfig overshoot
-    /// included (configured replicas never exceeded `budget`; this
-    /// may — see [`crate::fleet::core::FleetCore::peak_in_use`]).
+    /// included (configured replicas never exceeded the budget in
+    /// force at the time; this may — see
+    /// [`crate::fleet::core::FleetCore::peak_in_use`]).
     pub peak_in_use: u32,
     /// Per-member configured replicas when the run ended (the last
     /// allocation actually applied — what accounting tables report).
     pub final_replicas: Vec<u32>,
+    /// Pool-size extremes, resize/preemption counts and the
+    /// replica-seconds bought/used cost ledger.
+    pub pool: PoolReport,
 }
 
 impl FleetRunMetrics {
@@ -388,8 +402,17 @@ pub fn run_fleet_des(
     let mut reconfig = FleetReconfig::new(apply_delay);
     let mut active: Vec<PipelineConfig> = inits.iter().map(|d| d.config.clone()).collect();
     let n_stages: Vec<usize> = profiles.iter().map(|p| p.stages.len()).collect();
+    // The controller's current pool view.  The physical pool may lag
+    // it (a staged shrink not yet landed); staged shrinks below this
+    // are stale — a later tick re-grew the budget — and are skipped.
+    let mut ctl_budget = budget;
 
     events.push(interval, FleetEv::Adapt);
+    // Plain fixed-pool controllers never preempt — don't even schedule
+    // the mid-interval checks (and their per-member monitor scans).
+    if ctl.wants_preemption() && interval * 0.5 < horizon {
+        events.push(interval * 0.5, FleetEv::Preempt);
+    }
     events.push(horizon, FleetEv::End);
 
     while let Some((now, fe)) = events.pop() {
@@ -450,6 +473,27 @@ pub fn run_fleet_des(
                     .iter()
                     .map(|mo| mo.history(now, crate::predictor::HISTORY))
                     .collect();
+                // Drift correction: a staged shrink dropped on the way
+                // (coalescing, or a preemption clearing the stager)
+                // would otherwise strand the physical pool above the
+                // controller's view forever — re-sync once nothing is
+                // pending (best-effort: never below configured).
+                if reconfig.pending_len() == 0 && fleet.budget() > ctl_budget {
+                    let _ =
+                        fleet.resize_pool(now, ctl_budget.max(fleet.configured_replicas()));
+                }
+                // Autoscaler first: grow the pool immediately so the
+                // joint solve can budget against it; defer a shrink
+                // until the smaller configurations activate.
+                let pool_to = ctl.resize(now, &histories);
+                if let Some(p) = pool_to {
+                    if p > fleet.budget() {
+                        fleet
+                            .resize_pool(now, p)
+                            .expect("pool growth is always accepted");
+                    }
+                    ctl_budget = p;
+                }
                 let decisions = ctl.decide(now, &histories);
                 assert_eq!(decisions.len(), n, "fleet controller must decide per member");
                 for m in 0..n {
@@ -459,22 +503,78 @@ pub fn run_fleet_des(
                         .accounting
                         .record_interval(now, &active[m], observed, &decisions[m]);
                 }
-                let at = reconfig.stage(now, decisions);
+                let shrink_to = pool_to.filter(|&p| p < fleet.budget());
+                let at = reconfig.stage(now, decisions, ctl_budget, shrink_to);
                 events.push(at, FleetEv::Apply);
                 if now + interval < horizon {
                     events.push(now + interval, FleetEv::Adapt);
                 }
             }
+            FleetEv::Preempt => {
+                let window = (interval * 0.5).max(1.0) as usize;
+                let observed: Vec<f64> =
+                    monitors.iter().map(|mo| mo.recent_rate(now, window)).collect();
+                if let Some(p) = ctl.preempt(now, &observed) {
+                    let configs: Vec<(PipelineConfig, f64)> = p
+                        .decisions
+                        .iter()
+                        .map(|d| (d.config.clone(), d.lambda_predicted))
+                        .collect();
+                    fleet.accrue(now);
+                    fleet
+                        .apply(&configs)
+                        .expect("preemption must respect the replica budget");
+                    // An applied preemption supersedes anything staged
+                    // earlier: a stale slow-path decision activating
+                    // later would silently revert it.
+                    reconfig.clear();
+                    // Sync the pool to the controller's budget view
+                    // (executes a cleared pending shrink early).
+                    fleet
+                        .resize_pool(now, p.budget.max(fleet.configured_replicas()))
+                        .expect("preempted configuration fits the controller budget");
+                    fleet.note_preemption(&p.from);
+                    active = p.decisions.into_iter().map(|d| d.config).collect();
+                    for m in 0..n {
+                        for si in 0..n_stages[m] {
+                            drive_member(
+                                &mut fleet, profiles, m, si, now, &mut events, &mut rng, sim,
+                            );
+                        }
+                    }
+                }
+                if now + interval < horizon {
+                    events.push(now + interval, FleetEv::Preempt);
+                }
+            }
             FleetEv::Apply => {
+                // pop_due coalesces: every due stage drains, only the
+                // newest applies.
                 while let Some(staged) = reconfig.pop_due(now) {
                     let configs: Vec<(PipelineConfig, f64)> = staged
                         .decisions
                         .iter()
                         .map(|d| (d.config.clone(), d.lambda_predicted))
                         .collect();
+                    fleet.accrue(now);
                     fleet
                         .apply(&configs)
                         .expect("fleet controller must respect the replica budget");
+                    // A shrink is only safe when nothing bigger is
+                    // still in flight: it must cover the controller's
+                    // current budget AND every pending stage's solve
+                    // budget (with apply-delay > interval, stale
+                    // shrinks and larger mid-flight configurations can
+                    // interleave).
+                    if let Some(p) = staged.shrink_to {
+                        let in_flight =
+                            ctl_budget.max(reconfig.max_pending_budget().unwrap_or(0));
+                        if p >= in_flight {
+                            fleet
+                                .resize_pool(now, p)
+                                .expect("solve ran under the shrunk budget");
+                        }
+                    }
                     active = staged.decisions.into_iter().map(|d| d.config).collect();
                     for m in 0..n {
                         for si in 0..n_stages[m] {
@@ -488,7 +588,9 @@ pub fn run_fleet_des(
         }
     }
 
+    fleet.accrue(horizon);
     fleet.note();
+    let pool = fleet.pool_report();
     let peak_in_use = fleet.peak_in_use();
     let final_replicas: Vec<u32> =
         (0..n).map(|m| fleet.member(m).configured_replicas()).collect();
@@ -504,7 +606,7 @@ pub fn run_fleet_des(
             )
         })
         .collect();
-    FleetRunMetrics { members, budget, peak_in_use, final_replicas }
+    FleetRunMetrics { members, budget: pool.budget, peak_in_use, final_replicas, pool }
 }
 
 /// [`drive`] for one fleet member: events come back member-tagged.

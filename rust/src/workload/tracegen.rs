@@ -440,4 +440,75 @@ mod tests {
         let r = generate_fleet(&pats, 300, 9, FleetCorrelation::Independent);
         assert_eq!(r[0], generate(Pattern::Fluctuating, 300, member_seed(9, 0)));
     }
+
+    /// Property: across random fleet sizes, seeds and correlation
+    /// modes, every member's envelope-scaled trace keeps its base
+    /// stream's mean (the 0.25 + 1.125·bump envelope integrates to 1
+    /// over whole periods), and generation is deterministic — the same
+    /// (pattern, fleet seed, member index) always reproduces the same
+    /// stream, because each member's stream is exactly the plain
+    /// generator at its [`member_seed`].
+    #[test]
+    fn prop_fleet_envelopes_mean_one_and_reproducible() {
+        use crate::util::quickcheck::{check, prop_assert, prop_close};
+        check("fleet envelope mean-1 + member_seed reproducible", 30, |g| {
+            let n = g.usize(1, 5);
+            let period = *g.choose(&[120usize, 200, 300]);
+            let seconds = period * g.usize(2, 5);
+            let seed = g.u64(1, 1 << 40);
+            // steady patterns: base mean is tight, so the envelope's
+            // effect on the mean is cleanly measurable
+            let pat = *g.choose(&[Pattern::SteadyLow, Pattern::SteadyHigh]);
+            let pats = vec![pat; n];
+            for corr in [
+                FleetCorrelation::Independent,
+                FleetCorrelation::Antiphase { period },
+                FleetCorrelation::InPhase { period },
+            ] {
+                let r = generate_fleet(&pats, seconds, seed, corr);
+                prop_assert(
+                    r == generate_fleet(&pats, seconds, seed, corr),
+                    "fleet generation must be deterministic",
+                )?;
+                for (i, rates) in r.iter().enumerate() {
+                    let base = generate(pat, seconds, member_seed(seed, i));
+                    prop_close(
+                        mean(rates) / mean(&base),
+                        1.0,
+                        0.1,
+                        "envelope must stay mean-1 over whole periods",
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: in the explicitly-seeded path, a member's own seed
+    /// fully determines its stream — change one member's seed and only
+    /// that member's trace moves.
+    #[test]
+    fn prop_member_seed_isolated_in_seeded_fleet() {
+        use crate::util::quickcheck::{check, prop_assert};
+        check("member seed isolation", 30, |g| {
+            let n = g.usize(2, 5);
+            let seconds = g.usize(50, 300);
+            let corr = FleetCorrelation::Antiphase { period: 100 };
+            let members: Vec<(Pattern, u64)> =
+                (0..n).map(|_| (*g.choose(&Pattern::ALL), g.u64(1, 1 << 40))).collect();
+            let base = generate_fleet_seeded(&members, seconds, corr);
+            let j = g.usize(0, n);
+            let mut changed = members.clone();
+            changed[j].1 ^= 0x5EED_u64 << 16;
+            let alt = generate_fleet_seeded(&changed, seconds, corr);
+            for i in 0..n {
+                if i == j {
+                    prop_assert(base[i] != alt[i], "changed seed must change the stream")?;
+                } else {
+                    prop_assert(base[i] == alt[i], "other members' streams must not move")?;
+                }
+            }
+            Ok(())
+        });
+    }
 }

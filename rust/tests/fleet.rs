@@ -14,7 +14,9 @@
 use std::sync::Arc;
 
 use ipa::coordinator::adapter::AdapterConfig;
-use ipa::fleet::solver::{allocate_at, brute_best_split, even_shares, solve_fleet, FleetAdapter};
+use ipa::fleet::solver::{
+    allocate_at, brute_best_split, even_shares, solve_fleet, FleetAdapter, FleetTuning,
+};
 use ipa::models::accuracy::AccuracyMetric;
 use ipa::models::pipelines::{self, PipelineSpec};
 use ipa::optimizer::ip::Problem;
@@ -194,11 +196,15 @@ fn fleet_sim_and_live_engine_agree_on_counts() {
         &traces,
         executors,
         predictors(),
+        FleetTuning::default(),
     )
     .expect("live fleet engine");
 
     assert_eq!(rep.members.len(), 2);
     assert!(rep.peak_in_use <= BUDGET, "no reconfigs, so no overshoot either");
+    assert_eq!(rep.pool.resizes, 0, "default tuning never resizes the pool");
+    assert_eq!(rep.pool.preemptions, 0, "default tuning never preempts");
+    assert_eq!((rep.pool.pool_min, rep.pool.pool_max), (BUDGET, BUDGET));
     for m in 0..2 {
         let s = &fm_sim.members[m];
         let l = &rep.members[m].metrics;

@@ -1,0 +1,592 @@
+//! Elastic fleet acceptance pins (ISSUE 3):
+//!
+//! (a) the pool never exceeds the autoscaler's cost-derived cap and
+//!     never drops below the fleet's min-feasible floor — both as a
+//!     random-walk property on the bare policy and end-to-end through
+//!     the DES driver (grow run and shrink run);
+//! (b) a burst on a high-priority member triggers preemption only from
+//!     strictly lower-priority members, conserves the pool, and the
+//!     joint budget safety gate (`FleetCore::apply`) accepts the
+//!     post-preemption configuration;
+//! (c) incremental re-solves are cache-busting equivalent: when every
+//!     member's λ moved past the threshold, the incremental adapter's
+//!     decisions are identical to an always-full-solve adapter's; when
+//!     only a subset moved, shares stay pinned and only moved members
+//!     re-solve;
+//! (d) sim/live parity holds with the whole elastic control plane
+//!     enabled on both drivers (calm load — the plumbing must not
+//!     perturb the counts), plus a live-engine smoke run with real
+//!     ticks asserting the pool-bounds invariant on a wall clock.
+
+use std::sync::Arc;
+
+use ipa::cluster::drop_policy::DropPolicy;
+use ipa::coordinator::adapter::AdapterConfig;
+use ipa::fleet::autoscaler::{Autoscaler, AutoscalerConfig};
+use ipa::fleet::core::{FleetCore, PoolReport};
+use ipa::fleet::solver::{FleetAdapter, FleetTuning, PreemptionConfig};
+use ipa::fleet::spec::FleetSpec;
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines::{self, PipelineSpec};
+use ipa::optimizer::ip::PipelineConfig;
+use ipa::predictor::{Predictor, ReactivePredictor};
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::profiler::profile::PipelineProfiles;
+use ipa::serving::engine::{serve_fleet_with, BatchExecutor, ServeConfig, SyntheticExecutor};
+use ipa::serving::loadgen::LoadGenConfig;
+use ipa::simulator::sim::{run_fleet_des, FleetRunMetrics, SimConfig};
+use ipa::util::quickcheck::{check, prop_assert};
+use ipa::workload::trace::Trace;
+
+fn predictors(n: usize) -> Vec<Box<dyn Predictor + Send>> {
+    (0..n)
+        .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+        .collect()
+}
+
+fn demo_parts() -> (Vec<PipelineSpec>, Vec<PipelineProfiles>, Vec<f64>) {
+    let fleet = FleetSpec::demo3();
+    let specs = fleet.specs().unwrap();
+    let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+    let slas: Vec<f64> = specs.iter().map(|s| s.sla_e2e()).collect();
+    (specs, profs, slas)
+}
+
+fn adapter_with(budget: u32, tuning: FleetTuning) -> FleetAdapter {
+    let (specs, profs, _) = demo_parts();
+    let n = specs.len();
+    FleetAdapter::new(
+        specs,
+        profs,
+        AccuracyMetric::Pas,
+        budget,
+        AdapterConfig::default(),
+        predictors(n),
+    )
+    .and_then(|a| a.with_tuning(tuning))
+    .unwrap()
+}
+
+fn run_elastic_des(budget: u32, tuning: FleetTuning, seconds: usize, seed: u64) -> FleetRunMetrics {
+    let (_, profs, slas) = demo_parts();
+    let mut adapter = adapter_with(budget, tuning);
+    let traces = FleetSpec::demo3().traces(seconds);
+    run_fleet_des(
+        &profs,
+        &slas,
+        10.0,
+        8.0,
+        SimConfig { seed, ..Default::default() },
+        &mut adapter,
+        &traces,
+        "fleet-elastic",
+        budget,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// (a) pool bounds
+// ---------------------------------------------------------------------------
+
+/// Property: from any start inside [floor, cap], a random demand walk
+/// never pushes the autoscaler's target outside [max(floor, min_pool),
+/// cost cap].
+#[test]
+fn prop_autoscaler_walk_stays_within_bounds() {
+    check("autoscaler target bounds", 50, |g| {
+        let cfg = AutoscalerConfig {
+            cost_per_replica: 1.0,
+            cost_target: g.f64(8.0, 40.0),
+            min_pool: g.usize(0, 4) as u32,
+            max_step_up: g.usize(1, 8) as u32,
+            max_step_down: g.usize(1, 4) as u32,
+            headroom: g.f64(1.0, 1.6),
+            shrink_after: g.usize(1, 4) as u32,
+        };
+        let mut a = Autoscaler::new(cfg);
+        let floor = g.usize(2, 10) as u32;
+        let lo = floor.max(cfg.min_pool);
+        let cap = a.max_pool().max(lo);
+        let mut pool = (g.usize(lo as usize, cap as usize + 1)) as u32;
+        for _ in 0..40 {
+            let demand = g.usize(0, 60) as u32;
+            let d = a.decide(pool, demand, floor);
+            prop_assert(d.target >= lo, "target below the min-feasible floor")?;
+            prop_assert(d.target <= cap, "target above the cost cap")?;
+            pool = d.target;
+        }
+        Ok(())
+    });
+}
+
+/// DES grow run: start the pool AT the fleet stage floor with a cap
+/// well above it — padded demand always exceeds the floor, so the
+/// autoscaler must grow, and the whole run must respect floor/cap.
+#[test]
+fn des_autoscaler_grows_within_cap() {
+    let floor = 2 + 2 + 3; // demo3 stage floor
+    let tuning = FleetTuning {
+        priorities: None,
+        autoscaler: Some(AutoscalerConfig {
+            cost_per_replica: 1.0,
+            cost_target: 28.0,
+            min_pool: 0,
+            max_step_up: 4,
+            max_step_down: 2,
+            headroom: 1.25,
+            shrink_after: 3,
+        }),
+        preemption: None,
+        resolve_threshold: 0.0,
+    };
+    let fm = run_elastic_des(floor as u32, tuning, 200, 11);
+    assert!(fm.pool.resizes >= 1, "padded demand over the floor must grow the pool");
+    assert!(fm.pool.pool_max > floor as u32, "pool never grew: {:?}", fm.pool);
+    assert!(fm.pool.pool_max <= 28, "pool exceeded the cost cap: {:?}", fm.pool);
+    assert!(fm.pool.pool_min >= floor as u32, "pool fell below the floor: {:?}", fm.pool);
+    assert!(fm.budget >= floor as u32 && fm.budget <= 28);
+    assert!(
+        fm.pool.bought_replica_secs >= fm.pool.used_replica_secs,
+        "cannot use more replica-seconds than were bought"
+    );
+    assert!(fm.total_completed() > 0);
+}
+
+/// DES shrink run: start the pool far above a low cost cap under quiet
+/// traffic — the autoscaler must walk it down (staged shrinks through
+/// the joint apply), never below the floor.
+#[test]
+fn des_autoscaler_shrinks_toward_cost_target() {
+    let floor = 7u32;
+    let tuning = FleetTuning {
+        priorities: None,
+        autoscaler: Some(AutoscalerConfig {
+            cost_per_replica: 1.0,
+            cost_target: 12.0,
+            min_pool: 0,
+            max_step_up: 4,
+            max_step_down: 4,
+            headroom: 1.1,
+            shrink_after: 1,
+        }),
+        preemption: None,
+        resolve_threshold: 0.0,
+    };
+    let fm = run_elastic_des(24, tuning, 200, 13);
+    assert!(fm.budget < 24, "pool never shrank: {:?}", fm.pool);
+    assert!(fm.pool.pool_min >= floor, "pool fell below the floor: {:?}", fm.pool);
+    assert!(fm.pool.pool_max <= 24, "shrink run must never grow past the start");
+    assert!(fm.pool.resizes >= 1);
+    // the cost ledger reflects the shrink: average bought rate below
+    // the starting pool size
+    let horizon = 200.0;
+    assert!(fm.pool.bought_replica_secs < 24.0 * horizon);
+}
+
+/// Regression: apply-delay LONGER than the adaptation interval.  Ticks
+/// then stage reconfigurations faster than they activate, so stages
+/// come due together (pop_due coalescing) and a shrink staged before a
+/// later re-grow can go stale — the drivers must skip it rather than
+/// take the pool below the budget later decisions were solved under
+/// (the driver's internal `expect`s are the assertion; this run
+/// panicked before the stale-shrink guard existed).
+#[test]
+fn des_survives_apply_delay_longer_than_interval() {
+    let floor = 7u32;
+    let tuning = FleetTuning {
+        priorities: Some(vec![2, 1, 0]),
+        autoscaler: Some(AutoscalerConfig {
+            cost_per_replica: 1.0,
+            cost_target: 20.0,
+            min_pool: 0,
+            max_step_up: 6,
+            max_step_down: 6,
+            headroom: 1.25,
+            shrink_after: 1,
+        }),
+        preemption: Some(PreemptionConfig { burst_factor: 1.3, max_reclaim: 4 }),
+        resolve_threshold: 0.15,
+    };
+    let (_, profs, slas) = demo_parts();
+    let mut adapter = adapter_with(16, tuning);
+    let traces = FleetSpec::demo3().traces(240);
+    let fm = run_fleet_des(
+        &profs,
+        &slas,
+        10.0,
+        25.0, // apply delay ≫ interval: stages pile up and go stale
+        SimConfig { seed: 19, ..Default::default() },
+        &mut adapter,
+        &traces,
+        "fleet-slow-apply",
+        16,
+    );
+    assert!(fm.pool.pool_min >= floor, "pool fell below the floor: {:?}", fm.pool);
+    assert!(fm.pool.pool_max <= 20, "pool exceeded the cost cap: {:?}", fm.pool);
+    assert!(fm.total_completed() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// (b) preemption
+// ---------------------------------------------------------------------------
+
+/// Unit-level preemption pins across a grid of budgets and burst
+/// magnitudes: whenever the fast path fires, the receiver is the
+/// high-priority member, every donor is strictly lower priority, the
+/// pool is conserved, and `FleetCore::apply` accepts the result.
+#[test]
+fn preemption_reclaims_only_from_lower_priority_and_stays_budget_safe() {
+    let (_, _, slas) = demo_parts();
+    let mut fired = 0usize;
+    for budget in [9u32, 10, 12, 14] {
+        for burst in [15.0, 25.0, 35.0, 45.0] {
+            let mut ad = adapter_with(
+                budget,
+                FleetTuning {
+                    priorities: Some(vec![2, 1, 0]),
+                    autoscaler: None,
+                    preemption: Some(PreemptionConfig { burst_factor: 1.5, max_reclaim: 4 }),
+                    resolve_threshold: 0.0,
+                },
+            );
+            // prime the cache at calm per-member load
+            let calm = ad.decide_for_lambdas(&[4.0, 4.0, 4.0]);
+            let shares_before: Vec<u32> =
+                calm.iter().map(|d| d.config.total_replicas()).collect();
+            // build the fleet core on the calm allocation
+            let inits: Vec<(PipelineConfig, f64, DropPolicy)> = calm
+                .iter()
+                .zip(&slas)
+                .map(|(d, &sla)| (d.config.clone(), d.lambda_predicted, DropPolicy::new(sla, true)))
+                .collect();
+            let mut core = FleetCore::new(budget, &inits).unwrap();
+
+            let Some(p) = ad.preempt(5.0, &[burst, 4.0, 4.0]) else { continue };
+            fired += 1;
+            assert_eq!(p.to, 0, "only the high-priority member bursts here");
+            assert!(p.reclaimed >= 1);
+            assert!(!p.from.is_empty());
+            for &(donor, k) in &p.from {
+                assert!(donor != 0, "the burster cannot donate to itself");
+                assert!(k >= 1);
+            }
+            // pool conservation: replicas moved, not created
+            let used_after: u32 =
+                p.decisions.iter().map(|d| d.config.total_replicas()).sum();
+            assert!(used_after <= budget, "preemption violated the budget");
+            // the burster gained, donors shrank (weak monotone checks
+            // against the pre-preemption configs)
+            assert!(
+                p.decisions[0].config.total_replicas() >= shares_before[0],
+                "burster must not lose replicas"
+            );
+            // the joint budget gate accepts the fast-path configuration
+            let configs: Vec<(PipelineConfig, f64)> = p
+                .decisions
+                .iter()
+                .map(|d| (d.config.clone(), d.lambda_predicted))
+                .collect();
+            core.apply(&configs).expect("FleetCore::apply must accept the preemption");
+        }
+    }
+    assert!(fired >= 1, "grid never triggered a preemption — pins unexercised");
+}
+
+/// No strictly-lower-priority member ⇒ no preemption: a burst on the
+/// lowest class (or under all-equal priorities) must return None.
+#[test]
+fn preemption_never_fires_without_lower_priority_donors() {
+    // burst on the lowest-priority member
+    let mut ad = adapter_with(
+        12,
+        FleetTuning {
+            priorities: Some(vec![2, 1, 0]),
+            autoscaler: None,
+            preemption: Some(PreemptionConfig::default()),
+            resolve_threshold: 0.0,
+        },
+    );
+    ad.decide_for_lambdas(&[4.0, 4.0, 4.0]);
+    assert!(ad.preempt(5.0, &[4.0, 4.0, 60.0]).is_none());
+    // all-equal priorities: nobody outranks anybody
+    let mut eq = adapter_with(
+        12,
+        FleetTuning {
+            priorities: None,
+            autoscaler: None,
+            preemption: Some(PreemptionConfig::default()),
+            resolve_threshold: 0.0,
+        },
+    );
+    eq.decide_for_lambdas(&[4.0, 4.0, 4.0]);
+    assert!(eq.preempt(5.0, &[60.0, 4.0, 4.0]).is_none());
+}
+
+/// DES-level: with the demo priorities [2,1,0] the top member can only
+/// ever RECEIVE replicas — its preempted counter must stay zero while
+/// the run stays budget-safe end to end (the driver's internal
+/// `expect`s double as the safety assertion).
+#[test]
+fn des_preemption_respects_priority_order() {
+    let tuning = FleetTuning {
+        priorities: Some(vec![2, 1, 0]),
+        autoscaler: None,
+        preemption: Some(PreemptionConfig { burst_factor: 1.3, max_reclaim: 4 }),
+        resolve_threshold: 0.0,
+    };
+    let fm = run_elastic_des(14, tuning, 240, 17);
+    assert_eq!(
+        fm.pool.preempted[0], 0,
+        "the highest-priority member can never be a donor"
+    );
+    assert_eq!(fm.pool.preempted.iter().sum::<u32>() > 0, fm.pool.preemptions > 0);
+    assert!(fm.total_completed() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// (c) incremental re-solves
+// ---------------------------------------------------------------------------
+
+/// Cache-busting equivalence: when EVERY member's λ moves past the
+/// threshold, the incremental adapter must fall back to the full joint
+/// solve and its decisions must match an always-full-solve adapter's
+/// exactly, tick for tick.
+#[test]
+fn incremental_equals_full_solve_when_all_lambdas_move() {
+    let mk = |threshold: f64| {
+        adapter_with(
+            16,
+            FleetTuning {
+                priorities: None,
+                autoscaler: None,
+                preemption: None,
+                resolve_threshold: threshold,
+            },
+        )
+    };
+    let mut inc = mk(0.2);
+    let mut full = mk(0.0);
+    // every step moves every member by far more than 20%
+    let steps: [[f64; 3]; 4] =
+        [[6.0, 6.0, 6.0], [12.0, 10.0, 3.0], [20.0, 5.0, 14.0], [7.0, 16.0, 6.0]];
+    for (t, lambdas) in steps.iter().enumerate() {
+        let a = inc.decide_for_lambdas(lambdas);
+        let b = full.decide_for_lambdas(lambdas);
+        for (m, (da, db)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                da.config, db.config,
+                "tick {t} member {m}: incremental diverged from full solve"
+            );
+            assert_eq!(da.fallback, db.fallback, "tick {t} member {m}");
+        }
+    }
+    assert_eq!(inc.incremental_solves, 0, "all-moved ticks must run the full solve");
+    assert_eq!(inc.full_solves, full.full_solves);
+}
+
+/// Subset moves: when one member's λ moves and the others hold, only
+/// that member re-solves — shares stay pinned, unmoved members keep
+/// their configurations byte for byte, and the budget still holds.
+#[test]
+fn incremental_resolves_only_moved_members() {
+    let mut ad = adapter_with(
+        16,
+        FleetTuning {
+            priorities: None,
+            autoscaler: None,
+            preemption: None,
+            resolve_threshold: 0.2,
+        },
+    );
+    let first = ad.decide_for_lambdas(&[6.0, 6.0, 6.0]);
+    assert_eq!(ad.full_solves, 1);
+    // member 2 doubles; members 0/1 hold exactly
+    let second = ad.decide_for_lambdas(&[6.0, 6.0, 12.0]);
+    assert_eq!(ad.incremental_solves, 1, "subset move must take the incremental path");
+    assert_eq!(ad.full_solves, 1);
+    for m in 0..2 {
+        assert_eq!(
+            first[m].config, second[m].config,
+            "member {m} did not move but its config changed"
+        );
+    }
+    let used: u32 = second.iter().map(|d| d.config.total_replicas()).sum();
+    assert!(used <= 16, "incremental path violated the budget");
+}
+
+// ---------------------------------------------------------------------------
+// (d) sim/live parity with the elastic plane enabled
+// ---------------------------------------------------------------------------
+
+/// The fleet parity scenario of `tests/fleet.rs`, with the FULL elastic
+/// tuning switched on in both drivers.  Under calm constant load with
+/// no adaptation ticks the elastic plumbing must stay quiescent — the
+/// per-member counts still match exactly and nothing resizes or
+/// preempts on either clock.
+#[test]
+fn elastic_sim_and_live_engine_agree_on_counts() {
+    const SCALE: f64 = 0.05;
+    const BUDGET: u32 = 16;
+    let seed = 23u64;
+    let specs: Vec<PipelineSpec> = ["video", "video"]
+        .iter()
+        .map(|n| {
+            let mut s = pipelines::by_name(n).unwrap();
+            s.weights.beta *= 50.0;
+            s
+        })
+        .collect();
+    let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+    let slas: Vec<f64> = specs.iter().map(|s| s.sla_e2e()).collect();
+    let mut rates = vec![1.0; 80];
+    rates.extend(vec![0.0; 30]);
+    let traces =
+        vec![Trace::new("elastic-parity-a", rates.clone()), Trace::new("elastic-parity-b", rates)];
+    let tuning = || FleetTuning {
+        priorities: Some(vec![1, 0]),
+        autoscaler: Some(AutoscalerConfig {
+            cost_per_replica: 1.0,
+            cost_target: 20.0,
+            ..Default::default()
+        }),
+        preemption: Some(PreemptionConfig::default()),
+        resolve_threshold: 0.15,
+    };
+    let predictors2 = || predictors(2);
+
+    let mut sim_adapter = FleetAdapter::new(
+        specs.clone(),
+        profs.clone(),
+        AccuracyMetric::Pas,
+        BUDGET,
+        AdapterConfig { interval: 10_000.0, apply_delay: 8.0, max_replicas: 4 },
+        predictors2(),
+    )
+    .and_then(|a| a.with_tuning(tuning()))
+    .unwrap();
+    let fm_sim = run_fleet_des(
+        &profs,
+        &slas,
+        10_000.0,
+        8.0,
+        SimConfig { seed, service_noise: 0.0, drop_enabled: true },
+        &mut sim_adapter,
+        &traces,
+        "elastic-sim",
+        BUDGET,
+    );
+
+    let cfg = ServeConfig {
+        artifact_dir: String::new(),
+        executors: 0,
+        max_workers: 4,
+        interval: 10_000.0,
+        apply_delay: 8.0 * SCALE,
+        use_lstm: false,
+        profile_batches: vec![],
+        profile_reps: 0,
+        sla_floor: 0.0,
+    };
+    let scaled: Vec<PipelineProfiles> = profs.iter().map(|p| p.scaled(SCALE)).collect();
+    let executors: Vec<Arc<dyn BatchExecutor>> = scaled
+        .iter()
+        .map(|p| Arc::new(SyntheticExecutor::from_profiles(p, 1.0)) as Arc<dyn BatchExecutor>)
+        .collect();
+    let rep = serve_fleet_with(
+        &specs,
+        scaled,
+        AccuracyMetric::Pas,
+        BUDGET,
+        "elastic-live",
+        &cfg,
+        LoadGenConfig { time_scale: SCALE, seed },
+        &traces,
+        executors,
+        predictors2(),
+        tuning(),
+    )
+    .expect("live elastic fleet engine");
+
+    for pool in [&fm_sim.pool, &rep.pool] {
+        assert_eq!(pool.resizes, 0, "no ticks fired, so nothing may resize");
+        assert_eq!(pool.preemptions, 0, "calm load must never preempt");
+    }
+    for m in 0..2 {
+        let s = &fm_sim.members[m];
+        let l = &rep.members[m].metrics;
+        assert!(s.requests.len() > 40, "member {m}: thin trace");
+        assert_eq!(s.requests.len(), l.requests.len(), "member {m}: arrivals diverge");
+        assert_eq!(
+            s.completed_count(),
+            l.completed_count(),
+            "member {m}: completions diverge (sim {} vs live {})",
+            s.completed_count(),
+            l.completed_count()
+        );
+        assert_eq!(s.dropped_count(), l.dropped_count(), "member {m}: drops diverge");
+        assert_eq!(s.completed_count(), s.requests.len(), "member {m}: all complete");
+        assert_eq!(s.dropped_count(), 0, "member {m}: nothing drops");
+    }
+}
+
+/// Live-engine elastic smoke: real wall-clock ticks with the autoscaler
+/// and preemption enabled.  Wall-clock decision times are not
+/// deterministic, so this pins the invariants, not the counts: the
+/// pool stays within [floor, cap] and every request is accounted for.
+#[test]
+fn live_engine_elastic_pool_stays_within_bounds() {
+    const SCALE: f64 = 0.05;
+    let (specs, profs, _) = demo_parts();
+    let floor = 7u32;
+    let tuning = FleetTuning {
+        priorities: Some(vec![2, 1, 0]),
+        autoscaler: Some(AutoscalerConfig {
+            cost_per_replica: 1.0,
+            cost_target: 28.0,
+            min_pool: 0,
+            max_step_up: 4,
+            max_step_down: 2,
+            headroom: 1.25,
+            shrink_after: 2,
+        }),
+        preemption: Some(PreemptionConfig::default()),
+        resolve_threshold: 0.15,
+    };
+    let cfg = ServeConfig {
+        artifact_dir: String::new(),
+        executors: 0,
+        max_workers: 6,
+        interval: 1.0,
+        apply_delay: 0.2,
+        use_lstm: false,
+        profile_batches: vec![],
+        profile_reps: 0,
+        sla_floor: 0.0,
+    };
+    let traces = FleetSpec::demo3().traces(60);
+    let scaled: Vec<PipelineProfiles> = profs.iter().map(|p| p.scaled(SCALE)).collect();
+    let executors: Vec<Arc<dyn BatchExecutor>> = scaled
+        .iter()
+        .map(|p| Arc::new(SyntheticExecutor::from_profiles(p, 1.0)) as Arc<dyn BatchExecutor>)
+        .collect();
+    let rep = serve_fleet_with(
+        &specs,
+        scaled,
+        AccuracyMetric::Pas,
+        floor,
+        "elastic-live-smoke",
+        &cfg,
+        LoadGenConfig { time_scale: SCALE, seed: 7 },
+        &traces,
+        executors,
+        predictors(3),
+        tuning,
+    )
+    .expect("live elastic engine");
+    let pool: &PoolReport = &rep.pool;
+    assert!(pool.pool_min >= floor, "pool fell below the floor: {pool:?}");
+    assert!(pool.pool_max <= 28, "pool exceeded the cost cap: {pool:?}");
+    assert!(pool.bought_replica_secs >= pool.used_replica_secs - 1e-9);
+    let total: usize = rep.members.iter().map(|r| r.metrics.requests.len()).sum();
+    assert!(total > 100, "load generator barely ran ({total} requests)");
+}
