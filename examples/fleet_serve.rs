@@ -18,19 +18,33 @@
 //! mid-interval preemption, and ticks where only one member's λ moved
 //! re-solve incrementally.
 //!
+//! The pool can be HETEROGENEOUS: `--nodes "4x(8c,32g,0a)+2x(16c,64g,1a)"`
+//! replaces the fungible slot pool with counted node shapes that
+//! replicas bin-pack onto (accel-demanding variants land only on accel
+//! nodes; the autoscaler then moves whole nodes).  Members run MIXED
+//! SLA classes (the demo fleet's NLP line is `throughput`, the rest
+//! `latency_critical`); override per member with
+//! `--class nlp-batchline=latency_critical,video-edge=throughput`.
+//!
 //! Both print the per-pipeline accounting table from `reports::tables`,
-//! now including the preempt column and the pool size/cost lines.
+//! now including the preempt column, the cost-vector breakdown and the
+//! pool size/cost/node lines.
 //!
 //! Run: `cargo run --release --example fleet_serve
 //!       [-- --seconds 240 --budget 24 --time-scale 0.05 --fleet spec.json
-//!           --cost-target 30 --static 0]`
+//!           --cost-target 30 --static 0
+//!           --nodes "4x(8c,32g,0a)+2x(16c,64g,1a)"
+//!           --class nlp-batchline=throughput]`
 
 use std::sync::Arc;
 
 use ipa::coordinator::adapter::AdapterConfig;
 use ipa::fleet::autoscaler::AutoscalerConfig;
-use ipa::fleet::solver::{solve_fleet, FleetAdapter, FleetTuning, PreemptionConfig};
-use ipa::fleet::spec::FleetSpec;
+use ipa::fleet::nodes::NodeInventory;
+use ipa::fleet::solver::{
+    solve_fleet, solve_fleet_packed, FleetAdapter, FleetTuning, PreemptionConfig,
+};
+use ipa::fleet::spec::{FleetSpec, SlaClass};
 use ipa::models::accuracy::AccuracyMetric;
 use ipa::optimizer::ip::Problem;
 use ipa::predictor::{Predictor, ReactivePredictor};
@@ -69,6 +83,37 @@ fn main() {
         None => FleetSpec::demo3(),
     };
     fleet.replica_budget = args.get_usize("budget", fleet.replica_budget as usize) as u32;
+    // --nodes overrides the spec's inventory (if any): counted shapes
+    // replicas bin-pack onto instead of the fungible slot pool.
+    if let Some(spec) = args.get("nodes") {
+        match NodeInventory::parse(spec) {
+            Ok(inv) => fleet.nodes = Some(inv),
+            Err(e) => {
+                eprintln!("bad --nodes: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    // --class name=class[,name=class..] overrides member SLA classes.
+    if let Some(spec) = args.get("class") {
+        for pair in spec.split(',') {
+            let Some((name, class)) = pair.split_once('=') else {
+                eprintln!("bad --class entry {pair:?}: expected member=class");
+                std::process::exit(2);
+            };
+            let Some(class) = SlaClass::from_name(class.trim()) else {
+                eprintln!("bad --class entry {pair:?}: unknown class");
+                std::process::exit(2);
+            };
+            match fleet.members.iter_mut().find(|m| m.name == name.trim()) {
+                Some(m) => m.sla_class = class,
+                None => {
+                    eprintln!("--class names unknown member {name:?}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
     if let Err(e) = fleet.validate() {
         eprintln!("invalid fleet: {e}");
         std::process::exit(2);
@@ -79,20 +124,30 @@ fn main() {
     let slas: Vec<f64> = specs.iter().map(|s| s.sla_e2e()).collect();
     let traces = fleet.traces(seconds);
     let names: Vec<String> = fleet.members.iter().map(|m| m.name.clone()).collect();
-    let budget = fleet.replica_budget;
+    let budget = fleet.nodes.as_ref().map_or(fleet.replica_budget, |i| i.replica_cap());
 
-    println!(
-        "fleet '{}': {} pipelines over one {}-replica pool, {seconds}s traces",
-        fleet.name,
-        fleet.members.len(),
-        budget
-    );
+    match &fleet.nodes {
+        Some(inv) => println!(
+            "fleet '{}': {} pipelines over {} nodes [{inv}] (≤{budget} replicas), \
+             {seconds}s traces",
+            fleet.name,
+            fleet.members.len(),
+            inv.n_nodes(),
+        ),
+        None => println!(
+            "fleet '{}': {} pipelines over one {}-replica pool, {seconds}s traces",
+            fleet.name,
+            fleet.members.len(),
+            budget
+        ),
+    }
     for (m, t) in fleet.members.iter().zip(&traces) {
         println!(
-            "  {:<16} {:<10} pattern={:<12} peak λ={:.1} rps",
+            "  {:<16} {:<10} pattern={:<12} class={:<16} peak λ={:.1} rps",
             m.name,
             m.pipeline,
             m.pattern.name(),
+            m.sla_class.name(),
             t.peak()
         );
     }
@@ -107,18 +162,41 @@ fn main() {
         .zip(&mean_lambdas)
         .map(|((s, p), &l)| Problem::new(s, p, l))
         .collect();
-    let alloc = solve_fleet(&problems, budget).expect("budget covers the stage floor");
-    println!(
-        "\njoint solve @ mean λ: {} of {budget} replicas granted, total objective {:.2}",
-        alloc.replicas_used, alloc.total_objective
-    );
+    match &fleet.nodes {
+        Some(inv) => {
+            let alloc = solve_fleet_packed(&problems, inv, &fleet.priorities())
+                .expect("inventory hosts the stage floor");
+            let packing = alloc.packing.as_ref().expect("packed solve carries a packing");
+            println!(
+                "\njoint packed solve @ mean λ: {} replicas on {} of {} nodes, \
+                 total objective {:.2}",
+                alloc.replicas_used,
+                packing.nodes_used(),
+                inv.n_nodes(),
+                alloc.total_objective
+            );
+        }
+        None => {
+            let alloc = solve_fleet(&problems, budget).expect("budget covers the stage floor");
+            println!(
+                "\njoint solve @ mean λ: {} of {budget} replicas granted, \
+                 total objective {:.2}",
+                alloc.replicas_used, alloc.total_objective
+            );
+        }
+    }
 
-    // Elastic control plane: priorities from the spec, a pool
-    // autoscaler capped at ~25% above the starting budget, the
-    // preemption fast path, and incremental re-solves for quiet ticks.
+    // Elastic control plane: priorities + SLA classes + nodes from the
+    // spec, a pool autoscaler capped at ~25% above the starting budget,
+    // the preemption fast path, and incremental re-solves for quiet
+    // ticks.  --static pins the pool but keeps the node/class policy.
     let cost_target = args.get_f64("cost-target", budget as f64 * 1.25);
     let tuning = if static_pool {
-        FleetTuning::default()
+        FleetTuning {
+            nodes: fleet.nodes.clone(),
+            sla_classes: Some(fleet.classes()),
+            ..Default::default()
+        }
     } else {
         FleetTuning {
             priorities: Some(fleet.priorities()),
@@ -133,12 +211,15 @@ fn main() {
             }),
             preemption: Some(PreemptionConfig::default()),
             resolve_threshold: 0.15,
+            nodes: fleet.nodes.clone(),
+            sla_classes: Some(fleet.classes()),
         }
     };
     println!(
-        "control plane: {} (priorities {:?}, pool cap {})",
+        "control plane: {} (priorities {:?}, classes {:?}, pool cap {})",
         if static_pool { "static pool" } else { "elastic" },
         fleet.priorities(),
+        fleet.classes().iter().map(|c| c.name()).collect::<Vec<_>>(),
         if static_pool { budget as f64 } else { cost_target },
     );
 

@@ -232,6 +232,7 @@ fn main() {
                 }),
                 preemption: Some(PreemptionConfig::default()),
                 resolve_threshold: threshold,
+                ..Default::default()
             })
         })
         .unwrap()
@@ -267,6 +268,55 @@ fn main() {
     print_section("fleet elastic control plane", &rows);
     let fleet_autoscaler_rows = rows.clone();
 
+    // Multi-resource bin-packing: FFD placement decision time at
+    // 10/50/200 replicas on a mixed 2-shape inventory, plus the joint
+    // solve overhead of a heterogeneous pool vs the fungible
+    // (scalar-equivalent) single shape.
+    use ipa::fleet::nodes::{NodeInventory, PackItem};
+    use ipa::fleet::solver::solve_fleet_packed;
+    use ipa::resources::ResourceVec;
+    let mut rows = Vec::new();
+    {
+        let inv = NodeInventory::parse("40x(8c,32g,0a)+40x(16c,64g,2a)").unwrap();
+        for n in [10u32, 50, 200] {
+            let items: Vec<PackItem> = (0..n)
+                .map(|i| PackItem {
+                    member: (i % 3) as usize,
+                    stage: (i % 2) as usize,
+                    unit: match i % 3 {
+                        0 => ResourceVec::new(1.0, 2.0, 0.0),
+                        1 => ResourceVec::new(2.0, 4.0, 0.0),
+                        _ => ResourceVec::new(8.0, 16.0, 1.0),
+                    },
+                    replicas: 1,
+                })
+                .collect();
+            rows.push(b.run(&format!("fleet_binpack/pack_{n}_replicas"), || {
+                inv.pack(&items).expect("inventory sized for the demand mix")
+            }));
+        }
+    }
+    {
+        let prios = fleet.priorities();
+        let lambdas = [14.0, 7.0, 4.0];
+        let problems: Vec<Problem> = fleet_specs
+            .iter()
+            .zip(&fleet_profs)
+            .zip(lambdas)
+            .map(|((s, p), l)| Problem::new(s, p, l))
+            .collect();
+        let single = NodeInventory::fungible(budget);
+        rows.push(b.run("fleet_binpack/solve_single_shape_fungible", || {
+            solve_fleet_packed(&problems, &single, &prios)
+        }));
+        let hetero = NodeInventory::parse("4x(4c,16g,0a)+2x(16c,64g,2a)").unwrap();
+        rows.push(b.run("fleet_binpack/solve_hetero_2shape", || {
+            solve_fleet_packed(&problems, &hetero, &prios)
+        }));
+    }
+    print_section("fleet bin-packing (nodes + packed joint solve)", &rows);
+    let fleet_binpack_rows = rows.clone();
+
     // Perf baseline for future PRs: solver decision time + simulator
     // throughput (single-pipeline and fleet) + elastic control-plane
     // latencies, in a stable JSON shape.
@@ -278,6 +328,7 @@ fn main() {
             ("fleet_solver", &fleet_solver_rows[..]),
             ("fleet_sim", &fleet_sim_rows[..]),
             ("fleet_autoscaler", &fleet_autoscaler_rows[..]),
+            ("fleet_binpack", &fleet_binpack_rows[..]),
         ],
     ) {
         Ok(()) => println!("wrote BENCH_cluster.json"),

@@ -123,6 +123,7 @@ pub fn build_config(
     let mut batch_sum = 0usize;
     let mut lat = 0.0;
     let mut pas_frac = 1.0;
+    let mut resources = crate::resources::ResourceVec::ZERO;
     for (si, (&vi, &(b, n))) in variant_idx.iter().zip(picks).enumerate() {
         let vp = &p.profiles.stages[si].variants[vi];
         let l = vp.latency.latency(b);
@@ -134,11 +135,13 @@ pub fn build_config(
             cost: n as f64 * vp.cost_per_replica(),
             accuracy: vp.variant.accuracy,
             latency: l,
+            resources: vp.resources_per_replica(),
         });
         cost += n as f64 * vp.cost_per_replica();
         batch_sum += b;
         lat += l + worst_case_delay(b, p.lambda);
         pas_frac *= vp.variant.accuracy / 100.0;
+        resources = resources.add(vp.resources_per_replica().scale(n as f64));
     }
     PipelineConfig {
         stages,
@@ -147,6 +150,7 @@ pub fn build_config(
         batch_sum,
         objective: w.alpha * 100.0 * pas_frac - w.beta * cost - w.delta * batch_sum as f64,
         latency_e2e: lat,
+        resources,
     }
 }
 

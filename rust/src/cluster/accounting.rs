@@ -110,6 +110,7 @@ impl Accounting {
             t,
             pas: active.pas,
             cost: active.cost,
+            resources: active.resources,
             lambda_observed,
             lambda_predicted: decision.lambda_predicted,
             decision_time: decision.decision_time,

@@ -103,11 +103,24 @@ impl ClusterCore {
     /// timeouts ([`batch_timeout`]); wall-clock drivers pass
     /// `f64::INFINITY` for the bare 50 ms floor.
     pub fn new(init: &PipelineConfig, lambda: f64, drop: DropPolicy) -> Self {
+        Self::new_capped(init, lambda, drop, f64::INFINITY)
+    }
+
+    /// [`ClusterCore::new`] with a batch-formation timeout ceiling —
+    /// the SLA-class hook: latency-critical members cap how long a
+    /// partial batch may wait regardless of what the λ-shaped timeout
+    /// would allow.  `f64::INFINITY` = uncapped (the classic behavior).
+    pub fn new_capped(
+        init: &PipelineConfig,
+        lambda: f64,
+        drop: DropPolicy,
+        timeout_cap: f64,
+    ) -> Self {
         ClusterCore {
             stages: init
                 .stages
                 .iter()
-                .map(|sc| StageCore::new(sc, batch_timeout(sc.batch, lambda)))
+                .map(|sc| StageCore::new(sc, batch_timeout(sc.batch, lambda).min(timeout_cap)))
                 .collect(),
             accounting: Accounting::new(drop.sla),
             drop_policy: drop,
@@ -192,8 +205,14 @@ impl ClusterCore {
 
     /// Activate a staged configuration (see [`crate::cluster::reconfig`]).
     pub fn apply_config(&mut self, cfg: &PipelineConfig, lambda: f64) {
+        self.apply_config_capped(cfg, lambda, f64::INFINITY);
+    }
+
+    /// [`ClusterCore::apply_config`] with a batch-formation timeout
+    /// ceiling (see [`ClusterCore::new_capped`]).
+    pub fn apply_config_capped(&mut self, cfg: &PipelineConfig, lambda: f64, timeout_cap: f64) {
         for (st, sc) in self.stages.iter_mut().zip(&cfg.stages) {
-            st.apply(sc, batch_timeout(sc.batch, lambda));
+            st.apply(sc, batch_timeout(sc.batch, lambda).min(timeout_cap));
         }
     }
 
@@ -221,6 +240,7 @@ mod tests {
                     cost: 1.0,
                     accuracy: 90.0,
                     latency: 0.1,
+                    resources: crate::resources::ResourceVec::cpu(1.0),
                 })
                 .collect(),
             pas: 90.0,
@@ -228,7 +248,26 @@ mod tests {
             batch_sum: stages.iter().map(|s| s.0).sum(),
             objective: 0.0,
             latency_e2e: 0.2,
+            resources: crate::resources::ResourceVec::ZERO,
         }
+    }
+
+    #[test]
+    fn timeout_cap_clamps_batch_formation_waits() {
+        // λ=2, batch 8: uncapped timeout = 1.5 × (8-1)/2 = 5.25 s
+        let uncapped = ClusterCore::new(&config(&[(8, 1)]), 2.0, DropPolicy::new(10.0, true));
+        assert!((uncapped.stages[0].dispatcher.timeout() - 5.25).abs() < 1e-9);
+        let capped =
+            ClusterCore::new_capped(&config(&[(8, 1)]), 2.0, DropPolicy::new(10.0, true), 0.8);
+        assert!((capped.stages[0].dispatcher.timeout() - 0.8).abs() < 1e-9);
+        // the cap survives reconfiguration
+        let mut capped = capped;
+        capped.apply_config_capped(&config(&[(16, 1)]), 2.0, 0.8);
+        assert!((capped.stages[0].dispatcher.timeout() - 0.8).abs() < 1e-9);
+        // and INFINITY is the identity
+        let mut uncapped = uncapped;
+        uncapped.apply_config(&config(&[(8, 1)]), 2.0);
+        assert!((uncapped.stages[0].dispatcher.timeout() - 5.25).abs() < 1e-9);
     }
 
     #[test]

@@ -162,6 +162,11 @@ impl BatchDispatcher {
         self.queue.batch_size
     }
 
+    /// Active batch-formation timeout, seconds.
+    pub fn timeout(&self) -> f64 {
+        self.queue.timeout
+    }
+
     /// Reconfigure the formation rule — queued requests stay, FIFO
     /// order preserved.
     pub fn set_batch(&mut self, batch_size: usize, timeout: f64) {

@@ -11,21 +11,41 @@ use crate::queueing::Request;
 /// The §4.5 drop rule.
 #[derive(Debug, Clone, Copy)]
 pub struct DropPolicy {
-    /// End-to-end SLA the ages are judged against, seconds.
+    /// End-to-end SLA, seconds.  This is the TRUE SLA — it also feeds
+    /// the accounting/metrics, so SLA attainment is always judged
+    /// against it regardless of `scale`.
     pub sla: f64,
     /// Disabled → nothing is ever dropped (ablation mode).
     pub enabled: bool,
+    /// Drop-threshold multiplier (SLA-class policy): ages are judged
+    /// against `scale × sla`, the reported SLA stays `sla`.  1.0 = the
+    /// verbatim §4.5 rule.
+    pub scale: f64,
 }
 
 impl DropPolicy {
     pub fn new(sla: f64, enabled: bool) -> Self {
-        DropPolicy { sla, enabled }
+        DropPolicy { sla, enabled, scale: 1.0 }
+    }
+
+    /// This policy with a drop-threshold multiplier (throughput-class
+    /// members shed at `scale ×` the SLA while their attainment metric
+    /// keeps the true SLA).
+    pub fn scaled(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// The age threshold drops are judged against.
+    fn threshold(&self) -> f64 {
+        self.scale * self.sla
     }
 
     /// Should a request of end-to-end age `age` be dropped when a batch
     /// forms at `stage`?
     pub fn should_drop(&self, stage: usize, age: f64) -> bool {
-        self.enabled && ((stage > 0 && age > self.sla) || age > 2.0 * self.sla)
+        self.enabled
+            && ((stage > 0 && age > self.threshold()) || age > 2.0 * self.threshold())
     }
 
     /// Partition a formed batch into (admitted, dropped) by age at
@@ -78,6 +98,16 @@ mod tests {
         let (kept, dropped) = p.split(1, 10.0, batch);
         assert_eq!(kept.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
         assert_eq!(dropped.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn scale_moves_the_drop_threshold_not_the_reported_sla() {
+        let p = DropPolicy::new(4.0, true).scaled(2.0);
+        assert_eq!(p.sla, 4.0, "the true SLA (what metrics judge against) is untouched");
+        assert!(!p.should_drop(1, 7.9), "throughput member tolerates up to 2× the SLA");
+        assert!(p.should_drop(1, 8.1));
+        assert!(!p.should_drop(0, 15.9), "entry-stage ceiling scales too");
+        assert!(p.should_drop(0, 16.1));
     }
 
     /// Property: the rule is monotone in age — if age `a` is dropped at

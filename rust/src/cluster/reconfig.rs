@@ -71,6 +71,7 @@ mod tests {
                 batch_sum: 0,
                 objective: 0.0,
                 latency_e2e: 0.0,
+                resources: crate::resources::ResourceVec::ZERO,
             },
             lambda_predicted: 10.0,
             decision_time: 0.0,

@@ -30,13 +30,42 @@
 //! (∫ budget dt) vs *used* (∫ configured dt) via [`FleetCore::accrue`]
 //! — plus pool-size extremes and preemption counts, all surfaced
 //! through [`FleetCore::pool_report`].
+//!
+//! With a [`NodeInventory`] attached ([`FleetCore::with_nodes`]) the
+//! pool stops being fungible: the budget is the inventory's replica
+//! cap, every [`FleetCore::apply`] additionally bin-packs the new
+//! configuration's resource vectors onto the nodes,
+//! [`FleetCore::resize_pool`] moves WHOLE nodes of the elastic shape
+//! (a shrink must re-pack the active replicas or it is rejected), and
+//! the ledger gains node-seconds per shape.  Per-member SLA classes
+//! plug in as batch-timeout ceilings carried by [`MemberInit`].
 
 use std::collections::VecDeque;
 
 use crate::cluster::core::ClusterCore;
 use crate::cluster::drop_policy::DropPolicy;
 use crate::coordinator::adapter::Decision;
+use crate::fleet::nodes::{config_demands, NodeInventory, Packing};
 use crate::optimizer::ip::PipelineConfig;
+
+/// Per-member construction parameters of a fleet core: the initial
+/// configuration, the λ shaping its batch timeouts, the drop policy,
+/// and the SLA-class batch-timeout ceiling (`f64::INFINITY` =
+/// uncapped, the classless behavior).
+#[derive(Debug, Clone)]
+pub struct MemberInit {
+    pub config: PipelineConfig,
+    pub lambda: f64,
+    pub drop: DropPolicy,
+    pub timeout_cap: f64,
+}
+
+impl MemberInit {
+    /// Classless member (uncapped batch timeouts).
+    pub fn new(config: PipelineConfig, lambda: f64, drop: DropPolicy) -> MemberInit {
+        MemberInit { config, lambda, drop, timeout_cap: f64::INFINITY }
+    }
+}
 
 /// Pool occupancy snapshot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,6 +104,12 @@ pub struct PoolReport {
     pub bought_replica_secs: f64,
     /// ∫ configured dt — replica-seconds actually *provisioned*.
     pub used_replica_secs: f64,
+    /// Final node counts per shape, `(shape name, count)` — empty for
+    /// fungible pools.
+    pub nodes_final: Vec<(String, u32)>,
+    /// ∫ count dt per shape — node-seconds bought, `(shape name,
+    /// seconds)` — empty for fungible pools.
+    pub node_secs: Vec<(String, f64)>,
 }
 
 impl PoolReport {
@@ -92,6 +127,19 @@ impl PoolReport {
 pub struct FleetCore {
     cores: Vec<ClusterCore>,
     budget: u32,
+    /// Heterogeneous node shapes backing the pool (None = fungible).
+    /// When present, `budget` always equals its replica cap and every
+    /// `apply` must bin-pack onto the nodes.
+    inventory: Option<NodeInventory>,
+    /// Per-member batch-timeout ceilings (SLA classes).
+    timeout_caps: Vec<f64>,
+    /// The active per-member configurations (what a pool shrink must
+    /// re-pack against).
+    last_configs: Vec<PipelineConfig>,
+    /// Node placement of the active configurations (node pools only).
+    last_packing: Option<Packing>,
+    /// ∫ count dt per shape (node pools only, shape order).
+    node_secs: Vec<f64>,
     /// Highest `in_use` ever observed (rolling-reconfig overshoot
     /// included); updated by [`FleetCore::note`].
     peak_in_use: u32,
@@ -118,21 +166,56 @@ impl FleetCore {
         budget: u32,
         inits: &[(PipelineConfig, f64, DropPolicy)],
     ) -> Result<FleetCore, String> {
-        let configured: u32 = inits.iter().map(|(cfg, _, _)| cfg.total_replicas()).sum();
+        let member_inits: Vec<MemberInit> = inits
+            .iter()
+            .map(|(cfg, lambda, drop)| MemberInit::new(cfg.clone(), *lambda, *drop))
+            .collect();
+        Self::with_nodes(budget, None, &member_inits)
+    }
+
+    /// [`FleetCore::new`] with the full pool description: an optional
+    /// heterogeneous node inventory (the budget then becomes its
+    /// replica cap and the initial configurations must bin-pack onto
+    /// the nodes) and per-member SLA-class timeout ceilings.
+    pub fn with_nodes(
+        budget: u32,
+        inventory: Option<NodeInventory>,
+        inits: &[MemberInit],
+    ) -> Result<FleetCore, String> {
+        let budget = inventory.as_ref().map_or(budget, |i| i.replica_cap());
+        let configured: u32 = inits.iter().map(|mi| mi.config.total_replicas()).sum();
         if configured > budget {
             return Err(format!(
                 "fleet initial configuration needs {configured} replicas but the pool \
                  holds {budget}"
             ));
         }
+        let last_configs: Vec<PipelineConfig> =
+            inits.iter().map(|mi| mi.config.clone()).collect();
+        let last_packing = match &inventory {
+            Some(inv) => {
+                let refs: Vec<&PipelineConfig> = last_configs.iter().collect();
+                Some(inv.pack(&config_demands(&refs)).ok_or_else(|| {
+                    "fleet initial configuration does not pack into the node inventory"
+                        .to_string()
+                })?)
+            }
+            None => None,
+        };
         let cores: Vec<ClusterCore> = inits
             .iter()
-            .map(|(cfg, lambda, drop)| ClusterCore::new(cfg, *lambda, *drop))
+            .map(|mi| ClusterCore::new_capped(&mi.config, mi.lambda, mi.drop, mi.timeout_cap))
             .collect();
         let n = cores.len();
+        let n_shapes = inventory.as_ref().map_or(0, |i| i.pools.len());
         Ok(FleetCore {
             cores,
             budget,
+            inventory,
+            timeout_caps: inits.iter().map(|mi| mi.timeout_cap).collect(),
+            last_configs,
+            last_packing,
+            node_secs: vec![0.0; n_shapes],
             peak_in_use: configured,
             pool_min: budget,
             pool_max: budget,
@@ -197,8 +280,9 @@ impl FleetCore {
 
     /// Atomically activate one configuration per member (a joint
     /// decision).  Validates Σ replicas ≤ budget across the WHOLE new
-    /// fleet configuration before touching any member; on error nothing
-    /// changes.
+    /// fleet configuration — and, on a node-backed pool, that every
+    /// replica's resource vector bin-packs onto the nodes — before
+    /// touching any member; on error nothing changes.
     pub fn apply(&mut self, configs: &[(PipelineConfig, f64)]) -> Result<(), String> {
         if configs.len() != self.cores.len() {
             return Err(format!(
@@ -214,11 +298,39 @@ impl FleetCore {
                 self.budget
             ));
         }
-        for (core, (cfg, lambda)) in self.cores.iter_mut().zip(configs) {
-            core.apply_config(cfg, *lambda);
+        let packing = match &self.inventory {
+            Some(inv) => {
+                let refs: Vec<&PipelineConfig> = configs.iter().map(|(c, _)| c).collect();
+                match inv.pack(&config_demands(&refs)) {
+                    Some(p) => Some(p),
+                    None => {
+                        return Err(format!(
+                            "fleet apply does not bin-pack into the node inventory {inv}"
+                        ))
+                    }
+                }
+            }
+            None => None,
+        };
+        for (i, (core, (cfg, lambda))) in self.cores.iter_mut().zip(configs).enumerate() {
+            core.apply_config_capped(cfg, *lambda, self.timeout_caps[i]);
+        }
+        self.last_configs = configs.iter().map(|(c, _)| c.clone()).collect();
+        if packing.is_some() {
+            self.last_packing = packing;
         }
         self.note();
         Ok(())
+    }
+
+    /// Node placement of the active configurations (node pools only).
+    pub fn last_packing(&self) -> Option<&Packing> {
+        self.last_packing.as_ref()
+    }
+
+    /// The node inventory backing the pool, if any.
+    pub fn inventory(&self) -> Option<&NodeInventory> {
+        self.inventory.as_ref()
     }
 
     /// Σ configured replicas across the fleet.
@@ -240,6 +352,11 @@ impl FleetCore {
         }
         self.bought_replica_secs += dt * self.budget as f64;
         self.used_replica_secs += dt * self.configured_replicas() as f64;
+        if let Some(inv) = &self.inventory {
+            for (s, pool) in inv.pools.iter().enumerate() {
+                self.node_secs[s] += dt * pool.count as f64;
+            }
+        }
         self.last_accrual = now;
     }
 
@@ -248,20 +365,56 @@ impl FleetCore {
     /// Shrinking below the currently configured replicas is rejected —
     /// callers shrink configurations first (a joint apply under the
     /// smaller budget), then the pool.
+    ///
+    /// On a node-backed pool, `new_budget` is a replica target the
+    /// inventory converges to by adding/removing WHOLE nodes of the
+    /// elastic shape ([`NodeInventory::retarget`]); the active
+    /// configurations are re-packed onto the changed inventory in both
+    /// directions (flat node indices shift when elastic nodes come and
+    /// go), and a shrink that cannot re-pack them is rejected.
     pub fn resize_pool(&mut self, now: f64, new_budget: u32) -> Result<(), String> {
-        if new_budget == self.budget {
-            return Ok(());
-        }
         let configured = self.configured_replicas();
         if new_budget < configured {
             return Err(format!(
                 "pool resize to {new_budget} below {configured} configured replicas"
             ));
         }
+        // Resolve the target to whole nodes when the pool is an
+        // inventory (the cap moves in node-sized steps).
+        let (target, tentative) = match &self.inventory {
+            Some(inv) => {
+                let mut t = inv.clone();
+                t.retarget(new_budget.max(configured));
+                (t.replica_cap(), Some(t))
+            }
+            None => (new_budget, None),
+        };
+        if target == self.budget {
+            return Ok(());
+        }
+        let mut new_packing = None;
+        if let Some(t) = &tentative {
+            new_packing =
+                t.pack(&config_demands(&self.last_configs.iter().collect::<Vec<_>>()));
+            if new_packing.is_none() && target < self.budget {
+                return Err(format!(
+                    "pool shrink to {target} strands active replicas: the remaining \
+                     nodes cannot host them"
+                ));
+            }
+        }
         self.accrue(now);
-        self.budget = new_budget;
-        self.pool_min = self.pool_min.min(new_budget);
-        self.pool_max = self.pool_max.max(new_budget);
+        self.budget = target;
+        if let Some(t) = tentative {
+            self.inventory = Some(t);
+            // the placement is recomputed against the NEW flat node
+            // layout (growth can, in pathological cases, fail the FFD
+            // re-pack even with more capacity — then no placement is
+            // claimed rather than a stale one kept)
+            self.last_packing = new_packing;
+        }
+        self.pool_min = self.pool_min.min(target);
+        self.pool_max = self.pool_max.max(target);
         self.resizes += 1;
         Ok(())
     }
@@ -280,6 +433,19 @@ impl FleetCore {
     /// The end-of-run pool accounting snapshot (callers usually
     /// [`FleetCore::accrue`] the final instant first).
     pub fn pool_report(&self) -> PoolReport {
+        // The fungible embedding must report byte-identically to the
+        // classic scalar pool, so its node bookkeeping is suppressed.
+        let (nodes_final, node_secs) = match &self.inventory {
+            Some(inv) if !inv.is_fungible() => (
+                inv.pools.iter().map(|p| (p.shape.name.clone(), p.count)).collect(),
+                inv.pools
+                    .iter()
+                    .zip(&self.node_secs)
+                    .map(|(p, &s)| (p.shape.name.clone(), s))
+                    .collect(),
+            ),
+            _ => (Vec::new(), Vec::new()),
+        };
         PoolReport {
             budget: self.budget,
             pool_min: self.pool_min,
@@ -290,6 +456,8 @@ impl FleetCore {
             preempted: self.preempted.clone(),
             bought_replica_secs: self.bought_replica_secs,
             used_replica_secs: self.used_replica_secs,
+            nodes_final,
+            node_secs,
         }
     }
 
@@ -403,7 +571,14 @@ mod tests {
     use crate::cluster::core::FormOutcome;
     use crate::optimizer::ip::StageConfig;
 
+    use crate::fleet::nodes::{NodeInventory, PackItem};
+    use crate::resources::ResourceVec;
+
     fn config(stages: &[(usize, u32)]) -> PipelineConfig {
+        config_res(stages, ResourceVec::cpu(1.0))
+    }
+
+    fn config_res(stages: &[(usize, u32)], resources: ResourceVec) -> PipelineConfig {
         PipelineConfig {
             stages: stages
                 .iter()
@@ -416,6 +591,7 @@ mod tests {
                     cost: 1.0,
                     accuracy: 90.0,
                     latency: 0.1,
+                    resources,
                 })
                 .collect(),
             pas: 90.0,
@@ -423,6 +599,7 @@ mod tests {
             batch_sum: stages.iter().map(|s| s.0).sum(),
             objective: 0.0,
             latency_e2e: 0.2,
+            resources: ResourceVec::ZERO,
         }
     }
 
@@ -509,6 +686,7 @@ mod tests {
                 batch_sum: 0,
                 objective: 0.0,
                 latency_e2e: 0.0,
+                resources: ResourceVec::ZERO,
             },
             lambda_predicted: 10.0,
             decision_time: 0.0,
@@ -541,6 +719,7 @@ mod tests {
                 batch_sum: 0,
                 objective: 0.0,
                 latency_e2e: 0.0,
+                resources: ResourceVec::ZERO,
             },
             lambda_predicted: 10.0,
             decision_time: 0.0,
@@ -600,6 +779,127 @@ mod tests {
         // 10s × 8 + 10s × 16 = 240 bought; 30s × 4 = 120 used
         assert!((r.bought_replica_secs - 240.0).abs() < 1e-9, "{}", r.bought_replica_secs);
         assert!((r.used_replica_secs - 120.0).abs() < 1e-9, "{}", r.used_replica_secs);
+    }
+
+    fn node_inits(replicas: &[(u32, ResourceVec)]) -> Vec<MemberInit> {
+        replicas
+            .iter()
+            .map(|&(n, r)| {
+                MemberInit::new(config_res(&[(1, n)], r), 10.0, DropPolicy::new(1.0, true))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn with_nodes_packs_or_rejects_at_construction() {
+        let inv = NodeInventory::parse("2x(8c,32g,0a)+1x(16c,64g,2a)").unwrap();
+        // 2 accel replicas + 4 cpu replicas: fits (accel on the big node)
+        let inits = node_inits(&[
+            (2, ResourceVec::new(8.0, 4.0, 1.0)),
+            (4, ResourceVec::new(2.0, 2.0, 0.0)),
+        ]);
+        let f = FleetCore::with_nodes(0, Some(inv.clone()), &inits).unwrap();
+        assert_eq!(f.budget(), inv.replica_cap(), "budget is the inventory cap");
+        let packing = f.last_packing().expect("node pools track their placement");
+        assert!(packing.valid_for(f.inventory().unwrap()));
+        // 3 accel replicas cannot fit 2 accel slots
+        let over = node_inits(&[(3, ResourceVec::new(8.0, 4.0, 1.0))]);
+        assert!(FleetCore::with_nodes(0, Some(inv), &over).is_err());
+    }
+
+    #[test]
+    fn apply_packs_on_node_pools() {
+        let inv = NodeInventory::parse("2x(8c,32g,0a)+1x(16c,64g,2a)").unwrap();
+        let inits = node_inits(&[
+            (1, ResourceVec::new(8.0, 4.0, 1.0)),
+            (2, ResourceVec::new(2.0, 2.0, 0.0)),
+        ]);
+        let mut f = FleetCore::with_nodes(0, Some(inv), &inits).unwrap();
+        // within pack limits: accepted
+        f.apply(&[
+            (config_res(&[(1, 2)], ResourceVec::new(8.0, 4.0, 1.0)), 10.0),
+            (config_res(&[(1, 4)], ResourceVec::new(2.0, 2.0, 0.0)), 10.0),
+        ])
+        .unwrap();
+        assert_eq!(f.configured_replicas(), 6);
+        // 3 accel replicas over 2 accel slots: rejected atomically,
+        // nothing changes even though Σ replicas fits the budget
+        let err = f.apply(&[
+            (config_res(&[(1, 3)], ResourceVec::new(8.0, 4.0, 1.0)), 10.0),
+            (config_res(&[(1, 1)], ResourceVec::new(2.0, 2.0, 0.0)), 10.0),
+        ]);
+        assert!(err.is_err());
+        assert_eq!(f.configured_replicas(), 6, "rejected apply must not touch members");
+    }
+
+    #[test]
+    fn node_resize_moves_whole_nodes_and_guards_shrink() {
+        let inv = NodeInventory::parse("2x(4c,16g,0a)+1x(16c,64g,2a)").unwrap();
+        // one 8c accel replica on the big node
+        let inits = node_inits(&[(1, ResourceVec::new(8.0, 4.0, 1.0))]);
+        let mut f = FleetCore::with_nodes(0, Some(inv), &inits).unwrap();
+        assert_eq!(f.budget(), 2 * 4 + 16);
+        // grow toward 40: whole 4-slot nodes, never past the target
+        f.resize_pool(10.0, 40).unwrap();
+        assert_eq!(f.budget(), 40, "24 + 4×4 = 40");
+        assert_eq!(f.inventory().unwrap().pools[0].count, 6);
+        // shrink toward 16: elastic nodes drain (they host nothing)
+        f.resize_pool(20.0, 16).unwrap();
+        assert_eq!(f.budget(), 16, "all elastic nodes removed, big node fixed");
+        assert_eq!(f.inventory().unwrap().pools[0].count, 0);
+        let rep = f.pool_report();
+        assert_eq!(rep.resizes, 2);
+        assert_eq!(rep.nodes_final.len(), 2);
+        assert_eq!(rep.nodes_final[0].1, 0);
+        assert_eq!(rep.nodes_final[1].1, 1);
+        // node-seconds: shape0 held 2 nodes for 10 s then 6 for 10 s;
+        // shape1 one node for 20 s (accrual at the resize boundaries)
+        f.accrue(20.0);
+        let rep = f.pool_report();
+        assert!((rep.node_secs[0].1 - (2.0 * 10.0 + 6.0 * 10.0)).abs() < 1e-9);
+        assert!((rep.node_secs[1].1 - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_shrink_rejected_when_replicas_would_strand() {
+        // elastic 8c nodes host the replicas; the fixed shape cannot
+        let inv = NodeInventory::parse("2x(8c,32g,0a)+1x(1c,4g,0a)").unwrap();
+        let inits = node_inits(&[(2, ResourceVec::new(8.0, 4.0, 0.0))]);
+        let mut f = FleetCore::with_nodes(0, Some(inv), &inits).unwrap();
+        assert_eq!(f.budget(), 17);
+        // shrinking to 1 would remove both 8c nodes -> replicas strand
+        assert!(f.resize_pool(5.0, 2).is_err());
+        assert_eq!(f.budget(), 17, "rejected shrink leaves the pool untouched");
+    }
+
+    #[test]
+    fn fungible_inventory_reports_like_the_scalar_pool() {
+        let inits = node_inits(&[(2, ResourceVec::cpu(1.0)), (1, ResourceVec::cpu(1.0))]);
+        let mut a = FleetCore::with_nodes(0, Some(NodeInventory::fungible(4)), &inits).unwrap();
+        let mut b = FleetCore::with_nodes(4, None, &inits).unwrap();
+        a.accrue(10.0);
+        b.accrue(10.0);
+        assert_eq!(a.pool_report(), b.pool_report(), "fungible embedding is invisible");
+        // the packing itself still enforces the slot rule
+        let inv = NodeInventory::fungible(4);
+        let items =
+            [PackItem { member: 0, stage: 0, unit: ResourceVec::cpu(16.0), replicas: 5 }];
+        assert!(inv.pack(&items).is_none(), "5 replicas over 4 slots");
+    }
+
+    #[test]
+    fn timeout_caps_flow_through_apply() {
+        let mut inits = node_inits(&[(1, ResourceVec::cpu(1.0))]);
+        inits[0].timeout_cap = 0.2;
+        // λ=2, batch 8 → uncapped timeout would be 5.25 s
+        inits[0].config = config(&[(8, 1)]);
+        let mut f = FleetCore::with_nodes(4, None, &inits).unwrap();
+        assert!((f.member(0).stages[0].dispatcher.timeout() - 0.2).abs() < 1e-9);
+        f.apply(&[(config(&[(8, 1)]), 2.0)]).unwrap();
+        assert!(
+            (f.member(0).stages[0].dispatcher.timeout() - 0.2).abs() < 1e-9,
+            "the class ceiling survives reconfiguration"
+        );
     }
 
     #[test]

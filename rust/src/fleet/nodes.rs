@@ -1,0 +1,673 @@
+//! Heterogeneous node shapes and the replica bin-packer.
+//!
+//! The fleet pool stops being a fungible replica count and becomes a
+//! [`NodeInventory`]: counts of [`NodeShape`]s, each offering a
+//! capacity [`ResourceVec`].  Feasibility of a fleet configuration is
+//! then a bin-packing question — every replica's demand vector must be
+//! placed on some node without exceeding that node's capacity on ANY
+//! axis — answered by [`NodeInventory::pack`] with a first-fit-
+//! decreasing heuristic (items sorted scarcest-resource-first, nodes
+//! visited accel-poorest-first so CPU-only replicas never squat
+//! accelerator slots).
+//!
+//! **Scalar embedding.**  [`NodeInventory::fungible`] reproduces the
+//! pre-refactor pool exactly: `n` unit nodes of one `1c/0g/0a` shape,
+//! with every replica's demand coerced to one CPU slot
+//! ([`NodeInventory::demand_of`]).  Packing then succeeds iff the
+//! replica count fits the pool — byte-identical to the old scalar
+//! budget check — which is how the regression tests pin the refactor.
+//!
+//! **Elasticity.**  [`NodeInventory::retarget`] adds/removes WHOLE
+//! nodes of the elastic (cheapest-per-slot) shape toward a replica
+//! target: growth never overshoots the target (the autoscaler's cost
+//! cap holds), shrink never undershoots it.  For a target that is
+//! itself a REACHABLE cap of the inventory (some whole-node count
+//! yields exactly that replica cap), `retarget` converges to that cap
+//! from any starting count — and reachable caps are the only targets
+//! the control plane ships: the adapter resolves the autoscaler's raw
+//! proposal first and the drivers forward the adapter's resolved cap,
+//! which keeps the controller's inventory view and the fleet core's
+//! actuated one in lockstep without shipping node lists.  (Arbitrary
+//! raw targets are direction-dependent: grow parks in `(t−slots, t]`,
+//! shrink in `[t, t+slots)`.)
+
+use std::fmt;
+
+use crate::optimizer::ip::PipelineConfig;
+use crate::resources::{CostWeights, ResourceVec};
+use crate::util::json::Json;
+
+/// One node hardware variant: a name and its capacity vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeShape {
+    pub name: String,
+    pub capacity: ResourceVec,
+}
+
+/// `count` nodes of one shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodePool {
+    pub shape: NodeShape,
+    pub count: u32,
+}
+
+/// The whole cluster: counts of heterogeneous node shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeInventory {
+    pub pools: Vec<NodePool>,
+    /// Scalar-embedding mode: demands are coerced to one CPU slot each
+    /// (see [`NodeInventory::demand_of`]).
+    fungible: bool,
+}
+
+/// One replica group to place: `replicas` copies of a `unit` demand,
+/// tagged with the (member, stage) they belong to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PackItem {
+    pub member: usize,
+    pub stage: usize,
+    /// Per-replica demand vector.
+    pub unit: ResourceVec,
+    pub replicas: u32,
+}
+
+/// Where one replica landed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placement {
+    pub member: usize,
+    pub stage: usize,
+    /// Flat node index (see [`Packing::shape_of`]).
+    pub node: usize,
+}
+
+/// A successful packing: per-node occupancy plus one placement per
+/// replica.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packing {
+    /// Pool (shape) index of each flat node.
+    pub shape_of: Vec<usize>,
+    /// Resources in use on each flat node (≤ that node's capacity on
+    /// every axis — `valid_for` re-checks it).
+    pub used: Vec<ResourceVec>,
+    /// One entry per placed replica.
+    pub placements: Vec<Placement>,
+}
+
+impl Packing {
+    /// Nodes hosting at least one replica.
+    pub fn nodes_used(&self) -> usize {
+        let mut used = vec![false; self.shape_of.len()];
+        for p in &self.placements {
+            used[p.node] = true;
+        }
+        used.iter().filter(|&&b| b).count()
+    }
+
+    /// Nodes hosting at least one replica, per shape index.
+    pub fn nodes_used_per_shape(&self, n_shapes: usize) -> Vec<u32> {
+        let mut used = vec![false; self.shape_of.len()];
+        for p in &self.placements {
+            used[p.node] = true;
+        }
+        let mut out = vec![0u32; n_shapes];
+        for (ni, &u) in used.iter().enumerate() {
+            if u {
+                out[self.shape_of[ni]] += 1;
+            }
+        }
+        out
+    }
+
+    /// Every node's occupancy fits its shape's capacity on every axis.
+    pub fn valid_for(&self, inv: &NodeInventory) -> bool {
+        self.shape_of.len() == self.used.len()
+            && self
+                .used
+                .iter()
+                .zip(&self.shape_of)
+                .all(|(u, &si)| u.fits(inv.pools[si].shape.capacity))
+    }
+}
+
+impl NodeInventory {
+    /// A heterogeneous inventory.  Call [`NodeInventory::validate`]
+    /// before trusting externally-supplied shapes.
+    pub fn new(pools: Vec<NodePool>) -> NodeInventory {
+        NodeInventory { pools, fungible: false }
+    }
+
+    /// The scalar embedding: `n` unit nodes ("slot" shape, one CPU
+    /// core), every replica demand coerced to one slot.  Packing is
+    /// then exactly the pre-refactor `Σ replicas ≤ n` budget check.
+    pub fn fungible(n: u32) -> NodeInventory {
+        NodeInventory {
+            pools: vec![NodePool {
+                shape: NodeShape { name: "slot".into(), capacity: ResourceVec::cpu(1.0) },
+                count: n,
+            }],
+            fungible: true,
+        }
+    }
+
+    pub fn is_fungible(&self) -> bool {
+        self.fungible
+    }
+
+    /// The demand a replica presents to this inventory: its full vector
+    /// on real node pools, one CPU slot in the fungible embedding.
+    pub fn demand_of(&self, unit: ResourceVec) -> ResourceVec {
+        if self.fungible {
+            ResourceVec::cpu(1.0)
+        } else {
+            unit
+        }
+    }
+
+    /// Max unit (1-core) replicas one node of `shape` can host — every
+    /// replica demands at least one CPU core, so the CPU axis caps the
+    /// slot count.
+    fn slots_of(shape: &NodeShape) -> u32 {
+        ((shape.capacity.cpu_cores + 1e-9).floor() as u32).max(1)
+    }
+
+    /// Upper bound on the replicas this inventory can hold — the
+    /// replica-denominated pool size (`budget`) the solvers and the
+    /// autoscaler reason in.  Exact for the fungible embedding.
+    pub fn replica_cap(&self) -> u32 {
+        self.pools.iter().map(|p| p.count * Self::slots_of(&p.shape)).sum()
+    }
+
+    pub fn n_nodes(&self) -> u32 {
+        self.pools.iter().map(|p| p.count).sum()
+    }
+
+    /// Σ `count × capacity` across shapes.
+    pub fn total_capacity(&self) -> ResourceVec {
+        self.pools
+            .iter()
+            .fold(ResourceVec::ZERO, |a, p| a.add(p.shape.capacity.scale(p.count as f64)))
+    }
+
+    /// Can SOME node shape host one replica of this demand?  (Option
+    /// pre-filter: variants failing this can never be placed.)
+    pub fn fits_any_node(&self, unit: ResourceVec) -> bool {
+        let d = self.demand_of(unit);
+        self.pools.iter().any(|p| d.fits(p.shape.capacity))
+    }
+
+    /// Index of the elastic shape — the cheapest per replica slot under
+    /// the default cost weights, with price ties broken toward the
+    /// LEAST special shape (fewest accel slots, then least memory, then
+    /// listing order): under the CPU-only default weights every
+    /// integer-core shape prices its slots at 1.0, and the autoscaler
+    /// must never buy/sell accelerator nodes as the elastic shape just
+    /// because they were listed first.  [`NodeInventory::retarget`]
+    /// grows and shrinks this shape only.
+    pub fn elastic_idx(&self) -> usize {
+        let w = CostWeights::default();
+        let mut best = 0usize;
+        let mut best_key = (f64::MAX, f64::MAX, f64::MAX);
+        for (i, p) in self.pools.iter().enumerate() {
+            let c = p.shape.capacity;
+            let rate = c.weighted(w) / Self::slots_of(&p.shape) as f64;
+            let key = (rate, c.accel_slots, c.memory_gb);
+            if key < best_key {
+                best_key = key;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Add/remove WHOLE nodes of the elastic shape toward a replica
+    /// target: growth stops at the last whole node that keeps
+    /// `replica_cap ≤ target` (the cost cap is never overshot), shrink
+    /// stops before `replica_cap` would fall below `target`.  A target
+    /// that is a reachable cap of this inventory is converged to
+    /// exactly, from any starting count (what the control plane relies
+    /// on — see the module docs); other targets land within one
+    /// elastic node of it, direction-dependent.  Returns true when a
+    /// count changed.
+    pub fn retarget(&mut self, target: u32) -> bool {
+        if self.pools.is_empty() {
+            return false;
+        }
+        let e = self.elastic_idx();
+        let slots = Self::slots_of(&self.pools[e].shape);
+        let mut changed = false;
+        while self.replica_cap() + slots <= target {
+            self.pools[e].count += 1;
+            changed = true;
+        }
+        while self.pools[e].count > 0 && self.replica_cap() >= target + slots {
+            self.pools[e].count -= 1;
+            changed = true;
+        }
+        changed
+    }
+
+    /// Structural validation: at least one shape, nonzero counts,
+    /// finite non-negative capacities with ≥ 1 CPU core (a node that
+    /// cannot host a single 1-core replica is dead weight), non-blank
+    /// names.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pools.is_empty() {
+            return Err("node inventory has no shapes".into());
+        }
+        for p in &self.pools {
+            let name = &p.shape.name;
+            if name.trim().is_empty() {
+                return Err("node shape with a blank name".into());
+            }
+            if p.count == 0 {
+                return Err(format!("node shape {name}: zero count"));
+            }
+            let c = p.shape.capacity;
+            if !c.is_finite() {
+                return Err(format!("node shape {name}: non-finite capacity"));
+            }
+            if !c.non_negative() {
+                return Err(format!("node shape {name}: negative capacity"));
+            }
+            if c.cpu_cores < 1.0 {
+                return Err(format!("node shape {name}: needs >= 1 cpu core"));
+            }
+        }
+        Ok(())
+    }
+
+    /// First-fit-decreasing placement of every replica onto the nodes.
+    ///
+    /// Items expand to one unit per replica and are placed largest
+    /// first (accel, then cpu, then memory — scarcest axis first);
+    /// nodes are visited accel-poorest-first so CPU-only replicas fill
+    /// plain nodes before touching accelerator ones.  `None` when some
+    /// replica fits no remaining capacity.  Deterministic.
+    pub fn pack(&self, items: &[PackItem]) -> Option<Packing> {
+        let mut shape_of = Vec::new();
+        for (si, pool) in self.pools.iter().enumerate() {
+            for _ in 0..pool.count {
+                shape_of.push(si);
+            }
+        }
+        // Node visit order: scarce (accel-rich, then big) nodes last.
+        let mut order: Vec<usize> = (0..shape_of.len()).collect();
+        order.sort_by(|&a, &b| {
+            let ca = self.pools[shape_of[a]].shape.capacity;
+            let cb = self.pools[shape_of[b]].shape.capacity;
+            ca.accel_slots
+                .partial_cmp(&cb.accel_slots)
+                .unwrap()
+                .then(ca.cpu_cores.partial_cmp(&cb.cpu_cores).unwrap())
+                .then(ca.memory_gb.partial_cmp(&cb.memory_gb).unwrap())
+                .then(a.cmp(&b))
+        });
+        // Expand replicas into units, decreasing demand (FFD).
+        let mut units: Vec<(usize, ResourceVec)> = Vec::new();
+        for (ii, it) in items.iter().enumerate() {
+            let d = self.demand_of(it.unit);
+            for _ in 0..it.replicas {
+                units.push((ii, d));
+            }
+        }
+        units.sort_by(|a, b| {
+            b.1.accel_slots
+                .partial_cmp(&a.1.accel_slots)
+                .unwrap()
+                .then(b.1.cpu_cores.partial_cmp(&a.1.cpu_cores).unwrap())
+                .then(b.1.memory_gb.partial_cmp(&a.1.memory_gb).unwrap())
+                .then(a.0.cmp(&b.0))
+        });
+        let mut used = vec![ResourceVec::ZERO; shape_of.len()];
+        let mut placements = Vec::with_capacity(units.len());
+        for (ii, d) in units {
+            let node = order.iter().copied().find(|&ni| {
+                used[ni].add(d).fits(self.pools[shape_of[ni]].shape.capacity)
+            })?;
+            used[node] = used[node].add(d);
+            placements.push(Placement { member: items[ii].member, stage: items[ii].stage, node });
+        }
+        Some(Packing { shape_of, used, placements })
+    }
+
+    // ---- text / JSON IO ---------------------------------------------------
+
+    /// Parse `"4x(8c,32g,0a)+2x(16c,64g,1a)"`: `+`-separated
+    /// `COUNTx(CPUc,MEMg,ACCa)` terms.  `/` is accepted as the
+    /// component separator too, so the [`fmt::Display`] form
+    /// (`4x(8c/32g/0a)`) round-trips through the parser.  Shape names
+    /// default to the canonical capacity string.
+    pub fn parse(s: &str) -> Result<NodeInventory, String> {
+        let mut pools = Vec::new();
+        for term in s.split('+') {
+            let term = term.trim();
+            let (count, rest) = term
+                .split_once('x')
+                .ok_or_else(|| format!("node term {term:?}: expected COUNTx(CPUc,MEMg,ACCa)"))?;
+            let count: u32 = count
+                .trim()
+                .parse()
+                .map_err(|_| format!("node term {term:?}: bad count {count:?}"))?;
+            let inner = rest
+                .trim()
+                .strip_prefix('(')
+                .and_then(|r| r.strip_suffix(')'))
+                .ok_or_else(|| format!("node term {term:?}: expected (CPUc,MEMg,ACCa)"))?;
+            let parts: Vec<&str> =
+                inner.split(|ch| ch == ',' || ch == '/').map(str::trim).collect();
+            if parts.len() != 3 {
+                return Err(format!("node term {term:?}: expected three components"));
+            }
+            let num = |p: &str, suffix: char| -> Result<f64, String> {
+                p.strip_suffix(suffix)
+                    .unwrap_or(p)
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("node term {term:?}: bad component {p:?}"))
+            };
+            let capacity =
+                ResourceVec::new(num(parts[0], 'c')?, num(parts[1], 'g')?, num(parts[2], 'a')?);
+            pools.push(NodePool {
+                shape: NodeShape { name: format!("({capacity})"), capacity },
+                count,
+            });
+        }
+        let inv = NodeInventory::new(pools);
+        inv.validate()?;
+        Ok(inv)
+    }
+
+    /// JSON shape: `[{"shape": .., "cpu": .., "mem_gb": .., "accel": ..,
+    /// "count": ..}, ..]` (embedded as the fleet spec's `nodes` field).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.pools
+                .iter()
+                .map(|p| {
+                    Json::obj()
+                        .set("shape", p.shape.name.clone())
+                        .set("cpu", p.shape.capacity.cpu_cores)
+                        .set("mem_gb", p.shape.capacity.memory_gb)
+                        .set("accel", p.shape.capacity.accel_slots)
+                        .set("count", p.count as usize)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<NodeInventory, String> {
+        let arr = j.as_arr().ok_or("nodes: expected an array of shapes")?;
+        let mut pools = Vec::new();
+        for (i, pj) in arr.iter().enumerate() {
+            let name = pj
+                .get("shape")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("nodes[{i}]: missing string field 'shape'"))?
+                .to_string();
+            let num = |field: &str| -> Result<f64, String> {
+                pj.get(field)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("nodes[{i}] ({name}): missing numeric '{field}'"))
+            };
+            let capacity = ResourceVec::new(num("cpu")?, num("mem_gb")?, num("accel")?);
+            let count = pj
+                .get("count")
+                .and_then(Json::as_i64)
+                .ok_or_else(|| format!("nodes[{i}] ({name}): missing numeric 'count'"))?;
+            if !(0..=u32::MAX as i64).contains(&count) {
+                return Err(format!("nodes[{i}] ({name}): count {count} out of u32 range"));
+            }
+            pools.push(NodePool {
+                shape: NodeShape { name, capacity },
+                count: count as u32,
+            });
+        }
+        let inv = NodeInventory::new(pools);
+        inv.validate()?;
+        Ok(inv)
+    }
+}
+
+impl fmt::Display for NodeInventory {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let terms: Vec<String> =
+            self.pools.iter().map(|p| format!("{}x({})", p.count, p.shape.capacity)).collect();
+        write!(f, "{}", terms.join("+"))
+    }
+}
+
+/// The pack items of a joint fleet configuration: one per (member,
+/// stage), `replicas` copies of the stage's per-replica demand.
+pub fn config_demands(configs: &[&PipelineConfig]) -> Vec<PackItem> {
+    let mut items = Vec::new();
+    for (m, cfg) in configs.iter().enumerate() {
+        for (s, sc) in cfg.stages.iter().enumerate() {
+            items.push(PackItem {
+                member: m,
+                stage: s,
+                unit: sc.resources,
+                replicas: sc.replicas,
+            });
+        }
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, prop_assert};
+
+    fn item(member: usize, unit: ResourceVec, replicas: u32) -> PackItem {
+        PackItem { member, stage: 0, unit, replicas }
+    }
+
+    #[test]
+    fn parse_roundtrips_and_validates() {
+        let inv = NodeInventory::parse("4x(8c,32g,0a)+2x(16c,64g,1a)").unwrap();
+        assert_eq!(inv.pools.len(), 2);
+        assert_eq!(inv.n_nodes(), 6);
+        assert_eq!(inv.replica_cap(), 4 * 8 + 2 * 16);
+        assert_eq!(inv.to_string(), "4x(8c/32g/0a)+2x(16c/64g/1a)");
+        assert!(!inv.is_fungible());
+        // the Display form round-trips through the parser ('/' accepted
+        // alongside ','), and so does the JSON form
+        assert_eq!(NodeInventory::parse(&inv.to_string()).unwrap(), inv);
+        let back = NodeInventory::from_json(&inv.to_json()).unwrap();
+        assert_eq!(inv, back);
+        // rejects garbage
+        assert!(NodeInventory::parse("").is_err());
+        assert!(NodeInventory::parse("4x8c,32g,0a").is_err());
+        assert!(NodeInventory::parse("x(8c,32g,0a)").is_err());
+        assert!(NodeInventory::parse("0x(8c,32g,0a)").is_err(), "zero count");
+        assert!(NodeInventory::parse("2x(0c,32g,0a)").is_err(), "sub-1-core node");
+        assert!(NodeInventory::parse("2x(8c,-1g,0a)").is_err(), "negative capacity");
+    }
+
+    #[test]
+    fn fungible_embedding_is_the_scalar_budget_check() {
+        let inv = NodeInventory::fungible(4);
+        assert!(inv.is_fungible());
+        assert_eq!(inv.replica_cap(), 4);
+        // demands are coerced to one slot regardless of their vector
+        let heavy = ResourceVec::new(16.0, 64.0, 2.0);
+        assert_eq!(inv.demand_of(heavy), ResourceVec::cpu(1.0));
+        assert!(inv.fits_any_node(heavy));
+        // packs iff Σ replicas ≤ n, exactly the old budget rule
+        assert!(inv.pack(&[item(0, heavy, 2), item(1, ResourceVec::cpu(1.0), 2)]).is_some());
+        assert!(inv.pack(&[item(0, heavy, 3), item(1, ResourceVec::cpu(1.0), 2)]).is_none());
+    }
+
+    #[test]
+    fn accel_replicas_land_only_on_accel_nodes() {
+        let inv = NodeInventory::parse("2x(8c,32g,0a)+1x(16c,64g,2a)").unwrap();
+        let items = [
+            item(0, ResourceVec::new(8.0, 2.0, 1.0), 2), // accel-demanding
+            item(1, ResourceVec::new(1.0, 1.0, 0.0), 6), // cpu-only
+        ];
+        let p = inv.pack(&items).unwrap();
+        assert!(p.valid_for(&inv));
+        for pl in &p.placements {
+            if pl.member == 0 {
+                assert_eq!(inv.pools[p.shape_of[pl.node]].shape.capacity.accel_slots, 2.0);
+            }
+        }
+        // cpu-only replicas prefer the plain nodes (accel-poorest first)
+        let per_shape = p.nodes_used_per_shape(2);
+        assert!(per_shape[0] >= 1, "plain nodes host the cpu-only replicas: {per_shape:?}");
+        // a cpu-only pool cannot host the accel demand at all
+        let plain = NodeInventory::parse("8x(8c,32g,0a)").unwrap();
+        assert!(!plain.fits_any_node(ResourceVec::new(8.0, 2.0, 1.0)));
+        assert!(plain.pack(&items).is_none());
+    }
+
+    #[test]
+    fn elastic_shape_never_ties_onto_special_hardware() {
+        // both shapes price slots at 1.0 under the CPU-only default
+        // weights — the accel shape must lose the tie even when listed
+        // first, and listing order must not matter
+        let accel_first = NodeInventory::parse("2x(16c,64g,2a)+4x(8c,32g,0a)").unwrap();
+        assert_eq!(accel_first.elastic_idx(), 1, "plain shape wins the price tie");
+        let plain_first = NodeInventory::parse("4x(8c,32g,0a)+2x(16c,64g,2a)").unwrap();
+        assert_eq!(plain_first.elastic_idx(), 0);
+    }
+
+    #[test]
+    fn retarget_moves_whole_elastic_nodes_convergently() {
+        let base = NodeInventory::parse("2x(4c,16g,0a)+1x(16c,64g,2a)").unwrap();
+        assert_eq!(base.elastic_idx(), 0, "4c shape is cheapest per slot");
+        assert_eq!(base.replica_cap(), 24);
+        // grow toward 35: adds whole 4-slot nodes, never past the target
+        let mut grown = base.clone();
+        assert!(grown.retarget(35));
+        assert_eq!(grown.replica_cap(), 32, "8 - 4k ≤ 35 < next whole node");
+        assert_eq!(grown.pools[0].count, 4);
+        // shrink back toward 10: removes whole elastic nodes while the
+        // cap stays ≥ the target (the fixed big node keeps 16 slots)
+        let mut shrunk = grown.clone();
+        assert!(shrunk.retarget(10));
+        assert_eq!(shrunk.replica_cap(), 16, "every elastic node removed, big node fixed");
+        assert_eq!(shrunk.pools[0].count, 0);
+        // convergence on a REACHABLE cap (16 = zero elastic nodes):
+        // any path ending at the same reachable target agrees
+        let mut direct = base.clone();
+        direct.retarget(10);
+        assert_eq!(direct, shrunk);
+        let mut via_cap = grown.clone();
+        via_cap.retarget(16);
+        assert_eq!(via_cap, shrunk, "reachable caps converge exactly");
+        // no-op when the target is already within one node
+        let mut hold = base.clone();
+        assert!(!hold.retarget(24));
+        assert_eq!(hold, base);
+    }
+
+    #[test]
+    fn prop_pack_never_exceeds_capacity_on_any_axis() {
+        check("pack respects node capacity", 120, |g| {
+            // random 1-3 shape inventory
+            let n_shapes = g.usize(1, 4);
+            let pools: Vec<NodePool> = (0..n_shapes)
+                .map(|i| NodePool {
+                    shape: NodeShape {
+                        name: format!("s{i}"),
+                        capacity: ResourceVec::new(
+                            g.usize(1, 33) as f64,
+                            g.usize(0, 129) as f64,
+                            g.usize(0, 5) as f64,
+                        ),
+                    },
+                    count: g.usize(1, 6) as u32,
+                })
+                .collect();
+            let inv = NodeInventory::new(pools);
+            let items: Vec<PackItem> = (0..g.usize(1, 8))
+                .map(|m| {
+                    item(
+                        m,
+                        ResourceVec::new(
+                            g.usize(1, 17) as f64,
+                            g.usize(0, 65) as f64,
+                            g.usize(0, 3) as f64,
+                        ),
+                        g.usize(1, 5) as u32,
+                    )
+                })
+                .collect();
+            let total_replicas: u32 = items.iter().map(|i| i.replicas).sum();
+            match inv.pack(&items) {
+                None => Ok(()), // infeasible is a legal answer
+                Some(p) => {
+                    prop_assert(p.valid_for(&inv), "a node exceeded capacity on some axis")?;
+                    prop_assert(
+                        p.placements.len() == total_replicas as usize,
+                        "every replica must be placed exactly once",
+                    )?;
+                    // accel-demanding replicas sit on accel-capable nodes
+                    for pl in &p.placements {
+                        let it = items.iter().find(|i| i.member == pl.member).unwrap();
+                        if it.unit.accel_slots > 0.0 {
+                            prop_assert(
+                                inv.pools[p.shape_of[pl.node]].shape.capacity.accel_slots
+                                    >= it.unit.accel_slots,
+                                "accel replica on an accel-less node",
+                            )?;
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pack_is_deterministic() {
+        let inv = NodeInventory::parse("3x(8c,32g,0a)+2x(16c,64g,2a)").unwrap();
+        let items = [
+            item(0, ResourceVec::new(2.0, 4.0, 0.0), 5),
+            item(1, ResourceVec::new(8.0, 16.0, 1.0), 2),
+            item(2, ResourceVec::new(1.0, 2.0, 0.0), 7),
+        ];
+        assert_eq!(inv.pack(&items), inv.pack(&items));
+    }
+
+    #[test]
+    fn config_demands_expand_stages() {
+        use crate::optimizer::ip::{PipelineConfig, StageConfig};
+        let cfg = PipelineConfig {
+            stages: vec![
+                StageConfig {
+                    variant_idx: 0,
+                    variant_key: "a".into(),
+                    batch: 1,
+                    replicas: 2,
+                    cost: 2.0,
+                    accuracy: 50.0,
+                    latency: 0.1,
+                    resources: ResourceVec::cpu(1.0),
+                },
+                StageConfig {
+                    variant_idx: 1,
+                    variant_key: "b".into(),
+                    batch: 2,
+                    replicas: 1,
+                    cost: 8.0,
+                    accuracy: 60.0,
+                    latency: 0.2,
+                    resources: ResourceVec::new(8.0, 2.0, 1.0),
+                },
+            ],
+            pas: 30.0,
+            cost: 10.0,
+            batch_sum: 3,
+            objective: 0.0,
+            latency_e2e: 0.3,
+            resources: ResourceVec::new(10.0, 4.0, 1.0),
+        };
+        let items = config_demands(&[&cfg]);
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].replicas, 2);
+        assert_eq!(items[1].unit.accel_slots, 1.0);
+        assert_eq!(items[1].stage, 1);
+    }
+}

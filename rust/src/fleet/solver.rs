@@ -26,6 +26,13 @@
 //!   priority classes (higher class claims the pool first); with one
 //!   distinct class it IS [`solve_fleet`].
 //!
+//! * [`solve_fleet_packed`] — the same share machinery over a
+//!   heterogeneous [`NodeInventory`]: options are pre-filtered to
+//!   node-placeable variants, the result must first-fit-decreasing
+//!   bin-pack onto the nodes, and packing failures walk the budget
+//!   down (memoized member evaluations make repair steps cheap).  On a
+//!   fungible inventory it is byte-identical to [`solve_fleet_tiers`].
+//!
 //! [`FleetAdapter`] packages the allocator as a [`FleetController`]
 //! (per-member predictors → joint solve → one [`Decision`] per member)
 //! for the fleet drivers in `simulator::sim` and `serving::engine` —
@@ -49,12 +56,15 @@ use std::time::Instant;
 
 use crate::coordinator::adapter::{AdapterConfig, Decision};
 use crate::fleet::autoscaler::{Autoscaler, AutoscalerConfig};
+use crate::fleet::nodes::{config_demands, NodeInventory, Packing};
+use crate::fleet::spec::SlaClass;
 use crate::models::accuracy::AccuracyMetric;
 use crate::models::pipelines::PipelineSpec;
 use crate::optimizer::ip::{self, materialize, PipelineConfig, Problem, StageConfig};
 use crate::optimizer::options::StageOption;
 use crate::predictor::Predictor;
 use crate::profiler::profile::PipelineProfiles;
+use crate::resources::ResourceVec;
 
 /// Exact single-pipeline solve under a total-replica budget.  `None`
 /// when no SLA-feasible configuration fits `budget` replicas.
@@ -227,6 +237,7 @@ pub fn fallback_under_budget(p: &Problem, budget: u32) -> PipelineConfig {
     let mut batch_sum = 0usize;
     let mut lat = 0.0;
     let mut pas_frac = 1.0;
+    let mut resources = ResourceVec::ZERO;
     for (pk, &n) in picks.iter().zip(&replicas) {
         stages.push(StageConfig {
             variant_idx: pk.vi,
@@ -236,12 +247,14 @@ pub fn fallback_under_budget(p: &Problem, budget: u32) -> PipelineConfig {
             cost: n as f64 * pk.vp.cost_per_replica(),
             accuracy: pk.vp.variant.accuracy,
             latency: pk.vp.latency.latency(pk.batch),
+            resources: pk.vp.resources_per_replica(),
         });
         cost += n as f64 * pk.vp.cost_per_replica();
         batch_sum += pk.batch;
         lat += pk.vp.latency.latency(pk.batch)
             + crate::queueing::worst_case_delay(pk.batch, p.lambda);
         pas_frac *= pk.vp.variant.accuracy / 100.0;
+        resources = resources.add(pk.vp.resources_per_replica().scale(n as f64));
     }
     PipelineConfig {
         stages,
@@ -250,6 +263,7 @@ pub fn fallback_under_budget(p: &Problem, budget: u32) -> PipelineConfig {
         batch_sum,
         objective: w.alpha * 100.0 * pas_frac - w.beta * cost - w.delta * batch_sum as f64,
         latency_e2e: lat,
+        resources,
     }
 }
 
@@ -279,6 +293,9 @@ pub struct FleetAllocation {
     pub replicas_used: u32,
     /// Σ member objectives (the quantity the greedy maximizes).
     pub total_objective: f64,
+    /// Node placement of every replica — `Some` only for
+    /// [`solve_fleet_packed`] results (the scalar solvers never pack).
+    pub packing: Option<Packing>,
 }
 
 /// The even-split baseline shares: every member starts at its stage
@@ -326,24 +343,40 @@ pub fn allocate_at(
         replicas_used: members.iter().map(|m| m.replicas).sum(),
         total_objective: members.iter().map(|m| m.config.objective).sum(),
         members,
+        packing: None,
     }
 }
 
 /// Memoized member evaluation used by the greedy passes:
-/// (member, share) → objective.
+/// (member, share) → (config, solved), objective read off the config.
+fn eval_cached(
+    problems: &[Problem],
+    options: &[Vec<Vec<StageOption>>],
+    cache: &mut [HashMap<u32, (PipelineConfig, bool)>],
+    i: usize,
+    b: u32,
+) -> (PipelineConfig, bool) {
+    if let Some((cfg, solved)) = cache[i].get(&b) {
+        return (cfg.clone(), *solved);
+    }
+    let (cfg, solved) = eval_member(&problems[i], &options[i], b);
+    cache[i].insert(b, (cfg.clone(), solved));
+    (cfg, solved)
+}
+
 fn obj_at(
     problems: &[Problem],
     options: &[Vec<Vec<StageOption>>],
-    cache: &mut [HashMap<u32, (f64, bool)>],
+    cache: &mut [HashMap<u32, (PipelineConfig, bool)>],
     i: usize,
     b: u32,
 ) -> f64 {
-    if let Some(&(o, _)) = cache[i].get(&b) {
-        return o;
+    if let Some((cfg, _)) = cache[i].get(&b) {
+        return cfg.objective;
     }
     let (cfg, solved) = eval_member(&problems[i], &options[i], b);
     let o = cfg.objective;
-    cache[i].insert(b, (o, solved));
+    cache[i].insert(b, (cfg, solved));
     o
 }
 
@@ -355,7 +388,7 @@ fn obj_at(
 fn greedy_grant(
     problems: &[Problem],
     options: &[Vec<Vec<StageOption>>],
-    cache: &mut [HashMap<u32, (f64, bool)>],
+    cache: &mut [HashMap<u32, (PipelineConfig, bool)>],
     min_b: &[Option<u32>],
     members: &[usize],
     shares: &mut [u32],
@@ -396,38 +429,127 @@ fn greedy_grant(
 }
 
 /// Shared prologue of the joint solvers: per-member floors (one
-/// replica per stage), Pareto-pruned option sets, the memoized
-/// evaluation cache and the min-feasible lookahead targets, plus the
-/// replicas left after the floors.  `None` when `budget` cannot cover
-/// the floors.
+/// replica per stage), Pareto-pruned option sets (filtered to
+/// node-placeable options when an inventory is given), the memoized
+/// evaluation cache and the min-feasible lookahead targets.  `None`
+/// when `budget` cannot cover the floors.
 struct GreedyCtx {
     floors: Vec<u32>,
     options: Vec<Vec<Vec<StageOption>>>,
-    cache: Vec<HashMap<u32, (f64, bool)>>,
+    cache: Vec<HashMap<u32, (PipelineConfig, bool)>>,
     min_b: Vec<Option<u32>>,
-    remaining: u32,
 }
 
-fn greedy_ctx(problems: &[Problem], budget: u32) -> Option<GreedyCtx> {
+fn greedy_ctx(
+    problems: &[Problem],
+    budget: u32,
+    inv: Option<&NodeInventory>,
+) -> Option<GreedyCtx> {
     let n = problems.len();
     let floors: Vec<u32> = problems.iter().map(|p| p.profiles.stages.len() as u32).collect();
     let floor_total: u32 = floors.iter().sum();
     if budget < floor_total {
         return None;
     }
-    let options: Vec<Vec<Vec<StageOption>>> =
-        problems.iter().map(|p| p.stage_options()).collect();
+    let options: Vec<Vec<Vec<StageOption>>> = problems
+        .iter()
+        .map(|p| {
+            let mut os = p.stage_options();
+            if let Some(inv) = inv {
+                // A variant no node shape can host one replica of can
+                // never be placed — drop it before the solve.
+                for stage in os.iter_mut() {
+                    stage.retain(|o| inv.fits_any_node(o.resources));
+                }
+            }
+            os
+        })
+        .collect();
     // Lookahead targets: each member's minimum feasible allocation, so
     // the greedy can see across an infeasibility threshold.
     let min_b: Vec<Option<u32>> =
         (0..n).map(|i| min_feasible_replicas(&problems[i], &options[i], budget)).collect();
-    Some(GreedyCtx {
-        floors,
-        options,
-        cache: vec![HashMap::new(); n],
-        min_b,
-        remaining: budget - floor_total,
-    })
+    Some(GreedyCtx { floors, options, cache: vec![HashMap::new(); n], min_b })
+}
+
+/// The share computation both joint solvers run: a single priority
+/// class takes the plain greedy with the even-split floor; several
+/// classes take the lexicographic tier loop (no even-split floor —
+/// precedence is the point).  Reusable across budgets on one ctx (the
+/// packed solver walks budgets downward re-using the eval cache).
+fn solve_shares(
+    problems: &[Problem],
+    ctx: &mut GreedyCtx,
+    budget: u32,
+    priorities: &[u32],
+) -> Vec<u32> {
+    let n = problems.len();
+    let floor_total: u32 = ctx.floors.iter().sum();
+    let mut shares = ctx.floors.clone();
+    let mut remaining = budget - floor_total;
+    if priorities.iter().all(|&p| p == priorities[0]) {
+        let all: Vec<usize> = (0..n).collect();
+        greedy_grant(
+            problems, &ctx.options, &mut ctx.cache, &ctx.min_b, &all, &mut shares,
+            &mut remaining,
+        );
+        // Never worse than the even split: compute both, keep the better.
+        let even = even_shares(budget, &ctx.floors);
+        let greedy_total: f64 =
+            (0..n).map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, i, shares[i])).sum();
+        let even_total: f64 =
+            (0..n).map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, i, even[i])).sum();
+        if greedy_total + 1e-12 >= even_total {
+            shares
+        } else {
+            even
+        }
+    } else {
+        let mut classes: Vec<u32> = priorities.to_vec();
+        classes.sort_unstable();
+        classes.dedup();
+        for &class in classes.iter().rev() {
+            let tier: Vec<usize> = (0..n).filter(|&i| priorities[i] == class).collect();
+            greedy_grant(
+                problems,
+                &ctx.options,
+                &mut ctx.cache,
+                &ctx.min_b,
+                &tier,
+                &mut shares,
+                &mut remaining,
+            );
+            if remaining == 0 {
+                break;
+            }
+        }
+        shares
+    }
+}
+
+/// Materialize an allocation for a share vector through the ctx's
+/// memoized evaluations (same outcome as [`allocate_at`], no re-solve).
+fn allocate_from_ctx(
+    problems: &[Problem],
+    ctx: &mut GreedyCtx,
+    shares: &[u32],
+) -> FleetAllocation {
+    let members: Vec<MemberAllocation> = shares
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| {
+            let (config, solved) = eval_cached(problems, &ctx.options, &mut ctx.cache, i, b);
+            let replicas = config.total_replicas();
+            MemberAllocation { budget: b, config, replicas, solved }
+        })
+        .collect();
+    FleetAllocation {
+        budget: shares.iter().sum(),
+        replicas_used: members.iter().map(|m| m.replicas).sum(),
+        total_objective: members.iter().map(|m| m.config.objective).sum(),
+        members,
+        packing: None,
+    }
 }
 
 /// Greedy marginal-gain joint solve.  `None` only when `budget` cannot
@@ -442,26 +564,12 @@ pub fn solve_fleet(problems: &[Problem], budget: u32) -> Option<FleetAllocation>
             budget,
             replicas_used: 0,
             total_objective: 0.0,
+            packing: None,
         });
     }
-    let mut ctx = greedy_ctx(problems, budget)?;
-
-    let mut shares = ctx.floors.clone();
-    let mut remaining = ctx.remaining;
-    let all: Vec<usize> = (0..n).collect();
-    greedy_grant(
-        problems, &ctx.options, &mut ctx.cache, &ctx.min_b, &all, &mut shares, &mut remaining,
-    );
-
-    // Never worse than the even split: compute both, keep the better.
-    let even = even_shares(budget, &ctx.floors);
-    let greedy_total: f64 =
-        (0..n).map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, i, shares[i])).sum();
-    let even_total: f64 =
-        (0..n).map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, i, even[i])).sum();
-    let final_shares = if greedy_total + 1e-12 >= even_total { shares } else { even };
-
-    let mut alloc = allocate_at(problems, &ctx.options, &final_shares);
+    let mut ctx = greedy_ctx(problems, budget, None)?;
+    let shares = solve_shares(problems, &mut ctx, budget, &vec![0; n]);
+    let mut alloc = allocate_from_ctx(problems, &mut ctx, &shares);
     alloc.budget = budget;
     debug_assert!(alloc.replicas_used <= budget, "fleet allocation exceeds budget");
     Some(alloc)
@@ -488,34 +596,93 @@ pub fn solve_fleet_tiers(
     if n == 0 || priorities.iter().all(|&p| p == priorities[0]) {
         return solve_fleet(problems, budget);
     }
-    let mut ctx = greedy_ctx(problems, budget)?;
-
-    let mut classes: Vec<u32> = priorities.to_vec();
-    classes.sort_unstable();
-    classes.dedup();
-
-    let mut shares = ctx.floors.clone();
-    let mut remaining = ctx.remaining;
-    for &class in classes.iter().rev() {
-        let tier: Vec<usize> = (0..n).filter(|&i| priorities[i] == class).collect();
-        greedy_grant(
-            problems,
-            &ctx.options,
-            &mut ctx.cache,
-            &ctx.min_b,
-            &tier,
-            &mut shares,
-            &mut remaining,
-        );
-        if remaining == 0 {
-            break;
-        }
-    }
-
-    let mut alloc = allocate_at(problems, &ctx.options, &shares);
+    let mut ctx = greedy_ctx(problems, budget, None)?;
+    let shares = solve_shares(problems, &mut ctx, budget, priorities);
+    let mut alloc = allocate_from_ctx(problems, &mut ctx, &shares);
     alloc.budget = budget;
     debug_assert!(alloc.replicas_used <= budget, "tiered allocation exceeds budget");
     Some(alloc)
+}
+
+/// The bin-packing joint solve over a heterogeneous node inventory.
+///
+/// Same tiered/greedy share machinery as [`solve_fleet_tiers`], with
+/// the pool constraint upgraded from `Σ replicas ≤ budget` to "every
+/// replica's resource vector places onto some node" (first-fit-
+/// decreasing, [`NodeInventory::pack`]):
+///
+/// 1. options are pre-filtered to variants at least one node shape can
+///    host (accel-demanding variants vanish on CPU-only pools);
+/// 2. the share solve runs at the inventory's replica cap and the
+///    result is packed; on packing failure the budget steps down one
+///    replica and re-solves (the memoized member evaluations carry
+///    over, so repair steps are cheap);
+/// 3. the last resort — one lightest replica per stage — is what
+///    [`FleetAdapter::with_tuning`] validates packable up front, so
+///    adapter callers never see `None` here.
+///
+/// On a [`NodeInventory::fungible`] inventory every step degenerates to
+/// the scalar path: no option is filtered, the first pack succeeds, and
+/// the allocation is byte-identical to [`solve_fleet_tiers`] at
+/// `budget = n` (pinned by `tests/fleet_binpack.rs`).
+pub fn solve_fleet_packed(
+    problems: &[Problem],
+    inv: &NodeInventory,
+    priorities: &[u32],
+) -> Option<FleetAllocation> {
+    let n = problems.len();
+    assert_eq!(priorities.len(), n, "one priority class per member");
+    let cap = inv.replica_cap();
+    if n == 0 {
+        return Some(FleetAllocation {
+            members: Vec::new(),
+            budget: cap,
+            replicas_used: 0,
+            total_objective: 0.0,
+            packing: inv.pack(&[]),
+        });
+    }
+    let mut ctx = greedy_ctx(problems, cap, Some(inv))?;
+    let floor_total: u32 = ctx.floors.iter().sum();
+    let mut b = cap;
+    loop {
+        let shares = solve_shares(problems, &mut ctx, b, priorities);
+        let mut alloc = allocate_from_ctx(problems, &mut ctx, &shares);
+        let refs: Vec<&PipelineConfig> = alloc.members.iter().map(|m| &m.config).collect();
+        if let Some(packing) = inv.pack(&config_demands(&refs)) {
+            alloc.budget = b;
+            alloc.packing = Some(packing);
+            debug_assert!(alloc.replicas_used <= b, "packed allocation exceeds budget");
+            return Some(alloc);
+        }
+        if b == floor_total {
+            break;
+        }
+        // Step below what the failed allocation actually used: any
+        // budget ≥ replicas_used could reproduce the same unpackable
+        // shares, and the replica cap is a loose CPU-slot bound for
+        // fat replicas — single-replica steps from it would crawl.
+        b = alloc.replicas_used.saturating_sub(1).clamp(floor_total, b - 1);
+    }
+    // Last resort: the one-replica-per-stage lightest-variant floor.
+    let members: Vec<MemberAllocation> = problems
+        .iter()
+        .zip(&ctx.floors)
+        .map(|(p, &f)| {
+            let config = fallback_under_budget(p, f);
+            let replicas = config.total_replicas();
+            MemberAllocation { budget: f, config, replicas, solved: false }
+        })
+        .collect();
+    let refs: Vec<&PipelineConfig> = members.iter().map(|m| &m.config).collect();
+    let packing = inv.pack(&config_demands(&refs))?;
+    Some(FleetAllocation {
+        budget: floor_total,
+        replicas_used: members.iter().map(|m| m.replicas).sum(),
+        total_objective: members.iter().map(|m| m.config.objective).sum(),
+        members,
+        packing: Some(packing),
+    })
 }
 
 /// Exhaustive best split for tiny fleets (the greedy's cross-check):
@@ -612,6 +779,20 @@ pub trait FleetController {
     fn preempt(&mut self, _now: f64, _observed: &[f64]) -> Option<FleetPreemption> {
         None
     }
+
+    /// The heterogeneous node inventory this controller budgets
+    /// against, queried once by the drivers to build the fleet core.
+    /// `None` (the default) = the classic fungible replica pool.
+    fn node_inventory(&self) -> Option<NodeInventory> {
+        None
+    }
+
+    /// Per-member SLA classes, queried once by the drivers to key the
+    /// drop policy and batch-timeout ceilings.  `None` (the default) =
+    /// the pre-class behavior (verbatim SLAs, uncapped timeouts).
+    fn sla_classes(&self) -> Option<Vec<SlaClass>> {
+        None
+    }
 }
 
 /// Preemption knobs (see [`FleetAdapter::preempt`]).
@@ -673,10 +854,25 @@ pub struct FleetTuning {
     /// relatively less than this keep their cached configuration and
     /// share (0 = always full joint solve).
     pub resolve_threshold: f64,
+    /// Heterogeneous node inventory backing the pool; `None` = the
+    /// classic fungible replica pool.  When set, the budget becomes the
+    /// inventory's replica cap, joint solves bin-pack replicas onto the
+    /// nodes ([`solve_fleet_packed`]) and the autoscaler's resizes move
+    /// WHOLE nodes of the elastic shape.
+    pub nodes: Option<NodeInventory>,
+    /// Per-member SLA classes (latency-critical vs throughput); `None`
+    /// = classless legacy behavior.  Classes key the drop-threshold
+    /// scale, the batch-timeout ceiling and preemption eligibility:
+    /// only latency-critical members receive, and throughput members
+    /// donate to latency-critical bursters at priorities ≤ the
+    /// burster's (first in the donor order), so class policy fires
+    /// even when every priority is equal.
+    pub sla_classes: Option<Vec<SlaClass>>,
 }
 
 /// The last joint solution, kept for incremental re-solves and the
 /// preemption fast path.
+#[derive(Clone)]
 struct SolveCache {
     /// Predicted λ per member the solution was computed for (≥ 0.5).
     lambdas: Vec<f64>,
@@ -710,6 +906,11 @@ pub struct FleetAdapter {
     /// Relative λ-move threshold for incremental re-solves (0 = always
     /// run the full joint solve).
     pub resolve_threshold: f64,
+    /// Heterogeneous node inventory (None = fungible pool).  Tracks the
+    /// autoscaler's retargets; `budget` always equals its replica cap.
+    pub inventory: Option<NodeInventory>,
+    /// Per-member SLA classes (None = classless legacy behavior).
+    pub sla_classes: Option<Vec<SlaClass>>,
     /// Telemetry: how many decisions ran the full joint solve vs the
     /// incremental per-member path.
     pub full_solves: usize,
@@ -762,6 +963,8 @@ impl FleetAdapter {
             autoscaler: None,
             preemption: None,
             resolve_threshold: 0.0,
+            inventory: None,
+            sla_classes: None,
             full_solves: 0,
             incremental_solves: 0,
             cache: None,
@@ -770,18 +973,53 @@ impl FleetAdapter {
         })
     }
 
-    /// Apply an elastic-control-plane tuning bundle.  Errors when the
-    /// priority vector length disagrees with the member count.
+    /// Apply an elastic-control-plane tuning bundle.  Errors when a
+    /// per-member vector length disagrees with the member count, or
+    /// when a node inventory cannot host the fleet at all (replica cap
+    /// below the stage floor, or the one-replica-per-stage
+    /// lightest-variant floor — the packed solver's last resort — does
+    /// not pack).
     pub fn with_tuning(mut self, tuning: FleetTuning) -> Result<FleetAdapter, String> {
+        let n = self.specs.len();
         if let Some(prio) = tuning.priorities {
-            if prio.len() != self.specs.len() {
+            if prio.len() != n {
                 return Err(format!(
-                    "fleet tuning: {} priorities for {} members",
+                    "fleet tuning: {} priorities for {n} members",
                     prio.len(),
-                    self.specs.len()
                 ));
             }
             self.priorities = prio;
+        }
+        if let Some(classes) = tuning.sla_classes {
+            if classes.len() != n {
+                return Err(format!(
+                    "fleet tuning: {} SLA classes for {n} members",
+                    classes.len(),
+                ));
+            }
+            self.sla_classes = Some(classes);
+        }
+        if let Some(inv) = tuning.nodes {
+            inv.validate().map_err(|e| format!("fleet tuning: {e}"))?;
+            let cap = inv.replica_cap();
+            let floor = self.stage_floor();
+            if cap < floor {
+                return Err(format!(
+                    "node inventory caps {cap} replicas, below the stage floor {floor}"
+                ));
+            }
+            // The packed solver's last resort — one lightest replica
+            // per stage — must pack, so decide() can never come back
+            // empty-handed.  Every later inventory change (the
+            // autoscaler's retargets) re-checks this before committing.
+            if !self.floor_packs(&inv) {
+                return Err(
+                    "node inventory cannot host the fleet's one-replica-per-stage floor"
+                        .into(),
+                );
+            }
+            self.budget = cap;
+            self.inventory = Some(inv);
         }
         self.autoscaler = tuning.autoscaler.map(Autoscaler::new);
         self.preemption = tuning.preemption;
@@ -824,13 +1062,59 @@ impl FleetAdapter {
         }
     }
 
+    /// The option sets member `i` may choose from — node-placeability
+    /// filtered when an inventory is attached (the packed solver's
+    /// pre-filter, applied identically on the incremental and
+    /// preemption paths so a fast-path re-solve can never pick a
+    /// variant the nodes cannot host).
+    fn member_options(&self, p: &Problem) -> Vec<Vec<StageOption>> {
+        let mut os = p.stage_options();
+        if let Some(inv) = &self.inventory {
+            for stage in os.iter_mut() {
+                stage.retain(|o| inv.fits_any_node(o.resources));
+            }
+        }
+        os
+    }
+
+    /// Does the one-lightest-replica-per-stage floor — the packed
+    /// solver's last resort — bin-pack into `inv`?  Checked before
+    /// EVERY inventory the adapter adopts ([`FleetAdapter::with_tuning`]
+    /// and each autoscaler retarget), which is what makes the
+    /// `solve_fleet_packed(..).expect(..)` in the decide path sound.
+    fn floor_packs(&self, inv: &NodeInventory) -> bool {
+        let floor_configs: Vec<PipelineConfig> = (0..self.specs.len())
+            .map(|i| {
+                let p = self.demand_problem(i, 0.5);
+                fallback_under_budget(&p, self.specs[i].n_stages() as u32)
+            })
+            .collect();
+        let refs: Vec<&PipelineConfig> = floor_configs.iter().collect();
+        inv.pack(&config_demands(&refs)).is_some()
+    }
+
+    /// Do these per-member configurations fit the pool?  Fungible /
+    /// legacy pools never re-check here (shares already enforce the
+    /// scalar budget); node pools run the bin-packer.
+    fn packs(&self, configs: &[PipelineConfig]) -> bool {
+        match &self.inventory {
+            Some(inv) => {
+                let refs: Vec<&PipelineConfig> = configs.iter().collect();
+                inv.pack(&config_demands(&refs)).is_some()
+            }
+            None => true,
+        }
+    }
+
     /// Incremental path: when only a strict subset of members moved
     /// (relative λ change ≤ `resolve_threshold` for the rest), keep
     /// everyone's share fixed and re-run the budget-capped solve for
     /// the moved members alone.  Shares are unchanged, so the joint
-    /// budget invariant holds trivially.  Returns `None` when the full
-    /// joint solve is required (feature off, no/stale cache, pool
-    /// resized, or every member moved).
+    /// budget invariant holds trivially; on a node pool the re-solved
+    /// configurations are additionally re-packed, and a packing failure
+    /// falls back to the full joint solve.  Returns `None` when the
+    /// full joint solve is required (feature off, no/stale cache, pool
+    /// resized, every member moved, or repack failed).
     fn try_incremental(&mut self, lambdas: &[f64], t0: Instant) -> Option<Vec<Decision>> {
         if self.resolve_threshold <= 0.0 {
             return None;
@@ -852,6 +1136,9 @@ impl FleetAdapter {
             }
         }
         let mut cache = self.cache.take().expect("checked above");
+        // Only node pools can reject the result (repack failure), so
+        // only they pay for the restore snapshot.
+        let original = self.inventory.is_some().then(|| cache.clone());
         for (i, &l) in lambdas.iter().enumerate() {
             let l = l.max(0.5);
             if (l - cache.lambdas[i]).abs() / cache.lambdas[i].max(0.5) <= self.resolve_threshold
@@ -859,11 +1146,17 @@ impl FleetAdapter {
                 continue;
             }
             let p = self.member_problem(i, l);
-            let opts = p.stage_options();
+            let opts = self.member_options(&p);
             let (cfg, solved) = eval_member(&p, &opts, cache.shares[i]);
             cache.configs[i] = cfg;
             cache.solved[i] = solved;
             cache.lambdas[i] = l;
+        }
+        if !self.packs(&cache.configs) {
+            // moved members picked shapes the nodes cannot host at the
+            // pinned shares — the full joint solve must re-split
+            self.cache = Some(original.expect("packs() only fails on node pools"));
+            return None;
         }
         self.incremental_solves += 1;
         let decision_time = t0.elapsed().as_secs_f64();
@@ -884,8 +1177,12 @@ impl FleetAdapter {
         let problems: Vec<Problem> = (0..self.specs.len())
             .map(|i| self.member_problem(i, lambdas[i]))
             .collect();
-        let alloc = solve_fleet_tiers(&problems, self.budget, &self.priorities)
-            .expect("budget >= stage floor was checked at construction");
+        let alloc = match &self.inventory {
+            Some(inv) => solve_fleet_packed(&problems, inv, &self.priorities)
+                .expect("floor packability was checked by with_tuning"),
+            None => solve_fleet_tiers(&problems, self.budget, &self.priorities)
+                .expect("budget >= stage floor was checked at construction"),
+        };
         self.full_solves += 1;
         let decision_time = t0.elapsed().as_secs_f64();
         let cache = SolveCache {
@@ -938,7 +1235,10 @@ impl FleetAdapter {
                 let mut demand = 0u32;
                 for (i, &l) in clamped.iter().enumerate() {
                     let p = self.demand_problem(i, l);
-                    let opts = p.stage_options();
+                    // node-placeability filtered like every solve path:
+                    // an unplaceable accel variant must not make demand
+                    // look cheaper than the packed solve can deliver
+                    let opts = self.member_options(&p);
                     let member_floor = self.specs[i].n_stages() as u32;
                     demand += min_feasible_replicas(&p, &opts, cap).unwrap_or(member_floor);
                 }
@@ -948,7 +1248,26 @@ impl FleetAdapter {
         };
         let decision =
             self.autoscaler.as_mut().expect("checked").decide(self.budget, demand, floor);
-        if decision.target != self.budget {
+        if self.inventory.is_some() {
+            // Whole-node granularity: retarget the elastic shape toward
+            // the proposed replica target (growth never overshoots it —
+            // the cost cap holds — so the actuated budget is the
+            // resulting replica cap, not the raw target).  An inventory
+            // that can no longer host the one-replica-per-stage floor
+            // is never adopted: the replica cap counts CPU slots only,
+            // so a shrink could otherwise strand the floor on a
+            // memory/accel axis and leave the packed solve without its
+            // last resort.
+            let mut tentative = self.inventory.clone().expect("checked");
+            tentative.retarget(decision.target.max(floor));
+            let node_cap = tentative.replica_cap();
+            if node_cap == self.budget || !self.floor_packs(&tentative) {
+                return None;
+            }
+            self.inventory = Some(tentative);
+            self.budget = node_cap;
+            Some(node_cap)
+        } else if decision.target != self.budget {
             self.budget = decision.target;
             Some(decision.target)
         } else {
@@ -960,10 +1279,20 @@ impl FleetAdapter {
     /// observed rate burst past `burst_factor ×` its last predicted λ
     /// *and* whose current share leaves it SLA-infeasible, then reclaim
     /// up to `max_reclaim` replicas from strictly lower-priority
-    /// members (lowest class first, fattest share first, never below a
-    /// donor's stage floor).  Only the burster and the donors are
-    /// re-solved — single-member budget-capped solves, no joint IP —
-    /// so this is cheap enough to run between adaptation ticks.
+    /// members (throughput-class donors first, then lowest priority,
+    /// then fattest share, never below a donor's stage floor).  Only
+    /// the burster and the donors are re-solved — single-member
+    /// budget-capped solves, no joint IP — so this is cheap enough to
+    /// run between adaptation ticks.
+    ///
+    /// With SLA classes attached, only latency-critical members are
+    /// preemption receivers (a bursting batch line waits for the next
+    /// tick instead) and throughput members additionally donate to
+    /// latency-critical bursters at priorities ≤ the burster's — class
+    /// policy fires even when every priority is equal.  With a node
+    /// inventory attached, the post-preemption configuration must
+    /// bin-pack — a replica is never moved onto nodes that cannot host
+    /// it, the candidate is dropped instead.
     pub fn preempt(&mut self, _now: f64, observed: &[f64]) -> Option<FleetPreemption> {
         let pc = self.preemption?;
         let n = self.specs.len();
@@ -977,10 +1306,15 @@ impl FleetAdapter {
         let floors: Vec<u32> = self.specs.iter().map(|s| s.n_stages() as u32).collect();
         let t0 = Instant::now();
 
-        // Bursting members, most important (then hottest) first.
+        // Bursting receiver-eligible members, most important (then
+        // hottest) first.
         let mut bursters: Vec<(usize, f64)> = {
             let cache = self.cache.as_ref().expect("checked");
             (0..n)
+                .filter(|&i| match &self.sla_classes {
+                    Some(c) => c[i] == SlaClass::LatencyCritical,
+                    None => true,
+                })
                 .filter_map(|i| {
                     let ratio = observed[i].max(0.5) / cache.lambdas[i].max(0.5);
                     (ratio > pc.burst_factor).then_some((i, ratio))
@@ -997,7 +1331,7 @@ impl FleetAdapter {
             let mut cache = self.cache.take().expect("checked");
             let lam_new = observed[bi].max(0.5);
             let p = self.member_problem(bi, lam_new);
-            let opts = p.stage_options();
+            let opts = self.member_options(&p);
             // How many more replicas feasibility at the burst λ needs.
             let need = match min_feasible_replicas(&p, &opts, self.budget) {
                 Some(m) if m > cache.shares[bi] => m - cache.shares[bi],
@@ -1010,13 +1344,36 @@ impl FleetAdapter {
             let mut shares = cache.shares.clone();
             let mut from: Vec<(usize, u32)> = Vec::new();
             let mut got = 0u32;
+            // Donor eligibility: strictly lower priority class — OR,
+            // with SLA classes attached, a throughput member at a
+            // priority ≤ the latency-critical burster's (batch traffic
+            // donates to interactive traffic even without a priority
+            // gap; without classes nothing changes).
+            let donor_ok = |j: usize| {
+                if self.priorities[j] < self.priorities[bi] {
+                    return true;
+                }
+                match &self.sla_classes {
+                    Some(c) => {
+                        c[j] == SlaClass::Throughput
+                            && c[bi] == SlaClass::LatencyCritical
+                            && self.priorities[j] <= self.priorities[bi]
+                    }
+                    None => false,
+                }
+            };
             while got < want {
-                // lowest priority class first; within it, fattest share
+                // throughput-class donors first, then lowest priority
+                // class; within those, fattest share
                 let donor = (0..n)
-                    .filter(|&j| {
-                        self.priorities[j] < self.priorities[bi] && shares[j] > floors[j]
-                    })
-                    .min_by_key(|&j| (self.priorities[j], u32::MAX - shares[j], j));
+                    .filter(|&j| donor_ok(j) && shares[j] > floors[j])
+                    .min_by_key(|&j| {
+                        let class_rank = match &self.sla_classes {
+                            Some(c) => (c[j] != SlaClass::Throughput) as u32,
+                            None => 0,
+                        };
+                        (class_rank, self.priorities[j], u32::MAX - shares[j], j)
+                    });
                 let Some(j) = donor else { break };
                 shares[j] -= 1;
                 got += 1;
@@ -1030,6 +1387,9 @@ impl FleetAdapter {
                 continue; // no strictly-lower-priority replica to reclaim
             }
             shares[bi] += got;
+            // Only node pools can reject the result (repack failure),
+            // so only they pay for the restore snapshot.
+            let original = self.inventory.is_some().then(|| cache.clone());
             // Re-solve only the members whose share changed.
             let (cfg, solved) = eval_member(&p, &opts, shares[bi]);
             cache.configs[bi] = cfg;
@@ -1037,12 +1397,19 @@ impl FleetAdapter {
             cache.lambdas[bi] = lam_new;
             for &(j, _) in &from {
                 let pj = self.member_problem(j, cache.lambdas[j]);
-                let oj = pj.stage_options();
+                let oj = self.member_options(&pj);
                 let (cfg, solved) = eval_member(&pj, &oj, shares[j]);
                 cache.configs[j] = cfg;
                 cache.solved[j] = solved;
             }
             cache.shares = shares;
+            // Node safety: the post-preemption fleet must still pack —
+            // otherwise this burster's preemption is abandoned (the
+            // slow path will re-split at the next tick).
+            if !self.packs(&cache.configs) {
+                self.cache = Some(original.expect("packs() only fails on node pools"));
+                continue;
+            }
             let decisions = cache_decisions(&cache, t0.elapsed().as_secs_f64());
             let budget = cache.budget;
             self.cache = Some(cache);
@@ -1099,6 +1466,14 @@ impl FleetController for FleetAdapter {
 
     fn preempt(&mut self, now: f64, observed: &[f64]) -> Option<FleetPreemption> {
         FleetAdapter::preempt(self, now, observed)
+    }
+
+    fn node_inventory(&self) -> Option<NodeInventory> {
+        self.inventory.clone()
+    }
+
+    fn sla_classes(&self) -> Option<Vec<SlaClass>> {
+        self.sla_classes.clone()
     }
 }
 
@@ -1275,6 +1650,77 @@ mod tests {
             assert!(
                 hi_first.members[0].config.objective >= plain.members[0].config.objective - 1e-9
             );
+        }
+    }
+
+    #[test]
+    fn packed_on_fungible_inventory_matches_scalar_solver() {
+        let specs: Vec<PipelineSpec> = ["video", "audio-sent", "nlp"]
+            .iter()
+            .map(|n| pipelines::by_name(n).unwrap())
+            .collect();
+        let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+        let problems: Vec<Problem> = specs
+            .iter()
+            .zip(&profs)
+            .zip([18.0, 7.0, 4.0])
+            .map(|((s, pf), l)| problem(s, pf, l))
+            .collect();
+        for budget in [8u32, 14, 24] {
+            for prios in [vec![0u32, 0, 0], vec![2, 1, 0]] {
+                let scalar = solve_fleet_tiers(&problems, budget, &prios).unwrap();
+                let packed =
+                    solve_fleet_packed(&problems, &NodeInventory::fungible(budget), &prios)
+                        .unwrap();
+                assert_eq!(
+                    scalar.members.iter().map(|m| m.budget).collect::<Vec<_>>(),
+                    packed.members.iter().map(|m| m.budget).collect::<Vec<_>>(),
+                    "budget {budget} prios {prios:?}: shares diverge"
+                );
+                for (s, p) in scalar.members.iter().zip(&packed.members) {
+                    assert_eq!(s.config, p.config, "budget {budget}: configs diverge");
+                    assert_eq!(s.solved, p.solved);
+                }
+                assert!((scalar.total_objective - packed.total_objective).abs() < 1e-12);
+                let packing = packed.packing.expect("packed solve carries a packing");
+                assert_eq!(packing.placements.len(), packed.replicas_used as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_places_accel_variants_only_on_accel_nodes() {
+        // Accuracy-hungry weights push the video pipeline toward
+        // yolov5x (8c + one accel slot).
+        let mut spec = pipelines::by_name("video").unwrap();
+        spec.weights.alpha *= 50.0;
+        let prof = pipeline_profiles(&spec);
+        let problems = vec![problem(&spec, &prof, 4.0)];
+        let hetero =
+            crate::fleet::nodes::NodeInventory::parse("4x(8c,32g,0a)+2x(16c,64g,2a)").unwrap();
+        let alloc = solve_fleet_packed(&problems, &hetero, &[0]).unwrap();
+        let packing = alloc.packing.as_ref().unwrap();
+        assert!(packing.valid_for(&hetero), "no node over capacity on any axis");
+        for pl in &packing.placements {
+            let sc = &alloc.members[pl.member].config.stages[pl.stage];
+            if sc.resources.accel_slots > 0.0 {
+                let shape = &hetero.pools[packing.shape_of[pl.node]].shape;
+                assert!(
+                    shape.capacity.accel_slots >= sc.resources.accel_slots,
+                    "accel replica placed on an accel-less node"
+                );
+            }
+        }
+        // a CPU-only pool filters the accel variants out entirely
+        let plain = crate::fleet::nodes::NodeInventory::parse("8x(4c,16g,0a)").unwrap();
+        let cpu_alloc = solve_fleet_packed(&problems, &plain, &[0]).unwrap();
+        for m in &cpu_alloc.members {
+            for sc in &m.config.stages {
+                assert_eq!(
+                    sc.resources.accel_slots, 0.0,
+                    "accel variant chosen on a CPU-only pool"
+                );
+            }
         }
     }
 

@@ -10,10 +10,67 @@
 //! λ traces through the correlated multi-pipeline generator
 //! ([`crate::workload::tracegen::generate_fleet`]).
 
+use crate::fleet::nodes::NodeInventory;
 use crate::models::pipelines::{self, PipelineSpec};
 use crate::util::json::Json;
 use crate::workload::trace::Trace;
 use crate::workload::tracegen::{generate_fleet_seeded, FleetCorrelation, Pattern};
+
+/// Per-member SLA class: how a member's traffic tolerates waiting.
+/// Keys the drop policy, the batch-formation timeout ceiling and
+/// preemption donor preference — plugged into the drivers through
+/// [`crate::fleet::solver::FleetTuning::sla_classes`] (absent classes =
+/// the pre-class behavior: everything latency-critical with uncapped
+/// timeouts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlaClass {
+    /// Interactive traffic: verbatim drop SLA, batch-formation waits
+    /// capped at a quarter of the e2e SLA, preferred preemption
+    /// receiver.
+    LatencyCritical,
+    /// Batch traffic: tolerates 2× the SLA before shedding, uncapped
+    /// batch-formation waits (fill the batch), preferred preemption
+    /// donor and never a receiver.
+    Throughput,
+}
+
+impl SlaClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            SlaClass::LatencyCritical => "latency_critical",
+            SlaClass::Throughput => "throughput",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SlaClass> {
+        match s {
+            "latency_critical" => Some(SlaClass::LatencyCritical),
+            "throughput" => Some(SlaClass::Throughput),
+            _ => None,
+        }
+    }
+
+    /// Multiplier on the member's drop-policy SLA (§4.5 ages are judged
+    /// against `scale × SLA`).
+    pub fn drop_sla_scale(self) -> f64 {
+        match self {
+            SlaClass::LatencyCritical => 1.0,
+            SlaClass::Throughput => 2.0,
+        }
+    }
+
+    /// Batch-formation timeout ceiling for a member with e2e SLA `sla`
+    /// (same time domain as the driver's clock).  Latency-critical
+    /// members never wait longer than a quarter of their SLA for a
+    /// batch to fill (floored at the 50 ms dispatch granularity);
+    /// throughput members wait as long as the λ-shaped timeout allows.
+    pub fn timeout_cap(self, sla: f64) -> f64 {
+        match self {
+            SlaClass::LatencyCritical => (0.25 * sla).max(0.05),
+            SlaClass::Throughput => f64::INFINITY,
+        }
+    }
+}
 
 /// One pipeline instance inside a fleet.
 #[derive(Debug, Clone, PartialEq)]
@@ -35,6 +92,11 @@ pub struct FleetMember {
     /// to higher classes first, and the preemption fast path reclaims
     /// replicas only from strictly lower classes.  Default 0.
     pub priority: u32,
+    /// SLA class (latency-critical vs throughput/batch) — keys drop
+    /// policy, batch timeout ceilings and preemption eligibility when
+    /// the caller wires [`FleetSpec::classes`] into the tuned drivers.
+    /// Default latency-critical.
+    pub sla_class: SlaClass,
 }
 
 impl FleetMember {
@@ -64,6 +126,11 @@ pub struct FleetSpec {
     /// How the member traces co-move (one bursting while another
     /// decays, a shared surge, or independent streams).
     pub correlation: FleetCorrelation,
+    /// Heterogeneous node shapes backing the pool.  `None` = the
+    /// classic fungible pool of `replica_budget` slots; `Some` makes
+    /// `replica_budget` informational (the inventory's replica cap
+    /// governs) and replicas bin-pack onto the nodes.
+    pub nodes: Option<NodeInventory>,
 }
 
 impl FleetSpec {
@@ -90,6 +157,12 @@ impl FleetSpec {
     /// [`crate::fleet::solver::FleetTuning::priorities`] takes).
     pub fn priorities(&self) -> Vec<u32> {
         self.members.iter().map(|m| m.priority).collect()
+    }
+
+    /// Per-member SLA classes in fleet order (what
+    /// [`crate::fleet::solver::FleetTuning::sla_classes`] takes).
+    pub fn classes(&self) -> Vec<SlaClass> {
+        self.members.iter().map(|m| m.sla_class).collect()
     }
 
     /// Structural validation: nonempty, unique non-blank member names,
@@ -119,11 +192,28 @@ impl FleetSpec {
             }
         }
         let floor = self.min_replicas()?;
-        if self.replica_budget < floor {
-            return Err(format!(
-                "replica budget {} below the one-replica-per-stage floor {floor}",
-                self.replica_budget
-            ));
+        match &self.nodes {
+            // With an inventory the budget is informational (the
+            // replica cap governs) — validate the pool that is
+            // actually in force.
+            Some(nodes) => {
+                nodes.validate()?;
+                let cap = nodes.replica_cap();
+                if cap < floor {
+                    return Err(format!(
+                        "node inventory caps {cap} replicas, below the \
+                         one-replica-per-stage floor {floor}"
+                    ));
+                }
+            }
+            None => {
+                if self.replica_budget < floor {
+                    return Err(format!(
+                        "replica budget {} below the one-replica-per-stage floor {floor}",
+                        self.replica_budget
+                    ));
+                }
+            }
         }
         Ok(())
     }
@@ -220,14 +310,32 @@ impl FleetSpec {
                 Some(p) => p as u32,
                 None => 0,
             };
-            members.push(FleetMember { name, pipeline, pattern, seed, sla_scale, priority });
+            let sla_class = match mj.get("class").and_then(Json::as_str) {
+                Some(c) => SlaClass::from_name(c)
+                    .ok_or_else(|| format!("fleet member {name}: unknown SLA class {c:?}"))?,
+                None => SlaClass::LatencyCritical,
+            };
+            members.push(FleetMember {
+                name,
+                pipeline,
+                pattern,
+                seed,
+                sla_scale,
+                priority,
+                sla_class,
+            });
         }
+        let nodes = match j.get("nodes") {
+            Some(nj) => Some(NodeInventory::from_json(nj)?),
+            None => None,
+        };
         Ok(FleetSpec {
             name,
             members,
             replica_budget: replica_budget as u32,
             seconds,
             correlation,
+            nodes,
         })
     }
 
@@ -243,7 +351,7 @@ impl FleetSpec {
                 Json::obj().set("mode", "in_phase").set("period", period)
             }
         };
-        Json::obj()
+        let mut j = Json::obj()
             .set("name", self.name.clone())
             .set("replica_budget", self.replica_budget as usize)
             .set("seconds", self.seconds)
@@ -261,19 +369,25 @@ impl FleetSpec {
                                 .set("seed", m.seed as usize)
                                 .set("sla_scale", m.sla_scale)
                                 .set("priority", m.priority as usize)
+                                .set("class", m.sla_class.name())
                         })
                         .collect(),
                 ),
-            )
+            );
+        if let Some(nodes) = &self.nodes {
+            j = j.set("nodes", nodes.to_json());
+        }
+        j
     }
 
     /// The canonical 3-pipeline demo fleet: a bursty video feed
     /// (latency-critical, priority 2), a fluctuating audio-sentiment
-    /// feed (priority 1) and a steady NLP batch line (best-effort,
-    /// priority 0) in antiphase, over one 24-replica pool.  Priorities
-    /// only bite when a caller wires them into the tuned solver — the
-    /// plain [`crate::fleet::solver::FleetAdapter::new`] path treats
-    /// every member equally.
+    /// feed (latency-critical, priority 1) and a steady NLP batch line
+    /// (throughput class, priority 0) in antiphase, over one 24-replica
+    /// pool.  Priorities and SLA classes only bite when a caller wires
+    /// them into the tuned solver — the plain
+    /// [`crate::fleet::solver::FleetAdapter::new`] path treats every
+    /// member equally.
     pub fn demo3() -> FleetSpec {
         FleetSpec {
             name: "demo3".into(),
@@ -285,6 +399,7 @@ impl FleetSpec {
                     seed: 11,
                     sla_scale: 1.0,
                     priority: 2,
+                    sla_class: SlaClass::LatencyCritical,
                 },
                 FleetMember {
                     name: "audio-social".into(),
@@ -293,6 +408,7 @@ impl FleetSpec {
                     seed: 12,
                     sla_scale: 1.0,
                     priority: 1,
+                    sla_class: SlaClass::LatencyCritical,
                 },
                 FleetMember {
                     name: "nlp-batchline".into(),
@@ -301,11 +417,13 @@ impl FleetSpec {
                     seed: 13,
                     sla_scale: 1.0,
                     priority: 0,
+                    sla_class: SlaClass::Throughput,
                 },
             ],
             replica_budget: 24,
             seconds: 240,
             correlation: FleetCorrelation::Antiphase { period: 300 },
+            nodes: None,
         }
     }
 }
@@ -367,6 +485,62 @@ mod tests {
         let negative_priority = r#"{"name":"x","replica_budget":8,"members":
             [{"name":"a","pipeline":"video","priority":-2}]}"#;
         assert!(FleetSpec::parse(negative_priority).is_err());
+    }
+
+    #[test]
+    fn sla_scale_validation_rejects_nonfinite_and_nonpositive() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -1.5] {
+            let mut f = FleetSpec::demo3();
+            f.members[1].sla_scale = bad;
+            assert!(f.validate().is_err(), "sla_scale {bad} must be rejected");
+        }
+        let mut f = FleetSpec::demo3();
+        f.members[1].sla_scale = 0.5;
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn sla_class_parses_defaults_and_roundtrips() {
+        let f = FleetSpec::demo3();
+        assert_eq!(
+            f.classes(),
+            vec![SlaClass::LatencyCritical, SlaClass::LatencyCritical, SlaClass::Throughput]
+        );
+        // omitted class defaults to latency-critical
+        let text = r#"{"name":"x","replica_budget":8,"members":
+            [{"name":"a","pipeline":"video"},
+             {"name":"b","pipeline":"video","class":"throughput"}]}"#;
+        let f = FleetSpec::parse(text).unwrap();
+        assert_eq!(f.classes(), vec![SlaClass::LatencyCritical, SlaClass::Throughput]);
+        // unknown class rejected
+        let bad = r#"{"name":"x","replica_budget":8,"members":
+            [{"name":"a","pipeline":"video","class":"best-effort"}]}"#;
+        assert!(FleetSpec::parse(bad).is_err());
+        // class policy knobs
+        assert_eq!(SlaClass::LatencyCritical.drop_sla_scale(), 1.0);
+        assert_eq!(SlaClass::Throughput.drop_sla_scale(), 2.0);
+        assert!((SlaClass::LatencyCritical.timeout_cap(4.0) - 1.0).abs() < 1e-12);
+        assert_eq!(SlaClass::LatencyCritical.timeout_cap(0.01), 0.05, "dispatch floor");
+        assert_eq!(SlaClass::Throughput.timeout_cap(4.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn nodes_parse_validate_and_roundtrip() {
+        use crate::fleet::nodes::NodeInventory;
+        let mut f = FleetSpec::demo3();
+        f.nodes = Some(NodeInventory::parse("4x(8c,32g,0a)+2x(16c,64g,1a)").unwrap());
+        f.validate().unwrap();
+        let back = FleetSpec::parse(&f.to_json().to_string()).unwrap();
+        assert_eq!(f, back);
+        // an inventory whose replica cap is below the stage floor fails
+        let mut tiny = FleetSpec::demo3();
+        tiny.nodes = Some(NodeInventory::parse("3x(2c,8g,0a)").unwrap());
+        assert!(tiny.validate().is_err(), "6 slots < 7-stage floor");
+        // invalid shapes are rejected through the spec too
+        let bad = r#"{"name":"x","replica_budget":8,
+            "members":[{"name":"a","pipeline":"video"}],
+            "nodes":[{"shape":"s","cpu":0,"mem_gb":8,"accel":0,"count":2}]}"#;
+        assert!(FleetSpec::parse(bad).is_err());
     }
 
     #[test]

@@ -70,6 +70,21 @@
 //! moves replicas from strictly lower-priority members to a bursting
 //! high-priority one without touching the joint IP.
 //!
+//! Allocation is *multi-resource* (`tests/fleet_binpack.rs`): every
+//! replica demands a [`resources::ResourceVec`] (CPU cores, memory GB,
+//! accelerator slots — [`models::registry::Variant::resources`]), the
+//! scalar `cost()` everywhere is its default-weighted norm (CPU cores
+//! only, so every paper number is unchanged), and the fleet pool can be
+//! a heterogeneous [`fleet::nodes::NodeInventory`] that replicas
+//! first-fit-decreasing bin-pack onto
+//! ([`fleet::solver::solve_fleet_packed`]; resizes move whole nodes of
+//! the elastic shape).  Members additionally carry an
+//! [`fleet::spec::SlaClass`] — latency-critical traffic gets verbatim
+//! drop SLAs, capped batch-formation waits and preemption priority,
+//! throughput/batch traffic gets relaxed shedding, uncapped batching
+//! and donates replicas first.  The fungible single-shape pool with
+//! zero memory/accel demand reproduces the scalar path byte for byte.
+//!
 //! Start with [`coordinator::adapter::Adapter`] (the control loop),
 //! [`optimizer::ip::solve`] (the IP), and [`simulator::sim::Simulation`]
 //! (the evaluation substrate), or run `cargo run --release -- help`.
@@ -106,6 +121,8 @@ pub mod profiler {
 
 pub mod queueing;
 
+pub mod resources;
+
 pub mod cluster {
     //! The clock-agnostic cluster core shared by every driver (see the
     //! crate-level "driver/core split"): stage state, batch formation,
@@ -133,22 +150,29 @@ pub mod optimizer {
 pub mod fleet {
     //! Multi-pipeline sharding over one *elastic* replica pool (see the
     //! crate-level "fleet layer"): the fleet description + JSON IO
-    //! ([`spec`] — members carry priority classes), the joint
-    //! cross-pipeline budget allocator ([`solver`] — greedy
-    //! marginal-gain over per-pipeline IP solves, priority tiers,
-    //! even-split floor, brute-force cross-check, incremental
-    //! re-solves and the mid-interval preemption fast path), the pool
-    //! autoscaler ([`autoscaler`] — grow/shrink steps against a cost
-    //! target with scale-up eagerness and scale-down hysteresis) and
-    //! the shared-pool core ([`core`] — one
+    //! ([`spec`] — members carry priority classes and SLA classes,
+    //! latency-critical vs throughput), the heterogeneous node shapes
+    //! and the replica bin-packer ([`nodes`] —
+    //! [`nodes::NodeInventory`] with first-fit-decreasing
+    //! [`nodes::NodeInventory::pack`], whole-node
+    //! [`nodes::NodeInventory::retarget`] elasticity, and the fungible
+    //! scalar embedding), the joint cross-pipeline budget allocator
+    //! ([`solver`] — greedy marginal-gain over per-pipeline IP solves,
+    //! priority tiers, even-split floor, brute-force cross-check,
+    //! bin-packed solves over node inventories, incremental re-solves
+    //! and the mid-interval preemption fast path), the pool autoscaler
+    //! ([`autoscaler`] — grow/shrink steps against a cost target with
+    //! scale-up eagerness and scale-down hysteresis) and the
+    //! shared-pool core ([`core`] — one
     //! [`crate::cluster::core::ClusterCore`] per member behind one
-    //! budget, with rolling-reconfig overshoot accounting, pool
-    //! resizing and the replica-seconds bought/used cost ledger).  The
-    //! fleet drivers live with their clocks:
+    //! budget/inventory, with rolling-reconfig overshoot accounting,
+    //! pool resizing and the replica-seconds + node-seconds cost
+    //! ledgers).  The fleet drivers live with their clocks:
     //! [`crate::simulator::sim::run_fleet_des`] and
     //! [`crate::serving::engine::serve_fleet_with`].
     pub mod autoscaler;
     pub mod core;
+    pub mod nodes;
     pub mod solver;
     pub mod spec;
 }

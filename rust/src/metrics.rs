@@ -2,6 +2,7 @@
 //! and the aggregates the paper reports (SLA attainment, average PAS,
 //! average cost, latency CDFs).
 
+use crate::resources::ResourceVec;
 use crate::util::stats::{self, Summary};
 
 /// Outcome of one request.
@@ -29,8 +30,11 @@ pub struct IntervalRecord {
     pub t: f64,
     /// PAS of the active configuration.
     pub pas: f64,
-    /// Σ n·R of the active configuration, CPU cores.
+    /// Σ n·R of the active configuration, CPU cores (the default-
+    /// weighted norm of `resources`).
     pub cost: f64,
+    /// Multi-axis demand of the active configuration (cpu/mem/accel).
+    pub resources: ResourceVec,
     /// Observed arrival rate over the last interval.
     pub lambda_observed: f64,
     /// Predictor output used for the decision.
@@ -110,6 +114,18 @@ impl RunMetrics {
         stats::mean(&self.intervals.iter().map(|i| i.cost).collect::<Vec<_>>())
     }
 
+    /// Time-average resource vector across intervals (the multi-axis
+    /// twin of [`RunMetrics::avg_cost`]).
+    pub fn avg_resources(&self) -> ResourceVec {
+        if self.intervals.is_empty() {
+            return ResourceVec::ZERO;
+        }
+        self.intervals
+            .iter()
+            .fold(ResourceVec::ZERO, |a, i| a.add(i.resources))
+            .scale(1.0 / self.intervals.len() as f64)
+    }
+
     pub fn peak_cost(&self) -> f64 {
         self.intervals.iter().map(|i| i.cost).fold(0.0, f64::max)
     }
@@ -152,6 +168,7 @@ mod tests {
             t,
             pas,
             cost,
+            resources: ResourceVec::new(cost, 2.0 * cost, 0.0),
             lambda_observed: 10.0,
             lambda_predicted: 11.0,
             decision_time: 0.001,
@@ -187,6 +204,11 @@ mod tests {
         assert!((m.avg_pas() - 55.0).abs() < 1e-9);
         assert!((m.avg_cost() - 6.0).abs() < 1e-9);
         assert_eq!(m.peak_cost(), 8.0);
+        let r = m.avg_resources();
+        assert!((r.cpu_cores - 6.0).abs() < 1e-9);
+        assert!((r.memory_gb - 12.0).abs() < 1e-9);
+        assert_eq!(r.accel_slots, 0.0);
+        assert_eq!(RunMetrics::default().avg_resources(), ResourceVec::ZERO);
     }
 
     #[test]

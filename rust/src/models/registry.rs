@@ -7,6 +7,8 @@
 //! side comes from profiling our real artifacts (or the paper-calibrated
 //! analytic profiles — see `profiler::analytic`).
 
+use crate::resources::ResourceVec;
+
 /// Inference task types (one per paper appendix table).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StageType {
@@ -115,6 +117,24 @@ impl Variant {
         let h = self.hidden() as u64;
         2 * batch as u64 * self.layers() as u64 * h * h
     }
+
+    /// Per-replica resource demand vector:
+    ///
+    /// * `cpu_cores` — the paper's Eq. 1 base allocation, verbatim (so
+    ///   the default-weighted norm reproduces the scalar `R_m` price);
+    /// * `memory_gb` — fp32 weight footprint (4 B/param) plus a flat
+    ///   250 MB runtime overhead, derived from the published parameter
+    ///   count;
+    /// * `accel_slots` — heavy variants (base allocation ≥ 8 cores)
+    ///   are assumed to occupy one accelerator card when the cluster
+    ///   offers them; light variants stay CPU-only.
+    pub fn resources(&self) -> ResourceVec {
+        ResourceVec {
+            cpu_cores: self.base_alloc as f64,
+            memory_gb: 0.25 + self.params_m * 4.0 / 1000.0,
+            accel_slots: if self.base_alloc >= 8 { 1.0 } else { 0.0 },
+        }
+    }
 }
 
 /// Batch sizes profiled/served: powers of two 1..64 (paper §4.2).
@@ -222,6 +242,28 @@ mod tests {
         assert!(by_key("detect.yolov5x").is_some());
         assert!(by_key("detect.nonexistent").is_none());
         assert_eq!(by_key("audio.s2t-large").unwrap().base_alloc, 4);
+    }
+
+    #[test]
+    fn resource_vectors_derive_from_the_tables() {
+        use crate::resources::CostWeights;
+        for v in &VARIANTS {
+            let r = v.resources();
+            assert!(r.is_finite() && r.non_negative(), "{}", v.key());
+            // default-weighted norm == the paper's scalar base allocation
+            assert_eq!(r.weighted(CostWeights::default()), v.base_alloc as f64, "{}", v.key());
+            // memory grows with parameter count, never below the overhead
+            assert!(r.memory_gb > 0.25, "{}", v.key());
+            // only heavy variants demand an accelerator slot
+            assert_eq!(r.accel_slots > 0.0, v.base_alloc >= 8, "{}", v.key());
+        }
+        // spot values: yolov5x is the canonical accel-demanding variant
+        let x = by_key("detect.yolov5x").unwrap().resources();
+        assert_eq!(x.cpu_cores, 8.0);
+        assert_eq!(x.accel_slots, 1.0);
+        let n = by_key("detect.yolov5n").unwrap().resources();
+        assert_eq!(n.accel_slots, 0.0);
+        assert!(n.memory_gb < x.memory_gb, "memory tracks parameter count");
     }
 
     #[test]

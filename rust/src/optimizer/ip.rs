@@ -20,6 +20,7 @@ use super::options::{enumerate, EnumParams, StageOption};
 use crate::models::accuracy::{normalized_rank, AccuracyMetric};
 use crate::models::pipelines::PipelineSpec;
 use crate::profiler::profile::PipelineProfiles;
+use crate::resources::ResourceVec;
 
 /// Chosen configuration for one stage.
 #[derive(Debug, Clone, PartialEq)]
@@ -28,11 +29,20 @@ pub struct StageConfig {
     pub variant_key: String,
     pub batch: usize,
     pub replicas: u32,
-    /// `n·R`, CPU cores.
+    /// `n·R`, CPU cores (default-weighted norm of the vector demand).
     pub cost: f64,
     pub accuracy: f64,
     /// Model latency at the chosen batch, seconds.
     pub latency: f64,
+    /// PER-REPLICA resource demand of the chosen variant.
+    pub resources: ResourceVec,
+}
+
+impl StageConfig {
+    /// Aggregate demand of the stage (`replicas × resources`).
+    pub fn total_resources(&self) -> ResourceVec {
+        self.resources.scale(self.replicas as f64)
+    }
 }
 
 /// Full pipeline configuration + objective breakdown.
@@ -50,6 +60,9 @@ pub struct PipelineConfig {
     pub objective: f64,
     /// Σ (l + q), seconds — must be ≤ SLA_P.
     pub latency_e2e: f64,
+    /// Σ per-stage `replicas × resources` — the configuration's total
+    /// multi-axis demand (`cost` is its default-weighted norm).
+    pub resources: ResourceVec,
 }
 
 impl PipelineConfig {
@@ -343,6 +356,7 @@ pub fn materialize(
     let mut lat = 0.0;
     let mut pas_frac = 1.0;
     let mut acc_additive = 0.0;
+    let mut resources = ResourceVec::ZERO;
     for (si, (&oi, opts)) in picks.iter().zip(options).enumerate() {
         let o = &opts[oi];
         let vp = &p.profiles.stages[si].variants[o.variant_idx];
@@ -354,12 +368,14 @@ pub fn materialize(
             cost: o.cost,
             accuracy: o.accuracy,
             latency: o.latency,
+            resources: o.resources,
         });
         cost += o.cost;
         batch_sum += o.batch;
         lat += o.total_latency();
         pas_frac *= o.accuracy / 100.0;
         acc_additive += p.acc_term(si, o);
+        resources = resources.add(o.total_resources());
     }
     let objective =
         w.alpha * p.acc_value(acc_additive) - w.beta * cost - w.delta * batch_sum as f64;
@@ -370,6 +386,7 @@ pub fn materialize(
         batch_sum,
         objective,
         latency_e2e: lat,
+        resources,
     }
 }
 
@@ -383,6 +400,7 @@ pub fn fallback_config(p: &Problem) -> PipelineConfig {
     let mut batch_sum = 0usize;
     let mut lat = 0.0;
     let mut pas_frac = 1.0;
+    let mut resources = ResourceVec::ZERO;
     for st in &p.profiles.stages {
         // lightest = lowest cost-per-replica, then lowest batch-1 latency
         let (vi, vp) = st
@@ -406,11 +424,13 @@ pub fn fallback_config(p: &Problem) -> PipelineConfig {
             cost: replicas as f64 * vp.cost_per_replica(),
             accuracy: vp.variant.accuracy,
             latency: vp.latency.latency(batch),
+            resources: vp.resources_per_replica(),
         });
         cost += replicas as f64 * vp.cost_per_replica();
         batch_sum += batch;
         lat += vp.latency.latency(batch) + crate::queueing::worst_case_delay(batch, p.lambda);
         pas_frac *= vp.variant.accuracy / 100.0;
+        resources = resources.add(vp.resources_per_replica().scale(replicas as f64));
     }
     let w = p.spec.weights;
     PipelineConfig {
@@ -420,6 +440,7 @@ pub fn fallback_config(p: &Problem) -> PipelineConfig {
         batch_sum,
         objective: w.alpha * 100.0 * pas_frac - w.beta * cost - w.delta * batch_sum as f64,
         latency_e2e: lat,
+        resources,
     }
 }
 
@@ -518,6 +539,20 @@ mod tests {
         let fb = fallback_config(&p);
         assert_eq!(fb.stages.len(), 2);
         assert!(fb.cost > 0.0);
+    }
+
+    #[test]
+    fn resource_vector_consistent_with_scalar_cost() {
+        use crate::resources::CostWeights;
+        let (cfg, _) = problem_for("video", 10.0);
+        let total =
+            cfg.stages.iter().fold(ResourceVec::ZERO, |a, s| a.add(s.total_resources()));
+        assert_eq!(cfg.resources, total, "pipeline vector is the stage sum");
+        assert!(
+            (cfg.cost - cfg.resources.weighted(CostWeights::default())).abs() < 1e-9,
+            "scalar cost is the default-weighted norm of the vector"
+        );
+        assert!(cfg.resources.memory_gb > 0.0, "registry variants carry memory demand");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 use crate::models::registry::BATCH_SIZES;
 use crate::profiler::profile::StageProfile;
 use crate::queueing::worst_case_delay;
+use crate::resources::ResourceVec;
 
 /// One feasible (variant, batch) choice for a stage, with the induced
 /// replica count and derived quantities.
@@ -28,16 +29,25 @@ pub struct StageOption {
     pub queue_delay: f64,
     /// Induced replica count `⌈λ / h(b)⌉`.
     pub replicas: u32,
-    /// `n · R_m` in CPU cores.
+    /// `n · R_m` in CPU cores (the default-weighted norm of
+    /// `replicas × resources`).
     pub cost: f64,
     /// The variant's accuracy metric (percent scale).
     pub accuracy: f64,
+    /// PER-REPLICA resource demand (what a node must host for each of
+    /// the `replicas` copies).
+    pub resources: ResourceVec,
 }
 
 impl StageOption {
     /// Stage contribution to the Eq. 10b latency sum.
     pub fn total_latency(&self) -> f64 {
         self.latency + self.queue_delay
+    }
+
+    /// Aggregate demand of the whole option (`replicas × resources`).
+    pub fn total_resources(&self) -> ResourceVec {
+        self.resources.scale(self.replicas as f64)
     }
 }
 
@@ -78,6 +88,7 @@ pub fn enumerate(stage: &StageProfile, p: EnumParams) -> Vec<StageOption> {
                 replicas,
                 cost: replicas as f64 * vp.cost_per_replica(),
                 accuracy: vp.variant.accuracy,
+                resources: vp.resources_per_replica(),
             });
         }
     }
@@ -105,13 +116,25 @@ pub fn pareto_prune(mut opts: Vec<StageOption>) -> Vec<StageOption> {
     opts
 }
 
-/// True if `a` dominates `b`: no worse on all four axes, strictly better
-/// on at least one.
+/// True if `a` dominates `b`: no worse on all four scalar axes,
+/// strictly better on at least one — AND no worse on the resource
+/// vector (`a.replicas ≤ b.replicas` with per-replica demand fitting
+/// inside `b`'s, so `a`'s replica set bin-packs wherever `b`'s did).
+///
+/// The vector condition only ever KEEPS more options than the scalar
+/// rule did (same-variant batch dominance is untouched — equal
+/// per-replica vectors fit reflexively — while some cross-variant
+/// prunes are blocked, e.g. one 8-core replica no longer shadows nine
+/// 1-core ones).  Extra options cannot change the exact solver's
+/// optimum, only enlarge its search; they are exactly the options a
+/// heterogeneous node pool may need.
 fn dominates(a: &StageOption, b: &StageOption) -> bool {
     let no_worse = a.accuracy >= b.accuracy
         && a.total_latency() <= b.total_latency()
         && a.cost <= b.cost
-        && a.batch <= b.batch;
+        && a.batch <= b.batch
+        && a.replicas <= b.replicas
+        && a.resources.fits(b.resources);
     let strictly = a.accuracy > b.accuracy
         || a.total_latency() < b.total_latency()
         || a.cost < b.cost
@@ -174,6 +197,7 @@ mod tests {
             replicas: 1,
             cost,
             accuracy: acc,
+            resources: ResourceVec::cpu(cost),
         };
         let opts = vec![
             mk(50.0, 0.1, 1.0, 1),  // kept
@@ -196,6 +220,7 @@ mod tests {
             replicas: 1,
             cost,
             accuracy: acc,
+            resources: ResourceVec::cpu(cost),
         };
         // strictly increasing accuracy and cost: nothing dominated
         let opts = vec![mk(10.0, 1.0), mk(20.0, 2.0), mk(30.0, 3.0)];
@@ -212,10 +237,39 @@ mod tests {
             replicas: 1,
             cost: 1.0,
             accuracy: 10.0,
+            resources: ResourceVec::cpu(1.0),
         };
         // identical options do not dominate each other (no strict axis) —
         // both are kept; the solver tolerates ties.
         assert_eq!(pareto_prune(vec![mk(), mk()]).len(), 2);
+    }
+
+    #[test]
+    fn resource_axis_blocks_cross_variant_pruning() {
+        // An accel-demanding option that is better on every scalar axis
+        // must NOT prune a CPU-only option: on a CPU-only node pool the
+        // latter is the only placeable choice.
+        let accel = StageOption {
+            variant_idx: 1,
+            batch: 1,
+            latency: 0.05,
+            queue_delay: 0.0,
+            replicas: 1,
+            cost: 0.5,
+            accuracy: 90.0,
+            resources: ResourceVec::new(8.0, 2.0, 1.0),
+        };
+        let cpu_only = StageOption {
+            variant_idx: 0,
+            batch: 1,
+            latency: 0.1,
+            queue_delay: 0.0,
+            replicas: 1,
+            cost: 1.0,
+            accuracy: 50.0,
+            resources: ResourceVec::cpu(1.0),
+        };
+        assert_eq!(pareto_prune(vec![accel, cpu_only]).len(), 2);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! resource allocation.
 
 use crate::models::registry::{StageType, Variant, BATCH_SIZES};
+use crate::resources::{CostWeights, ResourceVec};
 
 /// Quadratic latency model `l(b) = a·b² + β·b + γ` (seconds).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -50,9 +51,18 @@ pub struct VariantProfile {
 }
 
 impl VariantProfile {
-    /// Cost of one replica, in CPU cores (paper: the base allocation).
+    /// Per-replica resource demand (CPU cores, memory GB, accelerator
+    /// slots) — what the fleet bin-packer places onto nodes.
+    pub fn resources_per_replica(&self) -> ResourceVec {
+        self.variant.resources()
+    }
+
+    /// Scalar cost of one replica: the default-weighted norm of the
+    /// resource vector, which prices CPU cores only and therefore
+    /// equals the paper's base allocation exactly (memory/accel bind
+    /// through packing feasibility, not through the price).
     pub fn cost_per_replica(&self) -> f64 {
-        self.variant.base_alloc as f64
+        self.resources_per_replica().weighted(CostWeights::default())
     }
 }
 
@@ -146,6 +156,17 @@ mod tests {
     fn latency_floor() {
         let p = LatencyProfile::new([0.0, 0.0, -5.0]);
         assert!(p.latency(1) > 0.0);
+    }
+
+    #[test]
+    fn scalar_cost_is_the_default_weighted_norm() {
+        // every registry variant: cost_per_replica == base allocation,
+        // byte-for-byte what the pre-vector reports priced
+        for v in &crate::models::registry::VARIANTS {
+            let vp = VariantProfile { variant: v, latency: LatencyProfile::new([0.0, 0.0, 0.1]) };
+            assert_eq!(vp.cost_per_replica(), v.base_alloc as f64, "{}", v.key());
+            assert_eq!(vp.resources_per_replica(), v.resources());
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 use crate::fleet::core::PoolReport;
 use crate::metrics::RunMetrics;
+use crate::resources::ResourceVec;
 use crate::models::pipelines;
 use crate::models::registry::{by_key, variants_of, StageType};
 use crate::profiler::analytic::{hw_latency, hw_throughput, pipeline_profiles};
@@ -215,6 +216,26 @@ pub fn fleet_table(
         pool.used_replica_secs,
         pool.utilization() * 100.0,
     ));
+    // Vector breakdown of the fleet's time-averaged demand: the scalar
+    // avgCost column above is the cpu axis; memory and accel bind
+    // through packing, so they are reported alongside.
+    let rv: ResourceVec =
+        metrics.iter().fold(ResourceVec::ZERO, |a, m| a.add(m.avg_resources()));
+    out.push_str(&format!(
+        "cost vector: {:>8.1} cpu cores | {:>8.1} GB mem | {:>6.1} accel slots \
+         (time-averaged fleet total)\n",
+        rv.cpu_cores, rv.memory_gb, rv.accel_slots,
+    ));
+    // Node-backed pools: final per-shape counts and the node-seconds
+    // ledger (fungible pools print nothing extra).
+    if !pool.nodes_final.is_empty() {
+        let shapes: Vec<String> =
+            pool.nodes_final.iter().map(|(name, count)| format!("{count}x{name}")).collect();
+        out.push_str(&format!("pool nodes: {}\n", shapes.join(" + ")));
+        let secs: Vec<String> =
+            pool.node_secs.iter().map(|(name, s)| format!("{name}={s:.0}")).collect();
+        out.push_str(&format!("node-seconds bought per shape: {}\n", secs.join(", ")));
+    }
     out
 }
 
@@ -283,6 +304,7 @@ mod tests {
                 t: 10.0,
                 pas: 80.0,
                 cost: 6.0,
+                resources: ResourceVec::new(6.0, 12.5, 1.0),
                 lambda_observed: 5.0,
                 lambda_predicted: 6.0,
                 decision_time: 0.001,
@@ -302,6 +324,8 @@ mod tests {
             preempted: vec![0, 5],
             bought_replica_secs: 4800.0,
             used_replica_secs: 3600.0,
+            nodes_final: Vec::new(),
+            node_secs: Vec::new(),
         };
         let s = fleet_table(&names, &metrics, &[9, 7], &pool);
         assert!(s.contains("video-edge"), "{s}");
@@ -311,8 +335,42 @@ mod tests {
         assert!(s.contains("size 20..26 over the run (3 resizes)"), "{s}");
         assert!(s.contains("2 preemptions"), "{s}");
         assert!(s.contains("4800 replica-s bought, 3600 used (75% utilized)"), "{s}");
+        // vector breakdown line: 2 members × (6c, 12.5g, 1a)
+        assert!(s.contains("cost vector:"), "{s}");
+        assert!(s.contains("12.0 cpu cores"), "{s}");
+        assert!(s.contains("25.0 GB mem"), "{s}");
+        assert!(s.contains("2.0 accel slots"), "{s}");
         // per-member preempt column + totals
         assert!(s.contains("preempt"), "{s}");
-        assert_eq!(s.lines().count(), 2 + 2 + 1 + 2);
+        // fungible pool: no node lines
+        assert!(!s.contains("pool nodes:"), "{s}");
+        assert_eq!(s.lines().count(), 2 + 2 + 1 + 3);
+    }
+
+    #[test]
+    fn fleet_table_prints_per_shape_node_counts() {
+        use crate::metrics::RunMetrics;
+        let pool = PoolReport {
+            budget: 32,
+            pool_min: 24,
+            pool_max: 32,
+            peak_in_use: 12,
+            resizes: 1,
+            preemptions: 0,
+            preempted: vec![0],
+            bought_replica_secs: 640.0,
+            used_replica_secs: 320.0,
+            nodes_final: vec![("(8c/32g/0a)".into(), 4), ("(16c/64g/2a)".into(), 2)],
+            node_secs: vec![("(8c/32g/0a)".into(), 80.0), ("(16c/64g/2a)".into(), 40.0)],
+        };
+        let m = RunMetrics { pipeline: "video".into(), workload: "bursty".into(), ..Default::default() };
+        let s = fleet_table(&["m0".to_string()], &[m], &[6], &pool);
+        assert!(s.contains("pool nodes: 4x(8c/32g/0a) + 2x(16c/64g/2a)"), "{s}");
+        assert!(
+            s.contains("node-seconds bought per shape: (8c/32g/0a)=80, (16c/64g/2a)=40"),
+            "{s}"
+        );
+        // the node lines keep the column-aligned table intact above
+        assert!(s.contains("TOTAL"), "{s}");
     }
 }

@@ -1,0 +1,161 @@
+//! Multi-resource allocation vectors.
+//!
+//! IPA prices a configuration as a scalar `n·R` in CPU cores (Eq. 1
+//! base allocations), but real clusters allocate along several axes at
+//! once.  [`ResourceVec`] is the demand/capacity vector used end-to-end:
+//! every model variant demands one per replica
+//! ([`crate::models::registry::Variant::resources`]), every
+//! [`crate::fleet::nodes::NodeShape`] offers one per node, and
+//! feasibility becomes component-wise dominance ([`ResourceVec::fits`])
+//! plus a bin-packing check instead of a scalar budget comparison.
+//!
+//! The scalar `cost()` every report and objective term uses is a
+//! *derived weighted norm* ([`ResourceVec::weighted`]): under the
+//! default [`CostWeights`] it weighs CPU cores only, so it equals the
+//! paper's `n·R` exactly and every pre-refactor report keeps its
+//! numbers.  Memory and accelerator slots still bind — through packing
+//! feasibility, not through the default price.
+
+use std::fmt;
+
+/// A point in (CPU cores, memory GB, accelerator slots) space — a
+/// replica's demand or a node's capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceVec {
+    pub cpu_cores: f64,
+    pub memory_gb: f64,
+    pub accel_slots: f64,
+}
+
+/// Comparison slack for the `fits`/`dominates` checks (accumulated
+/// float error from repeated `add` must not flip a feasibility verdict).
+const EPS: f64 = 1e-9;
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec =
+        ResourceVec { cpu_cores: 0.0, memory_gb: 0.0, accel_slots: 0.0 };
+
+    pub fn new(cpu_cores: f64, memory_gb: f64, accel_slots: f64) -> ResourceVec {
+        ResourceVec { cpu_cores, memory_gb, accel_slots }
+    }
+
+    /// A pure-CPU vector (the scalar world embedded in the vector one).
+    pub fn cpu(cores: f64) -> ResourceVec {
+        ResourceVec { cpu_cores: cores, memory_gb: 0.0, accel_slots: 0.0 }
+    }
+
+    pub fn add(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            cpu_cores: self.cpu_cores + o.cpu_cores,
+            memory_gb: self.memory_gb + o.memory_gb,
+            accel_slots: self.accel_slots + o.accel_slots,
+        }
+    }
+
+    pub fn scale(self, k: f64) -> ResourceVec {
+        ResourceVec {
+            cpu_cores: self.cpu_cores * k,
+            memory_gb: self.memory_gb * k,
+            accel_slots: self.accel_slots * k,
+        }
+    }
+
+    /// Component-wise `self ≤ capacity` (with float slack) — the vector
+    /// generalization of the scalar budget check.
+    pub fn fits(self, capacity: ResourceVec) -> bool {
+        self.cpu_cores <= capacity.cpu_cores + EPS
+            && self.memory_gb <= capacity.memory_gb + EPS
+            && self.accel_slots <= capacity.accel_slots + EPS
+    }
+
+    /// Component-wise `self ≥ other` (with float slack).
+    pub fn dominates(self, other: ResourceVec) -> bool {
+        other.fits(self)
+    }
+
+    /// The derived scalar cost: `w · r`.  Under the default weights this
+    /// is exactly the paper's CPU-core price.
+    pub fn weighted(self, w: CostWeights) -> f64 {
+        w.cpu * self.cpu_cores + w.mem * self.memory_gb + w.accel * self.accel_slots
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.cpu_cores.is_finite() && self.memory_gb.is_finite() && self.accel_slots.is_finite()
+    }
+
+    pub fn non_negative(self) -> bool {
+        self.cpu_cores >= 0.0 && self.memory_gb >= 0.0 && self.accel_slots >= 0.0
+    }
+}
+
+impl fmt::Display for ResourceVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}c/{}g/{}a", self.cpu_cores, self.memory_gb, self.accel_slots)
+    }
+}
+
+/// Weights of the derived scalar cost norm.  The default prices CPU
+/// cores only — the unit every Eq. 1/Eq. 9 number in the paper (and
+/// every pre-refactor report) is expressed in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostWeights {
+    pub cpu: f64,
+    pub mem: f64,
+    pub accel: f64,
+}
+
+impl Default for CostWeights {
+    fn default() -> Self {
+        CostWeights { cpu: 1.0, mem: 0.0, accel: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_and_norm() {
+        let a = ResourceVec::new(2.0, 8.0, 1.0);
+        let b = ResourceVec::new(1.0, 4.0, 0.0);
+        let s = a.add(b);
+        assert_eq!(s, ResourceVec::new(3.0, 12.0, 1.0));
+        assert_eq!(s.scale(2.0), ResourceVec::new(6.0, 24.0, 2.0));
+        // default norm = cpu cores only (the paper's price)
+        assert_eq!(s.weighted(CostWeights::default()), 3.0);
+        let w = CostWeights { cpu: 1.0, mem: 0.25, accel: 10.0 };
+        assert!((s.weighted(w) - (3.0 + 3.0 + 10.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fits_is_componentwise() {
+        let cap = ResourceVec::new(8.0, 32.0, 1.0);
+        assert!(ResourceVec::new(8.0, 32.0, 1.0).fits(cap));
+        assert!(ResourceVec::new(1.0, 1.0, 0.0).fits(cap));
+        assert!(!ResourceVec::new(9.0, 1.0, 0.0).fits(cap), "cpu axis binds");
+        assert!(!ResourceVec::new(1.0, 33.0, 0.0).fits(cap), "memory axis binds");
+        assert!(!ResourceVec::new(1.0, 1.0, 2.0).fits(cap), "accel axis binds");
+        assert!(cap.dominates(ResourceVec::ZERO));
+        // float slack: a sum that is equal up to rounding still fits
+        let third = ResourceVec::new(8.0 / 3.0, 0.0, 0.0);
+        assert!(third.add(third).add(third).fits(ResourceVec::cpu(8.0)));
+    }
+
+    #[test]
+    fn cpu_embedding_matches_scalar_world() {
+        let r = ResourceVec::cpu(4.0);
+        assert_eq!(r.memory_gb, 0.0);
+        assert_eq!(r.accel_slots, 0.0);
+        assert_eq!(r.weighted(CostWeights::default()), 4.0);
+        assert_eq!(format!("{r}"), "4c/0g/0a");
+    }
+
+    #[test]
+    fn finiteness_and_sign_checks() {
+        assert!(ResourceVec::new(1.0, 2.0, 0.0).is_finite());
+        assert!(!ResourceVec::new(f64::NAN, 0.0, 0.0).is_finite());
+        assert!(!ResourceVec::new(0.0, f64::INFINITY, 0.0).is_finite());
+        assert!(ResourceVec::ZERO.non_negative());
+        assert!(!ResourceVec::new(-1.0, 0.0, 0.0).non_negative());
+    }
+}

@@ -36,7 +36,7 @@ use crate::cluster::core::{ClusterCore, FormOutcome, FormedBatch};
 use crate::cluster::drop_policy::DropPolicy;
 use crate::coordinator::adapter::{Adapter, AdapterConfig, Policy};
 use crate::coordinator::monitoring::Monitor;
-use crate::fleet::core::{FleetCore, FleetReconfig, PoolReport};
+use crate::fleet::core::{FleetCore, FleetReconfig, MemberInit, PoolReport};
 use crate::fleet::solver::{FleetAdapter, FleetController, FleetTuning};
 use crate::metrics::RunMetrics;
 use crate::models::accuracy::AccuracyMetric;
@@ -529,8 +529,12 @@ pub struct FleetServeReport {
 /// [`RunMetrics`] like [`run_fleet_des`]'s equally-named parameter, so
 /// sim/live pairs group under one name.  `tuning` switches on the
 /// elastic control plane (priority tiers, pool autoscaling,
-/// mid-interval preemption, incremental re-solves);
-/// `FleetTuning::default()` reproduces the fixed-pool behavior.
+/// mid-interval preemption, incremental re-solves) plus the pool
+/// description — [`FleetTuning::nodes`] turns the budget into a
+/// heterogeneous node inventory that replicas bin-pack onto, and
+/// [`FleetTuning::sla_classes`] keys each member's drop policy and
+/// batch-timeout ceiling; `FleetTuning::default()` reproduces the
+/// fixed-pool classless behavior.
 ///
 /// [`run_fleet_des`]: crate::simulator::sim::run_fleet_des
 #[allow(clippy::too_many_arguments)]
@@ -571,6 +575,18 @@ pub fn serve_fleet_with(
         live_specs.push(ls);
     }
 
+    // Pool description from the tuning: a node inventory makes the
+    // budget its replica cap, SLA classes key each member's drop
+    // policy and batch-timeout ceiling (None = classic behavior).
+    let inventory = tuning.nodes.clone();
+    let classes = tuning.sla_classes.clone();
+    if let Some(c) = &classes {
+        if c.len() != n {
+            return Err(crate::anyhow!("fleet serve: {} SLA classes for {n} members", c.len()));
+        }
+    }
+    let budget = inventory.as_ref().map_or(budget, |i| i.replica_cap());
+
     let mut adapter = FleetAdapter::new(
         live_specs.clone(),
         profiles.clone(),
@@ -591,12 +607,25 @@ pub fn serve_fleet_with(
     let ts = lg.time_scale.max(1e-9);
     let first: Vec<f64> = traces.iter().map(|t| t.rate_at(0.0) / ts).collect();
     let inits = adapter.initial(&first);
-    let fleet_inits: Vec<(PipelineConfig, f64, DropPolicy)> = inits
+    let fleet_inits: Vec<MemberInit> = inits
         .iter()
         .zip(&slas)
-        .map(|(d, &sla)| (d.config.clone(), f64::INFINITY, DropPolicy::new(sla, true)))
+        .enumerate()
+        .map(|(m, (d, &sla))| MemberInit {
+            config: d.config.clone(),
+            lambda: f64::INFINITY,
+            // the class scales the drop threshold only — attainment
+            // metrics keep judging against the true SLA.  `sla` here is
+            // already in the live (wall-clock) domain — it derives from
+            // the profiles the caller passed, which define that domain
+            // (callers compress them by time_scale) — so the timeout
+            // cap lands in the same domain as the 50 ms dispatch floor.
+            drop: DropPolicy::new(sla, true)
+                .scaled(classes.as_ref().map_or(1.0, |c| c[m].drop_sla_scale())),
+            timeout_cap: classes.as_ref().map_or(f64::INFINITY, |c| c[m].timeout_cap(sla)),
+        })
         .collect();
-    let fleet = FleetCore::new(budget, &fleet_inits).map_err(Error::from)?;
+    let fleet = FleetCore::with_nodes(budget, inventory, &fleet_inits).map_err(Error::from)?;
     let n_stages: Vec<usize> = live_specs.iter().map(PipelineSpec::n_stages).collect();
 
     // Warm every member's initial configuration before the clock starts.

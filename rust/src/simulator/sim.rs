@@ -37,7 +37,7 @@ use crate::cluster::drop_policy::DropPolicy;
 use crate::cluster::reconfig::Reconfig;
 use crate::coordinator::adapter::{Adapter, Decision};
 use crate::coordinator::monitoring::Monitor;
-use crate::fleet::core::{FleetCore, FleetReconfig, PoolReport};
+use crate::fleet::core::{FleetCore, FleetReconfig, MemberInit, PoolReport};
 use crate::fleet::solver::FleetController;
 use crate::metrics::RunMetrics;
 use crate::optimizer::ip::PipelineConfig;
@@ -360,6 +360,13 @@ impl FleetRunMetrics {
 /// Panics if the controller emits an allocation that violates the
 /// budget — controllers built on [`crate::fleet::solver::solve_fleet`]
 /// cannot.
+///
+/// The pool description comes from the controller:
+/// [`FleetController::node_inventory`] switches the budget to a
+/// heterogeneous node pool (replicas bin-pack on every apply, resizes
+/// move whole nodes) and [`FleetController::sla_classes`] keys each
+/// member's drop policy and batch-timeout ceiling.  Plain controllers
+/// leave both off and run the classic fungible/classless loop.
 #[allow(clippy::too_many_arguments)]
 pub fn run_fleet_des(
     profiles: &[PipelineProfiles],
@@ -375,6 +382,16 @@ pub fn run_fleet_des(
     let n = traces.len();
     assert_eq!(profiles.len(), n, "one profile set per member");
     assert_eq!(slas.len(), n, "one SLA per member");
+    // The controller owns the pool description: a node inventory makes
+    // the budget its replica cap, and SLA classes key each member's
+    // drop policy and batch-timeout ceiling.  Plain controllers return
+    // None for both — the classic fungible/classless path.
+    let inventory = ctl.node_inventory();
+    let classes = ctl.sla_classes();
+    if let Some(c) = &classes {
+        assert_eq!(c.len(), n, "one SLA class per member");
+    }
+    let budget = inventory.as_ref().map_or(budget, |i| i.replica_cap());
     let horizon = traces.iter().map(Trace::seconds).max().unwrap_or(0) as f64;
     let mut rng = SplitMix64::new(sim.seed ^ 0xF1EE7);
     let mut events: TimedQueue<FleetEv> = TimedQueue::new();
@@ -390,14 +407,21 @@ pub fn run_fleet_des(
     let first_rates: Vec<f64> = traces.iter().map(|t| t.rate_at(0.0)).collect();
     let inits = ctl.initial(&first_rates);
     assert_eq!(inits.len(), n, "fleet controller must decide per member");
-    let fleet_inits: Vec<(PipelineConfig, f64, DropPolicy)> = inits
+    let fleet_inits: Vec<MemberInit> = inits
         .iter()
         .zip(slas)
-        .map(|(d, &sla)| {
-            (d.config.clone(), d.lambda_predicted, DropPolicy::new(sla, sim.drop_enabled))
+        .enumerate()
+        .map(|(m, (d, &sla))| MemberInit {
+            config: d.config.clone(),
+            lambda: d.lambda_predicted,
+            // the class scales the drop threshold only — attainment
+            // metrics keep judging against the true SLA
+            drop: DropPolicy::new(sla, sim.drop_enabled)
+                .scaled(classes.as_ref().map_or(1.0, |c| c[m].drop_sla_scale())),
+            timeout_cap: classes.as_ref().map_or(f64::INFINITY, |c| c[m].timeout_cap(sla)),
         })
         .collect();
-    let mut fleet = FleetCore::new(budget, &fleet_inits)
+    let mut fleet = FleetCore::with_nodes(budget, inventory, &fleet_inits)
         .expect("fleet controller must respect the replica budget");
     let mut reconfig = FleetReconfig::new(apply_delay);
     let mut active: Vec<PipelineConfig> = inits.iter().map(|d| d.config.clone()).collect();

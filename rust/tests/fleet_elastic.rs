@@ -138,6 +138,7 @@ fn des_autoscaler_grows_within_cap() {
         }),
         preemption: None,
         resolve_threshold: 0.0,
+        ..Default::default()
     };
     let fm = run_elastic_des(floor as u32, tuning, 200, 11);
     assert!(fm.pool.resizes >= 1, "padded demand over the floor must grow the pool");
@@ -171,6 +172,7 @@ fn des_autoscaler_shrinks_toward_cost_target() {
         }),
         preemption: None,
         resolve_threshold: 0.0,
+        ..Default::default()
     };
     let fm = run_elastic_des(24, tuning, 200, 13);
     assert!(fm.budget < 24, "pool never shrank: {:?}", fm.pool);
@@ -206,6 +208,7 @@ fn des_survives_apply_delay_longer_than_interval() {
         }),
         preemption: Some(PreemptionConfig { burst_factor: 1.3, max_reclaim: 4 }),
         resolve_threshold: 0.15,
+        ..Default::default()
     };
     let (_, profs, slas) = demo_parts();
     let mut adapter = adapter_with(16, tuning);
@@ -247,6 +250,7 @@ fn preemption_reclaims_only_from_lower_priority_and_stays_budget_safe() {
                     autoscaler: None,
                     preemption: Some(PreemptionConfig { burst_factor: 1.5, max_reclaim: 4 }),
                     resolve_threshold: 0.0,
+                    ..Default::default()
                 },
             );
             // prime the cache at calm per-member load
@@ -304,6 +308,7 @@ fn preemption_never_fires_without_lower_priority_donors() {
             autoscaler: None,
             preemption: Some(PreemptionConfig::default()),
             resolve_threshold: 0.0,
+            ..Default::default()
         },
     );
     ad.decide_for_lambdas(&[4.0, 4.0, 4.0]);
@@ -316,6 +321,7 @@ fn preemption_never_fires_without_lower_priority_donors() {
             autoscaler: None,
             preemption: Some(PreemptionConfig::default()),
             resolve_threshold: 0.0,
+            ..Default::default()
         },
     );
     eq.decide_for_lambdas(&[4.0, 4.0, 4.0]);
@@ -333,6 +339,7 @@ fn des_preemption_respects_priority_order() {
         autoscaler: None,
         preemption: Some(PreemptionConfig { burst_factor: 1.3, max_reclaim: 4 }),
         resolve_threshold: 0.0,
+        ..Default::default()
     };
     let fm = run_elastic_des(14, tuning, 240, 17);
     assert_eq!(
@@ -361,6 +368,7 @@ fn incremental_equals_full_solve_when_all_lambdas_move() {
                 autoscaler: None,
                 preemption: None,
                 resolve_threshold: threshold,
+                ..Default::default()
             },
         )
     };
@@ -396,6 +404,7 @@ fn incremental_resolves_only_moved_members() {
             autoscaler: None,
             preemption: None,
             resolve_threshold: 0.2,
+            ..Default::default()
         },
     );
     let first = ad.decide_for_lambdas(&[6.0, 6.0, 6.0]);
@@ -451,6 +460,7 @@ fn elastic_sim_and_live_engine_agree_on_counts() {
         }),
         preemption: Some(PreemptionConfig::default()),
         resolve_threshold: 0.15,
+        ..Default::default()
     };
     let predictors2 = || predictors(2);
 
@@ -551,6 +561,7 @@ fn live_engine_elastic_pool_stays_within_bounds() {
         }),
         preemption: Some(PreemptionConfig::default()),
         resolve_threshold: 0.15,
+        ..Default::default()
     };
     let cfg = ServeConfig {
         artifact_dir: String::new(),
