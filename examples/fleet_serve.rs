@@ -30,11 +30,19 @@
 //! now including the preempt column, the cost-vector breakdown and the
 //! pool size/cost/node lines.
 //!
+//! Topology flags: `--nodes` terms take `@zone` suffixes
+//! (`"2x(8c,32g,0a)@east+2x(8c,32g,0a)@west"`), `--spread member[,..]`
+//! flags members whose replicas must survive any single zone loss, and
+//! `--migration-delay 0.5` charges every replica a reconfiguration
+//! moves between nodes through the apply delay (sticky packing keeps
+//! that count low — the migration line in the tables shows it).
+//!
 //! Run: `cargo run --release --example fleet_serve
 //!       [-- --seconds 240 --budget 24 --time-scale 0.05 --fleet spec.json
 //!           --cost-target 30 --static 0
-//!           --nodes "4x(8c,32g,0a)+2x(16c,64g,1a)"
-//!           --class nlp-batchline=throughput]`
+//!           --nodes "2x(8c,32g,0a)@east+2x(8c,32g,0a)@west"
+//!           --class nlp-batchline=throughput
+//!           --spread video-edge --migration-delay 0.5]`
 
 use std::sync::Arc;
 
@@ -42,7 +50,7 @@ use ipa::coordinator::adapter::AdapterConfig;
 use ipa::fleet::autoscaler::AutoscalerConfig;
 use ipa::fleet::nodes::NodeInventory;
 use ipa::fleet::solver::{
-    solve_fleet, solve_fleet_packed, FleetAdapter, FleetTuning, PreemptionConfig,
+    solve_fleet, solve_fleet_placed, FleetAdapter, FleetTuning, PreemptionConfig,
 };
 use ipa::fleet::spec::{FleetSpec, SlaClass};
 use ipa::models::accuracy::AccuracyMetric;
@@ -114,6 +122,19 @@ fn main() {
             }
         }
     }
+    // --spread name[,name..] flags members for zone redundancy.
+    if let Some(spec) = args.get("spread") {
+        for name in spec.split(',').map(str::trim).filter(|n| !n.is_empty()) {
+            match fleet.members.iter_mut().find(|m| m.name == name) {
+                Some(m) => m.spread = true,
+                None => {
+                    eprintln!("--spread names unknown member {name:?}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
+    let migration_delay = args.get_f64("migration-delay", 0.0);
     if let Err(e) = fleet.validate() {
         eprintln!("invalid fleet: {e}");
         std::process::exit(2);
@@ -164,8 +185,9 @@ fn main() {
         .collect();
     match &fleet.nodes {
         Some(inv) => {
-            let alloc = solve_fleet_packed(&problems, inv, &fleet.priorities())
-                .expect("inventory hosts the stage floor");
+            let alloc =
+                solve_fleet_placed(&problems, inv, &fleet.priorities(), &fleet.spreads(), None)
+                    .expect("inventory hosts the stage floor");
             let packing = alloc.packing.as_ref().expect("packed solve carries a packing");
             println!(
                 "\njoint packed solve @ mean λ: {} replicas on {} of {} nodes, \
@@ -195,6 +217,8 @@ fn main() {
         FleetTuning {
             nodes: fleet.nodes.clone(),
             sla_classes: Some(fleet.classes()),
+            spread: Some(fleet.spreads()),
+            migration_delay,
             ..Default::default()
         }
     } else {
@@ -213,14 +237,18 @@ fn main() {
             resolve_threshold: 0.15,
             nodes: fleet.nodes.clone(),
             sla_classes: Some(fleet.classes()),
+            spread: Some(fleet.spreads()),
+            migration_delay,
         }
     };
     println!(
-        "control plane: {} (priorities {:?}, classes {:?}, pool cap {})",
+        "control plane: {} (priorities {:?}, classes {:?}, pool cap {}, \
+         spread {:?}, migration delay {migration_delay}s/replica)",
         if static_pool { "static pool" } else { "elastic" },
         fleet.priorities(),
         fleet.classes().iter().map(|c| c.name()).collect::<Vec<_>>(),
         if static_pool { budget as f64 } else { cost_target },
+        fleet.spreads(),
     );
 
     // ---- clock 1: the fleet DES driver -------------------------------

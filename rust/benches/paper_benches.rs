@@ -317,6 +317,74 @@ fn main() {
     print_section("fleet bin-packing (nodes + packed joint solve)", &rows);
     let fleet_binpack_rows = rows.clone();
 
+    // Topology layer: sticky vs plain pack time on a zoned 3-pool
+    // inventory (plus the moves each pays after a demand shift), and
+    // the zone-kill emergency repack — the packed joint solve on the
+    // survivor inventory, which is what a fault costs on the control
+    // plane.
+    use ipa::fleet::solver::solve_fleet_placed;
+    let mut rows = Vec::new();
+    {
+        let inv = NodeInventory::parse(
+            "30x(8c,32g,0a)@east+30x(8c,32g,0a)@west+40x(16c,64g,2a)@east",
+        )
+        .unwrap();
+        let items: Vec<PackItem> = (0..200u32)
+            .map(|i| PackItem {
+                member: (i % 3) as usize,
+                stage: (i % 2) as usize,
+                unit: match i % 3 {
+                    0 => ResourceVec::new(1.0, 2.0, 0.0),
+                    1 => ResourceVec::new(2.0, 4.0, 0.0),
+                    _ => ResourceVec::new(8.0, 16.0, 1.0),
+                },
+                replicas: 1,
+            })
+            .collect();
+        let prev = inv.pack(&items).expect("inventory sized for the demand mix");
+        // a demand shift: one member grows, another shrinks
+        let mut shifted = items.clone();
+        for it in shifted.iter_mut().take(30) {
+            it.replicas = if it.member == 0 { 2 } else { it.replicas };
+        }
+        for it in shifted.iter_mut().rev().take(30) {
+            it.replicas = if it.member == 1 { 0 } else { it.replicas };
+        }
+        rows.push(b.run("fleet_topology/pack_plain_200", || inv.pack(&shifted)));
+        rows.push(b.run("fleet_topology/pack_sticky_200", || {
+            inv.pack_sticky(&shifted, Some(&prev), &[])
+        }));
+        let sticky_moves = inv
+            .pack_sticky(&shifted, Some(&prev), &[])
+            .map_or(0, |p| p.moved_from(&prev).len());
+        let plain_moves = inv.pack(&shifted).map_or(0, |p| p.moved_from(&prev).len());
+        println!(
+            "fleet topology: sticky reconfig moves {sticky_moves} vs plain FFD {plain_moves}"
+        );
+    }
+    {
+        // zone-kill repack latency: the east zone (with the accel
+        // nodes) dies, the joint solve re-plans on the west survivors
+        let mut survivor = NodeInventory::parse(
+            "4x(4c,16g,0a)@east+4x(4c,16g,0a)@west+2x(16c,64g,2a)@east",
+        )
+        .unwrap();
+        survivor.drain_zone("east");
+        let prios = fleet.priorities();
+        let lambdas = [8.0, 5.0, 3.0];
+        let problems: Vec<Problem> = fleet_specs
+            .iter()
+            .zip(&fleet_profs)
+            .zip(lambdas)
+            .map(|((s, p), l)| Problem::new(s, p, l))
+            .collect();
+        rows.push(b.run("fleet_topology/zone_kill_repack_solve", || {
+            solve_fleet_placed(&problems, &survivor, &prios, &[], None)
+        }));
+    }
+    print_section("fleet topology (sticky packing + zone-kill repack)", &rows);
+    let fleet_topology_rows = rows.clone();
+
     // Perf baseline for future PRs: solver decision time + simulator
     // throughput (single-pipeline and fleet) + elastic control-plane
     // latencies, in a stable JSON shape.
@@ -329,6 +397,7 @@ fn main() {
             ("fleet_sim", &fleet_sim_rows[..]),
             ("fleet_autoscaler", &fleet_autoscaler_rows[..]),
             ("fleet_binpack", &fleet_binpack_rows[..]),
+            ("fleet_topology", &fleet_topology_rows[..]),
         ],
     ) {
         Ok(()) => println!("wrote BENCH_cluster.json"),

@@ -25,6 +25,45 @@
 //! never above [`Autoscaler::max_pool`] (the cost cap) unless the
 //! fleet's feasibility floor itself exceeds the cap — feasibility wins
 //! over cost — and never below that floor.
+//!
+//! On a heterogeneous node pool the replica target alone does not say
+//! WHICH shape to buy; [`pressure_axis`] is the policy half of that
+//! choice: given the fleet's per-axis demand vector and the pool's
+//! total capacity it names the binding axis (cpu/memory/accel), and
+//! [`crate::fleet::nodes::NodeInventory::retarget_with`] buys the shape
+//! that is cheapest per unit of that axis — so accel-bound demand buys
+//! accelerator nodes instead of piling on the cheapest CPU shape.
+
+use crate::resources::ResourceVec;
+
+/// The binding axis of a demand vector against a capacity vector:
+/// index of the largest demand/capacity ratio (0 = cpu, 1 = memory,
+/// 2 = accel).  An axis with demand but zero capacity is maximally
+/// bound; ties prefer the lower index (CPU first), and zero demand
+/// everywhere answers CPU — the classic scalar behavior.
+pub fn pressure_axis(demand: ResourceVec, capacity: ResourceVec) -> usize {
+    let ratio = |d: f64, c: f64| {
+        if d <= 0.0 {
+            0.0
+        } else if c <= 0.0 {
+            f64::INFINITY
+        } else {
+            d / c
+        }
+    };
+    let rs = [
+        ratio(demand.cpu_cores, capacity.cpu_cores),
+        ratio(demand.memory_gb, capacity.memory_gb),
+        ratio(demand.accel_slots, capacity.accel_slots),
+    ];
+    let mut best = 0usize;
+    for (i, &r) in rs.iter().enumerate().skip(1) {
+        if r > rs[best] {
+            best = i;
+        }
+    }
+    best
+}
 
 /// Autoscaler knobs.
 #[derive(Debug, Clone, Copy)]
@@ -233,6 +272,24 @@ mod tests {
             pool = d.target;
         }
         assert_eq!(pool, 6);
+    }
+
+    #[test]
+    fn pressure_axis_names_the_binding_axis() {
+        let cap = ResourceVec::new(32.0, 128.0, 2.0);
+        // cpu-bound: 24/32 dominates 32/128 and 1/2
+        assert_eq!(pressure_axis(ResourceVec::new(24.0, 32.0, 1.0), cap), 0);
+        // accel-bound: 2/2 dominates
+        assert_eq!(pressure_axis(ResourceVec::new(8.0, 16.0, 2.0), cap), 2);
+        // memory-bound
+        assert_eq!(pressure_axis(ResourceVec::new(4.0, 120.0, 0.0), cap), 1);
+        // demand on a zero-capacity axis binds maximally
+        let no_accel = ResourceVec::new(32.0, 128.0, 0.0);
+        assert_eq!(pressure_axis(ResourceVec::new(30.0, 8.0, 1.0), no_accel), 2);
+        // zero demand everywhere answers cpu (scalar behavior)
+        assert_eq!(pressure_axis(ResourceVec::ZERO, cap), 0);
+        // cpu wins exact ties (lower index preferred)
+        assert_eq!(pressure_axis(ResourceVec::new(16.0, 64.0, 1.0), cap), 0);
     }
 
     #[test]

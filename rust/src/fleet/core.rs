@@ -39,6 +39,23 @@
 //! (a shrink must re-pack the active replicas or it is rejected), and
 //! the ledger gains node-seconds per shape.  Per-member SLA classes
 //! plug in as batch-timeout ceilings carried by [`MemberInit`].
+//!
+//! Placement is *sticky*: every apply re-packs against the previous
+//! placement ([`NodeInventory::pack_sticky`] keep-in-place pass, plain
+//! FFD as the fallback when stickiness cannot pack), every placement
+//! NOT inherited from it — moves and new starts, the container churn —
+//! is counted into the migrations ledger
+//! ([`PoolReport::migrations`]), and [`FleetCore::plan_moves`] lets the
+//! drivers price a candidate decision's churn BEFORE staging it — the
+//! per-replica migration delay [`FleetReconfig::with_migration`] then
+//! charges on top of the apply delay.  Zone-spread flags
+//! ([`FleetCore::with_nodes_spread`]) make the pack reject placements a
+//! single zone loss would break, [`FleetCore::kill_zone`] is the fault
+//! actuator (drain a zone's nodes mid-run), and
+//! [`FleetCore::resize_pool_with`] mirrors the controller's inventory
+//! on resizes — with pressure-aware buying the shape CHOICE no longer
+//! follows from the replica target alone, so cap-convergence stopped
+//! being enough to keep the two views in lockstep.
 
 use std::collections::VecDeque;
 
@@ -96,6 +113,14 @@ pub struct PoolReport {
     pub peak_in_use: u32,
     /// Number of [`FleetCore::resize_pool`] calls that changed the size.
     pub resizes: u32,
+    /// Σ container churn across reconfigurations: replica placements
+    /// NOT inherited from the previous packing — node-to-node moves
+    /// and newly started replicas alike (both pay a container start;
+    /// scale-downs tear down for free).  Sticky packing keeps this
+    /// low; always 0 on fungible pools.
+    pub migrations: u32,
+    /// Zones drained by [`FleetCore::kill_zone`] fault events.
+    pub zone_kills: u32,
     /// Number of preemption events applied.
     pub preemptions: u32,
     /// Replicas taken from each member by preemptions (fleet order).
@@ -110,6 +135,9 @@ pub struct PoolReport {
     /// ∫ count dt per shape — node-seconds bought, `(shape name,
     /// seconds)` — empty for fungible pools.
     pub node_secs: Vec<(String, f64)>,
+    /// Final node counts per zone, `(zone, nodes)` — empty for
+    /// fungible or unzoned pools.
+    pub nodes_by_zone: Vec<(String, u32)>,
 }
 
 impl PoolReport {
@@ -133,6 +161,10 @@ pub struct FleetCore {
     inventory: Option<NodeInventory>,
     /// Per-member batch-timeout ceilings (SLA classes).
     timeout_caps: Vec<f64>,
+    /// Per-member zone-spread flags (node pools only): flagged members'
+    /// placements must survive any single zone loss, enforced by every
+    /// pack this core runs.
+    spread: Vec<bool>,
     /// The active per-member configurations (what a pool shrink must
     /// re-pack against).
     last_configs: Vec<PipelineConfig>,
@@ -148,6 +180,10 @@ pub struct FleetCore {
     pool_max: u32,
     /// Size-changing [`FleetCore::resize_pool`] calls.
     resizes: u32,
+    /// Σ replicas moved between consecutive packings.
+    migrations: u32,
+    /// Zones drained by [`FleetCore::kill_zone`].
+    zone_kills: u32,
     /// Preemption events recorded via [`FleetCore::note_preemption`].
     preemptions: u32,
     /// Replicas reclaimed from each member by preemptions.
@@ -182,6 +218,19 @@ impl FleetCore {
         inventory: Option<NodeInventory>,
         inits: &[MemberInit],
     ) -> Result<FleetCore, String> {
+        Self::with_nodes_spread(budget, inventory, inits, &[])
+    }
+
+    /// [`FleetCore::with_nodes`] plus per-member zone-spread flags:
+    /// flagged members' placements must span ≥ 2 failure domains per
+    /// stage (when the inventory has ≥ 2 zones), at construction and
+    /// on every subsequent apply/repack.
+    pub fn with_nodes_spread(
+        budget: u32,
+        inventory: Option<NodeInventory>,
+        inits: &[MemberInit],
+        spread: &[bool],
+    ) -> Result<FleetCore, String> {
         let budget = inventory.as_ref().map_or(budget, |i| i.replica_cap());
         let configured: u32 = inits.iter().map(|mi| mi.config.total_replicas()).sum();
         if configured > budget {
@@ -195,10 +244,12 @@ impl FleetCore {
         let last_packing = match &inventory {
             Some(inv) => {
                 let refs: Vec<&PipelineConfig> = last_configs.iter().collect();
-                Some(inv.pack(&config_demands(&refs)).ok_or_else(|| {
-                    "fleet initial configuration does not pack into the node inventory"
-                        .to_string()
-                })?)
+                Some(inv.pack_sticky(&config_demands(&refs), None, spread).ok_or_else(
+                    || {
+                        "fleet initial configuration does not pack into the node inventory"
+                            .to_string()
+                    },
+                )?)
             }
             None => None,
         };
@@ -213,6 +264,7 @@ impl FleetCore {
             budget,
             inventory,
             timeout_caps: inits.iter().map(|mi| mi.timeout_cap).collect(),
+            spread: spread.to_vec(),
             last_configs,
             last_packing,
             node_secs: vec![0.0; n_shapes],
@@ -220,6 +272,8 @@ impl FleetCore {
             pool_min: budget,
             pool_max: budget,
             resizes: 0,
+            migrations: 0,
+            zone_kills: 0,
             preemptions: 0,
             preempted: vec![0; n],
             last_accrual: 0.0,
@@ -301,7 +355,12 @@ impl FleetCore {
         let packing = match &self.inventory {
             Some(inv) => {
                 let refs: Vec<&PipelineConfig> = configs.iter().map(|(c, _)| c).collect();
-                match inv.pack(&config_demands(&refs)) {
+                let demands = config_demands(&refs);
+                // Sticky first (keep replicas where they are), plain
+                // FFD as the fallback — stickiness is an optimization,
+                // never a new way to reject a packable configuration.
+                let p = inv.pack_prefer_sticky(&demands, self.last_packing.as_ref(), &self.spread);
+                match p {
                     Some(p) => Some(p),
                     None => {
                         return Err(format!(
@@ -316,11 +375,35 @@ impl FleetCore {
             core.apply_config_capped(cfg, *lambda, self.timeout_caps[i]);
         }
         self.last_configs = configs.iter().map(|(c, _)| c.clone()).collect();
-        if packing.is_some() {
-            self.last_packing = packing;
+        if let Some(new) = packing {
+            if let Some(prev) = &self.last_packing {
+                self.migrations += new.moved_from(prev).len() as u32;
+            }
+            self.last_packing = Some(new);
         }
         self.note();
         Ok(())
+    }
+
+    /// The container churn a candidate joint configuration would pay
+    /// if applied now: placements the sticky re-pack cannot inherit
+    /// from the active one — node-to-node moves AND newly started
+    /// replicas (both cost a container start; [`Packing::moved_from`]
+    /// counts exactly this).  0 on fungible/scalar pools, on the first
+    /// placement, or when the candidate does not pack (the apply will
+    /// reject it anyway).  Drivers price this through the
+    /// migration-charged reconfiguration delay BEFORE staging the
+    /// decision.
+    pub fn plan_moves(&self, configs: &[&PipelineConfig]) -> u32 {
+        let (Some(inv), Some(prev)) = (&self.inventory, &self.last_packing) else {
+            return 0;
+        };
+        if inv.is_fungible() {
+            return 0; // fungible slots are a fiction: nothing moves
+        }
+        let demands = config_demands(configs);
+        inv.pack_prefer_sticky(&demands, Some(prev), &self.spread)
+            .map_or(0, |p| p.moved_from(prev).len() as u32)
     }
 
     /// Node placement of the active configurations (node pools only).
@@ -373,29 +456,61 @@ impl FleetCore {
     /// directions (flat node indices shift when elastic nodes come and
     /// go), and a shrink that cannot re-pack them is rejected.
     pub fn resize_pool(&mut self, now: f64, new_budget: u32) -> Result<(), String> {
+        self.resize_pool_with(now, new_budget, None)
+    }
+
+    /// [`FleetCore::resize_pool`] with an inventory *mirror*: when the
+    /// controller runs pressure-aware buying, the shape (and zone) it
+    /// bought no longer follows from the replica target alone, so the
+    /// driver passes the controller's inventory and the core adopts its
+    /// counts wholesale (the shape list must match — only counts may
+    /// differ).  Without a mirror the core retargets by cap exactly as
+    /// before, steering shrink eviction by its own active placement.
+    pub fn resize_pool_with(
+        &mut self,
+        now: f64,
+        new_budget: u32,
+        mirror: Option<&NodeInventory>,
+    ) -> Result<(), String> {
         let configured = self.configured_replicas();
-        if new_budget < configured {
+        if mirror.is_none() && new_budget < configured {
             return Err(format!(
                 "pool resize to {new_budget} below {configured} configured replicas"
             ));
         }
         // Resolve the target to whole nodes when the pool is an
         // inventory (the cap moves in node-sized steps).
-        let (target, tentative) = match &self.inventory {
-            Some(inv) => {
+        let (target, tentative) = match (&self.inventory, mirror) {
+            (Some(cur), Some(m)) => {
+                if cur.pools.len() != m.pools.len()
+                    || !cur.pools.iter().zip(&m.pools).all(|(a, b)| a.shape == b.shape)
+                {
+                    return Err("pool mirror has a different shape list".into());
+                }
+                (m.replica_cap(), Some(m.clone()))
+            }
+            (Some(inv), None) => {
                 let mut t = inv.clone();
-                t.retarget(new_budget.max(configured));
+                t.retarget_with(new_budget.max(configured), None, self.last_packing.as_ref());
                 (t.replica_cap(), Some(t))
             }
-            None => (new_budget, None),
+            (None, _) => (new_budget, None),
         };
-        if target == self.budget {
+        if target < configured {
+            return Err(format!(
+                "pool resize to {target} below {configured} configured replicas"
+            ));
+        }
+        if target == self.budget
+            && tentative.as_ref().is_none_or(|t| Some(t) == self.inventory.as_ref())
+        {
             return Ok(());
         }
         let mut new_packing = None;
         if let Some(t) = &tentative {
+            let demands = config_demands(&self.last_configs.iter().collect::<Vec<_>>());
             new_packing =
-                t.pack(&config_demands(&self.last_configs.iter().collect::<Vec<_>>()));
+                t.pack_prefer_sticky(&demands, self.last_packing.as_ref(), &self.spread);
             if new_packing.is_none() && target < self.budget {
                 return Err(format!(
                     "pool shrink to {target} strands active replicas: the remaining \
@@ -411,12 +526,63 @@ impl FleetCore {
             // layout (growth can, in pathological cases, fail the FFD
             // re-pack even with more capacity — then no placement is
             // claimed rather than a stale one kept)
+            if let (Some(prev), Some(new)) = (&self.last_packing, &new_packing) {
+                self.migrations += new.moved_from(prev).len() as u32;
+            }
             self.last_packing = new_packing;
         }
         self.pool_min = self.pool_min.min(target);
         self.pool_max = self.pool_max.max(target);
         self.resizes += 1;
         Ok(())
+    }
+
+    /// Fault actuator: drain every node in `zone` mid-run.  The budget
+    /// drops to the survivor inventory's cap — possibly BELOW the
+    /// configured replicas (it is an outage, not a negotiation); the
+    /// stale placement is discarded and callers follow up with an
+    /// emergency apply solved under the survivor pool.  Returns the
+    /// number of nodes drained (0 = unknown zone / fungible / no
+    /// inventory, and nothing changes).  The zone is drained, not
+    /// condemned: a later autoscaler growth may repurchase into it
+    /// (modeling recovery) — see [`NodeInventory::drain_zone`].
+    pub fn kill_zone(&mut self, now: f64, zone: &str) -> u32 {
+        let Some(inv) = &self.inventory else { return 0 };
+        if inv.is_fungible()
+            || !inv.pools.iter().any(|p| p.count > 0 && p.shape.zone == zone)
+        {
+            return 0;
+        }
+        self.accrue(now);
+        let inv = self.inventory.as_mut().expect("checked above");
+        let drained = inv.drain_zone(zone);
+        self.budget = inv.replica_cap();
+        self.pool_min = self.pool_min.min(self.budget);
+        self.zone_kills += 1;
+        self.last_packing = None;
+        drained
+    }
+
+    /// Per member, the minimum over its stages of replicas that would
+    /// SURVIVE losing `zone` under the active placement — the quantity
+    /// zone-spread keeps ≥ 1 for flagged members.  `None` without a
+    /// node-backed placement.
+    pub fn zone_survivors(&self, zone: &str) -> Option<Vec<u32>> {
+        let packing = self.last_packing.as_ref()?;
+        let inv = self.inventory.as_ref()?;
+        let by_key = packing.survivors_of_zone(inv, zone);
+        Some(
+            self.cores
+                .iter()
+                .enumerate()
+                .map(|(m, c)| {
+                    (0..c.stages.len())
+                        .map(|s| by_key.get(&(m, s)).copied().unwrap_or(0))
+                        .min()
+                        .unwrap_or(0)
+                })
+                .collect(),
+        )
     }
 
     /// Record one applied preemption event: `from` lists (member,
@@ -434,8 +600,14 @@ impl FleetCore {
     /// [`FleetCore::accrue`] the final instant first).
     pub fn pool_report(&self) -> PoolReport {
         // The fungible embedding must report byte-identically to the
-        // classic scalar pool, so its node bookkeeping is suppressed.
-        let (nodes_final, node_secs) = match &self.inventory {
+        // classic scalar pool, so its node bookkeeping is suppressed —
+        // including migrations: fungible "slots" are a fiction, nothing
+        // physically moves (the scalar pool always reports 0).
+        let migrations = match &self.inventory {
+            Some(inv) if !inv.is_fungible() => self.migrations,
+            _ => 0,
+        };
+        let (nodes_final, node_secs, nodes_by_zone) = match &self.inventory {
             Some(inv) if !inv.is_fungible() => (
                 inv.pools.iter().map(|p| (p.shape.name.clone(), p.count)).collect(),
                 inv.pools
@@ -443,8 +615,9 @@ impl FleetCore {
                     .zip(&self.node_secs)
                     .map(|(p, &s)| (p.shape.name.clone(), s))
                     .collect(),
+                inv.nodes_by_zone(),
             ),
-            _ => (Vec::new(), Vec::new()),
+            _ => (Vec::new(), Vec::new(), Vec::new()),
         };
         PoolReport {
             budget: self.budget,
@@ -452,12 +625,15 @@ impl FleetCore {
             pool_max: self.pool_max,
             peak_in_use: self.peak_in_use,
             resizes: self.resizes,
+            migrations,
+            zone_kills: self.zone_kills,
             preemptions: self.preemptions,
             preempted: self.preempted.clone(),
             bought_replica_secs: self.bought_replica_secs,
             used_replica_secs: self.used_replica_secs,
             nodes_final,
             node_secs,
+            nodes_by_zone,
         }
     }
 
@@ -494,25 +670,45 @@ pub struct StagedFleet {
 #[derive(Debug)]
 pub struct FleetReconfig {
     pub apply_delay: f64,
+    /// Extra activation delay charged per unit of container churn the
+    /// staged decision pays — replicas moved between nodes AND replicas
+    /// newly started (§4 reconfiguration cost made visible): a churny
+    /// decision lands later than a stable one.
+    pub migration_delay: f64,
     pending: VecDeque<StagedFleet>,
 }
 
 impl FleetReconfig {
     pub fn new(apply_delay: f64) -> Self {
-        FleetReconfig { apply_delay: apply_delay.max(0.0), pending: VecDeque::new() }
+        Self::with_migration(apply_delay, 0.0)
+    }
+
+    /// [`FleetReconfig::new`] with a per-replica migration charge:
+    /// staging a decision that moves `moves` replicas activates after
+    /// `apply_delay + migration_delay × moves`.
+    pub fn with_migration(apply_delay: f64, migration_delay: f64) -> Self {
+        FleetReconfig {
+            apply_delay: apply_delay.max(0.0),
+            migration_delay: migration_delay.max(0.0),
+            pending: VecDeque::new(),
+        }
     }
 
     /// Stage a joint decision at `now`, recording the pool `budget` it
     /// was solved under (and optionally a pool shrink to perform after
-    /// activation); returns its activation time.
+    /// activation); `moves` is the replica-migration count the decision
+    /// pays for ([`FleetCore::plan_moves`]), each charged at
+    /// `migration_delay` on top of the apply delay.  Returns the
+    /// activation time — never earlier than the uncharged one.
     pub fn stage(
         &mut self,
         now: f64,
         decisions: Vec<Decision>,
         budget: u32,
         shrink_to: Option<u32>,
+        moves: u32,
     ) -> f64 {
-        let at = now + self.apply_delay;
+        let at = now + self.apply_delay + self.migration_delay * moves as f64;
         self.pending.push_back(StagedFleet { decisions, at, budget, shrink_to });
         at
     }
@@ -524,17 +720,32 @@ impl FleetReconfig {
         self.pending.iter().map(|s| s.budget).max()
     }
 
-    /// Drain every staged decision whose activation time has come and
-    /// return only the NEWEST of them (coalescing).  A joint decision
-    /// fully supersedes any older one — applying a stale configuration
-    /// for an instant before the current one would churn every member
-    /// core for nothing — so when a slow tick lets several stages come
-    /// due together, the older ones (and any pool shrink they carried,
-    /// which was computed against a budget that no longer reflects the
-    /// controller's view) are discarded, never left queued.
+    /// Drain every staged decision up to the NEWEST-staged one whose
+    /// activation time has come, and return that one (coalescing).  A
+    /// joint decision fully supersedes any older-staged one — applying
+    /// a stale configuration for an instant before the current one
+    /// would churn every member core for nothing — so when a slow tick
+    /// lets several stages come due together, the older ones (and any
+    /// pool shrink they carried, which was computed against a budget
+    /// that no longer reflects the controller's view) are discarded,
+    /// never left queued.
+    ///
+    /// Activation times are NOT monotone in staging order: the per-move
+    /// migration charge can make an earlier, churnier decision land
+    /// LATER than a subsequent stable one.  The scan therefore covers
+    /// the whole queue, not just a front prefix — a stable decision is
+    /// never stuck behind a stale churny one, and once it applies the
+    /// older entry is dropped rather than left to revert it later.
     pub fn pop_due(&mut self, now: f64) -> Option<StagedFleet> {
+        let last_due = self
+            .pending
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.at <= now + 1e-9)
+            .map(|(i, _)| i)
+            .last()?;
         let mut newest = None;
-        while self.pending.front().is_some_and(|s| s.at <= now + 1e-9) {
+        for _ in 0..=last_due {
             newest = self.pending.pop_front();
         }
         newest
@@ -542,8 +753,9 @@ impl FleetReconfig {
 
     /// Staged fleets discarded by coalescing so far would be invisible;
     /// expose how many entries are due at `now` for diagnostics/tests.
+    /// (Whole-queue scan: migration charges break `at` monotonicity.)
     pub fn due_len(&self, now: f64) -> usize {
-        self.pending.iter().take_while(|s| s.at <= now + 1e-9).count()
+        self.pending.iter().filter(|s| s.at <= now + 1e-9).count()
     }
 
     /// Discard everything staged (a preemption superseded it: the fast
@@ -556,8 +768,10 @@ impl FleetReconfig {
         n
     }
 
+    /// Earliest pending activation time (NOT the front entry's — see
+    /// [`FleetReconfig::pop_due`] on why `at` is not monotone).
     pub fn next_due(&self) -> Option<f64> {
-        self.pending.front().map(|s| s.at)
+        self.pending.iter().map(|s| s.at).reduce(f64::min)
     }
 
     pub fn pending_len(&self) -> usize {
@@ -693,8 +907,8 @@ mod tests {
             fallback: false,
         };
         let mut r = FleetReconfig::new(8.0);
-        assert_eq!(r.stage(10.0, vec![d(1.0), d(2.0)], 8, None), 18.0);
-        assert_eq!(r.stage(20.0, vec![d(3.0), d(4.0)], 8, None), 28.0);
+        assert_eq!(r.stage(10.0, vec![d(1.0), d(2.0)], 8, None, 0), 18.0);
+        assert_eq!(r.stage(20.0, vec![d(3.0), d(4.0)], 8, None, 0), 28.0);
         assert_eq!(r.pending_len(), 2);
         assert!(r.pop_due(17.9).is_none());
         let first = r.pop_due(18.0).unwrap();
@@ -726,9 +940,9 @@ mod tests {
             fallback: false,
         };
         let mut r = FleetReconfig::new(8.0);
-        r.stage(10.0, vec![d(1.0)], 9, Some(9));
-        r.stage(20.0, vec![d(2.0)], 12, None);
-        r.stage(30.0, vec![d(3.0)], 10, None);
+        r.stage(10.0, vec![d(1.0)], 9, Some(9), 0);
+        r.stage(20.0, vec![d(2.0)], 12, None, 0);
+        r.stage(30.0, vec![d(3.0)], 10, None, 0);
         // a slow tick: all three are due by t=40
         assert_eq!(r.due_len(40.0), 3);
         assert_eq!(r.max_pending_budget(), Some(12));
@@ -862,14 +1076,18 @@ mod tests {
 
     #[test]
     fn node_shrink_rejected_when_replicas_would_strand() {
-        // elastic 8c nodes host the replicas; the fixed shape cannot
-        let inv = NodeInventory::parse("2x(8c,32g,0a)+1x(1c,4g,0a)").unwrap();
-        let inits = node_inits(&[(2, ResourceVec::new(8.0, 4.0, 0.0))]);
+        // the elastic 8c shape (accel tie-break keeps the accel node
+        // special) hosts the replicas; the remaining 16c node cannot
+        // take all three 8-core replicas at once
+        let inv = NodeInventory::parse("2x(8c,32g,0a)+1x(16c,64g,1a)").unwrap();
+        assert_eq!(inv.elastic_idx(), 0, "8c shape is the elastic one");
+        let inits = node_inits(&[(3, ResourceVec::new(8.0, 4.0, 0.0))]);
         let mut f = FleetCore::with_nodes(0, Some(inv), &inits).unwrap();
-        assert_eq!(f.budget(), 17);
-        // shrinking to 1 would remove both 8c nodes -> replicas strand
-        assert!(f.resize_pool(5.0, 2).is_err());
-        assert_eq!(f.budget(), 17, "rejected shrink leaves the pool untouched");
+        assert_eq!(f.budget(), 32);
+        // shrinking toward 3 would sell BOTH 8c nodes (24 cpu of
+        // replica demand cannot re-pack onto the 16c survivor)
+        assert!(f.resize_pool(5.0, 3).is_err());
+        assert_eq!(f.budget(), 32, "rejected shrink leaves the pool untouched");
     }
 
     #[test]
@@ -900,6 +1118,121 @@ mod tests {
             (f.member(0).stages[0].dispatcher.timeout() - 0.2).abs() < 1e-9,
             "the class ceiling survives reconfiguration"
         );
+    }
+
+    #[test]
+    fn sticky_apply_counts_only_real_migrations() {
+        let inv = NodeInventory::parse("2x(8c,32g,0a)+1x(16c,64g,2a)").unwrap();
+        let inits = node_inits(&[(2, ResourceVec::new(4.0, 4.0, 0.0))]);
+        let mut f = FleetCore::with_nodes(0, Some(inv), &inits).unwrap();
+        let cfg = |n| (config_res(&[(1, n)], ResourceVec::new(4.0, 4.0, 0.0)), 10.0);
+        // re-applying the same configuration moves nothing
+        f.apply(&[cfg(2)]).unwrap();
+        assert_eq!(f.pool_report().migrations, 0, "unchanged config must not migrate");
+        // growth places NEW replicas (each counts as one move) but the
+        // existing ones stay put
+        f.apply(&[cfg(4)]).unwrap();
+        assert_eq!(f.pool_report().migrations, 2, "two new replicas, zero displaced");
+        // plan_moves prices the same diff without committing it
+        let (next, _) = cfg(6);
+        assert_eq!(f.plan_moves(&[&next]), 2);
+        assert_eq!(f.pool_report().migrations, 2, "plan_moves is read-only");
+    }
+
+    #[test]
+    fn kill_zone_drains_nodes_and_lowers_the_budget() {
+        let inv =
+            NodeInventory::parse("2x(8c,32g,0a)@east+2x(8c,32g,0a)@west").unwrap();
+        let inits = node_inits(&[(2, ResourceVec::new(4.0, 4.0, 0.0))]);
+        let mut f = FleetCore::with_nodes(0, Some(inv), &inits).unwrap();
+        assert_eq!(f.budget(), 32);
+        assert!(f.zone_survivors("east").is_some());
+        // unknown zone: no-op
+        assert_eq!(f.kill_zone(5.0, "nowhere"), 0);
+        assert_eq!(f.budget(), 32);
+        // draining west halves the pool and discards the placement
+        assert_eq!(f.kill_zone(10.0, "west"), 2);
+        assert_eq!(f.budget(), 16);
+        let rep = f.pool_report();
+        assert_eq!(rep.zone_kills, 1);
+        assert_eq!(rep.pool_min, 16);
+        assert_eq!(rep.nodes_by_zone, vec![("east".to_string(), 2), ("west".to_string(), 0)]);
+        assert!(f.last_packing().is_none(), "stale placement discarded");
+        // an emergency apply re-packs onto the survivors
+        f.apply(&[(config_res(&[(1, 2)], ResourceVec::new(4.0, 4.0, 0.0)), 10.0)]).unwrap();
+        assert!(f.last_packing().is_some());
+    }
+
+    #[test]
+    fn migration_charge_never_activates_earlier_than_uncharged() {
+        let d = || Decision {
+            config: PipelineConfig {
+                stages: Vec::new(),
+                pas: 1.0,
+                cost: 1.0,
+                batch_sum: 0,
+                objective: 0.0,
+                latency_e2e: 0.0,
+                resources: ResourceVec::ZERO,
+            },
+            lambda_predicted: 10.0,
+            decision_time: 0.0,
+            fallback: false,
+        };
+        let mut plain = FleetReconfig::new(8.0);
+        let mut charged = FleetReconfig::with_migration(8.0, 0.5);
+        assert_eq!(plain.stage(10.0, vec![d()], 8, None, 3), 18.0, "uncharged ignores moves");
+        assert_eq!(charged.stage(10.0, vec![d()], 8, None, 3), 19.5, "3 moves × 0.5s");
+        assert_eq!(charged.stage(20.0, vec![d()], 8, None, 0), 28.0, "stable decision pays 0");
+    }
+
+    /// Regression: migration charges make activation times NON-MONOTONE
+    /// in staging order — a stable decision staged after a churny one
+    /// must still land at ITS (earlier) time, and the stale churny
+    /// entry must be dropped, never applied later to revert it.
+    #[test]
+    fn fleet_reconfig_stable_decision_not_stuck_behind_churny_one() {
+        let d = |pas: f64| Decision {
+            config: PipelineConfig {
+                stages: Vec::new(),
+                pas,
+                cost: 1.0,
+                batch_sum: 0,
+                objective: 0.0,
+                latency_e2e: 0.0,
+                resources: ResourceVec::ZERO,
+            },
+            lambda_predicted: 10.0,
+            decision_time: 0.0,
+            fallback: false,
+        };
+        let mut r = FleetReconfig::with_migration(8.0, 0.5);
+        // churny decision at t=10: 30 moves -> lands at 33
+        assert_eq!(r.stage(10.0, vec![d(1.0)], 8, None, 30), 33.0);
+        // stable decision at t=20: 0 moves -> lands at 28, BEFORE it
+        assert_eq!(r.stage(20.0, vec![d(2.0)], 8, None, 0), 28.0);
+        assert_eq!(r.next_due(), Some(28.0), "earliest activation, not front's");
+        assert_eq!(r.due_len(28.0), 1);
+        let s = r.pop_due(28.0).expect("stable decision lands at its own time");
+        assert_eq!(s.decisions[0].config.pas, 2.0, "the NEWER decision applies");
+        assert_eq!(r.pending_len(), 0, "stale churny entry dropped, never applied");
+        assert!(r.pop_due(100.0).is_none());
+    }
+
+    #[test]
+    fn resize_pool_with_mirror_adopts_the_controller_inventory() {
+        let inv = NodeInventory::parse("2x(4c,16g,0a)@east+2x(4c,16g,0a)@west").unwrap();
+        let inits = node_inits(&[(2, ResourceVec::new(4.0, 4.0, 0.0))]);
+        let mut f = FleetCore::with_nodes(0, Some(inv.clone()), &inits).unwrap();
+        // the controller bought a west node the cap alone cannot express
+        let mut mirror = inv.clone();
+        mirror.pools[1].count = 3;
+        f.resize_pool_with(10.0, mirror.replica_cap(), Some(&mirror)).unwrap();
+        assert_eq!(f.inventory().unwrap(), &mirror, "counts adopted wholesale");
+        assert_eq!(f.budget(), 20);
+        // a mirror with a different shape LIST is rejected
+        let alien = NodeInventory::parse("4x(8c,32g,0a)").unwrap();
+        assert!(f.resize_pool_with(20.0, 32, Some(&alien)).is_err());
     }
 
     #[test]

@@ -10,12 +10,35 @@
 //! visited accel-poorest-first so CPU-only replicas never squat
 //! accelerator slots).
 //!
+//! **Sticky packing.**  [`NodeInventory::pack_sticky`] additionally
+//! takes the *previous* [`Packing`] and minimizes replica moves between
+//! consecutive packings: a keep-in-place first pass pins every replica
+//! whose old node (same shape, same ordinal — node identity survives
+//! count changes) still has room for its new demand, and only the
+//! displaced/new replicas fall through to the FFD pass.
+//! [`Packing::moved_from`] diffs two packings into the replicas that
+//! changed nodes — the migration count the fleet core charges through
+//! the reconfiguration delay.
+//!
+//! **Failure domains.**  Every [`NodeShape`] carries a `zone` label
+//! (`""` = the single unnamed zone; parse syntax
+//! `"4x(8c,32g,0a)@east"`).  Members flagged for *zone spread* have
+//! their replicas placed across ≥ 2 distinct zones per stage (the FFD
+//! pass prefers zones the stage does not occupy yet, and the packing is
+//! rejected when a spread stage ends up single-zoned), so losing any
+//! one zone never takes a spread member below its one-replica-per-stage
+//! floor.  [`NodeInventory::drain_zone`] is the fault actuator: it
+//! zeroes every pool in a zone (shape list preserved, so node-seconds
+//! ledgers keep their indices).
+//!
 //! **Scalar embedding.**  [`NodeInventory::fungible`] reproduces the
 //! pre-refactor pool exactly: `n` unit nodes of one `1c/0g/0a` shape,
 //! with every replica's demand coerced to one CPU slot
 //! ([`NodeInventory::demand_of`]).  Packing then succeeds iff the
 //! replica count fits the pool — byte-identical to the old scalar
-//! budget check — which is how the regression tests pin the refactor.
+//! budget check — which is how the regression tests pin the refactor
+//! (with no previous packing and no spread flags, `pack_sticky` IS the
+//! PR-4 `pack`).
 //!
 //! **Elasticity.**  [`NodeInventory::retarget`] adds/removes WHOLE
 //! nodes of the elastic (cheapest-per-slot) shape toward a replica
@@ -23,25 +46,35 @@
 //! cap holds), shrink never undershoots it.  For a target that is
 //! itself a REACHABLE cap of the inventory (some whole-node count
 //! yields exactly that replica cap), `retarget` converges to that cap
-//! from any starting count — and reachable caps are the only targets
-//! the control plane ships: the adapter resolves the autoscaler's raw
-//! proposal first and the drivers forward the adapter's resolved cap,
-//! which keeps the controller's inventory view and the fleet core's
-//! actuated one in lockstep without shipping node lists.  (Arbitrary
-//! raw targets are direction-dependent: grow parks in `(t−slots, t]`,
-//! shrink in `[t, t+slots)`.)
+//! from any starting count.  [`NodeInventory::retarget_with`] is the
+//! topology-aware variant: growth under a per-axis *pressure* vector
+//! buys the shape that is cheapest per unit of the binding axis
+//! (accel-bound demand buys accelerator nodes instead of the cheapest
+//! CPU shape), and shrink sells cheapest-tier nodes first, then
+//! specialer shapes but only down to what growth elastically BOUGHT
+//! ([`NodePool::bought`] — a pressure burst's accel purchases are
+//! reclaimable, an operator's provisioned accel nodes never leave),
+//! draining the zone with the most spare capacity first (fighting
+//! stickiness least).  Because shape
+//! CHOICE now depends on more than the replica target, the control
+//! plane no longer relies on cap-convergence alone: the fleet core
+//! mirrors the controller's inventory on every resize
+//! (`FleetCore::resize_pool_with`).
 
+use std::collections::HashMap;
 use std::fmt;
 
 use crate::optimizer::ip::PipelineConfig;
 use crate::resources::{CostWeights, ResourceVec};
 use crate::util::json::Json;
 
-/// One node hardware variant: a name and its capacity vector.
+/// One node hardware variant: a name, its capacity vector and the
+/// failure domain (zone/rack) it lives in (`""` = unzoned).
 #[derive(Debug, Clone, PartialEq)]
 pub struct NodeShape {
     pub name: String,
     pub capacity: ResourceVec,
+    pub zone: String,
 }
 
 /// `count` nodes of one shape.
@@ -49,6 +82,13 @@ pub struct NodeShape {
 pub struct NodePool {
     pub shape: NodeShape,
     pub count: u32,
+    /// Nodes of this shape acquired ELASTICALLY (by
+    /// [`NodeInventory::retarget_with`] growth) beyond the provisioned
+    /// baseline.  Shrink may always sell the elastic (cheapest) tier,
+    /// but sells specialer shapes only down to what was bought — an
+    /// operator's fixed accelerator nodes never leave the pool.
+    /// Transient control-plane state: not serialized, reset by parsing.
+    pub bought: u32,
 }
 
 /// The whole cluster: counts of heterogeneous node shapes.
@@ -93,6 +133,25 @@ pub struct Packing {
     pub placements: Vec<Placement>,
 }
 
+/// Node-identity mapping between two flat layouts: a node keeps its
+/// identity when its shape index AND its ordinal within that shape
+/// survive (counts change at the tail of each shape pool).
+fn map_nodes(from: &[usize], to: &[usize]) -> Vec<Option<usize>> {
+    let n_shapes = from.iter().chain(to.iter()).copied().max().map_or(0, |m| m + 1);
+    let mut to_by_shape: Vec<Vec<usize>> = vec![Vec::new(); n_shapes];
+    for (ni, &s) in to.iter().enumerate() {
+        to_by_shape[s].push(ni);
+    }
+    let mut ord = vec![0usize; n_shapes];
+    from.iter()
+        .map(|&s| {
+            let o = ord[s];
+            ord[s] += 1;
+            to_by_shape[s].get(o).copied()
+        })
+        .collect()
+}
+
 impl Packing {
     /// Nodes hosting at least one replica.
     pub fn nodes_used(&self) -> usize {
@@ -127,6 +186,66 @@ impl Packing {
                 .zip(&self.shape_of)
                 .all(|(u, &si)| u.fits(inv.pools[si].shape.capacity))
     }
+
+    /// The replicas of `self` that do NOT sit on a node their
+    /// (member, stage) occupied in `prev` — the container churn a
+    /// reconfiguration from `prev` to `self` pays: node-to-node moves
+    /// and NEW replicas alike (a grown stage starts containers it did
+    /// not inherit; only teardowns are free).  Node identity across
+    /// the two layouts is (shape, ordinal within shape), so the diff
+    /// stays meaningful when elastic nodes came or went in between; a
+    /// replica whose old node no longer exists counts as moved.
+    pub fn moved_from(&self, prev: &Packing) -> Vec<Placement> {
+        let map = map_nodes(&prev.shape_of, &self.shape_of);
+        let mut held: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+        for p in &prev.placements {
+            if let Some(ni) = map[p.node] {
+                held.entry((p.member, p.stage)).or_default().push(ni);
+            }
+        }
+        let mut moved = Vec::new();
+        for p in &self.placements {
+            let stayed = match held.get_mut(&(p.member, p.stage)) {
+                Some(nodes) => match nodes.iter().position(|&n| n == p.node) {
+                    Some(i) => {
+                        nodes.swap_remove(i);
+                        true
+                    }
+                    None => false,
+                },
+                None => false,
+            };
+            if !stayed {
+                moved.push(*p);
+            }
+        }
+        moved
+    }
+
+    /// Distinct zones hosting each (member, stage), for spread checks.
+    fn zones_by_key<'a>(&self, inv: &'a NodeInventory) -> HashMap<(usize, usize), Vec<&'a str>> {
+        let mut zones: HashMap<(usize, usize), Vec<&str>> = HashMap::new();
+        for p in &self.placements {
+            let z = inv.pools[self.shape_of[p.node]].shape.zone.as_str();
+            let e = zones.entry((p.member, p.stage)).or_default();
+            if !e.contains(&z) {
+                e.push(z);
+            }
+        }
+        zones
+    }
+
+    /// Replicas of each (member, stage) that survive losing `zone`.
+    pub fn survivors_of_zone(&self, inv: &NodeInventory, zone: &str) -> HashMap<(usize, usize), u32> {
+        let mut out: HashMap<(usize, usize), u32> = HashMap::new();
+        for p in &self.placements {
+            let z = &inv.pools[self.shape_of[p.node]].shape.zone;
+            if z != zone {
+                *out.entry((p.member, p.stage)).or_insert(0) += 1;
+            }
+        }
+        out
+    }
 }
 
 impl NodeInventory {
@@ -142,8 +261,13 @@ impl NodeInventory {
     pub fn fungible(n: u32) -> NodeInventory {
         NodeInventory {
             pools: vec![NodePool {
-                shape: NodeShape { name: "slot".into(), capacity: ResourceVec::cpu(1.0) },
+                shape: NodeShape {
+                    name: "slot".into(),
+                    capacity: ResourceVec::cpu(1.0),
+                    zone: String::new(),
+                },
                 count: n,
+                bought: 0,
             }],
             fungible: true,
         }
@@ -188,11 +312,92 @@ impl NodeInventory {
             .fold(ResourceVec::ZERO, |a, p| a.add(p.shape.capacity.scale(p.count as f64)))
     }
 
+    /// Distinct zone labels among pools that still hold nodes.  Spread
+    /// constraints are vacuous below 2 (nothing to spread across).
+    pub fn distinct_zones(&self) -> usize {
+        let mut zones: Vec<&str> = Vec::new();
+        for p in &self.pools {
+            if p.count > 0 && !zones.contains(&p.shape.zone.as_str()) {
+                zones.push(p.shape.zone.as_str());
+            }
+        }
+        zones.len()
+    }
+
+    /// Distinct zones with at least one node shape that can host one
+    /// replica of this demand (spread pre-filter: a variant needing
+    /// ≥ 2 zones must find capacity in ≥ 2).
+    pub fn zones_fitting(&self, unit: ResourceVec) -> usize {
+        let d = self.demand_of(unit);
+        let mut zones: Vec<&str> = Vec::new();
+        for p in &self.pools {
+            if p.count > 0
+                && d.fits(p.shape.capacity)
+                && !zones.contains(&p.shape.zone.as_str())
+            {
+                zones.push(p.shape.zone.as_str());
+            }
+        }
+        zones.len()
+    }
+
+    /// Zero every pool in `zone` (the fault actuator — shape list and
+    /// indices preserved so per-shape ledgers stay aligned).  Returns
+    /// the number of nodes drained; fungible pools are never drained.
+    ///
+    /// Note the zone is drained, not condemned: a later
+    /// [`NodeInventory::retarget_with`] growth may buy nodes back into
+    /// it (the zone "recovered" — inventories carry no liveness state).
+    /// Fault experiments that must keep a zone dead should not run the
+    /// autoscaler across the outage window.
+    pub fn drain_zone(&mut self, zone: &str) -> u32 {
+        if self.fungible {
+            return 0;
+        }
+        let mut drained = 0;
+        for p in &mut self.pools {
+            if p.shape.zone == zone {
+                drained += p.count;
+                p.count = 0;
+                p.bought = 0;
+            }
+        }
+        drained
+    }
+
+    /// Node counts grouped by zone, first-appearance order — empty when
+    /// every pool is unzoned (so unzoned reports stay unchanged).
+    pub fn nodes_by_zone(&self) -> Vec<(String, u32)> {
+        if self.pools.iter().all(|p| p.shape.zone.is_empty()) {
+            return Vec::new();
+        }
+        let mut out: Vec<(String, u32)> = Vec::new();
+        for p in &self.pools {
+            match out.iter_mut().find(|(z, _)| *z == p.shape.zone) {
+                Some((_, c)) => *c += p.count,
+                None => out.push((p.shape.zone.clone(), p.count)),
+            }
+        }
+        out
+    }
+
     /// Can SOME node shape host one replica of this demand?  (Option
     /// pre-filter: variants failing this can never be placed.)
     pub fn fits_any_node(&self, unit: ResourceVec) -> bool {
         let d = self.demand_of(unit);
         self.pools.iter().any(|p| d.fits(p.shape.capacity))
+    }
+
+    /// The elastic ordering key of pool `i`: price per replica slot
+    /// under the default cost weights, ties broken toward the LEAST
+    /// special shape (fewest accel slots, then least memory).
+    fn elastic_key(&self, i: usize) -> (f64, f64, f64) {
+        let c = self.pools[i].shape.capacity;
+        (
+            c.weighted(CostWeights::default()) / Self::slots_of(&self.pools[i].shape) as f64,
+            c.accel_slots,
+            c.memory_gb,
+        )
     }
 
     /// Index of the elastic shape — the cheapest per replica slot under
@@ -204,13 +409,10 @@ impl NodeInventory {
     /// because they were listed first.  [`NodeInventory::retarget`]
     /// grows and shrinks this shape only.
     pub fn elastic_idx(&self) -> usize {
-        let w = CostWeights::default();
         let mut best = 0usize;
         let mut best_key = (f64::MAX, f64::MAX, f64::MAX);
-        for (i, p) in self.pools.iter().enumerate() {
-            let c = p.shape.capacity;
-            let rate = c.weighted(w) / Self::slots_of(&p.shape) as f64;
-            let key = (rate, c.accel_slots, c.memory_gb);
+        for i in 0..self.pools.len() {
+            let key = self.elastic_key(i);
             if key < best_key {
                 best_key = key;
                 best = i;
@@ -219,29 +421,146 @@ impl NodeInventory {
         best
     }
 
+    /// The shape pressure-aware growth buys: cheapest (default-weighted
+    /// price) per unit of the BINDING axis of `pressure` vs the current
+    /// total capacity — accel-bound demand buys accelerator nodes, not
+    /// the cheapest CPU shape.  Falls back to the elastic shape when no
+    /// pool offers the binding axis at all.
+    fn buy_shape_for(&self, pressure: ResourceVec) -> usize {
+        let axis = crate::fleet::autoscaler::pressure_axis(pressure, self.total_capacity());
+        let axis_cap = |c: ResourceVec| match axis {
+            0 => c.cpu_cores,
+            1 => c.memory_gb,
+            _ => c.accel_slots,
+        };
+        let w = CostWeights::default();
+        let mut best: Option<((f64, f64, f64), usize)> = None;
+        for (i, p) in self.pools.iter().enumerate() {
+            let c = p.shape.capacity;
+            let a = axis_cap(c);
+            if a <= 0.0 {
+                continue;
+            }
+            let key = (c.weighted(w) / a, c.accel_slots, c.memory_gb);
+            if best.as_ref().is_none_or(|(bk, _)| key < *bk) {
+                best = Some((key, i));
+            }
+        }
+        best.map_or_else(|| self.elastic_idx(), |(_, i)| i)
+    }
+
+    /// Free replica slots in `zone`: capacity slots minus the replicas
+    /// `occupancy` (if any) placed there.  Shape indices — not flat
+    /// node indices — resolve the zone, so an occupancy recorded before
+    /// a count change still reads correctly.
+    fn zone_spare(&self, zone: &str, occupancy: Option<&Packing>) -> f64 {
+        let cap: u32 = self
+            .pools
+            .iter()
+            .filter(|p| p.shape.zone == zone)
+            .map(|p| p.count * Self::slots_of(&p.shape))
+            .sum();
+        let used = occupancy.map_or(0, |pk| {
+            pk.placements
+                .iter()
+                .filter(|pl| {
+                    pk.shape_of
+                        .get(pl.node)
+                        .and_then(|&si| self.pools.get(si))
+                        .is_some_and(|p| p.shape.zone == zone)
+                })
+                .count()
+        });
+        cap as f64 - used as f64
+    }
+
     /// Add/remove WHOLE nodes of the elastic shape toward a replica
     /// target: growth stops at the last whole node that keeps
     /// `replica_cap ≤ target` (the cost cap is never overshot), shrink
     /// stops before `replica_cap` would fall below `target`.  A target
     /// that is a reachable cap of this inventory is converged to
-    /// exactly, from any starting count (what the control plane relies
-    /// on — see the module docs); other targets land within one
+    /// exactly, from any starting count; other targets land within one
     /// elastic node of it, direction-dependent.  Returns true when a
     /// count changed.
     pub fn retarget(&mut self, target: u32) -> bool {
+        self.retarget_with(target, None, None)
+    }
+
+    /// [`NodeInventory::retarget`] with topology awareness: `pressure`
+    /// (the fleet's per-axis demand vector) selects WHICH shape growth
+    /// buys (cheapest per unit of the binding axis — see
+    /// [`crate::fleet::autoscaler::pressure_axis`]), and `occupancy`
+    /// (the active packing) steers shrink toward the zone with the
+    /// most spare capacity — eviction lands where the fewest replicas
+    /// live, which fights stickiness least.  Shrink may sell ANY shape
+    /// (cheapest tier first), so special nodes a pressure burst bought
+    /// are reclaimable once demand subsides.  With both `None` this is
+    /// exactly the classic elastic-shape retarget.
+    pub fn retarget_with(
+        &mut self,
+        target: u32,
+        pressure: Option<ResourceVec>,
+        occupancy: Option<&Packing>,
+    ) -> bool {
         if self.pools.is_empty() {
             return false;
         }
-        let e = self.elastic_idx();
-        let slots = Self::slots_of(&self.pools[e].shape);
         let mut changed = false;
+
+        // ---- grow: the pressure-selected (default: elastic) shape ----
+        let buy = match pressure {
+            Some(pr) => self.buy_shape_for(pr),
+            None => self.elastic_idx(),
+        };
+        let slots = Self::slots_of(&self.pools[buy].shape);
         while self.replica_cap() + slots <= target {
-            self.pools[e].count += 1;
+            self.pools[buy].count += 1;
+            self.pools[buy].bought += 1;
             changed = true;
         }
-        while self.pools[e].count > 0 && self.replica_cap() >= target + slots {
-            self.pools[e].count -= 1;
-            changed = true;
+
+        // ---- shrink: cheapest tier first, most-spare zone first ----
+        // The elastic (cheapest, least special) tier is always
+        // sellable, exactly as before; specialer shapes sell only what
+        // pressure-aware growth BOUGHT (`NodePool::bought`) — so an
+        // accel burst's purchases are reclaimed once demand subsides
+        // (no permanent cost ratchet) while an operator's fixed
+        // accelerator nodes never leave the pool.  Within the order,
+        // the zone with the most spare capacity drains first; the
+        // ranking is frozen at entry (pre-sale occupancy and capacity
+        // — precomputed once): re-ranking after every sale would
+        // alternate zones and evict occupied nodes for no reason,
+        // exactly the churn stickiness exists to avoid.
+        let ekey = self.elastic_key(self.elastic_idx());
+        let spare: Vec<f64> = self
+            .pools
+            .iter()
+            .map(|p| self.zone_spare(&p.shape.zone, occupancy))
+            .collect();
+        let mut sellable: Vec<usize> = (0..self.pools.len())
+            .filter(|&i| {
+                self.pools[i].count > 0
+                    && (self.elastic_key(i) == ekey || self.pools[i].bought > 0)
+            })
+            .collect();
+        sellable.sort_by(|&a, &b| {
+            let (ka, kb) = (self.elastic_key(a), self.elastic_key(b));
+            ka.partial_cmp(&kb)
+                .unwrap()
+                .then(spare[b].partial_cmp(&spare[a]).unwrap())
+                .then(a.cmp(&b)) // ties: listing order
+        });
+        for i in sellable {
+            let elastic_tier = self.elastic_key(i) == ekey;
+            let sl = Self::slots_of(&self.pools[i].shape);
+            while self.pools[i].count > 0
+                && (elastic_tier || self.pools[i].bought > 0)
+                && self.replica_cap() >= target + sl
+            {
+                self.pools[i].count -= 1;
+                self.pools[i].bought = self.pools[i].bought.saturating_sub(1);
+                changed = true;
+            }
         }
         changed
     }
@@ -249,7 +568,7 @@ impl NodeInventory {
     /// Structural validation: at least one shape, nonzero counts,
     /// finite non-negative capacities with ≥ 1 CPU core (a node that
     /// cannot host a single 1-core replica is dead weight), non-blank
-    /// names.
+    /// names, zone labels without surrounding whitespace.
     pub fn validate(&self) -> Result<(), String> {
         if self.pools.is_empty() {
             return Err("node inventory has no shapes".into());
@@ -272,6 +591,9 @@ impl NodeInventory {
             if c.cpu_cores < 1.0 {
                 return Err(format!("node shape {name}: needs >= 1 cpu core"));
             }
+            if p.shape.zone.trim() != p.shape.zone {
+                return Err(format!("node shape {name}: zone has surrounding whitespace"));
+            }
         }
         Ok(())
     }
@@ -284,6 +606,52 @@ impl NodeInventory {
     /// plain nodes before touching accelerator ones.  `None` when some
     /// replica fits no remaining capacity.  Deterministic.
     pub fn pack(&self, items: &[PackItem]) -> Option<Packing> {
+        self.pack_sticky(items, None, &[])
+    }
+
+    /// [`NodeInventory::pack`] with topology awareness.
+    ///
+    /// * `prev` — the previous packing: a keep-in-place first pass pins
+    ///   every replica whose old node (same shape, same ordinal) still
+    ///   has room for its new demand; only displaced/new replicas run
+    ///   the FFD pass, which minimizes moves between consecutive
+    ///   packings ([`Packing::moved_from`] counts what did move).
+    /// * `spread` — per-member zone-spread flags (indexed by
+    ///   `PackItem::member`; missing entries mean false).  When the
+    ///   inventory spans ≥ 2 zones, a flagged member's replicas are
+    ///   placed across zones (the FFD pass prefers zones the stage does
+    ///   not occupy yet; keep-in-place retains a zone-diverse subset
+    ///   first) and the packing is REJECTED if any flagged stage with
+    ///   replicas ends up single-zoned — losing one zone must never
+    ///   take a spread member below its one-replica-per-stage floor.
+    ///
+    /// The fallback policy every consumer of sticky packing shares:
+    /// sticky first (keep replicas where they are), plain FFD when
+    /// stickiness cannot pack — stickiness is an optimization, never a
+    /// new way to reject a packable configuration.  Spread flags apply
+    /// to both attempts.
+    pub fn pack_prefer_sticky(
+        &self,
+        items: &[PackItem],
+        prev: Option<&Packing>,
+        spread: &[bool],
+    ) -> Option<Packing> {
+        match self.pack_sticky(items, prev, spread) {
+            Some(p) => Some(p),
+            // a fresh retry only differs when there was a prev to stick to
+            None if prev.is_some() => self.pack_sticky(items, None, spread),
+            None => None,
+        }
+    }
+
+    /// With `prev = None` and no spread flags this is byte-identical to
+    /// the plain [`NodeInventory::pack`].
+    pub fn pack_sticky(
+        &self,
+        items: &[PackItem],
+        prev: Option<&Packing>,
+        spread: &[bool],
+    ) -> Option<Packing> {
         let mut shape_of = Vec::new();
         for (si, pool) in self.pools.iter().enumerate() {
             for _ in 0..pool.count {
@@ -302,11 +670,78 @@ impl NodeInventory {
                 .then(ca.memory_gb.partial_cmp(&cb.memory_gb).unwrap())
                 .then(a.cmp(&b))
         });
-        // Expand replicas into units, decreasing demand (FFD).
+
+        let spread_zones = self.distinct_zones() >= 2;
+        let is_spread = |m: usize| spread_zones && spread.get(m).copied().unwrap_or(false);
+
+        let mut used = vec![ResourceVec::ZERO; shape_of.len()];
+        let mut placements: Vec<Placement> = Vec::new();
+        let mut remaining: Vec<u32> = items.iter().map(|it| it.replicas).collect();
+        // Zones already hosting each spread (member, stage).
+        let mut key_zones: HashMap<(usize, usize), Vec<String>> = HashMap::new();
+
+        // ---- keep-in-place pass -------------------------------------
+        if let Some(prev) = prev {
+            let map = map_nodes(&prev.shape_of, &shape_of);
+            let mut held: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+            for p in &prev.placements {
+                if let Some(ni) = map[p.node] {
+                    held.entry((p.member, p.stage)).or_default().push(ni);
+                }
+            }
+            for (ii, it) in items.iter().enumerate() {
+                let Some(cands) = held.get_mut(&(it.member, it.stage)) else { continue };
+                if is_spread(it.member) {
+                    // zone-diverse subset first: when a shrink keeps
+                    // only some old replicas, keep one per zone before
+                    // any repeat, so the spread survives the shrink
+                    let mut seen: Vec<&str> = Vec::new();
+                    let mut firsts = Vec::new();
+                    let mut rest = Vec::new();
+                    for &ni in cands.iter() {
+                        let z = self.pools[shape_of[ni]].shape.zone.as_str();
+                        if seen.contains(&z) {
+                            rest.push(ni);
+                        } else {
+                            seen.push(z);
+                            firsts.push(ni);
+                        }
+                    }
+                    firsts.extend(rest);
+                    *cands = firsts;
+                }
+                let d = self.demand_of(it.unit);
+                let mut kept = 0u32;
+                for &ni in cands.iter() {
+                    if kept >= remaining[ii] {
+                        break;
+                    }
+                    if used[ni].add(d).fits(self.pools[shape_of[ni]].shape.capacity) {
+                        used[ni] = used[ni].add(d);
+                        placements.push(Placement {
+                            member: it.member,
+                            stage: it.stage,
+                            node: ni,
+                        });
+                        if is_spread(it.member) {
+                            let z = self.pools[shape_of[ni]].shape.zone.clone();
+                            let e = key_zones.entry((it.member, it.stage)).or_default();
+                            if !e.contains(&z) {
+                                e.push(z);
+                            }
+                        }
+                        kept += 1;
+                    }
+                }
+                remaining[ii] -= kept;
+            }
+        }
+
+        // ---- FFD pass for displaced/new replicas --------------------
         let mut units: Vec<(usize, ResourceVec)> = Vec::new();
         for (ii, it) in items.iter().enumerate() {
             let d = self.demand_of(it.unit);
-            for _ in 0..it.replicas {
+            for _ in 0..remaining[ii] {
                 units.push((ii, d));
             }
         }
@@ -318,25 +753,58 @@ impl NodeInventory {
                 .then(b.1.memory_gb.partial_cmp(&a.1.memory_gb).unwrap())
                 .then(a.0.cmp(&b.0))
         });
-        let mut used = vec![ResourceVec::ZERO; shape_of.len()];
-        let mut placements = Vec::with_capacity(units.len());
         for (ii, d) in units {
-            let node = order.iter().copied().find(|&ni| {
-                used[ni].add(d).fits(self.pools[shape_of[ni]].shape.capacity)
-            })?;
+            let it = &items[ii];
+            let fits = |ni: usize| used[ni].add(d).fits(self.pools[shape_of[ni]].shape.capacity);
+            let node = if is_spread(it.member) {
+                // prefer a zone this stage does not occupy yet
+                let zones = key_zones.entry((it.member, it.stage)).or_default();
+                order
+                    .iter()
+                    .copied()
+                    .find(|&ni| {
+                        !zones.contains(&self.pools[shape_of[ni]].shape.zone) && fits(ni)
+                    })
+                    .or_else(|| order.iter().copied().find(|&ni| fits(ni)))?
+            } else {
+                order.iter().copied().find(|&ni| fits(ni))?
+            };
             used[node] = used[node].add(d);
-            placements.push(Placement { member: items[ii].member, stage: items[ii].stage, node });
+            placements.push(Placement { member: it.member, stage: it.stage, node });
+            if is_spread(it.member) {
+                let z = self.pools[shape_of[node]].shape.zone.clone();
+                let e = key_zones.entry((it.member, it.stage)).or_default();
+                if !e.contains(&z) {
+                    e.push(z);
+                }
+            }
         }
-        Some(Packing { shape_of, used, placements })
+
+        let packing = Packing { shape_of, used, placements };
+
+        // ---- spread validation --------------------------------------
+        if spread_zones {
+            let zones = packing.zones_by_key(self);
+            for it in items {
+                if it.replicas > 0 && is_spread(it.member) {
+                    let n = zones.get(&(it.member, it.stage)).map_or(0, Vec::len);
+                    if n < 2 {
+                        return None; // single-zoned spread stage: rejected
+                    }
+                }
+            }
+        }
+        Some(packing)
     }
 
     // ---- text / JSON IO ---------------------------------------------------
 
-    /// Parse `"4x(8c,32g,0a)+2x(16c,64g,1a)"`: `+`-separated
-    /// `COUNTx(CPUc,MEMg,ACCa)` terms.  `/` is accepted as the
+    /// Parse `"4x(8c,32g,0a)+2x(16c,64g,1a)@east"`: `+`-separated
+    /// `COUNTx(CPUc,MEMg,ACCa)[@ZONE]` terms.  `/` is accepted as the
     /// component separator too, so the [`fmt::Display`] form
-    /// (`4x(8c/32g/0a)`) round-trips through the parser.  Shape names
-    /// default to the canonical capacity string.
+    /// (`4x(8c/32g/0a)@east`) round-trips through the parser.  Shape
+    /// names default to the canonical capacity string; the zone
+    /// defaults to the single unnamed zone.
     pub fn parse(s: &str) -> Result<NodeInventory, String> {
         let mut pools = Vec::new();
         for term in s.split('+') {
@@ -348,6 +816,16 @@ impl NodeInventory {
                 .trim()
                 .parse()
                 .map_err(|_| format!("node term {term:?}: bad count {count:?}"))?;
+            let (rest, zone) = match rest.split_once('@') {
+                Some((r, z)) => {
+                    let z = z.trim();
+                    if z.is_empty() {
+                        return Err(format!("node term {term:?}: empty zone after '@'"));
+                    }
+                    (r, z.to_string())
+                }
+                None => (rest, String::new()),
+            };
             let inner = rest
                 .trim()
                 .strip_prefix('(')
@@ -368,8 +846,9 @@ impl NodeInventory {
             let capacity =
                 ResourceVec::new(num(parts[0], 'c')?, num(parts[1], 'g')?, num(parts[2], 'a')?);
             pools.push(NodePool {
-                shape: NodeShape { name: format!("({capacity})"), capacity },
+                shape: NodeShape { name: format!("({capacity})"), capacity, zone },
                 count,
+                bought: 0,
             });
         }
         let inv = NodeInventory::new(pools);
@@ -378,18 +857,23 @@ impl NodeInventory {
     }
 
     /// JSON shape: `[{"shape": .., "cpu": .., "mem_gb": .., "accel": ..,
-    /// "count": ..}, ..]` (embedded as the fleet spec's `nodes` field).
+    /// "count": .., "zone": ..}, ..]` (embedded as the fleet spec's
+    /// `nodes` field; `zone` is optional and omitted when unzoned).
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.pools
                 .iter()
                 .map(|p| {
-                    Json::obj()
+                    let mut j = Json::obj()
                         .set("shape", p.shape.name.clone())
                         .set("cpu", p.shape.capacity.cpu_cores)
                         .set("mem_gb", p.shape.capacity.memory_gb)
                         .set("accel", p.shape.capacity.accel_slots)
-                        .set("count", p.count as usize)
+                        .set("count", p.count as usize);
+                    if !p.shape.zone.is_empty() {
+                        j = j.set("zone", p.shape.zone.clone());
+                    }
+                    j
                 })
                 .collect(),
         )
@@ -417,9 +901,15 @@ impl NodeInventory {
             if !(0..=u32::MAX as i64).contains(&count) {
                 return Err(format!("nodes[{i}] ({name}): count {count} out of u32 range"));
             }
+            let zone = pj
+                .get("zone")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_default();
             pools.push(NodePool {
-                shape: NodeShape { name, capacity },
+                shape: NodeShape { name, capacity, zone },
                 count: count as u32,
+                bought: 0,
             });
         }
         let inv = NodeInventory::new(pools);
@@ -430,8 +920,17 @@ impl NodeInventory {
 
 impl fmt::Display for NodeInventory {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let terms: Vec<String> =
-            self.pools.iter().map(|p| format!("{}x({})", p.count, p.shape.capacity)).collect();
+        let terms: Vec<String> = self
+            .pools
+            .iter()
+            .map(|p| {
+                if p.shape.zone.is_empty() {
+                    format!("{}x({})", p.count, p.shape.capacity)
+                } else {
+                    format!("{}x({})@{}", p.count, p.shape.capacity, p.shape.zone)
+                }
+            })
+            .collect();
         write!(f, "{}", terms.join("+"))
     }
 }
@@ -482,6 +981,53 @@ mod tests {
         assert!(NodeInventory::parse("0x(8c,32g,0a)").is_err(), "zero count");
         assert!(NodeInventory::parse("2x(0c,32g,0a)").is_err(), "sub-1-core node");
         assert!(NodeInventory::parse("2x(8c,-1g,0a)").is_err(), "negative capacity");
+    }
+
+    #[test]
+    fn zones_parse_display_and_roundtrip() {
+        let inv = NodeInventory::parse("2x(8c,32g,0a)@east+2x(8c,32g,0a)@west").unwrap();
+        assert_eq!(inv.pools[0].shape.zone, "east");
+        assert_eq!(inv.pools[1].shape.zone, "west");
+        assert_eq!(inv.distinct_zones(), 2);
+        assert_eq!(inv.to_string(), "2x(8c/32g/0a)@east+2x(8c/32g/0a)@west");
+        assert_eq!(NodeInventory::parse(&inv.to_string()).unwrap(), inv);
+        assert_eq!(NodeInventory::from_json(&inv.to_json()).unwrap(), inv);
+        assert_eq!(
+            inv.nodes_by_zone(),
+            vec![("east".to_string(), 2), ("west".to_string(), 2)]
+        );
+        // unzoned inventories report no zone breakdown and one zone
+        let plain = NodeInventory::parse("4x(8c,32g,0a)").unwrap();
+        assert_eq!(plain.distinct_zones(), 1);
+        assert!(plain.nodes_by_zone().is_empty());
+        // empty zone after '@' rejected
+        assert!(NodeInventory::parse("2x(8c,32g,0a)@").is_err());
+    }
+
+    #[test]
+    fn drain_zone_zeroes_pools_and_preserves_indices() {
+        let mut inv = NodeInventory::parse("2x(8c,32g,0a)@east+3x(8c,32g,0a)@west").unwrap();
+        assert_eq!(inv.drain_zone("east"), 2);
+        assert_eq!(inv.pools.len(), 2, "shape list preserved");
+        assert_eq!(inv.pools[0].count, 0);
+        assert_eq!(inv.pools[1].count, 3);
+        assert_eq!(inv.replica_cap(), 24);
+        assert_eq!(inv.distinct_zones(), 1, "dead zone no longer counted");
+        assert_eq!(inv.drain_zone("nowhere"), 0);
+        // fungible pools are never drained
+        let mut f = NodeInventory::fungible(4);
+        assert_eq!(f.drain_zone(""), 0);
+        assert_eq!(f.replica_cap(), 4);
+    }
+
+    #[test]
+    fn zones_fitting_counts_capable_zones() {
+        let inv =
+            NodeInventory::parse("2x(8c,32g,0a)@east+2x(8c,32g,0a)@west+1x(16c,64g,2a)@east")
+                .unwrap();
+        assert_eq!(inv.zones_fitting(ResourceVec::cpu(1.0)), 2);
+        assert_eq!(inv.zones_fitting(ResourceVec::new(8.0, 4.0, 1.0)), 1, "accel only east");
+        assert_eq!(inv.zones_fitting(ResourceVec::new(32.0, 4.0, 0.0)), 0);
     }
 
     #[test]
@@ -563,6 +1109,66 @@ mod tests {
     }
 
     #[test]
+    fn retarget_shrink_evicts_from_the_most_spare_zone() {
+        // same elastic shape in two zones; replicas occupy east, so a
+        // shrink must sell west (most spare) first instead of the
+        // arbitrary listing-order pick that fights stickiness
+        let inv = NodeInventory::parse("2x(4c,16g,0a)@east+2x(4c,16g,0a)@west").unwrap();
+        let items = [item(0, ResourceVec::new(4.0, 4.0, 0.0), 2)];
+        let occupancy = inv.pack(&items).unwrap();
+        // sanity: both replicas landed in east (first nodes in order)
+        for pl in &occupancy.placements {
+            assert_eq!(inv.pools[occupancy.shape_of[pl.node]].shape.zone, "east");
+        }
+        let mut shrunk = inv.clone();
+        assert!(shrunk.retarget_with(8, None, Some(&occupancy)));
+        assert_eq!(shrunk.replica_cap(), 8);
+        assert_eq!(shrunk.pools[0].count, 2, "occupied east zone untouched");
+        assert_eq!(shrunk.pools[1].count, 0, "spare west zone evicted");
+        // without occupancy the tie goes to the lowest index (east)
+        let mut blind = inv.clone();
+        assert!(blind.retarget_with(8, None, None));
+        assert_eq!(blind.pools[0].count, 0);
+        assert_eq!(blind.pools[1].count, 2);
+    }
+
+    #[test]
+    fn retarget_pressure_buys_the_binding_axis_shape() {
+        // accel-bound demand must buy accelerator nodes, not the
+        // cheapest CPU shape
+        let base = NodeInventory::parse("2x(4c,16g,0a)+1x(16c,64g,2a)").unwrap();
+        let mut accel_bound = base.clone();
+        let pressure = ResourceVec::new(4.0, 8.0, 4.0); // accel 4 vs capacity 2: binds
+        assert!(accel_bound.retarget_with(60, Some(pressure), None));
+        assert!(accel_bound.pools[1].count > 1, "accel shape bought: {accel_bound}");
+        assert_eq!(accel_bound.pools[0].count, 2, "cpu shape untouched");
+        // cpu-bound demand reproduces the classic elastic buy
+        let mut cpu_bound = base.clone();
+        let mut classic = base.clone();
+        assert!(cpu_bound.retarget_with(40, Some(ResourceVec::cpu(40.0)), None));
+        assert!(classic.retarget(40));
+        assert_eq!(cpu_bound, classic, "cpu pressure = classic elastic growth");
+        // later plain shrinks RECLAIM the pressure-bought accel nodes
+        // (no permanent cost ratchet) but never the operator's
+        // provisioned one — bought-node accounting draws the line
+        assert_eq!(accel_bound.pools[1].bought, accel_bound.pools[1].count - 1);
+        assert!(accel_bound.retarget_with(24, None, None));
+        assert_eq!(accel_bound.pools[0].count, 0, "elastic tier drains first");
+        assert_eq!(accel_bound.pools[1].count, 2, "one bought node sold: {accel_bound}");
+        assert!(accel_bound.retarget_with(16, None, None));
+        assert_eq!(accel_bound.pools[1].count, 1, "second bought node sold");
+        assert_eq!(accel_bound.pools[1].bought, 0);
+        assert!(!accel_bound.retarget_with(0, None, None));
+        assert_eq!(accel_bound.pools[1].count, 1, "provisioned accel node never sold");
+        // ...and without any bought nodes, a fixed special shape is
+        // never sold no matter how deep the shrink goes
+        let mut fixed = base.clone();
+        assert!(fixed.retarget_with(4, None, None));
+        assert_eq!(fixed.pools[0].count, 0, "elastic tier fully drained");
+        assert_eq!(fixed.pools[1].count, 1, "fixed accel node survives");
+    }
+
+    #[test]
     fn prop_pack_never_exceeds_capacity_on_any_axis() {
         check("pack respects node capacity", 120, |g| {
             // random 1-3 shape inventory
@@ -576,8 +1182,10 @@ mod tests {
                             g.usize(0, 129) as f64,
                             g.usize(0, 5) as f64,
                         ),
+                        zone: String::new(),
                     },
                     count: g.usize(1, 6) as u32,
+                    bought: 0,
                 })
                 .collect();
             let inv = NodeInventory::new(pools);
@@ -629,6 +1237,71 @@ mod tests {
             item(2, ResourceVec::new(1.0, 2.0, 0.0), 7),
         ];
         assert_eq!(inv.pack(&items), inv.pack(&items));
+    }
+
+    #[test]
+    fn sticky_pack_keeps_unchanged_items_in_place() {
+        let inv = NodeInventory::parse("3x(8c,32g,0a)+2x(16c,64g,2a)").unwrap();
+        let items = [
+            item(0, ResourceVec::new(2.0, 4.0, 0.0), 5),
+            item(1, ResourceVec::new(8.0, 16.0, 1.0), 2),
+        ];
+        let prev = inv.pack(&items).unwrap();
+        // identical demand: every replica keeps its node — zero moves
+        let again = inv.pack_sticky(&items, Some(&prev), &[]).unwrap();
+        assert!(again.moved_from(&prev).is_empty(), "unchanged config must not move");
+        // one member grows; the others stay put
+        let grown = [
+            item(0, ResourceVec::new(2.0, 4.0, 0.0), 7),
+            item(1, ResourceVec::new(8.0, 16.0, 1.0), 2),
+        ];
+        let sticky = inv.pack_sticky(&grown, Some(&prev), &[]).unwrap();
+        let moves = sticky.moved_from(&prev);
+        assert_eq!(moves.len(), 2, "only the two NEW replicas count as moves: {moves:?}");
+        assert!(moves.iter().all(|m| m.member == 0));
+        assert!(sticky.valid_for(&inv));
+    }
+
+    #[test]
+    fn moved_from_maps_node_identity_across_count_changes() {
+        let inv = NodeInventory::parse("2x(4c,16g,0a)+1x(16c,64g,2a)").unwrap();
+        let items = [item(0, ResourceVec::new(4.0, 4.0, 0.0), 2)];
+        let prev = inv.pack(&items).unwrap();
+        // grow the elastic shape: old nodes keep (shape, ordinal)
+        // identity, so a sticky re-pack still reports zero moves
+        let mut bigger = inv.clone();
+        bigger.retarget(32);
+        let sticky = bigger.pack_sticky(&items, Some(&prev), &[]).unwrap();
+        assert!(sticky.moved_from(&prev).is_empty(), "growth must not displace replicas");
+        // shrinking away the occupied nodes forces moves
+        let smaller = NodeInventory::parse("1x(16c,64g,2a)").unwrap();
+        let repacked = smaller.pack(&items).unwrap();
+        assert_eq!(repacked.moved_from(&prev).len(), 2, "stranded replicas moved");
+    }
+
+    #[test]
+    fn spread_pack_spans_zones_and_rejects_single_zone_stages() {
+        let inv = NodeInventory::parse("2x(8c,32g,0a)@east+2x(8c,32g,0a)@west").unwrap();
+        let items = [item(0, ResourceVec::new(2.0, 2.0, 0.0), 4)];
+        // unflagged: FFD fills east first — single zone is fine
+        let plain = inv.pack_sticky(&items, None, &[]).unwrap();
+        assert!(plain.valid_for(&inv));
+        // flagged: replicas must span ≥ 2 zones, and survive any kill
+        let spread = inv.pack_sticky(&items, None, &[true]).unwrap();
+        for zone in ["east", "west"] {
+            let surv = spread.survivors_of_zone(&inv, zone);
+            assert!(
+                surv.get(&(0, 0)).copied().unwrap_or(0) >= 1,
+                "losing {zone} must leave a replica"
+            );
+        }
+        // a single replica cannot spread: rejected for flagged members
+        let single = [item(0, ResourceVec::new(2.0, 2.0, 0.0), 1)];
+        assert!(inv.pack_sticky(&single, None, &[true]).is_none());
+        assert!(inv.pack_sticky(&single, None, &[]).is_some(), "unflagged unaffected");
+        // spread is vacuous on a single-zone inventory
+        let one_zone = NodeInventory::parse("4x(8c,32g,0a)@east").unwrap();
+        assert!(one_zone.pack_sticky(&single, None, &[true]).is_some());
     }
 
     #[test]

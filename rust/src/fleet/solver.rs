@@ -33,6 +33,14 @@
 //!   down (memoized member evaluations make repair steps cheap).  On a
 //!   fungible inventory it is byte-identical to [`solve_fleet_tiers`].
 //!
+//! * [`solve_fleet_placed`] — the topology-aware packed solve: packs
+//!   *stickily* against the previous placement (moves minimized), and
+//!   zone-spread members get ≥ 2 replicas per stage across ≥ 2 failure
+//!   domains (spread floors, option transform, and the pack check
+//!   itself), so one zone loss never drops them below their stage
+//!   floor.  With no spread flags and no previous packing it IS
+//!   [`solve_fleet_packed`].
+//!
 //! [`FleetAdapter`] packages the allocator as a [`FleetController`]
 //! (per-member predictors → joint solve → one [`Decision`] per member)
 //! for the fleet drivers in `simulator::sim` and `serving::engine` —
@@ -159,22 +167,38 @@ fn budget_dfs(p: &Problem, options: &[Vec<StageOption>], budget: u32) -> Option<
 /// Smallest total-replica budget at which the pipeline is SLA-feasible
 /// (searched in `[n_stages, hi]`); `None` if infeasible even at `hi`.
 pub fn min_feasible_replicas(p: &Problem, options: &[Vec<StageOption>], hi: u32) -> Option<u32> {
+    min_feasible(p, options, hi).map(|(m, _)| m)
+}
+
+/// [`min_feasible_replicas`] plus the configuration solved AT the
+/// threshold — the binary search's last successful probe is the
+/// threshold itself, so callers that also need the config (the
+/// autoscaler's per-axis demand vector) get it without a second solve.
+fn min_feasible(
+    p: &Problem,
+    options: &[Vec<StageOption>],
+    hi: u32,
+) -> Option<(u32, PipelineConfig)> {
     let mut lo = options.len() as u32;
     if lo == 0 || hi < lo {
         return None;
     }
-    solve_under_budget(p, options, hi)?;
-    // feasibility is monotone in the budget: binary search the threshold
+    // `best` is always the solve at the current `hi` — the search
+    // invariant keeps `hi` feasible, and the loop exits with lo == hi.
+    let mut best = solve_under_budget(p, options, hi)?;
     let mut hi = hi;
+    // feasibility is monotone in the budget: binary search the threshold
     while lo < hi {
         let mid = lo + (hi - lo) / 2;
-        if solve_under_budget(p, options, mid).is_some() {
-            hi = mid;
-        } else {
-            lo = mid + 1;
+        match solve_under_budget(p, options, mid) {
+            Some(cfg) => {
+                best = cfg;
+                hi = mid;
+            }
+            None => lo = mid + 1,
         }
     }
-    Some(lo)
+    Some((lo, best))
 }
 
 /// Budget-clamped survival configuration (the fleet twin of
@@ -184,8 +208,16 @@ pub fn min_feasible_replicas(p: &Problem, options: &[Vec<StageOption>], hi: u32)
 /// replicas and ≥ 1 per stage; §4.5 dropping sheds what it cannot
 /// serve.
 pub fn fallback_under_budget(p: &Problem, budget: u32) -> PipelineConfig {
+    fallback_min(p, budget, 1)
+}
+
+/// [`fallback_under_budget`] with a per-stage replica floor: zone-spread
+/// members survive on ≥ 2 replicas per stage (one zone loss must leave
+/// one), classless members on the classic 1.
+fn fallback_min(p: &Problem, budget: u32, min_per_stage: u32) -> PipelineConfig {
     let s = p.profiles.stages.len();
-    let budget = budget.max(s as u32);
+    let min_per_stage = min_per_stage.max(1);
+    let budget = budget.max(s as u32 * min_per_stage);
     let w = p.spec.weights;
 
     struct Pick<'a> {
@@ -214,8 +246,8 @@ pub fn fallback_under_budget(p: &Problem, budget: u32) -> PipelineConfig {
         })
         .collect();
 
-    let mut replicas = vec![1u32; s];
-    let mut left = budget - s as u32;
+    let mut replicas = vec![min_per_stage; s];
+    let mut left = budget - s as u32 * min_per_stage;
     while left > 0 {
         // most starved stage = lowest provisioned throughput, if any is
         // still short of λ
@@ -315,9 +347,21 @@ pub fn even_shares(budget: u32, floors: &[u32]) -> Vec<u32> {
 }
 
 fn eval_member(p: &Problem, options: &[Vec<StageOption>], b: u32) -> (PipelineConfig, bool) {
+    eval_member_at(p, options, b, 1)
+}
+
+/// [`eval_member`] with a per-stage replica floor for the fallback path
+/// (the solve path enforces the floor through the option transform of
+/// [`greedy_ctx`] — every spread option carries ≥ `min_per` replicas).
+fn eval_member_at(
+    p: &Problem,
+    options: &[Vec<StageOption>],
+    b: u32,
+    min_per: u32,
+) -> (PipelineConfig, bool) {
     match solve_under_budget(p, options, b) {
         Some(cfg) => (cfg, true),
-        None => (fallback_under_budget(p, b), false),
+        None => (fallback_min(p, b, min_per), false),
     }
 }
 
@@ -353,13 +397,14 @@ fn eval_cached(
     problems: &[Problem],
     options: &[Vec<Vec<StageOption>>],
     cache: &mut [HashMap<u32, (PipelineConfig, bool)>],
+    min_per: &[u32],
     i: usize,
     b: u32,
 ) -> (PipelineConfig, bool) {
     if let Some((cfg, solved)) = cache[i].get(&b) {
         return (cfg.clone(), *solved);
     }
-    let (cfg, solved) = eval_member(&problems[i], &options[i], b);
+    let (cfg, solved) = eval_member_at(&problems[i], &options[i], b, min_per[i]);
     cache[i].insert(b, (cfg.clone(), solved));
     (cfg, solved)
 }
@@ -368,13 +413,14 @@ fn obj_at(
     problems: &[Problem],
     options: &[Vec<Vec<StageOption>>],
     cache: &mut [HashMap<u32, (PipelineConfig, bool)>],
+    min_per: &[u32],
     i: usize,
     b: u32,
 ) -> f64 {
     if let Some((cfg, _)) = cache[i].get(&b) {
         return cfg.objective;
     }
-    let (cfg, solved) = eval_member(&problems[i], &options[i], b);
+    let (cfg, solved) = eval_member_at(&problems[i], &options[i], b, min_per[i]);
     let o = cfg.objective;
     cache[i].insert(b, (cfg, solved));
     o
@@ -389,6 +435,7 @@ fn greedy_grant(
     problems: &[Problem],
     options: &[Vec<Vec<StageOption>>],
     cache: &mut [HashMap<u32, (PipelineConfig, bool)>],
+    min_per: &[u32],
     min_b: &[Option<u32>],
     members: &[usize],
     shares: &mut [u32],
@@ -397,7 +444,7 @@ fn greedy_grant(
     while *remaining > 0 {
         let mut best: Option<(usize, u32, f64)> = None;
         for &i in members {
-            let cur = obj_at(problems, options, cache, i, shares[i]);
+            let cur = obj_at(problems, options, cache, min_per, i, shares[i]);
             let mut cands = vec![1u32];
             if let Some(mb) = min_b[i] {
                 if mb > shares[i] {
@@ -408,7 +455,7 @@ fn greedy_grant(
                 if k == 0 || k > *remaining {
                     continue;
                 }
-                let gain = obj_at(problems, options, cache, i, shares[i] + k) - cur;
+                let gain = obj_at(problems, options, cache, min_per, i, shares[i] + k) - cur;
                 if gain <= 1e-12 {
                     continue;
                 }
@@ -429,38 +476,82 @@ fn greedy_grant(
 }
 
 /// Shared prologue of the joint solvers: per-member floors (one
-/// replica per stage), Pareto-pruned option sets (filtered to
-/// node-placeable options when an inventory is given), the memoized
-/// evaluation cache and the min-feasible lookahead targets.  `None`
-/// when `budget` cannot cover the floors.
+/// replica per stage — TWO for zone-spread members on a multi-zone
+/// inventory), Pareto-pruned option sets (filtered to node-placeable
+/// options when an inventory is given; spread members additionally
+/// drop variants hostable in < 2 zones and have every option's induced
+/// replica count raised to the spread floor), the memoized evaluation
+/// cache and the min-feasible lookahead targets.  `None` when `budget`
+/// cannot cover the floors.
 struct GreedyCtx {
     floors: Vec<u32>,
+    /// Per-stage replica floor of each member (2 when spread is active).
+    min_per: Vec<u32>,
     options: Vec<Vec<Vec<StageOption>>>,
     cache: Vec<HashMap<u32, (PipelineConfig, bool)>>,
     min_b: Vec<Option<u32>>,
+}
+
+/// Does member `i`'s zone-spread flag bite?  Only on an inventory with
+/// ≥ 2 zones — below that there is nothing to spread across and the
+/// constraint is vacuous (the classic behavior).
+fn spread_active(spread: &[bool], i: usize, inv: Option<&NodeInventory>) -> bool {
+    spread.get(i).copied().unwrap_or(false)
+        && inv.is_some_and(|v| v.distinct_zones() >= 2)
+}
+
+/// The per-member option transform of the topology-aware solve: keep
+/// node-placeable options only, and for spread-active members keep
+/// options hostable in ≥ 2 zones with their induced replica count
+/// raised to `min_per` (so EVERY solve path — joint, incremental,
+/// preemption — emits ≥ min_per replicas per spread stage).
+fn filter_options(
+    os: &mut [Vec<StageOption>],
+    inv: &NodeInventory,
+    spread_on: bool,
+    min_per: u32,
+) {
+    for stage in os.iter_mut() {
+        stage.retain(|o| inv.fits_any_node(o.resources));
+        if spread_on {
+            stage.retain(|o| inv.zones_fitting(o.resources) >= 2);
+            for o in stage.iter_mut() {
+                if o.replicas < min_per {
+                    o.cost = o.cost / o.replicas as f64 * min_per as f64;
+                    o.replicas = min_per;
+                }
+            }
+        }
+    }
 }
 
 fn greedy_ctx(
     problems: &[Problem],
     budget: u32,
     inv: Option<&NodeInventory>,
+    spread: &[bool],
 ) -> Option<GreedyCtx> {
     let n = problems.len();
-    let floors: Vec<u32> = problems.iter().map(|p| p.profiles.stages.len() as u32).collect();
+    let min_per: Vec<u32> =
+        (0..n).map(|i| if spread_active(spread, i, inv) { 2 } else { 1 }).collect();
+    let floors: Vec<u32> = problems
+        .iter()
+        .zip(&min_per)
+        .map(|(p, &m)| p.profiles.stages.len() as u32 * m)
+        .collect();
     let floor_total: u32 = floors.iter().sum();
     if budget < floor_total {
         return None;
     }
     let options: Vec<Vec<Vec<StageOption>>> = problems
         .iter()
-        .map(|p| {
+        .enumerate()
+        .map(|(i, p)| {
             let mut os = p.stage_options();
             if let Some(inv) = inv {
                 // A variant no node shape can host one replica of can
                 // never be placed — drop it before the solve.
-                for stage in os.iter_mut() {
-                    stage.retain(|o| inv.fits_any_node(o.resources));
-                }
+                filter_options(&mut os, inv, min_per[i] > 1, min_per[i]);
             }
             os
         })
@@ -469,7 +560,7 @@ fn greedy_ctx(
     // the greedy can see across an infeasibility threshold.
     let min_b: Vec<Option<u32>> =
         (0..n).map(|i| min_feasible_replicas(&problems[i], &options[i], budget)).collect();
-    Some(GreedyCtx { floors, options, cache: vec![HashMap::new(); n], min_b })
+    Some(GreedyCtx { floors, min_per, options, cache: vec![HashMap::new(); n], min_b })
 }
 
 /// The share computation both joint solvers run: a single priority
@@ -490,15 +581,17 @@ fn solve_shares(
     if priorities.iter().all(|&p| p == priorities[0]) {
         let all: Vec<usize> = (0..n).collect();
         greedy_grant(
-            problems, &ctx.options, &mut ctx.cache, &ctx.min_b, &all, &mut shares,
-            &mut remaining,
+            problems, &ctx.options, &mut ctx.cache, &ctx.min_per, &ctx.min_b, &all,
+            &mut shares, &mut remaining,
         );
         // Never worse than the even split: compute both, keep the better.
         let even = even_shares(budget, &ctx.floors);
-        let greedy_total: f64 =
-            (0..n).map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, i, shares[i])).sum();
-        let even_total: f64 =
-            (0..n).map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, i, even[i])).sum();
+        let greedy_total: f64 = (0..n)
+            .map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, &ctx.min_per, i, shares[i]))
+            .sum();
+        let even_total: f64 = (0..n)
+            .map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, &ctx.min_per, i, even[i]))
+            .sum();
         if greedy_total + 1e-12 >= even_total {
             shares
         } else {
@@ -514,6 +607,7 @@ fn solve_shares(
                 problems,
                 &ctx.options,
                 &mut ctx.cache,
+                &ctx.min_per,
                 &ctx.min_b,
                 &tier,
                 &mut shares,
@@ -538,7 +632,8 @@ fn allocate_from_ctx(
         .iter()
         .enumerate()
         .map(|(i, &b)| {
-            let (config, solved) = eval_cached(problems, &ctx.options, &mut ctx.cache, i, b);
+            let (config, solved) =
+                eval_cached(problems, &ctx.options, &mut ctx.cache, &ctx.min_per, i, b);
             let replicas = config.total_replicas();
             MemberAllocation { budget: b, config, replicas, solved }
         })
@@ -567,7 +662,7 @@ pub fn solve_fleet(problems: &[Problem], budget: u32) -> Option<FleetAllocation>
             packing: None,
         });
     }
-    let mut ctx = greedy_ctx(problems, budget, None)?;
+    let mut ctx = greedy_ctx(problems, budget, None, &[])?;
     let shares = solve_shares(problems, &mut ctx, budget, &vec![0; n]);
     let mut alloc = allocate_from_ctx(problems, &mut ctx, &shares);
     alloc.budget = budget;
@@ -596,7 +691,7 @@ pub fn solve_fleet_tiers(
     if n == 0 || priorities.iter().all(|&p| p == priorities[0]) {
         return solve_fleet(problems, budget);
     }
-    let mut ctx = greedy_ctx(problems, budget, None)?;
+    let mut ctx = greedy_ctx(problems, budget, None, &[])?;
     let shares = solve_shares(problems, &mut ctx, budget, priorities);
     let mut alloc = allocate_from_ctx(problems, &mut ctx, &shares);
     alloc.budget = budget;
@@ -630,6 +725,23 @@ pub fn solve_fleet_packed(
     inv: &NodeInventory,
     priorities: &[u32],
 ) -> Option<FleetAllocation> {
+    solve_fleet_placed(problems, inv, priorities, &[], None)
+}
+
+/// The topology-aware [`solve_fleet_packed`]: per-member zone-spread
+/// flags (flagged members must place every stage across ≥ 2 failure
+/// domains — enforced through the option transform, the spread floors
+/// and the pack check itself) and an optional previous [`Packing`] the
+/// result is packed *stickily* against, so the placement the allocation
+/// reports moves as few replicas as the FFD permits.  With no flags and
+/// no previous packing this IS [`solve_fleet_packed`].
+pub fn solve_fleet_placed(
+    problems: &[Problem],
+    inv: &NodeInventory,
+    priorities: &[u32],
+    spread: &[bool],
+    prev: Option<&Packing>,
+) -> Option<FleetAllocation> {
     let n = problems.len();
     assert_eq!(priorities.len(), n, "one priority class per member");
     let cap = inv.replica_cap();
@@ -642,14 +754,16 @@ pub fn solve_fleet_packed(
             packing: inv.pack(&[]),
         });
     }
-    let mut ctx = greedy_ctx(problems, cap, Some(inv))?;
+    let pack =
+        |demands: &[crate::fleet::nodes::PackItem]| inv.pack_prefer_sticky(demands, prev, spread);
+    let mut ctx = greedy_ctx(problems, cap, Some(inv), spread)?;
     let floor_total: u32 = ctx.floors.iter().sum();
     let mut b = cap;
     loop {
         let shares = solve_shares(problems, &mut ctx, b, priorities);
         let mut alloc = allocate_from_ctx(problems, &mut ctx, &shares);
         let refs: Vec<&PipelineConfig> = alloc.members.iter().map(|m| &m.config).collect();
-        if let Some(packing) = inv.pack(&config_demands(&refs)) {
+        if let Some(packing) = pack(&config_demands(&refs)) {
             alloc.budget = b;
             alloc.packing = Some(packing);
             debug_assert!(alloc.replicas_used <= b, "packed allocation exceeds budget");
@@ -664,18 +778,20 @@ pub fn solve_fleet_packed(
         // fat replicas — single-replica steps from it would crawl.
         b = alloc.replicas_used.saturating_sub(1).clamp(floor_total, b - 1);
     }
-    // Last resort: the one-replica-per-stage lightest-variant floor.
+    // Last resort: the per-stage-floor lightest-variant configuration
+    // (one replica per stage, two for spread-active members).
     let members: Vec<MemberAllocation> = problems
         .iter()
         .zip(&ctx.floors)
-        .map(|(p, &f)| {
-            let config = fallback_under_budget(p, f);
+        .zip(&ctx.min_per)
+        .map(|((p, &f), &m)| {
+            let config = fallback_min(p, f, m);
             let replicas = config.total_replicas();
             MemberAllocation { budget: f, config, replicas, solved: false }
         })
         .collect();
     let refs: Vec<&PipelineConfig> = members.iter().map(|m| &m.config).collect();
-    let packing = inv.pack(&config_demands(&refs))?;
+    let packing = pack(&config_demands(&refs))?;
     Some(FleetAllocation {
         budget: floor_total,
         replicas_used: members.iter().map(|m| m.replicas).sum(),
@@ -793,6 +909,36 @@ pub trait FleetController {
     fn sla_classes(&self) -> Option<Vec<SlaClass>> {
         None
     }
+
+    /// Per-member zone-spread flags, queried once by the drivers so the
+    /// fleet core enforces the same spread constraint the solves do.
+    /// `None` (the default) = no spread constraints.
+    fn spread(&self) -> Option<Vec<bool>> {
+        None
+    }
+
+    /// Per-replica migration charge the drivers add to the apply delay
+    /// for every replica a staged decision moves.  0 (the default) =
+    /// migrations are free, the pre-topology behavior.
+    fn migration_delay(&self) -> f64 {
+        0.0
+    }
+
+    /// Zone-fault hook: the driver drained `zone` from the pool and
+    /// hands over the `survivor` inventory plus the per-member observed
+    /// rates; a topology-aware controller adopts the survivor pool and
+    /// answers an EMERGENCY joint decision solved under it (applied
+    /// immediately — an outage does not wait for the apply delay).
+    /// `None` (the default) = the controller cannot re-plan, the driver
+    /// leaves the pool untouched.
+    fn fault(
+        &mut self,
+        _now: f64,
+        _survivor: NodeInventory,
+        _observed: &[f64],
+    ) -> Option<Vec<Decision>> {
+        None
+    }
 }
 
 /// Preemption knobs (see [`FleetAdapter::preempt`]).
@@ -868,6 +1014,15 @@ pub struct FleetTuning {
     /// burster's (first in the donor order), so class policy fires
     /// even when every priority is equal.
     pub sla_classes: Option<Vec<SlaClass>>,
+    /// Per-member zone-spread flags: flagged members keep ≥ 2 replicas
+    /// per stage across ≥ 2 failure domains (when the node inventory
+    /// spans ≥ 2 zones), so one zone loss never drops them below their
+    /// stage floor.  `None` = no spread constraints.
+    pub spread: Option<Vec<bool>>,
+    /// Per-replica migration charge added to the apply delay for every
+    /// replica a staged decision moves between nodes (container churn
+    /// priced into the reconfiguration).  0 = migrations are free.
+    pub migration_delay: f64,
 }
 
 /// The last joint solution, kept for incremental re-solves and the
@@ -882,6 +1037,10 @@ struct SolveCache {
     solved: Vec<bool>,
     /// Pool size the shares were solved against.
     budget: u32,
+    /// Node placement of `configs` (node pools only) — the sticky
+    /// anchor for the next solve's packing and the occupancy hint for
+    /// zone-aware retargets.
+    packing: Option<Packing>,
 }
 
 /// The fleet adapter: one predictor per member feeding the joint
@@ -911,6 +1070,11 @@ pub struct FleetAdapter {
     pub inventory: Option<NodeInventory>,
     /// Per-member SLA classes (None = classless legacy behavior).
     pub sla_classes: Option<Vec<SlaClass>>,
+    /// Per-member zone-spread flags (all false = no spread policy).
+    pub spread: Vec<bool>,
+    /// Per-replica migration charge the drivers add to the apply delay
+    /// (0 = migrations free, the pre-topology behavior).
+    pub migration_delay: f64,
     /// Telemetry: how many decisions ran the full joint solve vs the
     /// incremental per-member path.
     pub full_solves: usize,
@@ -921,10 +1085,11 @@ pub struct FleetAdapter {
     /// are only asked once per tick.
     pending_lambdas: Option<Vec<f64>>,
     /// Last demand estimate (clamped λs it was computed for, Σ min
-    /// feasible) — reused on quiet ticks so the autoscaler's demand
-    /// estimation doesn't cost a full feasibility search when the
-    /// incremental path is skipping the joint solve anyway.
-    last_demand: Option<(Vec<f64>, u32)>,
+    /// feasible, the per-axis demand vector) — reused on quiet ticks so
+    /// the autoscaler's demand estimation doesn't cost a full
+    /// feasibility search when the incremental path is skipping the
+    /// joint solve anyway.
+    last_demand: Option<(Vec<f64>, u32, ResourceVec)>,
 }
 
 impl FleetAdapter {
@@ -965,6 +1130,8 @@ impl FleetAdapter {
             resolve_threshold: 0.0,
             inventory: None,
             sla_classes: None,
+            spread: vec![false; n],
+            migration_delay: 0.0,
             full_solves: 0,
             incremental_solves: 0,
             cache: None,
@@ -999,10 +1166,33 @@ impl FleetAdapter {
             }
             self.sla_classes = Some(classes);
         }
+        if let Some(spread) = tuning.spread {
+            if spread.len() != n {
+                return Err(format!(
+                    "fleet tuning: {} spread flags for {n} members",
+                    spread.len(),
+                ));
+            }
+            self.spread = spread;
+        }
+        if !tuning.migration_delay.is_finite() || tuning.migration_delay < 0.0 {
+            return Err(format!(
+                "fleet tuning: migration_delay {} must be finite and >= 0",
+                tuning.migration_delay
+            ));
+        }
+        self.migration_delay = tuning.migration_delay;
         if let Some(inv) = tuning.nodes {
             inv.validate().map_err(|e| format!("fleet tuning: {e}"))?;
             let cap = inv.replica_cap();
-            let floor = self.stage_floor();
+            // The effective floor counts the spread members at two
+            // replicas per stage (zone redundancy is part of the floor).
+            let floor: u32 = (0..n)
+                .map(|i| {
+                    let m = if spread_active(&self.spread, i, Some(&inv)) { 2 } else { 1 };
+                    self.specs[i].n_stages() as u32 * m
+                })
+                .sum();
             if cap < floor {
                 return Err(format!(
                     "node inventory caps {cap} replicas, below the stage floor {floor}"
@@ -1062,47 +1252,71 @@ impl FleetAdapter {
         }
     }
 
+    /// Is member `i`'s zone-spread flag in force on the current
+    /// inventory (≥ 2 zones to spread across)?
+    fn spread_on(&self, i: usize) -> bool {
+        spread_active(&self.spread, i, self.inventory.as_ref())
+    }
+
+    /// Member `i`'s per-stage replica floor (2 under active spread).
+    fn member_min(&self, i: usize) -> u32 {
+        if self.spread_on(i) {
+            2
+        } else {
+            1
+        }
+    }
+
     /// The option sets member `i` may choose from — node-placeability
-    /// filtered when an inventory is attached (the packed solver's
-    /// pre-filter, applied identically on the incremental and
-    /// preemption paths so a fast-path re-solve can never pick a
-    /// variant the nodes cannot host).
-    fn member_options(&self, p: &Problem) -> Vec<Vec<StageOption>> {
+    /// filtered when an inventory is attached, plus the zone-spread
+    /// transform for flagged members (the packed solver's pre-filter,
+    /// applied identically on the incremental and preemption paths so a
+    /// fast-path re-solve can never pick a variant the nodes cannot
+    /// host or a replica count one zone loss would break).
+    fn member_options(&self, p: &Problem, member: usize) -> Vec<Vec<StageOption>> {
         let mut os = p.stage_options();
         if let Some(inv) = &self.inventory {
-            for stage in os.iter_mut() {
-                stage.retain(|o| inv.fits_any_node(o.resources));
-            }
+            filter_options(&mut os, inv, self.spread_on(member), self.member_min(member));
         }
         os
     }
 
-    /// Does the one-lightest-replica-per-stage floor — the packed
-    /// solver's last resort — bin-pack into `inv`?  Checked before
-    /// EVERY inventory the adapter adopts ([`FleetAdapter::with_tuning`]
-    /// and each autoscaler retarget), which is what makes the
-    /// `solve_fleet_packed(..).expect(..)` in the decide path sound.
+    /// Does the per-stage-floor lightest-variant configuration — the
+    /// packed solver's last resort (one replica per stage, two for
+    /// spread members) — bin-pack into `inv` with the spread constraint
+    /// honored?  Checked before EVERY inventory the adapter adopts
+    /// ([`FleetAdapter::with_tuning`], each autoscaler retarget and
+    /// each zone fault), which is what makes the
+    /// `solve_fleet_placed(..).expect(..)` in the decide path sound.
     fn floor_packs(&self, inv: &NodeInventory) -> bool {
         let floor_configs: Vec<PipelineConfig> = (0..self.specs.len())
             .map(|i| {
                 let p = self.demand_problem(i, 0.5);
-                fallback_under_budget(&p, self.specs[i].n_stages() as u32)
+                let m = if spread_active(&self.spread, i, Some(inv)) { 2 } else { 1 };
+                fallback_min(&p, self.specs[i].n_stages() as u32 * m, m)
             })
             .collect();
         let refs: Vec<&PipelineConfig> = floor_configs.iter().collect();
-        inv.pack(&config_demands(&refs)).is_some()
+        inv.pack_sticky(&config_demands(&refs), None, &self.spread).is_some()
     }
 
-    /// Do these per-member configurations fit the pool?  Fungible /
-    /// legacy pools never re-check here (shares already enforce the
-    /// scalar budget); node pools run the bin-packer.
-    fn packs(&self, configs: &[PipelineConfig]) -> bool {
+    /// Pack these per-member configurations onto the pool, stickily
+    /// against `prev`.  Fungible / legacy pools never re-check here
+    /// (shares already enforce the scalar budget) and answer
+    /// `Ok(None)`; node pools run the bin-packer (sticky first, plain
+    /// FFD fallback) and answer `Err(())` when the fleet does not fit.
+    fn repack(
+        &self,
+        configs: &[PipelineConfig],
+        prev: Option<&Packing>,
+    ) -> Result<Option<Packing>, ()> {
         match &self.inventory {
             Some(inv) => {
                 let refs: Vec<&PipelineConfig> = configs.iter().collect();
-                inv.pack(&config_demands(&refs)).is_some()
+                let demands = config_demands(&refs);
+                inv.pack_prefer_sticky(&demands, prev, &self.spread).map(Some).ok_or(())
             }
-            None => true,
+            None => Ok(None),
         }
     }
 
@@ -1146,17 +1360,20 @@ impl FleetAdapter {
                 continue;
             }
             let p = self.member_problem(i, l);
-            let opts = self.member_options(&p);
-            let (cfg, solved) = eval_member(&p, &opts, cache.shares[i]);
+            let opts = self.member_options(&p, i);
+            let (cfg, solved) = eval_member_at(&p, &opts, cache.shares[i], self.member_min(i));
             cache.configs[i] = cfg;
             cache.solved[i] = solved;
             cache.lambdas[i] = l;
         }
-        if !self.packs(&cache.configs) {
-            // moved members picked shapes the nodes cannot host at the
-            // pinned shares — the full joint solve must re-split
-            self.cache = Some(original.expect("packs() only fails on node pools"));
-            return None;
+        match self.repack(&cache.configs, cache.packing.as_ref()) {
+            Ok(p) => cache.packing = p,
+            Err(()) => {
+                // moved members picked shapes the nodes cannot host at
+                // the pinned shares — the full joint solve must re-split
+                self.cache = Some(original.expect("repack() only fails on node pools"));
+                return None;
+            }
         }
         self.incremental_solves += 1;
         let decision_time = t0.elapsed().as_secs_f64();
@@ -1178,8 +1395,11 @@ impl FleetAdapter {
             .map(|i| self.member_problem(i, lambdas[i]))
             .collect();
         let alloc = match &self.inventory {
-            Some(inv) => solve_fleet_packed(&problems, inv, &self.priorities)
-                .expect("floor packability was checked by with_tuning"),
+            Some(inv) => {
+                let prev = self.cache.as_ref().and_then(|c| c.packing.as_ref());
+                solve_fleet_placed(&problems, inv, &self.priorities, &self.spread, prev)
+                    .expect("floor packability was checked by with_tuning")
+            }
             None => solve_fleet_tiers(&problems, self.budget, &self.priorities)
                 .expect("budget >= stage floor was checked at construction"),
         };
@@ -1191,6 +1411,7 @@ impl FleetAdapter {
             configs: alloc.members.iter().map(|m| m.config.clone()).collect(),
             solved: alloc.members.iter().map(|m| m.solved).collect(),
             budget: self.budget,
+            packing: alloc.packing,
         };
         let ds = cache_decisions(&cache, decision_time);
         self.cache = Some(cache);
@@ -1220,47 +1441,70 @@ impl FleetAdapter {
         // per-member feasibility search when no λ moved past the
         // incremental threshold would cost about what the skipped
         // joint solve saves.
-        let cached = self.last_demand.as_ref().and_then(|(ls, d)| {
+        let cached = self.last_demand.as_ref().and_then(|(ls, d, pr)| {
             let quiet = self.resolve_threshold > 0.0
                 && ls.len() == clamped.len()
                 && clamped
                     .iter()
                     .zip(ls)
                     .all(|(&l, &old)| (l - old).abs() / old.max(0.5) <= self.resolve_threshold);
-            quiet.then_some(*d)
+            quiet.then_some((*d, *pr))
         });
-        let demand = match cached {
-            Some(d) => d,
+        let (demand, pressure) = match cached {
+            Some(dp) => dp,
             None => {
                 let mut demand = 0u32;
+                let mut pressure = ResourceVec::ZERO;
                 for (i, &l) in clamped.iter().enumerate() {
                     let p = self.demand_problem(i, l);
                     // node-placeability filtered like every solve path:
                     // an unplaceable accel variant must not make demand
                     // look cheaper than the packed solve can deliver
-                    let opts = self.member_options(&p);
-                    let member_floor = self.specs[i].n_stages() as u32;
-                    demand += min_feasible_replicas(&p, &opts, cap).unwrap_or(member_floor);
+                    let opts = self.member_options(&p, i);
+                    let member_floor = self.specs[i].n_stages() as u32 * self.member_min(i);
+                    match min_feasible(&p, &opts, cap) {
+                        // the min-feasible configuration's total demand
+                        // vector is the per-axis pressure the pool must
+                        // be able to absorb
+                        Some((m, cfg)) => {
+                            demand += m;
+                            pressure = pressure.add(cfg.resources);
+                        }
+                        None => {
+                            demand += member_floor;
+                            pressure = pressure
+                                .add(fallback_min(&p, member_floor, self.member_min(i)).resources);
+                        }
+                    }
                 }
-                self.last_demand = Some((clamped, demand));
-                demand
+                self.last_demand = Some((clamped, demand, pressure));
+                (demand, pressure)
             }
         };
         let decision =
             self.autoscaler.as_mut().expect("checked").decide(self.budget, demand, floor);
         if self.inventory.is_some() {
-            // Whole-node granularity: retarget the elastic shape toward
-            // the proposed replica target (growth never overshoots it —
-            // the cost cap holds — so the actuated budget is the
-            // resulting replica cap, not the raw target).  An inventory
-            // that can no longer host the one-replica-per-stage floor
-            // is never adopted: the replica cap counts CPU slots only,
-            // so a shrink could otherwise strand the floor on a
-            // memory/accel axis and leave the packed solve without its
-            // last resort.
+            // Whole-node granularity: retarget toward the proposed
+            // replica target (growth never overshoots it — the cost cap
+            // holds — so the actuated budget is the resulting replica
+            // cap, not the raw target), buying the shape the per-axis
+            // PRESSURE selects (accel-bound demand buys accel nodes)
+            // and selling from the most-spare zone under the active
+            // placement.  An inventory that can no longer host the
+            // per-stage floor is never adopted: the replica cap counts
+            // CPU slots only, so a shrink could otherwise strand the
+            // floor on a memory/accel axis and leave the packed solve
+            // without its last resort.
             let mut tentative = self.inventory.clone().expect("checked");
-            tentative.retarget(decision.target.max(floor));
+            tentative.retarget_with(
+                decision.target.max(floor),
+                Some(pressure),
+                self.cache.as_ref().and_then(|c| c.packing.as_ref()),
+            );
             let node_cap = tentative.replica_cap();
+            // an unchanged cap means an unchanged inventory (growth and
+            // shrink are direction-exclusive), so there is nothing to
+            // adopt or announce
             if node_cap == self.budget || !self.floor_packs(&tentative) {
                 return None;
             }
@@ -1303,7 +1547,9 @@ impl FleetAdapter {
                 return None;
             }
         }
-        let floors: Vec<u32> = self.specs.iter().map(|s| s.n_stages() as u32).collect();
+        let floors: Vec<u32> = (0..n)
+            .map(|i| self.specs[i].n_stages() as u32 * self.member_min(i))
+            .collect();
         let t0 = Instant::now();
 
         // Bursting receiver-eligible members, most important (then
@@ -1331,7 +1577,7 @@ impl FleetAdapter {
             let mut cache = self.cache.take().expect("checked");
             let lam_new = observed[bi].max(0.5);
             let p = self.member_problem(bi, lam_new);
-            let opts = self.member_options(&p);
+            let opts = self.member_options(&p, bi);
             // How many more replicas feasibility at the burst λ needs.
             let need = match min_feasible_replicas(&p, &opts, self.budget) {
                 Some(m) if m > cache.shares[bi] => m - cache.shares[bi],
@@ -1391,14 +1637,14 @@ impl FleetAdapter {
             // so only they pay for the restore snapshot.
             let original = self.inventory.is_some().then(|| cache.clone());
             // Re-solve only the members whose share changed.
-            let (cfg, solved) = eval_member(&p, &opts, shares[bi]);
+            let (cfg, solved) = eval_member_at(&p, &opts, shares[bi], self.member_min(bi));
             cache.configs[bi] = cfg;
             cache.solved[bi] = solved;
             cache.lambdas[bi] = lam_new;
             for &(j, _) in &from {
                 let pj = self.member_problem(j, cache.lambdas[j]);
-                let oj = self.member_options(&pj);
-                let (cfg, solved) = eval_member(&pj, &oj, shares[j]);
+                let oj = self.member_options(&pj, j);
+                let (cfg, solved) = eval_member_at(&pj, &oj, shares[j], self.member_min(j));
                 cache.configs[j] = cfg;
                 cache.solved[j] = solved;
             }
@@ -1406,9 +1652,12 @@ impl FleetAdapter {
             // Node safety: the post-preemption fleet must still pack —
             // otherwise this burster's preemption is abandoned (the
             // slow path will re-split at the next tick).
-            if !self.packs(&cache.configs) {
-                self.cache = Some(original.expect("packs() only fails on node pools"));
-                continue;
+            match self.repack(&cache.configs, cache.packing.as_ref()) {
+                Ok(pk) => cache.packing = pk,
+                Err(()) => {
+                    self.cache = Some(original.expect("repack() only fails on node pools"));
+                    continue;
+                }
             }
             let decisions = cache_decisions(&cache, t0.elapsed().as_secs_f64());
             let budget = cache.budget;
@@ -1417,6 +1666,32 @@ impl FleetAdapter {
             return Some(FleetPreemption { decisions, to: bi, from, reclaimed, budget });
         }
         None
+    }
+
+    /// Zone-fault handler: adopt the `survivor` inventory the driver
+    /// drained and answer an emergency joint decision solved under it
+    /// ([`solve_fleet_placed`] from a cold cache — the old shares and
+    /// placement died with the zone).  `None` when the adapter runs no
+    /// node inventory, or when even the per-stage floor no longer packs
+    /// on the survivors (the fleet cannot be saved by re-planning; the
+    /// driver leaves the pool untouched).  Note spread constraints
+    /// deactivate on their own when only one zone remains.
+    pub fn fault(
+        &mut self,
+        _now: f64,
+        survivor: NodeInventory,
+        observed: &[f64],
+    ) -> Option<Vec<Decision>> {
+        self.inventory.as_ref()?;
+        if !self.floor_packs(&survivor) {
+            return None;
+        }
+        self.budget = survivor.replica_cap();
+        self.inventory = Some(survivor);
+        self.cache = None;
+        self.last_demand = None;
+        self.pending_lambdas = None;
+        Some(self.decide_for_lambdas(observed))
     }
 }
 
@@ -1474,6 +1749,23 @@ impl FleetController for FleetAdapter {
 
     fn sla_classes(&self) -> Option<Vec<SlaClass>> {
         self.sla_classes.clone()
+    }
+
+    fn spread(&self) -> Option<Vec<bool>> {
+        self.spread.iter().any(|&s| s).then(|| self.spread.clone())
+    }
+
+    fn migration_delay(&self) -> f64 {
+        self.migration_delay
+    }
+
+    fn fault(
+        &mut self,
+        now: f64,
+        survivor: NodeInventory,
+        observed: &[f64],
+    ) -> Option<Vec<Decision>> {
+        FleetAdapter::fault(self, now, survivor, observed)
     }
 }
 
@@ -1722,6 +2014,44 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn placed_solve_spreads_flagged_members_across_zones() {
+        use crate::fleet::nodes::NodeInventory;
+        let specs: Vec<PipelineSpec> =
+            ["video", "audio-sent"].iter().map(|n| pipelines::by_name(n).unwrap()).collect();
+        let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+        let problems =
+            vec![problem(&specs[0], &profs[0], 6.0), problem(&specs[1], &profs[1], 4.0)];
+        let inv =
+            NodeInventory::parse("3x(8c,32g,0a)@east+3x(8c,32g,0a)@west").unwrap();
+        let spread = [true, false];
+        let alloc = solve_fleet_placed(&problems, &inv, &[0, 0], &spread, None).unwrap();
+        // the flagged member runs ≥ 2 replicas per stage
+        for sc in &alloc.members[0].config.stages {
+            assert!(sc.replicas >= 2, "spread stage below redundancy floor: {sc:?}");
+        }
+        // and every one of its stages survives any single zone loss
+        let packing = alloc.packing.as_ref().unwrap();
+        for zone in ["east", "west"] {
+            let surv = packing.survivors_of_zone(&inv, zone);
+            for s in 0..alloc.members[0].config.stages.len() {
+                assert!(
+                    surv.get(&(0, s)).copied().unwrap_or(0) >= 1,
+                    "member 0 stage {s} dies with zone {zone}"
+                );
+            }
+        }
+        // no flags + no prev = the plain packed solve, byte for byte
+        let plain = solve_fleet_packed(&problems, &inv, &[0, 0]).unwrap();
+        let placed = solve_fleet_placed(&problems, &inv, &[0, 0], &[], None).unwrap();
+        assert_eq!(plain.members.len(), placed.members.len());
+        for (a, b) in plain.members.iter().zip(&placed.members) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.budget, b.budget);
+        }
+        assert_eq!(plain.packing, placed.packing);
     }
 
     #[test]

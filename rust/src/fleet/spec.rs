@@ -97,6 +97,12 @@ pub struct FleetMember {
     /// the caller wires [`FleetSpec::classes`] into the tuned drivers.
     /// Default latency-critical.
     pub sla_class: SlaClass,
+    /// Zone-spread flag: when the node inventory spans ≥ 2 failure
+    /// domains, this member keeps ≥ 2 replicas per stage across ≥ 2
+    /// zones so one zone loss never drops it below its stage floor
+    /// (wired through [`crate::fleet::solver::FleetTuning::spread`]).
+    /// Vacuous on single-zone or fungible pools.  Default false.
+    pub spread: bool,
 }
 
 impl FleetMember {
@@ -163,6 +169,12 @@ impl FleetSpec {
     /// [`crate::fleet::solver::FleetTuning::sla_classes`] takes).
     pub fn classes(&self) -> Vec<SlaClass> {
         self.members.iter().map(|m| m.sla_class).collect()
+    }
+
+    /// Per-member zone-spread flags in fleet order (what
+    /// [`crate::fleet::solver::FleetTuning::spread`] takes).
+    pub fn spreads(&self) -> Vec<bool> {
+        self.members.iter().map(|m| m.spread).collect()
     }
 
     /// Structural validation: nonempty, unique non-blank member names,
@@ -315,6 +327,7 @@ impl FleetSpec {
                     .ok_or_else(|| format!("fleet member {name}: unknown SLA class {c:?}"))?,
                 None => SlaClass::LatencyCritical,
             };
+            let spread = mj.get("spread").and_then(Json::as_bool).unwrap_or(false);
             members.push(FleetMember {
                 name,
                 pipeline,
@@ -323,6 +336,7 @@ impl FleetSpec {
                 sla_scale,
                 priority,
                 sla_class,
+                spread,
             });
         }
         let nodes = match j.get("nodes") {
@@ -370,6 +384,7 @@ impl FleetSpec {
                                 .set("sla_scale", m.sla_scale)
                                 .set("priority", m.priority as usize)
                                 .set("class", m.sla_class.name())
+                                .set("spread", m.spread)
                         })
                         .collect(),
                 ),
@@ -400,6 +415,7 @@ impl FleetSpec {
                     sla_scale: 1.0,
                     priority: 2,
                     sla_class: SlaClass::LatencyCritical,
+                    spread: false,
                 },
                 FleetMember {
                     name: "audio-social".into(),
@@ -409,6 +425,7 @@ impl FleetSpec {
                     sla_scale: 1.0,
                     priority: 1,
                     sla_class: SlaClass::LatencyCritical,
+                    spread: false,
                 },
                 FleetMember {
                     name: "nlp-batchline".into(),
@@ -418,6 +435,7 @@ impl FleetSpec {
                     sla_scale: 1.0,
                     priority: 0,
                     sla_class: SlaClass::Throughput,
+                    spread: false,
                 },
             ],
             replica_budget: 24,
@@ -541,6 +559,21 @@ mod tests {
             "members":[{"name":"a","pipeline":"video"}],
             "nodes":[{"shape":"s","cpu":0,"mem_gb":8,"accel":0,"count":2}]}"#;
         assert!(FleetSpec::parse(bad).is_err());
+    }
+
+    #[test]
+    fn spread_parses_defaults_and_roundtrips() {
+        let f = FleetSpec::demo3();
+        assert_eq!(f.spreads(), vec![false, false, false], "demo fleet is unspread");
+        // omitted spread defaults to false; explicit true survives the
+        // JSON round trip
+        let text = r#"{"name":"x","replica_budget":8,"members":
+            [{"name":"a","pipeline":"video","spread":true},
+             {"name":"b","pipeline":"video"}]}"#;
+        let f = FleetSpec::parse(text).unwrap();
+        assert_eq!(f.spreads(), vec![true, false]);
+        let back = FleetSpec::parse(&f.to_json().to_string()).unwrap();
+        assert_eq!(f, back);
     }
 
     #[test]

@@ -85,6 +85,26 @@
 //! and donates replicas first.  The fungible single-shape pool with
 //! zero memory/accel demand reproduces the scalar path byte for byte.
 //!
+//! Placement is *topology-aware* (`tests/fleet_topology.rs`):
+//! consecutive packings are **sticky**
+//! ([`fleet::nodes::NodeInventory::pack_sticky`] keeps every replica on
+//! its old node when capacity allows; [`fleet::nodes::Packing::moved_from`]
+//! diffs the rest) and every replica a reconfiguration does move is
+//! charged through the apply delay
+//! ([`fleet::core::FleetReconfig::with_migration`]) and the migrations
+//! ledger, so a churny decision is visibly worse than a stable one.
+//! Node shapes carry **failure-domain** zone labels; spread-flagged
+//! members keep ≥ 2 replicas per stage across ≥ 2 zones
+//! ([`fleet::solver::solve_fleet_placed`]), a mid-run zone outage
+//! ([`simulator::sim::run_fleet_des_faults`],
+//! [`fleet::core::FleetCore::kill_zone`]) drains the zone and forces an
+//! emergency repack on the survivors, and the autoscaler buys WHICH
+//! shape the per-axis demand pressure selects
+//! ([`fleet::autoscaler::pressure_axis`],
+//! [`fleet::nodes::NodeInventory::retarget_with`]) instead of always
+//! the cheapest — with the fleet core mirroring the controller's
+//! inventory on every resize.
+//!
 //! Start with [`coordinator::adapter::Adapter`] (the control loop),
 //! [`optimizer::ip::solve`] (the IP), and [`simulator::sim::Simulation`]
 //! (the evaluation substrate), or run `cargo run --release -- help`.
@@ -150,25 +170,30 @@ pub mod optimizer {
 pub mod fleet {
     //! Multi-pipeline sharding over one *elastic* replica pool (see the
     //! crate-level "fleet layer"): the fleet description + JSON IO
-    //! ([`spec`] — members carry priority classes and SLA classes,
-    //! latency-critical vs throughput), the heterogeneous node shapes
-    //! and the replica bin-packer ([`nodes`] —
-    //! [`nodes::NodeInventory`] with first-fit-decreasing
-    //! [`nodes::NodeInventory::pack`], whole-node
-    //! [`nodes::NodeInventory::retarget`] elasticity, and the fungible
-    //! scalar embedding), the joint cross-pipeline budget allocator
-    //! ([`solver`] — greedy marginal-gain over per-pipeline IP solves,
-    //! priority tiers, even-split floor, brute-force cross-check,
-    //! bin-packed solves over node inventories, incremental re-solves
-    //! and the mid-interval preemption fast path), the pool autoscaler
-    //! ([`autoscaler`] — grow/shrink steps against a cost target with
-    //! scale-up eagerness and scale-down hysteresis) and the
-    //! shared-pool core ([`core`] — one
+    //! ([`spec`] — members carry priority classes, SLA classes and
+    //! zone-spread flags), the heterogeneous node shapes and the
+    //! replica bin-packer ([`nodes`] — [`nodes::NodeInventory`] with
+    //! first-fit-decreasing [`nodes::NodeInventory::pack`], *sticky*
+    //! move-minimizing [`nodes::NodeInventory::pack_sticky`] with
+    //! failure-domain zone labels and spread enforcement, whole-node
+    //! [`nodes::NodeInventory::retarget`] /
+    //! pressure-aware [`nodes::NodeInventory::retarget_with`]
+    //! elasticity, and the fungible scalar embedding), the joint
+    //! cross-pipeline budget allocator ([`solver`] — greedy
+    //! marginal-gain over per-pipeline IP solves, priority tiers,
+    //! even-split floor, brute-force cross-check, bin-packed/sticky
+    //! solves over node inventories, incremental re-solves, the
+    //! mid-interval preemption fast path and the zone-fault emergency
+    //! repack), the pool autoscaler ([`autoscaler`] — grow/shrink
+    //! steps against a cost target with scale-up eagerness, scale-down
+    //! hysteresis and the per-axis [`autoscaler::pressure_axis`] shape
+    //! selector) and the shared-pool core ([`core`] — one
     //! [`crate::cluster::core::ClusterCore`] per member behind one
     //! budget/inventory, with rolling-reconfig overshoot accounting,
-    //! pool resizing and the replica-seconds + node-seconds cost
-    //! ledgers).  The fleet drivers live with their clocks:
-    //! [`crate::simulator::sim::run_fleet_des`] and
+    //! mirrored pool resizing, zone kills, and the replica-seconds +
+    //! node-seconds + migration cost ledgers).  The fleet drivers live
+    //! with their clocks: [`crate::simulator::sim::run_fleet_des`]
+    //! (plus [`crate::simulator::sim::run_fleet_des_faults`]) and
     //! [`crate::serving::engine::serve_fleet_with`].
     pub mod autoscaler;
     pub mod core;

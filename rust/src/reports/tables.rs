@@ -148,10 +148,12 @@ pub fn table6() -> String {
 /// completions, drops, SLA attainment, average PAS/cost, replica
 /// share, replicas lost to preemption), a fleet totals row, and the
 /// shared-pool block — final size, size range over the run with the
-/// resize count, preemption events, and the replica-second cost ledger
-/// (bought vs used with the utilization percentage).  `names`,
-/// `metrics` and `shares` are per member in fleet order; `pool` is the
-/// run's [`PoolReport`].
+/// resize count, preemption events, the replica-migration/zone-kill
+/// line, and the replica-second cost ledger (bought vs used with the
+/// utilization percentage); node-backed pools add per-shape node
+/// counts, the node-seconds ledger and (when zoned) per-zone node
+/// counts.  `names`, `metrics` and `shares` are per member in fleet
+/// order; `pool` is the run's [`PoolReport`].
 pub fn fleet_table(
     names: &[String],
     metrics: &[RunMetrics],
@@ -210,6 +212,13 @@ pub fn fleet_table(
         pool.resizes,
         pool.preemptions,
     ));
+    // Placement churn: replicas moved between nodes across the run's
+    // reconfigurations (sticky packing keeps it low; fungible pools
+    // report 0), plus zone outages the run absorbed.
+    out.push_str(&format!(
+        "replica migrations: {} | zone kills: {}\n",
+        pool.migrations, pool.zone_kills,
+    ));
     out.push_str(&format!(
         "pool cost: {:.0} replica-s bought, {:.0} used ({:.0}% utilized)\n",
         pool.bought_replica_secs,
@@ -235,6 +244,15 @@ pub fn fleet_table(
         let secs: Vec<String> =
             pool.node_secs.iter().map(|(name, s)| format!("{name}={s:.0}")).collect();
         out.push_str(&format!("node-seconds bought per shape: {}\n", secs.join(", ")));
+    }
+    // Failure domains: final node counts per zone (zoned pools only).
+    if !pool.nodes_by_zone.is_empty() {
+        let zones: Vec<String> = pool
+            .nodes_by_zone
+            .iter()
+            .map(|(zone, count)| format!("{zone}={count} nodes"))
+            .collect();
+        out.push_str(&format!("pool zones: {}\n", zones.join(", ")));
     }
     out
 }
@@ -320,12 +338,15 @@ mod tests {
             pool_max: 26,
             peak_in_use: 18,
             resizes: 3,
+            migrations: 4,
+            zone_kills: 0,
             preemptions: 2,
             preempted: vec![0, 5],
             bought_replica_secs: 4800.0,
             used_replica_secs: 3600.0,
             nodes_final: Vec::new(),
             node_secs: Vec::new(),
+            nodes_by_zone: Vec::new(),
         };
         let s = fleet_table(&names, &metrics, &[9, 7], &pool);
         assert!(s.contains("video-edge"), "{s}");
@@ -334,6 +355,7 @@ mod tests {
         assert!(s.contains("16 of 24 replicas"), "{s}");
         assert!(s.contains("size 20..26 over the run (3 resizes)"), "{s}");
         assert!(s.contains("2 preemptions"), "{s}");
+        assert!(s.contains("replica migrations: 4 | zone kills: 0"), "{s}");
         assert!(s.contains("4800 replica-s bought, 3600 used (75% utilized)"), "{s}");
         // vector breakdown line: 2 members × (6c, 12.5g, 1a)
         assert!(s.contains("cost vector:"), "{s}");
@@ -342,9 +364,10 @@ mod tests {
         assert!(s.contains("2.0 accel slots"), "{s}");
         // per-member preempt column + totals
         assert!(s.contains("preempt"), "{s}");
-        // fungible pool: no node lines
+        // fungible pool: no node or zone lines
         assert!(!s.contains("pool nodes:"), "{s}");
-        assert_eq!(s.lines().count(), 2 + 2 + 1 + 3);
+        assert!(!s.contains("pool zones:"), "{s}");
+        assert_eq!(s.lines().count(), 2 + 2 + 1 + 4);
     }
 
     #[test]
@@ -356,12 +379,15 @@ mod tests {
             pool_max: 32,
             peak_in_use: 12,
             resizes: 1,
+            migrations: 7,
+            zone_kills: 1,
             preemptions: 0,
             preempted: vec![0],
             bought_replica_secs: 640.0,
             used_replica_secs: 320.0,
             nodes_final: vec![("(8c/32g/0a)".into(), 4), ("(16c/64g/2a)".into(), 2)],
             node_secs: vec![("(8c/32g/0a)".into(), 80.0), ("(16c/64g/2a)".into(), 40.0)],
+            nodes_by_zone: vec![("east".into(), 4), ("west".into(), 2)],
         };
         let m = RunMetrics { pipeline: "video".into(), workload: "bursty".into(), ..Default::default() };
         let s = fleet_table(&["m0".to_string()], &[m], &[6], &pool);
@@ -370,6 +396,8 @@ mod tests {
             s.contains("node-seconds bought per shape: (8c/32g/0a)=80, (16c/64g/2a)=40"),
             "{s}"
         );
+        assert!(s.contains("replica migrations: 7 | zone kills: 1"), "{s}");
+        assert!(s.contains("pool zones: east=4 nodes, west=2 nodes"), "{s}");
         // the node lines keep the column-aligned table intact above
         assert!(s.contains("TOTAL"), "{s}");
     }

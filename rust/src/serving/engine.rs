@@ -585,6 +585,8 @@ pub fn serve_fleet_with(
             return Err(crate::anyhow!("fleet serve: {} SLA classes for {n} members", c.len()));
         }
     }
+    let spread = tuning.spread.clone().unwrap_or_default();
+    let migration_delay = tuning.migration_delay;
     let budget = inventory.as_ref().map_or(budget, |i| i.replica_cap());
 
     let mut adapter = FleetAdapter::new(
@@ -625,7 +627,8 @@ pub fn serve_fleet_with(
             timeout_cap: classes.as_ref().map_or(f64::INFINITY, |c| c[m].timeout_cap(sla)),
         })
         .collect();
-    let fleet = FleetCore::with_nodes(budget, inventory, &fleet_inits).map_err(Error::from)?;
+    let fleet = FleetCore::with_nodes_spread(budget, inventory, &fleet_inits, &spread)
+        .map_err(Error::from)?;
     let n_stages: Vec<usize> = live_specs.iter().map(PipelineSpec::n_stages).collect();
 
     // Warm every member's initial configuration before the clock starts.
@@ -666,7 +669,8 @@ pub fn serve_fleet_with(
         let sh = Arc::clone(&shared);
         let exs: Vec<Arc<dyn BatchExecutor>> = executors.clone();
         let mut active: Vec<PipelineConfig> = inits.iter().map(|d| d.config.clone()).collect();
-        let mut reconfig = FleetReconfig::new(adapter.config.apply_delay);
+        let mut reconfig =
+            FleetReconfig::with_migration(adapter.config.apply_delay, migration_delay);
         // The controller's current pool view; staged shrinks below it
         // are stale (a later tick re-grew the budget) and are skipped.
         let mut ctl_budget = budget;
@@ -709,7 +713,11 @@ pub fn serve_fleet_with(
                                 // configuration for a full interval).
                                 reconfig.clear();
                                 let floor = fleet.configured_replicas();
-                                let _ = fleet.resize_pool(nowp, p.budget.max(floor));
+                                let _ = fleet.resize_pool_with(
+                                    nowp,
+                                    p.budget.max(floor),
+                                    adapter.node_inventory().as_ref(),
+                                );
                                 fleet.note_preemption(&p.from);
                                 active = p.decisions.into_iter().map(|d| d.config).collect();
                             }
@@ -741,18 +749,23 @@ pub fn serve_fleet_with(
                 // controller's view forever — re-sync once nothing is
                 // pending (best-effort: never below configured).
                 if reconfig.pending_len() == 0 && phys_budget > ctl_budget {
+                    let mirror = adapter.node_inventory();
                     let mut fleet = sh.fleet.lock().unwrap();
                     fleet.accrue(now);
                     let floor = fleet.configured_replicas();
-                    let _ = fleet.resize_pool(now, ctl_budget.max(floor));
+                    let _ = fleet.resize_pool_with(now, ctl_budget.max(floor), mirror.as_ref());
                     phys_budget = fleet.budget();
                 }
                 let pool_to = adapter.resize(now, &histories);
                 if let Some(pnew) = pool_to {
                     if pnew > phys_budget {
+                        // mirror the controller's inventory: with
+                        // pressure-aware buying the bought shape no
+                        // longer follows from the target alone
+                        let mirror = adapter.node_inventory();
                         let mut fleet = sh.fleet.lock().unwrap();
                         fleet.accrue(now);
-                        if let Err(e) = fleet.resize_pool(now, pnew) {
+                        if let Err(e) = fleet.resize_pool_with(now, pnew, mirror.as_ref()) {
                             crate::log_warn!("fleet", "pool grow rejected: {e}");
                         }
                     }
@@ -775,7 +788,14 @@ pub fn serve_fleet_with(
                     }
                 }
                 let shrink_to = pool_to.filter(|&p| p < phys_budget);
-                let at = reconfig.stage(now, ds, ctl_budget, shrink_to);
+                // price the decision's churn into the activation time
+                let moves = if reconfig.migration_delay > 0.0 {
+                    let cfgs: Vec<&PipelineConfig> = ds.iter().map(|d| &d.config).collect();
+                    sh.fleet.lock().unwrap().plan_moves(&cfgs)
+                } else {
+                    0
+                };
+                let at = reconfig.stage(now, ds, ctl_budget, shrink_to, moves);
                 if !sleep_interruptible(&sh.stop, at - sh.now()) {
                     break;
                 }
@@ -799,7 +819,10 @@ pub fn serve_fleet_with(
                                 let in_flight = ctl_budget
                                     .max(reconfig.max_pending_budget().unwrap_or(0));
                                 if pb >= in_flight {
-                                    if let Err(e) = fleet.resize_pool(sh.now(), pb) {
+                                    let mirror = adapter.node_inventory();
+                                    if let Err(e) =
+                                        fleet.resize_pool_with(sh.now(), pb, mirror.as_ref())
+                                    {
                                         crate::log_warn!("fleet", "pool shrink rejected: {e}");
                                     }
                                 }

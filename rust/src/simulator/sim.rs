@@ -305,7 +305,7 @@ fn drive(
 // ---------------------------------------------------------------------------
 
 /// One fleet-loop event: a member-scoped simulator event or a global
-/// adaptation/application/preemption/end event.
+/// adaptation/application/preemption/fault/end event.
 #[derive(Debug)]
 enum FleetEv {
     Member { member: usize, ev: Event },
@@ -314,7 +314,21 @@ enum FleetEv {
     /// Mid-interval preemption check (the fast path between Adapt
     /// ticks; self-rearming every `interval`, offset by `interval/2`).
     Preempt,
+    /// Scripted zone outage: drain the zone's nodes and force an
+    /// emergency repack (see [`ZoneFault`]).
+    Fault { zone: String },
     End,
+}
+
+/// A scripted failure-domain outage for
+/// [`run_fleet_des_faults`]: at `at` seconds of virtual time every
+/// node in `zone` drains from the pool and the controller re-plans the
+/// whole fleet on the survivors (applied immediately — an outage does
+/// not wait for the apply delay).
+#[derive(Debug, Clone)]
+pub struct ZoneFault {
+    pub at: f64,
+    pub zone: String,
 }
 
 /// Result of a fleet DES run: per-member metrics (member order matches
@@ -337,6 +351,12 @@ pub struct FleetRunMetrics {
     /// Pool-size extremes, resize/preemption counts and the
     /// replica-seconds bought/used cost ledger.
     pub pool: PoolReport,
+    /// One entry per zone fault that fired: per member, the minimum
+    /// over its stages of replicas that SURVIVED the zone loss under
+    /// the placement active at the instant of the fault (what the
+    /// zone-spread constraint keeps ≥ 1 for flagged members).  Empty
+    /// when no faults were scripted or the pool carries no placement.
+    pub zone_fault_min_survivors: Vec<Vec<u32>>,
 }
 
 impl FleetRunMetrics {
@@ -379,6 +399,32 @@ pub fn run_fleet_des(
     system: &str,
     budget: u32,
 ) -> FleetRunMetrics {
+    run_fleet_des_faults(
+        profiles, slas, interval, apply_delay, sim, ctl, traces, system, budget, &[],
+    )
+}
+
+/// [`run_fleet_des`] with scripted failure-domain outages: each
+/// [`ZoneFault`] drains its zone's nodes mid-run
+/// ([`FleetCore::kill_zone`]), records which members' stages would have
+/// survived the loss under the placement in force (the zone-spread
+/// guarantee), and asks the controller for an EMERGENCY joint decision
+/// on the survivor inventory ([`FleetController::fault`]) applied
+/// immediately — no apply delay, the zone is already gone.  Controllers
+/// that cannot re-plan (no node inventory) leave the pool untouched.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_des_faults(
+    profiles: &[PipelineProfiles],
+    slas: &[f64],
+    interval: f64,
+    apply_delay: f64,
+    sim: SimConfig,
+    ctl: &mut dyn FleetController,
+    traces: &[Trace],
+    system: &str,
+    budget: u32,
+    faults: &[ZoneFault],
+) -> FleetRunMetrics {
     let n = traces.len();
     assert_eq!(profiles.len(), n, "one profile set per member");
     assert_eq!(slas.len(), n, "one SLA per member");
@@ -391,6 +437,7 @@ pub fn run_fleet_des(
     if let Some(c) = &classes {
         assert_eq!(c.len(), n, "one SLA class per member");
     }
+    let spread = ctl.spread().unwrap_or_default();
     let budget = inventory.as_ref().map_or(budget, |i| i.replica_cap());
     let horizon = traces.iter().map(Trace::seconds).max().unwrap_or(0) as f64;
     let mut rng = SplitMix64::new(sim.seed ^ 0xF1EE7);
@@ -421,21 +468,27 @@ pub fn run_fleet_des(
             timeout_cap: classes.as_ref().map_or(f64::INFINITY, |c| c[m].timeout_cap(sla)),
         })
         .collect();
-    let mut fleet = FleetCore::with_nodes(budget, inventory, &fleet_inits)
+    let mut fleet = FleetCore::with_nodes_spread(budget, inventory, &fleet_inits, &spread)
         .expect("fleet controller must respect the replica budget");
-    let mut reconfig = FleetReconfig::new(apply_delay);
+    let mut reconfig = FleetReconfig::with_migration(apply_delay, ctl.migration_delay());
     let mut active: Vec<PipelineConfig> = inits.iter().map(|d| d.config.clone()).collect();
     let n_stages: Vec<usize> = profiles.iter().map(|p| p.stages.len()).collect();
     // The controller's current pool view.  The physical pool may lag
     // it (a staged shrink not yet landed); staged shrinks below this
     // are stale — a later tick re-grew the budget — and are skipped.
     let mut ctl_budget = budget;
+    let mut fault_survivors: Vec<Vec<u32>> = Vec::new();
 
     events.push(interval, FleetEv::Adapt);
     // Plain fixed-pool controllers never preempt — don't even schedule
     // the mid-interval checks (and their per-member monitor scans).
     if ctl.wants_preemption() && interval * 0.5 < horizon {
         events.push(interval * 0.5, FleetEv::Preempt);
+    }
+    for f in faults {
+        if f.at < horizon {
+            events.push(f.at, FleetEv::Fault { zone: f.zone.clone() });
+        }
     }
     events.push(horizon, FleetEv::End);
 
@@ -503,17 +556,23 @@ pub fn run_fleet_des(
                 // controller's view forever — re-sync once nothing is
                 // pending (best-effort: never below configured).
                 if reconfig.pending_len() == 0 && fleet.budget() > ctl_budget {
-                    let _ =
-                        fleet.resize_pool(now, ctl_budget.max(fleet.configured_replicas()));
+                    let _ = fleet.resize_pool_with(
+                        now,
+                        ctl_budget.max(fleet.configured_replicas()),
+                        ctl.node_inventory().as_ref(),
+                    );
                 }
                 // Autoscaler first: grow the pool immediately so the
                 // joint solve can budget against it; defer a shrink
-                // until the smaller configurations activate.
+                // until the smaller configurations activate.  The
+                // controller's inventory rides along as a MIRROR: with
+                // pressure-aware buying the shape it bought no longer
+                // follows from the replica target alone.
                 let pool_to = ctl.resize(now, &histories);
                 if let Some(p) = pool_to {
                     if p > fleet.budget() {
                         fleet
-                            .resize_pool(now, p)
+                            .resize_pool_with(now, p, ctl.node_inventory().as_ref())
                             .expect("pool growth is always accepted");
                     }
                     ctl_budget = p;
@@ -528,7 +587,17 @@ pub fn run_fleet_des(
                         .record_interval(now, &active[m], observed, &decisions[m]);
                 }
                 let shrink_to = pool_to.filter(|&p| p < fleet.budget());
-                let at = reconfig.stage(now, decisions, ctl_budget, shrink_to);
+                // Price the decision's churn BEFORE staging it: every
+                // replica the sticky re-pack would move charges one
+                // migration delay on top of the apply delay.
+                let moves = if reconfig.migration_delay > 0.0 {
+                    let cfgs: Vec<&PipelineConfig> =
+                        decisions.iter().map(|d| &d.config).collect();
+                    fleet.plan_moves(&cfgs)
+                } else {
+                    0
+                };
+                let at = reconfig.stage(now, decisions, ctl_budget, shrink_to, moves);
                 events.push(at, FleetEv::Apply);
                 if now + interval < horizon {
                     events.push(now + interval, FleetEv::Adapt);
@@ -552,11 +621,14 @@ pub fn run_fleet_des(
                     // earlier: a stale slow-path decision activating
                     // later would silently revert it.
                     reconfig.clear();
-                    // Sync the pool to the controller's budget view
-                    // (executes a cleared pending shrink early).
-                    fleet
-                        .resize_pool(now, p.budget.max(fleet.configured_replicas()))
-                        .expect("preempted configuration fits the controller budget");
+                    // Sync the pool to the controller's view (executes
+                    // a cleared pending shrink early; best-effort — a
+                    // rolling drain can hold more than the mirror caps).
+                    let _ = fleet.resize_pool_with(
+                        now,
+                        p.budget.max(fleet.configured_replicas()),
+                        ctl.node_inventory().as_ref(),
+                    );
                     fleet.note_preemption(&p.from);
                     active = p.decisions.into_iter().map(|d| d.config).collect();
                     for m in 0..n {
@@ -594,9 +666,15 @@ pub fn run_fleet_des(
                         let in_flight =
                             ctl_budget.max(reconfig.max_pending_budget().unwrap_or(0));
                         if p >= in_flight {
-                            fleet
-                                .resize_pool(now, p)
-                                .expect("solve ran under the shrunk budget");
+                            // best-effort mirror sync: a newer, even
+                            // smaller controller view can undercut the
+                            // configuration just applied — then this
+                            // shrink waits for ITS stage instead
+                            let _ = fleet.resize_pool_with(
+                                now,
+                                p,
+                                ctl.node_inventory().as_ref(),
+                            );
                         }
                     }
                     active = staged.decisions.into_iter().map(|d| d.config).collect();
@@ -605,6 +683,53 @@ pub fn run_fleet_des(
                             drive_member(
                                 &mut fleet, profiles, m, si, now, &mut events, &mut rng, sim,
                             );
+                        }
+                    }
+                }
+            }
+            FleetEv::Fault { zone } => {
+                // Drain the zone from a CLONE first: the controller
+                // must bless the survivor pool (re-plan on it) before
+                // the physical pool is touched — a controller that
+                // cannot re-plan leaves the fleet intact.
+                let survivor = fleet.inventory().map(|inv| {
+                    let mut s = inv.clone();
+                    (s.drain_zone(&zone), s)
+                });
+                if let Some((drained, survivor)) = survivor {
+                    if drained > 0 {
+                        let observed: Vec<f64> = monitors
+                            .iter()
+                            .map(|mo| mo.recent_rate(now, interval.max(1.0) as usize))
+                            .collect();
+                        if let Some(ds) = ctl.fault(now, survivor, &observed) {
+                            assert_eq!(ds.len(), n, "fault decisions are per member");
+                            // record what the active placement would
+                            // have kept alive through the loss — the
+                            // zone-spread guarantee under test
+                            fault_survivors
+                                .push(fleet.zone_survivors(&zone).unwrap_or_default());
+                            fleet.kill_zone(now, &zone);
+                            // stale staged decisions were solved on the
+                            // dead pool; the emergency apply supersedes
+                            reconfig.clear();
+                            let configs: Vec<(PipelineConfig, f64)> = ds
+                                .iter()
+                                .map(|d| (d.config.clone(), d.lambda_predicted))
+                                .collect();
+                            fleet
+                                .apply(&configs)
+                                .expect("fault decision solved under the survivor pool");
+                            ctl_budget = fleet.budget();
+                            active = ds.into_iter().map(|d| d.config).collect();
+                            for m in 0..n {
+                                for si in 0..n_stages[m] {
+                                    drive_member(
+                                        &mut fleet, profiles, m, si, now, &mut events,
+                                        &mut rng, sim,
+                                    );
+                                }
+                            }
                         }
                     }
                 }
@@ -630,7 +755,14 @@ pub fn run_fleet_des(
             )
         })
         .collect();
-    FleetRunMetrics { members, budget: pool.budget, peak_in_use, final_replicas, pool }
+    FleetRunMetrics {
+        members,
+        budget: pool.budget,
+        peak_in_use,
+        final_replicas,
+        pool,
+        zone_fault_min_survivors: fault_survivors,
+    }
 }
 
 /// [`drive`] for one fleet member: events come back member-tagged.

@@ -71,8 +71,10 @@ fn prop_packing_respects_every_capacity_axis() {
                         g.usize(0, 129) as f64,
                         g.usize(0, 5) as f64,
                     ),
+                    zone: String::new(),
                 },
                 count: g.usize(1, 8) as u32,
+                bought: 0,
             })
             .collect();
         let inv = NodeInventory::new(pools);

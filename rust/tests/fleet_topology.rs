@@ -1,0 +1,382 @@
+//! Topology acceptance pins (ISSUE 5): sticky placement, failure
+//! domains, and migration-budgeted repacking.
+//!
+//! (a) stickiness — a sticky re-pack of an UNCHANGED configuration
+//!     moves zero replicas, and a changed configuration's sticky move
+//!     count never exceeds what a plain FFD re-pack would pay;
+//! (b) zone spread — a spread-flagged member's packing survives any
+//!     single zone loss with ≥ 1 replica per stage, both at the packer
+//!     and through a full `run_fleet_des_faults` run with a mid-run
+//!     `kill_zone` and emergency repack;
+//! (c) migration charging — a migration-charged reconfiguration never
+//!     activates earlier than an uncharged one;
+//! (d) scalar regression — on a fungible single-zone inventory the
+//!     sticky/spread machinery is invisible: `pack_sticky` with no
+//!     history reproduces `pack` byte for byte and the placed joint
+//!     solve equals the PR-4 packed solve.
+
+use ipa::coordinator::adapter::AdapterConfig;
+use ipa::fleet::core::FleetReconfig;
+use ipa::fleet::nodes::{NodeInventory, NodePool, NodeShape, PackItem};
+use ipa::fleet::solver::{solve_fleet_packed, solve_fleet_placed, FleetAdapter, FleetTuning};
+use ipa::fleet::spec::FleetSpec;
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines;
+use ipa::optimizer::ip::Problem;
+use ipa::predictor::{Predictor, ReactivePredictor};
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::resources::ResourceVec;
+use ipa::simulator::sim::{run_fleet_des_faults, SimConfig, ZoneFault};
+use ipa::util::quickcheck::{check, prop_assert};
+use ipa::workload::tracegen::Pattern;
+
+fn predictors(n: usize) -> Vec<Box<dyn Predictor + Send>> {
+    (0..n)
+        .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+        .collect()
+}
+
+/// A random 1-3 shape inventory spread over 1-3 zones.
+fn gen_inventory(g: &mut ipa::util::quickcheck::Gen) -> NodeInventory {
+    let zones = ["east", "west", "north"];
+    let n_zones = g.usize(1, 4);
+    let pools: Vec<NodePool> = (0..g.usize(1, 4))
+        .map(|i| NodePool {
+            shape: NodeShape {
+                name: format!("s{i}"),
+                capacity: ResourceVec::new(
+                    g.usize(2, 33) as f64,
+                    g.usize(8, 129) as f64,
+                    g.usize(0, 3) as f64,
+                ),
+                zone: zones[i % n_zones].to_string(),
+            },
+            count: g.usize(1, 5) as u32,
+            bought: 0,
+        })
+        .collect();
+    NodeInventory::new(pools)
+}
+
+fn gen_items(g: &mut ipa::util::quickcheck::Gen) -> Vec<PackItem> {
+    (0..g.usize(1, 6))
+        .map(|m| PackItem {
+            member: m,
+            stage: g.usize(0, 2),
+            unit: ResourceVec::new(
+                g.usize(1, 9) as f64,
+                g.usize(1, 33) as f64,
+                g.usize(0, 2) as f64,
+            ),
+            replicas: g.usize(1, 5) as u32,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// (a) stickiness
+// ---------------------------------------------------------------------------
+
+/// Property: re-packing the SAME items against their own packing keeps
+/// every replica in place — zero moves — and a shifted demand's sticky
+/// pack never moves more replicas than a plain FFD re-pack would.
+#[test]
+fn prop_sticky_moves_bounded_by_plain_and_zero_when_unchanged() {
+    check("sticky pack minimizes moves", 150, |g| {
+        let inv = gen_inventory(g);
+        let items = gen_items(g);
+        let Some(prev) = inv.pack(&items) else { return Ok(()) };
+
+        // unchanged demand: identity re-pack, zero moves
+        let same = inv
+            .pack_sticky(&items, Some(&prev), &[])
+            .expect("a packed demand set must re-pack against itself");
+        prop_assert(
+            same.moved_from(&prev).is_empty(),
+            "unchanged configuration moved a replica",
+        )?;
+
+        // shifted demand: one member grows by one replica
+        let mut shifted = items.clone();
+        let k = g.usize(0, shifted.len());
+        shifted[k].replicas += 1;
+        let sticky = inv.pack_sticky(&shifted, Some(&prev), &[]);
+        let plain = inv.pack(&shifted);
+        match (sticky, plain) {
+            (Some(s), Some(p)) => prop_assert(
+                s.moved_from(&prev).len() <= p.moved_from(&prev).len(),
+                "sticky pack moved MORE than plain FFD",
+            ),
+            // sticky falls back to plain inside the fleet core, so a
+            // sticky-only failure is not a correctness loss here
+            _ => Ok(()),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (b) zone spread
+// ---------------------------------------------------------------------------
+
+/// Property: whatever the packer accepts for a spread-flagged member
+/// survives ANY single zone loss with ≥ 1 replica per stage (when the
+/// inventory spans ≥ 2 zones — below that spread is vacuous).
+#[test]
+fn prop_spread_packing_survives_any_single_zone_loss() {
+    check("zone spread survives any kill", 150, |g| {
+        let inv = gen_inventory(g);
+        let mut items = gen_items(g);
+        // spread members need ≥ 2 replicas per stage to spread at all
+        for it in items.iter_mut() {
+            it.replicas = it.replicas.max(2);
+        }
+        let spread = vec![true; items.len()];
+        let Some(p) = inv.pack_sticky(&items, None, &spread) else { return Ok(()) };
+        if inv.distinct_zones() < 2 {
+            return Ok(()); // vacuous: nothing to spread across
+        }
+        let zones: Vec<String> = inv
+            .pools
+            .iter()
+            .filter(|pl| pl.count > 0)
+            .map(|pl| pl.shape.zone.clone())
+            .collect();
+        for zone in &zones {
+            let surv = p.survivors_of_zone(&inv, zone);
+            for it in &items {
+                if it.replicas == 0 {
+                    continue;
+                }
+                prop_assert(
+                    surv.get(&(it.member, it.stage)).copied().unwrap_or(0) >= 1,
+                    &format!(
+                        "member {} stage {} dies with zone {zone}",
+                        it.member, it.stage
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// End to end: a spread-flagged member on a two-zone pool rides through
+/// a mid-run `kill_zone` — at the instant of the fault every one of its
+/// stages still has a live replica, the emergency repack lands on the
+/// survivor zone, and the run keeps completing requests.
+#[test]
+fn kill_zone_des_spread_member_never_drops_below_stage_floor() {
+    let mut fleet = FleetSpec::demo3();
+    fleet.members.truncate(2); // video + audio-sent, 2 stages each
+    fleet.members[0].spread = true;
+    fleet.members[0].pattern = Pattern::SteadyLow;
+    fleet.members[1].pattern = Pattern::SteadyLow;
+    let inv = NodeInventory::parse("3x(8c,32g,0a)@east+3x(8c,32g,0a)@west").unwrap();
+    fleet.nodes = Some(inv.clone());
+    fleet.validate().unwrap();
+
+    let specs = fleet.specs().unwrap();
+    let profs: Vec<_> = specs.iter().map(pipeline_profiles).collect();
+    let slas: Vec<f64> = specs.iter().map(|s| s.sla_e2e()).collect();
+    let mut adapter = FleetAdapter::new(
+        specs.clone(),
+        profs.clone(),
+        AccuracyMetric::Pas,
+        inv.replica_cap(),
+        AdapterConfig::default(),
+        predictors(2),
+    )
+    .and_then(|a| {
+        a.with_tuning(FleetTuning {
+            nodes: Some(inv.clone()),
+            spread: Some(fleet.spreads()),
+            migration_delay: 0.5,
+            ..Default::default()
+        })
+    })
+    .unwrap();
+
+    let traces = fleet.traces(180);
+    let faults = [ZoneFault { at: 75.0, zone: "west".into() }];
+    let fm = run_fleet_des_faults(
+        &profs,
+        &slas,
+        10.0,
+        8.0,
+        SimConfig { seed: 11, ..Default::default() },
+        &mut adapter,
+        &traces,
+        "fleet-topo",
+        0,
+        &faults,
+    );
+
+    assert_eq!(fm.pool.zone_kills, 1, "the scripted fault fired");
+    assert_eq!(fm.budget, 24, "west zone (3×8 slots) drained from the pool");
+    assert_eq!(
+        fm.pool.nodes_by_zone,
+        vec![("east".to_string(), 3), ("west".to_string(), 0)]
+    );
+    // at the instant of the loss, the spread member held ≥ 1 replica
+    // per stage OUTSIDE the dead zone — the spread guarantee
+    assert_eq!(fm.zone_fault_min_survivors.len(), 1);
+    assert!(
+        fm.zone_fault_min_survivors[0][0] >= 1,
+        "spread member dropped below its stage floor at the fault: {:?}",
+        fm.zone_fault_min_survivors
+    );
+    // the run kept serving: both members completed work, and the final
+    // configurations fit the survivor pool
+    for m in &fm.members {
+        assert!(m.completed_count() > 100, "{}: {}", m.workload, m.completed_count());
+    }
+    assert!(fm.final_replicas.iter().sum::<u32>() <= fm.budget);
+    // a churny elastic run charges migrations; this one at least
+    // recorded the ledger without panicking
+    assert!(fm.pool.migrations < 10_000);
+}
+
+// ---------------------------------------------------------------------------
+// (c) migration charging
+// ---------------------------------------------------------------------------
+
+/// Property: for any (apply delay, migration delay, move count), the
+/// migration-charged stager never activates a decision EARLIER than the
+/// uncharged one, is exactly the uncharged one at zero moves, and is
+/// monotone in the move count.
+#[test]
+fn prop_migration_charge_never_applies_earlier() {
+    check("migration charge is monotone", 200, |g| {
+        let apply = g.f64(0.0, 20.0);
+        let per_move = g.f64(0.0, 3.0);
+        let moves = g.usize(0, 50) as u32;
+        let now = g.f64(0.0, 1000.0);
+        let mut plain = FleetReconfig::new(apply);
+        let mut charged = FleetReconfig::with_migration(apply, per_move);
+        let at_plain = plain.stage(now, Vec::new(), 8, None, moves);
+        let at_charged = charged.stage(now, Vec::new(), 8, None, moves);
+        prop_assert(at_charged >= at_plain, "charged reconfig applied earlier")?;
+        let at_zero = charged.stage(now, Vec::new(), 8, None, 0);
+        prop_assert(at_zero <= at_charged, "more moves must never apply sooner")?;
+        prop_assert((at_zero - at_plain).abs() < 1e-9, "zero moves must charge nothing")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (d) scalar / fungible regression
+// ---------------------------------------------------------------------------
+
+/// Property: on the fungible single-zone embedding the topology layer
+/// is invisible — `pack_sticky` with no history and no flags IS `pack`
+/// (byte for byte), spread flags change nothing, and the packing still
+/// succeeds iff Σ replicas fits the slot count.
+#[test]
+fn prop_fungible_single_zone_reproduces_scalar_packing() {
+    check("fungible packing unchanged by topology", 150, |g| {
+        let n = g.usize(1, 33) as u32;
+        let inv = NodeInventory::fungible(n);
+        let items = gen_items(g);
+        let total: u32 = items.iter().map(|it| it.replicas).sum();
+        let plain = inv.pack(&items);
+        prop_assert(plain.is_some() == (total <= n), "scalar budget rule broken")?;
+        let sticky = inv.pack_sticky(&items, None, &[]);
+        prop_assert(sticky == plain, "pack_sticky(None, []) must BE pack")?;
+        // spread flags are vacuous on the single unnamed zone
+        let flagged = inv.pack_sticky(&items, None, &vec![true; items.len()]);
+        prop_assert(flagged == plain, "spread must be vacuous on one zone")?;
+        // and the identity re-pack moves nothing
+        if let Some(prev) = &plain {
+            let again = inv.pack_sticky(&items, Some(prev), &[]).expect("re-pack");
+            prop_assert(again.moved_from(prev).is_empty(), "fungible re-pack moved")?;
+        }
+        Ok(())
+    });
+}
+
+/// The placed joint solve with no flags and no history equals the PR-4
+/// packed solve on both fungible and heterogeneous inventories.
+#[test]
+fn placed_solve_without_topology_matches_packed_solve() {
+    let specs: Vec<_> = ["video", "audio-sent", "nlp"]
+        .iter()
+        .map(|n| pipelines::by_name(n).unwrap())
+        .collect();
+    let profs: Vec<_> = specs.iter().map(pipeline_profiles).collect();
+    let problems: Vec<Problem> = specs
+        .iter()
+        .zip(&profs)
+        .zip([14.0, 7.0, 4.0])
+        .map(|((s, p), l)| Problem::new(s, p, l))
+        .collect();
+    for inv in [
+        NodeInventory::fungible(24),
+        NodeInventory::parse("4x(4c,16g,0a)+2x(16c,64g,2a)").unwrap(),
+        NodeInventory::parse("3x(4c,16g,0a)@east+3x(4c,16g,0a)@west").unwrap(),
+    ] {
+        let prios = [2u32, 1, 0];
+        let packed = solve_fleet_packed(&problems, &inv, &prios).unwrap();
+        let placed = solve_fleet_placed(&problems, &inv, &prios, &[], None).unwrap();
+        assert_eq!(packed.budget, placed.budget, "{inv}");
+        assert_eq!(packed.replicas_used, placed.replicas_used);
+        for (a, b) in packed.members.iter().zip(&placed.members) {
+            assert_eq!(a.config, b.config, "{inv}: configs diverge");
+            assert_eq!(a.budget, b.budget);
+            assert_eq!(a.solved, b.solved);
+        }
+        assert_eq!(packed.packing, placed.packing, "{inv}: placements diverge");
+    }
+}
+
+/// Sticky solves through the adapter: two consecutive decisions with
+/// identical λ produce identical configurations, a [`FleetCore`]
+/// holding the first plans ZERO churn for the second
+/// ([`FleetCore::plan_moves`] — what the drivers charge through the
+/// migration delay), and re-applying it migrates nothing.
+#[test]
+fn adapter_sticky_decisions_plan_zero_moves_when_quiet() {
+    use ipa::cluster::drop_policy::DropPolicy;
+    use ipa::fleet::core::{FleetCore, MemberInit};
+
+    let fleet = FleetSpec::demo3();
+    let specs = fleet.specs().unwrap();
+    let profs: Vec<_> = specs.iter().map(pipeline_profiles).collect();
+    let inv = NodeInventory::parse("4x(4c,16g,0a)@east+4x(4c,16g,0a)@west").unwrap();
+    let mut adapter = FleetAdapter::new(
+        specs.clone(),
+        profs,
+        AccuracyMetric::Pas,
+        inv.replica_cap(),
+        AdapterConfig::default(),
+        predictors(3),
+    )
+    .and_then(|a| {
+        a.with_tuning(FleetTuning {
+            nodes: Some(inv.clone()),
+            migration_delay: 0.25,
+            ..Default::default()
+        })
+    })
+    .unwrap();
+    assert!((adapter.migration_delay - 0.25).abs() < 1e-12);
+    let a = adapter.decide_for_lambdas(&[8.0, 5.0, 3.0]);
+    let b = adapter.decide_for_lambdas(&[8.0, 5.0, 3.0]);
+    for (da, db) in a.iter().zip(&b) {
+        assert_eq!(da.config, db.config, "quiet re-decide changed a configuration");
+    }
+    // a core holding the first decision prices the second at ZERO
+    // churn — the migration-charged stager adds nothing for it
+    let inits: Vec<MemberInit> = a
+        .iter()
+        .zip(&specs)
+        .map(|(d, s)| {
+            MemberInit::new(d.config.clone(), 10.0, DropPolicy::new(s.sla_e2e(), true))
+        })
+        .collect();
+    let mut core = FleetCore::with_nodes(0, Some(inv), &inits).unwrap();
+    let cfgs: Vec<&ipa::optimizer::ip::PipelineConfig> = b.iter().map(|d| &d.config).collect();
+    assert_eq!(core.plan_moves(&cfgs), 0, "quiet decision must plan zero churn");
+    let pairs: Vec<(ipa::optimizer::ip::PipelineConfig, f64)> =
+        b.iter().map(|d| (d.config.clone(), 10.0)).collect();
+    core.apply(&pairs).unwrap();
+    assert_eq!(core.pool_report().migrations, 0, "quiet apply must migrate nothing");
+}

@@ -1,0 +1,157 @@
+//! CI bench-trajectory checker: diff two `BENCH_cluster.json` files
+//! section by section and fail (exit 1) when the current run regressed
+//! more than the threshold against the baseline.
+//!
+//! Time sections (`solver`, `fleet_solver`, `fleet_autoscaler`,
+//! `fleet_binpack`, `fleet_topology`) regress when `mean_s` grows past
+//! `baseline × (1 + threshold)`; throughput sections (`simulator`,
+//! `fleet_sim`) regress when `items_per_s` falls below
+//! `baseline × (1 − threshold)`.  Rows or sections absent from the
+//! baseline are reported as new and never fail; a missing baseline
+//! FILE passes outright (the first run seeds the cache).
+//!
+//! Usage: `bench_diff <baseline.json> <current.json> [threshold]`
+//! (threshold defaults to 0.25 — the 25% gate from the CI contract).
+//! Exit codes: 0 ok / nothing to compare, 1 regression, 2 bad input.
+
+use ipa::util::json::Json;
+
+/// Sections judged on per-iteration wall time (`mean_s`, lower=better).
+const TIME_SECTIONS: &[&str] =
+    &["solver", "fleet_solver", "fleet_autoscaler", "fleet_binpack", "fleet_topology"];
+/// Sections judged on `items_per_s` (higher=better).
+const THROUGHPUT_SECTIONS: &[&str] = &["simulator", "fleet_sim"];
+
+struct Row {
+    name: String,
+    value: f64,
+}
+
+fn rows_of(doc: &Json, section: &str, field: &str) -> Vec<Row> {
+    let Some(arr) = doc.get(section).and_then(Json::as_arr) else {
+        return Vec::new();
+    };
+    arr.iter()
+        .filter_map(|r| {
+            let name = r.get("name").and_then(Json::as_str)?.to_string();
+            let value = r.get(field).and_then(Json::as_f64)?;
+            Some(Row { name, value })
+        })
+        .collect()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() < 3 {
+        eprintln!("usage: bench_diff <baseline.json> <current.json> [threshold]");
+        std::process::exit(2);
+    }
+    let threshold: f64 = match args.get(3) {
+        Some(t) => match t.parse() {
+            Ok(v) if (0.0..10.0).contains(&v) => v,
+            _ => {
+                eprintln!("bench_diff: bad threshold {t:?}");
+                std::process::exit(2);
+            }
+        },
+        None => 0.25,
+    };
+
+    // No baseline = first run on this branch: nothing to diff, the
+    // caller seeds the cache with the current file afterwards.
+    let baseline_text = match std::fs::read_to_string(&args[1]) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("bench_diff: no baseline at {} — first run, nothing to compare", args[1]);
+            return;
+        }
+    };
+    let current_text = match std::fs::read_to_string(&args[2]) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench_diff: cannot read current results {}: {e}", args[2]);
+            std::process::exit(2);
+        }
+    };
+    let parse = |label: &str, text: &str| -> Json {
+        match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("bench_diff: {label} is not valid JSON: {e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    let baseline = parse("baseline", &baseline_text);
+    let current = parse("current", &current_text);
+
+    let mut failures: Vec<String> = Vec::new();
+    let mut compared = 0usize;
+
+    // (section, field, true when lower is better)
+    let plans = TIME_SECTIONS
+        .iter()
+        .map(|&s| (s, "mean_s", true))
+        .chain(THROUGHPUT_SECTIONS.iter().map(|&s| (s, "items_per_s", false)));
+    for (section, field, lower_is_better) in plans {
+        let base = rows_of(&baseline, section, field);
+        let cur = rows_of(&current, section, field);
+        if cur.is_empty() {
+            println!("[{section}] no rows in the current run");
+            continue;
+        }
+        if base.is_empty() {
+            println!("[{section}] new section (no baseline rows) — skipped");
+            continue;
+        }
+        println!("[{section}] ({field}, {} rows)", cur.len());
+        for c in &cur {
+            let Some(b) = base.iter().find(|b| b.name == c.name) else {
+                println!("  {:<48} new row — skipped", c.name);
+                continue;
+            };
+            if b.value <= 0.0 {
+                println!("  {:<48} baseline 0 — skipped", c.name);
+                continue;
+            }
+            compared += 1;
+            let change = c.value / b.value - 1.0;
+            let regressed = if lower_is_better {
+                change > threshold
+            } else {
+                change < -threshold
+            };
+            println!(
+                "  {:<48} {:>12.6} -> {:>12.6}  ({:+.1}%){}",
+                c.name,
+                b.value,
+                c.value,
+                change * 100.0,
+                if regressed { "  REGRESSION" } else { "" }
+            );
+            if regressed {
+                failures.push(format!(
+                    "{section}/{}: {field} {:.6} -> {:.6} ({:+.1}%, limit ±{:.0}%)",
+                    c.name,
+                    b.value,
+                    c.value,
+                    change * 100.0,
+                    threshold * 100.0
+                ));
+            }
+        }
+    }
+
+    if failures.is_empty() {
+        println!(
+            "bench_diff: {compared} rows compared, none regressed past {:.0}%",
+            threshold * 100.0
+        );
+    } else {
+        eprintln!("bench_diff: {} regression(s) past {:.0}%:", failures.len(), threshold * 100.0);
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
+    }
+}
