@@ -59,6 +59,7 @@ fn main() {
         profile_batches: vec![1, 4, 16, 64],
         profile_reps: 3,
         sla_floor: if synthetic { 0.0 } else { args.get_f64("sla-floor", 0.25) },
+        legacy_lock: false,
     };
     let lg = LoadGenConfig { time_scale, seed: args.get_u64("seed", 11) };
     let trace = Trace::synthetic(pattern, seconds);

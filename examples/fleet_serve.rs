@@ -37,12 +37,18 @@
 //! moves between nodes through the apply delay (sticky packing keeps
 //! that count low — the migration line in the tables shows it).
 //!
+//! Both clocks run the SHARDED data plane by default (per-member event
+//! wheels in the DES, lock-free per-stage ingress rings in the live
+//! engine); pass `--legacy-clock 1` / `--legacy-lock 1` to A/B the
+//! pre-sharding single heap / single lock.
+//!
 //! Run: `cargo run --release --example fleet_serve
 //!       [-- --seconds 240 --budget 24 --time-scale 0.05 --fleet spec.json
 //!           --cost-target 30 --static 0
 //!           --nodes "2x(8c,32g,0a)@east+2x(8c,32g,0a)@west"
 //!           --class nlp-batchline=throughput
-//!           --spread video-edge --migration-delay 0.5]`
+//!           --spread video-edge --migration-delay 0.5
+//!           --legacy-lock 0 --legacy-clock 0]`
 
 use std::sync::Arc;
 
@@ -76,6 +82,8 @@ fn main() {
     let seconds = args.get_usize("seconds", 240);
     let time_scale = args.get_f64("time-scale", 0.05);
     let static_pool = args.get_usize("static", 0) != 0;
+    let legacy_lock = args.get_usize("legacy-lock", 0) != 0;
+    let legacy_clock = args.get_usize("legacy-clock", 0) != 0;
 
     let mut fleet = match args.get("fleet") {
         Some(path) => {
@@ -269,7 +277,7 @@ fn main() {
         &slas,
         10.0,
         8.0,
-        SimConfig { seed: 5, ..Default::default() },
+        SimConfig { seed: 5, legacy_clock, ..Default::default() },
         &mut des_adapter,
         &traces,
         "fleet-ipa",
@@ -303,6 +311,7 @@ fn main() {
         profile_batches: vec![],
         profile_reps: 0,
         sla_floor: 0.0,
+        legacy_lock,
     };
     let scaled: Vec<PipelineProfiles> = profs.iter().map(|p| p.scaled(time_scale)).collect();
     let executors: Vec<Arc<dyn BatchExecutor>> = scaled

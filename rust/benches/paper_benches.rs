@@ -385,6 +385,115 @@ fn main() {
     print_section("fleet topology (sticky packing + zone-kill repack)", &rows);
     let fleet_topology_rows = rows.clone();
 
+    // Sharded data plane: the 64-stage synthetic ring harness (lock-free
+    // per-stage rings vs the pre-sharding single lock) and an 8-member
+    // fleet DES (per-member event wheels vs the legacy single heap).
+    // Both speedups are asserted in-run, so `cargo bench` itself gates
+    // the data-plane claim; relax with IPA_RING_SPEEDUP_GATE /
+    // IPA_DES_SPEEDUP_GATE on noisy shared hardware.
+    use ipa::data_plane::synthetic::{run_legacy_lock, run_sharded, SyntheticCfg};
+
+    let gate = |var: &str, default: f64| -> f64 {
+        std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    };
+    let mut rows = Vec::new();
+
+    let dp_cfg = SyntheticCfg::bench_default();
+    let dp_items = dp_cfg.total_items() as f64;
+    let ring_sharded = b.run_throughput(
+        &format!("data_plane/sharded_rings_{}stages", dp_cfg.stages),
+        dp_items,
+        || run_sharded(&dp_cfg),
+    );
+    let ring_legacy = b.run_throughput(
+        &format!("data_plane/legacy_single_lock_{}stages", dp_cfg.stages),
+        dp_items,
+        || run_legacy_lock(&dp_cfg),
+    );
+    let ring_speedup = ring_legacy.summary.mean / ring_sharded.summary.mean.max(1e-12);
+    let ring_gate = gate("IPA_RING_SPEEDUP_GATE", 10.0);
+    println!("  data_plane: ring speedup {ring_speedup:.1}x (gate {ring_gate:.1}x)");
+    assert!(
+        ring_speedup >= ring_gate,
+        "sharded rings only {ring_speedup:.1}x the single-lock path (gate {ring_gate:.1}x)"
+    );
+    rows.push(ring_sharded);
+    rows.push(ring_legacy);
+
+    // 8-member fleet (demo3 cycled) at a fixed 120 s horizon: wide
+    // enough that the single heap pays log(total events) across every
+    // member on every pop, while each wheel stays member-local.
+    let wide_n = 8usize;
+    let wide_base = fleet.traces(120);
+    let wide_specs: Vec<_> = (0..wide_n).map(|i| fleet_specs[i % 3].clone()).collect();
+    let wide_profs: Vec<_> = (0..wide_n).map(|i| fleet_profs[i % 3].clone()).collect();
+    let wide_slas: Vec<f64> = (0..wide_n).map(|i| fleet_slas[i % 3]).collect();
+    let wide_traces: Vec<_> = (0..wide_n).map(|i| wide_base[i % 3].clone()).collect();
+    let wide_budget = 64u32;
+    let wide_items: f64 = wide_traces
+        .iter()
+        .enumerate()
+        .map(|(m, t)| {
+            t.arrivals(ipa::workload::tracegen::member_seed(fleet_seed, m)).len() as f64
+        })
+        .sum();
+    let wide_run = |legacy_clock: bool| {
+        let predictors: Vec<Box<dyn Predictor + Send>> = wide_specs
+            .iter()
+            .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+            .collect();
+        let mut adapter = FleetAdapter::new(
+            wide_specs.clone(),
+            wide_profs.clone(),
+            AccuracyMetric::Pas,
+            wide_budget,
+            AdapterConfig::default(),
+            predictors,
+        )
+        .unwrap();
+        run_fleet_des(
+            &wide_profs,
+            &wide_slas,
+            10.0,
+            8.0,
+            SimConfig { seed: fleet_seed, legacy_clock, ..Default::default() },
+            &mut adapter,
+            &wide_traces,
+            "dp-bench",
+            wide_budget,
+        )
+    };
+    // one parity pass before timing: both clocks must produce the very
+    // same per-request outcomes on the bench workload
+    {
+        let sharded_m = wide_run(false);
+        let legacy_m = wide_run(true);
+        for (m, (s, l)) in sharded_m.members.iter().zip(&legacy_m.members).enumerate() {
+            assert_eq!(s.requests, l.requests, "member {m}: sharded clock diverged");
+        }
+    }
+    let des_sharded = b.run_throughput(
+        &format!("data_plane/fleet_des_sharded_{wide_n}members"),
+        wide_items,
+        || wide_run(false),
+    );
+    let des_legacy = b.run_throughput(
+        &format!("data_plane/fleet_des_single_heap_{wide_n}members"),
+        wide_items,
+        || wide_run(true),
+    );
+    let des_speedup = des_legacy.summary.mean / des_sharded.summary.mean.max(1e-12);
+    let des_gate = gate("IPA_DES_SPEEDUP_GATE", 1.0);
+    println!("  data_plane: {wide_n}-member DES speedup {des_speedup:.2}x (gate {des_gate:.2}x)");
+    assert!(
+        des_speedup >= des_gate,
+        "sharded DES clock only {des_speedup:.2}x the single heap (gate {des_gate:.2}x)"
+    );
+    rows.push(des_sharded);
+    rows.push(des_legacy);
+    print_section("data plane (sharded rings + sharded DES clock)", &rows);
+    let data_plane_rows = rows.clone();
+
     // Perf baseline for future PRs: solver decision time + simulator
     // throughput (single-pipeline and fleet) + elastic control-plane
     // latencies, in a stable JSON shape.
@@ -398,6 +507,7 @@ fn main() {
             ("fleet_autoscaler", &fleet_autoscaler_rows[..]),
             ("fleet_binpack", &fleet_binpack_rows[..]),
             ("fleet_topology", &fleet_topology_rows[..]),
+            ("data_plane", &data_plane_rows[..]),
         ],
     ) {
         Ok(()) => println!("wrote BENCH_cluster.json"),

@@ -1,0 +1,289 @@
+//! Bounded lock-free MPSC ring queue — the per-(member, stage) arrival
+//! lane of the sharded live engine.
+//!
+//! Classic sequence-stamped bounded queue (Vyukov's bounded MPMC shape)
+//! used under a multi-producer / serialized-consumer discipline: any
+//! thread may [`MpscRing::try_push`]; [`MpscRing::pop`] is CAS-guarded,
+//! so the occasional concurrent drain (several workers racing to empty
+//! the same lane) is still safe, but throughput assumes pops are mostly
+//! serialized (in the engine they happen under the short core lock).
+//!
+//! # Memory-ordering contract
+//!
+//! Each slot carries an [`AtomicUsize`] sequence stamp `seq` next to an
+//! [`UnsafeCell`] payload.  For slot index `i` of a ring with capacity
+//! `cap` (power of two), the stamp cycles through:
+//!
+//! * `pos`        — slot empty, writable by the producer claiming `pos`
+//! * `pos + 1`    — slot full, readable by the consumer claiming `pos`
+//! * `pos + cap`  — slot empty again for the NEXT lap (`pos + cap`)
+//!
+//! Orderings, and why each suffices:
+//!
+//! * **`seq` load: `Acquire`** (both sides) — pairs with the `Release`
+//!   stores below so that observing "full" (`seq == pos + 1`) makes the
+//!   producer's payload write visible, and observing "empty for my lap"
+//!   (`seq == pos`) makes the previous consumer's read retirement
+//!   visible (the slot really is dead before we overwrite it).
+//! * **`tail`/`head` CAS: `Relaxed`** — the cursors only *claim* a
+//!   position; they publish no data.  All payload visibility is
+//!   mediated by the slot stamp, so the claim itself needs no ordering
+//!   (failure ordering likewise `Relaxed`; the loop re-reads).
+//! * **`seq` store after a payload write: `Release`** (`pos + 1`) —
+//!   publishes the value to the consumer's `Acquire` load.
+//! * **`seq` store after a payload read: `Release`** (`pos + cap`) —
+//!   publishes the slot's emptiness to the producer that will reuse it
+//!   one lap later, ordering the read before the overwrite.
+//!
+//! Fullness is detected without any cross-cursor read: a producer that
+//! finds `seq < pos` is a whole lap ahead of the consumer and fails
+//! with `Err(value)` — the caller decides whether to shed (see
+//! [`crate::data_plane::ingress::shed`]) or fall back to the locked
+//! path.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct Slot<T> {
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded lock-free ring queue (multi-producer push, CAS-guarded pop).
+pub struct MpscRing<T> {
+    buf: Box<[Slot<T>]>,
+    mask: usize,
+    /// Producer cursor: next position to claim for a push.
+    tail: AtomicUsize,
+    /// Consumer cursor: next position to claim for a pop.
+    head: AtomicUsize,
+}
+
+// SAFETY: values move across threads whole (a slot is written by
+// exactly one claiming producer and read by exactly one claiming
+// consumer, handshaked through `seq`), so `T: Send` is the only
+// requirement; the ring itself holds no `&T` aliases.
+unsafe impl<T: Send> Send for MpscRing<T> {}
+unsafe impl<T: Send> Sync for MpscRing<T> {}
+
+impl<T> MpscRing<T> {
+    /// A ring holding at least `capacity` items (rounded up to a power
+    /// of two, minimum 2).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        let buf: Vec<Slot<T>> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        MpscRing {
+            buf: buf.into_boxed_slice(),
+            mask: cap - 1,
+            tail: AtomicUsize::new(0),
+            head: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Push from any thread; `Err(value)` when the ring is full (the
+    /// value comes back so the caller can shed or take the slow path).
+    pub fn try_push(&self, value: T) -> Result<(), T> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                // Slot empty for this lap: claim `pos` (Relaxed — the
+                // stamp, not the cursor, publishes the payload).
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS makes this thread the
+                        // unique writer of slot `pos` until the Release
+                        // store below hands it to the consumer.
+                        unsafe { (*slot.val.get()).write(value) };
+                        slot.seq.store(pos + 1, Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if diff < 0 {
+                // The consumer hasn't freed this slot from the previous
+                // lap: the ring is full.
+                return Err(value);
+            } else {
+                // Another producer claimed `pos`; chase the cursor.
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Pop the oldest item, `None` when empty.  CAS-guarded so racing
+    /// consumers are safe; the engine serializes drains under the core
+    /// lock anyway.
+    pub fn pop(&self) -> Option<T> {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - (pos + 1) as isize;
+            if diff == 0 {
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS makes this thread the
+                        // unique reader of slot `pos`; the producer's
+                        // Release store (observed Acquire above) made
+                        // the payload visible.
+                        let value = unsafe { (*slot.val.get()).assume_init_read() };
+                        slot.seq.store(pos + self.mask + 1, Ordering::Release);
+                        return Some(value);
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if diff < 0 {
+                return None;
+            } else {
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Snapshot emptiness (exact only while producers/consumers are
+    /// quiescent — good enough for drain loops and tests).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot occupancy (same caveat as [`MpscRing::is_empty`]).
+    pub fn len(&self) -> usize {
+        let tail = self.tail.load(Ordering::Acquire);
+        let head = self.head.load(Ordering::Acquire);
+        tail.saturating_sub(head)
+    }
+}
+
+impl<T> Drop for MpscRing<T> {
+    fn drop(&mut self) {
+        // Retire whatever is still queued so payload destructors run.
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_single_producer() {
+        let r: MpscRing<u64> = MpscRing::with_capacity(8);
+        for i in 0..8 {
+            r.try_push(i).unwrap();
+        }
+        for i in 0..8 {
+            assert_eq!(r.pop(), Some(i));
+        }
+        assert_eq!(r.pop(), None);
+    }
+
+    #[test]
+    fn full_returns_value_and_frees_after_pop() {
+        let r: MpscRing<u64> = MpscRing::with_capacity(2);
+        r.try_push(1).unwrap();
+        r.try_push(2).unwrap();
+        assert_eq!(r.try_push(3), Err(3));
+        assert_eq!(r.pop(), Some(1));
+        r.try_push(3).unwrap();
+        assert_eq!(r.pop(), Some(2));
+        assert_eq!(r.pop(), Some(3));
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        let r: MpscRing<u8> = MpscRing::with_capacity(5);
+        assert_eq!(r.capacity(), 8);
+        let r: MpscRing<u8> = MpscRing::with_capacity(0);
+        assert_eq!(r.capacity(), 2);
+    }
+
+    #[test]
+    fn wraps_many_laps() {
+        let r: MpscRing<usize> = MpscRing::with_capacity(4);
+        for i in 0..1000 {
+            r.try_push(i).unwrap();
+            assert_eq!(r.pop(), Some(i));
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn drop_releases_queued_values() {
+        let r: MpscRing<Arc<u32>> = MpscRing::with_capacity(4);
+        let v = Arc::new(7u32);
+        r.try_push(Arc::clone(&v)).unwrap();
+        r.try_push(Arc::clone(&v)).unwrap();
+        assert_eq!(Arc::strong_count(&v), 3);
+        drop(r);
+        assert_eq!(Arc::strong_count(&v), 1);
+    }
+
+    #[test]
+    fn concurrent_producers_deliver_exactly_once() {
+        let r = Arc::new(MpscRing::<u64>::with_capacity(1024));
+        let producers = 4u64;
+        let per = 5_000u64;
+        let handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        let mut v = (p << 32) | i;
+                        loop {
+                            match r.try_push(v) {
+                                Ok(()) => break,
+                                Err(back) => {
+                                    v = back;
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut got = Vec::new();
+        while got.len() < (producers * per) as usize {
+            match r.pop() {
+                Some(v) => got.push(v),
+                None => std::thread::yield_now(),
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.pop(), None);
+        // exactly-once delivery + per-producer FIFO
+        let mut next = vec![0u64; producers as usize];
+        for v in got {
+            let (p, i) = ((v >> 32) as usize, v & 0xFFFF_FFFF);
+            assert_eq!(i, next[p], "producer {p} out of order");
+            next[p] += 1;
+        }
+        assert!(next.iter().all(|&n| n == per));
+    }
+}

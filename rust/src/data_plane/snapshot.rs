@@ -1,0 +1,143 @@
+//! Epoch-gated configuration snapshots: workers read the current
+//! `StageConfig` vector without blocking `decide`/`preempt`.
+//!
+//! A seqlock in spirit, sound in safe Rust: instead of letting readers
+//! race the writer over raw bytes (UB without atomics over the whole
+//! payload), the cell publishes an immutable `Arc<T>` snapshot behind a
+//! tiny mutex and bumps an atomic epoch.  Readers keep a cached
+//! `(epoch, Arc<T>)`; the hot path is ONE `Acquire` load comparing
+//! epochs — the mutex is touched only on the (rare) tick where the
+//! adapter actually published a new configuration, so a worker's
+//! config read never contends with another worker, and contends with
+//! the adapter only for the duration of an `Arc` clone.
+//!
+//! # Memory-ordering contract
+//!
+//! * **epoch `fetch_add`: `Release`** (writer, inside the slot lock) —
+//!   pairs with the reader's `Acquire` load: a reader that observes the
+//!   new epoch will also observe the new `Arc` once it takes the lock
+//!   (the lock itself orders the slot write, the epoch is the cheap
+//!   "something changed" signal).
+//! * **epoch load: `Acquire`** (reader fast path) — an equal epoch
+//!   proves the cached snapshot is still current, because the writer
+//!   bumps the epoch on every publish.  A *stale-by-one-instant* read
+//!   (publish between our load and use) is acceptable by design: the
+//!   engine tolerates a worker forming one more batch under the
+//!   previous configuration, exactly like the locked path did between
+//!   `apply_config` and the next wakeup.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Writer-published, epoch-versioned snapshot cell.
+pub struct ConfigCell<T> {
+    epoch: AtomicU64,
+    slot: Mutex<Arc<T>>,
+}
+
+impl<T> ConfigCell<T> {
+    pub fn new(value: T) -> Self {
+        ConfigCell { epoch: AtomicU64::new(0), slot: Mutex::new(Arc::new(value)) }
+    }
+
+    /// Publish a new snapshot (adapter side).  Holds the slot lock only
+    /// for the `Arc` swap; the epoch bump is the readers' signal.
+    pub fn publish(&self, value: T) {
+        let mut slot = self.slot.lock().unwrap();
+        *slot = Arc::new(value);
+        // Release pairs with readers' Acquire epoch loads; bumped while
+        // the lock is held so epoch N always means "slot holds the Nth
+        // published value (or newer)".
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// Current epoch (Acquire — see module docs).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Clone the current snapshot (slow path; readers go through
+    /// [`ConfigReader`] instead).
+    pub fn snapshot(&self) -> Arc<T> {
+        Arc::clone(&self.slot.lock().unwrap())
+    }
+
+    /// A per-thread cached reader primed with the current snapshot.
+    pub fn reader(&self) -> ConfigReader<T> {
+        ConfigReader { seen: self.epoch(), cached: self.snapshot() }
+    }
+}
+
+/// Per-reader cache over a [`ConfigCell`]: the common read is one
+/// atomic load; the lock is taken only when the epoch moved.
+pub struct ConfigReader<T> {
+    seen: u64,
+    cached: Arc<T>,
+}
+
+impl<T> ConfigReader<T> {
+    /// The current snapshot (refreshing the cache if the writer
+    /// published since the last call).
+    pub fn get(&mut self, cell: &ConfigCell<T>) -> &T {
+        let epoch = cell.epoch();
+        if epoch != self.seen {
+            self.cached = cell.snapshot();
+            self.seen = epoch;
+        }
+        &self.cached
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reader_sees_published_updates() {
+        let cell = ConfigCell::new(1u32);
+        let mut r = cell.reader();
+        assert_eq!(*r.get(&cell), 1);
+        cell.publish(2);
+        assert_eq!(*r.get(&cell), 2);
+        // unchanged epoch keeps the cache
+        assert_eq!(*r.get(&cell), 2);
+    }
+
+    #[test]
+    fn epoch_advances_per_publish() {
+        let cell = ConfigCell::new(0u8);
+        let e0 = cell.epoch();
+        cell.publish(1);
+        cell.publish(2);
+        assert_eq!(cell.epoch(), e0 + 2);
+        assert_eq!(*cell.snapshot(), 2);
+    }
+
+    #[test]
+    fn concurrent_readers_never_tear() {
+        // Snapshots are immutable Arcs: a reader can never observe a
+        // half-written pair even while the writer spins.
+        let cell = std::sync::Arc::new(ConfigCell::new((0u64, 0u64)));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let cell = std::sync::Arc::clone(&cell);
+                let stop = std::sync::Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut r = cell.reader();
+                    while !stop.load(Ordering::Relaxed) {
+                        let (a, b) = *r.get(&cell);
+                        assert_eq!(a, b, "torn snapshot");
+                    }
+                })
+            })
+            .collect();
+        for i in 1..2_000u64 {
+            cell.publish((i, i));
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in readers {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Shutdown gate: a stop flag whose sleepers wake *immediately* on
+//! [`StopGate::stop`] instead of polling (the live engine's adapter
+//! thread used to spin a 50 ms check loop; now it parks on the gate's
+//! condvar for the full interval and shutdown interrupts it).
+//!
+//! No-lost-wakeup protocol:
+//!
+//! 1. The sleeper takes the gate mutex, re-checks the flag, and only
+//!    then waits on the condvar — so a concurrent `stop` either lands
+//!    before the check (sleeper returns without waiting) or after the
+//!    sleeper is parked (the notify wakes it): there is no window where
+//!    the flag is set but the sleeper still commits to a full wait.
+//! 2. `stop` sets the flag (`Release`) BEFORE acquiring the mutex and
+//!    notifying, so a woken sleeper's flag load (`Acquire`) observes it.
+//!
+//! The flag doubles as a cheap lock-free poll ([`StopGate::is_stopped`])
+//! for hot loops that only need an eventual exit.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One-way stop flag with condvar-interruptible sleeps.
+#[derive(Default)]
+pub struct StopGate {
+    stopped: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl StopGate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lock-free check for hot loops.
+    pub fn is_stopped(&self) -> bool {
+        self.stopped.load(Ordering::Acquire)
+    }
+
+    /// Trip the gate and wake every sleeper immediately.
+    pub fn stop(&self) {
+        self.stopped.store(true, Ordering::Release);
+        // Acquiring the mutex orders this notify after any in-progress
+        // check-then-wait (see module docs, step 1).
+        let _guard = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Sleep `secs`, returning early (with `false`) if stopped; `true`
+    /// when the full duration elapsed.
+    pub fn sleep_interruptible(&self, secs: f64) -> bool {
+        let deadline = Instant::now() + Duration::from_secs_f64(secs.max(0.0));
+        let mut guard = self.lock.lock().unwrap();
+        loop {
+            if self.is_stopped() {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return true;
+            }
+            let (g, _timeout) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn full_sleep_without_stop() {
+        let gate = StopGate::new();
+        let t0 = Instant::now();
+        assert!(gate.sleep_interruptible(0.05));
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+    }
+
+    #[test]
+    fn stop_wakes_sleeper_immediately() {
+        let gate = Arc::new(StopGate::new());
+        let g = Arc::clone(&gate);
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || g.sleep_interruptible(10.0));
+        std::thread::sleep(Duration::from_millis(30));
+        gate.stop();
+        assert!(!h.join().unwrap(), "stopped sleep must report false");
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "stop took {:?} — sleeper did not wake promptly",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn stopped_gate_never_sleeps() {
+        let gate = StopGate::new();
+        gate.stop();
+        let t0 = Instant::now();
+        assert!(!gate.sleep_interruptible(5.0));
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        assert!(gate.is_stopped());
+    }
+}

@@ -1,0 +1,261 @@
+//! Synthetic data-plane executor for the `data_plane` bench section:
+//! the same producer → per-stage queue → batch-forming dispatcher
+//! topology as the live engine, with the actual work stripped out, so
+//! the benchmark isolates the dispatch path itself.
+//!
+//! Two interchangeable builds of the hot path:
+//!
+//! * [`run_sharded`] — one lock-free [`MpscRing`] per stage; producers
+//!   enqueue round-robin without any lock, dispatchers own disjoint
+//!   stage ranges and claim batches straight off their rings, reading
+//!   the per-stage batch hint through a [`ConfigCell`] snapshot (one
+//!   atomic load per visit) — the sharded engine's shape.
+//! * [`run_legacy_lock`] — every queue AND the config behind ONE
+//!   global mutex: producers lock per item (the legacy engine's
+//!   arrival path locked the core per request), dispatchers lock per
+//!   batch attempt and scan their stages under the lock (the legacy
+//!   `try_form` shape) — the single-lock engine's shape.
+//!
+//! Both run the identical workload (`producers × items_per_producer`
+//! items spread over `stages` queues) to completion and return the
+//! count consumed, so `items / wall_time` is directly comparable.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data_plane::ring::MpscRing;
+use crate::data_plane::snapshot::ConfigCell;
+
+/// Workload shape shared by both paths.
+#[derive(Debug, Clone)]
+pub struct SyntheticCfg {
+    /// Queues (the bench contract pins 64 — the tentpole's stage count).
+    pub stages: usize,
+    /// Arrival threads (each locks per item on the legacy path).
+    pub producers: usize,
+    /// Batch-forming threads (disjoint stage ranges on the sharded
+    /// path; all contending for the one lock on the legacy path).
+    pub dispatchers: usize,
+    pub items_per_producer: usize,
+    /// Items claimed per batch attempt (the short-lock hand-off unit).
+    pub batch: usize,
+    pub ring_capacity: usize,
+}
+
+impl SyntheticCfg {
+    /// The bench shape: 64 stages, thread counts clamped to the host.
+    pub fn bench_default() -> Self {
+        let cores = std::thread::available_parallelism().map_or(2, usize::from);
+        let half = (cores / 2).clamp(2, 4);
+        SyntheticCfg {
+            stages: 64,
+            producers: half,
+            dispatchers: half,
+            items_per_producer: 40_000,
+            batch: 32,
+            ring_capacity: 1024,
+        }
+    }
+
+    pub fn total_items(&self) -> usize {
+        self.producers * self.items_per_producer
+    }
+}
+
+/// Contiguous stage range owned by dispatcher `d` of `n`.
+fn stage_range(d: usize, n: usize, stages: usize) -> (usize, usize) {
+    let per = stages.div_ceil(n);
+    let lo = (d * per).min(stages);
+    let hi = ((d + 1) * per).min(stages);
+    (lo, hi)
+}
+
+/// Sharded path: per-stage rings + epoch-gated config snapshots.
+/// Returns the items consumed (always `cfg.total_items()`).
+pub fn run_sharded(cfg: &SyntheticCfg) -> usize {
+    let rings: Arc<Vec<MpscRing<u64>>> =
+        Arc::new((0..cfg.stages).map(|_| MpscRing::with_capacity(cfg.ring_capacity)).collect());
+    let config: Arc<ConfigCell<Vec<usize>>> =
+        Arc::new(ConfigCell::new(vec![cfg.batch; cfg.stages]));
+    let consumed = Arc::new(AtomicUsize::new(0));
+    let total = cfg.total_items();
+
+    let producers: Vec<_> = (0..cfg.producers)
+        .map(|p| {
+            let rings = Arc::clone(&rings);
+            let n = cfg.items_per_producer;
+            let stages = cfg.stages;
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    let stage = (p + i) % stages;
+                    let mut v = (p * n + i) as u64;
+                    // lock-free enqueue; a full ring backs off briefly
+                    loop {
+                        match rings[stage].try_push(v) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                v = back;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let dispatchers: Vec<_> = (0..cfg.dispatchers)
+        .map(|d| {
+            let rings = Arc::clone(&rings);
+            let config = Arc::clone(&config);
+            let consumed = Arc::clone(&consumed);
+            let (lo, hi) = stage_range(d, cfg.dispatchers, cfg.stages);
+            std::thread::spawn(move || {
+                let mut reader = config.reader();
+                while consumed.load(Ordering::Relaxed) < total {
+                    let mut got = 0usize;
+                    for stage in lo..hi {
+                        // the per-stage batch hint: one Acquire load
+                        let batch = reader.get(&config)[stage];
+                        for _ in 0..batch {
+                            if rings[stage].pop().is_none() {
+                                break;
+                            }
+                            got += 1;
+                        }
+                    }
+                    if got > 0 {
+                        consumed.fetch_add(got, Ordering::Relaxed);
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        })
+        .collect();
+
+    for h in producers {
+        h.join().unwrap();
+    }
+    for h in dispatchers {
+        h.join().unwrap();
+    }
+    consumed.load(Ordering::Relaxed)
+}
+
+/// Everything the legacy engine kept behind its one mutex: per-stage
+/// queues plus the active configuration.
+struct LegacyState {
+    queues: Vec<VecDeque<u64>>,
+    batch_hint: Vec<usize>,
+}
+
+/// Single-lock path: one global mutex over every queue and the config.
+/// Returns the items consumed (always `cfg.total_items()`).
+pub fn run_legacy_lock(cfg: &SyntheticCfg) -> usize {
+    let state = Arc::new(Mutex::new(LegacyState {
+        queues: (0..cfg.stages).map(|_| VecDeque::new()).collect(),
+        batch_hint: vec![cfg.batch; cfg.stages],
+    }));
+    let consumed = Arc::new(AtomicUsize::new(0));
+    let total = cfg.total_items();
+
+    let producers: Vec<_> = (0..cfg.producers)
+        .map(|p| {
+            let state = Arc::clone(&state);
+            let n = cfg.items_per_producer;
+            let stages = cfg.stages;
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    let stage = (p + i) % stages;
+                    // the legacy arrival path: one lock per request
+                    state.lock().unwrap().queues[stage].push_back((p * n + i) as u64);
+                }
+            })
+        })
+        .collect();
+
+    let dispatchers: Vec<_> = (0..cfg.dispatchers)
+        .map(|d| {
+            let state = Arc::clone(&state);
+            let consumed = Arc::clone(&consumed);
+            let (lo, hi) = stage_range(d, cfg.dispatchers, cfg.stages);
+            std::thread::spawn(move || {
+                while consumed.load(Ordering::Relaxed) < total {
+                    let mut got = 0usize;
+                    {
+                        // the legacy try_form shape: scan the owned
+                        // stages and claim batches under the one lock
+                        let mut st = state.lock().unwrap();
+                        for stage in lo..hi {
+                            let batch = st.batch_hint[stage];
+                            for _ in 0..batch {
+                                if st.queues[stage].pop_front().is_none() {
+                                    break;
+                                }
+                                got += 1;
+                            }
+                        }
+                    }
+                    if got > 0 {
+                        consumed.fetch_add(got, Ordering::Relaxed);
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        })
+        .collect();
+
+    for h in producers {
+        h.join().unwrap();
+    }
+    for h in dispatchers {
+        h.join().unwrap();
+    }
+    consumed.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SyntheticCfg {
+        SyntheticCfg {
+            stages: 8,
+            producers: 2,
+            dispatchers: 2,
+            items_per_producer: 2_000,
+            batch: 8,
+            ring_capacity: 64,
+        }
+    }
+
+    #[test]
+    fn sharded_consumes_every_item() {
+        let cfg = tiny();
+        assert_eq!(run_sharded(&cfg), cfg.total_items());
+    }
+
+    #[test]
+    fn legacy_consumes_every_item() {
+        let cfg = tiny();
+        assert_eq!(run_legacy_lock(&cfg), cfg.total_items());
+    }
+
+    #[test]
+    fn stage_ranges_cover_and_do_not_overlap() {
+        for (n, stages) in [(2usize, 64usize), (3, 64), (4, 10), (5, 3)] {
+            let mut seen = vec![false; stages];
+            for d in 0..n {
+                let (lo, hi) = stage_range(d, n, stages);
+                for s in lo..hi {
+                    assert!(!seen[s], "stage {s} owned twice");
+                    seen[s] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "uncovered stage ({n} dispatchers)");
+        }
+    }
+}

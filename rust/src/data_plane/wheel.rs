@@ -1,0 +1,340 @@
+//! Sharded DES clock: per-member event wheels merged lazily through a
+//! tournament of `next_due` heads.
+//!
+//! The fleet DES used to serialize every member's events through one
+//! `BinaryHeap` whose size is dominated by the pre-materialized arrival
+//! stream (tens of thousands of entries → every push/pop pays
+//! `O(log total_arrivals)` with cold cache lines).  [`ShardedClock`]
+//! splits the stream: each member owns an [`EventWheel`] whose *sorted
+//! lane* holds its arrival trace (already time-sorted — `O(1)` push and
+//! pop from a `VecDeque`) and whose *heap lane* holds the handful of
+//! dynamic events in flight (service completions, queue checks), while
+//! global control events (Adapt/Apply/Preempt/Fault/End) ride a
+//! dedicated wheel.  Popping is a tournament over the `members + 1`
+//! `next_due` heads — a linear scan of a few cached keys instead of a
+//! log-depth walk of one giant heap — so the cost per event stays flat
+//! as members are added.
+//!
+//! # Byte-for-byte parity with the single heap
+//!
+//! Determinism is load-bearing (seeded runs must reproduce exactly), so
+//! the sharded clock is *order-identical* to
+//! [`crate::simulator::events::TimedQueue`] by construction:
+//!
+//! * ONE global sequence counter stamps every push, whichever wheel it
+//!   lands in — the same stamps a single queue would have assigned.
+//! * [`ShardedClock::pop`] returns the globally minimal `(time, seq)`
+//!   entry: each wheel's `next_due` is its own minimum, and the
+//!   tournament takes the minimum of those, which is the global
+//!   minimum — exactly the entry a single heap would pop.
+//!
+//! With `sharded = false` every push routes into the single global
+//! wheel's heap lane, which IS the legacy one-heap clock (useful as an
+//! A/B lever; both modes pop identically anyway).
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// One timestamped entry; `seq` breaks ties FIFO (same contract as
+/// [`crate::simulator::events::TimedQueue`]).
+#[derive(Debug, Clone)]
+struct Timed<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> Timed<E> {
+    fn key(&self) -> (f64, u64) {
+        (self.time, self.seq)
+    }
+}
+
+/// `(time, seq)` min-order: earlier time first, then lower seq.
+fn key_lt(a: (f64, u64), b: (f64, u64)) -> bool {
+    match a.0.partial_cmp(&b.0).unwrap_or(CmpOrdering::Equal) {
+        CmpOrdering::Less => true,
+        CmpOrdering::Greater => false,
+        CmpOrdering::Equal => a.1 < b.1,
+    }
+}
+
+impl<E> PartialEq for Timed<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Timed<E> {}
+
+impl<E> Ord for Timed<E> {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // reversed for min-heap semantics on BinaryHeap (max-heap)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(CmpOrdering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl<E> PartialOrd for Timed<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One shard's event store: a sorted FIFO lane for pre-sorted streams
+/// (arrival traces) and a heap lane for everything dynamic.
+#[derive(Debug)]
+pub struct EventWheel<E> {
+    sorted: VecDeque<Timed<E>>,
+    heap: BinaryHeap<Timed<E>>,
+}
+
+impl<E> Default for EventWheel<E> {
+    fn default() -> Self {
+        EventWheel { sorted: VecDeque::new(), heap: BinaryHeap::new() }
+    }
+}
+
+impl<E> EventWheel<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Heap-lane push (any time order).
+    pub fn push(&mut self, time: f64, seq: u64, event: E) {
+        self.heap.push(Timed { time, seq, event });
+    }
+
+    /// Sorted-lane push for streams already in `(time, seq)` order —
+    /// `O(1)`.  An out-of-order push (strictly earlier than the lane's
+    /// tail) falls back to the heap lane, preserving correctness if a
+    /// caller's "sorted" stream ever regresses.
+    pub fn push_sorted(&mut self, time: f64, seq: u64, event: E) {
+        match self.sorted.back() {
+            Some(back) if key_lt((time, seq), back.key()) => self.push(time, seq, event),
+            _ => self.sorted.push_back(Timed { time, seq, event }),
+        }
+    }
+
+    /// Key of this wheel's earliest entry (its tournament head).
+    pub fn next_due(&self) -> Option<(f64, u64)> {
+        match (self.sorted.front(), self.heap.peek()) {
+            (Some(s), Some(h)) => {
+                Some(if key_lt(s.key(), h.key()) { s.key() } else { h.key() })
+            }
+            (Some(s), None) => Some(s.key()),
+            (None, Some(h)) => Some(h.key()),
+            (None, None) => None,
+        }
+    }
+
+    /// Pop this wheel's earliest entry.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let take_sorted = match (self.sorted.front(), self.heap.peek()) {
+            (Some(s), Some(h)) => key_lt(s.key(), h.key()),
+            (Some(_), None) => true,
+            (None, _) => false,
+        };
+        if take_sorted {
+            self.sorted.pop_front().map(|t| (t.time, t.event))
+        } else {
+            self.heap.pop().map(|t| (t.time, t.event))
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len() + self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The fleet DES clock: one [`EventWheel`] per member plus a global
+/// wheel, all stamped from one sequence counter (see module docs for
+/// the parity argument).
+#[derive(Debug)]
+pub struct ShardedClock<E> {
+    members: Vec<EventWheel<E>>,
+    global: EventWheel<E>,
+    seq: u64,
+    sharded: bool,
+}
+
+impl<E> ShardedClock<E> {
+    /// A clock over `n_members` shards; `sharded = false` routes every
+    /// push into the single global heap (the legacy clock).
+    pub fn new(n_members: usize, sharded: bool) -> Self {
+        ShardedClock {
+            members: (0..n_members).map(|_| EventWheel::new()).collect(),
+            global: EventWheel::new(),
+            seq: 0,
+            sharded,
+        }
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Push a member-scoped event (heap lane of the member's wheel).
+    pub fn push_member(&mut self, member: usize, time: f64, event: E) {
+        let seq = self.next_seq();
+        if self.sharded {
+            self.members[member].push(time, seq, event);
+        } else {
+            self.global.push(time, seq, event);
+        }
+    }
+
+    /// Push a member-scoped event whose stream arrives in time order
+    /// (arrival traces): `O(1)` on the member's sorted lane.
+    pub fn push_member_sorted(&mut self, member: usize, time: f64, event: E) {
+        let seq = self.next_seq();
+        if self.sharded {
+            self.members[member].push_sorted(time, seq, event);
+        } else {
+            self.global.push(time, seq, event);
+        }
+    }
+
+    /// Push a global control event (Adapt/Apply/Preempt/Fault/End).
+    pub fn push_global(&mut self, time: f64, event: E) {
+        let seq = self.next_seq();
+        self.global.push(time, seq, event);
+    }
+
+    /// Pop the globally earliest `(time, seq)` event — the tournament
+    /// over every wheel's `next_due` head.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let mut best: Option<(usize, (f64, u64))> = self.global.next_due().map(|k| (0, k));
+        for (m, wheel) in self.members.iter().enumerate() {
+            if let Some(k) = wheel.next_due() {
+                let better = match best {
+                    None => true,
+                    Some((_, bk)) => key_lt(k, bk),
+                };
+                if better {
+                    best = Some((m + 1, k));
+                }
+            }
+        }
+        match best {
+            Some((0, _)) => self.global.pop(),
+            Some((i, _)) => self.members[i - 1].pop(),
+            None => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.global.len() + self.members.iter().map(EventWheel::len).sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::events::TimedQueue;
+    use crate::util::quickcheck::{check, prop_assert};
+
+    #[test]
+    fn wheel_merges_sorted_and_heap_lanes() {
+        let mut w: EventWheel<&str> = EventWheel::new();
+        w.push_sorted(1.0, 1, "a1");
+        w.push_sorted(3.0, 2, "a3");
+        w.push(2.0, 3, "h2");
+        w.push(0.5, 4, "h0");
+        let order: Vec<&str> = std::iter::from_fn(|| w.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["h0", "a1", "h2", "a3"]);
+    }
+
+    #[test]
+    fn sorted_lane_regression_falls_back_to_heap() {
+        let mut w: EventWheel<u32> = EventWheel::new();
+        w.push_sorted(5.0, 1, 5);
+        w.push_sorted(2.0, 2, 2); // regresses: lands on the heap lane
+        w.push_sorted(6.0, 3, 6);
+        let order: Vec<u32> = std::iter::from_fn(|| w.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![2, 5, 6]);
+    }
+
+    #[test]
+    fn ties_pop_fifo_across_shards() {
+        let mut c: ShardedClock<u32> = ShardedClock::new(2, true);
+        c.push_member(0, 1.0, 10);
+        c.push_member(1, 1.0, 20);
+        c.push_global(1.0, 30);
+        assert_eq!(c.pop(), Some((1.0, 10)));
+        assert_eq!(c.pop(), Some((1.0, 20)));
+        assert_eq!(c.pop(), Some((1.0, 30)));
+        assert_eq!(c.pop(), None);
+    }
+
+    /// The parity contract: any interleaving of member-sorted pushes,
+    /// member heap pushes, global pushes and pops produces exactly the
+    /// single-queue pop order — in BOTH modes.
+    #[test]
+    fn quickcheck_pop_order_matches_single_timed_queue() {
+        for sharded in [false, true] {
+            check("sharded clock == single queue", 200, |g| {
+                let members = g.usize(1, 5);
+                let mut clock: ShardedClock<u64> = ShardedClock::new(members, sharded);
+                let mut reference: TimedQueue<u64> = TimedQueue::new();
+                // per-member monotone time cursors feed the sorted lane
+                let mut cursors = vec![0.0f64; members];
+                let n_ops = g.usize(1, 60);
+                let mut payload = 0u64;
+                for _ in 0..n_ops {
+                    match g.usize(0, 4) {
+                        0 => {
+                            let m = g.usize(0, members);
+                            cursors[m] += g.f64(0.0, 3.0);
+                            clock.push_member_sorted(m, cursors[m], payload);
+                            reference.push(cursors[m], payload);
+                            payload += 1;
+                        }
+                        1 => {
+                            let m = g.usize(0, members);
+                            let t = g.f64(0.0, 50.0);
+                            clock.push_member(m, t, payload);
+                            reference.push(t, payload);
+                            payload += 1;
+                        }
+                        2 => {
+                            let t = g.f64(0.0, 50.0);
+                            clock.push_global(t, payload);
+                            reference.push(t, payload);
+                            payload += 1;
+                        }
+                        _ => {
+                            prop_assert(clock.pop() == reference.pop(), "pop diverged")?;
+                        }
+                    }
+                }
+                while let Some(expected) = reference.pop() {
+                    prop_assert(clock.pop() == Some(expected), "drain diverged")?;
+                }
+                prop_assert(clock.pop().is_none(), "clock not empty after drain")
+            });
+        }
+    }
+
+    #[test]
+    fn len_counts_every_lane() {
+        let mut c: ShardedClock<u8> = ShardedClock::new(2, true);
+        assert!(c.is_empty());
+        c.push_member_sorted(0, 1.0, 0);
+        c.push_member(1, 2.0, 1);
+        c.push_global(3.0, 2);
+        assert_eq!(c.len(), 3);
+        c.pop();
+        assert_eq!(c.len(), 2);
+    }
+}

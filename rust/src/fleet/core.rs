@@ -676,6 +676,13 @@ pub struct FleetReconfig {
     /// decision lands later than a stable one.
     pub migration_delay: f64,
     pending: VecDeque<StagedFleet>,
+    /// Cached minimum of `pending[..].at` (`None` when empty).  The
+    /// common tick — nothing due — answers [`FleetReconfig::pop_due`] /
+    /// [`FleetReconfig::due_len`] / [`FleetReconfig::next_due`] in O(1)
+    /// off this cache instead of scanning the queue; the scan only runs
+    /// when something actually activates.  Kept exact on every mutation
+    /// (`stage` min-folds it in, pops and `clear` recompute it).
+    next_at: Option<f64>,
 }
 
 impl FleetReconfig {
@@ -691,6 +698,7 @@ impl FleetReconfig {
             apply_delay: apply_delay.max(0.0),
             migration_delay: migration_delay.max(0.0),
             pending: VecDeque::new(),
+            next_at: None,
         }
     }
 
@@ -710,6 +718,10 @@ impl FleetReconfig {
     ) -> f64 {
         let at = now + self.apply_delay + self.migration_delay * moves as f64;
         self.pending.push_back(StagedFleet { decisions, at, budget, shrink_to });
+        self.next_at = Some(match self.next_at {
+            Some(x) => x.min(at),
+            None => at,
+        });
         at
     }
 
@@ -737,6 +749,12 @@ impl FleetReconfig {
     /// never stuck behind a stale churny one, and once it applies the
     /// older entry is dropped rather than left to revert it later.
     pub fn pop_due(&mut self, now: f64) -> Option<StagedFleet> {
+        // O(1) fast path off the cached minimum: the common tick has
+        // nothing due and never touches the queue.
+        match self.next_at {
+            Some(a) if a <= now + 1e-9 => {}
+            _ => return None,
+        }
         let last_due = self
             .pending
             .iter()
@@ -748,14 +766,21 @@ impl FleetReconfig {
         for _ in 0..=last_due {
             newest = self.pending.pop_front();
         }
+        self.next_at = self.pending.iter().map(|s| s.at).reduce(f64::min);
         newest
     }
 
     /// Staged fleets discarded by coalescing so far would be invisible;
     /// expose how many entries are due at `now` for diagnostics/tests.
-    /// (Whole-queue scan: migration charges break `at` monotonicity.)
+    /// (Whole-queue scan only when the cached minimum says something IS
+    /// due; migration charges break `at` monotonicity.)
     pub fn due_len(&self, now: f64) -> usize {
-        self.pending.iter().filter(|s| s.at <= now + 1e-9).count()
+        match self.next_at {
+            Some(a) if a <= now + 1e-9 => {
+                self.pending.iter().filter(|s| s.at <= now + 1e-9).count()
+            }
+            _ => 0,
+        }
     }
 
     /// Discard everything staged (a preemption superseded it: the fast
@@ -765,13 +790,15 @@ impl FleetReconfig {
     pub fn clear(&mut self) -> usize {
         let n = self.pending.len();
         self.pending.clear();
+        self.next_at = None;
         n
     }
 
     /// Earliest pending activation time (NOT the front entry's — see
-    /// [`FleetReconfig::pop_due`] on why `at` is not monotone).
+    /// [`FleetReconfig::pop_due`] on why `at` is not monotone).  O(1)
+    /// off the cached minimum.
     pub fn next_due(&self) -> Option<f64> {
-        self.pending.iter().map(|s| s.at).reduce(f64::min)
+        self.next_at
     }
 
     pub fn pending_len(&self) -> usize {
@@ -953,6 +980,51 @@ mod tests {
         assert_eq!(r.pending_len(), 0, "nothing stale left queued");
         assert_eq!(r.max_pending_budget(), None);
         assert!(r.pop_due(100.0).is_none());
+    }
+
+    /// Regression for the cached-minimum fast path: migration charges
+    /// make activation times NON-monotone in staging order (an older,
+    /// churnier decision lands later than a newer stable one), so the
+    /// cache must track the true minimum across the whole queue — not
+    /// the front entry — and be recomputed after pops.
+    #[test]
+    fn fleet_reconfig_cached_min_survives_non_monotone_staging() {
+        let d = |pas: f64| Decision {
+            config: PipelineConfig {
+                stages: Vec::new(),
+                pas,
+                cost: 1.0,
+                batch_sum: 0,
+                objective: 0.0,
+                latency_e2e: 0.0,
+                resources: ResourceVec::ZERO,
+            },
+            lambda_predicted: 10.0,
+            decision_time: 0.0,
+            fallback: false,
+        };
+        let mut r = FleetReconfig::with_migration(8.0, 0.5);
+        // churny decision staged FIRST: at = 10 + 8 + 0.5×20 = 28
+        assert_eq!(r.stage(10.0, vec![d(1.0)], 8, None, 20), 28.0);
+        // stable decision staged second lands EARLIER: at = 12 + 8 = 20
+        assert_eq!(r.stage(12.0, vec![d(2.0)], 8, None, 0), 20.0);
+        // the cache is the true minimum, not the front entry's 28
+        assert_eq!(r.next_due(), Some(20.0));
+        assert_eq!(r.due_len(19.0), 0, "fast path: nothing due yet");
+        assert!(r.pop_due(19.0).is_none());
+        assert_eq!(r.due_len(20.0), 1);
+        // the stable decision applies at 20 and supersedes the churny
+        // one queued in front of it
+        let s = r.pop_due(20.0).expect("stable decision is due");
+        assert_eq!(s.decisions[0].config.pas, 2.0);
+        assert_eq!(r.pending_len(), 0, "older churny stage superseded");
+        assert_eq!(r.next_due(), None, "cache recomputed after pop");
+        // restage + clear resets the cache
+        r.stage(30.0, vec![d(3.0)], 8, None, 4);
+        assert_eq!(r.next_due(), Some(40.0));
+        r.clear();
+        assert_eq!(r.next_due(), None);
+        assert!(r.pop_due(1e9).is_none());
     }
 
     #[test]

@@ -105,6 +105,35 @@
 //! the cheapest — with the fleet core mirroring the controller's
 //! inventory on every resize.
 //!
+//! ## The sharded data plane
+//!
+//! Both drivers' request hot paths are sharded through [`data_plane`]
+//! (`rust/src/data_plane/`), keeping the clock-agnostic [`cluster`]
+//! core untouched.  **Lock-free:** arrivals and inter-stage forwards
+//! ride one bounded MPSC ring per (member, stage)
+//! ([`data_plane::ring::MpscRing`] behind
+//! [`data_plane::ingress::LaneGrid`]), and workers read the active
+//! configuration through an epoch-gated snapshot
+//! ([`data_plane::snapshot::ConfigCell`] — one `Acquire` load on the
+//! common path), so the load generator and the adapter's
+//! decide/preempt never contend with batch formation.  **Still
+//! locked:** the short core lock around each batch attempt (ring drain
+//! + `try_form` + hand-off) and around completion bookkeeping — batch
+//! formation and accounting stay exactly-once in the shared core.
+//! The memory-ordering contract of every atomic is documented at its
+//! definition: ring slot stamps are `Acquire`/`Release` pairs with
+//! `Relaxed` cursor CASes ([`data_plane::ring`]), the config epoch is
+//! a `Release` bump / `Acquire` probe ([`data_plane::snapshot`]), and
+//! shutdown is an `Acquire`/`Release` flag paired with a condvar so
+//! sleepers wake without polling ([`data_plane::stop::StopGate`]).
+//! On the virtual clock, [`simulator::sim::run_fleet_des`] replaces
+//! the single global `BinaryHeap` with per-member event wheels merged
+//! by a `next_due` tournament ([`data_plane::wheel::ShardedClock`]) —
+//! order-identical to the one-heap clock by construction, so seeded
+//! runs stay byte-for-byte reproducible
+//! (`SimConfig::legacy_clock` / `ServeConfig::legacy_lock` switch the
+//! old paths back on for A/B benches).
+//!
 //! Start with [`coordinator::adapter::Adapter`] (the control loop),
 //! [`optimizer::ip::solve`] (the IP), and [`simulator::sim::Simulation`]
 //! (the evaluation substrate), or run `cargo run --release -- help`.
@@ -200,6 +229,25 @@ pub mod fleet {
     pub mod nodes;
     pub mod solver;
     pub mod spec;
+}
+
+pub mod data_plane {
+    //! The sharded request hot path (see the crate-level "sharded data
+    //! plane"): bounded lock-free MPSC rings ([`ring`]), the
+    //! per-(member, stage) ingress lanes the live engine enqueues
+    //! through ([`ingress`]), epoch-gated configuration snapshots
+    //! ([`snapshot`]), the condvar-backed shutdown gate ([`stop`]),
+    //! per-member event wheels + the tournament-merged DES clock
+    //! ([`wheel`]), and the synthetic 64-stage executor the
+    //! `data_plane` bench section drives in sharded vs single-lock
+    //! mode ([`synthetic`]).  Each module documents the memory-ordering
+    //! contract of its atomics.
+    pub mod ingress;
+    pub mod ring;
+    pub mod snapshot;
+    pub mod stop;
+    pub mod synthetic;
+    pub mod wheel;
 }
 
 pub mod baselines {

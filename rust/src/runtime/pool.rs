@@ -3,9 +3,15 @@
 //! executables) and work arrives over channels.  The live serving
 //! engine's replicas submit batch executions here; the adapter submits
 //! LSTM predictions.
+//!
+//! Each worker owns its OWN channel — submitters round-robin over the
+//! per-worker senders with one atomic counter, so there is no shared
+//! `Mutex<Receiver>` for every job to funnel through (the old design
+//! serialized all submissions AND all idle workers on one lock).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -34,21 +40,43 @@ enum Job {
     Shutdown,
 }
 
-/// Handle to a pool of executor threads, each owning one [`Engine`].
+/// Handle to a pool of executor threads, each owning one [`Engine`]
+/// and one private job channel.
 pub struct ExecutorPool {
-    tx: Sender<Job>,
-    rx_shared: Arc<Mutex<Receiver<Job>>>,
+    txs: Vec<Sender<Job>>,
+    /// Round-robin cursor over `txs`.
+    next: AtomicUsize,
     handles: Vec<JoinHandle<()>>,
+}
+
+/// Answer every queued job with an error: an executor whose engine
+/// failed to initialize must not leave submitters blocked on a reply
+/// that will never come.
+fn drain_with_error(rx: &Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::ExecVariant { reply, .. } => {
+                let _ = reply.send(Err(anyhow!("executor engine failed to initialize")));
+            }
+            Job::Predict { reply, .. } => {
+                let _ = reply.send(Err(anyhow!("executor engine failed to initialize")));
+            }
+            Job::Warm { reply, .. } => {
+                let _ = reply.send(Err(anyhow!("executor engine failed to initialize")));
+            }
+            Job::Shutdown => return,
+        }
+    }
 }
 
 impl ExecutorPool {
     /// Spawn `n_threads` executors over `artifact_dir`.
     pub fn new(artifact_dir: &str, n_threads: usize) -> Result<ExecutorPool> {
-        let (tx, rx) = channel::<Job>();
-        let rx_shared = Arc::new(Mutex::new(rx));
+        let mut txs = Vec::new();
         let mut handles = Vec::new();
         for i in 0..n_threads.max(1) {
-            let rx = Arc::clone(&rx_shared);
+            let (tx, rx) = channel::<Job>();
+            txs.push(tx);
             let dir = artifact_dir.to_string();
             handles.push(
                 std::thread::Builder::new()
@@ -58,15 +86,13 @@ impl ExecutorPool {
                             Ok(e) => e,
                             Err(e) => {
                                 crate::log_error!("pool", "engine init failed: {e:#}");
+                                drain_with_error(&rx);
                                 return;
                             }
                         };
+                        // the worker owns its receiver — no lock
                         loop {
-                            let job = {
-                                let guard = rx.lock().unwrap();
-                                guard.recv()
-                            };
-                            match job {
+                            match rx.recv() {
                                 Ok(Job::ExecVariant { key, batch, input, reply }) => {
                                     let r = engine.execute_variant(&key, batch, &input);
                                     let _ = reply.send(r);
@@ -84,31 +110,33 @@ impl ExecutorPool {
                     .expect("spawn executor"),
             );
         }
-        Ok(ExecutorPool { tx, rx_shared, handles })
+        Ok(ExecutorPool { txs, next: AtomicUsize::new(0), handles })
+    }
+
+    /// Submit one job to the next worker, round-robin.
+    fn submit(&self, job: Job) -> Result<()> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        self.txs[i].send(job).map_err(|_| anyhow!("pool closed"))
     }
 
     /// Synchronous batched forward pass on some executor.
     pub fn execute(&self, key: &str, batch: usize, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
         let (reply, rx) = channel();
-        self.tx
-            .send(Job::ExecVariant { key: key.to_string(), batch, input, reply })
-            .map_err(|_| anyhow!("pool closed"))?;
+        self.submit(Job::ExecVariant { key: key.to_string(), batch, input, reply })?;
         rx.recv().map_err(|_| anyhow!("executor died"))?
     }
 
     /// Synchronous LSTM prediction.
     pub fn predict(&self, window: Vec<f32>) -> Result<f32> {
         let (reply, rx) = channel();
-        self.tx.send(Job::Predict { window, reply }).map_err(|_| anyhow!("pool closed"))?;
+        self.submit(Job::Predict { window, reply })?;
         rx.recv().map_err(|_| anyhow!("executor died"))?
     }
 
     /// Pre-compile (key, batch) on one executor (first-touch warmup).
     pub fn warm(&self, key: &str, batch: usize) -> Result<()> {
         let (reply, rx) = channel();
-        self.tx
-            .send(Job::Warm { key: key.to_string(), batch, reply })
-            .map_err(|_| anyhow!("pool closed"))?;
+        self.submit(Job::Warm { key: key.to_string(), batch, reply })?;
         rx.recv().map_err(|_| anyhow!("executor died"))?
     }
 
@@ -126,8 +154,8 @@ impl ExecutorPool {
     }
 
     pub fn shutdown(mut self) {
-        for _ in 0..self.handles.len() {
-            let _ = self.tx.send(Job::Shutdown);
+        for tx in &self.txs {
+            let _ = tx.send(Job::Shutdown);
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -137,10 +165,8 @@ impl ExecutorPool {
 
 impl Drop for ExecutorPool {
     fn drop(&mut self) {
-        // Senders for all workers: closing tx ends recv loops.
-        let _ = &self.rx_shared;
-        for _ in 0..self.handles.len() {
-            let _ = self.tx.send(Job::Shutdown);
+        for tx in &self.txs {
+            let _ = tx.send(Job::Shutdown);
         }
         for h in self.handles.drain(..) {
             let _ = h.join();

@@ -8,6 +8,18 @@
 //! dropping, rolling reconfiguration and accounting are the exact same
 //! machinery the discrete-event simulator drives with virtual time.
 //!
+//! The hot path is SHARDED by default (see [`crate::data_plane`]):
+//! arrivals and inter-stage forwards ride lock-free per-(member, stage)
+//! rings ([`crate::data_plane::ingress::LaneGrid`]) instead of taking
+//! the core lock per request, workers read batch hints through an
+//! epoch-gated config snapshot
+//! ([`crate::data_plane::snapshot::ConfigCell`]), and shutdown wakes
+//! sleepers through a [`crate::data_plane::stop::StopGate`] condvar.
+//! The core lock is still taken — but only for the short batch hand-off
+//! (drain lane + `try_form`) and at adapter reconfig epochs.
+//! [`ServeConfig::legacy_lock`] restores the pre-sharding
+//! lock-per-arrival path as the bench A/B lever.
+//!
 //! Two executors plug in:
 //! * [`PoolExecutor`] — real HLO artifacts on the PJRT executor pool
 //!   (the production path; latency profiles are *measured at startup*
@@ -27,7 +39,6 @@
 //! driver's Preempt/Adapt events on a wall clock.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -36,6 +47,9 @@ use crate::cluster::core::{ClusterCore, FormOutcome, FormedBatch};
 use crate::cluster::drop_policy::DropPolicy;
 use crate::coordinator::adapter::{Adapter, AdapterConfig, Policy};
 use crate::coordinator::monitoring::Monitor;
+use crate::data_plane::ingress::{self, LaneGrid, DEFAULT_LANE_CAPACITY};
+use crate::data_plane::snapshot::ConfigCell;
+use crate::data_plane::stop::StopGate;
 use crate::fleet::core::{FleetCore, FleetReconfig, MemberInit, PoolReport};
 use crate::fleet::solver::{FleetAdapter, FleetController, FleetTuning};
 use crate::metrics::RunMetrics;
@@ -76,6 +90,12 @@ pub struct ServeConfig {
     /// worker wakeups, channel hops).  The floor keeps the live SLA
     /// meaningful: SLA_s = max(5 × avg l(1), sla_floor).
     pub sla_floor: f64,
+    /// Run the pre-sharding hot path: every arrival and forward takes
+    /// the core lock directly instead of riding the per-(member, stage)
+    /// ingress rings ([`crate::data_plane::ingress::LaneGrid`]).  Kept
+    /// as the A/B lever for the `data_plane` bench section
+    /// (`--legacy-lock` in `examples/fleet_serve.rs`); default off.
+    pub legacy_lock: bool,
 }
 
 impl Default for ServeConfig {
@@ -90,6 +110,7 @@ impl Default for ServeConfig {
             profile_batches: vec![1, 4, 16, 64],
             profile_reps: 3,
             sla_floor: 0.25,
+            legacy_lock: false,
         }
     }
 }
@@ -195,41 +216,34 @@ impl BatchExecutor for SyntheticExecutor {
 }
 
 /// Shared state between the load generator, workers and the adapter
-/// thread: the cluster core behind one lock, plus live-runtime details
-/// (input widths, monitor, clock) that stay out of the clock-agnostic
-/// core.
+/// thread: the cluster core behind one lock, plus the lock-free ingress
+/// lanes, the epoch-gated config snapshot, the monitor and the clock —
+/// live-runtime details that stay out of the clock-agnostic core.
 struct Shared {
     core: Mutex<ClusterCore>,
     cv: Condvar,
     monitor: Mutex<Monitor>,
-    stop: AtomicBool,
+    /// Lock-free per-stage arrival/forward lanes (sharded hot path).
+    grid: LaneGrid,
+    /// Snapshot of the active config; workers read batch/replica hints
+    /// through it without touching the core lock (see
+    /// [`crate::data_plane::snapshot`]).
+    config: ConfigCell<PipelineConfig>,
+    stop: StopGate,
     start: Instant,
-}
-
-/// Sleep `secs`, waking early on `stop`; returns false if stopped.
-fn sleep_interruptible(stop: &AtomicBool, secs: f64) -> bool {
-    let deadline = Instant::now() + Duration::from_secs_f64(secs.max(0.0));
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            return false;
-        }
-        let now = Instant::now();
-        if now >= deadline {
-            return true;
-        }
-        let remaining = deadline - now;
-        std::thread::sleep(remaining.min(Duration::from_millis(50)));
-    }
 }
 
 impl Shared {
     fn now(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
+}
 
-    fn sleep_interruptible(&self, secs: f64) -> bool {
-        sleep_interruptible(&self.stop, secs)
-    }
+/// How many queued requests a worker drains from its lane per lock
+/// acquisition: enough to feed every replica's next batch, floored so
+/// tiny configs still drain promptly.
+fn drain_limit(cfg: &PipelineConfig, stage: usize) -> usize {
+    cfg.stages.get(stage).map_or(32, |sc| (sc.batch * sc.replicas as usize).max(32))
 }
 
 /// Outcome of a live run.
@@ -319,18 +333,25 @@ pub fn serve_with(
         core: Mutex::new(core),
         cv: Condvar::new(),
         monitor: Mutex::new(Monitor::new(600)),
-        stop: AtomicBool::new(false),
+        grid: LaneGrid::single(n_stages, DEFAULT_LANE_CAPACITY),
+        config: ConfigCell::new(init.config.clone()),
+        stop: StopGate::default(),
         start: Instant::now(),
     });
 
     // ---- worker threads (replica slots) ------------------------------
+    let legacy_lock = cfg.legacy_lock;
     let mut workers = Vec::new();
     for si in 0..n_stages {
         for _ in 0..cfg.max_workers {
             let sh = Arc::clone(&shared);
             let ex = Arc::clone(&executor);
             workers.push(std::thread::spawn(move || {
-                worker_loop(sh, ex, si, n_stages);
+                if legacy_lock {
+                    worker_loop(sh, ex, si, n_stages);
+                } else {
+                    worker_loop_sharded(sh, ex, si, n_stages);
+                }
             }));
         }
     }
@@ -343,7 +364,7 @@ pub fn serve_with(
         let mut reconfig = adapter.reconfig();
         std::thread::spawn(move || {
             loop {
-                if !sh.sleep_interruptible(adapter.config.interval) {
+                if !sh.stop.sleep_interruptible(adapter.config.interval) {
                     break;
                 }
                 let now = sh.now();
@@ -365,12 +386,16 @@ pub fn serve_with(
                     ex.warm(&sc.variant_key, sc.batch);
                 }
                 let at = reconfig.stage(now, d);
-                if !sh.sleep_interruptible(at - sh.now()) {
+                if !sh.stop.sleep_interruptible(at - sh.now()) {
                     break;
                 }
                 while let Some(staged) = reconfig.pop_due(sh.now()) {
                     let d = staged.decision;
                     sh.core.lock().unwrap().apply_config(&d.config, f64::INFINITY);
+                    // publish AFTER dropping the core lock (lock order:
+                    // core lock may never be held while waiting on the
+                    // snapshot slot, and vice versa)
+                    sh.config.publish(d.config.clone());
                     sh.cv.notify_all();
                     active_cfg = d.config;
                 }
@@ -385,7 +410,13 @@ pub fn serve_with(
     let submitted = loadgen::replay(trace, lg, |id, _t| {
         let t = shared.now();
         shared.monitor.lock().unwrap().record_arrival(t);
-        shared.core.lock().unwrap().ingest(id, t);
+        if legacy_lock {
+            shared.core.lock().unwrap().ingest(id, t);
+        } else if !shared.grid.ingest(0, id, t) {
+            // lane full → shed with accounting (the lock-free fast path
+            // only ever takes the core lock on this overload edge)
+            ingress::shed(&mut shared.core.lock().unwrap(), id, t);
+        }
         shared.cv.notify_all();
     });
 
@@ -398,7 +429,7 @@ pub fn serve_with(
         }
         std::thread::sleep(Duration::from_millis(20));
     }
-    shared.stop.store(true, Ordering::Relaxed);
+    shared.stop.stop();
     shared.cv.notify_all();
     for w in workers {
         let _ = w.join();
@@ -418,11 +449,13 @@ pub fn serve_with(
     Ok(ServeReport { metrics, profiles, sla })
 }
 
-/// One replica-slot worker: claim a batch from the shared core, execute
-/// it, then route survivors forward (or complete them).
+/// One replica-slot worker, legacy single-lock path: claim a batch from
+/// the shared core, execute it, then route survivors forward (or
+/// complete them).  Arrivals were ingested under the core lock by the
+/// load generator; forwards take the lock per batch.
 fn worker_loop(sh: Arc<Shared>, exec: Arc<dyn BatchExecutor>, stage: usize, n_stages: usize) {
     loop {
-        if sh.stop.load(Ordering::Relaxed) {
+        if sh.stop.is_stopped() {
             return;
         }
         // Claim a batch: formation + §4.5 dropping + busy-slot gating all
@@ -430,7 +463,7 @@ fn worker_loop(sh: Arc<Shared>, exec: Arc<dyn BatchExecutor>, stage: usize, n_st
         let fb: FormedBatch = {
             let mut core = sh.core.lock().unwrap();
             loop {
-                if sh.stop.load(Ordering::Relaxed) {
+                if sh.stop.is_stopped() {
                     return;
                 }
                 match core.try_form(stage, sh.now()) {
@@ -476,6 +509,89 @@ fn worker_loop(sh: Arc<Shared>, exec: Arc<dyn BatchExecutor>, stage: usize, n_st
     }
 }
 
+/// One replica-slot worker, sharded path (the default): drain this
+/// stage's lock-free ingress lane into the core and claim a batch under
+/// ONE short lock acquisition; after execution, hand survivors to the
+/// next stage's lane without locking (locked fallback only for ring-full
+/// leftovers).  Timestamps ride the [`crate::queueing::Request`] through
+/// the lane, so formation, §4.5 dropping and batch timeouts see the same
+/// instants the legacy path would have.
+fn worker_loop_sharded(
+    sh: Arc<Shared>,
+    exec: Arc<dyn BatchExecutor>,
+    stage: usize,
+    n_stages: usize,
+) {
+    let mut reader = sh.config.reader();
+    loop {
+        if sh.stop.is_stopped() {
+            return;
+        }
+        // one Acquire load unless the adapter published a new config
+        let limit = drain_limit(reader.get(&sh.config), stage);
+        let fb: FormedBatch = {
+            let mut core = sh.core.lock().unwrap();
+            loop {
+                if sh.stop.is_stopped() {
+                    return;
+                }
+                sh.grid.drain_into(0, stage, &mut core, limit);
+                match core.try_form(stage, sh.now()) {
+                    FormOutcome::Formed(fb) => break fb,
+                    FormOutcome::Busy | FormOutcome::Idle { .. } => {
+                        // the 20 ms cap bounds a missed notify: a push
+                        // racing past an empty-lane check is picked up
+                        // at the next drain
+                        let (guard, _) = sh
+                            .cv
+                            .wait_timeout(core, Duration::from_millis(20))
+                            .unwrap();
+                        core = guard;
+                    }
+                }
+            }
+        };
+        match exec.execute(&fb.variant_key, fb.batch.max(1)) {
+            Ok(()) => {
+                let done = sh.now();
+                if stage + 1 < n_stages {
+                    // pre-stamp the stage-arrival instant, then forward
+                    // lock-free; only ring-full leftovers touch the lock
+                    let mut survivors = fb.requests;
+                    for r in &mut survivors {
+                        r.stage_arrival = done;
+                    }
+                    let leftovers = sh.grid.forward(0, stage + 1, survivors);
+                    let mut core = sh.core.lock().unwrap();
+                    core.finish_service(stage);
+                    for r in leftovers {
+                        core.forward(stage + 1, r, done);
+                    }
+                    drop(core);
+                } else {
+                    let mut core = sh.core.lock().unwrap();
+                    core.finish_service(stage);
+                    for r in &fb.requests {
+                        core.complete(r.id, done);
+                    }
+                    drop(core);
+                }
+                sh.cv.notify_all();
+            }
+            Err(e) => {
+                crate::log_warn!("serving", "execute failed: {e:#}");
+                let mut core = sh.core.lock().unwrap();
+                core.finish_service(stage);
+                for r in &fb.requests {
+                    core.accounting.record_drop(r.id);
+                }
+                drop(core);
+                sh.cv.notify_all();
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The fleet engine: one wall-clock loop over N member pipelines behind
 // one budget-checked FleetCore.
@@ -483,12 +599,19 @@ fn worker_loop(sh: Arc<Shared>, exec: Arc<dyn BatchExecutor>, stage: usize, n_st
 
 /// Shared state of the fleet engine: every member core behind ONE lock
 /// (the joint budget check must see the whole fleet atomically), one
-/// monitor per member.
+/// independently-locked monitor per member (arrival threads for
+/// different members never contend), plus the lock-free per-(member,
+/// stage) ingress lanes and the epoch-gated config snapshot.
 struct FleetShared {
     fleet: Mutex<FleetCore>,
     cv: Condvar,
-    monitors: Mutex<Vec<Monitor>>,
-    stop: AtomicBool,
+    monitors: Vec<Mutex<Monitor>>,
+    /// Lock-free per-(member, stage) arrival/forward lanes.
+    grid: LaneGrid,
+    /// Snapshot of every member's active config (workers read batch
+    /// hints without the fleet lock).
+    configs: ConfigCell<Vec<PipelineConfig>>,
+    stop: StopGate,
     start: Instant,
 }
 
@@ -641,12 +764,15 @@ pub fn serve_fleet_with(
     let shared = Arc::new(FleetShared {
         fleet: Mutex::new(fleet),
         cv: Condvar::new(),
-        monitors: Mutex::new((0..n).map(|_| Monitor::new(600)).collect()),
-        stop: AtomicBool::new(false),
+        monitors: (0..n).map(|_| Mutex::new(Monitor::new(600))).collect(),
+        grid: LaneGrid::new(&n_stages, DEFAULT_LANE_CAPACITY),
+        configs: ConfigCell::new(inits.iter().map(|d| d.config.clone()).collect()),
+        stop: StopGate::default(),
         start: Instant::now(),
     });
 
     // ---- worker threads: replica slots per (member, stage) -----------
+    let legacy_lock = cfg.legacy_lock;
     let mut workers = Vec::new();
     for (m, &stages) in n_stages.iter().enumerate() {
         for si in 0..stages {
@@ -654,7 +780,11 @@ pub fn serve_fleet_with(
                 let sh = Arc::clone(&shared);
                 let ex = Arc::clone(&executors[m]);
                 workers.push(std::thread::spawn(move || {
-                    fleet_worker_loop(sh, ex, m, si, stages);
+                    if legacy_lock {
+                        fleet_worker_loop(sh, ex, m, si, stages);
+                    } else {
+                        fleet_worker_loop_sharded(sh, ex, m, si, stages);
+                    }
                 }));
             }
         }
@@ -677,7 +807,7 @@ pub fn serve_fleet_with(
         std::thread::spawn(move || {
             loop {
                 let half = adapter.config.interval * 0.5;
-                if !sleep_interruptible(&sh.stop, half) {
+                if !sh.stop.sleep_interruptible(half) {
                     break;
                 }
                 // ---- fast path: mid-interval preemption check -------
@@ -687,10 +817,11 @@ pub fn serve_fleet_with(
                 if adapter.wants_preemption() {
                     let nowp = sh.now();
                     let pwindow = half.max(1.0) as usize;
-                    let observed_p: Vec<f64> = {
-                        let ms = sh.monitors.lock().unwrap();
-                        ms.iter().map(|mo| mo.recent_rate(nowp, pwindow)).collect()
-                    };
+                    let observed_p: Vec<f64> = sh
+                        .monitors
+                        .iter()
+                        .map(|mo| mo.lock().unwrap().recent_rate(nowp, pwindow))
+                        .collect();
                     if let Some(p) = adapter.preempt(nowp, &observed_p) {
                         for (m, d) in p.decisions.iter().enumerate() {
                             for sc in &d.config.stages {
@@ -720,28 +851,34 @@ pub fn serve_fleet_with(
                                 );
                                 fleet.note_preemption(&p.from);
                                 active = p.decisions.into_iter().map(|d| d.config).collect();
+                                drop(fleet);
+                                // publish after dropping the fleet lock
+                                sh.configs.publish(active.clone());
                             }
                             Err(e) => {
+                                drop(fleet);
                                 crate::log_warn!("fleet", "preemption apply rejected: {e}");
                             }
                         }
-                        drop(fleet);
                         sh.cv.notify_all();
                     }
                 }
-                if !sleep_interruptible(&sh.stop, half) {
+                if !sh.stop.sleep_interruptible(half) {
                     break;
                 }
                 // ---- slow path: autoscale + joint decide ------------
                 let now = sh.now();
                 let window = adapter.config.interval.max(1.0) as usize;
-                let (histories, observed): (Vec<Vec<f64>>, Vec<f64>) = {
-                    let ms = sh.monitors.lock().unwrap();
-                    (
-                        ms.iter().map(|mo| mo.history(now, crate::predictor::HISTORY)).collect(),
-                        ms.iter().map(|mo| mo.recent_rate(now, window)).collect(),
-                    )
-                };
+                let (histories, observed): (Vec<Vec<f64>>, Vec<f64>) = (
+                    sh.monitors
+                        .iter()
+                        .map(|mo| mo.lock().unwrap().history(now, crate::predictor::HISTORY))
+                        .collect(),
+                    sh.monitors
+                        .iter()
+                        .map(|mo| mo.lock().unwrap().recent_rate(now, window))
+                        .collect(),
+                );
                 let mut phys_budget = sh.fleet.lock().unwrap().budget();
                 // Drift correction: a staged shrink dropped on the way
                 // (coalescing, or a preemption clearing the stager)
@@ -796,7 +933,7 @@ pub fn serve_fleet_with(
                     0
                 };
                 let at = reconfig.stage(now, ds, ctl_budget, shrink_to, moves);
-                if !sleep_interruptible(&sh.stop, at - sh.now()) {
+                if !sh.stop.sleep_interruptible(at - sh.now()) {
                     break;
                 }
                 // pop_due coalesces: every due stage drains, only the
@@ -828,14 +965,17 @@ pub fn serve_fleet_with(
                                 }
                             }
                             active = staged.decisions.into_iter().map(|d| d.config).collect();
+                            drop(fleet);
+                            // publish after dropping the fleet lock
+                            sh.configs.publish(active.clone());
                         }
                         Err(e) => {
                             // unreachable for solver-built decisions;
                             // keep serving on the old configuration
+                            drop(fleet);
                             crate::log_warn!("fleet", "joint apply rejected: {e}");
                         }
                     }
-                    drop(fleet);
                     sh.cv.notify_all();
                 }
             }
@@ -845,8 +985,12 @@ pub fn serve_fleet_with(
     // ---- merged load generation (blocking) ---------------------------
     let submitted = loadgen::replay_fleet(traces, lg, |m, id, _t| {
         let t = shared.now();
-        shared.monitors.lock().unwrap()[m].record_arrival(t);
-        shared.fleet.lock().unwrap().member_mut(m).ingest(id, t);
+        shared.monitors[m].lock().unwrap().record_arrival(t);
+        if legacy_lock {
+            shared.fleet.lock().unwrap().member_mut(m).ingest(id, t);
+        } else if !shared.grid.ingest(m, id, t) {
+            ingress::shed(shared.fleet.lock().unwrap().member_mut(m), id, t);
+        }
         shared.cv.notify_all();
     });
     let total_submitted: usize = submitted.iter().sum();
@@ -864,7 +1008,7 @@ pub fn serve_fleet_with(
         }
         std::thread::sleep(Duration::from_millis(20));
     }
-    shared.stop.store(true, Ordering::Relaxed);
+    shared.stop.stop();
     shared.cv.notify_all();
     for w in workers {
         let _ = w.join();
@@ -900,8 +1044,9 @@ pub fn serve_fleet_with(
     Ok(FleetServeReport { members, budget: pool.budget, peak_in_use, final_replicas, pool })
 }
 
-/// One fleet replica-slot worker: claim a batch for (member, stage)
-/// from the shared fleet core, execute it, route survivors forward.
+/// One fleet replica-slot worker, legacy single-lock path: claim a
+/// batch for (member, stage) from the shared fleet core, execute it,
+/// route survivors forward.
 fn fleet_worker_loop(
     sh: Arc<FleetShared>,
     exec: Arc<dyn BatchExecutor>,
@@ -910,13 +1055,13 @@ fn fleet_worker_loop(
     n_stages: usize,
 ) {
     loop {
-        if sh.stop.load(Ordering::Relaxed) {
+        if sh.stop.is_stopped() {
             return;
         }
         let fb: FormedBatch = {
             let mut fleet = sh.fleet.lock().unwrap();
             loop {
-                if sh.stop.load(Ordering::Relaxed) {
+                if sh.stop.is_stopped() {
                     return;
                 }
                 match fleet.member_mut(member).try_form(stage, sh.now()) {
@@ -950,6 +1095,88 @@ fn fleet_worker_loop(
                     }
                 }
                 drop(fleet);
+                sh.cv.notify_all();
+            }
+            Err(e) => {
+                crate::log_warn!("serving", "fleet execute failed: {e:#}");
+                let mut fleet = sh.fleet.lock().unwrap();
+                let core = fleet.member_mut(member);
+                core.finish_service(stage);
+                for r in &fb.requests {
+                    core.accounting.record_drop(r.id);
+                }
+                drop(fleet);
+                sh.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// One fleet replica-slot worker, sharded path (the default): drain the
+/// (member, stage) ingress lane into the member core and claim a batch
+/// under one short fleet-lock acquisition; survivors ride the next
+/// stage's lane lock-free (locked fallback for ring-full leftovers).
+fn fleet_worker_loop_sharded(
+    sh: Arc<FleetShared>,
+    exec: Arc<dyn BatchExecutor>,
+    member: usize,
+    stage: usize,
+    n_stages: usize,
+) {
+    let mut reader = sh.configs.reader();
+    loop {
+        if sh.stop.is_stopped() {
+            return;
+        }
+        let limit = drain_limit(&reader.get(&sh.configs)[member], stage);
+        let fb: FormedBatch = {
+            let mut fleet = sh.fleet.lock().unwrap();
+            loop {
+                if sh.stop.is_stopped() {
+                    return;
+                }
+                let now = sh.now();
+                sh.grid.drain_into(member, stage, fleet.member_mut(member), limit);
+                match fleet.member_mut(member).try_form(stage, now) {
+                    FormOutcome::Formed(fb) => {
+                        fleet.note();
+                        break fb;
+                    }
+                    FormOutcome::Busy | FormOutcome::Idle { .. } => {
+                        let (guard, _) = sh
+                            .cv
+                            .wait_timeout(fleet, Duration::from_millis(20))
+                            .unwrap();
+                        fleet = guard;
+                    }
+                }
+            }
+        };
+        match exec.execute(&fb.variant_key, fb.batch.max(1)) {
+            Ok(()) => {
+                let done = sh.now();
+                if stage + 1 < n_stages {
+                    let mut survivors = fb.requests;
+                    for r in &mut survivors {
+                        r.stage_arrival = done;
+                    }
+                    let leftovers = sh.grid.forward(member, stage + 1, survivors);
+                    let mut fleet = sh.fleet.lock().unwrap();
+                    let core = fleet.member_mut(member);
+                    core.finish_service(stage);
+                    for r in leftovers {
+                        core.forward(stage + 1, r, done);
+                    }
+                    drop(fleet);
+                } else {
+                    let mut fleet = sh.fleet.lock().unwrap();
+                    let core = fleet.member_mut(member);
+                    core.finish_service(stage);
+                    for r in &fb.requests {
+                        core.complete(r.id, done);
+                    }
+                    drop(fleet);
+                }
                 sh.cv.notify_all();
             }
             Err(e) => {

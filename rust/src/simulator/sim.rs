@@ -20,10 +20,14 @@
 //! identical loop.
 //!
 //! [`run_fleet_des`] is the same loop fanned out over a whole fleet:
-//! every member pipeline's events interleave in one virtual-time queue,
-//! a [`FleetController`] (usually
-//! [`crate::fleet::solver::FleetAdapter`]) makes one *joint* decision
-//! per tick, and the budget-checked [`FleetCore`] applies it
+//! every member pipeline's events interleave on one deterministic
+//! virtual clock — SHARDED by default into per-member event wheels
+//! merged by a `next_due` tournament
+//! ([`crate::data_plane::wheel::ShardedClock`]; pop order is
+//! byte-for-byte the single-heap order, [`SimConfig::legacy_clock`]
+//! routes through one heap as the A/B lever) — a [`FleetController`]
+//! (usually [`crate::fleet::solver::FleetAdapter`]) makes one *joint*
+//! decision per tick, and the budget-checked [`FleetCore`] applies it
 //! atomically.  The elastic hooks ride the same queue: each Adapt tick
 //! first offers the controller a pool resize (growth immediate, shrink
 //! staged with the decisions), and a mid-interval Preempt event lets a
@@ -31,12 +35,13 @@
 //! without waiting for the next tick — both no-ops for plain
 //! controllers, so the classic fixed-pool behavior is unchanged.
 
-use super::events::{Event, EventQueue, TimedQueue};
+use super::events::{Event, EventQueue};
 use crate::cluster::core::{ClusterCore, FormOutcome};
 use crate::cluster::drop_policy::DropPolicy;
 use crate::cluster::reconfig::Reconfig;
 use crate::coordinator::adapter::{Adapter, Decision};
 use crate::coordinator::monitoring::Monitor;
+use crate::data_plane::wheel::ShardedClock;
 use crate::fleet::core::{FleetCore, FleetReconfig, MemberInit, PoolReport};
 use crate::fleet::solver::FleetController;
 use crate::metrics::RunMetrics;
@@ -56,11 +61,17 @@ pub struct SimConfig {
     /// §4.5: drop at stage entry if age > SLA (for stages after the
     /// first), and anywhere if age > 2×SLA.
     pub drop_enabled: bool,
+    /// Route the fleet DES through the legacy single-heap clock instead
+    /// of the sharded per-member wheels
+    /// ([`crate::data_plane::wheel::ShardedClock`]).  Pop order — and
+    /// therefore every metric — is identical either way; this is the
+    /// A/B lever for the `data_plane` bench section.
+    pub legacy_clock: bool,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { service_noise: 0.03, seed: 7, drop_enabled: true }
+        SimConfig { service_noise: 0.03, seed: 7, drop_enabled: true, legacy_clock: false }
     }
 }
 
@@ -441,12 +452,22 @@ pub fn run_fleet_des_faults(
     let budget = inventory.as_ref().map_or(budget, |i| i.replica_cap());
     let horizon = traces.iter().map(Trace::seconds).max().unwrap_or(0) as f64;
     let mut rng = SplitMix64::new(sim.seed ^ 0xF1EE7);
-    let mut events: TimedQueue<FleetEv> = TimedQueue::new();
+    // The sharded clock: each member's arrival trace rides its own
+    // wheel's O(1) sorted lane, control events ride the global wheel;
+    // pop order is byte-for-byte the single-heap order (see
+    // `data_plane::wheel`).  `legacy_clock` routes everything through
+    // the one global heap instead.
+    let mut events: ShardedClock<FleetEv> = ShardedClock::new(n, !sim.legacy_clock);
     let mut monitors: Vec<Monitor> = (0..n).map(|_| Monitor::new(600)).collect();
 
     for (m, trace) in traces.iter().enumerate() {
         for (id, &t) in trace.arrivals(member_seed(sim.seed, m)).iter().enumerate() {
-            events.push(t, FleetEv::Member { member: m, ev: Event::Arrival { id: id as u64 } });
+            // per-member arrival traces are time-sorted → sorted lane
+            events.push_member_sorted(
+                m,
+                t,
+                FleetEv::Member { member: m, ev: Event::Arrival { id: id as u64 } },
+            );
         }
     }
 
@@ -479,18 +500,18 @@ pub fn run_fleet_des_faults(
     let mut ctl_budget = budget;
     let mut fault_survivors: Vec<Vec<u32>> = Vec::new();
 
-    events.push(interval, FleetEv::Adapt);
+    events.push_global(interval, FleetEv::Adapt);
     // Plain fixed-pool controllers never preempt — don't even schedule
     // the mid-interval checks (and their per-member monitor scans).
     if ctl.wants_preemption() && interval * 0.5 < horizon {
-        events.push(interval * 0.5, FleetEv::Preempt);
+        events.push_global(interval * 0.5, FleetEv::Preempt);
     }
     for f in faults {
         if f.at < horizon {
-            events.push(f.at, FleetEv::Fault { zone: f.zone.clone() });
+            events.push_global(f.at, FleetEv::Fault { zone: f.zone.clone() });
         }
     }
-    events.push(horizon, FleetEv::End);
+    events.push_global(horizon, FleetEv::End);
 
     while let Some((now, fe)) = events.pop() {
         match fe {
@@ -598,9 +619,9 @@ pub fn run_fleet_des_faults(
                     0
                 };
                 let at = reconfig.stage(now, decisions, ctl_budget, shrink_to, moves);
-                events.push(at, FleetEv::Apply);
+                events.push_global(at, FleetEv::Apply);
                 if now + interval < horizon {
-                    events.push(now + interval, FleetEv::Adapt);
+                    events.push_global(now + interval, FleetEv::Adapt);
                 }
             }
             FleetEv::Preempt => {
@@ -640,7 +661,7 @@ pub fn run_fleet_des_faults(
                     }
                 }
                 if now + interval < horizon {
-                    events.push(now + interval, FleetEv::Preempt);
+                    events.push_global(now + interval, FleetEv::Preempt);
                 }
             }
             FleetEv::Apply => {
@@ -776,7 +797,7 @@ fn drive_member(
     member: usize,
     stage: usize,
     now: f64,
-    events: &mut TimedQueue<FleetEv>,
+    events: &mut ShardedClock<FleetEv>,
     rng: &mut SplitMix64,
     sim: SimConfig,
 ) {
@@ -790,7 +811,8 @@ fn drive_member(
         sim.service_noise,
         &mut |t, e| {
             formed |= matches!(e, Event::ServiceDone { .. });
-            events.push(t, FleetEv::Member { member, ev: e });
+            // dynamic events land on the member wheel's heap lane
+            events.push_member(member, t, FleetEv::Member { member, ev: e });
         },
     );
     if formed {

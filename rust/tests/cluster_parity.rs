@@ -65,7 +65,8 @@ fn replay_matches_sim_under_bursty_drops() {
     let cfg = AdapterConfig::default();
     let spec = pipelines::by_name("video").unwrap();
     let prof = pipeline_profiles(&spec);
-    let sim_cfg = SimConfig { seed: 9, service_noise: 0.05, drop_enabled: true };
+    let sim_cfg =
+        SimConfig { seed: 9, service_noise: 0.05, drop_enabled: true, legacy_clock: false };
     let mut sim = Simulation::new(adapter("video", Policy::Fa2Low, cfg), sim_cfg);
     let trace = Trace::synthetic(Pattern::Bursty, 240);
     let (original, log) = sim.run_logged(&trace);
@@ -136,7 +137,7 @@ fn sim_and_live_engine_agree_on_counts() {
     );
     let mut sim = Simulation::new(
         sim_adapter,
-        SimConfig { seed, service_noise: 0.0, drop_enabled: true },
+        SimConfig { seed, service_noise: 0.0, drop_enabled: true, legacy_clock: false },
     );
     let m_sim = sim.run(&trace);
 
@@ -151,6 +152,7 @@ fn sim_and_live_engine_agree_on_counts() {
         profile_batches: vec![],
         profile_reps: 0,
         sla_floor: 0.0,
+        legacy_lock: false,
     };
     let scaled = prof.scaled(SCALE);
     let executor = Arc::new(SyntheticExecutor::from_profiles(&scaled, 1.0));

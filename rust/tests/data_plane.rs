@@ -1,0 +1,292 @@
+//! Data-plane regression suite: the lock-free ring contract
+//! (FIFO / no-loss / no-duplication, exact multiset delivery under
+//! producer contention, drop-on-full accounting), byte-for-byte parity
+//! between the sharded DES clock and the legacy single heap, and a
+//! live-engine smoke over both hot paths (sharded rings vs the legacy
+//! single lock).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use ipa::cluster::core::ClusterCore;
+use ipa::cluster::drop_policy::DropPolicy;
+use ipa::coordinator::adapter::{AdapterConfig, Policy};
+use ipa::data_plane::ingress::{shed, LaneGrid};
+use ipa::data_plane::ring::MpscRing;
+use ipa::fleet::solver::FleetAdapter;
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines::{self, PipelineSpec};
+use ipa::optimizer::ip::{PipelineConfig, StageConfig};
+use ipa::predictor::{Predictor, ReactivePredictor};
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::profiler::profile::PipelineProfiles;
+use ipa::resources::ResourceVec;
+use ipa::serving::engine::{serve_with, ServeConfig, SyntheticExecutor};
+use ipa::serving::loadgen::LoadGenConfig;
+use ipa::simulator::sim::{run_fleet_des, FleetRunMetrics, SimConfig};
+use ipa::util::quickcheck::{check, prop_assert};
+use ipa::workload::trace::Trace;
+
+// ---------------------------------------------------------------------------
+// Ring contract
+// ---------------------------------------------------------------------------
+
+/// Any interleaving of pushes and pops matches a VecDeque reference:
+/// FIFO order, nothing lost, nothing duplicated, full-ring pushes
+/// rejected with the value intact.
+#[test]
+fn quickcheck_ring_matches_fifo_reference() {
+    check("mpsc ring == VecDeque", 300, |g| {
+        let cap_pow = g.usize(1, 6); // capacity 2..=32
+        let ring: MpscRing<u64> = MpscRing::with_capacity(1 << cap_pow);
+        let mut reference: VecDeque<u64> = VecDeque::new();
+        let n_ops = g.usize(1, 120);
+        let mut next = 0u64;
+        for _ in 0..n_ops {
+            if g.bool() {
+                match ring.try_push(next) {
+                    Ok(()) => reference.push_back(next),
+                    Err(v) => {
+                        prop_assert(v == next, "rejected push must return the value")?;
+                        prop_assert(
+                            reference.len() >= ring.capacity(),
+                            "ring rejected a push while not full",
+                        )?;
+                    }
+                }
+                next += 1;
+            } else {
+                prop_assert(ring.pop() == reference.pop_front(), "pop diverged")?;
+            }
+        }
+        while let Some(expected) = reference.pop_front() {
+            prop_assert(ring.pop() == Some(expected), "drain diverged")?;
+        }
+        prop_assert(ring.pop().is_none(), "ring not empty after drain")
+    });
+}
+
+/// Seeded multi-producer stress: every pushed value is delivered exactly
+/// once (exact multiset), and each producer's own values arrive in its
+/// push order — the MPSC contract under real contention.  A small ring
+/// forces constant full-ring backoff.
+#[test]
+fn multi_producer_stress_delivers_exact_multiset_in_producer_order() {
+    const PRODUCERS: u64 = 8;
+    const PER_PRODUCER: u64 = 4_000;
+    let ring: Arc<MpscRing<u64>> = Arc::new(MpscRing::with_capacity(64));
+    let handles: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let ring = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                for i in 0..PER_PRODUCER {
+                    let mut v = (p << 32) | i;
+                    loop {
+                        match ring.try_push(v) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                v = back;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    // single consumer (the engine's dispatch side) drains concurrently
+    let total = (PRODUCERS * PER_PRODUCER) as usize;
+    let mut got = Vec::with_capacity(total);
+    while got.len() < total {
+        match ring.pop() {
+            Some(v) => got.push(v),
+            None => std::thread::yield_now(),
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(ring.pop().is_none(), "ring must be empty after full drain");
+    // exact multiset: every (producer, index) pair exactly once
+    let mut sorted = got.clone();
+    sorted.sort_unstable();
+    let expected: Vec<u64> =
+        (0..PRODUCERS).flat_map(|p| (0..PER_PRODUCER).map(move |i| (p << 32) | i)).collect();
+    assert_eq!(sorted, expected, "multiset delivery mismatch");
+    // per-producer FIFO: indices of one producer arrive monotonically
+    let mut last = vec![-1i64; PRODUCERS as usize];
+    for v in got {
+        let p = (v >> 32) as usize;
+        let i = (v & 0xFFFF_FFFF) as i64;
+        assert!(i > last[p], "producer {p} reordered: {i} after {}", last[p]);
+        last[p] = i;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ingress shed accounting
+// ---------------------------------------------------------------------------
+
+fn two_stage_core() -> ClusterCore {
+    let config = PipelineConfig {
+        stages: (0..2)
+            .map(|i| StageConfig {
+                variant_idx: 0,
+                variant_key: format!("v{i}"),
+                batch: 4,
+                replicas: 1,
+                cost: 1.0,
+                accuracy: 90.0,
+                latency: 0.1,
+                resources: ResourceVec::cpu(1.0),
+            })
+            .collect(),
+        pas: 90.0,
+        cost: 2.0,
+        batch_sum: 8,
+        objective: 0.0,
+        latency_e2e: 0.2,
+        resources: ResourceVec::ZERO,
+    };
+    ClusterCore::new(&config, f64::INFINITY, DropPolicy::new(10.0, true))
+}
+
+/// An arrival shed because its ingress lane was full lands in the SAME
+/// drop ledger the §4.5 drop policy feeds: recorded as an arrival (so
+/// demand metrics see it) and as a drop.
+#[test]
+fn full_lane_shed_feeds_drop_policy_counters() {
+    let grid = LaneGrid::single(2, 2);
+    let mut core = two_stage_core();
+    let mut shed_count = 0u64;
+    for id in 0..10u64 {
+        let t = id as f64 * 0.01;
+        if grid.ingest(0, id, t) {
+            continue;
+        }
+        shed(&mut core, id, t);
+        shed_count += 1;
+    }
+    assert_eq!(shed_count, 8, "capacity-2 lane sheds all but the first two");
+    assert_eq!(core.accounting.dropped_count(), 8);
+    assert!(core.accounting.is_dropped(5));
+    // the two queued arrivals drain normally and stay undropped
+    assert_eq!(grid.drain_into(0, 0, &mut core, 64), 2);
+    assert_eq!(core.accounting.dropped_count(), 8);
+    assert!(!core.accounting.is_dropped(0));
+}
+
+// ---------------------------------------------------------------------------
+// Sharded DES clock: byte-for-byte parity with the single heap
+// ---------------------------------------------------------------------------
+
+fn fleet_des_run(legacy_clock: bool, seed: u64) -> FleetRunMetrics {
+    const BUDGET: u32 = 20;
+    let fleet = ipa::fleet::spec::FleetSpec::demo3();
+    let specs: Vec<PipelineSpec> = fleet.specs().unwrap();
+    let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+    let slas: Vec<f64> = specs.iter().map(PipelineSpec::sla_e2e).collect();
+    let traces: Vec<Trace> = fleet.traces(180);
+    let predictors: Vec<Box<dyn Predictor + Send>> = specs
+        .iter()
+        .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+        .collect();
+    let mut adapter = FleetAdapter::new(
+        specs,
+        profs.clone(),
+        AccuracyMetric::Pas,
+        BUDGET,
+        AdapterConfig { interval: 30.0, apply_delay: 8.0, max_replicas: 4 },
+        predictors,
+    )
+    .unwrap();
+    run_fleet_des(
+        &profs,
+        &slas,
+        30.0,
+        8.0,
+        SimConfig { seed, legacy_clock, ..Default::default() },
+        &mut adapter,
+        &traces,
+        "clock-parity",
+        BUDGET,
+    )
+}
+
+/// The tentpole's determinism contract: the sharded per-member clock
+/// pops the exact event order the single heap would (one global seq,
+/// tournament min), so a full fleet DES — adaptation ticks, service
+/// noise RNG draws, drops and all — reproduces byte-for-byte.
+#[test]
+fn fleet_des_sharded_clock_matches_single_heap_byte_for_byte() {
+    let sharded = fleet_des_run(false, 11);
+    let legacy = fleet_des_run(true, 11);
+    assert_eq!(sharded.members.len(), legacy.members.len());
+    let total: usize = sharded.members.iter().map(|m| m.requests.len()).sum();
+    assert!(total > 300, "thin run ({total} requests) proves nothing");
+    for (m, (s, l)) in sharded.members.iter().zip(&legacy.members).enumerate() {
+        assert_eq!(s.requests, l.requests, "member {m}: per-request outcomes diverge");
+        assert_eq!(s.completed_count(), l.completed_count(), "member {m}");
+        assert_eq!(s.dropped_count(), l.dropped_count(), "member {m}");
+    }
+    assert_eq!(sharded.peak_in_use, legacy.peak_in_use);
+    assert_eq!(sharded.final_replicas, legacy.final_replicas);
+}
+
+// ---------------------------------------------------------------------------
+// Live engine: sharded rings vs the legacy single lock
+// ---------------------------------------------------------------------------
+
+fn live_run(legacy_lock: bool) -> (usize, usize, usize) {
+    const SCALE: f64 = 0.05;
+    let seed = 17u64;
+    let spec = pipelines::by_name("video").unwrap();
+    let prof = pipeline_profiles(&spec);
+    // calm load + quiet tail: the unique correct outcome is "everything
+    // completes, nothing drops" on BOTH hot paths
+    let mut rates = vec![1.0; 40];
+    rates.extend(vec![0.0; 20]);
+    let trace = Trace::new("dp-live", rates);
+    let n_arrivals = trace.arrivals(seed).len();
+    let cfg = ServeConfig {
+        artifact_dir: String::new(),
+        executors: 0,
+        max_workers: 8,
+        interval: 10_000.0,
+        apply_delay: 8.0 * SCALE,
+        use_lstm: false,
+        profile_batches: vec![],
+        profile_reps: 0,
+        sla_floor: 0.0,
+        legacy_lock,
+    };
+    let scaled = prof.scaled(SCALE);
+    let executor = Arc::new(SyntheticExecutor::from_profiles(&scaled, 1.0));
+    let rep = serve_with(
+        &spec,
+        scaled,
+        Policy::Fa2Low,
+        &cfg,
+        LoadGenConfig { time_scale: SCALE, seed },
+        &trace,
+        executor,
+        Box::new(ReactivePredictor::default()),
+    )
+    .expect("live engine");
+    (n_arrivals, rep.metrics.completed_count(), rep.metrics.dropped_count())
+}
+
+/// Smoke over both live hot paths: the sharded rings (default) and the
+/// legacy single lock complete the same calm trace in full.
+#[test]
+fn live_engine_completes_calm_trace_on_both_hot_paths() {
+    for legacy_lock in [false, true] {
+        let (arrivals, completed, dropped) = live_run(legacy_lock);
+        assert!(arrivals > 25, "thin trace ({arrivals})");
+        assert_eq!(
+            completed, arrivals,
+            "legacy_lock={legacy_lock}: every arrival must complete"
+        );
+        assert_eq!(dropped, 0, "legacy_lock={legacy_lock}: nothing may drop");
+    }
+}

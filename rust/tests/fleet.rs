@@ -161,7 +161,7 @@ fn fleet_sim_and_live_engine_agree_on_counts() {
         &slas,
         10_000.0,
         8.0,
-        SimConfig { seed, service_noise: 0.0, drop_enabled: true },
+        SimConfig { seed, service_noise: 0.0, drop_enabled: true, legacy_clock: false },
         &mut sim_adapter,
         &traces,
         "fleet-sim",
@@ -179,6 +179,7 @@ fn fleet_sim_and_live_engine_agree_on_counts() {
         profile_batches: vec![],
         profile_reps: 0,
         sla_floor: 0.0,
+        legacy_lock: false,
     };
     let scaled: Vec<PipelineProfiles> = profs.iter().map(|p| p.scaled(SCALE)).collect();
     let executors: Vec<Arc<dyn BatchExecutor>> = scaled

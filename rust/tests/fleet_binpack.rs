@@ -433,7 +433,7 @@ fn sla_classes_flow_through_both_drivers() {
         &slas,
         10_000.0,
         8.0,
-        SimConfig { seed, service_noise: 0.0, drop_enabled: true },
+        SimConfig { seed, service_noise: 0.0, drop_enabled: true, legacy_clock: false },
         &mut sim_adapter,
         &traces,
         "class-sim",
@@ -450,6 +450,7 @@ fn sla_classes_flow_through_both_drivers() {
         profile_batches: vec![],
         profile_reps: 0,
         sla_floor: 0.0,
+        legacy_lock: false,
     };
     let scaled: Vec<PipelineProfiles> = profs.iter().map(|p| p.scaled(SCALE)).collect();
     let executors: Vec<Arc<dyn BatchExecutor>> = scaled

@@ -170,6 +170,7 @@ fn live_engine_smoke() {
         profile_batches: vec![1, 8, 64],
         profile_reps: 2,
         sla_floor: 0.25,
+        legacy_lock: false,
     };
     let trace = ipa::workload::trace::Trace::synthetic(
         ipa::workload::tracegen::Pattern::SteadyLow,
