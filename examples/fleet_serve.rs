@@ -42,13 +42,22 @@
 //! engine); pass `--legacy-clock 1` / `--legacy-lock 1` to A/B the
 //! pre-sharding single heap / single lock.
 //!
+//! Flight recorder: `--trace-out spans.jsonl` dumps the DES run's
+//! sampled stage-hop spans (1-in-`--sample`, default 64),
+//! `--journal-out journal.jsonl` the control-plane decision journal
+//! (byte-identical across reruns — CI diffs two runs), and
+//! `--metrics-text out.prom` (or `-` for stdout) the Prometheus-style
+//! exposition.  `--skip-live 1` stops after the DES clock.
+//!
 //! Run: `cargo run --release --example fleet_serve
 //!       [-- --seconds 240 --budget 24 --time-scale 0.05 --fleet spec.json
 //!           --cost-target 30 --static 0
 //!           --nodes "2x(8c,32g,0a)@east+2x(8c,32g,0a)@west"
 //!           --class nlp-batchline=throughput
 //!           --spread video-edge --migration-delay 0.5
-//!           --legacy-lock 0 --legacy-clock 0]`
+//!           --legacy-lock 0 --legacy-clock 0
+//!           --trace-out spans.jsonl --journal-out journal.jsonl
+//!           --metrics-text - --sample 64 --skip-live 0]`
 
 use std::sync::Arc;
 
@@ -65,9 +74,11 @@ use ipa::predictor::{Predictor, ReactivePredictor};
 use ipa::profiler::analytic::pipeline_profiles;
 use ipa::profiler::profile::PipelineProfiles;
 use ipa::reports::tables;
+use ipa::reports::timeline;
 use ipa::serving::engine::{serve_fleet_with, BatchExecutor, ServeConfig, SyntheticExecutor};
 use ipa::serving::loadgen::LoadGenConfig;
-use ipa::simulator::sim::{run_fleet_des, SimConfig};
+use ipa::simulator::sim::{run_fleet_des_traced, SimConfig};
+use ipa::telemetry::{export, spans_to_jsonl, Telemetry, TelemetryConfig};
 use ipa::util::cli::Args;
 use ipa::util::stats::mean;
 
@@ -84,6 +95,14 @@ fn main() {
     let static_pool = args.get_usize("static", 0) != 0;
     let legacy_lock = args.get_usize("legacy-lock", 0) != 0;
     let legacy_clock = args.get_usize("legacy-clock", 0) != 0;
+    // Flight-recorder flags: any output path turns the telemetry plane
+    // on for the DES run (spans sampled 1-in---sample; journal always).
+    let trace_out = args.get("trace-out");
+    let journal_out = args.get("journal-out");
+    let metrics_text = args.get("metrics-text");
+    let sample = args.get_u64("sample", 64).max(1);
+    let skip_live = args.get_usize("skip-live", 0) != 0;
+    let traced = trace_out.is_some() || journal_out.is_some() || metrics_text.is_some();
 
     let mut fleet = match args.get("fleet") {
         Some(path) => {
@@ -271,8 +290,16 @@ fn main() {
     )
     .and_then(|a| a.with_tuning(tuning.clone()))
     .expect("valid fleet");
+    let tel = if traced {
+        Telemetry::new(
+            TelemetryConfig { sample_one_in: sample, ..Default::default() },
+            specs.len(),
+        )
+    } else {
+        Telemetry::off()
+    };
     let t0 = std::time::Instant::now();
-    let fm = run_fleet_des(
+    let fm = run_fleet_des_traced(
         &profs,
         &slas,
         10.0,
@@ -282,6 +309,7 @@ fn main() {
         &traces,
         "fleet-ipa",
         budget,
+        &tel,
     );
     println!(
         "simulated {} requests in {:.2}s wall | pool peak in use {} / {} (final size; \
@@ -296,6 +324,51 @@ fn main() {
     println!();
     // `repl` column = the allocation the run actually ended on
     print!("{}", tables::fleet_table(&names, &fm.members, &fm.final_replicas, &fm.pool));
+
+    // ---- flight recorder output --------------------------------------
+    if traced {
+        let spans = tel.take_spans();
+        let journal = tel.journal();
+        let write = |path: &str, what: &str, text: String| {
+            std::fs::write(path, text).unwrap_or_else(|e| {
+                eprintln!("cannot write {what} to {path}: {e}");
+                std::process::exit(2);
+            });
+        };
+        println!(
+            "\nflight recorder: {} spans (1-in-{sample} sampling, {} dropped), \
+             {} journal entries",
+            spans.len(),
+            tel.dropped_spans(),
+            journal.len(),
+        );
+        if let Some(path) = trace_out {
+            write(path, "span trace", spans_to_jsonl(&spans));
+            println!("  spans   -> {path}");
+        }
+        if let Some(path) = journal_out {
+            write(path, "decision journal", journal.to_jsonl());
+            println!("  journal -> {path}");
+        }
+        if let Some(path) = metrics_text {
+            let text = export::prometheus_text(&spans, &journal);
+            if path == "-" {
+                print!("{text}");
+            } else {
+                write(path, "metrics exposition", text);
+                println!("  metrics -> {path}");
+            }
+        }
+        let wf = timeline::waterfalls(&spans, 2);
+        if !wf.is_empty() {
+            println!("\nsample span waterfalls (first 2 traces):\n{wf}");
+        }
+    }
+
+    if skip_live {
+        println!("\nfleet e2e complete: DES clock only (--skip-live)");
+        return;
+    }
 
     // ---- clock 2: the live fleet engine ------------------------------
     println!(

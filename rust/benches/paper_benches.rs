@@ -494,6 +494,82 @@ fn main() {
     print_section("data plane (sharded rings + sharded DES clock)", &rows);
     let data_plane_rows = rows.clone();
 
+    // Telemetry plane: the flight-recorder overhead gate.  The same
+    // 64-stage synthetic dispatch run with default sampling must stay
+    // within 10% of the telemetry-off run (IPA_TELEM_OVERHEAD_GATE
+    // overrides on noisy hardware); a traced 8-member fleet DES row
+    // shows the end-to-end cost with spans + decision journal on.
+    use ipa::simulator::sim::run_fleet_des_traced;
+    use ipa::telemetry::{Telemetry, TelemetryConfig};
+
+    let mut rows = Vec::new();
+    let telem_off = b.run_throughput(
+        &format!("telemetry/untraced_{}stages", dp_cfg.stages),
+        dp_items,
+        || ipa::data_plane::synthetic::run_sharded_traced(&dp_cfg, &Telemetry::off()),
+    );
+    let sample_1_in = TelemetryConfig::default().sample_one_in;
+    let telem_on = b.run_throughput(
+        &format!("telemetry/sampled_1in{sample_1_in}_{}stages", dp_cfg.stages),
+        dp_items,
+        || {
+            // fresh recorder each iteration so the span sink never
+            // grows across iterations (steady-state cost, not drain)
+            let tel = Telemetry::new(TelemetryConfig::default(), dp_cfg.stages);
+            ipa::data_plane::synthetic::run_sharded_traced(&dp_cfg, &tel)
+        },
+    );
+    let telem_overhead = telem_on.summary.mean / telem_off.summary.mean.max(1e-12) - 1.0;
+    let telem_gate = gate("IPA_TELEM_OVERHEAD_GATE", 0.10);
+    println!(
+        "  telemetry: sampled overhead {:.1}% (gate {:.1}%)",
+        telem_overhead * 100.0,
+        telem_gate * 100.0
+    );
+    assert!(
+        telem_overhead <= telem_gate,
+        "sampled telemetry costs {:.1}% over the untraced dispatch path (gate {:.1}%)",
+        telem_overhead * 100.0,
+        telem_gate * 100.0
+    );
+    rows.push(telem_off);
+    rows.push(telem_on);
+
+    rows.push(b.run_throughput(
+        &format!("telemetry/fleet_des_traced_{wide_n}members"),
+        wide_items,
+        || {
+            let tel = Telemetry::new(TelemetryConfig::default(), wide_n);
+            let predictors: Vec<Box<dyn Predictor + Send>> = wide_specs
+                .iter()
+                .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+                .collect();
+            let mut adapter = FleetAdapter::new(
+                wide_specs.clone(),
+                wide_profs.clone(),
+                AccuracyMetric::Pas,
+                wide_budget,
+                AdapterConfig::default(),
+                predictors,
+            )
+            .unwrap();
+            run_fleet_des_traced(
+                &wide_profs,
+                &wide_slas,
+                10.0,
+                8.0,
+                SimConfig { seed: fleet_seed, ..Default::default() },
+                &mut adapter,
+                &wide_traces,
+                "telem-bench",
+                wide_budget,
+                &tel,
+            )
+        },
+    ));
+    print_section("telemetry (flight recorder overhead)", &rows);
+    let telemetry_rows = rows.clone();
+
     // Perf baseline for future PRs: solver decision time + simulator
     // throughput (single-pipeline and fleet) + elastic control-plane
     // latencies, in a stable JSON shape.
@@ -508,6 +584,7 @@ fn main() {
             ("fleet_binpack", &fleet_binpack_rows[..]),
             ("fleet_topology", &fleet_topology_rows[..]),
             ("data_plane", &data_plane_rows[..]),
+            ("telemetry", &telemetry_rows[..]),
         ],
     ) {
         Ok(()) => println!("wrote BENCH_cluster.json"),

@@ -2,11 +2,16 @@
 //! counters in a ring buffer, queried by the adapter for the LSTM's
 //! 2-minute history window.
 
+use std::collections::VecDeque;
+
 /// Per-second arrival counter ring.
 #[derive(Debug, Clone)]
 pub struct Monitor {
-    /// counts[i] = arrivals in second (base + i)
-    counts: Vec<f64>,
+    /// counts[i] = arrivals in second (base + i).  A `VecDeque` so
+    /// capacity eviction pops the front in O(evicted) — the old `Vec`
+    /// `drain(..k)` shifted the whole buffer on every arrival at the
+    /// ring edge, O(capacity) per request.
+    counts: VecDeque<f64>,
     base: usize,
     capacity: usize,
 }
@@ -15,7 +20,7 @@ impl Monitor {
     /// `capacity`: how many seconds of history to retain (≥ the LSTM's
     /// 120-second window).
     pub fn new(capacity: usize) -> Self {
-        Monitor { counts: Vec::new(), base: 0, capacity: capacity.max(1) }
+        Monitor { counts: VecDeque::new(), base: 0, capacity: capacity.max(1) }
     }
 
     /// Record one request arrival at time `t` (seconds).
@@ -30,14 +35,13 @@ impl Monitor {
             return; // too old, outside the ring
         }
         while self.base + self.counts.len() <= sec {
-            self.counts.push(0.0);
+            self.counts.push_back(0.0);
         }
         self.counts[sec - self.base] += n;
-        // trim to capacity
-        if self.counts.len() > self.capacity {
-            let drop = self.counts.len() - self.capacity;
-            self.counts.drain(..drop);
-            self.base += drop;
+        // trim to capacity: O(1) amortized front pops, no shifting
+        while self.counts.len() > self.capacity {
+            self.counts.pop_front();
+            self.base += 1;
         }
     }
 
@@ -119,6 +123,26 @@ mod tests {
         m.record_arrival(0.5);
         m.record_arrival(3.5);
         assert_eq!(m.history(4.0, 10), vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn full_capacity_rate_matches_unbounded_reference() {
+        // Regression for the ring-edge eviction rewrite: a monitor that
+        // is evicting on every arrival must report the same windows and
+        // rates as one that never evicts.
+        let mut ring = Monitor::new(120);
+        let mut unbounded = Monitor::new(usize::MAX);
+        for s in 0..2000 {
+            let n = ((s * 7) % 13 + 1) as f64;
+            ring.record_n(s as f64 + 0.25, n);
+            unbounded.record_n(s as f64 + 0.25, n);
+        }
+        let now = 2000.0;
+        for w in [1, 10, 60, 120] {
+            assert_eq!(ring.history(now, w), unbounded.history(now, w), "window {w}");
+            let (a, b) = (ring.recent_rate(now, w), unbounded.recent_rate(now, w));
+            assert!((a - b).abs() < 1e-12, "window {w}: {a} vs {b}");
+        }
     }
 
     #[test]

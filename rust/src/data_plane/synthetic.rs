@@ -26,6 +26,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::data_plane::ring::MpscRing;
 use crate::data_plane::snapshot::ConfigCell;
+use crate::telemetry::{Hop, Span, Telemetry};
 
 /// Workload shape shared by both paths.
 #[derive(Debug, Clone)]
@@ -74,19 +75,28 @@ fn stage_range(d: usize, n: usize, stages: usize) -> (usize, usize) {
 /// Sharded path: per-stage rings + epoch-gated config snapshots.
 /// Returns the items consumed (always `cfg.total_items()`).
 pub fn run_sharded(cfg: &SyntheticCfg) -> usize {
-    let rings: Arc<Vec<MpscRing<u64>>> =
-        Arc::new((0..cfg.stages).map(|_| MpscRing::with_capacity(cfg.ring_capacity)).collect());
-    let config: Arc<ConfigCell<Vec<usize>>> =
-        Arc::new(ConfigCell::new(vec![cfg.batch; cfg.stages]));
-    let consumed = Arc::new(AtomicUsize::new(0));
+    run_sharded_traced(cfg, &Telemetry::off())
+}
+
+/// [`run_sharded`] with span recording on the consume side: every
+/// sampled item pops an [`Hop::Exec`] span into `tel`'s rings.  This is
+/// what the `telemetry` bench section times against the untraced run —
+/// the overhead gate measures exactly the per-item sample-check +
+/// ring-push cost on the dispatch hot path.  `Telemetry::off()` is the
+/// untraced run.
+pub fn run_sharded_traced(cfg: &SyntheticCfg, tel: &Telemetry) -> usize {
+    let rings: Vec<MpscRing<u64>> =
+        (0..cfg.stages).map(|_| MpscRing::with_capacity(cfg.ring_capacity)).collect();
+    let config: ConfigCell<Vec<usize>> = ConfigCell::new(vec![cfg.batch; cfg.stages]);
+    let consumed = AtomicUsize::new(0);
     let total = cfg.total_items();
 
-    let producers: Vec<_> = (0..cfg.producers)
-        .map(|p| {
-            let rings = Arc::clone(&rings);
+    std::thread::scope(|s| {
+        for p in 0..cfg.producers {
+            let rings = &rings;
             let n = cfg.items_per_producer;
             let stages = cfg.stages;
-            std::thread::spawn(move || {
+            s.spawn(move || {
                 for i in 0..n {
                     let stage = (p + i) % stages;
                     let mut v = (p * n + i) as u64;
@@ -101,26 +111,31 @@ pub fn run_sharded(cfg: &SyntheticCfg) -> usize {
                         }
                     }
                 }
-            })
-        })
-        .collect();
+            });
+        }
 
-    let dispatchers: Vec<_> = (0..cfg.dispatchers)
-        .map(|d| {
-            let rings = Arc::clone(&rings);
-            let config = Arc::clone(&config);
-            let consumed = Arc::clone(&consumed);
+        for d in 0..cfg.dispatchers {
+            let (rings, config, consumed) = (&rings, &config, &consumed);
             let (lo, hi) = stage_range(d, cfg.dispatchers, cfg.stages);
-            std::thread::spawn(move || {
+            s.spawn(move || {
                 let mut reader = config.reader();
                 while consumed.load(Ordering::Relaxed) < total {
                     let mut got = 0usize;
                     for stage in lo..hi {
                         // the per-stage batch hint: one Acquire load
-                        let batch = reader.get(&config)[stage];
+                        let batch = reader.get(config)[stage];
                         for _ in 0..batch {
-                            if rings[stage].pop().is_none() {
-                                break;
+                            let Some(item) = rings[stage].pop() else { break };
+                            if tel.enabled() && tel.sampled(item) {
+                                tel.record(Span {
+                                    trace: item,
+                                    member: stage as u32,
+                                    stage: stage as u32,
+                                    hop: Hop::Exec,
+                                    t: 0.0,
+                                    dur: 0.0,
+                                    value: batch as f64,
+                                });
                             }
                             got += 1;
                         }
@@ -131,16 +146,9 @@ pub fn run_sharded(cfg: &SyntheticCfg) -> usize {
                         std::thread::yield_now();
                     }
                 }
-            })
-        })
-        .collect();
-
-    for h in producers {
-        h.join().unwrap();
-    }
-    for h in dispatchers {
-        h.join().unwrap();
-    }
+            });
+        }
+    });
     consumed.load(Ordering::Relaxed)
 }
 
@@ -236,6 +244,20 @@ mod tests {
     fn sharded_consumes_every_item() {
         let cfg = tiny();
         assert_eq!(run_sharded(&cfg), cfg.total_items());
+    }
+
+    #[test]
+    fn traced_consumes_every_item_and_records_sampled_spans() {
+        use crate::telemetry::TelemetryConfig;
+        let cfg = tiny();
+        let tel = Telemetry::new(
+            TelemetryConfig { sample_one_in: 4, span_buffer: 1 << 14 },
+            cfg.stages,
+        );
+        assert_eq!(run_sharded_traced(&cfg, &tel), cfg.total_items());
+        let spans = tel.take_spans();
+        assert!(!spans.is_empty());
+        assert!(spans.iter().all(|s| s.trace % 4 == 0 && s.hop == Hop::Exec));
     }
 
     #[test]

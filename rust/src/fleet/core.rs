@@ -58,12 +58,15 @@
 //! being enough to keep the two views in lockstep.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::cluster::core::ClusterCore;
 use crate::cluster::drop_policy::DropPolicy;
 use crate::coordinator::adapter::Decision;
 use crate::fleet::nodes::{config_demands, NodeInventory, Packing};
 use crate::optimizer::ip::PipelineConfig;
+use crate::telemetry::journal::Journal;
+use crate::util::json::Json;
 
 /// Per-member construction parameters of a fleet core: the initial
 /// configuration, the λ shaping its batch timeouts, the drop policy,
@@ -192,6 +195,8 @@ pub struct FleetCore {
     last_accrual: f64,
     bought_replica_secs: f64,
     used_replica_secs: f64,
+    /// Decision journal attached by the traced drivers (None = silent).
+    journal: Option<Arc<Journal>>,
 }
 
 impl FleetCore {
@@ -279,6 +284,7 @@ impl FleetCore {
             last_accrual: 0.0,
             bought_replica_secs: 0.0,
             used_replica_secs: 0.0,
+            journal: None,
         })
     }
 
@@ -288,6 +294,14 @@ impl FleetCore {
 
     pub fn budget(&self) -> u32 {
         self.budget
+    }
+
+    /// Attach the decision journal: applies, pool resizes and zone
+    /// kills are recorded as structured entries stamped with the
+    /// driver's virtual time (applies use the last accrual instant —
+    /// drivers accrue to `now` before applying).
+    pub fn set_journal(&mut self, journal: Arc<Journal>) {
+        self.journal = Some(journal);
     }
 
     pub fn member(&self, m: usize) -> &ClusterCore {
@@ -375,11 +389,23 @@ impl FleetCore {
             core.apply_config_capped(cfg, *lambda, self.timeout_caps[i]);
         }
         self.last_configs = configs.iter().map(|(c, _)| c.clone()).collect();
+        let mut moved = 0u32;
         if let Some(new) = packing {
             if let Some(prev) = &self.last_packing {
-                self.migrations += new.moved_from(prev).len() as u32;
+                moved = new.moved_from(prev).len() as u32;
+                self.migrations += moved;
             }
             self.last_packing = Some(new);
+        }
+        if let Some(j) = &self.journal {
+            j.record(
+                self.last_accrual,
+                "fleet_apply",
+                Json::obj()
+                    .set("configured", next as i64)
+                    .set("budget", self.budget as i64)
+                    .set("moved", moved as i64),
+            );
         }
         self.note();
         Ok(())
@@ -519,6 +545,7 @@ impl FleetCore {
             }
         }
         self.accrue(now);
+        let from = self.budget;
         self.budget = target;
         if let Some(t) = tentative {
             self.inventory = Some(t);
@@ -534,6 +561,16 @@ impl FleetCore {
         self.pool_min = self.pool_min.min(target);
         self.pool_max = self.pool_max.max(target);
         self.resizes += 1;
+        if let Some(j) = &self.journal {
+            j.record(
+                now,
+                "pool_resize",
+                Json::obj()
+                    .set("from", from as i64)
+                    .set("to", target as i64)
+                    .set("mirrored", mirror.is_some()),
+            );
+        }
         Ok(())
     }
 
@@ -560,6 +597,16 @@ impl FleetCore {
         self.pool_min = self.pool_min.min(self.budget);
         self.zone_kills += 1;
         self.last_packing = None;
+        if let Some(j) = &self.journal {
+            j.record(
+                now,
+                "zone_kill",
+                Json::obj()
+                    .set("zone", zone)
+                    .set("drained_nodes", drained as i64)
+                    .set("budget", self.budget as i64),
+            );
+        }
         drained
     }
 
@@ -683,6 +730,8 @@ pub struct FleetReconfig {
     /// when something actually activates.  Kept exact on every mutation
     /// (`stage` min-folds it in, pops and `clear` recompute it).
     next_at: Option<f64>,
+    /// Decision journal attached by the traced drivers (None = silent).
+    journal: Option<Arc<Journal>>,
 }
 
 impl FleetReconfig {
@@ -699,7 +748,15 @@ impl FleetReconfig {
             migration_delay: migration_delay.max(0.0),
             pending: VecDeque::new(),
             next_at: None,
+            journal: None,
         }
+    }
+
+    /// Attach the decision journal: every staged decision vector and
+    /// every activation (including what coalescing discarded) is
+    /// recorded with the driver's virtual time.
+    pub fn set_journal(&mut self, journal: Arc<Journal>) {
+        self.journal = Some(journal);
     }
 
     /// Stage a joint decision at `now`, recording the pool `budget` it
@@ -717,6 +774,17 @@ impl FleetReconfig {
         moves: u32,
     ) -> f64 {
         let at = now + self.apply_delay + self.migration_delay * moves as f64;
+        if let Some(j) = &self.journal {
+            let mut data = Json::obj()
+                .set("at", at)
+                .set("budget", budget as i64)
+                .set("moves", moves as i64)
+                .set("members", decisions.len() as i64);
+            if let Some(s) = shrink_to {
+                data = data.set("shrink_to", s as i64);
+            }
+            j.record(now, "stage", data);
+        }
         self.pending.push_back(StagedFleet { decisions, at, budget, shrink_to });
         self.next_at = Some(match self.next_at {
             Some(x) => x.min(at),
@@ -767,6 +835,16 @@ impl FleetReconfig {
             newest = self.pending.pop_front();
         }
         self.next_at = self.pending.iter().map(|s| s.at).reduce(f64::min);
+        if let (Some(j), Some(s)) = (&self.journal, &newest) {
+            j.record(
+                now,
+                "activate",
+                Json::obj()
+                    .set("due_at", s.at)
+                    .set("budget", s.budget as i64)
+                    .set("coalesced", last_due as i64),
+            );
+        }
         newest
     }
 

@@ -60,6 +60,7 @@
 //! fallback.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::adapter::{AdapterConfig, Decision};
@@ -73,6 +74,8 @@ use crate::optimizer::options::StageOption;
 use crate::predictor::Predictor;
 use crate::profiler::profile::PipelineProfiles;
 use crate::resources::ResourceVec;
+use crate::telemetry::journal::Journal;
+use crate::util::json::Json;
 
 /// Exact single-pipeline solve under a total-replica budget.  `None`
 /// when no SLA-feasible configuration fits `budget` replicas.
@@ -868,6 +871,13 @@ pub trait FleetController {
     /// load histories.
     fn decide(&mut self, now: f64, histories: &[Vec<f64>]) -> Vec<Decision>;
 
+    /// Attach a control-plane decision journal
+    /// ([`crate::telemetry::journal::Journal`]): controllers that
+    /// support it record every solve / resize / preemption / fault
+    /// outcome as a structured, virtual-time-stamped entry.  Default:
+    /// ignore (plain controllers stay silent).
+    fn set_journal(&mut self, _journal: Arc<Journal>) {}
+
     /// Pool-resize proposal for this tick, called by the driver right
     /// BEFORE [`FleetController::decide`] with the same histories.
     /// `Some(p)` means the controller now budgets against a pool of
@@ -1090,6 +1100,12 @@ pub struct FleetAdapter {
     /// feasibility search when the incremental path is skipping the
     /// joint solve anyway.
     last_demand: Option<(Vec<f64>, u32, ResourceVec)>,
+    /// Decision journal attached by the traced drivers (None = silent).
+    journal: Option<Arc<Journal>>,
+    /// Virtual time of the driver call in flight — journal entries are
+    /// stamped with it, never with the wall clock, so two identical
+    /// runs journal byte-identically.
+    journal_now: f64,
 }
 
 impl FleetAdapter {
@@ -1137,6 +1153,8 @@ impl FleetAdapter {
             cache: None,
             pending_lambdas: None,
             last_demand: None,
+            journal: None,
+            journal_now: 0.0,
         })
     }
 
@@ -1225,6 +1243,23 @@ impl FleetAdapter {
     /// every member) — the pool never shrinks below it.
     pub fn stage_floor(&self) -> u32 {
         self.specs.iter().map(|s| s.n_stages() as u32).sum()
+    }
+
+    /// Attach the decision journal: every solve (full and incremental,
+    /// with per-member shares and the rejected next-grant candidates),
+    /// autoscaler resize (with the pressure axis), preemption and zone
+    /// fault is recorded as a structured entry stamped with the
+    /// driver's virtual time.
+    pub fn set_journal(&mut self, journal: Arc<Journal>) {
+        self.journal = Some(journal);
+    }
+
+    /// Record a journal entry at the in-flight driver time (no-op
+    /// without a journal attached).
+    fn jot(&self, kind: &str, data: Json) {
+        if let Some(j) = &self.journal {
+            j.record(self.journal_now, kind, data);
+        }
     }
 
     /// Member `i`'s solver problem at λ, replica options capped by the
@@ -1376,6 +1411,19 @@ impl FleetAdapter {
             }
         }
         self.incremental_solves += 1;
+        if self.journal.is_some() {
+            self.jot(
+                "solve",
+                Json::obj()
+                    .set("mode", "incremental")
+                    .set("budget", cache.budget as i64)
+                    .set("lambdas", cache.lambdas.clone())
+                    .set(
+                        "shares",
+                        cache.shares.iter().map(|&s| s as i64).collect::<Vec<i64>>(),
+                    ),
+            );
+        }
         let decision_time = t0.elapsed().as_secs_f64();
         let ds = cache_decisions(&cache, decision_time);
         self.cache = Some(cache);
@@ -1413,6 +1461,38 @@ impl FleetAdapter {
             budget: self.budget,
             packing: alloc.packing,
         };
+        if self.journal.is_some() {
+            // Rejected candidates: what one more replica would have
+            // bought each member — the marginal grant the greedy
+            // declined.  Pure budget-capped re-solves, run only with a
+            // journal attached; they touch no adapter state.
+            let rejected: Vec<Json> = (0..self.specs.len())
+                .map(|i| {
+                    let p = self.member_problem(i, cache.lambdas[i]);
+                    let opts = self.member_options(&p, i);
+                    let (cfg, solved) =
+                        eval_member_at(&p, &opts, cache.shares[i] + 1, self.member_min(i));
+                    Json::obj()
+                        .set("member", i as i64)
+                        .set("next_share", (cache.shares[i] + 1) as i64)
+                        .set("cost", cfg.cost)
+                        .set("objective", cfg.objective)
+                        .set("solved", solved)
+                })
+                .collect();
+            self.jot(
+                "solve",
+                Json::obj()
+                    .set("mode", "full")
+                    .set("budget", cache.budget as i64)
+                    .set("lambdas", cache.lambdas.clone())
+                    .set(
+                        "shares",
+                        cache.shares.iter().map(|&s| s as i64).collect::<Vec<i64>>(),
+                    )
+                    .set("rejected", rejected),
+            );
+        }
         let ds = cache_decisions(&cache, decision_time);
         self.cache = Some(cache);
         ds
@@ -1510,9 +1590,11 @@ impl FleetAdapter {
             }
             self.inventory = Some(tentative);
             self.budget = node_cap;
+            self.jot("resize", resize_entry(demand, node_cap, pressure));
             Some(node_cap)
         } else if decision.target != self.budget {
             self.budget = decision.target;
+            self.jot("resize", resize_entry(demand, decision.target, pressure));
             Some(decision.target)
         } else {
             None
@@ -1663,6 +1745,23 @@ impl FleetAdapter {
             let budget = cache.budget;
             self.cache = Some(cache);
             let reclaimed = got;
+            self.jot(
+                "preempt",
+                Json::obj()
+                    .set("to", bi as i64)
+                    .set(
+                        "from",
+                        from.iter()
+                            .map(|&(m, k)| {
+                                Json::obj()
+                                    .set("member", m as i64)
+                                    .set("replicas", k as i64)
+                            })
+                            .collect::<Vec<Json>>(),
+                    )
+                    .set("reclaimed", reclaimed as i64)
+                    .set("budget", budget as i64),
+            );
             return Some(FleetPreemption { decisions, to: bi, from, reclaimed, budget });
         }
         None
@@ -1691,8 +1790,25 @@ impl FleetAdapter {
         self.cache = None;
         self.last_demand = None;
         self.pending_lambdas = None;
+        self.jot("fault", Json::obj().set("survivor_budget", self.budget as i64));
         Some(self.decide_for_lambdas(observed))
     }
+}
+
+/// Journal payload for an autoscaler resize: the demand estimate, the
+/// adopted replica target, and the per-axis pressure vector the node
+/// retarget shopped with.  `axis` names the axis that steers node
+/// shape — accel pressure is what makes `retarget_with` buy accel
+/// nodes; everything else buys the CPU shape.
+fn resize_entry(demand: u32, target: u32, pressure: ResourceVec) -> Json {
+    let axis = if pressure.accel_slots > 0.0 { "accel" } else { "cpu" };
+    Json::obj()
+        .set("demand", demand as i64)
+        .set("target", target as i64)
+        .set("axis", axis)
+        .set("pressure_cpu", pressure.cpu_cores)
+        .set("pressure_mem", pressure.memory_gb)
+        .set("pressure_accel", pressure.accel_slots)
 }
 
 /// Decisions straight from the solve cache (shared by the full,
@@ -1714,10 +1830,16 @@ fn cache_decisions(cache: &SolveCache, decision_time: f64) -> Vec<Decision> {
 
 impl FleetController for FleetAdapter {
     fn initial(&mut self, first_rates: &[f64]) -> Vec<Decision> {
+        self.journal_now = 0.0;
         self.decide_for_lambdas(first_rates)
     }
 
+    fn set_journal(&mut self, journal: Arc<Journal>) {
+        FleetAdapter::set_journal(self, journal)
+    }
+
     fn decide(&mut self, now: f64, histories: &[Vec<f64>]) -> Vec<Decision> {
+        self.journal_now = now;
         // resize() may already have predicted this tick's λs.
         let lambdas: Vec<f64> = match self.pending_lambdas.take() {
             Some(l) => l,
@@ -1732,6 +1854,7 @@ impl FleetController for FleetAdapter {
     }
 
     fn resize(&mut self, now: f64, histories: &[Vec<f64>]) -> Option<u32> {
+        self.journal_now = now;
         FleetAdapter::resize(self, now, histories)
     }
 
@@ -1740,6 +1863,7 @@ impl FleetController for FleetAdapter {
     }
 
     fn preempt(&mut self, now: f64, observed: &[f64]) -> Option<FleetPreemption> {
+        self.journal_now = now;
         FleetAdapter::preempt(self, now, observed)
     }
 
@@ -1765,6 +1889,7 @@ impl FleetController for FleetAdapter {
         survivor: NodeInventory,
         observed: &[f64],
     ) -> Option<Vec<Decision>> {
+        self.journal_now = now;
         FleetAdapter::fault(self, now, survivor, observed)
     }
 }

@@ -134,6 +134,25 @@
 //! (`SimConfig::legacy_clock` / `ServeConfig::legacy_lock` switch the
 //! old paths back on for A/B benches).
 //!
+//! ## The telemetry plane
+//!
+//! [`telemetry`] is the flight recorder riding the data plane: sampled
+//! per-request span traces across every stage hop
+//! (arrival → enqueue → queue-wait → batch-form → exec →
+//! forward/done/drop) collected through per-member lock-free span rings
+//! ([`telemetry::Telemetry`], allocation-free when disabled), streaming
+//! log-bucketed histograms with exact moments
+//! ([`telemetry::hist::Histogram`] — mergeable across members, feeding
+//! [`metrics::RunMetrics::latency_histogram`]), and the control-plane
+//! decision journal ([`telemetry::journal::Journal`] — every solve,
+//! resize, preemption, stage/activate, zone kill as a seq-stamped
+//! virtual-time JSON entry; [`telemetry::journal::decisions_from_journal`]
+//! rebuilds a [`simulator::replay`] schedule from it).  Recording is
+//! purely observational: the traced DES reproduces the untraced run
+//! byte for byte, and two traced runs journal byte-identically.
+//! Exposition: [`reports::timeline`] waterfalls and
+//! [`telemetry::export::prometheus_text`].
+//!
 //! Start with [`coordinator::adapter::Adapter`] (the control loop),
 //! [`optimizer::ip::solve`] (the IP), and [`simulator::sim::Simulation`]
 //! (the evaluation substrate), or run `cargo run --release -- help`.
@@ -307,10 +326,14 @@ pub mod serving {
 
 pub mod metrics;
 
+pub mod telemetry;
+
 pub mod reports {
-    //! Regeneration harness for every paper table and figure.
+    //! Regeneration harness for every paper table and figure, plus the
+    //! span-trace waterfall renderer ([`timeline`]).
     pub mod figures;
     pub mod tables;
+    pub mod timeline;
 }
 
 pub mod benchkit;

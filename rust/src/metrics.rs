@@ -3,6 +3,7 @@
 //! average cost, latency CDFs).
 
 use crate::resources::ResourceVec;
+use crate::telemetry::hist::Histogram;
 use crate::util::stats::{self, Summary};
 
 /// Outcome of one request.
@@ -134,6 +135,20 @@ impl RunMetrics {
         Summary::of(&self.latencies())
     }
 
+    /// Completed-request latencies as a streaming [`Histogram`] —
+    /// mergeable across members/shards (the exact Vec-backed
+    /// [`RunMetrics::latency_summary`] is unchanged; this is the O(1)-
+    /// memory view the fleet aggregates).
+    pub fn latency_histogram(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for r in &self.requests {
+            if let Some(l) = r.latency() {
+                h.record(l);
+            }
+        }
+        h
+    }
+
     /// Latency CDF for Fig. 15.
     pub fn latency_cdf(&self, points: usize) -> Vec<(f64, f64)> {
         stats::cdf(&self.latencies(), points)
@@ -224,6 +239,23 @@ mod tests {
         };
         // x->y is a switch; y->"a" (c) is another
         assert_eq!(m.variant_switches(), 2);
+    }
+
+    #[test]
+    fn latency_histogram_matches_exact_summary_moments() {
+        let m = RunMetrics {
+            sla: 1.0,
+            requests: (0..200)
+                .map(|i| req(i, 0.0, if i % 5 == 0 { None } else { Some(0.01 * i as f64) }))
+                .collect(),
+            ..Default::default()
+        };
+        let h = m.latency_histogram().summary();
+        let s = m.latency_summary();
+        assert_eq!(h.n, s.n);
+        assert_eq!(h.min, s.min);
+        assert_eq!(h.max, s.max);
+        assert!((h.mean - s.mean).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Per-trace waterfall rendering: turn a drained span dump into the
+//! "where did this request's 310 ms go?" picture — one row per hop,
+//! offset and scaled against the request's end-to-end window.
+
+use crate::telemetry::{Hop, Span};
+use std::fmt::Write as _;
+
+/// Width of the bar area, characters.
+const BAR_WIDTH: usize = 48;
+
+/// Distinct trace ids present in a span dump, ascending.
+pub fn trace_ids(spans: &[Span]) -> Vec<u64> {
+    let mut ids: Vec<u64> = spans.iter().map(|s| s.trace).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    ids
+}
+
+/// Sum of the timed hops (queue-wait + exec) of one trace — by the DES
+/// recording contract this telescopes exactly to the request's
+/// end-to-end latency.
+pub fn trace_span_sum(spans: &[Span], trace: u64) -> f64 {
+    spans
+        .iter()
+        .filter(|s| s.trace == trace && matches!(s.hop, Hop::QueueWait | Hop::Exec))
+        .map(|s| s.dur)
+        .sum()
+}
+
+/// End-to-end latency a trace recorded on its terminal hop (`Done` or
+/// `Drop`), if it has one.
+pub fn trace_end_to_end(spans: &[Span], trace: u64) -> Option<f64> {
+    spans
+        .iter()
+        .find(|s| s.trace == trace && matches!(s.hop, Hop::Done | Hop::Drop))
+        .map(|s| s.dur)
+}
+
+/// Render one trace as an ASCII waterfall.  Rows are hops in time
+/// order; each bar is positioned within the trace's [start, end]
+/// window.  Empty string when the trace has no spans.
+pub fn waterfall(spans: &[Span], trace: u64) -> String {
+    let mut hops: Vec<&Span> = spans.iter().filter(|s| s.trace == trace).collect();
+    if hops.is_empty() {
+        return String::new();
+    }
+    hops.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap().then(a.hop.cmp(&b.hop)));
+    let start = hops.iter().map(|s| s.t).fold(f64::INFINITY, f64::min);
+    let end = hops.iter().map(|s| s.t + s.dur).fold(f64::NEG_INFINITY, f64::max);
+    let window = (end - start).max(1e-9);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "trace {trace}: {:.3}s end-to-end ({} hops, t={start:.3}..{end:.3})",
+        end - start,
+        hops.len()
+    );
+    for s in hops {
+        let off = (((s.t - start) / window) * BAR_WIDTH as f64) as usize;
+        let len = ((s.dur / window) * BAR_WIDTH as f64).ceil() as usize;
+        let off = off.min(BAR_WIDTH - 1);
+        let len = len.clamp(usize::from(s.dur > 0.0), BAR_WIDTH - off);
+        let bar: String =
+            " ".repeat(off) + &"#".repeat(len) + &" ".repeat(BAR_WIDTH - off - len);
+        let _ = writeln!(
+            out,
+            "  m{:<2} s{:<2} {:<10} |{bar}| {:>9.3}ms",
+            s.member,
+            s.stage,
+            s.hop.name(),
+            s.dur * 1e3
+        );
+    }
+    out
+}
+
+/// Waterfalls for the first `limit` traces of a dump.
+pub fn waterfalls(spans: &[Span], limit: usize) -> String {
+    let mut out = String::new();
+    for id in trace_ids(spans).into_iter().take(limit) {
+        out.push_str(&waterfall(spans, id));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hop(trace: u64, stage: u32, hop: Hop, t: f64, dur: f64) -> Span {
+        Span { trace, member: 0, stage, hop, t, dur, value: 0.0 }
+    }
+
+    #[test]
+    fn waterfall_renders_all_hops_in_window() {
+        let spans = vec![
+            hop(3, 0, Hop::Arrival, 1.0, 0.0),
+            hop(3, 0, Hop::QueueWait, 1.0, 0.2),
+            hop(3, 0, Hop::Exec, 1.2, 0.3),
+            hop(3, 1, Hop::QueueWait, 1.5, 0.1),
+            hop(3, 1, Hop::Exec, 1.6, 0.4),
+            hop(3, 1, Hop::Done, 2.0, 1.0),
+        ];
+        let w = waterfall(&spans, 3);
+        assert!(w.starts_with("trace 3:"));
+        assert_eq!(w.lines().count(), 7);
+        assert!(w.contains("queue_wait"));
+        assert!(w.contains("exec"));
+        // the timed hops telescope to the end-to-end latency
+        assert!((trace_span_sum(&spans, 3) - 1.0).abs() < 1e-12);
+        assert_eq!(trace_end_to_end(&spans, 3), Some(1.0));
+    }
+
+    #[test]
+    fn missing_trace_is_empty() {
+        assert_eq!(waterfall(&[], 9), "");
+        assert_eq!(trace_end_to_end(&[], 9), None);
+    }
+
+    #[test]
+    fn trace_ids_sorted_unique() {
+        let spans = vec![
+            hop(5, 0, Hop::Done, 0.0, 0.1),
+            hop(2, 0, Hop::Done, 0.0, 0.1),
+            hop(5, 0, Hop::Arrival, 0.0, 0.0),
+        ];
+        assert_eq!(trace_ids(&spans), vec![2, 5]);
+    }
+}

@@ -61,6 +61,7 @@ use crate::profiler::fit::ProfileSamples;
 use crate::profiler::profile::{LatencyProfile, PipelineProfiles, StageProfile, VariantProfile};
 use crate::runtime::pool::ExecutorPool;
 use crate::serving::loadgen::{self, LoadGenConfig};
+use crate::telemetry::{Hop, Span, Telemetry};
 use crate::util::error::{Error, Result};
 use crate::workload::trace::Trace;
 
@@ -611,6 +612,9 @@ struct FleetShared {
     /// Snapshot of every member's active config (workers read batch
     /// hints without the fleet lock).
     configs: ConfigCell<Vec<PipelineConfig>>,
+    /// Span recorder (disabled — zero shards, allocation-free — unless
+    /// the caller came through [`serve_fleet_traced`]).
+    tel: Arc<Telemetry>,
     stop: StopGate,
     start: Instant,
 }
@@ -674,6 +678,43 @@ pub fn serve_fleet_with(
     predictors: Vec<Box<dyn Predictor + Send>>,
     tuning: FleetTuning,
 ) -> Result<FleetServeReport> {
+    serve_fleet_traced(
+        specs,
+        profiles,
+        metric,
+        budget,
+        system,
+        cfg,
+        lg,
+        traces,
+        executors,
+        predictors,
+        tuning,
+        Arc::new(Telemetry::off()),
+    )
+}
+
+/// [`serve_fleet_with`] with a telemetry plane attached: sampled
+/// per-request spans flow into `tel`'s lock-free per-member rings
+/// (wall-clock timestamps — the DES twin records virtual time), and the
+/// control-plane decision journal captures every solve, resize,
+/// preemption, stage and activation.  `Telemetry::off()` makes this
+/// byte-identical to the untraced entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_fleet_traced(
+    specs: &[PipelineSpec],
+    profiles: Vec<PipelineProfiles>,
+    metric: AccuracyMetric,
+    budget: u32,
+    system: &str,
+    cfg: &ServeConfig,
+    lg: LoadGenConfig,
+    traces: &[Trace],
+    executors: Vec<Arc<dyn BatchExecutor>>,
+    predictors: Vec<Box<dyn Predictor + Send>>,
+    tuning: FleetTuning,
+    tel: Arc<Telemetry>,
+) -> Result<FleetServeReport> {
     let n = specs.len();
     if profiles.len() != n || traces.len() != n || executors.len() != n || predictors.len() != n {
         return Err(crate::anyhow!(
@@ -726,6 +767,7 @@ pub fn serve_fleet_with(
     )
     .and_then(|a| a.with_tuning(tuning))
     .map_err(Error::from)?;
+    adapter.set_journal(tel.journal());
 
     // Joint initial decision at the traces' first-second (compressed)
     // rates.
@@ -750,8 +792,9 @@ pub fn serve_fleet_with(
             timeout_cap: classes.as_ref().map_or(f64::INFINITY, |c| c[m].timeout_cap(sla)),
         })
         .collect();
-    let fleet = FleetCore::with_nodes_spread(budget, inventory, &fleet_inits, &spread)
+    let mut fleet = FleetCore::with_nodes_spread(budget, inventory, &fleet_inits, &spread)
         .map_err(Error::from)?;
+    fleet.set_journal(tel.journal());
     let n_stages: Vec<usize> = live_specs.iter().map(PipelineSpec::n_stages).collect();
 
     // Warm every member's initial configuration before the clock starts.
@@ -767,6 +810,7 @@ pub fn serve_fleet_with(
         monitors: (0..n).map(|_| Mutex::new(Monitor::new(600))).collect(),
         grid: LaneGrid::new(&n_stages, DEFAULT_LANE_CAPACITY),
         configs: ConfigCell::new(inits.iter().map(|d| d.config.clone()).collect()),
+        tel: Arc::clone(&tel),
         stop: StopGate::default(),
         start: Instant::now(),
     });
@@ -801,6 +845,7 @@ pub fn serve_fleet_with(
         let mut active: Vec<PipelineConfig> = inits.iter().map(|d| d.config.clone()).collect();
         let mut reconfig =
             FleetReconfig::with_migration(adapter.config.apply_delay, migration_delay);
+        reconfig.set_journal(tel.journal());
         // The controller's current pool view; staged shrinks below it
         // are stale (a later tick re-grew the budget) and are skipped.
         let mut ctl_budget = budget;
@@ -986,6 +1031,17 @@ pub fn serve_fleet_with(
     let submitted = loadgen::replay_fleet(traces, lg, |m, id, _t| {
         let t = shared.now();
         shared.monitors[m].lock().unwrap().record_arrival(t);
+        if shared.tel.enabled() && shared.tel.sampled(id) {
+            shared.tel.record(Span {
+                trace: id,
+                member: m as u32,
+                stage: 0,
+                hop: Hop::Arrival,
+                t,
+                dur: 0.0,
+                value: 0.0,
+            });
+        }
         if legacy_lock {
             shared.fleet.lock().unwrap().member_mut(m).ingest(id, t);
         } else if !shared.grid.ingest(m, id, t) {
@@ -1152,9 +1208,62 @@ fn fleet_worker_loop_sharded(
                 }
             }
         };
+        let formed_at = sh.now();
+        if sh.tel.enabled() {
+            for r in &fb.requests {
+                if sh.tel.sampled(r.id) {
+                    let base = Span {
+                        trace: r.id,
+                        member: member as u32,
+                        stage: stage as u32,
+                        hop: Hop::QueueWait,
+                        t: r.stage_arrival,
+                        dur: formed_at - r.stage_arrival,
+                        value: fb.requests.len() as f64,
+                    };
+                    sh.tel.record(base);
+                    sh.tel.record(Span {
+                        hop: Hop::BatchForm,
+                        t: formed_at,
+                        dur: 0.0,
+                        value: fb.batch as f64,
+                        ..base
+                    });
+                }
+            }
+        }
         match exec.execute(&fb.variant_key, fb.batch.max(1)) {
             Ok(()) => {
                 let done = sh.now();
+                if sh.tel.enabled() {
+                    for r in &fb.requests {
+                        if sh.tel.sampled(r.id) {
+                            sh.tel.record(Span {
+                                trace: r.id,
+                                member: member as u32,
+                                stage: stage as u32,
+                                hop: Hop::Exec,
+                                t: formed_at,
+                                dur: done - formed_at,
+                                value: fb.requests.len() as f64,
+                            });
+                            let (hop, dur, value) = if stage + 1 < n_stages {
+                                (Hop::Forward, 0.0, (stage + 1) as f64)
+                            } else {
+                                (Hop::Done, done - r.arrival, 0.0)
+                            };
+                            sh.tel.record(Span {
+                                trace: r.id,
+                                member: member as u32,
+                                stage: stage as u32,
+                                hop,
+                                t: done,
+                                dur,
+                                value,
+                            });
+                        }
+                    }
+                }
                 if stage + 1 < n_stages {
                     let mut survivors = fb.requests;
                     for r in &mut survivors {
@@ -1181,11 +1290,23 @@ fn fleet_worker_loop_sharded(
             }
             Err(e) => {
                 crate::log_warn!("serving", "fleet execute failed: {e:#}");
+                let dropped_at = sh.now();
                 let mut fleet = sh.fleet.lock().unwrap();
                 let core = fleet.member_mut(member);
                 core.finish_service(stage);
                 for r in &fb.requests {
                     core.accounting.record_drop(r.id);
+                    if sh.tel.enabled() && sh.tel.sampled(r.id) {
+                        sh.tel.record(Span {
+                            trace: r.id,
+                            member: member as u32,
+                            stage: stage as u32,
+                            hop: Hop::Drop,
+                            t: dropped_at,
+                            dur: dropped_at - r.arrival,
+                            value: 0.0,
+                        });
+                    }
                 }
                 drop(fleet);
                 sh.cv.notify_all();

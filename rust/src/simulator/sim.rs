@@ -47,6 +47,9 @@ use crate::fleet::solver::FleetController;
 use crate::metrics::RunMetrics;
 use crate::optimizer::ip::PipelineConfig;
 use crate::profiler::profile::PipelineProfiles;
+use crate::telemetry::hist::Histogram;
+use crate::telemetry::{journal, Hop, Span, Telemetry};
+use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
 use crate::workload::trace::Trace;
 use crate::workload::tracegen::member_seed;
@@ -113,6 +116,13 @@ impl Simulation {
     /// Run the full trace, also capturing the decision schedule for
     /// deterministic replay.
     pub fn run_logged(&mut self, trace: &Trace) -> (RunMetrics, DecisionLog) {
+        self.run_traced(trace, &Telemetry::off())
+    }
+
+    /// [`Simulation::run_logged`] with the flight recorder attached:
+    /// sampled requests emit spans and every decision lands in the
+    /// journal as a replayable `decision` entry.
+    pub fn run_traced(&mut self, trace: &Trace, tel: &Telemetry) -> (RunMetrics, DecisionLog) {
         let profiles = self.adapter.profiles.clone();
         let sla = self.adapter.spec.sla_e2e();
         let interval = self.adapter.config.interval;
@@ -120,8 +130,9 @@ impl Simulation {
         let system = self.adapter.policy.name().to_string();
         let sim = self.sim;
         let mut ctl = AdapterController { adapter: &mut self.adapter, log: Vec::new() };
-        let metrics =
-            run_des(&profiles, sla, interval, apply_delay, sim, &mut ctl, trace, &system);
+        let metrics = run_des_traced(
+            &profiles, sla, interval, apply_delay, sim, &mut ctl, trace, &system, tel,
+        );
         (metrics, DecisionLog { decisions: ctl.log })
     }
 }
@@ -163,6 +174,50 @@ pub fn run_des(
     trace: &Trace,
     system: &str,
 ) -> RunMetrics {
+    run_des_traced(
+        profiles,
+        sla,
+        interval,
+        apply_delay,
+        sim,
+        ctl,
+        trace,
+        system,
+        &Telemetry::off(),
+    )
+}
+
+/// Journal one adaptation decision (replayable via
+/// [`journal::decisions_from_journal`]).  `decision_time` is
+/// deliberately NOT journaled: it is a wall-clock reading and would
+/// break byte-for-byte journal reproducibility.
+fn journal_decision(tel: &Telemetry, now: f64, member: u32, d: &Decision) {
+    tel.journal().record(
+        now,
+        "decision",
+        Json::obj()
+            .set("member", member as i64)
+            .set("lambda_predicted", d.lambda_predicted)
+            .set("fallback", d.fallback)
+            .set("config", journal::config_to_json(&d.config)),
+    );
+}
+
+/// [`run_des`] with the flight recorder attached.  Tracing is purely
+/// observational: the event schedule, RNG draws and metrics are
+/// byte-for-byte identical with telemetry on or off.
+#[allow(clippy::too_many_arguments)]
+pub fn run_des_traced(
+    profiles: &PipelineProfiles,
+    sla: f64,
+    interval: f64,
+    apply_delay: f64,
+    sim: SimConfig,
+    ctl: &mut dyn DesController,
+    trace: &Trace,
+    system: &str,
+    tel: &Telemetry,
+) -> RunMetrics {
     let horizon = trace.seconds() as f64;
     let mut rng = SplitMix64::new(sim.seed ^ 0x51A7_E);
     let mut events = EventQueue::new();
@@ -175,6 +230,7 @@ pub fn run_des(
 
     // Initial configuration: decide on the trace's first-second rate.
     let init = ctl.initial(trace.rate_at(0.0));
+    journal_decision(tel, 0.0, 0, &init);
     let mut core = ClusterCore::new(
         &init.config,
         init.lambda_predicted,
@@ -192,22 +248,64 @@ pub fn run_des(
             Event::End => break,
             Event::Arrival { id } => {
                 monitor.record_arrival(now);
+                if tel.enabled() && tel.sampled(id) {
+                    tel.record(Span {
+                        trace: id,
+                        member: 0,
+                        stage: 0,
+                        hop: Hop::Arrival,
+                        t: now,
+                        dur: 0.0,
+                        value: 0.0,
+                    });
+                }
                 core.ingest(id, now);
-                drive(&mut core, profiles, 0, now, &mut rng, sim.service_noise, &mut |t, e| {
+                drive(&mut core, profiles, 0, now, &mut rng, sim.service_noise, tel, 0, &mut |t,
+                      e| {
                     events.push(t, e)
                 });
             }
             Event::QueueCheck { stage } => {
-                drive(&mut core, profiles, stage, now, &mut rng, sim.service_noise, &mut |t, e| {
-                    events.push(t, e)
-                });
+                drive(
+                    &mut core,
+                    profiles,
+                    stage,
+                    now,
+                    &mut rng,
+                    sim.service_noise,
+                    tel,
+                    0,
+                    &mut |t, e| events.push(t, e),
+                );
             }
             Event::ServiceDone { stage, batch } => {
                 core.finish_service(stage);
                 if stage + 1 < n_stages {
                     for req in batch {
                         if core.accounting.is_dropped(req.id) {
+                            if tel.enabled() && tel.sampled(req.id) {
+                                tel.record(Span {
+                                    trace: req.id,
+                                    member: 0,
+                                    stage: stage as u32,
+                                    hop: Hop::Drop,
+                                    t: now,
+                                    dur: now - req.arrival,
+                                    value: 0.0,
+                                });
+                            }
                             continue;
+                        }
+                        if tel.enabled() && tel.sampled(req.id) {
+                            tel.record(Span {
+                                trace: req.id,
+                                member: 0,
+                                stage: stage as u32,
+                                hop: Hop::Forward,
+                                t: now,
+                                dur: 0.0,
+                                value: (stage + 1) as f64,
+                            });
                         }
                         core.forward(stage + 1, req, now);
                     }
@@ -218,21 +316,43 @@ pub fn run_des(
                         now,
                         &mut rng,
                         sim.service_noise,
+                        tel,
+                        0,
                         &mut |t, e| events.push(t, e),
                     );
                 } else {
                     for req in &batch {
+                        if tel.enabled() && tel.sampled(req.id) {
+                            tel.record(Span {
+                                trace: req.id,
+                                member: 0,
+                                stage: stage as u32,
+                                hop: Hop::Done,
+                                t: now,
+                                dur: now - req.arrival,
+                                value: 0.0,
+                            });
+                        }
                         core.complete(req.id, now);
                     }
                 }
                 // freed replica may unblock this stage's queue
-                drive(&mut core, profiles, stage, now, &mut rng, sim.service_noise, &mut |t, e| {
-                    events.push(t, e)
-                });
+                drive(
+                    &mut core,
+                    profiles,
+                    stage,
+                    now,
+                    &mut rng,
+                    sim.service_noise,
+                    tel,
+                    0,
+                    &mut |t, e| events.push(t, e),
+                );
             }
             Event::Adapt => {
                 let history = monitor.history(now, crate::predictor::HISTORY);
                 let decision = ctl.decide(now, &history);
+                journal_decision(tel, now, 0, &decision);
                 let observed = monitor.recent_rate(now, interval as usize);
                 core.accounting.record_interval(now, &active_cfg, observed, &decision);
                 let at = reconfig.stage(now, decision);
@@ -254,6 +374,8 @@ pub fn run_des(
                             now,
                             &mut rng,
                             sim.service_noise,
+                            tel,
+                            0,
                             &mut |t, e| events.push(t, e),
                         );
                     }
@@ -276,6 +398,14 @@ pub fn run_des(
 /// `QueueCheck` wakeup at its timeout.  `push` is the event sink —
 /// the single-pipeline loop pushes [`Event`]s directly, the fleet loop
 /// wraps them with its member index.
+///
+/// Span contract (waterfall exactness): for every sampled request,
+/// queue-wait starts at its `stage_arrival` and ends at batch
+/// formation; exec runs for the (noised) service time; the forward
+/// re-stamps `stage_arrival` to the completion instant — so per stage
+/// `queue_wait + exec` telescopes exactly to the request's end-to-end
+/// latency.
+#[allow(clippy::too_many_arguments)]
 fn drive(
     core: &mut ClusterCore,
     profiles: &PipelineProfiles,
@@ -283,6 +413,8 @@ fn drive(
     now: f64,
     rng: &mut SplitMix64,
     noise: f64,
+    tel: &Telemetry,
+    member: u32,
     push: &mut dyn FnMut(f64, Event),
 ) {
     loop {
@@ -302,6 +434,42 @@ fn drive(
                 if noise > 0.0 {
                     let f = 1.0 + noise * rng.next_normal();
                     service *= f.clamp(0.5, 2.0);
+                }
+                if tel.enabled() {
+                    let formed = fb.requests.len() as f64;
+                    for req in &fb.requests {
+                        if !tel.sampled(req.id) {
+                            continue;
+                        }
+                        let stage = stage as u32;
+                        tel.record(Span {
+                            trace: req.id,
+                            member,
+                            stage,
+                            hop: Hop::QueueWait,
+                            t: req.stage_arrival,
+                            dur: now - req.stage_arrival,
+                            value: formed,
+                        });
+                        tel.record(Span {
+                            trace: req.id,
+                            member,
+                            stage,
+                            hop: Hop::BatchForm,
+                            t: now,
+                            dur: 0.0,
+                            value: fb.batch as f64,
+                        });
+                        tel.record(Span {
+                            trace: req.id,
+                            member,
+                            stage,
+                            hop: Hop::Exec,
+                            t: now,
+                            dur: service,
+                            value: formed,
+                        });
+                    }
                 }
                 push(now + service, Event::ServiceDone { stage, batch: fb.requests });
             }
@@ -378,6 +546,23 @@ impl FleetRunMetrics {
     pub fn total_completed(&self) -> usize {
         self.members.iter().map(|m| m.completed_count()).sum()
     }
+
+    /// Per-member completed-latency histograms (member order matches
+    /// `members`).  Mergeable — fold them for a fleet-wide view; the
+    /// exact Vec-backed summaries stay untouched.
+    pub fn latency_histograms(&self) -> Vec<Histogram> {
+        self.members.iter().map(RunMetrics::latency_histogram).collect()
+    }
+
+    /// Fleet-wide completed-latency histogram (bucket-wise merge of the
+    /// per-member histograms).
+    pub fn merged_latency_histogram(&self) -> Histogram {
+        let mut all = Histogram::new();
+        for h in self.latency_histograms() {
+            all.merge(&h);
+        }
+        all
+    }
 }
 
 /// The fleet discrete-event loop: the single-pipeline [`run_des`]
@@ -436,6 +621,61 @@ pub fn run_fleet_des_faults(
     budget: u32,
     faults: &[ZoneFault],
 ) -> FleetRunMetrics {
+    run_fleet_des_faults_traced(
+        profiles,
+        slas,
+        interval,
+        apply_delay,
+        sim,
+        ctl,
+        traces,
+        system,
+        budget,
+        faults,
+        &Telemetry::off(),
+    )
+}
+
+/// [`run_fleet_des`] with the flight recorder attached (no faults).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_des_traced(
+    profiles: &[PipelineProfiles],
+    slas: &[f64],
+    interval: f64,
+    apply_delay: f64,
+    sim: SimConfig,
+    ctl: &mut dyn FleetController,
+    traces: &[Trace],
+    system: &str,
+    budget: u32,
+    tel: &Telemetry,
+) -> FleetRunMetrics {
+    run_fleet_des_faults_traced(
+        profiles, slas, interval, apply_delay, sim, ctl, traces, system, budget, &[], tel,
+    )
+}
+
+/// [`run_fleet_des_faults`] with the flight recorder attached: sampled
+/// requests emit member-tagged spans, and the controller, fleet core
+/// and staged reconfig all write the shared decision journal.  Tracing
+/// is purely observational — the event schedule, RNG draws and metrics
+/// are byte-for-byte identical with telemetry on or off, and two traced
+/// runs produce byte-identical journals.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_des_faults_traced(
+    profiles: &[PipelineProfiles],
+    slas: &[f64],
+    interval: f64,
+    apply_delay: f64,
+    sim: SimConfig,
+    ctl: &mut dyn FleetController,
+    traces: &[Trace],
+    system: &str,
+    budget: u32,
+    faults: &[ZoneFault],
+    tel: &Telemetry,
+) -> FleetRunMetrics {
+    ctl.set_journal(tel.journal());
     let n = traces.len();
     assert_eq!(profiles.len(), n, "one profile set per member");
     assert_eq!(slas.len(), n, "one SLA per member");
@@ -475,6 +715,9 @@ pub fn run_fleet_des_faults(
     let first_rates: Vec<f64> = traces.iter().map(|t| t.rate_at(0.0)).collect();
     let inits = ctl.initial(&first_rates);
     assert_eq!(inits.len(), n, "fleet controller must decide per member");
+    for (m, d) in inits.iter().enumerate() {
+        journal_decision(tel, 0.0, m as u32, d);
+    }
     let fleet_inits: Vec<MemberInit> = inits
         .iter()
         .zip(slas)
@@ -491,7 +734,9 @@ pub fn run_fleet_des_faults(
         .collect();
     let mut fleet = FleetCore::with_nodes_spread(budget, inventory, &fleet_inits, &spread)
         .expect("fleet controller must respect the replica budget");
+    fleet.set_journal(tel.journal());
     let mut reconfig = FleetReconfig::with_migration(apply_delay, ctl.migration_delay());
+    reconfig.set_journal(tel.journal());
     let mut active: Vec<PipelineConfig> = inits.iter().map(|d| d.config.clone()).collect();
     let n_stages: Vec<usize> = profiles.iter().map(|p| p.stages.len()).collect();
     // The controller's current pool view.  The physical pool may lag
@@ -519,12 +764,25 @@ pub fn run_fleet_des_faults(
             FleetEv::Member { member, ev } => match ev {
                 Event::Arrival { id } => {
                     monitors[member].record_arrival(now);
+                    if tel.enabled() && tel.sampled(id) {
+                        tel.record(Span {
+                            trace: id,
+                            member: member as u32,
+                            stage: 0,
+                            hop: Hop::Arrival,
+                            t: now,
+                            dur: 0.0,
+                            value: 0.0,
+                        });
+                    }
                     fleet.member_mut(member).ingest(id, now);
-                    drive_member(&mut fleet, profiles, member, 0, now, &mut events, &mut rng, sim);
+                    drive_member(
+                        &mut fleet, profiles, member, 0, now, &mut events, &mut rng, sim, tel,
+                    );
                 }
                 Event::QueueCheck { stage } => {
                     drive_member(
-                        &mut fleet, profiles, member, stage, now, &mut events, &mut rng, sim,
+                        &mut fleet, profiles, member, stage, now, &mut events, &mut rng, sim, tel,
                     );
                 }
                 Event::ServiceDone { stage, batch } => {
@@ -535,12 +793,45 @@ pub fn run_fleet_des_faults(
                         if has_next {
                             for req in batch {
                                 if core.accounting.is_dropped(req.id) {
+                                    if tel.enabled() && tel.sampled(req.id) {
+                                        tel.record(Span {
+                                            trace: req.id,
+                                            member: member as u32,
+                                            stage: stage as u32,
+                                            hop: Hop::Drop,
+                                            t: now,
+                                            dur: now - req.arrival,
+                                            value: 0.0,
+                                        });
+                                    }
                                     continue;
+                                }
+                                if tel.enabled() && tel.sampled(req.id) {
+                                    tel.record(Span {
+                                        trace: req.id,
+                                        member: member as u32,
+                                        stage: stage as u32,
+                                        hop: Hop::Forward,
+                                        t: now,
+                                        dur: 0.0,
+                                        value: (stage + 1) as f64,
+                                    });
                                 }
                                 core.forward(stage + 1, req, now);
                             }
                         } else {
                             for req in &batch {
+                                if tel.enabled() && tel.sampled(req.id) {
+                                    tel.record(Span {
+                                        trace: req.id,
+                                        member: member as u32,
+                                        stage: stage as u32,
+                                        hop: Hop::Done,
+                                        t: now,
+                                        dur: now - req.arrival,
+                                        value: 0.0,
+                                    });
+                                }
                                 core.complete(req.id, now);
                             }
                         }
@@ -555,11 +846,12 @@ pub fn run_fleet_des_faults(
                             &mut events,
                             &mut rng,
                             sim,
+                            tel,
                         );
                     }
                     // freed replica may unblock this stage's queue
                     drive_member(
-                        &mut fleet, profiles, member, stage, now, &mut events, &mut rng, sim,
+                        &mut fleet, profiles, member, stage, now, &mut events, &mut rng, sim, tel,
                     );
                 }
                 Event::Adapt | Event::ApplyConfig | Event::End => {
@@ -600,6 +892,9 @@ pub fn run_fleet_des_faults(
                 }
                 let decisions = ctl.decide(now, &histories);
                 assert_eq!(decisions.len(), n, "fleet controller must decide per member");
+                for (m, d) in decisions.iter().enumerate() {
+                    journal_decision(tel, now, m as u32, d);
+                }
                 for m in 0..n {
                     let observed = monitors[m].recent_rate(now, interval as usize);
                     fleet
@@ -656,6 +951,7 @@ pub fn run_fleet_des_faults(
                         for si in 0..n_stages[m] {
                             drive_member(
                                 &mut fleet, profiles, m, si, now, &mut events, &mut rng, sim,
+                                tel,
                             );
                         }
                     }
@@ -703,6 +999,7 @@ pub fn run_fleet_des_faults(
                         for si in 0..n_stages[m] {
                             drive_member(
                                 &mut fleet, profiles, m, si, now, &mut events, &mut rng, sim,
+                                tel,
                             );
                         }
                     }
@@ -747,7 +1044,7 @@ pub fn run_fleet_des_faults(
                                 for si in 0..n_stages[m] {
                                     drive_member(
                                         &mut fleet, profiles, m, si, now, &mut events,
-                                        &mut rng, sim,
+                                        &mut rng, sim, tel,
                                     );
                                 }
                             }
@@ -800,6 +1097,7 @@ fn drive_member(
     events: &mut ShardedClock<FleetEv>,
     rng: &mut SplitMix64,
     sim: SimConfig,
+    tel: &Telemetry,
 ) {
     let mut formed = false;
     drive(
@@ -809,6 +1107,8 @@ fn drive_member(
         now,
         rng,
         sim.service_noise,
+        tel,
+        member as u32,
         &mut |t, e| {
             formed |= matches!(e, Event::ServiceDone { .. });
             // dynamic events land on the member wheel's heap lane

@@ -1,0 +1,108 @@
+//! Exposition formats: a Prometheus text-format snapshot of a span dump
+//! plus journal counters.  Pure functions over drained data — nothing
+//! here touches the hot path.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::hist::{bucket_upper_edge, Histogram};
+use super::journal::Journal;
+use super::{stage_histograms, Hop, Span};
+
+/// Emit every 8th bucket edge (16 cumulative buckets + `+Inf`) — enough
+/// resolution for dashboards without drowning the exposition.
+const EDGE_STRIDE: usize = 8;
+
+fn write_histogram(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    let counts = h.bucket_counts();
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if (i + 1) % EDGE_STRIDE == 0 {
+            let le = bucket_upper_edge(i);
+            let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{le:e}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.sum());
+    let _ = writeln!(out, "{name}_count{{{labels}}} {}", h.count());
+}
+
+/// Render a drained span set + journal as Prometheus text format:
+/// per-hop span counters, per-kind journal counters, and per
+/// member×stage queue-wait / exec / batch histograms.
+pub fn prometheus_text(spans: &[Span], journal: &Journal) -> String {
+    let mut out = String::new();
+
+    let _ = writeln!(out, "# TYPE ipa_spans_total counter");
+    let mut by_hop: BTreeMap<&'static str, u64> = BTreeMap::new();
+    for s in spans {
+        *by_hop.entry(s.hop.name()).or_insert(0) += 1;
+    }
+    for h in Hop::ALL {
+        let n = by_hop.get(h.name()).copied().unwrap_or(0);
+        let _ = writeln!(out, "ipa_spans_total{{hop=\"{}\"}} {n}", h.name());
+    }
+
+    let _ = writeln!(out, "# TYPE ipa_journal_entries_total counter");
+    let mut by_kind: BTreeMap<String, u64> = BTreeMap::new();
+    for e in journal.entries() {
+        *by_kind.entry(e.kind).or_insert(0) += 1;
+    }
+    for (kind, n) in &by_kind {
+        let _ = writeln!(out, "ipa_journal_entries_total{{kind=\"{kind}\"}} {n}");
+    }
+
+    let _ = writeln!(out, "# TYPE ipa_stage_queue_wait_seconds histogram");
+    let _ = writeln!(out, "# TYPE ipa_stage_exec_seconds histogram");
+    let _ = writeln!(out, "# TYPE ipa_stage_batch_size histogram");
+    for series in stage_histograms(spans) {
+        let labels = format!("member=\"{}\",stage=\"{}\"", series.member, series.stage);
+        write_histogram(&mut out, "ipa_stage_queue_wait_seconds", &labels, &series.queue_wait);
+        write_histogram(&mut out, "ipa_stage_exec_seconds", &labels, &series.exec);
+        write_histogram(&mut out, "ipa_stage_batch_size", &labels, &series.batch);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn snapshot_contains_counters_and_histograms() {
+        let span = |hop, t, dur, value| Span { trace: 0, member: 0, stage: 0, hop, t, dur, value };
+        let spans = vec![
+            span(Hop::QueueWait, 0.0, 0.1, 1.0),
+            span(Hop::Exec, 0.1, 0.2, 4.0),
+            span(Hop::Done, 0.3, 0.3, 0.0),
+        ];
+        let j = Journal::new();
+        j.record(1.0, "solve", Json::obj());
+        j.record(2.0, "solve", Json::obj());
+        let text = prometheus_text(&spans, &j);
+        assert!(text.contains("ipa_spans_total{hop=\"done\"} 1"));
+        assert!(text.contains("ipa_spans_total{hop=\"drop\"} 0"));
+        assert!(text.contains("ipa_journal_entries_total{kind=\"solve\"} 2"));
+        assert!(text.contains("ipa_stage_exec_seconds_count{member=\"0\",stage=\"0\"} 1"));
+        assert!(text.contains("le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn deterministic_output() {
+        let spans = vec![Span {
+            trace: 5,
+            member: 1,
+            stage: 0,
+            hop: Hop::Exec,
+            t: 0.0,
+            dur: 0.05,
+            value: 2.0,
+        }];
+        let j = Journal::new();
+        let a = prometheus_text(&spans, &j);
+        let b = prometheus_text(&spans, &j);
+        assert_eq!(a, b);
+    }
+}

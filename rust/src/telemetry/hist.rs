@@ -1,0 +1,322 @@
+//! Streaming log-bucketed histograms (HDR-style, fixed 128 buckets).
+//!
+//! Replaces Vec-accumulation for high-volume series (latency,
+//! queue-depth, batch-size, utilization): O(1) record, O(1) memory,
+//! mergeable across shards/members by bucket-wise addition.  Exact
+//! moments (count/sum/sum-of-squares/min/max) ride alongside the
+//! buckets, so `mean`, `min`, `max` and `std` are exact; quantiles are
+//! approximate to within one bucket (~±10% relative — the geometric
+//! bucket midpoint of a 12.8-buckets-per-decade grid).
+
+use crate::util::stats::Summary;
+
+/// Number of log buckets.
+pub const BUCKETS: usize = 128;
+/// Lower edge of bucket 0 — smaller values clamp into bucket 0.
+const MIN_VALUE: f64 = 1e-6;
+/// Decades covered: [1e-6, 1e4) — microseconds to hours when the unit
+/// is seconds; also comfortably spans batch sizes and queue depths.
+const DECADES: f64 = 10.0;
+/// Buckets per decade (12.8 → ~20% relative bucket width).
+const PER_DECADE: f64 = BUCKETS as f64 / DECADES;
+
+/// Bucket index for a (non-negative, finite) value.
+fn bucket_of(v: f64) -> usize {
+    if v <= MIN_VALUE {
+        return 0;
+    }
+    (((v / MIN_VALUE).log10() * PER_DECADE) as usize).min(BUCKETS - 1)
+}
+
+/// Lower edge of bucket `i`.
+pub fn bucket_lower_edge(i: usize) -> f64 {
+    MIN_VALUE * 10f64.powf(i as f64 / PER_DECADE)
+}
+
+/// Upper edge of bucket `i` (== lower edge of `i + 1`).
+pub fn bucket_upper_edge(i: usize) -> f64 {
+    bucket_lower_edge(i + 1)
+}
+
+/// Geometric midpoint of bucket `i` — the quantile representative.
+fn bucket_mid(i: usize) -> f64 {
+    MIN_VALUE * 10f64.powf((i as f64 + 0.5) / PER_DECADE)
+}
+
+/// A mergeable streaming histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one observation.  Non-finite values are ignored; negatives
+    /// clamp to 0 (bucket 0).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let v = v.max(0.0);
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.sumsq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a whole slice.
+    pub fn record_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.record(x);
+        }
+    }
+
+    /// Build from a slice.
+    pub fn of(xs: &[f64]) -> Histogram {
+        let mut h = Histogram::new();
+        h.record_all(xs);
+        h
+    }
+
+    /// Bucket-wise merge: the result is identical to having recorded
+    /// both sample streams into one histogram (up to float summation
+    /// order in the exact moments).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of recorded values.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Raw bucket counts (for exposition formats).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Approximate percentile, `p` in [0, 100] — nearest-rank over the
+    /// buckets, returning the geometric bucket midpoint clamped to the
+    /// exact observed [min, max].
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (p.clamp(0.0, 100.0) / 100.0) * (self.count - 1) as f64;
+        let target = rank.round() as u64 + 1; // 1-indexed rank to reach
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Summary-stats bundle shaped like [`Summary::of`]: `n`, `mean`,
+    /// `std`, `min`, `max` are exact; percentiles are bucket-resolution
+    /// approximations.
+    pub fn summary(&self) -> Summary {
+        if self.count == 0 {
+            return Summary::of(&[]);
+        }
+        let n = self.count as f64;
+        let mean = self.sum / n;
+        let std = if self.count < 2 {
+            0.0
+        } else {
+            (self.sumsq / n - mean * mean).max(0.0).sqrt()
+        };
+        Summary {
+            n: self.count as usize,
+            mean,
+            std,
+            min: self.min,
+            p50: self.quantile(50.0),
+            p95: self.quantile(95.0),
+            p99: self.quantile(99.0),
+            max: self.max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, prop_assert, prop_close};
+    use crate::util::stats::Summary;
+
+    /// Worst-case multiplicative error of a bucket-midpoint estimate vs
+    /// a sample in a neighbouring bucket (edge rounding): 1.5 buckets.
+    const BUCKET_ERR: f64 = 1.35;
+
+    #[test]
+    fn empty_summary_is_zeroed() {
+        let h = Histogram::new();
+        assert_eq!(h.summary(), Summary::of(&[]));
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.count(), 0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn exact_moments_match_summary_of() {
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.001).collect();
+        let h = Histogram::of(&xs);
+        let s = h.summary();
+        let r = Summary::of(&xs);
+        assert_eq!(s.n, r.n);
+        assert_eq!(s.min, r.min);
+        assert_eq!(s.max, r.max);
+        assert!((s.mean - r.mean).abs() < 1e-9, "{} vs {}", s.mean, r.mean);
+        assert!((s.std - r.std).abs() < 1e-6, "{} vs {}", s.std, r.std);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_resolution_on_dense_data() {
+        let xs: Vec<f64> = (1..=5000).map(|i| i as f64 * 0.0007).collect();
+        let h = Histogram::of(&xs);
+        let s = h.summary();
+        let r = Summary::of(&xs);
+        for (a, b, name) in [(s.p50, r.p50, "p50"), (s.p95, r.p95, "p95"), (s.p99, r.p99, "p99")] {
+            assert!(a <= b * BUCKET_ERR && a >= b / BUCKET_ERR, "{name}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn non_finite_ignored_negative_clamped() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert!(h.is_empty());
+        h.record(-1.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 0.0);
+    }
+
+    #[test]
+    fn single_value() {
+        let h = Histogram::of(&[0.31]);
+        let s = h.summary();
+        assert_eq!(s.n, 1);
+        assert_eq!(s.min, 0.31);
+        assert_eq!(s.max, 0.31);
+        assert_eq!(s.std, 0.0);
+        // clamped to [min, max] the quantile is exact for one sample
+        assert_eq!(s.p50, 0.31);
+    }
+
+    #[test]
+    fn merge_is_concatenation() {
+        // hist(a) ⊎ hist(b) must equal hist(a ++ b): identical buckets,
+        // identical exact moments (same summation order here), and the
+        // merged summary within bucket error of the concatenated-sample
+        // Summary::of reference.
+        check("hist merge == concat", 150, |g| {
+            let a = g.vec_f64(1e-4, 1e3, 128);
+            let b = g.vec_f64(1e-4, 1e3, 128);
+            let mut ha = Histogram::of(&a);
+            let hb = Histogram::of(&b);
+            ha.merge(&hb);
+            let mut all = a.clone();
+            all.extend_from_slice(&b);
+            let hc = Histogram::of(&all);
+            prop_assert(ha.bucket_counts() == hc.bucket_counts(), "bucket mismatch")?;
+            prop_assert(ha.count() == hc.count(), "count mismatch")?;
+            prop_close(ha.sum(), hc.sum(), 1e-9 * hc.sum().abs().max(1.0), "sum mismatch")?;
+            let s = ha.summary();
+            let r = Summary::of(&all);
+            prop_assert(s.n == r.n, "n mismatch")?;
+            prop_close(s.min, r.min, 0.0, "min mismatch")?;
+            prop_close(s.max, r.max, 0.0, "max mismatch")?;
+            prop_close(s.mean, r.mean, 1e-9 * r.mean.abs().max(1.0), "mean mismatch")?;
+            // nearest-rank order statistics bound the bucketed quantiles
+            let mut sorted = all.clone();
+            sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            for (q, got) in [(50.0, s.p50), (95.0, s.p95), (99.0, s.p99)] {
+                let rank = (q / 100.0) * (sorted.len() - 1) as f64;
+                let x = sorted[rank.round() as usize];
+                prop_assert(
+                    got <= x * BUCKET_ERR && got >= x / BUCKET_ERR,
+                    &format!("p{q} {got} not within bucket error of rank stat {x}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn edges_are_monotone() {
+        for i in 0..BUCKETS {
+            assert!(bucket_lower_edge(i) < bucket_upper_edge(i));
+            let mid = super::bucket_mid(i);
+            assert!(bucket_lower_edge(i) < mid && mid < bucket_upper_edge(i));
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Control-plane decision journal: a structured, seq-stamped event log.
+//!
+//! Every control-plane actor (solver adapter, autoscaler, preemption
+//! fast path, fleet core, staged reconfig, both clocks) records *why*
+//! the fleet changed — solver decisions with per-member shares and the
+//! rejected next-share costs, pool resizes with the pressure axis,
+//! preemptions, migrations, zone kills, reconfig stage/activate — as
+//! [`JournalEntry`] rows.  The journal serializes to JSONL via
+//! [`crate::util::json`] and parses back; `decision` entries replay
+//! against [`crate::simulator::replay`] to reproduce the exact fleet
+//! configs of the recorded run.
+//!
+//! Determinism contract: entries carry the *virtual* clock (`t`) and a
+//! per-journal sequence counter — never wall-clock readings — so two
+//! identical seeded runs produce byte-identical JSONL (`Json::Obj` is a
+//! `BTreeMap`, so key order is stable too).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::adapter::Decision;
+use crate::optimizer::ip::{PipelineConfig, StageConfig};
+use crate::resources::ResourceVec;
+use crate::util::json::Json;
+
+/// One journal row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalEntry {
+    /// Per-journal sequence number (total order over all actors).
+    pub seq: u64,
+    /// Virtual time of the event, seconds.
+    pub t: f64,
+    /// Event kind, e.g. `solve`, `resize`, `preempt`, `stage`.
+    pub kind: String,
+    /// Kind-specific payload.
+    pub data: Json,
+}
+
+impl JournalEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("seq", self.seq as i64)
+            .set("t", self.t)
+            .set("kind", self.kind.as_str())
+            .set("data", self.data.clone())
+    }
+
+    pub fn from_json(j: &Json) -> Result<JournalEntry, String> {
+        Ok(JournalEntry {
+            seq: get_f64(j, "seq")? as u64,
+            t: get_f64(j, "t")?,
+            kind: get_str(j, "kind")?,
+            data: j.get("data").cloned().ok_or("journal entry missing 'data'")?,
+        })
+    }
+}
+
+/// Thread-safe, seq-stamped event log shared across control-plane
+/// actors via `Arc<Journal>`.
+pub struct Journal {
+    seq: AtomicU64,
+    entries: Mutex<Vec<JournalEntry>>,
+}
+
+impl fmt::Debug for Journal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Journal({} entries)", self.len())
+    }
+}
+
+impl Default for Journal {
+    fn default() -> Self {
+        Journal::new()
+    }
+}
+
+impl Journal {
+    pub fn new() -> Journal {
+        Journal { seq: AtomicU64::new(0), entries: Mutex::new(Vec::new()) }
+    }
+
+    /// Append an event at virtual time `t`; returns its seq stamp.  The
+    /// stamp is also published to [`crate::util::log`] so interleaved
+    /// log lines can be ordered against the journal.
+    pub fn record(&self, t: f64, kind: &str, data: Json) -> u64 {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        crate::util::log::note_journal_seq(seq + 1);
+        self.entries
+            .lock()
+            .unwrap()
+            .push(JournalEntry { seq, t, kind: kind.to_string(), data });
+        seq
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of all entries (in seq order as recorded).
+    pub fn entries(&self) -> Vec<JournalEntry> {
+        self.entries.lock().unwrap().clone()
+    }
+
+    /// Serialize to JSONL (one entry per line, trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in self.entries.lock().unwrap().iter() {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a JSONL dump back into a journal (blank lines skipped).
+    pub fn parse_jsonl(s: &str) -> Result<Journal, String> {
+        let j = Journal::new();
+        let mut max_seq = 0u64;
+        {
+            let mut entries = j.entries.lock().unwrap();
+            for (ln, line) in s.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let v = Json::parse(line).map_err(|e| format!("line {}: {e}", ln + 1))?;
+                let e = JournalEntry::from_json(&v).map_err(|e| format!("line {}: {e}", ln + 1))?;
+                max_seq = max_seq.max(e.seq + 1);
+                entries.push(e);
+            }
+        }
+        j.seq.store(max_seq, Ordering::Relaxed);
+        Ok(j)
+    }
+}
+
+// ---- config <-> json -------------------------------------------------------
+
+fn get_f64(j: &Json, k: &str) -> Result<f64, String> {
+    j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing number field '{k}'"))
+}
+
+fn get_str(j: &Json, k: &str) -> Result<String, String> {
+    j.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string field '{k}'"))
+}
+
+fn get_bool(j: &Json, k: &str) -> Result<bool, String> {
+    j.get(k).and_then(Json::as_bool).ok_or_else(|| format!("missing bool field '{k}'"))
+}
+
+fn resources_to_json(r: ResourceVec) -> Json {
+    Json::obj()
+        .set("cpu_cores", r.cpu_cores)
+        .set("memory_gb", r.memory_gb)
+        .set("accel_slots", r.accel_slots)
+}
+
+fn resources_from_json(j: &Json) -> Result<ResourceVec, String> {
+    Ok(ResourceVec {
+        cpu_cores: get_f64(j, "cpu_cores")?,
+        memory_gb: get_f64(j, "memory_gb")?,
+        accel_slots: get_f64(j, "accel_slots")?,
+    })
+}
+
+fn stage_to_json(s: &StageConfig) -> Json {
+    Json::obj()
+        .set("variant_idx", s.variant_idx)
+        .set("variant_key", s.variant_key.as_str())
+        .set("batch", s.batch)
+        .set("replicas", s.replicas as i64)
+        .set("cost", s.cost)
+        .set("accuracy", s.accuracy)
+        .set("latency", s.latency)
+        .set("resources", resources_to_json(s.resources))
+}
+
+fn stage_from_json(j: &Json) -> Result<StageConfig, String> {
+    Ok(StageConfig {
+        variant_idx: get_f64(j, "variant_idx")? as usize,
+        variant_key: get_str(j, "variant_key")?,
+        batch: get_f64(j, "batch")? as usize,
+        replicas: get_f64(j, "replicas")? as u32,
+        cost: get_f64(j, "cost")?,
+        accuracy: get_f64(j, "accuracy")?,
+        latency: get_f64(j, "latency")?,
+        resources: resources_from_json(
+            j.get("resources").ok_or("stage missing 'resources'")?,
+        )?,
+    })
+}
+
+/// Serialize a [`PipelineConfig`] losslessly (floats round-trip through
+/// the shortest-representation printer exactly).
+pub fn config_to_json(c: &PipelineConfig) -> Json {
+    let stages: Vec<Json> = c.stages.iter().map(stage_to_json).collect();
+    Json::obj()
+        .set("stages", stages)
+        .set("pas", c.pas)
+        .set("cost", c.cost)
+        .set("batch_sum", c.batch_sum)
+        .set("objective", c.objective)
+        .set("latency_e2e", c.latency_e2e)
+        .set("resources", resources_to_json(c.resources))
+}
+
+pub fn config_from_json(j: &Json) -> Result<PipelineConfig, String> {
+    let stages = j
+        .get("stages")
+        .and_then(Json::as_arr)
+        .ok_or("config missing 'stages'")?
+        .iter()
+        .map(stage_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(PipelineConfig {
+        stages,
+        pas: get_f64(j, "pas")?,
+        cost: get_f64(j, "cost")?,
+        batch_sum: get_f64(j, "batch_sum")? as usize,
+        objective: get_f64(j, "objective")?,
+        latency_e2e: get_f64(j, "latency_e2e")?,
+        resources: resources_from_json(j.get("resources").ok_or("config missing 'resources'")?)?,
+    })
+}
+
+/// Extract the adaptation decisions recorded as `decision` entries —
+/// optionally restricted to one fleet member — in journal order, ready
+/// to replay via [`crate::simulator::replay`].  `decision_time` is not
+/// journaled (it is a wall-clock reading and would break byte-for-byte
+/// reproducibility), so it comes back as 0.
+pub fn decisions_from_journal(
+    journal: &Journal,
+    member: Option<u32>,
+) -> Result<Vec<Decision>, String> {
+    let mut out = Vec::new();
+    for e in journal.entries() {
+        if e.kind != "decision" {
+            continue;
+        }
+        if let Some(m) = member {
+            let em = get_f64(&e.data, "member")? as u32;
+            if em != m {
+                continue;
+            }
+        }
+        out.push(Decision {
+            config: config_from_json(
+                e.data.get("config").ok_or("decision entry missing 'config'")?,
+            )?,
+            lambda_predicted: get_f64(&e.data, "lambda_predicted")?,
+            decision_time: 0.0,
+            fallback: get_bool(&e.data, "fallback")?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_roundtrip() {
+        let j = Journal::new();
+        j.record(1.0, "solve", Json::obj().set("members", 3i64));
+        j.record(2.5, "resize", Json::obj().set("target", 12i64).set("axis", 0i64));
+        let text = j.to_jsonl();
+        let back = Journal::parse_jsonl(&text).unwrap();
+        assert_eq!(back.entries(), j.entries());
+        assert_eq!(back.to_jsonl(), text);
+    }
+
+    #[test]
+    fn seq_is_monotone_and_resumes_after_parse() {
+        let j = Journal::new();
+        assert_eq!(j.record(0.0, "a", Json::Null), 0);
+        assert_eq!(j.record(0.0, "b", Json::Null), 1);
+        let back = Journal::parse_jsonl(&j.to_jsonl()).unwrap();
+        assert_eq!(back.record(1.0, "c", Json::Null), 2);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Journal::parse_jsonl("{nope").is_err());
+        assert!(Journal::parse_jsonl("{\"seq\":0}").is_err());
+    }
+
+    #[test]
+    fn resources_roundtrip() {
+        let r = ResourceVec { cpu_cores: 1.5, memory_gb: 4.25, accel_slots: 0.0 };
+        let j = resources_to_json(r);
+        assert_eq!(resources_from_json(&j).unwrap(), r);
+    }
+}

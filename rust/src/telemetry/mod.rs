@@ -1,0 +1,440 @@
+//! Flight recorder: the lock-free telemetry plane.
+//!
+//! Three coordinated pieces (ISSUE 7):
+//!
+//! * **Span tracing** ([`Span`], [`Telemetry`]) — sampled requests carry
+//!   a trace id and emit one span per stage hop
+//!   (arrival → enqueue → queue-wait → batch-form → exec →
+//!   forward/done/drop) into per-member lock-free ring buffers
+//!   (the [`crate::data_plane::ring`] pattern), drained by
+//!   [`Telemetry::take_spans`] and serialized to JSONL.
+//! * **Streaming histograms** ([`hist::Histogram`]) — mergeable
+//!   log-bucketed series for latency / queue depth / batch size /
+//!   utilization, aggregated per member×stage by [`stage_histograms`].
+//! * **Decision journal** ([`journal::Journal`]) — seq-stamped
+//!   control-plane event log written by the fleet adapter, core,
+//!   reconfig and both clocks; replayable via
+//!   [`journal::decisions_from_journal`].
+//!
+//! Determinism: sampling is `trace_id % sample_one_in == 0` (no RNG),
+//! spans/journal carry only virtual-clock times, and all recording is
+//! observational — a traced DES run is byte-for-byte identical to an
+//! untraced one, and two traced runs produce byte-identical JSONL.
+//! When `sample_one_in == 0` the plane is fully off: no rings are
+//! allocated and the hot path is a branch on an empty Vec.
+
+pub mod export;
+pub mod hist;
+pub mod journal;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data_plane::ring::MpscRing;
+use crate::util::json::Json;
+use hist::Histogram;
+use journal::Journal;
+
+/// Telemetry knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Trace one request in `sample_one_in` (deterministic: request id
+    /// modulo).  `0` disables span tracing entirely (no buffers);
+    /// `1` traces everything.
+    pub sample_one_in: u64,
+    /// Capacity of each per-member span ring (rounded up to a power of
+    /// two).  On overflow the recorder drains the ring into the sink
+    /// under a `try_lock`, or counts a drop if the sink is contended.
+    pub span_buffer: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { sample_one_in: 64, span_buffer: 65_536 }
+    }
+}
+
+impl TelemetryConfig {
+    /// Tracing fully disabled (the zero-cost default for legacy entry
+    /// points).
+    pub fn off() -> TelemetryConfig {
+        TelemetryConfig { sample_one_in: 0, span_buffer: 0 }
+    }
+
+    /// Trace every request (tests, waterfalls).
+    pub fn full() -> TelemetryConfig {
+        TelemetryConfig { sample_one_in: 1, ..Default::default() }
+    }
+}
+
+/// A stage-hop label on the request's path through the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Hop {
+    /// Request entered the system (span `t` = arrival time).
+    Arrival,
+    /// Enqueued onto a stage's ingress ring.
+    Enqueue,
+    /// Waited in a stage queue (`dur` = wait, `value` = queue depth).
+    QueueWait,
+    /// Batch formation (`value` = batch size).
+    BatchForm,
+    /// Stage execution (`dur` = service time, `value` = batch size).
+    Exec,
+    /// Forwarded to the next stage.
+    Forward,
+    /// Completed the last stage (`dur` = end-to-end latency).
+    Done,
+    /// Dropped (shed, timeout, or failure).
+    Drop,
+}
+
+impl Hop {
+    pub const ALL: [Hop; 8] = [
+        Hop::Arrival,
+        Hop::Enqueue,
+        Hop::QueueWait,
+        Hop::BatchForm,
+        Hop::Exec,
+        Hop::Forward,
+        Hop::Done,
+        Hop::Drop,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Hop::Arrival => "arrival",
+            Hop::Enqueue => "enqueue",
+            Hop::QueueWait => "queue_wait",
+            Hop::BatchForm => "batch_form",
+            Hop::Exec => "exec",
+            Hop::Forward => "forward",
+            Hop::Done => "done",
+            Hop::Drop => "drop",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Hop> {
+        Hop::ALL.into_iter().find(|h| h.name() == s)
+    }
+}
+
+/// One recorded hop of one traced request.  `Copy` so the ring moves it
+/// without allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    /// Trace id (== request id; stable across stages and members).
+    pub trace: u64,
+    /// Fleet member (0 for single-pipeline runs).
+    pub member: u32,
+    /// Stage index within the pipeline.
+    pub stage: u32,
+    pub hop: Hop,
+    /// Virtual start time of the hop, seconds.
+    pub t: f64,
+    /// Duration of the hop, seconds (0 for instantaneous marks).
+    pub dur: f64,
+    /// Hop-specific magnitude (queue depth, batch size, …).
+    pub value: f64,
+}
+
+impl Span {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("trace", self.trace as i64)
+            .set("member", self.member as i64)
+            .set("stage", self.stage as i64)
+            .set("hop", self.hop.name())
+            .set("t", self.t)
+            .set("dur", self.dur)
+            .set("value", self.value)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Span, String> {
+        let num = |k: &str| -> Result<f64, String> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("span missing '{k}'"))
+        };
+        let hop_name =
+            j.get("hop").and_then(Json::as_str).ok_or("span missing 'hop'")?;
+        Ok(Span {
+            trace: num("trace")? as u64,
+            member: num("member")? as u32,
+            stage: num("stage")? as u32,
+            hop: Hop::from_name(hop_name).ok_or_else(|| format!("unknown hop '{hop_name}'"))?,
+            t: num("t")?,
+            dur: num("dur")?,
+            value: num("value")?,
+        })
+    }
+}
+
+/// Serialize spans to JSONL (one span per line).
+pub fn spans_to_jsonl(spans: &[Span]) -> String {
+    let mut out = String::new();
+    for s in spans {
+        out.push_str(&s.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a span JSONL dump (blank lines skipped).
+pub fn spans_from_jsonl(s: &str) -> Result<Vec<Span>, String> {
+    let mut out = Vec::new();
+    for (ln, line) in s.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", ln + 1))?;
+        out.push(Span::from_json(&v).map_err(|e| format!("line {}: {e}", ln + 1))?);
+    }
+    Ok(out)
+}
+
+/// The telemetry plane handle: per-member lock-free span rings, an
+/// overflow sink, and the shared decision journal.  Cheap to share by
+/// reference across workers; all methods take `&self`.
+pub struct Telemetry {
+    cfg: TelemetryConfig,
+    /// One span ring per member (empty when tracing is off).
+    shards: Vec<MpscRing<Span>>,
+    /// Overflow + drain target: rings spill here when full.
+    sink: Mutex<Vec<Span>>,
+    /// Spans lost because a full ring met a contended sink.
+    dropped: AtomicU64,
+    journal: Arc<Journal>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Telemetry(shards={}, cfg={:?})", self.shards.len(), self.cfg)
+    }
+}
+
+impl Telemetry {
+    /// A plane with `members` span shards.
+    pub fn new(cfg: TelemetryConfig, members: usize) -> Telemetry {
+        let n = if cfg.sample_one_in == 0 { 0 } else { members.max(1) };
+        Telemetry {
+            cfg,
+            shards: (0..n).map(|_| MpscRing::with_capacity(cfg.span_buffer.max(16))).collect(),
+            sink: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+            journal: Arc::new(Journal::new()),
+        }
+    }
+
+    /// Tracing disabled; the journal still works (control-plane events
+    /// are rare and never on the hot path).
+    pub fn off() -> Telemetry {
+        Telemetry::new(TelemetryConfig::off(), 0)
+    }
+
+    pub fn config(&self) -> TelemetryConfig {
+        self.cfg
+    }
+
+    /// Whether span tracing is on at all.
+    pub fn enabled(&self) -> bool {
+        !self.shards.is_empty()
+    }
+
+    /// Deterministic sampling decision for a request/trace id.
+    #[inline]
+    pub fn sampled(&self, id: u64) -> bool {
+        match self.cfg.sample_one_in {
+            0 => false,
+            1 => true,
+            k => id % k == 0,
+        }
+    }
+
+    /// Shared journal handle for control-plane actors.
+    pub fn journal(&self) -> Arc<Journal> {
+        Arc::clone(&self.journal)
+    }
+
+    /// Record a span (no-op when tracing is off).  Lock-free in the
+    /// common case; a full ring is drained into the sink under a
+    /// non-blocking `try_lock`, and only a *contended* overflow drops.
+    pub fn record(&self, span: Span) {
+        if self.shards.is_empty() {
+            return;
+        }
+        let ring = &self.shards[span.member as usize % self.shards.len()];
+        if let Err(span) = ring.try_push(span) {
+            match self.sink.try_lock() {
+                Ok(mut sink) => {
+                    while let Some(s) = ring.pop() {
+                        sink.push(s);
+                    }
+                    sink.push(span);
+                }
+                Err(_) => {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Drain every shard (and the overflow sink) into one Vec.  Spans
+    /// appear sink-first then shard-by-shard in ring order — stable for
+    /// a deterministic producer like the DES.
+    pub fn take_spans(&self) -> Vec<Span> {
+        let mut sink = self.sink.lock().unwrap();
+        for ring in &self.shards {
+            while let Some(s) = ring.pop() {
+                sink.push(s);
+            }
+        }
+        std::mem::take(&mut *sink)
+    }
+
+    /// Spans lost to contended overflow (0 in any deterministic run).
+    pub fn dropped_spans(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-member×stage histogram bundle aggregated from a span dump.
+#[derive(Debug, Clone, Default)]
+pub struct StageSeries {
+    pub member: u32,
+    pub stage: u32,
+    /// Queue-wait durations, seconds.
+    pub queue_wait: Histogram,
+    /// Execution (service) durations, seconds.
+    pub exec: Histogram,
+    /// Batch sizes at execution.
+    pub batch: Histogram,
+    /// Queue depth observed at each queue-wait hop.
+    pub depth: Histogram,
+}
+
+/// Fold spans into per-(member, stage) streaming histograms, sorted by
+/// (member, stage).
+pub fn stage_histograms(spans: &[Span]) -> Vec<StageSeries> {
+    let mut map: BTreeMap<(u32, u32), StageSeries> = BTreeMap::new();
+    for s in spans {
+        let e = map.entry((s.member, s.stage)).or_insert_with(|| StageSeries {
+            member: s.member,
+            stage: s.stage,
+            ..Default::default()
+        });
+        match s.hop {
+            Hop::QueueWait => {
+                e.queue_wait.record(s.dur);
+                e.depth.record(s.value);
+            }
+            Hop::Exec => {
+                e.exec.record(s.dur);
+                e.batch.record(s.value);
+            }
+            _ => {}
+        }
+    }
+    map.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64, member: u32, hop: Hop, t: f64, dur: f64) -> Span {
+        Span { trace, member, stage: 0, hop, t, dur, value: 1.0 }
+    }
+
+    #[test]
+    fn off_plane_records_nothing() {
+        let tel = Telemetry::off();
+        assert!(!tel.enabled());
+        assert!(!tel.sampled(0));
+        tel.record(span(0, 0, Hop::Arrival, 0.0, 0.0));
+        assert!(tel.take_spans().is_empty());
+        assert_eq!(tel.dropped_spans(), 0);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_modulo() {
+        let tel = Telemetry::new(TelemetryConfig { sample_one_in: 4, span_buffer: 64 }, 1);
+        let picks: Vec<bool> = (0u64..8).map(|i| tel.sampled(i)).collect();
+        assert_eq!(picks, vec![true, false, false, false, true, false, false, false]);
+        let full = Telemetry::new(TelemetryConfig::full(), 1);
+        assert!((0u64..10).all(|i| full.sampled(i)));
+    }
+
+    #[test]
+    fn record_and_drain_across_shards() {
+        let tel = Telemetry::new(TelemetryConfig::full(), 3);
+        for m in 0..3u32 {
+            for i in 0..5u64 {
+                tel.record(span(i, m, Hop::Done, i as f64, 0.1));
+            }
+        }
+        let spans = tel.take_spans();
+        assert_eq!(spans.len(), 15);
+        assert!(tel.take_spans().is_empty());
+    }
+
+    #[test]
+    fn overflow_drains_into_sink_without_loss() {
+        let tel = Telemetry::new(TelemetryConfig { sample_one_in: 1, span_buffer: 4 }, 1);
+        for i in 0..100u64 {
+            tel.record(span(i, 0, Hop::Exec, i as f64, 0.01));
+        }
+        assert_eq!(tel.dropped_spans(), 0);
+        let spans = tel.take_spans();
+        assert_eq!(spans.len(), 100);
+    }
+
+    #[test]
+    fn spans_jsonl_roundtrip() {
+        let spans = vec![
+            Span {
+                trace: 7,
+                member: 1,
+                stage: 2,
+                hop: Hop::QueueWait,
+                t: 1.5,
+                dur: 0.25,
+                value: 3.0,
+            },
+            Span { trace: 8, member: 0, stage: 0, hop: Hop::Done, t: 2.0, dur: 0.5, value: 0.0 },
+        ];
+        let text = spans_to_jsonl(&spans);
+        assert_eq!(spans_from_jsonl(&text).unwrap(), spans);
+    }
+
+    #[test]
+    fn hop_names_roundtrip() {
+        for h in Hop::ALL {
+            assert_eq!(Hop::from_name(h.name()), Some(h));
+        }
+        assert_eq!(Hop::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn stage_histograms_fold() {
+        let spans = vec![
+            Span {
+                trace: 1,
+                member: 0,
+                stage: 0,
+                hop: Hop::QueueWait,
+                t: 0.0,
+                dur: 0.1,
+                value: 2.0,
+            },
+            Span { trace: 1, member: 0, stage: 0, hop: Hop::Exec, t: 0.1, dur: 0.3, value: 4.0 },
+            Span { trace: 2, member: 1, stage: 1, hop: Hop::Exec, t: 0.2, dur: 0.2, value: 8.0 },
+        ];
+        let series = stage_histograms(&spans);
+        assert_eq!(series.len(), 2);
+        assert_eq!((series[0].member, series[0].stage), (0, 0));
+        assert_eq!(series[0].queue_wait.count(), 1);
+        assert_eq!(series[0].exec.count(), 1);
+        assert_eq!(series[0].batch.max(), 4.0);
+        assert_eq!((series[1].member, series[1].stage), (1, 1));
+        assert_eq!(series[1].batch.max(), 8.0);
+    }
+}

@@ -1,7 +1,11 @@
 //! Leveled stderr logging, controlled by the `IPA_LOG` env var
-//! (`error|warn|info|debug|trace`, default `info`).
+//! (`error|warn|info|debug|trace`, default `info`).  Unknown values
+//! fall back to `info` with a one-time warning.  Each line carries the
+//! last decision-journal sequence stamp (see
+//! [`crate::telemetry::journal::Journal`]) so logs and journal entries
+//! interleave consistently.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::time::{SystemTime, UNIX_EPOCH};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -15,14 +19,42 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+static BAD_LEVEL_WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Last decision-journal sequence stamp, published by
+/// `telemetry::journal::Journal::record` and printed (read-only) on
+/// every log line: a line tagged `#n` happened after journal entry
+/// `n - 1` and before entry `n`.  Logging never advances the counter,
+/// so emitting logs cannot perturb journal determinism.
+static JOURNAL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Publish the journal's next sequence number (journal-side only).
+pub fn note_journal_seq(seq: u64) {
+    JOURNAL_SEQ.store(seq, Ordering::Relaxed);
+}
+
+/// The journal seq the next log line will be stamped with.
+pub fn journal_seq() -> u64 {
+    JOURNAL_SEQ.load(Ordering::Relaxed)
+}
 
 fn init_level() -> u8 {
     let lvl = match std::env::var("IPA_LOG").as_deref() {
         Ok("error") => Level::Error,
         Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
         Ok("debug") => Level::Debug,
         Ok("trace") => Level::Trace,
-        _ => Level::Info,
+        Ok(other) => {
+            if !BAD_LEVEL_WARNED.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "[WARN  ipa::log] unknown IPA_LOG value {other:?}; accepted: \
+                     error|warn|info|debug|trace (falling back to info)"
+                );
+            }
+            Level::Info
+        }
+        Err(_) => Level::Info,
     } as u8;
     LEVEL.store(lvl, Ordering::Relaxed);
     lvl
@@ -66,7 +98,10 @@ pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
         Level::Debug => "DEBUG",
         Level::Trace => "TRACE",
     };
-    eprintln!("[{t:.3} {tag} {target}] {msg}");
+    // `#n`: this line follows decision-journal entry n-1 (0 = before
+    // any journal entry) — lets operators interleave logs and journal.
+    let seq = journal_seq();
+    eprintln!("[{t:.3} #{seq} {tag} {target}] {msg}");
 }
 
 #[macro_export]
@@ -107,6 +142,13 @@ mod tests {
         assert!(Level::Warn < Level::Info);
         assert!(Level::Info < Level::Debug);
         assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn journal_seq_roundtrip() {
+        note_journal_seq(41);
+        assert_eq!(journal_seq(), 41);
+        note_journal_seq(0);
     }
 
     #[test]

@@ -18,17 +18,18 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Percentile (linear interpolation), `p` in [0,100].
+/// Percentile (linear interpolation), `p` in [0,100].  Non-finite
+/// samples (NaN/±inf) are ignored rather than poisoning the sort.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     percentile_sorted(&v, p)
 }
 
-/// Percentile over an already-sorted slice.
+/// Percentile over an already-sorted slice of finite values.
 pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
     if v.is_empty() {
         return 0.0;
@@ -74,10 +75,21 @@ pub struct Summary {
 
 impl Summary {
     pub fn of(xs: &[f64]) -> Summary {
-        if xs.is_empty() {
-            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
+        // Non-finite samples are dropped (they would poison the sort
+        // and every moment).
+        let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        if v.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
         }
-        let mut v = xs.to_vec();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Summary {
             n: v.len(),
@@ -278,5 +290,47 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 4.0);
         assert!((s.p50 - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // empty
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+        // single element: every percentile is that element
+        assert_eq!(percentile(&[7.5], 0.0), 7.5);
+        assert_eq!(percentile(&[7.5], 50.0), 7.5);
+        assert_eq!(percentile(&[7.5], 100.0), 7.5);
+        assert_eq!(percentile_sorted(&[7.5], 99.0), 7.5);
+    }
+
+    #[test]
+    fn percentile_ignores_non_finite() {
+        // NaN/inf samples are dropped, not propagated
+        assert_eq!(percentile(&[f64::NAN], 50.0), 0.0);
+        assert_eq!(percentile(&[1.0, f64::NAN, 3.0], 50.0), 2.0);
+        assert_eq!(percentile(&[f64::INFINITY, 2.0, f64::NEG_INFINITY], 50.0), 2.0);
+    }
+
+    #[test]
+    fn summary_of_edge_cases() {
+        let empty = Summary::of(&[]);
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.mean, 0.0);
+        assert_eq!(empty.min, 0.0);
+        assert_eq!(empty.max, 0.0);
+        // single element
+        let one = Summary::of(&[3.0]);
+        assert_eq!(one.n, 1);
+        assert_eq!(one.std, 0.0);
+        assert_eq!(one.p99, 3.0);
+        // NaN-containing input reduces to the finite subset
+        let s = Summary::of(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        // all-NaN behaves like empty
+        assert_eq!(Summary::of(&[f64::NAN, f64::NAN]).n, 0);
     }
 }

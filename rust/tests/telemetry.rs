@@ -1,0 +1,243 @@
+//! Flight-recorder regression suite: span waterfalls telescope exactly
+//! to end-to-end latency, streaming histogram summaries match the exact
+//! Vec-based reference within bucket resolution, the decision journal
+//! round-trips through JSONL byte-for-byte and replays to the identical
+//! run, traced fleet runs emit byte-identical journals across reruns,
+//! and tracing never perturbs the DES (traced == untraced == legacy
+//! clock, per-request).
+
+use ipa::coordinator::adapter::{Adapter, AdapterConfig, Policy};
+use ipa::fleet::solver::FleetAdapter;
+use ipa::metrics::RunMetrics;
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::models::pipelines;
+use ipa::predictor::{Predictor, ReactivePredictor};
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::profiler::profile::PipelineProfiles;
+use ipa::reports::timeline::{trace_end_to_end, trace_ids, trace_span_sum, waterfalls};
+use ipa::simulator::replay::replay;
+use ipa::simulator::sim::{
+    run_fleet_des_traced, DecisionLog, FleetRunMetrics, SimConfig, Simulation,
+};
+use ipa::telemetry::journal::{decisions_from_journal, Journal};
+use ipa::telemetry::{spans_to_jsonl, stage_histograms, Hop, Span, Telemetry, TelemetryConfig};
+use ipa::util::stats::Summary;
+use ipa::workload::trace::Trace;
+use ipa::workload::tracegen::Pattern;
+
+/// Worst-case multiplicative error of a bucket-midpoint quantile vs a
+/// nearest-rank order statistic (the hist.rs resolution bound).
+const BUCKET_ERR: f64 = 1.35;
+
+/// One fully-traced single-pipeline DES run (video, every request
+/// sampled): metrics + decision log + the span dump + the journal.
+fn traced_video_run(seed: u64) -> (RunMetrics, DecisionLog, Vec<Span>, std::sync::Arc<Journal>) {
+    let spec = pipelines::by_name("video").unwrap();
+    let prof = pipeline_profiles(&spec);
+    let adapter = Adapter::new(
+        spec,
+        prof,
+        Policy::Ipa(AccuracyMetric::Pas),
+        AdapterConfig::default(),
+        Box::new(ReactivePredictor::default()),
+    );
+    let mut sim = Simulation::new(adapter, SimConfig { seed, ..Default::default() });
+    let trace = Trace::synthetic(Pattern::Fluctuating, 150);
+    let tel = Telemetry::new(TelemetryConfig::full(), 1);
+    let (metrics, log) = sim.run_traced(&trace, &tel);
+    let spans = tel.take_spans();
+    (metrics, log, spans, tel.journal())
+}
+
+// ---------------------------------------------------------------------------
+// Span tracing: the telescoping contract
+// ---------------------------------------------------------------------------
+
+/// For every completed trace, the timed hops (queue-wait + exec) sum
+/// EXACTLY to the end-to-end latency the `Done` span carries — the
+/// waterfall never invents or loses time.
+#[test]
+fn span_waterfalls_telescope_to_end_to_end_latency() {
+    let (_, _, spans, _) = traced_video_run(13);
+    assert!(!spans.is_empty(), "full sampling must record spans");
+    let mut checked = 0usize;
+    for id in trace_ids(&spans) {
+        let Some(done) = spans.iter().find(|s| s.trace == id && s.hop == Hop::Done) else {
+            continue;
+        };
+        let sum = trace_span_sum(&spans, id);
+        assert!(
+            (sum - done.dur).abs() < 1e-9,
+            "trace {id}: hops sum to {sum} but end-to-end is {}",
+            done.dur
+        );
+        assert_eq!(trace_end_to_end(&spans, id), Some(done.dur));
+        checked += 1;
+    }
+    assert!(checked > 50, "thin run ({checked} completed traces) proves nothing");
+    assert!(!waterfalls(&spans, 2).is_empty(), "waterfall rendering must not be blank");
+}
+
+// ---------------------------------------------------------------------------
+// Streaming histograms vs the exact reference
+// ---------------------------------------------------------------------------
+
+/// The per-stage exec histogram folded from the span dump matches the
+/// exact `Summary::of` over the same durations: moments exactly,
+/// quantiles within bucket resolution of the nearest-rank statistic.
+#[test]
+fn stage_histogram_summary_matches_exact_reference() {
+    let (_, _, spans, _) = traced_video_run(13);
+    let series = stage_histograms(&spans);
+    assert!(!series.is_empty());
+    let first = &series[0];
+    assert_eq!((first.member, first.stage), (0, 0));
+    let durs: Vec<f64> = spans
+        .iter()
+        .filter(|s| s.member == 0 && s.stage == 0 && s.hop == Hop::Exec)
+        .map(|s| s.dur)
+        .collect();
+    assert!(durs.len() > 100, "thin series ({})", durs.len());
+    let s = first.exec.summary();
+    let r = Summary::of(&durs);
+    assert_eq!(s.n, r.n);
+    assert_eq!(s.min, r.min);
+    assert_eq!(s.max, r.max);
+    assert!((s.mean - r.mean).abs() < 1e-9 * r.mean.abs().max(1.0));
+    let mut sorted = durs.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (q, got) in [(50.0, s.p50), (95.0, s.p95), (99.0, s.p99)] {
+        let rank = (q / 100.0) * (sorted.len() - 1) as f64;
+        let x = sorted[rank.round() as usize];
+        assert!(
+            got <= x * BUCKET_ERR && got >= x / BUCKET_ERR,
+            "p{q}: {got} not within bucket error of rank stat {x}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decision journal: JSONL round-trip + replay parity
+// ---------------------------------------------------------------------------
+
+/// The journal serializes to JSONL, parses back, and re-serializes to
+/// the identical bytes; the decisions it carries drive `replay` to the
+/// exact per-request outcomes of the original adaptive run.
+#[test]
+fn journal_roundtrips_and_replays_to_identical_run() {
+    let seed = 13u64;
+    let (original, logged, _, journal) = traced_video_run(seed);
+    let text = journal.to_jsonl();
+    assert!(!text.is_empty(), "a traced run must journal its decisions");
+    let parsed = Journal::parse_jsonl(&text).unwrap();
+    assert_eq!(parsed.to_jsonl(), text, "JSONL round-trip must be byte-stable");
+
+    let decisions = decisions_from_journal(&journal, Some(0)).unwrap();
+    assert_eq!(
+        decisions.len(),
+        logged.decisions.len(),
+        "journal must carry every decision the driver logged"
+    );
+    let spec = pipelines::by_name("video").unwrap();
+    let prof = pipeline_profiles(&spec);
+    let cfg = AdapterConfig::default();
+    let trace = Trace::synthetic(Pattern::Fluctuating, 150);
+    let replayed = replay(
+        &prof,
+        spec.sla_e2e(),
+        cfg.interval,
+        cfg.apply_delay,
+        SimConfig { seed, ..Default::default() },
+        &DecisionLog { decisions },
+        &trace,
+        "replay-journal",
+    );
+    assert_eq!(original.requests, replayed.requests, "journal replay diverged");
+}
+
+// ---------------------------------------------------------------------------
+// Fleet: byte-identical reruns, and tracing never perturbs the DES
+// ---------------------------------------------------------------------------
+
+/// 8-member fleet (demo3 cycled) through the traced fleet DES.
+fn fleet8_run(legacy_clock: bool, tel: &Telemetry) -> FleetRunMetrics {
+    const BUDGET: u32 = 64;
+    let fleet = ipa::fleet::spec::FleetSpec::demo3();
+    let base_specs = fleet.specs().unwrap();
+    let base_profs: Vec<PipelineProfiles> = base_specs.iter().map(pipeline_profiles).collect();
+    let base_slas: Vec<f64> = base_specs.iter().map(|s| s.sla_e2e()).collect();
+    let base_traces: Vec<Trace> = fleet.traces(90);
+    let n = 8usize;
+    let specs: Vec<_> = (0..n).map(|i| base_specs[i % 3].clone()).collect();
+    let profs: Vec<PipelineProfiles> = (0..n).map(|i| base_profs[i % 3].clone()).collect();
+    let slas: Vec<f64> = (0..n).map(|i| base_slas[i % 3]).collect();
+    let traces: Vec<Trace> = (0..n).map(|i| base_traces[i % 3].clone()).collect();
+    let predictors: Vec<Box<dyn Predictor + Send>> = specs
+        .iter()
+        .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+        .collect();
+    let mut adapter = FleetAdapter::new(
+        specs,
+        profs.clone(),
+        AccuracyMetric::Pas,
+        BUDGET,
+        AdapterConfig { interval: 30.0, apply_delay: 8.0, max_replicas: 4 },
+        predictors,
+    )
+    .unwrap();
+    run_fleet_des_traced(
+        &profs,
+        &slas,
+        30.0,
+        8.0,
+        SimConfig { seed: 23, legacy_clock, ..Default::default() },
+        &mut adapter,
+        &traces,
+        "telemetry-parity",
+        BUDGET,
+        tel,
+    )
+}
+
+/// Two identical traced fleet runs emit byte-identical span dumps AND
+/// byte-identical journals (the CI determinism contract), and the
+/// journal speaks the expected event vocabulary.
+#[test]
+fn traced_fleet_reruns_emit_byte_identical_journals_and_spans() {
+    let tel_a = Telemetry::new(TelemetryConfig::full(), 8);
+    let tel_b = Telemetry::new(TelemetryConfig::full(), 8);
+    let _ = fleet8_run(false, &tel_a);
+    let _ = fleet8_run(false, &tel_b);
+    assert_eq!(tel_a.dropped_spans(), 0, "deterministic runs never drop spans");
+
+    let journal_a = tel_a.journal().to_jsonl();
+    assert!(!journal_a.is_empty());
+    assert_eq!(journal_a, tel_b.journal().to_jsonl(), "journal not byte-stable");
+    let kinds: std::collections::BTreeSet<String> =
+        tel_a.journal().entries().into_iter().map(|e| e.kind).collect();
+    assert!(kinds.contains("decision"), "kinds: {kinds:?}");
+    assert!(kinds.contains("solve"), "kinds: {kinds:?}");
+
+    let spans_a = spans_to_jsonl(&tel_a.take_spans());
+    assert!(!spans_a.is_empty());
+    assert_eq!(spans_a, spans_to_jsonl(&tel_b.take_spans()), "spans not byte-stable");
+}
+
+/// Tracing is purely observational: a fully-traced sharded run, an
+/// untraced sharded run, and a fully-traced LEGACY-clock run all land
+/// the exact same per-request outcomes (PR 6's clock parity, now with
+/// the recorder on).
+#[test]
+fn traced_fleet_des_matches_untraced_and_legacy_clock() {
+    let traced = fleet8_run(false, &Telemetry::new(TelemetryConfig::full(), 8));
+    let untraced = fleet8_run(false, &Telemetry::off());
+    let legacy = fleet8_run(true, &Telemetry::new(TelemetryConfig::full(), 8));
+    let total: usize = traced.members.iter().map(|m| m.requests.len()).sum();
+    assert!(total > 300, "thin run ({total} requests) proves nothing");
+    for (m, tm) in traced.members.iter().enumerate() {
+        assert_eq!(tm.requests, untraced.members[m].requests, "member {m}: tracing perturbed");
+        assert_eq!(tm.requests, legacy.members[m].requests, "member {m}: clock parity broke");
+    }
+    assert_eq!(traced.final_replicas, untraced.final_replicas);
+    assert_eq!(traced.final_replicas, legacy.final_replicas);
+}

@@ -5,8 +5,8 @@
 //! Time sections (`solver`, `fleet_solver`, `fleet_autoscaler`,
 //! `fleet_binpack`, `fleet_topology`) regress when `mean_s` grows past
 //! `baseline × (1 + threshold)`; throughput sections (`simulator`,
-//! `fleet_sim`, `data_plane`) regress when `items_per_s` falls below
-//! `baseline × (1 − threshold)`.  Rows or sections absent from the
+//! `fleet_sim`, `data_plane`, `telemetry`) regress when `items_per_s`
+//! falls below `baseline × (1 − threshold)`.  Rows or sections absent from the
 //! baseline are reported as new and never fail; a missing baseline
 //! FILE passes outright (the first run seeds the cache).
 //!
@@ -20,7 +20,7 @@ use ipa::util::json::Json;
 const TIME_SECTIONS: &[&str] =
     &["solver", "fleet_solver", "fleet_autoscaler", "fleet_binpack", "fleet_topology"];
 /// Sections judged on `items_per_s` (higher=better).
-const THROUGHPUT_SECTIONS: &[&str] = &["simulator", "fleet_sim", "data_plane"];
+const THROUGHPUT_SECTIONS: &[&str] = &["simulator", "fleet_sim", "data_plane", "telemetry"];
 
 struct Row {
     name: String,
