@@ -49,8 +49,14 @@
 //! `--metrics-text out.prom` (or `-` for stdout) the Prometheus-style
 //! exposition.  `--skip-live 1` stops after the DES clock.
 //!
+//! Scale runs: `--members 50` swaps in the deterministic synthetic
+//! 50-member fleet on a heterogeneous pool scaled by `--nodes-scale K`
+//! (a 50×-scaled mix ≈ a 500-node pool) — the harness behind the
+//! `fleet_scale` bench grid, runnable standalone.
+//!
 //! Run: `cargo run --release --example fleet_serve
 //!       [-- --seconds 240 --budget 24 --time-scale 0.05 --fleet spec.json
+//!           --members 50 --nodes-scale 5
 //!           --cost-target 30 --static 0
 //!           --nodes "2x(8c,32g,0a)@east+2x(8c,32g,0a)@west"
 //!           --class nlp-batchline=throughput
@@ -104,6 +110,9 @@ fn main() {
     let skip_live = args.get_usize("skip-live", 0) != 0;
     let traced = trace_out.is_some() || journal_out.is_some() || metrics_text.is_some();
 
+    // --members N swaps the demo fleet for the deterministic synthetic
+    // scale fleet (ignored when --fleet names an explicit spec file).
+    let members_n = args.get_usize("members", 0);
     let mut fleet = match args.get("fleet") {
         Some(path) => {
             let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
@@ -115,9 +124,19 @@ fn main() {
                 std::process::exit(2);
             })
         }
+        None if members_n > 0 => FleetSpec::synthetic(members_n),
         None => FleetSpec::demo3(),
     };
     fleet.replica_budget = args.get_usize("budget", fleet.replica_budget as usize) as u32;
+    // A synthetic fleet defaults onto a heterogeneous pool scaled K×
+    // from a small base mix (--nodes-scale; defaults to one 10-node
+    // base block per 10 members so the pool always covers the fleet's
+    // stage floor); an explicit --nodes below still wins.
+    if members_n > 0 && args.get("nodes").is_none() {
+        let k = args.get_usize("nodes-scale", members_n.div_ceil(10)).max(1) as u32;
+        let base = NodeInventory::parse("8x(8c,32g,0a)+2x(16c,64g,1a)").expect("static base pool");
+        fleet.nodes = Some(base.scaled(k));
+    }
     // --nodes overrides the spec's inventory (if any): counted shapes
     // replicas bin-pack onto instead of the fungible slot pool.
     if let Some(spec) = args.get("nodes") {

@@ -570,6 +570,104 @@ fn main() {
     print_section("telemetry (flight recorder overhead)", &rows);
     let telemetry_rows = rows.clone();
 
+    // Solver scaling wall: synthetic-fleet solve+pack wall time across
+    // the member×node grid, new default control plane (parallel
+    // per-member solves + hierarchical cells + delta packing) A/B'd
+    // in-run against the pre-PR flat sequential path.  Each episode is
+    // one full joint decision plus three incremental ticks that perturb
+    // ~10% of the fleet's λ by 25% (past the 15% re-solve threshold, so
+    // the ticks exercise the incremental re-solve and the delta
+    // repack).  The 100×1000 speedup is asserted against
+    // IPA_FLEET_SCALE_GATE — default 0.75×cores clamped to [1.5, 5],
+    // so the ≥5x target gates on ≥7-core machines and scales down to
+    // what parallelism can physically deliver on small CI runners.
+    use ipa::fleet::cells::set_cell_threshold;
+    use ipa::fleet::nodes::{reset_delta_pack, set_delta_pack};
+    use ipa::fleet::solver::set_solver_threads;
+
+    let sb = Bencher::new(1, 3);
+    let grid: [(usize, &str); 3] = [
+        (10, "40x(8c,32g,0a)+10x(16c,64g,1a)"),
+        (50, "200x(8c,32g,0a)+50x(16c,64g,1a)"),
+        (100, "800x(8c,32g,0a)+200x(16c,64g,1a)"),
+    ];
+    let mut rows = Vec::new();
+    let mut scale_speedup_100 = f64::NAN;
+    for (n, nodes) in grid {
+        let inv = NodeInventory::parse(nodes).unwrap();
+        let scale_spec = FleetSpec::synthetic(n);
+        let scale_specs = scale_spec.specs().unwrap();
+        let scale_profs: Vec<_> = scale_specs.iter().map(pipeline_profiles).collect();
+        let lambdas: Vec<f64> = (0..n).map(|i| 4.0 + (i % 7) as f64).collect();
+        let mut episode = || {
+            let predictors: Vec<Box<dyn Predictor + Send>> = scale_specs
+                .iter()
+                .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+                .collect();
+            let mut ad = FleetAdapter::new(
+                scale_specs.clone(),
+                scale_profs.clone(),
+                AccuracyMetric::Pas,
+                inv.replica_cap(),
+                AdapterConfig::default(),
+                predictors,
+            )
+            .and_then(|a| {
+                a.with_tuning(FleetTuning {
+                    resolve_threshold: 0.15,
+                    nodes: Some(inv.clone()),
+                    ..Default::default()
+                })
+            })
+            .unwrap();
+            ad.decide_for_lambdas(&lambdas);
+            for tick in 1..=3usize {
+                let moved: Vec<f64> = lambdas
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| if i % 10 == tick { l * 1.25 } else { l })
+                    .collect();
+                ad.decide_for_lambdas(&moved);
+            }
+            ad.full_solves + ad.incremental_solves
+        };
+        // the pre-PR path: one thread, no cells, full sticky repacks
+        set_solver_threads(1);
+        set_cell_threshold(usize::MAX);
+        set_delta_pack(false);
+        let slow =
+            sb.run(&format!("fleet_scale/flat_seq_{n}m_{}n", inv.n_nodes()), &mut episode);
+        // the new default control plane
+        set_solver_threads(0);
+        set_cell_threshold(0);
+        set_delta_pack(true);
+        let fast =
+            sb.run(&format!("fleet_scale/cells_par_{n}m_{}n", inv.n_nodes()), &mut episode);
+        let speedup = slow.summary.mean / fast.summary.mean.max(1e-12);
+        println!(
+            "  fleet_scale: {n} members x {} nodes: {speedup:.2}x vs flat sequential",
+            inv.n_nodes()
+        );
+        if n == 100 {
+            scale_speedup_100 = speedup;
+        }
+        rows.push(fast);
+        rows.push(slow);
+    }
+    set_solver_threads(0);
+    set_cell_threshold(0);
+    reset_delta_pack();
+    let cores = std::thread::available_parallelism().map_or(1, |c| c.get()) as f64;
+    let scale_gate = gate("IPA_FLEET_SCALE_GATE", (0.75 * cores).clamp(1.5, 5.0));
+    println!("  fleet_scale: 100x1000 speedup {scale_speedup_100:.2}x (gate {scale_gate:.2}x)");
+    assert!(
+        scale_speedup_100 >= scale_gate,
+        "scaled control plane only {scale_speedup_100:.2}x the flat sequential path \
+         (gate {scale_gate:.2}x)"
+    );
+    print_section("fleet scale (solve+pack wall time, new default vs flat)", &rows);
+    let fleet_scale_rows = rows.clone();
+
     // Perf baseline for future PRs: solver decision time + simulator
     // throughput (single-pipeline and fleet) + elastic control-plane
     // latencies, in a stable JSON shape.
@@ -583,6 +681,7 @@ fn main() {
             ("fleet_autoscaler", &fleet_autoscaler_rows[..]),
             ("fleet_binpack", &fleet_binpack_rows[..]),
             ("fleet_topology", &fleet_topology_rows[..]),
+            ("fleet_scale", &fleet_scale_rows[..]),
             ("data_plane", &data_plane_rows[..]),
             ("telemetry", &telemetry_rows[..]),
         ],

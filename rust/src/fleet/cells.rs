@@ -1,0 +1,292 @@
+//! Hierarchical cells: the joint solver's scale-out layer.
+//!
+//! The flat greedy share allocation re-scans every member each
+//! iteration, so one grant costs O(fleet) evaluations and a full solve
+//! O(fleet²) — fine at the paper's ≤ 5 pipelines, a wall at 100
+//! members on 1000-node pools.  Production schedulers break this by
+//! partitioning: here the fleet is split into contiguous cells of
+//! [`DEFAULT_CELL_SIZE`] members, each solved *independently* against
+//! a sub-budget through its own `ShareEngine` — the same engine the
+//! flat policies drive; the policy-vs-engine split is what makes the
+//! reuse free — and a cheap top-level rebalancer then moves replicas
+//! BETWEEN cells by marginal gain, one at a time, until no transfer
+//! strictly improves the fleet objective.
+//!
+//! * **Activation** — [`cell_threshold`] members or more, uniform
+//!   priorities only (tier precedence is global by definition, so
+//!   tiered fleets keep the flat path).  `IPA_CELL_THRESHOLD` /
+//!   [`set_cell_threshold`] tune it; `usize::MAX` disables cells for
+//!   A/B runs.
+//! * **Quality** — the result is floored at the global even-split
+//!   baseline (the same guarantee the flat solver gives), and
+//!   `tests/fleet_scale.rs` pins a bounded optimality gap vs the flat
+//!   solve on randomized fleets.
+//! * **Determinism** — cells are solved in member order, every scan is
+//!   prewarmed through the engine (scan-order cache admission), and
+//!   the rebalancer is strict-improvement first-seen-wins: results and
+//!   cache counters are byte-identical at any
+//!   [`crate::fleet::solver::solver_threads`] count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::fleet::nodes::NodeInventory;
+use crate::fleet::solver::{even_shares, FleetAllocation, ShareEngine, SolveStats};
+use crate::optimizer::ip::Problem;
+
+/// Members per cell.  Cells are contiguous ranges in member order —
+/// the partition is reproducible and maps directly onto spec order.
+pub const DEFAULT_CELL_SIZE: usize = 16;
+
+/// Default member count at which uniform-priority solves go
+/// hierarchical.
+const DEFAULT_CELL_THRESHOLD: usize = 32;
+
+/// Cell-threshold override: 0 = unset (env/default resolution).
+static CELL_THRESHOLD: AtomicUsize = AtomicUsize::new(0);
+
+/// Member count at which the uniform-priority joint solvers switch to
+/// hierarchical cells.  Resolution order: [`set_cell_threshold`]
+/// override, else `IPA_CELL_THRESHOLD`, else 32.  `usize::MAX`
+/// disables cells entirely (the flat A/B baseline).
+pub fn cell_threshold() -> usize {
+    let o = CELL_THRESHOLD.load(Ordering::Relaxed);
+    if o != 0 {
+        return o;
+    }
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("IPA_CELL_THRESHOLD")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(DEFAULT_CELL_THRESHOLD)
+    })
+}
+
+/// Override [`cell_threshold`] for this process (0 = back to the
+/// env/default resolution, `usize::MAX` = never go hierarchical).
+pub fn set_cell_threshold(n: usize) {
+    CELL_THRESHOLD.store(n, Ordering::Relaxed);
+}
+
+/// The hierarchical planner: one `ShareEngine` per contiguous member
+/// range, plus the concatenated floors the policy layer needs.  Built
+/// by the solver's planner dispatch above [`cell_threshold`] members
+/// (or explicitly via [`solve_fleet_cells`]).
+pub(crate) struct CellPlanner<'a> {
+    cells: Vec<ShareEngine<'a>>,
+    /// Member range `[start, end)` of each cell.
+    ranges: Vec<(usize, usize)>,
+    floors: Vec<u32>,
+    min_per: Vec<u32>,
+}
+
+impl<'a> CellPlanner<'a> {
+    /// `None` when the global `budget` cannot cover the per-member
+    /// floors (same contract as the flat engine).
+    pub(crate) fn new(
+        problems: &'a [Problem<'a>],
+        budget: u32,
+        inv: Option<&NodeInventory>,
+        spread: &[bool],
+        cell_size: usize,
+    ) -> Option<CellPlanner<'a>> {
+        let n = problems.len();
+        let cell_size = cell_size.max(1);
+        let mut cells = Vec::new();
+        let mut ranges = Vec::new();
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + cell_size).min(n);
+            let sp: Vec<bool> =
+                (start..end).map(|i| spread.get(i).copied().unwrap_or(false)).collect();
+            // Each cell engine is built against the GLOBAL budget: the
+            // rebalancer may grow a cell past its initial sub-budget,
+            // and min-feasible lookahead jumps must stay visible.
+            let engine = ShareEngine::new(&problems[start..end], budget, inv, &sp)?;
+            cells.push(engine);
+            ranges.push((start, end));
+            start = end;
+        }
+        let floors: Vec<u32> =
+            cells.iter().flat_map(|c| c.floors().iter().copied()).collect();
+        let min_per: Vec<u32> =
+            cells.iter().flat_map(|c| c.min_per().iter().copied()).collect();
+        if budget < floors.iter().sum::<u32>() {
+            return None;
+        }
+        Some(CellPlanner { cells, ranges, floors, min_per })
+    }
+
+    pub(crate) fn floors(&self) -> &[u32] {
+        &self.floors
+    }
+
+    pub(crate) fn min_per(&self) -> &[u32] {
+        &self.min_per
+    }
+
+    pub(crate) fn stats(&self) -> SolveStats {
+        self.cells.iter().fold(SolveStats::default(), |a, c| a.merged(c.stats()))
+    }
+
+    /// Σ objective of a global share vector, through the cell memos.
+    fn total_obj(&mut self, shares: &[u32]) -> f64 {
+        let mut total = 0.0;
+        for (c, &(start, end)) in self.ranges.iter().enumerate() {
+            let keys: Vec<(usize, u32)> = (start..end).map(|i| (i - start, shares[i])).collect();
+            self.cells[c].ensure(&keys);
+            for i in start..end {
+                total += self.cells[c].obj(i - start, shares[i]);
+            }
+        }
+        total
+    }
+
+    /// The hierarchical share computation (uniform priorities):
+    ///
+    /// 1. sub-budgets — cell floor sums plus the surplus round-robined
+    ///    one replica at a time;
+    /// 2. independent per-cell greedy solves (each with its own
+    ///    even-split floor, exactly the flat single-class pass);
+    /// 3. the top-level rebalancer: grant any replicas the cells left
+    ///    unspent to the globally best marginal member, then move one
+    ///    replica at a time from the member whose last replica is worth
+    ///    least to the member whose next replica is worth most, while
+    ///    the transfer strictly gains;
+    /// 4. the global even-split floor (never worse than even, like the
+    ///    flat solver).
+    pub(crate) fn solve_shares(&mut self, budget: u32) -> Vec<u32> {
+        let n = self.floors.len();
+        let floor_total: u32 = self.floors.iter().sum();
+        // ---- 1: sub-budgets ---------------------------------------
+        let mut cell_budget: Vec<u32> =
+            self.cells.iter().map(|c| c.floors().iter().sum::<u32>()).collect();
+        let mut surplus = budget - floor_total;
+        if !cell_budget.is_empty() {
+            let mut ci = 0usize;
+            while surplus > 0 {
+                cell_budget[ci] += 1;
+                surplus -= 1;
+                ci = (ci + 1) % cell_budget.len();
+            }
+        }
+        // ---- 2: independent cell solves ---------------------------
+        let mut shares = vec![0u32; n];
+        let widest = self.ranges.iter().map(|&(s, e)| e - s).max().unwrap_or(0);
+        let zeros: Vec<u32> = vec![0; widest]; // uniform priority 0 within a cell
+        for (c, &(start, end)) in self.ranges.iter().enumerate() {
+            let local = self.cells[c].solve_shares(cell_budget[c], &zeros[..end - start]);
+            shares[start..end].copy_from_slice(&local);
+        }
+        // ---- 3: top-level marginal-gain rebalancer ----------------
+        let mut leftover: u32 = budget - shares.iter().sum::<u32>();
+        let max_iters = 4 * n + budget as usize;
+        for _ in 0..max_iters {
+            // Prewarm exactly the scan's reads, in scan order.
+            for (c, &(start, end)) in self.ranges.iter().enumerate() {
+                let mut keys = Vec::with_capacity(3 * (end - start));
+                for i in start..end {
+                    let li = i - start;
+                    keys.push((li, shares[i]));
+                    keys.push((li, shares[i] + 1));
+                    if shares[i] > self.floors[i] {
+                        keys.push((li, shares[i] - 1));
+                    }
+                }
+                self.cells[c].ensure(&keys);
+            }
+            // Best receiver (max gain of one more replica) and best
+            // donor (min loss of one fewer, above its floor) — strict
+            // comparisons, first seen wins: deterministic.
+            let mut best_gain: Option<(usize, f64)> = None;
+            let mut best_loss: Option<(usize, f64)> = None;
+            for (c, &(start, end)) in self.ranges.iter().enumerate() {
+                for i in start..end {
+                    let li = i - start;
+                    let cur = self.cells[c].obj(li, shares[i]);
+                    let gain = self.cells[c].obj(li, shares[i] + 1) - cur;
+                    if best_gain.as_ref().is_none_or(|&(_, g)| gain > g) {
+                        best_gain = Some((i, gain));
+                    }
+                    if shares[i] > self.floors[i] {
+                        let loss = cur - self.cells[c].obj(li, shares[i] - 1);
+                        if best_loss.as_ref().is_none_or(|&(_, l)| loss < l) {
+                            best_loss = Some((i, loss));
+                        }
+                    }
+                }
+            }
+            let Some((gi, gain)) = best_gain else { break };
+            if leftover > 0 && gain > 1e-12 {
+                shares[gi] += 1;
+                leftover -= 1;
+                continue;
+            }
+            match best_loss {
+                Some((di, loss)) if di != gi && gain > loss + 1e-9 => {
+                    shares[gi] += 1;
+                    shares[di] -= 1;
+                }
+                _ => break, // no strictly-improving transfer left
+            }
+        }
+        // ---- 4: the global even-split floor -----------------------
+        let even = even_shares(budget, &self.floors);
+        let cells_total = self.total_obj(&shares);
+        let even_total = self.total_obj(&even);
+        if cells_total + 1e-12 >= even_total {
+            shares
+        } else {
+            even
+        }
+    }
+
+    /// Materialize a global share vector through the cell memos
+    /// (concatenation of the per-cell allocations).
+    pub(crate) fn allocate(&mut self, shares: &[u32]) -> FleetAllocation {
+        let mut members = Vec::with_capacity(shares.len());
+        for (c, &(start, end)) in self.ranges.iter().enumerate() {
+            let local = self.cells[c].allocate(&shares[start..end]);
+            members.extend(local.members);
+        }
+        FleetAllocation {
+            budget: shares.iter().sum(),
+            replicas_used: members.iter().map(|m| m.replicas).sum(),
+            total_objective: members.iter().map(|m| m.config.objective).sum(),
+            members,
+            packing: None,
+        }
+    }
+}
+
+/// Force a hierarchical solve at an explicit `cell_size` regardless of
+/// [`cell_threshold`] — the quality-gap tests and the `fleet_scale`
+/// bench cross-check cells against the flat solve with it.  Uniform
+/// priorities over a fungible budget (no inventory); same `None`
+/// contract as [`crate::fleet::solver::solve_fleet`].
+pub fn solve_fleet_cells(
+    problems: &[Problem],
+    budget: u32,
+    cell_size: usize,
+) -> Option<(FleetAllocation, SolveStats)> {
+    if problems.is_empty() {
+        return Some((
+            FleetAllocation {
+                members: Vec::new(),
+                budget,
+                replicas_used: 0,
+                total_objective: 0.0,
+                packing: None,
+            },
+            SolveStats::default(),
+        ));
+    }
+    let mut planner = CellPlanner::new(problems, budget, None, &[], cell_size)?;
+    let shares = planner.solve_shares(budget);
+    let mut alloc = planner.allocate(&shares);
+    alloc.budget = budget;
+    debug_assert!(alloc.replicas_used <= budget, "cells allocation exceeds budget");
+    Some((alloc, planner.stats()))
+}

@@ -369,12 +369,7 @@ impl FleetCore {
         let packing = match &self.inventory {
             Some(inv) => {
                 let refs: Vec<&PipelineConfig> = configs.iter().map(|(c, _)| c).collect();
-                let demands = config_demands(&refs);
-                // Sticky first (keep replicas where they are), plain
-                // FFD as the fallback — stickiness is an optimization,
-                // never a new way to reject a packable configuration.
-                let p = inv.pack_prefer_sticky(&demands, self.last_packing.as_ref(), &self.spread);
-                match p {
+                match self.pack_next(&refs) {
                     Some(p) => Some(p),
                     None => {
                         return Err(format!(
@@ -427,9 +422,37 @@ impl FleetCore {
         if inv.is_fungible() {
             return 0; // fungible slots are a fiction: nothing moves
         }
+        self.pack_next(configs).map_or(0, |p| p.moved_from(prev).len() as u32)
+    }
+
+    /// The candidate packing of `configs` against the active placement:
+    /// the delta-pack fast path when the per-member config diff against
+    /// [`FleetCore::apply`]'s last activation identifies unchanged
+    /// members (retained verbatim — a quiet tick on a 1000-node pool
+    /// re-places nothing), the full sticky pack (keep replicas where
+    /// they are, plain FFD as the fallback) otherwise.  Stickiness and
+    /// delta retention are optimizations, never a new way to reject a
+    /// packable configuration.
+    fn pack_next(&self, configs: &[&PipelineConfig]) -> Option<Packing> {
+        let inv = self.inventory.as_ref()?;
         let demands = config_demands(configs);
-        inv.pack_prefer_sticky(&demands, Some(prev), &self.spread)
-            .map_or(0, |p| p.moved_from(prev).len() as u32)
+        if crate::fleet::nodes::delta_pack_enabled() && !inv.is_fungible() {
+            if let Some(prev) = &self.last_packing {
+                if configs.len() == self.last_configs.len() {
+                    let changed: Vec<bool> = configs
+                        .iter()
+                        .zip(&self.last_configs)
+                        .map(|(c, old)| **c != *old)
+                        .collect();
+                    if changed.iter().any(|&c| !c) {
+                        if let Some(p) = inv.pack_delta(&demands, prev, &changed, &self.spread) {
+                            return Some(p);
+                        }
+                    }
+                }
+            }
+        }
+        inv.pack_prefer_sticky(&demands, self.last_packing.as_ref(), &self.spread)
     }
 
     /// Node placement of the active configurations (node pools only).

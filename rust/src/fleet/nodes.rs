@@ -17,8 +17,20 @@
 //! count changes) still has room for its new demand, and only the
 //! displaced/new replicas fall through to the FFD pass.
 //! [`Packing::moved_from`] diffs two packings into the replicas that
-//! changed nodes — the migration count the fleet core charges through
-//! the reconfiguration delay.
+//! changed nodes (hash-indexed, linear in replicas) — the migration
+//! count the fleet core charges through the reconfiguration delay.
+//!
+//! **Delta packing.**  [`NodeInventory::pack_delta`] is the incremental
+//! fast path for callers that know WHICH members' configurations
+//! changed (the adapter's incremental re-solve, preemption,
+//! `FleetCore::apply`): unchanged members are retained verbatim on
+//! their previous nodes — the occupancy index is rebuilt instead of
+//! re-searched — and only changed members run the sticky keep + FFD
+//! machinery, so a 2-member wiggle on a 1000-node pool re-places 2
+//! members' replicas, not 100.  It declines (`None`) whenever the
+//! retained occupancy cannot be reconstructed exactly and every caller
+//! then falls back to the full sticky pack; `IPA_DELTA_PACK=0` /
+//! [`set_delta_pack`] keeps the legacy path for A/B.
 //!
 //! **Failure domains.**  Every [`NodeShape`] carries a `zone` label
 //! (`""` = the single unnamed zone; parse syntax
@@ -63,10 +75,45 @@
 
 use std::collections::HashMap;
 use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 use crate::optimizer::ip::PipelineConfig;
 use crate::resources::{CostWeights, ResourceVec};
 use crate::util::json::Json;
+
+/// Delta-pack override: 0 = unset (env/default), 1 = on, 2 = off.
+static DELTA_PACK: AtomicUsize = AtomicUsize::new(0);
+
+/// Is the [`NodeInventory::pack_delta`] fast path enabled?  Default ON;
+/// `IPA_DELTA_PACK=0` or [`set_delta_pack`]`(false)` disables it (the
+/// A/B baseline).  Delta packing is placement-preserving and callers
+/// fall back to the full sticky pack whenever it declines, so the knob
+/// trades wall time only — it never changes what is packable.
+pub fn delta_pack_enabled() -> bool {
+    match DELTA_PACK.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            static ENV: OnceLock<bool> = OnceLock::new();
+            *ENV.get_or_init(|| {
+                !matches!(std::env::var("IPA_DELTA_PACK").as_deref().map(str::trim), Ok("0"))
+            })
+        }
+    }
+}
+
+/// Force the delta-pack fast path on/off for this process (benches and
+/// A/B tests; [`reset_delta_pack`] returns to the env/default
+/// resolution).
+pub fn set_delta_pack(on: bool) {
+    DELTA_PACK.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+/// Back to the `IPA_DELTA_PACK` / default resolution.
+pub fn reset_delta_pack() {
+    DELTA_PACK.store(0, Ordering::Relaxed);
+}
 
 /// One node hardware variant: a name, its capacity vector and the
 /// failure domain (zone/rack) it lives in (`""` = unzoned).
@@ -197,26 +244,22 @@ impl Packing {
     /// replica whose old node no longer exists counts as moved.
     pub fn moved_from(&self, prev: &Packing) -> Vec<Placement> {
         let map = map_nodes(&prev.shape_of, &self.shape_of);
-        let mut held: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+        // Multiset of surviving prev slots, hash-indexed by
+        // (member, stage, node): each placement of `self` consumes one
+        // matching slot in O(1), so the diff is linear in replicas.
+        // (The old diff scanned a per-(member, stage) Vec for every
+        // placement — quadratic on fat stages at 1000-node scale.)
+        let mut held: HashMap<(usize, usize, usize), u32> = HashMap::new();
         for p in &prev.placements {
             if let Some(ni) = map[p.node] {
-                held.entry((p.member, p.stage)).or_default().push(ni);
+                *held.entry((p.member, p.stage, ni)).or_insert(0) += 1;
             }
         }
         let mut moved = Vec::new();
         for p in &self.placements {
-            let stayed = match held.get_mut(&(p.member, p.stage)) {
-                Some(nodes) => match nodes.iter().position(|&n| n == p.node) {
-                    Some(i) => {
-                        nodes.swap_remove(i);
-                        true
-                    }
-                    None => false,
-                },
-                None => false,
-            };
-            if !stayed {
-                moved.push(*p);
+            match held.get_mut(&(p.member, p.stage, p.node)) {
+                Some(k) if *k > 0 => *k -= 1,
+                _ => moved.push(*p),
             }
         }
         moved
@@ -275,6 +318,22 @@ impl NodeInventory {
 
     pub fn is_fungible(&self) -> bool {
         self.fungible
+    }
+
+    /// This inventory with every pool's node count multiplied by `k`
+    /// (elastic `bought` markers cleared — a scaled inventory is a
+    /// fresh provisioning, not an autoscaler trajectory).  Scale-up
+    /// helper for `fleet_serve --nodes-scale` and the `fleet_scale`
+    /// bench grid.
+    pub fn scaled(&self, k: u32) -> NodeInventory {
+        NodeInventory {
+            pools: self
+                .pools
+                .iter()
+                .map(|p| NodePool { shape: p.shape.clone(), count: p.count * k, bought: 0 })
+                .collect(),
+            fungible: self.fungible,
+        }
     }
 
     /// The demand a replica presents to this inventory: its full vector
@@ -790,6 +849,206 @@ impl NodeInventory {
                     let n = zones.get(&(it.member, it.stage)).map_or(0, Vec::len);
                     if n < 2 {
                         return None; // single-zoned spread stage: rejected
+                    }
+                }
+            }
+        }
+        Some(packing)
+    }
+
+    /// The incremental repack: when the caller knows WHICH members'
+    /// configurations changed since `prev` was packed (`changed[i]`;
+    /// missing entries mean CHANGED — only an explicit `false`
+    /// retains), unchanged members' replicas are retained VERBATIM on
+    /// their previous nodes — a retained occupancy index rebuilt in
+    /// O(retained replicas), no candidate search, no FFD over the
+    /// ~1000-node pool — and only the changed members run the sticky
+    /// keep-in-place + FFD machinery against it.
+    ///
+    /// Answers `None` — callers fall back to
+    /// [`NodeInventory::pack_prefer_sticky`], so declining is never a
+    /// new way to reject a packable configuration — whenever the
+    /// retained occupancy cannot be reconstructed exactly: a retained
+    /// replica's previous node vanished, an "unchanged" member's
+    /// replica counts disagree with `prev` (the caller's diff was
+    /// wrong), a changed member's replicas no longer fit, or a spread
+    /// floor would be violated.  When it answers `Some`, the packing is
+    /// valid for this inventory and every unchanged member has moved
+    /// nothing.  Retention needs no capacity re-check: retained
+    /// placements are a subset of `prev`'s per-node load with identical
+    /// demands, and `prev` was valid.  Deterministic, but NOT
+    /// guaranteed placement-identical to [`NodeInventory::pack_sticky`]
+    /// — sticky processes members in item order and may displace an
+    /// unchanged member to make room, which is exactly the O(fleet)
+    /// work this path exists to skip.
+    pub fn pack_delta(
+        &self,
+        items: &[PackItem],
+        prev: &Packing,
+        changed: &[bool],
+        spread: &[bool],
+    ) -> Option<Packing> {
+        let unchanged = |m: usize| changed.get(m).is_some_and(|&c| !c);
+        let mut shape_of = Vec::new();
+        for (si, pool) in self.pools.iter().enumerate() {
+            for _ in 0..pool.count {
+                shape_of.push(si);
+            }
+        }
+        let map = map_nodes(&prev.shape_of, &shape_of);
+        // Surviving prev slots per (member, stage), in prev order —
+        // the retained occupancy index.
+        let mut held: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+        for p in &prev.placements {
+            match map[p.node] {
+                Some(ni) => held.entry((p.member, p.stage)).or_default().push(ni),
+                // A retained member's node vanished: the occupancy
+                // cannot be reconstructed verbatim — decline.
+                None if unchanged(p.member) => return None,
+                None => {}
+            }
+        }
+
+        let spread_zones = self.distinct_zones() >= 2;
+        let is_spread = |m: usize| spread_zones && spread.get(m).copied().unwrap_or(false);
+
+        let mut used = vec![ResourceVec::ZERO; shape_of.len()];
+        let mut placements: Vec<Placement> = Vec::new();
+        let mut remaining: Vec<u32> = items.iter().map(|it| it.replicas).collect();
+        let mut key_zones: HashMap<(usize, usize), Vec<String>> = HashMap::new();
+        let track_zone = |m: usize, s: usize, ni: usize, kz: &mut HashMap<_, Vec<String>>| {
+            let z = self.pools[shape_of[ni]].shape.zone.clone();
+            let e = kz.entry((m, s)).or_default();
+            if !e.contains(&z) {
+                e.push(z);
+            }
+        };
+
+        // ---- pass 0: retain unchanged members verbatim --------------
+        // (Before any changed-member placement, so a changed member's
+        // fits-checks always see the full retained load.)
+        for (ii, it) in items.iter().enumerate() {
+            if !unchanged(it.member) || it.replicas == 0 {
+                continue;
+            }
+            let Some(cands) = held.get(&(it.member, it.stage)) else { return None };
+            if cands.len() as u32 != it.replicas {
+                return None; // caller's "unchanged" diff was wrong
+            }
+            let d = self.demand_of(it.unit);
+            for &ni in cands {
+                used[ni] = used[ni].add(d);
+                placements.push(Placement { member: it.member, stage: it.stage, node: ni });
+                if is_spread(it.member) {
+                    track_zone(it.member, it.stage, ni, &mut key_zones);
+                }
+            }
+            remaining[ii] = 0;
+        }
+
+        // ---- pass 1: sticky keep-in-place for changed members -------
+        for (ii, it) in items.iter().enumerate() {
+            if unchanged(it.member) {
+                continue;
+            }
+            let Some(cands) = held.get_mut(&(it.member, it.stage)) else { continue };
+            if is_spread(it.member) {
+                // zone-diverse subset first (as in pack_sticky)
+                let mut seen: Vec<&str> = Vec::new();
+                let mut firsts = Vec::new();
+                let mut rest = Vec::new();
+                for &ni in cands.iter() {
+                    let z = self.pools[shape_of[ni]].shape.zone.as_str();
+                    if seen.contains(&z) {
+                        rest.push(ni);
+                    } else {
+                        seen.push(z);
+                        firsts.push(ni);
+                    }
+                }
+                firsts.extend(rest);
+                *cands = firsts;
+            }
+            let d = self.demand_of(it.unit);
+            let mut kept = 0u32;
+            for &ni in cands.iter() {
+                if kept >= remaining[ii] {
+                    break;
+                }
+                if used[ni].add(d).fits(self.pools[shape_of[ni]].shape.capacity) {
+                    used[ni] = used[ni].add(d);
+                    placements.push(Placement { member: it.member, stage: it.stage, node: ni });
+                    if is_spread(it.member) {
+                        track_zone(it.member, it.stage, ni, &mut key_zones);
+                    }
+                    kept += 1;
+                }
+            }
+            remaining[ii] -= kept;
+        }
+
+        // ---- pass 2: FFD for the changed remainder ------------------
+        let mut units: Vec<(usize, ResourceVec)> = Vec::new();
+        for (ii, it) in items.iter().enumerate() {
+            let d = self.demand_of(it.unit);
+            for _ in 0..remaining[ii] {
+                units.push((ii, d));
+            }
+        }
+        if !units.is_empty() {
+            let mut order: Vec<usize> = (0..shape_of.len()).collect();
+            order.sort_by(|&a, &b| {
+                let ca = self.pools[shape_of[a]].shape.capacity;
+                let cb = self.pools[shape_of[b]].shape.capacity;
+                ca.accel_slots
+                    .partial_cmp(&cb.accel_slots)
+                    .unwrap()
+                    .then(ca.cpu_cores.partial_cmp(&cb.cpu_cores).unwrap())
+                    .then(ca.memory_gb.partial_cmp(&cb.memory_gb).unwrap())
+                    .then(a.cmp(&b))
+            });
+            units.sort_by(|a, b| {
+                b.1.accel_slots
+                    .partial_cmp(&a.1.accel_slots)
+                    .unwrap()
+                    .then(b.1.cpu_cores.partial_cmp(&a.1.cpu_cores).unwrap())
+                    .then(b.1.memory_gb.partial_cmp(&a.1.memory_gb).unwrap())
+                    .then(a.0.cmp(&b.0))
+            });
+            for (ii, d) in units {
+                let it = &items[ii];
+                let fits =
+                    |ni: usize| used[ni].add(d).fits(self.pools[shape_of[ni]].shape.capacity);
+                let node = if is_spread(it.member) {
+                    let zones = key_zones.entry((it.member, it.stage)).or_default();
+                    order
+                        .iter()
+                        .copied()
+                        .find(|&ni| {
+                            !zones.contains(&self.pools[shape_of[ni]].shape.zone) && fits(ni)
+                        })
+                        .or_else(|| order.iter().copied().find(|&ni| fits(ni)))?
+                } else {
+                    order.iter().copied().find(|&ni| fits(ni))?
+                };
+                used[node] = used[node].add(d);
+                placements.push(Placement { member: it.member, stage: it.stage, node });
+                if is_spread(it.member) {
+                    track_zone(it.member, it.stage, node, &mut key_zones);
+                }
+            }
+        }
+
+        let packing = Packing { shape_of, used, placements };
+
+        // ---- spread validation (as in pack_sticky) ------------------
+        if spread_zones {
+            let zones = packing.zones_by_key(self);
+            for it in items {
+                if it.replicas > 0 && is_spread(it.member) {
+                    let n = zones.get(&(it.member, it.stage)).map_or(0, Vec::len);
+                    if n < 2 {
+                        return None;
                     }
                 }
             }

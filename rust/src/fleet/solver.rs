@@ -41,6 +41,23 @@
 //!   floor.  With no spread flags and no previous packing it IS
 //!   [`solve_fleet_packed`].
 //!
+//! **Engine vs policy.**  The share machinery itself lives in an engine
+//! layer — `ShareEngine`: per-member floors and option sets, a BOUNDED
+//! memoized evaluation cache ([`SolveStats`] hit/miss telemetry), and
+//! the greedy passes, with every independent per-member evaluation
+//! fanned across [`solver_threads`] scoped workers
+//! ([`crate::runtime::pool::scoped_map`]).  The three public solvers
+//! are thin policies over it, and [`crate::fleet::cells`] reuses the
+//! engine unchanged to go *hierarchical* above
+//! [`crate::fleet::cells::cell_threshold`] members (uniform priorities
+//! only): cells solve independently against sub-budgets, then a cheap
+//! top-level marginal-gain rebalancer moves replicas between them.
+//! Parallelism is placement-transparent: the fan-out computes exactly
+//! the evaluations the sequential scan would read and admits them in
+//! scan order, so results — and the journal's cache counters — are
+//! byte-identical at any thread count (`IPA_SOLVER_THREADS=1` is the
+//! legacy sequential path, kept for A/B).
+//!
 //! [`FleetAdapter`] packages the allocator as a [`FleetController`]
 //! (per-member predictors → joint solve → one [`Decision`] per member)
 //! for the fleet drivers in `simulator::sim` and `serving::engine` —
@@ -59,13 +76,16 @@
 //! the excess through §4.5 dropping, exactly like the single-pipeline
 //! fallback.
 
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::coordinator::adapter::{AdapterConfig, Decision};
 use crate::fleet::autoscaler::{Autoscaler, AutoscalerConfig};
+use crate::fleet::cells::CellPlanner;
 use crate::fleet::nodes::{config_demands, NodeInventory, Packing};
+use crate::runtime::pool::scoped_map;
 use crate::fleet::spec::SlaClass;
 use crate::models::accuracy::AccuracyMetric;
 use crate::models::pipelines::PipelineSpec;
@@ -355,7 +375,7 @@ fn eval_member(p: &Problem, options: &[Vec<StageOption>], b: u32) -> (PipelineCo
 
 /// [`eval_member`] with a per-stage replica floor for the fallback path
 /// (the solve path enforces the floor through the option transform of
-/// [`greedy_ctx`] — every spread option carries ≥ `min_per` replicas).
+/// [`ShareEngine`] — every spread option carries ≥ `min_per` replicas).
 fn eval_member_at(
     p: &Problem,
     options: &[Vec<StageOption>],
@@ -394,105 +414,451 @@ pub fn allocate_at(
     }
 }
 
-/// Memoized member evaluation used by the greedy passes:
-/// (member, share) → (config, solved), objective read off the config.
-fn eval_cached(
-    problems: &[Problem],
-    options: &[Vec<Vec<StageOption>>],
-    cache: &mut [HashMap<u32, (PipelineConfig, bool)>],
-    min_per: &[u32],
-    i: usize,
-    b: u32,
-) -> (PipelineConfig, bool) {
-    if let Some((cfg, solved)) = cache[i].get(&b) {
-        return (cfg.clone(), *solved);
-    }
-    let (cfg, solved) = eval_member_at(&problems[i], &options[i], b, min_per[i]);
-    cache[i].insert(b, (cfg.clone(), solved));
-    (cfg, solved)
+/// Global solver fan-out override (0 = unset → env/auto resolution).
+static SOLVER_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+fn env_solver_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("IPA_SOLVER_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(0)
+    })
 }
 
-fn obj_at(
-    problems: &[Problem],
-    options: &[Vec<Vec<StageOption>>],
-    cache: &mut [HashMap<u32, (PipelineConfig, bool)>],
-    min_per: &[u32],
-    i: usize,
-    b: u32,
-) -> f64 {
-    if let Some((cfg, _)) = cache[i].get(&b) {
-        return cfg.objective;
+/// Threads the engine fans independent per-member evaluations across.
+/// Resolution order: [`set_solver_threads`] override, else the
+/// `IPA_SOLVER_THREADS` environment variable, else the machine's
+/// available parallelism capped at 8 (member solves are short; more
+/// workers only pay spawn cost).  `1` is the legacy sequential path:
+/// every evaluation runs inline on the caller's thread.  The knob
+/// trades wall time ONLY — the fan-out computes exactly the
+/// evaluations the sequential scan would read and admits them in scan
+/// order, so decisions and cache counters are byte-identical at any
+/// value.
+pub fn solver_threads() -> usize {
+    let o = SOLVER_THREADS.load(Ordering::Relaxed);
+    if o != 0 {
+        return o;
     }
-    let (cfg, solved) = eval_member_at(&problems[i], &options[i], b, min_per[i]);
-    let o = cfg.objective;
-    cache[i].insert(b, (cfg, solved));
-    o
+    let e = env_solver_threads();
+    if e != 0 {
+        return e;
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get().min(8))
 }
 
-/// The greedy marginal-gain pass over a *subset* of members: while
-/// `remaining` replicas are left, grant the next one (or a lookahead
-/// jump to a member's minimum feasible allocation) to whichever listed
-/// member buys the most objective per replica.  Mutates `shares` and
-/// `remaining` in place; stops when no listed member benefits.
-fn greedy_grant(
-    problems: &[Problem],
-    options: &[Vec<Vec<StageOption>>],
-    cache: &mut [HashMap<u32, (PipelineConfig, bool)>],
-    min_per: &[u32],
-    min_b: &[Option<u32>],
-    members: &[usize],
-    shares: &mut [u32],
-    remaining: &mut u32,
-) {
-    while *remaining > 0 {
-        let mut best: Option<(usize, u32, f64)> = None;
-        for &i in members {
-            let cur = obj_at(problems, options, cache, min_per, i, shares[i]);
-            let mut cands = vec![1u32];
-            if let Some(mb) = min_b[i] {
-                if mb > shares[i] {
-                    cands.push(mb - shares[i]);
-                }
+/// Override [`solver_threads`] for this process (0 = back to the
+/// env/auto resolution).  The benches and the determinism tests A/B
+/// the parallel engine against the sequential path with it.
+pub fn set_solver_threads(n: usize) {
+    SOLVER_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Bound on memoized evaluations kept per member.  The packed solver's
+/// budget walk-down revisits nearby shares constantly but only a
+/// handful of distinct budgets are ever live at once; unbounded, a
+/// 100-member adapter held every (member, share) config it ever
+/// touched across ticks.
+const EVAL_CACHE_CAP: usize = 128;
+
+/// One member's bounded memo of budget-capped solves: share → (config,
+/// solved), FIFO-evicted at [`EVAL_CACHE_CAP`].  Eviction depends only
+/// on insertion order, which the engine keeps deterministic (scan-order
+/// prewarm), so the hit/miss counters — surfaced in the decision
+/// journal — are byte-identical at any thread count.
+#[derive(Clone, Default)]
+struct EvalCache {
+    map: HashMap<u32, (PipelineConfig, bool)>,
+    order: VecDeque<u32>,
+    hits: u64,
+    misses: u64,
+}
+
+impl EvalCache {
+    fn lookup(&mut self, b: u32) -> Option<(PipelineConfig, bool)> {
+        match self.map.get(&b) {
+            Some((cfg, solved)) => {
+                self.hits += 1;
+                Some((cfg.clone(), *solved))
             }
-            for &k in &cands {
-                if k == 0 || k > *remaining {
-                    continue;
-                }
-                let gain = obj_at(problems, options, cache, min_per, i, shares[i] + k) - cur;
-                if gain <= 1e-12 {
-                    continue;
-                }
-                let rate = gain / k as f64;
-                if best.as_ref().is_none_or(|&(_, _, r)| rate > r) {
-                    best = Some((i, k, rate));
-                }
-            }
-        }
-        match best {
-            Some((i, k, _)) => {
-                shares[i] += k;
-                *remaining -= k;
-            }
-            None => break, // no listed member benefits from another replica
+            None => None,
         }
     }
+
+    /// Record a freshly computed evaluation (counted as a miss),
+    /// evicting the oldest entry at the cap.
+    fn admit(&mut self, b: u32, v: (PipelineConfig, bool)) {
+        debug_assert!(!self.map.contains_key(&b), "duplicate admit for share {b}");
+        self.misses += 1;
+        if self.order.len() >= EVAL_CACHE_CAP {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+        self.order.push_back(b);
+        self.map.insert(b, v);
+    }
 }
 
-/// Shared prologue of the joint solvers: per-member floors (one
-/// replica per stage — TWO for zone-spread members on a multi-zone
-/// inventory), Pareto-pruned option sets (filtered to node-placeable
-/// options when an inventory is given; spread members additionally
-/// drop variants hostable in < 2 zones and have every option's induced
-/// replica count raised to the spread floor), the memoized evaluation
-/// cache and the min-feasible lookahead targets.  `None` when `budget`
-/// cannot cover the floors.
-struct GreedyCtx {
+/// Engine cache telemetry for one joint solve, surfaced in the decision
+/// journal's full-`solve` events.  Deterministic across thread counts
+/// (the prewarm admits in scan order), so journals stay byte-identical
+/// under `IPA_SOLVER_THREADS`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SolveStats {
+    /// Memo hits across every member cache.
+    pub cache_hits: u64,
+    /// Evaluations actually computed (= admissions).
+    pub cache_misses: u64,
+}
+
+impl SolveStats {
+    /// Component-wise sum (the cells planner aggregates per-cell stats).
+    pub fn merged(self, other: SolveStats) -> SolveStats {
+        SolveStats {
+            cache_hits: self.cache_hits + other.cache_hits,
+            cache_misses: self.cache_misses + other.cache_misses,
+        }
+    }
+}
+
+/// The ENGINE layer of the joint solver: per-member floors (one replica
+/// per stage — TWO for zone-spread members on a multi-zone inventory),
+/// Pareto-pruned option sets (filtered to node-placeable options when
+/// an inventory is given), the bounded memoized evaluations, the
+/// min-feasible lookahead targets, and the greedy share machinery.
+/// [`solve_fleet`] / [`solve_fleet_tiers`] / [`solve_fleet_placed`]
+/// drive it as thin policies, and [`crate::fleet::cells`] reuses it
+/// unchanged for hierarchical solves.
+///
+/// Construction and the greedy passes fan independent per-member work
+/// across [`solver_threads`] scoped workers; every scan that READS the
+/// memo first prewarms exactly its read set in scan order
+/// ([`ShareEngine::ensure`]), so the selection logic itself stays
+/// sequential and results are byte-identical at any thread count.
+pub(crate) struct ShareEngine<'a> {
+    problems: &'a [Problem<'a>],
     floors: Vec<u32>,
     /// Per-stage replica floor of each member (2 when spread is active).
     min_per: Vec<u32>,
     options: Vec<Vec<Vec<StageOption>>>,
-    cache: Vec<HashMap<u32, (PipelineConfig, bool)>>,
     min_b: Vec<Option<u32>>,
+    cache: Vec<EvalCache>,
+}
+
+impl<'a> ShareEngine<'a> {
+    /// `None` when `budget` cannot cover the per-member floors.
+    pub(crate) fn new(
+        problems: &'a [Problem<'a>],
+        budget: u32,
+        inv: Option<&NodeInventory>,
+        spread: &[bool],
+    ) -> Option<ShareEngine<'a>> {
+        let n = problems.len();
+        let min_per: Vec<u32> =
+            (0..n).map(|i| if spread_active(spread, i, inv) { 2 } else { 1 }).collect();
+        let floors: Vec<u32> = problems
+            .iter()
+            .zip(&min_per)
+            .map(|(p, &m)| p.profiles.stages.len() as u32 * m)
+            .collect();
+        let floor_total: u32 = floors.iter().sum();
+        if budget < floor_total {
+            return None;
+        }
+        // Option enumeration + the min-feasible lookahead search are
+        // the dominant construction cost at fleet scale and independent
+        // across members — fanned out, merged in member order.
+        let idx: Vec<usize> = (0..n).collect();
+        let mp = &min_per;
+        let built: Vec<(Vec<Vec<StageOption>>, Option<u32>)> =
+            scoped_map(solver_threads(), &idx, |_, &i| {
+                let p = &problems[i];
+                let mut os = p.stage_options();
+                if let Some(inv) = inv {
+                    // A variant no node shape can host one replica of
+                    // can never be placed — drop it before the solve.
+                    filter_options(&mut os, inv, mp[i] > 1, mp[i]);
+                }
+                let mb = min_feasible_replicas(p, &os, budget);
+                (os, mb)
+            });
+        let mut options = Vec::with_capacity(n);
+        let mut min_b = Vec::with_capacity(n);
+        for (os, mb) in built {
+            options.push(os);
+            min_b.push(mb);
+        }
+        Some(ShareEngine {
+            problems,
+            floors,
+            min_per,
+            options,
+            min_b,
+            cache: vec![EvalCache::default(); n],
+        })
+    }
+
+    pub(crate) fn floors(&self) -> &[u32] {
+        &self.floors
+    }
+
+    pub(crate) fn min_per(&self) -> &[u32] {
+        &self.min_per
+    }
+
+    pub(crate) fn stats(&self) -> SolveStats {
+        SolveStats {
+            cache_hits: self.cache.iter().map(|c| c.hits).sum(),
+            cache_misses: self.cache.iter().map(|c| c.misses).sum(),
+        }
+    }
+
+    /// Compute (in parallel) every listed evaluation not yet cached and
+    /// admit the results in list order — the deterministic prewarm each
+    /// greedy scan runs before reading.  List order IS the sequential
+    /// scan order, so FIFO eviction and the hit/miss counters match the
+    /// threads=1 path exactly.
+    pub(crate) fn ensure(&mut self, keys: &[(usize, u32)]) {
+        let mut missing: Vec<(usize, u32)> = Vec::new();
+        for &(i, b) in keys {
+            if !self.cache[i].map.contains_key(&b) && !missing.contains(&(i, b)) {
+                missing.push((i, b));
+            }
+        }
+        if missing.is_empty() {
+            return;
+        }
+        let problems = self.problems;
+        let options = &self.options;
+        let min_per = &self.min_per;
+        let computed: Vec<(PipelineConfig, bool)> =
+            scoped_map(solver_threads(), &missing, |_, &(i, b)| {
+                eval_member_at(&problems[i], &options[i], b, min_per[i])
+            });
+        for ((i, b), v) in missing.into_iter().zip(computed) {
+            self.cache[i].admit(b, v);
+        }
+    }
+
+    /// Memoized member evaluation; computes inline on a (rare,
+    /// eviction-induced) miss.
+    pub(crate) fn eval(&mut self, i: usize, b: u32) -> (PipelineConfig, bool) {
+        if let Some(v) = self.cache[i].lookup(b) {
+            return v;
+        }
+        let v = eval_member_at(&self.problems[i], &self.options[i], b, self.min_per[i]);
+        self.cache[i].admit(b, v.clone());
+        v
+    }
+
+    pub(crate) fn obj(&mut self, i: usize, b: u32) -> f64 {
+        self.eval(i, b).0.objective
+    }
+
+    /// The evaluations one greedy iteration's scan reads, in scan
+    /// order: each listed member at its current share, at +1, and at
+    /// its min-feasible lookahead jump when that jump fits `remaining`.
+    fn grant_keys(&self, members: &[usize], shares: &[u32], remaining: u32) -> Vec<(usize, u32)> {
+        let mut keys = Vec::with_capacity(members.len() * 3);
+        for &i in members {
+            keys.push((i, shares[i]));
+            keys.push((i, shares[i] + 1)); // remaining >= 1 inside the loop
+            if let Some(mb) = self.min_b[i] {
+                let k = mb.saturating_sub(shares[i]);
+                if k > 1 && k <= remaining {
+                    keys.push((i, mb));
+                }
+            }
+        }
+        keys
+    }
+
+    /// The greedy marginal-gain pass over a *subset* of members: while
+    /// `remaining` replicas are left, grant the next one (or a
+    /// lookahead jump to a member's minimum feasible allocation) to
+    /// whichever listed member buys the most objective per replica.
+    /// Mutates `shares` and `remaining` in place; stops when no listed
+    /// member benefits.  Each iteration prewarms its read set, then
+    /// selects with a strictly sequential scan.
+    pub(crate) fn greedy_grant(
+        &mut self,
+        members: &[usize],
+        shares: &mut [u32],
+        remaining: &mut u32,
+    ) {
+        while *remaining > 0 {
+            let keys = self.grant_keys(members, shares, *remaining);
+            self.ensure(&keys);
+            let mut best: Option<(usize, u32, f64)> = None;
+            for &i in members {
+                let cur = self.obj(i, shares[i]);
+                let mut cands = vec![1u32];
+                if let Some(mb) = self.min_b[i] {
+                    if mb > shares[i] {
+                        cands.push(mb - shares[i]);
+                    }
+                }
+                for &k in &cands {
+                    if k == 0 || k > *remaining {
+                        continue;
+                    }
+                    let gain = self.obj(i, shares[i] + k) - cur;
+                    if gain <= 1e-12 {
+                        continue;
+                    }
+                    let rate = gain / k as f64;
+                    if best.as_ref().is_none_or(|&(_, _, r)| rate > r) {
+                        best = Some((i, k, rate));
+                    }
+                }
+            }
+            match best {
+                Some((i, k, _)) => {
+                    shares[i] += k;
+                    *remaining -= k;
+                }
+                None => break, // no listed member benefits from another replica
+            }
+        }
+    }
+
+    /// The share computation both joint solvers run: a single priority
+    /// class takes the plain greedy with the even-split floor; several
+    /// classes take the lexicographic tier loop (no even-split floor —
+    /// precedence is the point).  Reusable across budgets on one engine
+    /// (the packed solver walks budgets downward keeping the memo warm).
+    pub(crate) fn solve_shares(&mut self, budget: u32, priorities: &[u32]) -> Vec<u32> {
+        let n = self.problems.len();
+        let floor_total: u32 = self.floors.iter().sum();
+        let mut shares = self.floors.clone();
+        let mut remaining = budget - floor_total;
+        if priorities.iter().all(|&p| p == priorities[0]) {
+            let all: Vec<usize> = (0..n).collect();
+            self.greedy_grant(&all, &mut shares, &mut remaining);
+            // Never worse than the even split: compute both, keep the better.
+            let even = even_shares(budget, &self.floors);
+            let mut keys: Vec<(usize, u32)> = (0..n).map(|i| (i, shares[i])).collect();
+            keys.extend((0..n).map(|i| (i, even[i])));
+            self.ensure(&keys);
+            let greedy_total: f64 = (0..n).map(|i| self.obj(i, shares[i])).sum();
+            let even_total: f64 = (0..n).map(|i| self.obj(i, even[i])).sum();
+            if greedy_total + 1e-12 >= even_total {
+                shares
+            } else {
+                even
+            }
+        } else {
+            let mut classes: Vec<u32> = priorities.to_vec();
+            classes.sort_unstable();
+            classes.dedup();
+            for &class in classes.iter().rev() {
+                let tier: Vec<usize> = (0..n).filter(|&i| priorities[i] == class).collect();
+                self.greedy_grant(&tier, &mut shares, &mut remaining);
+                if remaining == 0 {
+                    break;
+                }
+            }
+            shares
+        }
+    }
+
+    /// Materialize an allocation for a share vector through the memo
+    /// (same outcome as [`allocate_at`], no re-solve when warm).
+    pub(crate) fn allocate(&mut self, shares: &[u32]) -> FleetAllocation {
+        let keys: Vec<(usize, u32)> = shares.iter().copied().enumerate().collect();
+        self.ensure(&keys);
+        let members: Vec<MemberAllocation> = shares
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let (config, solved) = self.eval(i, b);
+                let replicas = config.total_replicas();
+                MemberAllocation { budget: b, config, replicas, solved }
+            })
+            .collect();
+        FleetAllocation {
+            budget: shares.iter().sum(),
+            replicas_used: members.iter().map(|m| m.replicas).sum(),
+            total_objective: members.iter().map(|m| m.config.objective).sum(),
+            members,
+            packing: None,
+        }
+    }
+}
+
+/// Flat-vs-cells dispatch: at or above
+/// [`crate::fleet::cells::cell_threshold`] members with uniform
+/// priorities the fleet is partitioned into cells solved independently
+/// and rebalanced (tier precedence is global, so tiered fleets keep
+/// the flat path); below it, one flat engine.  All three public
+/// solvers go through this, so flat and hierarchical paths see the
+/// same activation rule.
+enum Planner<'a> {
+    Flat(ShareEngine<'a>),
+    Cells(CellPlanner<'a>),
+}
+
+impl<'a> Planner<'a> {
+    fn new(
+        problems: &'a [Problem<'a>],
+        budget: u32,
+        inv: Option<&NodeInventory>,
+        spread: &[bool],
+        priorities: &[u32],
+    ) -> Option<Planner<'a>> {
+        let n = problems.len();
+        let uniform = priorities.iter().all(|&p| p == priorities[0]);
+        if uniform && n >= crate::fleet::cells::cell_threshold() {
+            return CellPlanner::new(
+                problems,
+                budget,
+                inv,
+                spread,
+                crate::fleet::cells::DEFAULT_CELL_SIZE,
+            )
+            .map(Planner::Cells);
+        }
+        ShareEngine::new(problems, budget, inv, spread).map(Planner::Flat)
+    }
+
+    fn solve_shares(&mut self, budget: u32, priorities: &[u32]) -> Vec<u32> {
+        match self {
+            Planner::Flat(e) => e.solve_shares(budget, priorities),
+            Planner::Cells(c) => c.solve_shares(budget),
+        }
+    }
+
+    fn allocate(&mut self, shares: &[u32]) -> FleetAllocation {
+        match self {
+            Planner::Flat(e) => e.allocate(shares),
+            Planner::Cells(c) => c.allocate(shares),
+        }
+    }
+
+    fn floors(&self) -> &[u32] {
+        match self {
+            Planner::Flat(e) => e.floors(),
+            Planner::Cells(c) => c.floors(),
+        }
+    }
+
+    fn min_per(&self) -> &[u32] {
+        match self {
+            Planner::Flat(e) => e.min_per(),
+            Planner::Cells(c) => c.min_per(),
+        }
+    }
+
+    fn stats(&self) -> SolveStats {
+        match self {
+            Planner::Flat(e) => e.stats(),
+            Planner::Cells(c) => c.stats(),
+        }
+    }
 }
 
 /// Does member `i`'s zone-spread flag bite?  Only on an inventory with
@@ -528,149 +894,39 @@ fn filter_options(
     }
 }
 
-fn greedy_ctx(
-    problems: &[Problem],
-    budget: u32,
-    inv: Option<&NodeInventory>,
-    spread: &[bool],
-) -> Option<GreedyCtx> {
-    let n = problems.len();
-    let min_per: Vec<u32> =
-        (0..n).map(|i| if spread_active(spread, i, inv) { 2 } else { 1 }).collect();
-    let floors: Vec<u32> = problems
-        .iter()
-        .zip(&min_per)
-        .map(|(p, &m)| p.profiles.stages.len() as u32 * m)
-        .collect();
-    let floor_total: u32 = floors.iter().sum();
-    if budget < floor_total {
-        return None;
-    }
-    let options: Vec<Vec<Vec<StageOption>>> = problems
-        .iter()
-        .enumerate()
-        .map(|(i, p)| {
-            let mut os = p.stage_options();
-            if let Some(inv) = inv {
-                // A variant no node shape can host one replica of can
-                // never be placed — drop it before the solve.
-                filter_options(&mut os, inv, min_per[i] > 1, min_per[i]);
-            }
-            os
-        })
-        .collect();
-    // Lookahead targets: each member's minimum feasible allocation, so
-    // the greedy can see across an infeasibility threshold.
-    let min_b: Vec<Option<u32>> =
-        (0..n).map(|i| min_feasible_replicas(&problems[i], &options[i], budget)).collect();
-    Some(GreedyCtx { floors, min_per, options, cache: vec![HashMap::new(); n], min_b })
-}
-
-/// The share computation both joint solvers run: a single priority
-/// class takes the plain greedy with the even-split floor; several
-/// classes take the lexicographic tier loop (no even-split floor —
-/// precedence is the point).  Reusable across budgets on one ctx (the
-/// packed solver walks budgets downward re-using the eval cache).
-fn solve_shares(
-    problems: &[Problem],
-    ctx: &mut GreedyCtx,
-    budget: u32,
-    priorities: &[u32],
-) -> Vec<u32> {
-    let n = problems.len();
-    let floor_total: u32 = ctx.floors.iter().sum();
-    let mut shares = ctx.floors.clone();
-    let mut remaining = budget - floor_total;
-    if priorities.iter().all(|&p| p == priorities[0]) {
-        let all: Vec<usize> = (0..n).collect();
-        greedy_grant(
-            problems, &ctx.options, &mut ctx.cache, &ctx.min_per, &ctx.min_b, &all,
-            &mut shares, &mut remaining,
-        );
-        // Never worse than the even split: compute both, keep the better.
-        let even = even_shares(budget, &ctx.floors);
-        let greedy_total: f64 = (0..n)
-            .map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, &ctx.min_per, i, shares[i]))
-            .sum();
-        let even_total: f64 = (0..n)
-            .map(|i| obj_at(problems, &ctx.options, &mut ctx.cache, &ctx.min_per, i, even[i]))
-            .sum();
-        if greedy_total + 1e-12 >= even_total {
-            shares
-        } else {
-            even
-        }
-    } else {
-        let mut classes: Vec<u32> = priorities.to_vec();
-        classes.sort_unstable();
-        classes.dedup();
-        for &class in classes.iter().rev() {
-            let tier: Vec<usize> = (0..n).filter(|&i| priorities[i] == class).collect();
-            greedy_grant(
-                problems,
-                &ctx.options,
-                &mut ctx.cache,
-                &ctx.min_per,
-                &ctx.min_b,
-                &tier,
-                &mut shares,
-                &mut remaining,
-            );
-            if remaining == 0 {
-                break;
-            }
-        }
-        shares
-    }
-}
-
-/// Materialize an allocation for a share vector through the ctx's
-/// memoized evaluations (same outcome as [`allocate_at`], no re-solve).
-fn allocate_from_ctx(
-    problems: &[Problem],
-    ctx: &mut GreedyCtx,
-    shares: &[u32],
-) -> FleetAllocation {
-    let members: Vec<MemberAllocation> = shares
-        .iter()
-        .enumerate()
-        .map(|(i, &b)| {
-            let (config, solved) =
-                eval_cached(problems, &ctx.options, &mut ctx.cache, &ctx.min_per, i, b);
-            let replicas = config.total_replicas();
-            MemberAllocation { budget: b, config, replicas, solved }
-        })
-        .collect();
-    FleetAllocation {
-        budget: shares.iter().sum(),
-        replicas_used: members.iter().map(|m| m.replicas).sum(),
-        total_objective: members.iter().map(|m| m.config.objective).sum(),
-        members,
-        packing: None,
-    }
-}
-
 /// Greedy marginal-gain joint solve.  `None` only when `budget` cannot
 /// cover one replica per stage across the fleet; otherwise the returned
 /// allocation respects the budget and its total objective is at least
 /// the even-split baseline's.
 pub fn solve_fleet(problems: &[Problem], budget: u32) -> Option<FleetAllocation> {
+    solve_fleet_stats(problems, budget).map(|(a, _)| a)
+}
+
+/// [`solve_fleet`] plus the engine's cache telemetry.
+pub fn solve_fleet_stats(
+    problems: &[Problem],
+    budget: u32,
+) -> Option<(FleetAllocation, SolveStats)> {
     let n = problems.len();
     if n == 0 {
-        return Some(FleetAllocation {
-            members: Vec::new(),
-            budget,
-            replicas_used: 0,
-            total_objective: 0.0,
-            packing: None,
-        });
+        return Some((
+            FleetAllocation {
+                members: Vec::new(),
+                budget,
+                replicas_used: 0,
+                total_objective: 0.0,
+                packing: None,
+            },
+            SolveStats::default(),
+        ));
     }
-    let mut ctx = greedy_ctx(problems, budget, None, &[])?;
-    let shares = solve_shares(problems, &mut ctx, budget, &vec![0; n]);
-    let mut alloc = allocate_from_ctx(problems, &mut ctx, &shares);
+    let zeros = vec![0u32; n];
+    let mut planner = Planner::new(problems, budget, None, &[], &zeros)?;
+    let shares = planner.solve_shares(budget, &zeros);
+    let mut alloc = planner.allocate(&shares);
     alloc.budget = budget;
     debug_assert!(alloc.replicas_used <= budget, "fleet allocation exceeds budget");
-    Some(alloc)
+    Some((alloc, planner.stats()))
 }
 
 /// Priority-tiered joint solve: members are grouped by priority class
@@ -689,17 +945,26 @@ pub fn solve_fleet_tiers(
     budget: u32,
     priorities: &[u32],
 ) -> Option<FleetAllocation> {
+    solve_fleet_tiers_stats(problems, budget, priorities).map(|(a, _)| a)
+}
+
+/// [`solve_fleet_tiers`] plus the engine's cache telemetry.
+pub fn solve_fleet_tiers_stats(
+    problems: &[Problem],
+    budget: u32,
+    priorities: &[u32],
+) -> Option<(FleetAllocation, SolveStats)> {
     let n = problems.len();
     assert_eq!(priorities.len(), n, "one priority class per member");
     if n == 0 || priorities.iter().all(|&p| p == priorities[0]) {
-        return solve_fleet(problems, budget);
+        return solve_fleet_stats(problems, budget);
     }
-    let mut ctx = greedy_ctx(problems, budget, None, &[])?;
-    let shares = solve_shares(problems, &mut ctx, budget, priorities);
-    let mut alloc = allocate_from_ctx(problems, &mut ctx, &shares);
+    let mut planner = Planner::new(problems, budget, None, &[], priorities)?;
+    let shares = planner.solve_shares(budget, priorities);
+    let mut alloc = planner.allocate(&shares);
     alloc.budget = budget;
     debug_assert!(alloc.replicas_used <= budget, "tiered allocation exceeds budget");
-    Some(alloc)
+    Some((alloc, planner.stats()))
 }
 
 /// The bin-packing joint solve over a heterogeneous node inventory.
@@ -745,32 +1010,46 @@ pub fn solve_fleet_placed(
     spread: &[bool],
     prev: Option<&Packing>,
 ) -> Option<FleetAllocation> {
+    solve_fleet_placed_stats(problems, inv, priorities, spread, prev).map(|(a, _)| a)
+}
+
+/// [`solve_fleet_placed`] plus the engine's cache telemetry.
+pub fn solve_fleet_placed_stats(
+    problems: &[Problem],
+    inv: &NodeInventory,
+    priorities: &[u32],
+    spread: &[bool],
+    prev: Option<&Packing>,
+) -> Option<(FleetAllocation, SolveStats)> {
     let n = problems.len();
     assert_eq!(priorities.len(), n, "one priority class per member");
     let cap = inv.replica_cap();
     if n == 0 {
-        return Some(FleetAllocation {
-            members: Vec::new(),
-            budget: cap,
-            replicas_used: 0,
-            total_objective: 0.0,
-            packing: inv.pack(&[]),
-        });
+        return Some((
+            FleetAllocation {
+                members: Vec::new(),
+                budget: cap,
+                replicas_used: 0,
+                total_objective: 0.0,
+                packing: inv.pack(&[]),
+            },
+            SolveStats::default(),
+        ));
     }
     let pack =
         |demands: &[crate::fleet::nodes::PackItem]| inv.pack_prefer_sticky(demands, prev, spread);
-    let mut ctx = greedy_ctx(problems, cap, Some(inv), spread)?;
-    let floor_total: u32 = ctx.floors.iter().sum();
+    let mut planner = Planner::new(problems, cap, Some(inv), spread, priorities)?;
+    let floor_total: u32 = planner.floors().iter().sum();
     let mut b = cap;
     loop {
-        let shares = solve_shares(problems, &mut ctx, b, priorities);
-        let mut alloc = allocate_from_ctx(problems, &mut ctx, &shares);
+        let shares = planner.solve_shares(b, priorities);
+        let mut alloc = planner.allocate(&shares);
         let refs: Vec<&PipelineConfig> = alloc.members.iter().map(|m| &m.config).collect();
         if let Some(packing) = pack(&config_demands(&refs)) {
             alloc.budget = b;
             alloc.packing = Some(packing);
             debug_assert!(alloc.replicas_used <= b, "packed allocation exceeds budget");
-            return Some(alloc);
+            return Some((alloc, planner.stats()));
         }
         if b == floor_total {
             break;
@@ -785,8 +1064,8 @@ pub fn solve_fleet_placed(
     // (one replica per stage, two for spread-active members).
     let members: Vec<MemberAllocation> = problems
         .iter()
-        .zip(&ctx.floors)
-        .zip(&ctx.min_per)
+        .zip(planner.floors())
+        .zip(planner.min_per())
         .map(|((p, &f), &m)| {
             let config = fallback_min(p, f, m);
             let replicas = config.total_replicas();
@@ -795,13 +1074,16 @@ pub fn solve_fleet_placed(
         .collect();
     let refs: Vec<&PipelineConfig> = members.iter().map(|m| &m.config).collect();
     let packing = pack(&config_demands(&refs))?;
-    Some(FleetAllocation {
-        budget: floor_total,
-        replicas_used: members.iter().map(|m| m.replicas).sum(),
-        total_objective: members.iter().map(|m| m.config.objective).sum(),
-        members,
-        packing: Some(packing),
-    })
+    Some((
+        FleetAllocation {
+            budget: floor_total,
+            replicas_used: members.iter().map(|m| m.replicas).sum(),
+            total_objective: members.iter().map(|m| m.config.objective).sum(),
+            members,
+            packing: Some(packing),
+        },
+        planner.stats(),
+    ))
 }
 
 /// Exhaustive best split for tiny fleets (the greedy's cross-check):
@@ -1340,15 +1622,34 @@ impl FleetAdapter {
     /// (shares already enforce the scalar budget) and answer
     /// `Ok(None)`; node pools run the bin-packer (sticky first, plain
     /// FFD fallback) and answer `Err(())` when the fleet does not fit.
+    ///
+    /// When the caller knows WHICH members' configurations changed
+    /// (`changed[i]`, incremental re-solves and preemption), the
+    /// delta-pack fast path re-places only those members against the
+    /// retained occupancy of the rest — O(changed) instead of
+    /// O(fleet × nodes) — and any precondition miss falls through to
+    /// the full sticky pack.
     fn repack(
         &self,
         configs: &[PipelineConfig],
         prev: Option<&Packing>,
+        changed: Option<&[bool]>,
     ) -> Result<Option<Packing>, ()> {
         match &self.inventory {
             Some(inv) => {
                 let refs: Vec<&PipelineConfig> = configs.iter().collect();
                 let demands = config_demands(&refs);
+                if crate::fleet::nodes::delta_pack_enabled() {
+                    if let (Some(prev), Some(changed)) = (prev, changed) {
+                        if changed.iter().any(|&c| !c) {
+                            if let Some(p) =
+                                inv.pack_delta(&demands, prev, changed, &self.spread)
+                            {
+                                return Ok(Some(p));
+                            }
+                        }
+                    }
+                }
                 inv.pack_prefer_sticky(&demands, prev, &self.spread).map(Some).ok_or(())
             }
             None => Ok(None),
@@ -1388,20 +1689,46 @@ impl FleetAdapter {
         // Only node pools can reject the result (repack failure), so
         // only they pay for the restore snapshot.
         let original = self.inventory.is_some().then(|| cache.clone());
-        for (i, &l) in lambdas.iter().enumerate() {
-            let l = l.max(0.5);
-            if (l - cache.lambdas[i]).abs() / cache.lambdas[i].max(0.5) <= self.resolve_threshold
-            {
-                continue;
+        let moved: Vec<bool> = lambdas
+            .iter()
+            .zip(&cache.lambdas)
+            .map(|(&l, &old)| (l.max(0.5) - old).abs() / old.max(0.5) > self.resolve_threshold)
+            .collect();
+        let moved_idx: Vec<usize> = (0..lambdas.len()).filter(|&i| moved[i]).collect();
+        // The moved members' budget-capped re-solves are independent —
+        // fan them out like the joint engine does, merged in member
+        // order.  (`&self` is not Sync — `predictors` holds `Box<dyn
+        // Predictor + Send>` — so the closure captures the Sync fields
+        // it needs instead.)
+        let specs = &self.specs;
+        let profiles = &self.profiles;
+        let metric = self.metric;
+        let max_replicas = self.config.max_replicas.min(self.budget);
+        let inv = self.inventory.as_ref();
+        let spread = &self.spread;
+        let shares = &cache.shares;
+        let resolved = scoped_map(solver_threads(), &moved_idx, |_, &i| {
+            let p = Problem {
+                spec: &specs[i],
+                profiles: &profiles[i],
+                lambda: lambdas[i].max(0.5),
+                metric,
+                max_replicas,
+            };
+            let spread_on = spread_active(spread, i, inv);
+            let min_per = if spread_on { 2 } else { 1 };
+            let mut opts = p.stage_options();
+            if let Some(inv) = inv {
+                filter_options(&mut opts, inv, spread_on, min_per);
             }
-            let p = self.member_problem(i, l);
-            let opts = self.member_options(&p, i);
-            let (cfg, solved) = eval_member_at(&p, &opts, cache.shares[i], self.member_min(i));
+            eval_member_at(&p, &opts, shares[i], min_per)
+        });
+        for (&i, (cfg, solved)) in moved_idx.iter().zip(resolved) {
             cache.configs[i] = cfg;
             cache.solved[i] = solved;
-            cache.lambdas[i] = l;
+            cache.lambdas[i] = lambdas[i].max(0.5);
         }
-        match self.repack(&cache.configs, cache.packing.as_ref()) {
+        match self.repack(&cache.configs, cache.packing.as_ref(), Some(&moved)) {
             Ok(p) => cache.packing = p,
             Err(()) => {
                 // moved members picked shapes the nodes cannot host at
@@ -1442,13 +1769,13 @@ impl FleetAdapter {
         let problems: Vec<Problem> = (0..self.specs.len())
             .map(|i| self.member_problem(i, lambdas[i]))
             .collect();
-        let alloc = match &self.inventory {
+        let (alloc, stats) = match &self.inventory {
             Some(inv) => {
                 let prev = self.cache.as_ref().and_then(|c| c.packing.as_ref());
-                solve_fleet_placed(&problems, inv, &self.priorities, &self.spread, prev)
+                solve_fleet_placed_stats(&problems, inv, &self.priorities, &self.spread, prev)
                     .expect("floor packability was checked by with_tuning")
             }
-            None => solve_fleet_tiers(&problems, self.budget, &self.priorities)
+            None => solve_fleet_tiers_stats(&problems, self.budget, &self.priorities)
                 .expect("budget >= stage floor was checked at construction"),
         };
         self.full_solves += 1;
@@ -1465,21 +1792,38 @@ impl FleetAdapter {
             // Rejected candidates: what one more replica would have
             // bought each member — the marginal grant the greedy
             // declined.  Pure budget-capped re-solves, run only with a
-            // journal attached; they touch no adapter state.
-            let rejected: Vec<Json> = (0..self.specs.len())
-                .map(|i| {
-                    let p = self.member_problem(i, cache.lambdas[i]);
-                    let opts = self.member_options(&p, i);
-                    let (cfg, solved) =
-                        eval_member_at(&p, &opts, cache.shares[i] + 1, self.member_min(i));
-                    Json::obj()
-                        .set("member", i as i64)
-                        .set("next_share", (cache.shares[i] + 1) as i64)
-                        .set("cost", cfg.cost)
-                        .set("objective", cfg.objective)
-                        .set("solved", solved)
-                })
-                .collect();
+            // journal attached; they touch no adapter state, and — like
+            // the incremental path — fan out over the Sync fields
+            // (`&self` is not Sync).
+            let specs = &self.specs;
+            let profiles = &self.profiles;
+            let metric = self.metric;
+            let max_replicas = self.config.max_replicas.min(self.budget);
+            let inv = self.inventory.as_ref();
+            let spread = &self.spread;
+            let idx: Vec<usize> = (0..self.specs.len()).collect();
+            let rejected: Vec<Json> = scoped_map(solver_threads(), &idx, |_, &i| {
+                let p = Problem {
+                    spec: &specs[i],
+                    profiles: &profiles[i],
+                    lambda: cache.lambdas[i],
+                    metric,
+                    max_replicas,
+                };
+                let spread_on = spread_active(spread, i, inv);
+                let min_per = if spread_on { 2 } else { 1 };
+                let mut opts = p.stage_options();
+                if let Some(inv) = inv {
+                    filter_options(&mut opts, inv, spread_on, min_per);
+                }
+                let (cfg, solved) = eval_member_at(&p, &opts, cache.shares[i] + 1, min_per);
+                Json::obj()
+                    .set("member", i as i64)
+                    .set("next_share", (cache.shares[i] + 1) as i64)
+                    .set("cost", cfg.cost)
+                    .set("objective", cfg.objective)
+                    .set("solved", solved)
+            });
             self.jot(
                 "solve",
                 Json::obj()
@@ -1490,6 +1834,8 @@ impl FleetAdapter {
                         "shares",
                         cache.shares.iter().map(|&s| s as i64).collect::<Vec<i64>>(),
                     )
+                    .set("cache_hits", stats.cache_hits as i64)
+                    .set("cache_misses", stats.cache_misses as i64)
                     .set("rejected", rejected),
             );
         }
@@ -1733,8 +2079,15 @@ impl FleetAdapter {
             cache.shares = shares;
             // Node safety: the post-preemption fleet must still pack —
             // otherwise this burster's preemption is abandoned (the
-            // slow path will re-split at the next tick).
-            match self.repack(&cache.configs, cache.packing.as_ref()) {
+            // slow path will re-split at the next tick).  Only the
+            // burster and its donors changed configuration, so the
+            // delta-pack fast path applies.
+            let mut changed = vec![false; n];
+            changed[bi] = true;
+            for &(j, _) in &from {
+                changed[j] = true;
+            }
+            match self.repack(&cache.configs, cache.packing.as_ref(), Some(&changed)) {
                 Ok(pk) => cache.packing = pk,
                 Err(()) => {
                     self.cache = Some(original.expect("repack() only fails on node pools"));

@@ -444,6 +444,48 @@ impl FleetSpec {
             nodes: None,
         }
     }
+
+    /// A deterministic `n`-member scale fleet: the five paper pipelines
+    /// and the five workload archetypes cycled, every third member in
+    /// the throughput class, uniform priority (so the hierarchical cell
+    /// solver activates at scale — tiers would force the flat path),
+    /// 8 replicas of budget per member.  `examples/fleet_serve
+    /// --members N` and the `fleet_scale` bench build their fleets
+    /// here; pair with [`NodeInventory::scaled`] for the node pool.
+    pub fn synthetic(n: usize) -> FleetSpec {
+        const PIPELINES: [&str; 5] = ["video", "audio-sent", "nlp", "sum-qa", "audio-qa"];
+        const PATTERNS: [Pattern; 5] = [
+            Pattern::SteadyLow,
+            Pattern::Bursty,
+            Pattern::Fluctuating,
+            Pattern::SteadyHigh,
+            Pattern::Composite,
+        ];
+        let members: Vec<FleetMember> = (0..n)
+            .map(|i| FleetMember {
+                name: format!("syn-{i:03}"),
+                pipeline: PIPELINES[i % PIPELINES.len()].into(),
+                pattern: PATTERNS[i % PATTERNS.len()],
+                seed: 100 + i as u64,
+                sla_scale: 1.0,
+                priority: 0,
+                sla_class: if i % 3 == 2 {
+                    SlaClass::Throughput
+                } else {
+                    SlaClass::LatencyCritical
+                },
+                spread: false,
+            })
+            .collect();
+        FleetSpec {
+            name: format!("synthetic-{n}"),
+            members,
+            replica_budget: 8 * n as u32,
+            seconds: 240,
+            correlation: FleetCorrelation::Antiphase { period: 300 },
+            nodes: None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -458,6 +500,17 @@ mod tests {
         assert_eq!(specs.len(), 3);
         assert_eq!(specs[2].n_stages(), 3); // nlp
         assert_eq!(f.min_replicas().unwrap(), 2 + 2 + 3);
+    }
+
+    #[test]
+    fn synthetic_fleets_are_valid_and_uniform_priority() {
+        for n in [1, 5, 16, 50] {
+            let f = FleetSpec::synthetic(n);
+            f.validate().unwrap_or_else(|e| panic!("synthetic({n}): {e}"));
+            assert_eq!(f.members.len(), n);
+            assert!(f.priorities().iter().all(|&p| p == 0), "uniform so cells activate");
+            assert_eq!(f, FleetSpec::synthetic(n), "construction is deterministic");
+        }
     }
 
     #[test]

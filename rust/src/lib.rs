@@ -239,11 +239,30 @@ pub mod fleet {
     //! [`crate::cluster::core::ClusterCore`] per member behind one
     //! budget/inventory, with rolling-reconfig overshoot accounting,
     //! mirrored pool resizing, zone kills, and the replica-seconds +
-    //! node-seconds + migration cost ledgers).  The fleet drivers live
+    //! node-seconds + migration cost ledgers).
+    //!
+    //! The solver is split into ENGINE vs POLICY layers for scale:
+    //! the engine (`solver::ShareEngine`) owns the bounded memoized
+    //! per-member budget-capped solves and fans independent member
+    //! evaluations across [`solver::solver_threads`] scoped workers
+    //! with a deterministic scan-order merge; the public solvers are
+    //! thin policies over it, and [`cells`] reuses the engine
+    //! unchanged to go hierarchical at [`cells::cell_threshold`]+
+    //! members (independent per-cell solves + a top-level
+    //! marginal-gain budget rebalancer).  On the packing side,
+    //! [`nodes::NodeInventory::pack_delta`] re-places only the members
+    //! whose configuration changed against a retained occupancy index
+    //! (full sticky FFD as the universal fallback).  All three paths
+    //! are byte-deterministic at any thread count and keep legacy
+    //! sequential/flat A/B switches (`IPA_SOLVER_THREADS=1`,
+    //! `IPA_CELL_THRESHOLD`, `IPA_DELTA_PACK=0`).
+    //!
+    //! The fleet drivers live
     //! with their clocks: [`crate::simulator::sim::run_fleet_des`]
     //! (plus [`crate::simulator::sim::run_fleet_des_faults`]) and
     //! [`crate::serving::engine::serve_fleet_with`].
     pub mod autoscaler;
+    pub mod cells;
     pub mod core;
     pub mod nodes;
     pub mod solver;

@@ -173,3 +173,55 @@ impl Drop for ExecutorPool {
         }
     }
 }
+
+/// Deterministic scoped fan-out for CPU-bound batch work (the parallel
+/// fleet solver): apply `f` to every item across up to `threads` scoped
+/// worker threads and return the results IN ITEM ORDER, regardless of
+/// which worker computed what or when.  Work is strided — worker `w`
+/// takes items `w, w+T, w+2T, …` — so the assignment is static and the
+/// merge is an in-order join: callers get byte-identical results at any
+/// thread count.  `threads <= 1` (or ≤ 1 item) runs inline on the
+/// caller's thread with no spawn at all; that IS the sequential path,
+/// not an approximation of it.
+///
+/// Unlike [`ExecutorPool`] this holds no long-lived threads: solver
+/// ticks are bursty and rare (one per adaptation interval), so scoped
+/// spawn-per-call beats keeping a fleet of idle workers warm, and the
+/// borrow-friendly `std::thread::scope` lets `f` capture the solver's
+/// per-member state by reference.
+pub fn scoped_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let workers = threads.min(n);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut i = w;
+                    while i < n {
+                        out.push((i, f(i, &items[i])));
+                        i += workers;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("solver worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|r| r.expect("every index computed")).collect()
+}

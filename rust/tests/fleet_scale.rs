@@ -1,0 +1,417 @@
+//! Solver-scaling acceptance pins (ISSUE 8):
+//!
+//! (a) thread transparency — the parallel per-member solves behind
+//!     `IPA_SOLVER_THREADS` may change HOW the joint solvers compute,
+//!     never WHAT they decide: `solve_fleet` / `solve_fleet_tiers` /
+//!     `solve_fleet_placed` results (packing included) and even the
+//!     engine's cache hit/miss counters are byte-identical at 1, 2 and
+//!     8 threads;
+//! (b) hierarchical cells — the cell-partitioned solve stays within a
+//!     pinned optimality gap of the flat solve on randomized fleets and
+//!     never drops below the global even-split baseline, and the
+//!     `cell_threshold` dispatch inside the public solvers preserves
+//!     those same floors;
+//! (c) delta packing — `pack_delta` keeps every unchanged member's
+//!     replicas exactly where the previous packing had them, respects
+//!     every capacity axis, and its `moved_from` agrees with a
+//!     quadratic reference diff;
+//! (d) telemetry — the bounded eval cache surfaces real hit/miss
+//!     counts through the `_stats` solver variants.
+//!
+//! Tests that flip process-global knobs (solver threads, cell
+//! threshold, delta packing) serialize on one mutex so the rest of the
+//! suite never observes a transient override.
+
+use std::sync::Mutex;
+
+use ipa::fleet::cells::{set_cell_threshold, solve_fleet_cells};
+use ipa::fleet::nodes::{
+    reset_delta_pack, set_delta_pack, NodeInventory, PackItem, Packing, Placement,
+};
+use ipa::fleet::solver::{
+    even_shares, set_solver_threads, solve_fleet, solve_fleet_placed, solve_fleet_stats,
+    solve_fleet_tiers,
+};
+use ipa::models::pipelines::{self, PipelineSpec};
+use ipa::optimizer::ip::Problem;
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::profiler::profile::PipelineProfiles;
+use ipa::resources::ResourceVec;
+use ipa::util::quickcheck::{check, prop_assert};
+
+/// Serializes every test that flips a process-global solver knob.
+static KNOBS: Mutex<()> = Mutex::new(());
+
+fn lock_knobs() -> std::sync::MutexGuard<'static, ()> {
+    KNOBS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const PIPES: [&str; 5] = ["video", "audio-sent", "nlp", "sum-qa", "audio-qa"];
+
+/// `n` members cycling the five paper pipelines, λ spread over a
+/// deterministic ramp.
+fn fleet_parts(n: usize) -> (Vec<PipelineSpec>, Vec<PipelineProfiles>, Vec<f64>) {
+    let specs: Vec<PipelineSpec> =
+        (0..n).map(|i| pipelines::by_name(PIPES[i % PIPES.len()]).unwrap()).collect();
+    let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+    let lambdas: Vec<f64> = (0..n).map(|i| 3.0 + 2.5 * (i % 5) as f64).collect();
+    (specs, profs, lambdas)
+}
+
+fn problems_of<'a>(
+    specs: &'a [PipelineSpec],
+    profs: &'a [PipelineProfiles],
+    lambdas: &[f64],
+) -> Vec<Problem<'a>> {
+    specs
+        .iter()
+        .zip(profs)
+        .zip(lambdas)
+        .map(|((s, p), &l)| Problem::new(s, p, l))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// (a) thread transparency
+// ---------------------------------------------------------------------------
+
+/// All three public solvers (and the engine's cache counters) are
+/// byte-identical at 1, 2 and 8 solver threads — the parallel fan-out
+/// is placement-transparent.
+#[test]
+fn thread_count_never_changes_any_solver_decision() {
+    let _g = lock_knobs();
+    let (specs, profs, lambdas) = fleet_parts(6);
+    let problems = problems_of(&specs, &profs, &lambdas);
+    let budget = 30u32;
+    let priorities = [2u32, 1, 0, 2, 1, 0];
+    let inv = NodeInventory::parse("6x(8c,32g,0a)+2x(16c,64g,1a)").unwrap();
+    // a previous placement for the sticky/incremental path to hold onto
+    set_solver_threads(1);
+    let prev = solve_fleet_placed(&problems, &inv, &priorities, &[], None)
+        .expect("inventory hosts the fleet")
+        .packing
+        .expect("placed solve carries a packing");
+    let shifted: Vec<f64> = lambdas.iter().map(|l| l * 1.4).collect();
+    let problems2 = problems_of(&specs, &profs, &shifted);
+
+    let run = |threads: usize| -> (String, String, String, String) {
+        set_solver_threads(threads);
+        let (flat, stats) = solve_fleet_stats(&problems, budget).unwrap();
+        let tiers = solve_fleet_tiers(&problems, budget, &priorities).unwrap();
+        let placed =
+            solve_fleet_placed(&problems2, &inv, &priorities, &[], Some(&prev)).unwrap();
+        assert!(placed.packing.is_some(), "placed solve must carry a packing");
+        (
+            format!("{flat:?}"),
+            format!("{stats:?}"),
+            format!("{tiers:?}"),
+            format!("{placed:?}"),
+        )
+    };
+    let base = run(1);
+    for threads in [2usize, 8] {
+        let got = run(threads);
+        assert_eq!(base.0, got.0, "solve_fleet diverged at {threads} threads");
+        assert_eq!(base.1, got.1, "cache counters diverged at {threads} threads");
+        assert_eq!(base.2, got.2, "solve_fleet_tiers diverged at {threads} threads");
+        assert_eq!(base.3, got.3, "solve_fleet_placed diverged at {threads} threads");
+    }
+    set_solver_threads(0);
+}
+
+// ---------------------------------------------------------------------------
+// (b) hierarchical cells
+// ---------------------------------------------------------------------------
+
+/// The even-split baseline's total objective, computed through
+/// singleton flat solves (per-member objective is monotone in budget,
+/// so a one-member greedy at budget `b` lands exactly on obj(b)).
+fn even_total(problems: &[Problem], budget: u32) -> f64 {
+    let floors: Vec<u32> =
+        problems.iter().map(|p| p.profiles.stages.len() as u32).collect();
+    let even = even_shares(budget, &floors);
+    problems
+        .iter()
+        .zip(even)
+        .map(|(p, b)| {
+            solve_fleet(std::slice::from_ref(p), b)
+                .expect("even share covers the member floor")
+                .total_objective
+        })
+        .sum()
+}
+
+/// Randomized fleets: forced 2-member cells stay within a bounded gap
+/// of the flat solve, never fall below the even-split baseline, and
+/// respect the budget.  Same inputs solve to the same answer.
+#[test]
+fn cells_quality_within_pinned_gap_of_flat() {
+    let _g = lock_knobs();
+    set_solver_threads(0);
+    set_cell_threshold(0);
+    check("hierarchical cells quality gap", 25, |g| {
+        let n = g.usize(4, 9);
+        let specs: Vec<PipelineSpec> =
+            (0..n).map(|i| pipelines::by_name(PIPES[i % PIPES.len()]).unwrap()).collect();
+        let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+        let lambdas: Vec<f64> = (0..n).map(|_| g.f64(2.0, 30.0)).collect();
+        let problems = problems_of(&specs, &profs, &lambdas);
+        let floor: u32 = specs.iter().map(|s| s.n_stages() as u32).sum();
+        let budget = floor + g.usize(0, 3 * n + 1) as u32;
+
+        let flat = solve_fleet(&problems, budget).expect("budget covers the floor");
+        let (cells, stats) =
+            solve_fleet_cells(&problems, budget, 2).expect("same feasibility as flat");
+        let (cells2, _) = solve_fleet_cells(&problems, budget, 2).unwrap();
+        prop_assert(
+            format!("{cells:?}") == format!("{cells2:?}"),
+            "cells solve is not deterministic",
+        )?;
+        prop_assert(cells.replicas_used <= budget, "cells exceeded the budget")?;
+        prop_assert(cells.members.len() == problems.len(), "member lost in cells")?;
+        prop_assert(stats.cache_misses > 0, "cells solve reported no evaluations")?;
+        let gap_floor = flat.total_objective - (0.25 * flat.total_objective.abs() + 2.0);
+        prop_assert(
+            cells.total_objective >= gap_floor,
+            &format!(
+                "cells objective {:.3} below the pinned gap floor {gap_floor:.3} \
+                 (flat {:.3})",
+                cells.total_objective, flat.total_objective
+            ),
+        )?;
+        prop_assert(
+            cells.total_objective >= even_total(&problems, budget) - 1e-9,
+            "cells fell below the even-split baseline",
+        )?;
+        Ok(())
+    });
+}
+
+/// The `cell_threshold` dispatch inside `solve_fleet` itself: forcing a
+/// low threshold routes a uniform-priority fleet through cells and the
+/// result keeps the flat solver's public guarantees.
+#[test]
+fn public_solver_dispatches_through_cells_above_threshold() {
+    let _g = lock_knobs();
+    let (specs, profs, lambdas) = fleet_parts(8);
+    let problems = problems_of(&specs, &profs, &lambdas);
+    let budget = 40u32;
+
+    set_cell_threshold(usize::MAX);
+    let flat = solve_fleet(&problems, budget).unwrap();
+    set_cell_threshold(4); // 8 members >= 4: hierarchical path
+    let cells = solve_fleet(&problems, budget).unwrap();
+    set_cell_threshold(0);
+
+    assert!(cells.replicas_used <= budget);
+    assert_eq!(cells.members.len(), 8);
+    assert!(
+        cells.total_objective >= even_total(&problems, budget) - 1e-9,
+        "dispatched cells solve fell below the even baseline"
+    );
+    assert!(
+        cells.total_objective
+            >= flat.total_objective - (0.25 * flat.total_objective.abs() + 2.0),
+        "dispatched cells solve outside the pinned gap: {} vs flat {}",
+        cells.total_objective,
+        flat.total_objective
+    );
+    // tiered fleets must keep the flat path regardless of threshold
+    set_cell_threshold(2);
+    let prios = [1u32, 0, 1, 0, 1, 0, 1, 0];
+    let tiered = solve_fleet_tiers(&problems, budget, &prios).unwrap();
+    set_cell_threshold(usize::MAX);
+    let tiered_flat = solve_fleet_tiers(&problems, budget, &prios).unwrap();
+    set_cell_threshold(0);
+    assert_eq!(
+        format!("{tiered:?}"),
+        format!("{tiered_flat:?}"),
+        "tier precedence is global — the threshold must not touch tiered solves"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (c) delta packing
+// ---------------------------------------------------------------------------
+
+/// Quadratic reference for `Packing::moved_from` on an unchanged
+/// inventory (flat node ids map to themselves): consume matching
+/// (member, stage, node) slots of `prev` one by one, in placement
+/// order.
+fn reference_moved(cur: &Packing, prev: &Packing) -> Vec<Placement> {
+    let mut held: Vec<(usize, usize, usize)> =
+        prev.placements.iter().map(|p| (p.member, p.stage, p.node)).collect();
+    let mut moved = Vec::new();
+    for p in &cur.placements {
+        match held.iter().position(|&k| k == (p.member, p.stage, p.node)) {
+            Some(i) => {
+                held.swap_remove(i);
+            }
+            None => moved.push(*p),
+        }
+    }
+    moved
+}
+
+fn gen_items(g: &mut ipa::util::quickcheck::Gen, members: usize) -> Vec<PackItem> {
+    (0..members)
+        .map(|m| PackItem {
+            member: m,
+            stage: g.usize(0, 3),
+            unit: match g.usize(0, 3) {
+                0 => ResourceVec::new(1.0, 2.0, 0.0),
+                1 => ResourceVec::new(2.0, 8.0, 0.0),
+                _ => ResourceVec::new(4.0, 16.0, 1.0),
+            },
+            replicas: g.usize(1, 5) as u32,
+        })
+        .collect()
+}
+
+/// `pack_delta` properties on randomized demand shifts: every capacity
+/// axis respected, per-(member, stage) replica counts exactly the new
+/// demand, unchanged members' placements preserved verbatim from
+/// `prev`, and `moved_from` equal to the quadratic reference diff.
+#[test]
+fn prop_delta_pack_preserves_unchanged_members() {
+    check("delta packing invariants", 120, |g| {
+        let inv = NodeInventory::parse("10x(8c,32g,0a)+4x(16c,64g,2a)").unwrap();
+        let members = g.usize(2, 8);
+        let items = gen_items(g, members);
+        let Some(prev) = inv.pack(&items) else { return Ok(()) };
+
+        // shift: each member changes replica count with probability ~1/2
+        let mut items2 = items.clone();
+        let mut changed = vec![false; members];
+        for (m, it) in items2.iter_mut().enumerate() {
+            if g.bool() {
+                it.replicas = g.usize(0, 6) as u32;
+                changed[m] = it.replicas != items[m].replicas;
+            }
+        }
+        let Some(delta) = inv.pack_delta(&items2, &prev, &changed, &[]) else {
+            return Ok(()); // declining is always allowed — fallback covers it
+        };
+        prop_assert(delta.valid_for(&inv), "delta packing over capacity")?;
+        let total: u32 = items2.iter().map(|it| it.replicas).sum();
+        prop_assert(
+            delta.placements.len() == total as usize,
+            "delta packing lost or duplicated a replica",
+        )?;
+        for (m, it) in items2.iter().enumerate() {
+            let placed =
+                delta.placements.iter().filter(|p| p.member == m && p.stage == it.stage).count();
+            prop_assert(
+                placed == it.replicas as usize,
+                "delta packing wrong replica count for a member",
+            )?;
+        }
+        for (m, &ch) in changed.iter().enumerate() {
+            if ch {
+                continue;
+            }
+            let mut prev_nodes: Vec<usize> = prev
+                .placements
+                .iter()
+                .filter(|p| p.member == m)
+                .map(|p| p.node)
+                .collect();
+            let mut delta_nodes: Vec<usize> = delta
+                .placements
+                .iter()
+                .filter(|p| p.member == m)
+                .map(|p| p.node)
+                .collect();
+            prev_nodes.sort_unstable();
+            delta_nodes.sort_unstable();
+            prop_assert(
+                prev_nodes == delta_nodes,
+                "an unchanged member's replicas moved under delta packing",
+            )?;
+        }
+        prop_assert(
+            delta.moved_from(&prev) == reference_moved(&delta, &prev),
+            "moved_from disagrees with the quadratic reference",
+        )?;
+        Ok(())
+    });
+}
+
+/// A fully-unchanged repack retains every placement: zero moves.
+#[test]
+fn delta_pack_all_unchanged_moves_nothing() {
+    let inv = NodeInventory::parse("4x(8c,32g,0a)+2x(16c,64g,1a)").unwrap();
+    let items: Vec<PackItem> = (0..5)
+        .map(|m| PackItem {
+            member: m,
+            stage: 0,
+            unit: ResourceVec::new(2.0, 4.0, 0.0),
+            replicas: 2,
+        })
+        .collect();
+    let prev = inv.pack(&items).unwrap();
+    let delta = inv
+        .pack_delta(&items, &prev, &[false; 5], &[])
+        .expect("retaining an intact packing cannot fail");
+    assert!(delta.moved_from(&prev).is_empty(), "quiet delta repack must move nothing");
+    assert_eq!(delta.placements.len(), prev.placements.len());
+}
+
+/// `moved_from` against the reference on plain (non-delta) repacks too
+/// — the hash-indexed rewrite is a pure speedup, not a semantic change.
+#[test]
+fn prop_moved_from_matches_reference_on_plain_packs() {
+    check("moved_from reference equivalence", 120, |g| {
+        let inv = NodeInventory::parse("8x(8c,32g,0a)+3x(16c,64g,2a)").unwrap();
+        let members = g.usize(2, 8);
+        let items = gen_items(g, members);
+        let Some(prev) = inv.pack(&items) else { return Ok(()) };
+        let mut items2 = items.clone();
+        for it in items2.iter_mut() {
+            if g.bool() {
+                it.replicas = g.usize(0, 6) as u32;
+            }
+        }
+        let Some(cur) = inv.pack_sticky(&items2, Some(&prev), &[]) else { return Ok(()) };
+        prop_assert(
+            cur.moved_from(&prev) == reference_moved(&cur, &prev),
+            "moved_from disagrees with the quadratic reference on a sticky repack",
+        )?;
+        Ok(())
+    });
+}
+
+/// The delta knob is trade-wall-time-only: with delta packing forced
+/// off, the incremental paths fall back to full sticky packs and the
+/// fleet still solves (same public contract).
+#[test]
+fn delta_knob_off_still_solves() {
+    let _g = lock_knobs();
+    set_delta_pack(false);
+    let (specs, profs, lambdas) = fleet_parts(4);
+    let problems = problems_of(&specs, &profs, &lambdas);
+    let inv = NodeInventory::parse("6x(8c,32g,0a)+2x(16c,64g,1a)").unwrap();
+    let alloc = solve_fleet_placed(&problems, &inv, &[0, 0, 0, 0], &[], None).unwrap();
+    assert!(alloc.packing.is_some());
+    reset_delta_pack();
+}
+
+// ---------------------------------------------------------------------------
+// (d) cache telemetry
+// ---------------------------------------------------------------------------
+
+/// The `_stats` variants surface real cache activity: a joint solve
+/// computes at least one evaluation per member and the greedy scans
+/// re-read warm entries.
+#[test]
+fn solver_stats_report_cache_activity() {
+    let (specs, profs, lambdas) = fleet_parts(5);
+    let problems = problems_of(&specs, &profs, &lambdas);
+    let (_, stats) = solve_fleet_stats(&problems, 25).unwrap();
+    assert!(
+        stats.cache_misses >= problems.len() as u64,
+        "fewer evaluations than members: {stats:?}"
+    );
+    assert!(stats.cache_hits > 0, "greedy scans never re-read the memo: {stats:?}");
+}

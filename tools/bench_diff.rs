@@ -3,7 +3,7 @@
 //! more than the threshold against the baseline.
 //!
 //! Time sections (`solver`, `fleet_solver`, `fleet_autoscaler`,
-//! `fleet_binpack`, `fleet_topology`) regress when `mean_s` grows past
+//! `fleet_binpack`, `fleet_topology`, `fleet_scale`) regress when `mean_s` grows past
 //! `baseline × (1 + threshold)`; throughput sections (`simulator`,
 //! `fleet_sim`, `data_plane`, `telemetry`) regress when `items_per_s`
 //! falls below `baseline × (1 − threshold)`.  Rows or sections absent from the
@@ -17,8 +17,14 @@
 use ipa::util::json::Json;
 
 /// Sections judged on per-iteration wall time (`mean_s`, lower=better).
-const TIME_SECTIONS: &[&str] =
-    &["solver", "fleet_solver", "fleet_autoscaler", "fleet_binpack", "fleet_topology"];
+const TIME_SECTIONS: &[&str] = &[
+    "solver",
+    "fleet_solver",
+    "fleet_autoscaler",
+    "fleet_binpack",
+    "fleet_topology",
+    "fleet_scale",
+];
 /// Sections judged on `items_per_s` (higher=better).
 const THROUGHPUT_SECTIONS: &[&str] = &["simulator", "fleet_sim", "data_plane", "telemetry"];
 
