@@ -49,6 +49,14 @@
 //! `--metrics-text out.prom` (or `-` for stdout) the Prometheus-style
 //! exposition.  `--skip-live 1` stops after the DES clock.
 //!
+//! Epoch-parallel DES: `--sim-threads N` pins the worker count the
+//! fleet DES fans members across between control-plane barriers
+//! (mirrors `IPA_SIM_THREADS`; 0 = auto, 1 = sequential — results are
+//! byte-identical at any count, which CI verifies by `cmp`ing the
+//! journals of a 1-thread and a default run).  `--des-only 1` runs
+//! just the DES clock (implies `--skip-live 1`) so CI and scripted
+//! sweeps never touch the wall-clock engine.
+//!
 //! Scale runs: `--members 50` swaps in the deterministic synthetic
 //! 50-member fleet on a heterogeneous pool scaled by `--nodes-scale K`
 //! (a 50×-scaled mix ≈ a 500-node pool) — the harness behind the
@@ -62,6 +70,7 @@
 //!           --class nlp-batchline=throughput
 //!           --spread video-edge --migration-delay 0.5
 //!           --legacy-lock 0 --legacy-clock 0
+//!           --sim-threads 0 --des-only 0
 //!           --trace-out spans.jsonl --journal-out journal.jsonl
 //!           --metrics-text - --sample 64 --skip-live 0]`
 
@@ -107,7 +116,11 @@ fn main() {
     let journal_out = args.get("journal-out");
     let metrics_text = args.get("metrics-text");
     let sample = args.get_u64("sample", 64).max(1);
-    let skip_live = args.get_usize("skip-live", 0) != 0;
+    // Epoch-parallel DES worker count (0 = auto via IPA_SIM_THREADS /
+    // cores, 1 = sequential A/B anchor; results identical either way).
+    let sim_threads = args.get_usize("sim-threads", 0);
+    let des_only = args.get_usize("des-only", 0) != 0;
+    let skip_live = des_only || args.get_usize("skip-live", 0) != 0;
     let traced = trace_out.is_some() || journal_out.is_some() || metrics_text.is_some();
 
     // --members N swaps the demo fleet for the deterministic synthetic
@@ -323,7 +336,7 @@ fn main() {
         &slas,
         10.0,
         8.0,
-        SimConfig { seed: 5, legacy_clock, ..Default::default() },
+        SimConfig { seed: 5, legacy_clock, sim_threads, ..Default::default() },
         &mut des_adapter,
         &traces,
         "fleet-ipa",
@@ -385,7 +398,10 @@ fn main() {
     }
 
     if skip_live {
-        println!("\nfleet e2e complete: DES clock only (--skip-live)");
+        println!(
+            "\nfleet e2e complete: DES clock only ({})",
+            if des_only { "--des-only" } else { "--skip-live" }
+        );
         return;
     }
 

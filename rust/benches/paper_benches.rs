@@ -668,6 +668,76 @@ fn main() {
     print_section("fleet scale (solve+pack wall time, new default vs flat)", &rows);
     let fleet_scale_rows = rows.clone();
 
+    // Epoch-parallel fleet DES: members advance concurrently between
+    // control-plane barriers on the same epoch driver, so the only
+    // variable under test is the worker count (SimConfig::sim_threads,
+    // 0 = auto).  Demo3-cycled fleets at 8/32/100 members over the
+    // 120 s bench traces; one parity pass pins byte-identical
+    // per-request outcomes before any timing.  The 100-member speedup
+    // is asserted against IPA_SIM_PAR_GATE — default 0.3×cores clamped
+    // to [1.1, 3.0], so the gate engages on ≥4-core machines and stays
+    // honest about barrier + fan-out overhead on small CI runners.
+    let mut rows = Vec::new();
+    let mut par_speedup_100 = f64::NAN;
+    for n in [8usize, 32, 100] {
+        let par_specs: Vec<_> = (0..n).map(|i| fleet_specs[i % 3].clone()).collect();
+        let par_profs: Vec<_> = (0..n).map(|i| fleet_profs[i % 3].clone()).collect();
+        let par_slas: Vec<f64> = (0..n).map(|i| fleet_slas[i % 3]).collect();
+        let par_traces: Vec<_> = (0..n).map(|i| wide_base[i % 3].clone()).collect();
+        let par_budget = 8 * n as u32;
+        let mut episode = |threads: usize| {
+            let predictors: Vec<Box<dyn Predictor + Send>> = par_specs
+                .iter()
+                .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+                .collect();
+            let mut adapter = FleetAdapter::new(
+                par_specs.clone(),
+                par_profs.clone(),
+                AccuracyMetric::Pas,
+                par_budget,
+                AdapterConfig::default(),
+                predictors,
+            )
+            .unwrap();
+            run_fleet_des(
+                &par_profs,
+                &par_slas,
+                10.0,
+                8.0,
+                SimConfig { seed: fleet_seed, sim_threads: threads, ..Default::default() },
+                &mut adapter,
+                &par_traces,
+                "par-bench",
+                par_budget,
+            )
+        };
+        // parity before timing: the worker count may not change the run
+        {
+            let par = episode(0);
+            let seq = episode(1);
+            for (m, (p, s)) in par.members.iter().zip(&seq.members).enumerate() {
+                assert_eq!(p.requests, s.requests, "member {m}: parallel epochs diverged");
+            }
+        }
+        let seq = sb.run(&format!("sim_parallel/seq1_{n}m"), || episode(1));
+        let par = sb.run(&format!("sim_parallel/par_{n}m"), || episode(0));
+        let speedup = seq.summary.mean / par.summary.mean.max(1e-12);
+        println!("  sim_parallel: {n} members: {speedup:.2}x vs 1 worker");
+        if n == 100 {
+            par_speedup_100 = speedup;
+        }
+        rows.push(par);
+        rows.push(seq);
+    }
+    let par_gate = gate("IPA_SIM_PAR_GATE", (0.3 * cores).clamp(1.1, 3.0));
+    println!("  sim_parallel: 100-member speedup {par_speedup_100:.2}x (gate {par_gate:.2}x)");
+    assert!(
+        par_speedup_100 >= par_gate,
+        "epoch-parallel DES only {par_speedup_100:.2}x the 1-worker driver (gate {par_gate:.2}x)"
+    );
+    print_section("sim parallel (epoch-parallel fleet DES vs 1 worker)", &rows);
+    let sim_parallel_rows = rows.clone();
+
     // Perf baseline for future PRs: solver decision time + simulator
     // throughput (single-pipeline and fleet) + elastic control-plane
     // latencies, in a stable JSON shape.
@@ -682,6 +752,7 @@ fn main() {
             ("fleet_binpack", &fleet_binpack_rows[..]),
             ("fleet_topology", &fleet_topology_rows[..]),
             ("fleet_scale", &fleet_scale_rows[..]),
+            ("sim_parallel", &sim_parallel_rows[..]),
             ("data_plane", &data_plane_rows[..]),
             ("telemetry", &telemetry_rows[..]),
         ],

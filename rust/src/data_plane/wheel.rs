@@ -31,6 +31,30 @@
 //! With `sharded = false` every push routes into the single global
 //! wheel's heap lane, which IS the legacy one-heap clock (useful as an
 //! A/B lever; both modes pop identically anyway).
+//!
+//! # Epoch-parallel draining
+//!
+//! The epoch-parallel fleet driver (see [`crate::simulator::sim`])
+//! advances every member concurrently between two global control
+//! events.  The clock supports that with three pieces:
+//!
+//! * [`EventWheel::pop_until`] — a bounded drain that pops only entries
+//!   whose `(time, seq)` key orders strictly before the barrier event's
+//!   key, so each worker can exhaust its member's wheel up to (never
+//!   past) the next global event, with exact tie parity: an entry AT
+//!   the barrier instant drains before or after the barrier according
+//!   to its sequence stamp, just as the sequential pop order would.
+//! * [`ShardedClock::lanes_mut`] — hands the member wheels out as a
+//!   mutable slice so `scoped_map_mut` can give each worker a disjoint
+//!   `&mut EventWheel`.
+//! * Per-epoch sequence sub-ranges — workers cannot share the global
+//!   `seq` counter without racing, so [`ShardedClock::begin_epoch`]
+//!   snapshots it and each member `m` stamps its in-epoch pushes
+//!   `base + 1 + m * EPOCH_SEQ_STRIDE + k` (`k` = push count so far).
+//!   [`ShardedClock::end_epoch`] then jumps the shared counter past
+//!   every sub-range.  Stamps stay strictly increasing per member and
+//!   globally unique, so `(time, seq)` ordering — and therefore replay
+//!   — is identical at any worker count.
 
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -129,6 +153,21 @@ impl<E> EventWheel<E> {
         }
     }
 
+    /// Pop this wheel's earliest entry if its `(time, seq)` key orders
+    /// strictly before `barrier` — the bounded drain the epoch-parallel
+    /// driver uses to advance one member up to (never past) the next
+    /// global control event.  Comparing full keys (not just times)
+    /// keeps exact parity with the sequential pop order even when an
+    /// entry is timestamped at the barrier instant: a lower sequence
+    /// stamp drains before the barrier, a higher one after, exactly as
+    /// a single global pop loop would have interleaved them.
+    pub fn pop_until(&mut self, barrier: (f64, u64)) -> Option<(f64, E)> {
+        match self.next_due() {
+            Some(k) if key_lt(k, barrier) => self.pop(),
+            _ => None,
+        }
+    }
+
     /// Pop this wheel's earliest entry.
     pub fn pop(&mut self) -> Option<(f64, E)> {
         let take_sorted = match (self.sorted.front(), self.heap.peek()) {
@@ -152,6 +191,22 @@ impl<E> EventWheel<E> {
     }
 }
 
+/// Width of each member's per-epoch sequence sub-range (~1M dynamic
+/// pushes per member per epoch — far above anything a real epoch
+/// generates; the worker asserts it never overflows).  Wide enough
+/// that even a 100k-member fleet over millions of epochs stays below
+/// `u64::MAX`.
+pub const EPOCH_SEQ_STRIDE: u64 = 1 << 20;
+
+/// Cached tournament state: the wheel holding the global minimum and
+/// the runner-up head among the OTHER wheels.  Wheel index 0 is the
+/// global wheel, `i + 1` is member `i`.
+#[derive(Debug, Clone, Copy)]
+struct PopCache {
+    best: (usize, (f64, u64)),
+    second: Option<(usize, (f64, u64))>,
+}
+
 /// The fleet DES clock: one [`EventWheel`] per member plus a global
 /// wheel, all stamped from one sequence counter (see module docs for
 /// the parity argument).
@@ -161,6 +216,10 @@ pub struct ShardedClock<E> {
     global: EventWheel<E>,
     seq: u64,
     sharded: bool,
+    /// Best + runner-up tournament cache so [`ShardedClock::pop`] is
+    /// `O(1)` amortized instead of re-scanning `members + 1` heads on
+    /// every pop.  `None` = stale (rebuilt lazily on the next pop).
+    cache: Option<PopCache>,
 }
 
 impl<E> ShardedClock<E> {
@@ -172,6 +231,7 @@ impl<E> ShardedClock<E> {
             global: EventWheel::new(),
             seq: 0,
             sharded,
+            cache: None,
         }
     }
 
@@ -180,14 +240,77 @@ impl<E> ShardedClock<E> {
         self.seq
     }
 
+    fn wheel(&self, w: usize) -> &EventWheel<E> {
+        if w == 0 {
+            &self.global
+        } else {
+            &self.members[w - 1]
+        }
+    }
+
+    fn wheel_mut(&mut self, w: usize) -> &mut EventWheel<E> {
+        if w == 0 {
+            &mut self.global
+        } else {
+            &mut self.members[w - 1]
+        }
+    }
+
+    /// Full `members + 1` tournament: the overall minimum head plus
+    /// the runner-up among the remaining wheels.
+    fn rescan(&self) -> Option<PopCache> {
+        let mut best: Option<(usize, (f64, u64))> = None;
+        let mut second: Option<(usize, (f64, u64))> = None;
+        let heads = std::iter::once(self.global.next_due())
+            .chain(self.members.iter().map(EventWheel::next_due));
+        for (w, head) in heads.enumerate() {
+            let Some(k) = head else { continue };
+            match best {
+                None => best = Some((w, k)),
+                Some((_, bk)) if key_lt(k, bk) => {
+                    second = best;
+                    best = Some((w, k));
+                }
+                Some(_) => {
+                    if second.is_none_or(|(_, sk)| key_lt(k, sk)) {
+                        second = Some((w, k));
+                    }
+                }
+            }
+        }
+        best.map(|b| PopCache { best: b, second })
+    }
+
+    /// Incrementally fold a push into wheel `w` into the cache.  A
+    /// push can only move `w`'s head EARLIER, so each case is a local
+    /// update — the invariant (`best` = overall min head, `second` =
+    /// min head among the other wheels) is preserved without a rescan.
+    fn pushed(&mut self, w: usize) {
+        let Some(mut c) = self.cache else { return };
+        let head = match self.wheel(w).next_due() {
+            Some(h) => h,
+            None => return, // unreachable: the wheel was just pushed to
+        };
+        if w == c.best.0 {
+            // the leader's min only moved earlier; still the leader
+            c.best.1 = head;
+        } else if key_lt(head, c.best.1) {
+            // lead change: the old leader becomes the runner-up (it
+            // was the minimum among all other wheels)
+            c.second = Some(c.best);
+            c.best = (w, head);
+        } else if c.second.is_none_or(|(sw, sk)| w == sw || key_lt(head, sk)) {
+            c.second = Some((w, head));
+        }
+        self.cache = Some(c);
+    }
+
     /// Push a member-scoped event (heap lane of the member's wheel).
     pub fn push_member(&mut self, member: usize, time: f64, event: E) {
         let seq = self.next_seq();
-        if self.sharded {
-            self.members[member].push(time, seq, event);
-        } else {
-            self.global.push(time, seq, event);
-        }
+        let w = if self.sharded { member + 1 } else { 0 };
+        self.wheel_mut(w).push(time, seq, event);
+        self.pushed(w);
     }
 
     /// Push a member-scoped event whose stream arrives in time order
@@ -196,8 +319,10 @@ impl<E> ShardedClock<E> {
         let seq = self.next_seq();
         if self.sharded {
             self.members[member].push_sorted(time, seq, event);
+            self.pushed(member + 1);
         } else {
             self.global.push(time, seq, event);
+            self.pushed(0);
         }
     }
 
@@ -205,28 +330,72 @@ impl<E> ShardedClock<E> {
     pub fn push_global(&mut self, time: f64, event: E) {
         let seq = self.next_seq();
         self.global.push(time, seq, event);
+        self.pushed(0);
     }
 
     /// Pop the globally earliest `(time, seq)` event — the tournament
-    /// over every wheel's `next_due` head.
+    /// over every wheel's `next_due` head, served from the best +
+    /// runner-up cache.  After the pop, the winning wheel's new head
+    /// either keeps the lead (compare against the cached runner-up,
+    /// `O(1)`) or the lead changes and the tournament re-runs; bursts
+    /// of same-member activity therefore pop in `O(1)` amortized.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        let mut best: Option<(usize, (f64, u64))> = self.global.next_due().map(|k| (0, k));
-        for (m, wheel) in self.members.iter().enumerate() {
-            if let Some(k) = wheel.next_due() {
-                let better = match best {
-                    None => true,
-                    Some((_, bk)) => key_lt(k, bk),
-                };
-                if better {
-                    best = Some((m + 1, k));
+        let c = match self.cache {
+            Some(c) => c,
+            None => match self.rescan() {
+                Some(c) => {
+                    self.cache = Some(c);
+                    c
                 }
+                None => return None,
+            },
+        };
+        let out = self.wheel_mut(c.best.0).pop();
+        self.cache = match (self.wheel(c.best.0).next_due(), c.second) {
+            // the popped wheel still leads: only its head moved
+            (Some(h), Some((_, sk))) if key_lt(h, sk) => {
+                Some(PopCache { best: (c.best.0, h), second: c.second })
             }
-        }
-        match best {
-            Some((0, _)) => self.global.pop(),
-            Some((i, _)) => self.members[i - 1].pop(),
-            None => None,
-        }
+            (Some(h), None) => Some(PopCache { best: (c.best.0, h), second: None }),
+            // lead change (or the leader drained): full tournament
+            _ => self.rescan(),
+        };
+        out
+    }
+
+    /// Key of the earliest pending GLOBAL control event — the next
+    /// barrier time for the epoch-parallel driver.
+    pub fn global_next_due(&self) -> Option<(f64, u64)> {
+        self.global.next_due()
+    }
+
+    /// Pop the earliest GLOBAL control event, ignoring member wheels
+    /// (the epoch driver has already drained them up to the barrier).
+    pub fn pop_global(&mut self) -> Option<(f64, E)> {
+        self.cache = None;
+        self.global.pop()
+    }
+
+    /// The member wheels as a mutable slice, for the epoch-parallel
+    /// driver to hand each worker a disjoint `&mut`.  Invalidates the
+    /// tournament cache (heads may change out from under it).
+    pub fn lanes_mut(&mut self) -> &mut [EventWheel<E>] {
+        self.cache = None;
+        &mut self.members
+    }
+
+    /// Snapshot the sequence counter at an epoch boundary.  Worker `m`
+    /// stamps its in-epoch pushes `base + 1 + m * EPOCH_SEQ_STRIDE + k`
+    /// (`k` = 0, 1, …) directly into its wheel via [`Self::lanes_mut`].
+    pub fn begin_epoch(&self) -> u64 {
+        self.seq
+    }
+
+    /// Close an epoch opened at `base`: jump the shared counter past
+    /// every member's sub-range so post-epoch stamps stay above all
+    /// in-epoch stamps.
+    pub fn end_epoch(&mut self, base: u64, n_members: usize) {
+        self.seq = base + (n_members as u64) * EPOCH_SEQ_STRIDE;
     }
 
     pub fn len(&self) -> usize {
@@ -324,6 +493,85 @@ mod tests {
                 prop_assert(clock.pop().is_none(), "clock not empty after drain")
             });
         }
+    }
+
+    #[test]
+    fn pop_until_stops_strictly_before_the_barrier_key() {
+        let mut w: EventWheel<u32> = EventWheel::new();
+        w.push_sorted(1.0, 1, 1);
+        w.push(2.0, 2, 2);
+        w.push_sorted(3.0, 3, 3); // tied with the barrier TIME, lower seq
+        w.push(3.0, 5, 5); // tied with the barrier time, higher seq
+        let mut drained = Vec::new();
+        while let Some((_, e)) = w.pop_until((3.0, 4)) {
+            drained.push(e);
+        }
+        // the lower-seq tie drains pre-barrier (it would pop before the
+        // barrier event in sequential order); the higher-seq tie defers
+        assert_eq!(drained, vec![1, 2, 3]);
+        assert_eq!(w.pop(), Some((3.0, 5)));
+    }
+
+    /// `pop_until(barrier)` drains exactly the prefix `pop` would.
+    #[test]
+    fn quickcheck_pop_until_drains_the_pop_prefix() {
+        check("pop_until == pop prefix", 200, |g| {
+            let mut a: EventWheel<u64> = EventWheel::new();
+            let mut b: EventWheel<u64> = EventWheel::new();
+            let mut cursor = 0.0f64;
+            for seq in 0..g.usize(1, 40) as u64 {
+                if g.usize(0, 2) == 0 {
+                    cursor += g.f64(0.0, 3.0);
+                    a.push_sorted(cursor, seq, seq);
+                    b.push_sorted(cursor, seq, seq);
+                } else {
+                    let t = g.f64(0.0, 30.0);
+                    a.push(t, seq, seq);
+                    b.push(t, seq, seq);
+                }
+            }
+            let barrier = (g.f64(0.0, 30.0), g.usize(0, 40) as u64);
+            while let Some(got) = a.pop_until(barrier) {
+                prop_assert(b.pop() == Some(got), "pop_until diverged from pop")?;
+            }
+            // everything left orders at/after the barrier key
+            match a.next_due() {
+                Some(k) => prop_assert(!key_lt(k, barrier), "undrained event before barrier"),
+                None => prop_assert(b.pop().is_none(), "pop_until stopped early"),
+            }
+        });
+    }
+
+    #[test]
+    fn epoch_seq_ranges_stay_ordered_and_unique() {
+        let mut c: ShardedClock<u32> = ShardedClock::new(2, true);
+        c.push_member_sorted(0, 1.0, 0);
+        let base = c.begin_epoch();
+        assert_eq!(base, 1);
+        // workers stamp into their own sub-ranges via lanes_mut
+        let lanes = c.lanes_mut();
+        lanes[0].push(2.0, base + 1, 10);
+        lanes[1].push(2.5, base + 1 + EPOCH_SEQ_STRIDE, 20);
+        c.end_epoch(base, 2);
+        // the next shared stamp lands above every in-epoch stamp
+        c.push_global(2.75, 30);
+        assert_eq!(c.pop(), Some((1.0, 0)));
+        assert_eq!(c.pop(), Some((2.0, 10)));
+        assert_eq!(c.pop(), Some((2.5, 20)));
+        assert_eq!(c.pop(), Some((2.75, 30)));
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn pop_global_skips_member_wheels() {
+        let mut c: ShardedClock<u32> = ShardedClock::new(1, true);
+        c.push_member(0, 1.0, 1);
+        c.push_global(5.0, 2);
+        assert_eq!(c.global_next_due().map(|(t, _)| t), Some(5.0));
+        assert_eq!(c.pop_global(), Some((5.0, 2)));
+        // the member event is still there and the cache recovered
+        assert_eq!(c.pop(), Some((1.0, 1)));
+        assert_eq!(c.pop(), None);
     }
 
     #[test]

@@ -316,6 +316,24 @@ impl FleetCore {
         &mut self.cores[m]
     }
 
+    /// All member cores as a mutable slice — the epoch-parallel DES
+    /// driver splits this into disjoint per-member `&mut` for its
+    /// worker fan-out.  Workers must not touch fleet-level state;
+    /// peaks observed in-epoch are folded back through
+    /// [`FleetCore::note_peak`] at the barrier.
+    pub fn cores_mut(&mut self) -> &mut [ClusterCore] {
+        &mut self.cores
+    }
+
+    /// Max-merge an externally computed pool occupancy into the peak
+    /// tracker (the epoch driver reconstructs the fleet-wide `in_use`
+    /// timeline from per-member contribution logs at each barrier).
+    pub fn note_peak(&mut self, peak: u32) {
+        if peak > self.peak_in_use {
+            self.peak_in_use = peak;
+        }
+    }
+
     /// Current pool occupancy.
     pub fn pool(&self) -> PoolUsage {
         let mut configured = 0u32;

@@ -134,6 +134,30 @@
 //! (`SimConfig::legacy_clock` / `ServeConfig::legacy_lock` switch the
 //! old paths back on for A/B benches).
 //!
+//! ## The epoch-parallel fleet DES
+//!
+//! On top of the sharded clock, the fleet DES advances members
+//! *concurrently*: members interact only through global control
+//! events (adapt ticks, preemption checks, staged applies, zone
+//! faults, end-of-run), which ride a dedicated global wheel.  The
+//! driver reads that wheel's `next_due` as a barrier, fans the
+//! members across scoped threads ([`runtime::pool::scoped_map_mut`] —
+//! each worker owns a disjoint `&mut` member core + wheel + lane),
+//! drains every member's events strictly before the barrier
+//! ([`data_plane::wheel::EventWheel::pop_until`]), then executes the
+//! global event sequentially and repeats.  In-epoch event pushes are
+//! seq-stamped from disjoint per-member sub-ranges
+//! ([`data_plane::wheel::EPOCH_SEQ_STRIDE`]), and per-member spans
+//! and occupancy deltas buffer in the member's lane until the
+//! barrier, where they fold in member order — so per-member event
+//! order, per-request outcomes, merged fleet metrics/histograms and
+//! the control-plane journal (written only at barriers) are
+//! byte-identical at ANY worker count.  Parallel epochs are the
+//! default; `SimConfig::sim_threads = 1` / `IPA_SIM_THREADS=1` or
+//! `SimConfig::sequential_epochs` pin one worker for A/B runs, and
+//! `SimConfig::legacy_clock` forces the fully sequential single-heap
+//! driver (`tests/sim_parallel.rs` pins all of them to each other).
+//!
 //! ## The telemetry plane
 //!
 //! [`telemetry`] is the flight recorder riding the data plane: sampled
@@ -152,6 +176,43 @@
 //! byte for byte, and two traced runs journal byte-identically.
 //! Exposition: [`reports::timeline`] waterfalls and
 //! [`telemetry::export::prometheus_text`].
+//!
+//! ## Runtime knobs
+//!
+//! Every `IPA_*` environment variable, in one place.  Each one A/Bs a
+//! default-on mechanism against its legacy path (or relaxes a bench
+//! gate on unusual hardware) — none change WHAT is computed, only HOW
+//! (or how fast it must be):
+//!
+//! * `IPA_SIM_THREADS` — fleet-DES epoch workers
+//!   ([`simulator::sim::sim_threads`]; default: available cores capped
+//!   at 8).  `1` pins the sequential-epochs driver the parallel path
+//!   is byte-identical to; programmatic override:
+//!   [`simulator::sim::set_sim_threads`] / `SimConfig::sim_threads`.
+//! * `IPA_SOLVER_THREADS` — fleet-solver evaluation workers
+//!   ([`fleet::solver::solver_threads`]; default: available cores
+//!   capped at 8).  `1` pins the sequential scan the parallel merge is
+//!   byte-identical to.
+//! * `IPA_CELL_THRESHOLD` — member count at which the joint solve goes
+//!   hierarchical ([`fleet::cells::cell_threshold`]; default 24).  A
+//!   huge value forces the flat solver.
+//! * `IPA_DELTA_PACK` — incremental re-packing of changed members
+//!   against the retained occupancy index
+//!   ([`fleet::nodes::delta_pack_enabled`]; default on).  `0` forces
+//!   full sticky first-fit-decreasing packs.
+//! * `IPA_LOG` — diagnostic log level (`error|warn|info|debug|trace`;
+//!   default off).  Levels print to stderr, never to report files.
+//! * `IPA_BENCH_SECONDS` — trace length for `cargo bench` (default
+//!   420).
+//! * Bench speedup/overhead gates, asserted in-run by `cargo bench`
+//!   and overridable on noisy or small hosts: `IPA_RING_SPEEDUP_GATE`
+//!   (sharded rings vs single lock, default 10×),
+//!   `IPA_DES_SPEEDUP_GATE` (sharded DES clock vs single heap,
+//!   default 1×), `IPA_TELEM_OVERHEAD_GATE` (traced vs untraced
+//!   dispatch, default 1.10), `IPA_FLEET_SCALE_GATE` (scaled control
+//!   plane vs flat sequential, default 0.75×cores clamped to
+//!   [1.5, 5]), `IPA_SIM_PAR_GATE` (epoch-parallel DES vs 1 worker,
+//!   default 0.3×cores clamped to [1.1, 3]).
 //!
 //! Start with [`coordinator::adapter::Adapter`] (the control loop),
 //! [`optimizer::ip::solve`] (the IP), and [`simulator::sim::Simulation`]
@@ -308,7 +369,10 @@ pub mod simulator {
     //! Virtual-time drivers over the [`crate::cluster`] core: the
     //! deterministic event queue ([`events`]), the adapter-driven
     //! discrete-event simulator ([`sim`] — the Kubernetes-cluster
-    //! substitute) and the decision-log replay driver ([`replay`]).
+    //! substitute, whose fleet driver advances members in parallel
+    //! between control-plane barriers; see the crate-level
+    //! "epoch-parallel fleet DES") and the decision-log replay driver
+    //! ([`replay`]).
     pub mod events;
     pub mod replay;
     pub mod sim;

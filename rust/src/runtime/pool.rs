@@ -225,3 +225,76 @@ where
     });
     slots.into_iter().map(|r| r.expect("every index computed")).collect()
 }
+
+/// [`scoped_map`] over DISJOINT `&mut` items — the epoch-parallel DES
+/// driver's fan-out, where each worker owns one member's whole state
+/// bundle (core + wheel + lane) for the duration of the epoch.  Same
+/// contract: strided static assignment (worker `w` takes items
+/// `w, w+T, …`), results returned in item order, `threads <= 1` (or
+/// ≤ 1 item) runs inline on the caller's thread — byte-identical
+/// results at any thread count as long as `f(i, _)` touches only item
+/// `i`'s state, which the `&mut` split enforces at compile time.
+pub fn scoped_map_mut<T, R, F>(threads: usize, items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let workers = threads.min(n);
+    // split the slice into per-worker strided buckets of disjoint &mut
+    let mut buckets: Vec<Vec<(usize, &mut T)>> = Vec::with_capacity(workers);
+    buckets.resize_with(workers, Vec::new);
+    for (i, t) in items.iter_mut().enumerate() {
+        buckets[i % workers].push((i, t));
+    }
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                scope.spawn(move || {
+                    bucket.into_iter().map(|(i, t)| (i, f(i, t))).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("epoch worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|r| r.expect("every index computed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_map_mut_mutates_in_place_and_merges_in_order() {
+        for threads in [1usize, 2, 4, 16] {
+            let mut items: Vec<u64> = (0..9).collect();
+            let out = scoped_map_mut(threads, &mut items, |i, v| {
+                *v += 100;
+                (i as u64) * 2
+            });
+            assert_eq!(items, (100..109).collect::<Vec<u64>>(), "threads={threads}");
+            assert_eq!(out, (0..9).map(|i| i * 2).collect::<Vec<u64>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scoped_map_matches_inline_at_any_thread_count() {
+        let items: Vec<u32> = (0..13).collect();
+        let expect: Vec<u32> = items.iter().map(|v| v * 3).collect();
+        for threads in [1usize, 3, 8] {
+            assert_eq!(scoped_map(threads, &items, |_, v| v * 3), expect);
+        }
+    }
+}

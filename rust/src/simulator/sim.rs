@@ -34,6 +34,32 @@
 //! tuned controller move replicas to a bursting high-priority member
 //! without waiting for the next tick — both no-ops for plain
 //! controllers, so the classic fixed-pool behavior is unchanged.
+//!
+//! # Epoch-parallel fleet driver
+//!
+//! Members interact ONLY through the global control events
+//! (Adapt/Preempt/Apply/Fault/End), which ride the clock's dedicated
+//! global wheel — between two consecutive global events every member's
+//! events (arrivals, batch forms, completions) touch only that
+//! member's [`ClusterCore`], monitor, RNG stream and span buffer.  The
+//! default driver exploits that: each step reads the global wheel's
+//! `next_due` as the barrier, fans the members across
+//! [`crate::runtime::pool::scoped_map_mut`] worker threads (disjoint
+//! `&mut` per member), drains each member's wheel strictly up to the
+//! barrier ([`crate::data_plane::wheel::EventWheel::pop_until`]), then
+//! executes the global event sequentially and repeats.  Determinism
+//! contract, pinned by `rust/tests/sim_parallel.rs`: per-member event
+//! order, per-request outcomes, the control-plane journal, spans and
+//! merged fleet metrics are byte-identical at ANY thread count —
+//! in-epoch pushes are stamped from per-member sequence sub-ranges
+//! (no shared counter mid-epoch), spans and pool-contribution changes
+//! buffer per member and fold at barriers in fixed member order, and
+//! every member draws service noise from its own seeded RNG stream.
+//! `IPA_SIM_THREADS` / [`set_sim_threads`] /
+//! [`SimConfig::sim_threads`] pick the worker count;
+//! [`SimConfig::sequential_epochs`] is the one-worker A/B lever and
+//! [`SimConfig::legacy_clock`] bypasses the epoch driver entirely for
+//! the original one-event-at-a-time pop loop.
 
 use super::events::{Event, EventQueue};
 use crate::cluster::core::{ClusterCore, FormOutcome};
@@ -41,12 +67,13 @@ use crate::cluster::drop_policy::DropPolicy;
 use crate::cluster::reconfig::Reconfig;
 use crate::coordinator::adapter::{Adapter, Decision};
 use crate::coordinator::monitoring::Monitor;
-use crate::data_plane::wheel::ShardedClock;
+use crate::data_plane::wheel::{EventWheel, ShardedClock, EPOCH_SEQ_STRIDE};
 use crate::fleet::core::{FleetCore, FleetReconfig, MemberInit, PoolReport};
 use crate::fleet::solver::FleetController;
 use crate::metrics::RunMetrics;
 use crate::optimizer::ip::PipelineConfig;
 use crate::profiler::profile::PipelineProfiles;
+use crate::runtime::pool::scoped_map_mut;
 use crate::telemetry::hist::Histogram;
 use crate::telemetry::{journal, Hop, Span, Telemetry};
 use crate::util::json::Json;
@@ -68,14 +95,75 @@ pub struct SimConfig {
     /// of the sharded per-member wheels
     /// ([`crate::data_plane::wheel::ShardedClock`]).  Pop order — and
     /// therefore every metric — is identical either way; this is the
-    /// A/B lever for the `data_plane` bench section.
+    /// A/B lever for the `data_plane` bench section.  Also forces the
+    /// fleet loop fully sequential (the epoch-parallel driver requires
+    /// per-member wheels).
     pub legacy_clock: bool,
+    /// Run the epoch-parallel fleet driver single-threaded (one worker
+    /// advancing every member in order).  The A/B lever for the
+    /// `sim_parallel` bench section; results are byte-identical either
+    /// way — that is the determinism contract under test.
+    pub sequential_epochs: bool,
+    /// Worker threads for the epoch-parallel fleet driver.  `0` (the
+    /// default) defers to [`set_sim_threads`] / `IPA_SIM_THREADS` /
+    /// available cores; tests pin explicit counts here so concurrently
+    /// running tests never race on the process-wide knob.
+    pub sim_threads: usize,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { service_noise: 0.03, seed: 7, drop_enabled: true, legacy_clock: false }
+        SimConfig {
+            service_noise: 0.03,
+            seed: 7,
+            drop_enabled: true,
+            legacy_clock: false,
+            sequential_epochs: false,
+            sim_threads: 0,
+        }
     }
+}
+
+/// Process-wide override for the epoch-parallel DES worker count
+/// (0 = not set).  Same pattern as
+/// [`crate::fleet::solver::set_solver_threads`].
+static SIM_THREADS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// `IPA_SIM_THREADS`, parsed once (0 = unset/invalid).
+fn env_sim_threads() -> usize {
+    static ENV: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("IPA_SIM_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(0)
+    })
+}
+
+/// Worker threads the epoch-parallel fleet DES fans members across:
+/// the [`set_sim_threads`] override if set, else `IPA_SIM_THREADS`,
+/// else available cores capped at 8 (fleet epochs are short — beyond
+/// a handful of workers the spawn/join overhead dominates).  `1` is
+/// the sequential path.  Thread count may only change HOW the epoch
+/// is computed, never WHAT it computes — runs are byte-identical at
+/// any value.
+pub fn sim_threads() -> usize {
+    let o = SIM_THREADS.load(std::sync::atomic::Ordering::Relaxed);
+    if o != 0 {
+        return o;
+    }
+    let e = env_sim_threads();
+    if e != 0 {
+        return e;
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get().min(8))
+}
+
+/// Override the DES worker count for this process (0 clears the
+/// override; benches A/B via this without touching the environment).
+pub fn set_sim_threads(n: usize) {
+    SIM_THREADS.store(n, std::sync::atomic::Ordering::Relaxed);
 }
 
 /// A decision source for the discrete-event driver.
@@ -260,10 +348,18 @@ pub fn run_des_traced(
                     });
                 }
                 core.ingest(id, now);
-                drive(&mut core, profiles, 0, now, &mut rng, sim.service_noise, tel, 0, &mut |t,
-                      e| {
-                    events.push(t, e)
-                });
+                drive(
+                    &mut core,
+                    profiles,
+                    0,
+                    now,
+                    &mut rng,
+                    sim.service_noise,
+                    tel,
+                    0,
+                    &mut |s| tel.record(s),
+                    &mut |t, e| events.push(t, e),
+                );
             }
             Event::QueueCheck { stage } => {
                 drive(
@@ -275,6 +371,7 @@ pub fn run_des_traced(
                     sim.service_noise,
                     tel,
                     0,
+                    &mut |s| tel.record(s),
                     &mut |t, e| events.push(t, e),
                 );
             }
@@ -318,6 +415,7 @@ pub fn run_des_traced(
                         sim.service_noise,
                         tel,
                         0,
+                        &mut |s| tel.record(s),
                         &mut |t, e| events.push(t, e),
                     );
                 } else {
@@ -346,6 +444,7 @@ pub fn run_des_traced(
                     sim.service_noise,
                     tel,
                     0,
+                    &mut |s| tel.record(s),
                     &mut |t, e| events.push(t, e),
                 );
             }
@@ -376,6 +475,7 @@ pub fn run_des_traced(
                             sim.service_noise,
                             tel,
                             0,
+                            &mut |s| tel.record(s),
                             &mut |t, e| events.push(t, e),
                         );
                     }
@@ -397,7 +497,11 @@ pub fn run_des_traced(
 /// (plus optional multiplicative noise); an idle partial batch gets a
 /// `QueueCheck` wakeup at its timeout.  `push` is the event sink —
 /// the single-pipeline loop pushes [`Event`]s directly, the fleet loop
-/// wraps them with its member index.
+/// wraps them with its member index.  `sink` receives the sampled
+/// spans: the single-pipeline loop records them immediately, the fleet
+/// loop buffers them per member and flushes at control-plane barriers
+/// so span order is independent of how members interleave (the
+/// epoch-parallel determinism contract).
 ///
 /// Span contract (waterfall exactness): for every sampled request,
 /// queue-wait starts at its `stage_arrival` and ends at batch
@@ -415,6 +519,7 @@ fn drive(
     noise: f64,
     tel: &Telemetry,
     member: u32,
+    sink: &mut dyn FnMut(Span),
     push: &mut dyn FnMut(f64, Event),
 ) {
     loop {
@@ -442,7 +547,7 @@ fn drive(
                             continue;
                         }
                         let stage = stage as u32;
-                        tel.record(Span {
+                        sink(Span {
                             trace: req.id,
                             member,
                             stage,
@@ -451,7 +556,7 @@ fn drive(
                             dur: now - req.stage_arrival,
                             value: formed,
                         });
-                        tel.record(Span {
+                        sink(Span {
                             trace: req.id,
                             member,
                             stage,
@@ -460,7 +565,7 @@ fn drive(
                             dur: 0.0,
                             value: fb.batch as f64,
                         });
-                        tel.record(Span {
+                        sink(Span {
                             trace: req.id,
                             member,
                             stage,
@@ -691,14 +796,21 @@ pub fn run_fleet_des_faults_traced(
     let spread = ctl.spread().unwrap_or_default();
     let budget = inventory.as_ref().map_or(budget, |i| i.replica_cap());
     let horizon = traces.iter().map(Trace::seconds).max().unwrap_or(0) as f64;
-    let mut rng = SplitMix64::new(sim.seed ^ 0xF1EE7);
     // The sharded clock: each member's arrival trace rides its own
     // wheel's O(1) sorted lane, control events ride the global wheel;
     // pop order is byte-for-byte the single-heap order (see
     // `data_plane::wheel`).  `legacy_clock` routes everything through
     // the one global heap instead.
     let mut events: ShardedClock<FleetEv> = ShardedClock::new(n, !sim.legacy_clock);
-    let mut monitors: Vec<Monitor> = (0..n).map(|_| Monitor::new(600)).collect();
+    // Per-member state bundles.  Each member draws service noise from
+    // its OWN seeded stream — a shared stream would make draws depend
+    // on how members interleave between barriers, which the parallel
+    // epochs deliberately leave unspecified — and buffers its spans
+    // and pool-contribution changes for the barrier fold.  Both the
+    // legacy pop loop and the epoch driver run on these lanes, so all
+    // modes stay byte-identical to each other.
+    let mut lanes: Vec<MemberLane> =
+        (0..n).map(|m| MemberLane::new(member_seed(sim.seed ^ 0xF1EE7, m))).collect();
 
     for (m, trace) in traces.iter().enumerate() {
         for (id, &t) in trace.arrivals(member_seed(sim.seed, m)).iter().enumerate() {
@@ -758,299 +870,112 @@ pub fn run_fleet_des_faults_traced(
     }
     events.push_global(horizon, FleetEv::End);
 
-    while let Some((now, fe)) = events.pop() {
-        match fe {
-            FleetEv::End => break,
-            FleetEv::Member { member, ev } => match ev {
-                Event::Arrival { id } => {
-                    monitors[member].record_arrival(now);
-                    if tel.enabled() && tel.sampled(id) {
-                        tel.record(Span {
-                            trace: id,
-                            member: member as u32,
-                            stage: 0,
-                            hop: Hop::Arrival,
-                            t: now,
-                            dur: 0.0,
-                            value: 0.0,
-                        });
-                    }
-                    fleet.member_mut(member).ingest(id, now);
-                    drive_member(
-                        &mut fleet, profiles, member, 0, now, &mut events, &mut rng, sim, tel,
+    // Baseline the contribution tracking (the fleet's starting peak
+    // already counts the initial replicas).
+    let mut cur = vec![0u32; n];
+    resync_contrib(&fleet, &mut lanes, &mut cur);
+
+    if sim.legacy_clock {
+        // The original fully sequential driver: one event at a time in
+        // global (time, seq) order off the single heap.  Kept as the
+        // A/B anchor — the epoch driver below reproduces its per-member
+        // order byte for byte.
+        while let Some((now, fe)) = events.pop() {
+            match fe {
+                FleetEv::Member { member, ev } => {
+                    execute_member_event(
+                        fleet.member_mut(member),
+                        &mut lanes[member],
+                        &profiles[member],
+                        n_stages[member],
+                        member,
+                        now,
+                        ev,
+                        sim,
+                        tel,
+                        &mut |t, e| {
+                            events.push_member(member, t, FleetEv::Member { member, ev: e })
+                        },
                     );
                 }
-                Event::QueueCheck { stage } => {
-                    drive_member(
-                        &mut fleet, profiles, member, stage, now, &mut events, &mut rng, sim, tel,
+                fe => {
+                    fold_barrier(&mut fleet, &mut lanes, &mut cur, tel);
+                    let done = execute_global(
+                        now,
+                        fe,
+                        interval,
+                        horizon,
+                        sim,
+                        profiles,
+                        &n_stages,
+                        &mut fleet,
+                        &mut lanes,
+                        &mut events,
+                        &mut reconfig,
+                        ctl,
+                        &mut active,
+                        &mut ctl_budget,
+                        &mut fault_survivors,
+                        tel,
                     );
-                }
-                Event::ServiceDone { stage, batch } => {
-                    let has_next = stage + 1 < n_stages[member];
-                    {
-                        let core = fleet.member_mut(member);
-                        core.finish_service(stage);
-                        if has_next {
-                            for req in batch {
-                                if core.accounting.is_dropped(req.id) {
-                                    if tel.enabled() && tel.sampled(req.id) {
-                                        tel.record(Span {
-                                            trace: req.id,
-                                            member: member as u32,
-                                            stage: stage as u32,
-                                            hop: Hop::Drop,
-                                            t: now,
-                                            dur: now - req.arrival,
-                                            value: 0.0,
-                                        });
-                                    }
-                                    continue;
-                                }
-                                if tel.enabled() && tel.sampled(req.id) {
-                                    tel.record(Span {
-                                        trace: req.id,
-                                        member: member as u32,
-                                        stage: stage as u32,
-                                        hop: Hop::Forward,
-                                        t: now,
-                                        dur: 0.0,
-                                        value: (stage + 1) as f64,
-                                    });
-                                }
-                                core.forward(stage + 1, req, now);
-                            }
-                        } else {
-                            for req in &batch {
-                                if tel.enabled() && tel.sampled(req.id) {
-                                    tel.record(Span {
-                                        trace: req.id,
-                                        member: member as u32,
-                                        stage: stage as u32,
-                                        hop: Hop::Done,
-                                        t: now,
-                                        dur: now - req.arrival,
-                                        value: 0.0,
-                                    });
-                                }
-                                core.complete(req.id, now);
-                            }
-                        }
+                    resync_contrib(&fleet, &mut lanes, &mut cur);
+                    if done {
+                        break;
                     }
-                    if has_next {
-                        drive_member(
-                            &mut fleet,
-                            profiles,
-                            member,
-                            stage + 1,
-                            now,
-                            &mut events,
-                            &mut rng,
-                            sim,
-                            tel,
-                        );
-                    }
-                    // freed replica may unblock this stage's queue
-                    drive_member(
-                        &mut fleet, profiles, member, stage, now, &mut events, &mut rng, sim, tel,
-                    );
                 }
-                Event::Adapt | Event::ApplyConfig | Event::End => {
-                    unreachable!("global events are never member-scoped")
-                }
-            },
-            FleetEv::Adapt => {
-                let histories: Vec<Vec<f64>> = monitors
-                    .iter()
-                    .map(|mo| mo.history(now, crate::predictor::HISTORY))
+            }
+        }
+    } else {
+        // The epoch-parallel driver (default): the global wheel's head
+        // is the barrier; every member advances independently strictly
+        // up to it on a worker fan-out, then the barrier event executes
+        // sequentially.  Byte-identical to the legacy loop at any
+        // thread count (see the module docs for the contract).
+        let threads = if sim.sequential_epochs {
+            1
+        } else if sim.sim_threads != 0 {
+            sim.sim_threads
+        } else {
+            sim_threads()
+        };
+        while let Some(barrier) = events.global_next_due() {
+            let base = events.begin_epoch();
+            {
+                let mut ctxs: Vec<EpochCtx<'_>> = fleet
+                    .cores_mut()
+                    .iter_mut()
+                    .zip(events.lanes_mut().iter_mut())
+                    .zip(lanes.iter_mut())
+                    .map(|((core, wheel), lane)| EpochCtx { core, wheel, lane })
                     .collect();
-                // Drift correction: a staged shrink dropped on the way
-                // (coalescing, or a preemption clearing the stager)
-                // would otherwise strand the physical pool above the
-                // controller's view forever — re-sync once nothing is
-                // pending (best-effort: never below configured).
-                if reconfig.pending_len() == 0 && fleet.budget() > ctl_budget {
-                    let _ = fleet.resize_pool_with(
-                        now,
-                        ctl_budget.max(fleet.configured_replicas()),
-                        ctl.node_inventory().as_ref(),
-                    );
-                }
-                // Autoscaler first: grow the pool immediately so the
-                // joint solve can budget against it; defer a shrink
-                // until the smaller configurations activate.  The
-                // controller's inventory rides along as a MIRROR: with
-                // pressure-aware buying the shape it bought no longer
-                // follows from the replica target alone.
-                let pool_to = ctl.resize(now, &histories);
-                if let Some(p) = pool_to {
-                    if p > fleet.budget() {
-                        fleet
-                            .resize_pool_with(now, p, ctl.node_inventory().as_ref())
-                            .expect("pool growth is always accepted");
-                    }
-                    ctl_budget = p;
-                }
-                let decisions = ctl.decide(now, &histories);
-                assert_eq!(decisions.len(), n, "fleet controller must decide per member");
-                for (m, d) in decisions.iter().enumerate() {
-                    journal_decision(tel, now, m as u32, d);
-                }
-                for m in 0..n {
-                    let observed = monitors[m].recent_rate(now, interval as usize);
-                    fleet
-                        .member_mut(m)
-                        .accounting
-                        .record_interval(now, &active[m], observed, &decisions[m]);
-                }
-                let shrink_to = pool_to.filter(|&p| p < fleet.budget());
-                // Price the decision's churn BEFORE staging it: every
-                // replica the sticky re-pack would move charges one
-                // migration delay on top of the apply delay.
-                let moves = if reconfig.migration_delay > 0.0 {
-                    let cfgs: Vec<&PipelineConfig> =
-                        decisions.iter().map(|d| &d.config).collect();
-                    fleet.plan_moves(&cfgs)
-                } else {
-                    0
-                };
-                let at = reconfig.stage(now, decisions, ctl_budget, shrink_to, moves);
-                events.push_global(at, FleetEv::Apply);
-                if now + interval < horizon {
-                    events.push_global(now + interval, FleetEv::Adapt);
-                }
-            }
-            FleetEv::Preempt => {
-                let window = (interval * 0.5).max(1.0) as usize;
-                let observed: Vec<f64> =
-                    monitors.iter().map(|mo| mo.recent_rate(now, window)).collect();
-                if let Some(p) = ctl.preempt(now, &observed) {
-                    let configs: Vec<(PipelineConfig, f64)> = p
-                        .decisions
-                        .iter()
-                        .map(|d| (d.config.clone(), d.lambda_predicted))
-                        .collect();
-                    fleet.accrue(now);
-                    fleet
-                        .apply(&configs)
-                        .expect("preemption must respect the replica budget");
-                    // An applied preemption supersedes anything staged
-                    // earlier: a stale slow-path decision activating
-                    // later would silently revert it.
-                    reconfig.clear();
-                    // Sync the pool to the controller's view (executes
-                    // a cleared pending shrink early; best-effort — a
-                    // rolling drain can hold more than the mirror caps).
-                    let _ = fleet.resize_pool_with(
-                        now,
-                        p.budget.max(fleet.configured_replicas()),
-                        ctl.node_inventory().as_ref(),
-                    );
-                    fleet.note_preemption(&p.from);
-                    active = p.decisions.into_iter().map(|d| d.config).collect();
-                    for m in 0..n {
-                        for si in 0..n_stages[m] {
-                            drive_member(
-                                &mut fleet, profiles, m, si, now, &mut events, &mut rng, sim,
-                                tel,
-                            );
-                        }
-                    }
-                }
-                if now + interval < horizon {
-                    events.push_global(now + interval, FleetEv::Preempt);
-                }
-            }
-            FleetEv::Apply => {
-                // pop_due coalesces: every due stage drains, only the
-                // newest applies.
-                while let Some(staged) = reconfig.pop_due(now) {
-                    let configs: Vec<(PipelineConfig, f64)> = staged
-                        .decisions
-                        .iter()
-                        .map(|d| (d.config.clone(), d.lambda_predicted))
-                        .collect();
-                    fleet.accrue(now);
-                    fleet
-                        .apply(&configs)
-                        .expect("fleet controller must respect the replica budget");
-                    // A shrink is only safe when nothing bigger is
-                    // still in flight: it must cover the controller's
-                    // current budget AND every pending stage's solve
-                    // budget (with apply-delay > interval, stale
-                    // shrinks and larger mid-flight configurations can
-                    // interleave).
-                    if let Some(p) = staged.shrink_to {
-                        let in_flight =
-                            ctl_budget.max(reconfig.max_pending_budget().unwrap_or(0));
-                        if p >= in_flight {
-                            // best-effort mirror sync: a newer, even
-                            // smaller controller view can undercut the
-                            // configuration just applied — then this
-                            // shrink waits for ITS stage instead
-                            let _ = fleet.resize_pool_with(
-                                now,
-                                p,
-                                ctl.node_inventory().as_ref(),
-                            );
-                        }
-                    }
-                    active = staged.decisions.into_iter().map(|d| d.config).collect();
-                    for m in 0..n {
-                        for si in 0..n_stages[m] {
-                            drive_member(
-                                &mut fleet, profiles, m, si, now, &mut events, &mut rng, sim,
-                                tel,
-                            );
-                        }
-                    }
-                }
-            }
-            FleetEv::Fault { zone } => {
-                // Drain the zone from a CLONE first: the controller
-                // must bless the survivor pool (re-plan on it) before
-                // the physical pool is touched — a controller that
-                // cannot re-plan leaves the fleet intact.
-                let survivor = fleet.inventory().map(|inv| {
-                    let mut s = inv.clone();
-                    (s.drain_zone(&zone), s)
+                scoped_map_mut(threads, &mut ctxs, |m, ctx| {
+                    advance_member(ctx, m, barrier, base, &profiles[m], n_stages[m], sim, tel);
                 });
-                if let Some((drained, survivor)) = survivor {
-                    if drained > 0 {
-                        let observed: Vec<f64> = monitors
-                            .iter()
-                            .map(|mo| mo.recent_rate(now, interval.max(1.0) as usize))
-                            .collect();
-                        if let Some(ds) = ctl.fault(now, survivor, &observed) {
-                            assert_eq!(ds.len(), n, "fault decisions are per member");
-                            // record what the active placement would
-                            // have kept alive through the loss — the
-                            // zone-spread guarantee under test
-                            fault_survivors
-                                .push(fleet.zone_survivors(&zone).unwrap_or_default());
-                            fleet.kill_zone(now, &zone);
-                            // stale staged decisions were solved on the
-                            // dead pool; the emergency apply supersedes
-                            reconfig.clear();
-                            let configs: Vec<(PipelineConfig, f64)> = ds
-                                .iter()
-                                .map(|d| (d.config.clone(), d.lambda_predicted))
-                                .collect();
-                            fleet
-                                .apply(&configs)
-                                .expect("fault decision solved under the survivor pool");
-                            ctl_budget = fleet.budget();
-                            active = ds.into_iter().map(|d| d.config).collect();
-                            for m in 0..n {
-                                for si in 0..n_stages[m] {
-                                    drive_member(
-                                        &mut fleet, profiles, m, si, now, &mut events,
-                                        &mut rng, sim, tel,
-                                    );
-                                }
-                            }
-                        }
-                    }
-                }
+            }
+            events.end_epoch(base, n);
+            fold_barrier(&mut fleet, &mut lanes, &mut cur, tel);
+            let Some((now, fe)) = events.pop_global() else { break };
+            let done = execute_global(
+                now,
+                fe,
+                interval,
+                horizon,
+                sim,
+                profiles,
+                &n_stages,
+                &mut fleet,
+                &mut lanes,
+                &mut events,
+                &mut reconfig,
+                ctl,
+                &mut active,
+                &mut ctl_budget,
+                &mut fault_survivors,
+                tel,
+            );
+            resync_contrib(&fleet, &mut lanes, &mut cur);
+            if done {
+                break;
             }
         }
     }
@@ -1083,32 +1008,530 @@ pub fn run_fleet_des_faults_traced(
     }
 }
 
-/// [`drive`] for one fleet member: events come back member-tagged.
-/// Pool peak usage is noted only when a batch actually formed (the
-/// only driver-side transition that can raise `in_use`), so the
-/// O(members × stages) occupancy scan stays off the no-op events.
+/// One member's private, worker-owned simulation state: its service
+/// RNG stream, arrival monitor, buffered sampled spans, and the pool
+/// contribution log the barrier fold replays — everything a member
+/// event touches besides the member's [`ClusterCore`] and event wheel.
+/// The whole bundle moves onto one epoch worker as an [`EpochCtx`].
+struct MemberLane {
+    /// Per-member service-noise stream (`member_seed(seed ^ 0xF1EE7, m)`):
+    /// a shared stream would make draws depend on how members
+    /// interleave, which parallel epochs deliberately leave unordered.
+    rng: SplitMix64,
+    /// Arrival-rate history for the controller (read at barriers).
+    monitor: Monitor,
+    /// Sampled spans buffered in-epoch, flushed to the telemetry ring
+    /// at the next barrier in member order.
+    spans: Vec<Span>,
+    /// `(time, new_contribution)` log: one entry per change to this
+    /// member's pool occupancy term, replayed fleet-wide at the
+    /// barrier to recover the exact occupancy peak.
+    contrib: Vec<(f64, u32)>,
+    /// The contribution as of the last log entry (or barrier resync).
+    last_contrib: u32,
+}
+
+impl MemberLane {
+    fn new(seed: u64) -> MemberLane {
+        MemberLane {
+            rng: SplitMix64::new(seed),
+            monitor: Monitor::new(600),
+            spans: Vec::new(),
+            contrib: Vec::new(),
+            last_contrib: 0,
+        }
+    }
+}
+
+/// This member's term of the fleet occupancy sum — mirrors one core's
+/// contribution to [`FleetCore::pool`]'s `in_use` (busy batches keep
+/// their slots through a rolling shrink, hence the `max`).
+fn member_contrib(core: &ClusterCore) -> u32 {
+    core.stages.iter().map(|st| st.busy.max(st.replicas)).sum()
+}
+
+/// [`drive`] one member stage against its private lane: RNG draws come
+/// from the lane's stream and sampled spans buffer into the lane
+/// (flushed at the next barrier), so the call is safe on an epoch
+/// worker — it never touches shared state.
 #[allow(clippy::too_many_arguments)]
-fn drive_member(
-    fleet: &mut FleetCore,
-    profiles: &[PipelineProfiles],
-    member: usize,
+fn drive_lane(
+    core: &mut ClusterCore,
+    lane: &mut MemberLane,
+    profiles: &PipelineProfiles,
     stage: usize,
     now: f64,
-    events: &mut ShardedClock<FleetEv>,
-    rng: &mut SplitMix64,
+    member: usize,
     sim: SimConfig,
     tel: &Telemetry,
+    push: &mut dyn FnMut(f64, Event),
 ) {
-    let mut formed = false;
+    let MemberLane { rng, spans, .. } = lane;
     drive(
-        fleet.member_mut(member),
-        &profiles[member],
+        core,
+        profiles,
         stage,
         now,
         rng,
         sim.service_noise,
         tel,
         member as u32,
+        &mut |s| spans.push(s),
+        push,
+    );
+}
+
+/// Execute ONE member-scoped event against that member's core and
+/// lane — the per-member arm of the fleet loop, split out so the
+/// legacy pop loop and the epoch drivers share it verbatim: per-member
+/// event order and effects are identical across modes by construction.
+/// `push` is the member-tagged dynamic-event sink (the shared clock in
+/// sequential modes, the member's own wheel in-epoch).
+#[allow(clippy::too_many_arguments)]
+fn execute_member_event(
+    core: &mut ClusterCore,
+    lane: &mut MemberLane,
+    profiles: &PipelineProfiles,
+    n_stages: usize,
+    member: usize,
+    now: f64,
+    ev: Event,
+    sim: SimConfig,
+    tel: &Telemetry,
+    push: &mut dyn FnMut(f64, Event),
+) {
+    match ev {
+        Event::Arrival { id } => {
+            lane.monitor.record_arrival(now);
+            if tel.enabled() && tel.sampled(id) {
+                lane.spans.push(Span {
+                    trace: id,
+                    member: member as u32,
+                    stage: 0,
+                    hop: Hop::Arrival,
+                    t: now,
+                    dur: 0.0,
+                    value: 0.0,
+                });
+            }
+            core.ingest(id, now);
+            drive_lane(core, lane, profiles, 0, now, member, sim, tel, push);
+        }
+        Event::QueueCheck { stage } => {
+            drive_lane(core, lane, profiles, stage, now, member, sim, tel, push);
+        }
+        Event::ServiceDone { stage, batch } => {
+            let has_next = stage + 1 < n_stages;
+            core.finish_service(stage);
+            if has_next {
+                for req in batch {
+                    if core.accounting.is_dropped(req.id) {
+                        if tel.enabled() && tel.sampled(req.id) {
+                            lane.spans.push(Span {
+                                trace: req.id,
+                                member: member as u32,
+                                stage: stage as u32,
+                                hop: Hop::Drop,
+                                t: now,
+                                dur: now - req.arrival,
+                                value: 0.0,
+                            });
+                        }
+                        continue;
+                    }
+                    if tel.enabled() && tel.sampled(req.id) {
+                        lane.spans.push(Span {
+                            trace: req.id,
+                            member: member as u32,
+                            stage: stage as u32,
+                            hop: Hop::Forward,
+                            t: now,
+                            dur: 0.0,
+                            value: (stage + 1) as f64,
+                        });
+                    }
+                    core.forward(stage + 1, req, now);
+                }
+            } else {
+                for req in &batch {
+                    if tel.enabled() && tel.sampled(req.id) {
+                        lane.spans.push(Span {
+                            trace: req.id,
+                            member: member as u32,
+                            stage: stage as u32,
+                            hop: Hop::Done,
+                            t: now,
+                            dur: now - req.arrival,
+                            value: 0.0,
+                        });
+                    }
+                    core.complete(req.id, now);
+                }
+            }
+            if has_next {
+                drive_lane(core, lane, profiles, stage + 1, now, member, sim, tel, push);
+            }
+            // freed replica may unblock this stage's queue
+            drive_lane(core, lane, profiles, stage, now, member, sim, tel, push);
+        }
+        Event::Adapt | Event::ApplyConfig | Event::End => {
+            unreachable!("global events are never member-scoped")
+        }
+    }
+    // Log the pool-contribution transition (if any): the barrier fold
+    // replays these fleet-wide in time order to recover the occupancy
+    // peak without an O(members × stages) scan per event.
+    let c = member_contrib(core);
+    if c != lane.last_contrib {
+        lane.last_contrib = c;
+        lane.contrib.push((now, c));
+    }
+}
+
+/// Sequential barrier fold: flush every lane's buffered spans in
+/// member order, then merge the per-member contribution logs in
+/// `(time, member)` order and replay the fleet-wide occupancy total to
+/// recover its peak since the previous barrier.  Telemetry and fleet
+/// metrics are only ever written here and in the global arms — always
+/// on the driver thread, in an order independent of the epoch worker
+/// count.
+fn fold_barrier(fleet: &mut FleetCore, lanes: &mut [MemberLane], cur: &mut [u32], tel: &Telemetry) {
+    for lane in lanes.iter_mut() {
+        if tel.enabled() {
+            for s in lane.spans.drain(..) {
+                tel.record(s);
+            }
+        } else {
+            lane.spans.clear();
+        }
+    }
+    let mut changes: Vec<(f64, usize, u32)> = Vec::new();
+    for (m, lane) in lanes.iter_mut().enumerate() {
+        for (t, v) in lane.contrib.drain(..) {
+            changes.push((t, m, v));
+        }
+    }
+    if changes.is_empty() {
+        return;
+    }
+    // Stable by (time, member): same-member entries keep log order and
+    // cross-member ties resolve in a fixed order — the replayed peak
+    // never depends on how workers interleaved.
+    changes.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    });
+    let mut total: i64 = cur.iter().map(|&v| i64::from(v)).sum();
+    let mut peak = total;
+    for (_, m, v) in changes {
+        total += i64::from(v) - i64::from(cur[m]);
+        cur[m] = v;
+        if total > peak {
+            peak = total;
+        }
+    }
+    fleet.note_peak(peak.max(0) as u32);
+}
+
+/// Re-baseline the contribution tracking from the live cores: a global
+/// event can change any member's replicas (apply/preempt/fault), which
+/// the member-event logs never see.
+fn resync_contrib(fleet: &FleetCore, lanes: &mut [MemberLane], cur: &mut [u32]) {
+    for (m, lane) in lanes.iter_mut().enumerate() {
+        let c = member_contrib(fleet.member(m));
+        lane.last_contrib = c;
+        cur[m] = c;
+    }
+}
+
+/// Everything one epoch worker owns for one member: the member's core,
+/// its event wheel, and its lane.  [`scoped_map_mut`] fans these
+/// bundles across workers as disjoint `&mut`s — the type system
+/// guarantees a worker can only touch its own member's state.
+struct EpochCtx<'a> {
+    core: &'a mut ClusterCore,
+    wheel: &'a mut EventWheel<FleetEv>,
+    lane: &'a mut MemberLane,
+}
+
+/// The epoch body: drain one member's wheel strictly up to `barrier`
+/// on an epoch worker.  Dynamic pushes stamp sequence numbers from
+/// this member's private per-epoch sub-range
+/// (`base + 1 + member·STRIDE + k`), so stamps — and therefore replay
+/// order — are identical no matter how many workers ran the epoch;
+/// [`EventWheel::pop_until`] compares full `(time, seq)` keys against
+/// the barrier, so events tied with the barrier instant defer exactly
+/// as they do in the sequential pop order.
+#[allow(clippy::too_many_arguments)]
+fn advance_member(
+    ctx: &mut EpochCtx<'_>,
+    member: usize,
+    barrier: (f64, u64),
+    base: u64,
+    profiles: &PipelineProfiles,
+    n_stages: usize,
+    sim: SimConfig,
+    tel: &Telemetry,
+) {
+    let seq_base = base + 1 + (member as u64) * EPOCH_SEQ_STRIDE;
+    let mut k = 0u64;
+    while let Some((now, fe)) = ctx.wheel.pop_until(barrier) {
+        let FleetEv::Member { ev, .. } = fe else {
+            unreachable!("member wheels carry only member events")
+        };
+        let EpochCtx { core, wheel, lane } = ctx;
+        execute_member_event(
+            core,
+            lane,
+            profiles,
+            n_stages,
+            member,
+            now,
+            ev,
+            sim,
+            tel,
+            &mut |t, e| {
+                assert!(k + 1 < EPOCH_SEQ_STRIDE, "epoch seq sub-range overflow");
+                wheel.push(t, seq_base + k, FleetEv::Member { member, ev: e });
+                k += 1;
+            },
+        );
+    }
+}
+
+/// Execute one global control event.  Runs strictly sequentially on
+/// the driver thread in every mode — the decision journal, controller
+/// calls and pool mutations all happen here (or in the barrier fold),
+/// never on an epoch worker.  Returns `true` on `End`.
+#[allow(clippy::too_many_arguments)]
+fn execute_global(
+    now: f64,
+    fe: FleetEv,
+    interval: f64,
+    horizon: f64,
+    sim: SimConfig,
+    profiles: &[PipelineProfiles],
+    n_stages: &[usize],
+    fleet: &mut FleetCore,
+    lanes: &mut [MemberLane],
+    events: &mut ShardedClock<FleetEv>,
+    reconfig: &mut FleetReconfig,
+    ctl: &mut dyn FleetController,
+    active: &mut Vec<PipelineConfig>,
+    ctl_budget: &mut u32,
+    fault_survivors: &mut Vec<Vec<u32>>,
+    tel: &Telemetry,
+) -> bool {
+    let n = lanes.len();
+    match fe {
+        FleetEv::End => return true,
+        FleetEv::Member { .. } => unreachable!("member events never reach the global arm"),
+        FleetEv::Adapt => {
+            let histories: Vec<Vec<f64>> = lanes
+                .iter()
+                .map(|l| l.monitor.history(now, crate::predictor::HISTORY))
+                .collect();
+            // Drift correction: a staged shrink dropped on the way
+            // (coalescing, or a preemption clearing the stager)
+            // would otherwise strand the physical pool above the
+            // controller's view forever — re-sync once nothing is
+            // pending (best-effort: never below configured).
+            if reconfig.pending_len() == 0 && fleet.budget() > *ctl_budget {
+                let _ = fleet.resize_pool_with(
+                    now,
+                    (*ctl_budget).max(fleet.configured_replicas()),
+                    ctl.node_inventory().as_ref(),
+                );
+            }
+            // Autoscaler first: grow the pool immediately so the
+            // joint solve can budget against it; defer a shrink
+            // until the smaller configurations activate.  The
+            // controller's inventory rides along as a MIRROR: with
+            // pressure-aware buying the shape it bought no longer
+            // follows from the replica target alone.
+            let pool_to = ctl.resize(now, &histories);
+            if let Some(p) = pool_to {
+                if p > fleet.budget() {
+                    fleet
+                        .resize_pool_with(now, p, ctl.node_inventory().as_ref())
+                        .expect("pool growth is always accepted");
+                }
+                *ctl_budget = p;
+            }
+            let decisions = ctl.decide(now, &histories);
+            assert_eq!(decisions.len(), n, "fleet controller must decide per member");
+            for (m, d) in decisions.iter().enumerate() {
+                journal_decision(tel, now, m as u32, d);
+            }
+            for m in 0..n {
+                let observed = lanes[m].monitor.recent_rate(now, interval as usize);
+                fleet
+                    .member_mut(m)
+                    .accounting
+                    .record_interval(now, &active[m], observed, &decisions[m]);
+            }
+            let shrink_to = pool_to.filter(|&p| p < fleet.budget());
+            // Price the decision's churn BEFORE staging it: every
+            // replica the sticky re-pack would move charges one
+            // migration delay on top of the apply delay.
+            let moves = if reconfig.migration_delay > 0.0 {
+                let cfgs: Vec<&PipelineConfig> = decisions.iter().map(|d| &d.config).collect();
+                fleet.plan_moves(&cfgs)
+            } else {
+                0
+            };
+            let at = reconfig.stage(now, decisions, *ctl_budget, shrink_to, moves);
+            events.push_global(at, FleetEv::Apply);
+            if now + interval < horizon {
+                events.push_global(now + interval, FleetEv::Adapt);
+            }
+        }
+        FleetEv::Preempt => {
+            let window = (interval * 0.5).max(1.0) as usize;
+            let observed: Vec<f64> =
+                lanes.iter().map(|l| l.monitor.recent_rate(now, window)).collect();
+            if let Some(p) = ctl.preempt(now, &observed) {
+                let configs: Vec<(PipelineConfig, f64)> = p
+                    .decisions
+                    .iter()
+                    .map(|d| (d.config.clone(), d.lambda_predicted))
+                    .collect();
+                fleet.accrue(now);
+                fleet.apply(&configs).expect("preemption must respect the replica budget");
+                // An applied preemption supersedes anything staged
+                // earlier: a stale slow-path decision activating
+                // later would silently revert it.
+                reconfig.clear();
+                // Sync the pool to the controller's view (executes
+                // a cleared pending shrink early; best-effort — a
+                // rolling drain can hold more than the mirror caps).
+                let _ = fleet.resize_pool_with(
+                    now,
+                    p.budget.max(fleet.configured_replicas()),
+                    ctl.node_inventory().as_ref(),
+                );
+                fleet.note_preemption(&p.from);
+                *active = p.decisions.into_iter().map(|d| d.config).collect();
+                for m in 0..n {
+                    for si in 0..n_stages[m] {
+                        drive_member(fleet, lanes, profiles, m, si, now, events, sim, tel);
+                    }
+                }
+            }
+            if now + interval < horizon {
+                events.push_global(now + interval, FleetEv::Preempt);
+            }
+        }
+        FleetEv::Apply => {
+            // pop_due coalesces: every due stage drains, only the
+            // newest applies.
+            while let Some(staged) = reconfig.pop_due(now) {
+                let configs: Vec<(PipelineConfig, f64)> = staged
+                    .decisions
+                    .iter()
+                    .map(|d| (d.config.clone(), d.lambda_predicted))
+                    .collect();
+                fleet.accrue(now);
+                fleet.apply(&configs).expect("fleet controller must respect the replica budget");
+                // A shrink is only safe when nothing bigger is
+                // still in flight: it must cover the controller's
+                // current budget AND every pending stage's solve
+                // budget (with apply-delay > interval, stale
+                // shrinks and larger mid-flight configurations can
+                // interleave).
+                if let Some(p) = staged.shrink_to {
+                    let in_flight = (*ctl_budget).max(reconfig.max_pending_budget().unwrap_or(0));
+                    if p >= in_flight {
+                        // best-effort mirror sync: a newer, even
+                        // smaller controller view can undercut the
+                        // configuration just applied — then this
+                        // shrink waits for ITS stage instead
+                        let _ = fleet.resize_pool_with(now, p, ctl.node_inventory().as_ref());
+                    }
+                }
+                *active = staged.decisions.into_iter().map(|d| d.config).collect();
+                for m in 0..n {
+                    for si in 0..n_stages[m] {
+                        drive_member(fleet, lanes, profiles, m, si, now, events, sim, tel);
+                    }
+                }
+            }
+        }
+        FleetEv::Fault { zone } => {
+            // Drain the zone from a CLONE first: the controller
+            // must bless the survivor pool (re-plan on it) before
+            // the physical pool is touched — a controller that
+            // cannot re-plan leaves the fleet intact.
+            let survivor = fleet.inventory().map(|inv| {
+                let mut s = inv.clone();
+                (s.drain_zone(&zone), s)
+            });
+            if let Some((drained, survivor)) = survivor {
+                if drained > 0 {
+                    let observed: Vec<f64> = lanes
+                        .iter()
+                        .map(|l| l.monitor.recent_rate(now, interval.max(1.0) as usize))
+                        .collect();
+                    if let Some(ds) = ctl.fault(now, survivor, &observed) {
+                        assert_eq!(ds.len(), n, "fault decisions are per member");
+                        // record what the active placement would
+                        // have kept alive through the loss — the
+                        // zone-spread guarantee under test
+                        fault_survivors.push(fleet.zone_survivors(&zone).unwrap_or_default());
+                        fleet.kill_zone(now, &zone);
+                        // stale staged decisions were solved on the
+                        // dead pool; the emergency apply supersedes
+                        reconfig.clear();
+                        let configs: Vec<(PipelineConfig, f64)> = ds
+                            .iter()
+                            .map(|d| (d.config.clone(), d.lambda_predicted))
+                            .collect();
+                        fleet
+                            .apply(&configs)
+                            .expect("fault decision solved under the survivor pool");
+                        *ctl_budget = fleet.budget();
+                        *active = ds.into_iter().map(|d| d.config).collect();
+                        for m in 0..n {
+                            for si in 0..n_stages[m] {
+                                drive_member(fleet, lanes, profiles, m, si, now, events, sim, tel);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    false
+}
+
+/// [`drive`] for one fleet member at a BARRIER (post-reconfiguration
+/// queue kicks): events come back member-tagged through the shared
+/// clock, spans record directly (barriers are sequential), and pool
+/// peak usage is noted only when a batch actually formed — the only
+/// driver-side transition here that can raise `in_use`.
+#[allow(clippy::too_many_arguments)]
+fn drive_member(
+    fleet: &mut FleetCore,
+    lanes: &mut [MemberLane],
+    profiles: &[PipelineProfiles],
+    member: usize,
+    stage: usize,
+    now: f64,
+    events: &mut ShardedClock<FleetEv>,
+    sim: SimConfig,
+    tel: &Telemetry,
+) {
+    let lane = &mut lanes[member];
+    let mut formed = false;
+    drive(
+        fleet.member_mut(member),
+        &profiles[member],
+        stage,
+        now,
+        &mut lane.rng,
+        sim.service_noise,
+        tel,
+        member as u32,
+        &mut |s| tel.record(s),
         &mut |t, e| {
             formed |= matches!(e, Event::ServiceDone { .. });
             // dynamic events land on the member wheel's heap lane

@@ -66,7 +66,7 @@ fn replay_matches_sim_under_bursty_drops() {
     let spec = pipelines::by_name("video").unwrap();
     let prof = pipeline_profiles(&spec);
     let sim_cfg =
-        SimConfig { seed: 9, service_noise: 0.05, drop_enabled: true, legacy_clock: false };
+        SimConfig { seed: 9, service_noise: 0.05, drop_enabled: true, ..Default::default() };
     let mut sim = Simulation::new(adapter("video", Policy::Fa2Low, cfg), sim_cfg);
     let trace = Trace::synthetic(Pattern::Bursty, 240);
     let (original, log) = sim.run_logged(&trace);
@@ -137,7 +137,7 @@ fn sim_and_live_engine_agree_on_counts() {
     );
     let mut sim = Simulation::new(
         sim_adapter,
-        SimConfig { seed, service_noise: 0.0, drop_enabled: true, legacy_clock: false },
+        SimConfig { seed, service_noise: 0.0, drop_enabled: true, ..Default::default() },
     );
     let m_sim = sim.run(&trace);
 

@@ -433,7 +433,7 @@ fn sla_classes_flow_through_both_drivers() {
         &slas,
         10_000.0,
         8.0,
-        SimConfig { seed, service_noise: 0.0, drop_enabled: true, legacy_clock: false },
+        SimConfig { seed, service_noise: 0.0, drop_enabled: true, ..Default::default() },
         &mut sim_adapter,
         &traces,
         "class-sim",

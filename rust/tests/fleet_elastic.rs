@@ -479,7 +479,7 @@ fn elastic_sim_and_live_engine_agree_on_counts() {
         &slas,
         10_000.0,
         8.0,
-        SimConfig { seed, service_noise: 0.0, drop_enabled: true, legacy_clock: false },
+        SimConfig { seed, service_noise: 0.0, drop_enabled: true, ..Default::default() },
         &mut sim_adapter,
         &traces,
         "elastic-sim",

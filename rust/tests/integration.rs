@@ -125,7 +125,7 @@ fn dropping_caps_tail_latency() {
         );
         Simulation::new(
             adapter,
-            SimConfig { seed: 9, drop_enabled, service_noise: 0.0, legacy_clock: false },
+            SimConfig { seed: 9, drop_enabled, service_noise: 0.0, ..Default::default() },
         )
     };
     let trace = Trace::synthetic(Pattern::Bursty, 240);

@@ -1,0 +1,262 @@
+//! Epoch-parallel fleet DES determinism suite: the worker count may
+//! only change HOW an epoch is computed, never WHAT it computes.
+//!
+//! Pinned contract (per ISSUE 9): at 1, 2 and 8 workers — and on the
+//! sequential-epochs and legacy-clock paths — a fleet DES run produces
+//! byte-identical per-request outcomes and latencies, `FleetRunMetrics`
+//! (pool report, peak occupancy, final replicas), merged latency
+//! histograms, control-plane journals and span dumps.  Zone faults
+//! landing mid-run must barrier identically too.
+
+use ipa::coordinator::adapter::AdapterConfig;
+use ipa::fleet::nodes::NodeInventory;
+use ipa::fleet::solver::{FleetAdapter, FleetTuning};
+use ipa::fleet::spec::FleetSpec;
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::predictor::{Predictor, ReactivePredictor};
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::profiler::profile::PipelineProfiles;
+use ipa::simulator::sim::{
+    run_fleet_des_faults, run_fleet_des_faults_traced, run_fleet_des_traced, FleetRunMetrics,
+    SimConfig, ZoneFault,
+};
+use ipa::telemetry::{spans_to_jsonl, Telemetry, TelemetryConfig};
+use ipa::workload::trace::Trace;
+use ipa::workload::tracegen::Pattern;
+
+fn predictors(n: usize) -> Vec<Box<dyn Predictor + Send>> {
+    (0..n)
+        .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+        .collect()
+}
+
+/// 8-member fleet (demo3 cycled) through the traced fleet DES at an
+/// explicit `SimConfig` — the thread-count lever under test.
+fn fleet8_run(sim: SimConfig, tel: &Telemetry) -> FleetRunMetrics {
+    const BUDGET: u32 = 64;
+    let fleet = FleetSpec::demo3();
+    let base_specs = fleet.specs().unwrap();
+    let base_profs: Vec<PipelineProfiles> = base_specs.iter().map(pipeline_profiles).collect();
+    let base_slas: Vec<f64> = base_specs.iter().map(|s| s.sla_e2e()).collect();
+    let base_traces: Vec<Trace> = fleet.traces(90);
+    let n = 8usize;
+    let specs: Vec<_> = (0..n).map(|i| base_specs[i % 3].clone()).collect();
+    let profs: Vec<PipelineProfiles> = (0..n).map(|i| base_profs[i % 3].clone()).collect();
+    let slas: Vec<f64> = (0..n).map(|i| base_slas[i % 3]).collect();
+    let traces: Vec<Trace> = (0..n).map(|i| base_traces[i % 3].clone()).collect();
+    let mut adapter = FleetAdapter::new(
+        specs,
+        profs.clone(),
+        AccuracyMetric::Pas,
+        BUDGET,
+        AdapterConfig { interval: 30.0, apply_delay: 8.0, max_replicas: 4 },
+        predictors(n),
+    )
+    .unwrap();
+    run_fleet_des_traced(
+        &profs,
+        &slas,
+        30.0,
+        8.0,
+        sim,
+        &mut adapter,
+        &traces,
+        "sim-parallel",
+        BUDGET,
+        tel,
+    )
+}
+
+/// Every fleet-visible output must match between two runs.
+fn assert_runs_identical(a: &FleetRunMetrics, b: &FleetRunMetrics, what: &str) {
+    assert_eq!(a.members.len(), b.members.len(), "{what}: member count");
+    for (m, (am, bm)) in a.members.iter().zip(&b.members).enumerate() {
+        // per-request outcomes carry the latencies — byte-identical
+        assert_eq!(am.requests, bm.requests, "{what}: member {m} per-request outcomes");
+        assert_eq!(am.completed_count(), bm.completed_count(), "{what}: member {m}");
+        assert_eq!(am.dropped_count(), bm.dropped_count(), "{what}: member {m}");
+    }
+    assert_eq!(a.budget, b.budget, "{what}: final budget");
+    assert_eq!(a.peak_in_use, b.peak_in_use, "{what}: peak occupancy");
+    assert_eq!(a.final_replicas, b.final_replicas, "{what}: final replicas");
+    assert_eq!(a.pool, b.pool, "{what}: pool report");
+    assert_eq!(
+        a.zone_fault_min_survivors, b.zone_fault_min_survivors,
+        "{what}: fault survivors"
+    );
+    assert_eq!(
+        a.merged_latency_histogram(),
+        b.merged_latency_histogram(),
+        "{what}: merged latency histogram"
+    );
+}
+
+/// The tentpole contract on the plain driver: 1, 2 and 8 epoch workers,
+/// the sequential-epochs lever and the legacy single-heap clock all
+/// produce the same run, down to per-request latencies and the merged
+/// fleet histogram.
+#[test]
+fn fleet_des_is_byte_identical_at_any_thread_count() {
+    let anchor = fleet8_run(SimConfig { sim_threads: 1, ..Default::default() }, &Telemetry::off());
+    let total: usize = anchor.members.iter().map(|m| m.requests.len()).sum();
+    assert!(total > 300, "thin run ({total} requests) proves nothing");
+    for threads in [2usize, 8] {
+        let run = fleet8_run(
+            SimConfig { sim_threads: threads, ..Default::default() },
+            &Telemetry::off(),
+        );
+        assert_runs_identical(&anchor, &run, &format!("{threads} threads"));
+    }
+    let seq = fleet8_run(
+        SimConfig { sequential_epochs: true, ..Default::default() },
+        &Telemetry::off(),
+    );
+    assert_runs_identical(&anchor, &seq, "sequential_epochs");
+    let legacy =
+        fleet8_run(SimConfig { legacy_clock: true, ..Default::default() }, &Telemetry::off());
+    assert_runs_identical(&anchor, &legacy, "legacy_clock");
+}
+
+/// The traced contract: journals and span dumps — flushed only at
+/// sequential barriers — are byte-identical at any worker count, and a
+/// deterministic producer never drops spans.
+#[test]
+fn traced_journals_and_spans_are_byte_identical_across_thread_counts() {
+    let runs: Vec<(Telemetry, FleetRunMetrics)> = [1usize, 2, 8]
+        .into_iter()
+        .map(|threads| {
+            let tel = Telemetry::new(TelemetryConfig::full(), 8);
+            let fm = fleet8_run(SimConfig { sim_threads: threads, ..Default::default() }, &tel);
+            (tel, fm)
+        })
+        .collect();
+    let (tel1, fm1) = &runs[0];
+    assert_eq!(tel1.dropped_spans(), 0, "deterministic runs never drop spans");
+    let journal1 = tel1.journal().to_jsonl();
+    let spans1 = spans_to_jsonl(&tel1.take_spans());
+    assert!(!journal1.is_empty() && !spans1.is_empty());
+    for (tel, fm) in &runs[1..] {
+        assert_eq!(tel.dropped_spans(), 0);
+        assert_eq!(journal1, tel.journal().to_jsonl(), "journal not byte-stable");
+        assert_eq!(spans1, spans_to_jsonl(&tel.take_spans()), "spans not byte-stable");
+        assert_runs_identical(fm1, fm, "traced");
+    }
+}
+
+/// Zone-fault fixture: a spread member on a two-zone pool with a
+/// mid-run `kill_zone` — the fault is a global event, so it lands at a
+/// barrier and the emergency repack must be identical at any count.
+fn fault_run(sim: SimConfig) -> FleetRunMetrics {
+    let mut fleet = FleetSpec::demo3();
+    fleet.members.truncate(2);
+    fleet.members[0].spread = true;
+    fleet.members[0].pattern = Pattern::SteadyLow;
+    fleet.members[1].pattern = Pattern::Bursty;
+    let inv = NodeInventory::parse("3x(8c,32g,0a)@east+3x(8c,32g,0a)@west").unwrap();
+    fleet.nodes = Some(inv.clone());
+    fleet.validate().unwrap();
+    let specs = fleet.specs().unwrap();
+    let profs: Vec<_> = specs.iter().map(pipeline_profiles).collect();
+    let slas: Vec<f64> = specs.iter().map(|s| s.sla_e2e()).collect();
+    let mut adapter = FleetAdapter::new(
+        specs,
+        profs.clone(),
+        AccuracyMetric::Pas,
+        inv.replica_cap(),
+        AdapterConfig::default(),
+        predictors(2),
+    )
+    .and_then(|a| {
+        a.with_tuning(FleetTuning {
+            nodes: Some(inv.clone()),
+            spread: Some(fleet.spreads()),
+            migration_delay: 0.5,
+            ..Default::default()
+        })
+    })
+    .unwrap();
+    let traces = fleet.traces(180);
+    let faults = [ZoneFault { at: 75.0, zone: "west".into() }];
+    run_fleet_des_faults(
+        &profs,
+        &slas,
+        10.0,
+        8.0,
+        sim,
+        &mut adapter,
+        &traces,
+        "sim-parallel-fault",
+        0,
+        &faults,
+    )
+}
+
+/// A mid-run zone kill replays identically at 1/2/8 workers and on the
+/// legacy clock: same survivor snapshot, same emergency repack, same
+/// per-request outcomes after the loss.
+#[test]
+fn zone_fault_lands_at_a_barrier_identically_at_any_thread_count() {
+    let anchor = fault_run(SimConfig { seed: 11, sim_threads: 1, ..Default::default() });
+    assert_eq!(anchor.pool.zone_kills, 1, "the scripted fault fired");
+    assert_eq!(anchor.zone_fault_min_survivors.len(), 1);
+    for threads in [2usize, 8] {
+        let run = fault_run(SimConfig { seed: 11, sim_threads: threads, ..Default::default() });
+        assert_runs_identical(&anchor, &run, &format!("fault at {threads} threads"));
+    }
+    let legacy = fault_run(SimConfig { seed: 11, legacy_clock: true, ..Default::default() });
+    assert_runs_identical(&anchor, &legacy, "fault on legacy clock");
+}
+
+/// The traced fault path too: journals (which record the emergency
+/// decision) byte-stable across worker counts.
+#[test]
+fn traced_fault_journals_are_byte_identical_across_thread_counts() {
+    let mut journals = Vec::new();
+    for threads in [1usize, 4] {
+        let mut fleet = FleetSpec::demo3();
+        fleet.members.truncate(2);
+        fleet.members[0].spread = true;
+        let inv = NodeInventory::parse("3x(8c,32g,0a)@east+3x(8c,32g,0a)@west").unwrap();
+        fleet.nodes = Some(inv.clone());
+        fleet.validate().unwrap();
+        let specs = fleet.specs().unwrap();
+        let profs: Vec<_> = specs.iter().map(pipeline_profiles).collect();
+        let slas: Vec<f64> = specs.iter().map(|s| s.sla_e2e()).collect();
+        let mut adapter = FleetAdapter::new(
+            specs.clone(),
+            profs.clone(),
+            AccuracyMetric::Pas,
+            inv.replica_cap(),
+            AdapterConfig::default(),
+            predictors(2),
+        )
+        .and_then(|a| {
+            a.with_tuning(FleetTuning {
+                nodes: Some(inv.clone()),
+                spread: Some(fleet.spreads()),
+                ..Default::default()
+            })
+        })
+        .unwrap();
+        let traces = fleet.traces(120);
+        let faults = [ZoneFault { at: 45.0, zone: "east".into() }];
+        let tel = Telemetry::new(TelemetryConfig::full(), 2);
+        let _ = run_fleet_des_faults_traced(
+            &profs,
+            &slas,
+            10.0,
+            8.0,
+            SimConfig { seed: 3, sim_threads: threads, ..Default::default() },
+            &mut adapter,
+            &traces,
+            "sim-parallel-fault-traced",
+            0,
+            &faults,
+            &tel,
+        );
+        assert_eq!(tel.dropped_spans(), 0);
+        journals.push((tel.journal().to_jsonl(), spans_to_jsonl(&tel.take_spans())));
+    }
+    assert!(!journals[0].0.is_empty());
+    assert_eq!(journals[0], journals[1], "traced fault run not byte-stable across workers");
+}

@@ -3,7 +3,8 @@
 //! more than the threshold against the baseline.
 //!
 //! Time sections (`solver`, `fleet_solver`, `fleet_autoscaler`,
-//! `fleet_binpack`, `fleet_topology`, `fleet_scale`) regress when `mean_s` grows past
+//! `fleet_binpack`, `fleet_topology`, `fleet_scale`, `sim_parallel`)
+//! regress when `mean_s` grows past
 //! `baseline × (1 + threshold)`; throughput sections (`simulator`,
 //! `fleet_sim`, `data_plane`, `telemetry`) regress when `items_per_s`
 //! falls below `baseline × (1 − threshold)`.  Rows or sections absent from the
@@ -24,6 +25,7 @@ const TIME_SECTIONS: &[&str] = &[
     "fleet_binpack",
     "fleet_topology",
     "fleet_scale",
+    "sim_parallel",
 ];
 /// Sections judged on `items_per_s` (higher=better).
 const THROUGHPUT_SECTIONS: &[&str] = &["simulator", "fleet_sim", "data_plane", "telemetry"];
