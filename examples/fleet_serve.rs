@@ -57,6 +57,15 @@
 //! just the DES clock (implies `--skip-live 1`) so CI and scripted
 //! sweeps never touch the wall-clock engine.
 //!
+//! Fleet front door: `--route-policy least_loaded` (or `round_robin`,
+//! `zone_local`, `sticky`; default `none` = the classic pre-addressed
+//! ingress) sends every arrival through the per-member router over the
+//! packing's replica→node→zone placement, and `--admission 1` turns on
+//! degrade-then-shed admission control (brownout before the §4.5 drop
+//! ledger).  `IPA_ROUTE_*` env knobs supply thresholds; both clocks
+//! print the `router_table` accounting when the door is on.  The whole
+//! example drives one `fleet::run::FleetRun` builder on both clocks.
+//!
 //! Scale runs: `--members 50` swaps in the deterministic synthetic
 //! 50-member fleet on a heterogeneous pool scaled by `--nodes-scale K`
 //! (a 50×-scaled mix ≈ a 500-node pool) — the harness behind the
@@ -70,38 +79,30 @@
 //!           --class nlp-batchline=throughput
 //!           --spread video-edge --migration-delay 0.5
 //!           --legacy-lock 0 --legacy-clock 0
+//!           --route-policy least_loaded --admission 1
 //!           --sim-threads 0 --des-only 0
 //!           --trace-out spans.jsonl --journal-out journal.jsonl
 //!           --metrics-text - --sample 64 --skip-live 0]`
 
 use std::sync::Arc;
 
-use ipa::coordinator::adapter::AdapterConfig;
 use ipa::fleet::autoscaler::AutoscalerConfig;
 use ipa::fleet::nodes::NodeInventory;
-use ipa::fleet::solver::{
-    solve_fleet, solve_fleet_placed, FleetAdapter, FleetTuning, PreemptionConfig,
-};
+use ipa::fleet::router::{RoutePolicy, RouterConfig};
+use ipa::fleet::run::FleetRun;
+use ipa::fleet::solver::{solve_fleet, solve_fleet_placed, FleetTuning, PreemptionConfig};
 use ipa::fleet::spec::{FleetSpec, SlaClass};
-use ipa::models::accuracy::AccuracyMetric;
 use ipa::optimizer::ip::Problem;
-use ipa::predictor::{Predictor, ReactivePredictor};
 use ipa::profiler::analytic::pipeline_profiles;
 use ipa::profiler::profile::PipelineProfiles;
 use ipa::reports::tables;
 use ipa::reports::timeline;
-use ipa::serving::engine::{serve_fleet_with, BatchExecutor, ServeConfig, SyntheticExecutor};
+use ipa::serving::engine::ServeConfig;
 use ipa::serving::loadgen::LoadGenConfig;
-use ipa::simulator::sim::{run_fleet_des_traced, SimConfig};
+use ipa::simulator::sim::SimConfig;
 use ipa::telemetry::{export, spans_to_jsonl, Telemetry, TelemetryConfig};
 use ipa::util::cli::Args;
 use ipa::util::stats::mean;
-
-fn predictors(n: usize) -> Vec<Box<dyn Predictor + Send>> {
-    (0..n)
-        .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
-        .collect()
-}
 
 fn main() {
     let args = Args::from_env();
@@ -122,6 +123,38 @@ fn main() {
     let des_only = args.get_usize("des-only", 0) != 0;
     let skip_live = des_only || args.get_usize("skip-live", 0) != 0;
     let traced = trace_out.is_some() || journal_out.is_some() || metrics_text.is_some();
+
+    // Fleet front door: `--route-policy round_robin|least_loaded|
+    // zone_local|sticky` sends every arrival through the per-member
+    // router (default `none` = the classic pre-addressed ingress,
+    // byte-identical to before the router existed), and `--admission 1`
+    // turns on degrade-then-shed admission control.  `IPA_ROUTE_*`
+    // environment knobs supply the remaining thresholds; the CLI flags
+    // override the env.
+    let route_policy = args.get("route-policy").unwrap_or("none");
+    let router_cfg: Option<RouterConfig> = if route_policy == "none"
+        && args.get("admission").is_none()
+    {
+        None
+    } else {
+        let mut rc = RouterConfig::from_env();
+        if route_policy != "none" {
+            match RoutePolicy::from_name(route_policy) {
+                Some(p) => rc.policy = p,
+                None => {
+                    eprintln!(
+                        "bad --route-policy {route_policy:?}: expected \
+                         round_robin|least_loaded|zone_local|sticky|none"
+                    );
+                    std::process::exit(2);
+                }
+            }
+        }
+        if args.get("admission").is_some() {
+            rc.admission = args.get_usize("admission", 0) != 0;
+        }
+        Some(rc)
+    };
 
     // --members N swaps the demo fleet for the deterministic synthetic
     // scale fleet (ignored when --fleet names an explicit spec file).
@@ -201,7 +234,6 @@ fn main() {
 
     let specs = fleet.specs().expect("validated above");
     let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
-    let slas: Vec<f64> = specs.iter().map(|s| s.sla_e2e()).collect();
     let traces = fleet.traces(seconds);
     let names: Vec<String> = fleet.members.iter().map(|m| m.name.clone()).collect();
     let budget = fleet.nodes.as_ref().map_or(fleet.replica_budget, |i| i.replica_cap());
@@ -310,39 +342,37 @@ fn main() {
         fleet.spreads(),
     );
 
-    // ---- clock 1: the fleet DES driver -------------------------------
-    println!("\n=== fleet DES driver (virtual time) ===");
-    let mut des_adapter = FleetAdapter::new(
-        specs.clone(),
-        profs.clone(),
-        AccuracyMetric::Pas,
-        budget,
-        AdapterConfig::default(),
-        predictors(specs.len()),
-    )
-    .and_then(|a| a.with_tuning(tuning.clone()))
-    .expect("valid fleet");
-    let tel = if traced {
+    // One FleetRun is the front door to BOTH clocks: it resolves the
+    // spec (specs/profiles/SLAs/traces/budget/predictors) once, and the
+    // router + telemetry planes attach to each clock identically.
+    let mut run = FleetRun::new(fleet.clone(), tuning).seconds(seconds).cadence(10.0, 8.0);
+    if let Some(rc) = router_cfg.clone() {
+        println!(
+            "front door: policy {} | admission {}",
+            rc.policy.name(),
+            if rc.admission { "degrade-then-shed" } else { "off" },
+        );
+        run = run.router(rc);
+    }
+    let tel = Arc::new(if traced {
         Telemetry::new(
             TelemetryConfig { sample_one_in: sample, ..Default::default() },
             specs.len(),
         )
     } else {
         Telemetry::off()
-    };
+    });
+    if traced {
+        run = run.telemetry(Arc::clone(&tel));
+    }
+
+    // ---- clock 1: the fleet DES driver -------------------------------
+    println!("\n=== fleet DES driver (virtual time) ===");
     let t0 = std::time::Instant::now();
-    let fm = run_fleet_des_traced(
-        &profs,
-        &slas,
-        10.0,
-        8.0,
-        SimConfig { seed: 5, legacy_clock, sim_threads, ..Default::default() },
-        &mut des_adapter,
-        &traces,
-        "fleet-ipa",
-        budget,
-        &tel,
-    );
+    let des = run
+        .sim(SimConfig { seed: 5, legacy_clock, sim_threads, ..Default::default() })
+        .expect("valid fleet");
+    let fm = &des.metrics;
     println!(
         "simulated {} requests in {:.2}s wall | pool peak in use {} / {} (final size; \
          started at {budget}) | {} incremental / {} full solves",
@@ -350,12 +380,15 @@ fn main() {
         t0.elapsed().as_secs_f64(),
         fm.peak_in_use,
         fm.budget,
-        des_adapter.incremental_solves,
-        des_adapter.full_solves,
+        des.adapter.incremental_solves,
+        des.adapter.full_solves,
     );
     println!();
     // `repl` column = the allocation the run actually ended on
     print!("{}", tables::fleet_table(&names, &fm.members, &fm.final_replicas, &fm.pool));
+    if router_cfg.is_some() {
+        print!("{}", tables::router_table(&names, &fm.router));
+    }
 
     // ---- flight recorder output --------------------------------------
     if traced {
@@ -421,26 +454,13 @@ fn main() {
         sla_floor: 0.0,
         legacy_lock,
     };
-    let scaled: Vec<PipelineProfiles> = profs.iter().map(|p| p.scaled(time_scale)).collect();
-    let executors: Vec<Arc<dyn BatchExecutor>> = scaled
-        .iter()
-        .map(|p| Arc::new(SyntheticExecutor::from_profiles(p, 1.0)) as Arc<dyn BatchExecutor>)
-        .collect();
     let t0 = std::time::Instant::now();
-    let rep = serve_fleet_with(
-        &specs,
-        scaled,
-        AccuracyMetric::Pas,
-        budget,
-        "fleet-ipa",
-        &cfg,
-        LoadGenConfig { time_scale, seed: 5 },
-        &traces,
-        executors,
-        predictors(specs.len()),
-        tuning,
-    )
-    .expect("live fleet serve");
+    // The same FleetRun finishes on the wall clock: time-scaled
+    // profiles + profile-sleeping synthetic executors, and the same
+    // router/telemetry planes the DES run drove.
+    let rep = run
+        .serve(&cfg, LoadGenConfig { time_scale, seed: 5 })
+        .expect("live fleet serve");
     let live_metrics: Vec<_> = rep.members.iter().map(|r| r.metrics.clone()).collect();
     println!(
         "served {} requests in {:.2}s wall | pool peak in use {} / {} (final size; \
@@ -451,6 +471,9 @@ fn main() {
         rep.budget,
     );
     print!("{}", tables::fleet_table(&names, &live_metrics, &rep.final_replicas, &rep.pool));
+    if router_cfg.is_some() {
+        print!("{}", tables::router_table(&names, &rep.router));
+    }
 
     println!("\nfleet e2e complete: both clocks drove the same shared-budget machinery");
 }

@@ -133,11 +133,12 @@ fn main() {
 
     // Fleet: joint cross-pipeline solver decision time + fleet DES
     // throughput over the 3-member demo fleet.
+    use ipa::fleet::router::{RoutePolicy, RouterConfig};
     use ipa::fleet::solver::{solve_fleet, FleetAdapter};
     use ipa::fleet::spec::FleetSpec;
     use ipa::optimizer::ip::Problem;
     use ipa::predictor::Predictor;
-    use ipa::simulator::sim::run_fleet_des;
+    use ipa::simulator::sim::{run_fleet, FleetDesParams};
 
     let fleet = FleetSpec::demo3();
     let fleet_specs = fleet.specs().unwrap();
@@ -188,16 +189,21 @@ fn main() {
                 predictors,
             )
             .unwrap();
-            run_fleet_des(
-                &fleet_profs,
-                &fleet_slas,
-                10.0,
-                8.0,
-                SimConfig { seed: fleet_seed, ..Default::default() },
+            run_fleet(
+                FleetDesParams {
+                    profiles: &fleet_profs,
+                    slas: &fleet_slas,
+                    interval: 10.0,
+                    apply_delay: 8.0,
+                    sim: SimConfig { seed: fleet_seed, ..Default::default() },
+                    system: "fleet-bench",
+                    budget,
+                    faults: &[],
+                    router: None,
+                    telemetry: None,
+                },
                 &mut adapter,
                 &fleet_traces,
-                "fleet-bench",
-                budget,
             )
         },
     )];
@@ -437,7 +443,7 @@ fn main() {
             t.arrivals(ipa::workload::tracegen::member_seed(fleet_seed, m)).len() as f64
         })
         .sum();
-    let wide_run = |legacy_clock: bool| {
+    let wide_run_routed = |legacy_clock: bool, router: Option<RouterConfig>| {
         let predictors: Vec<Box<dyn Predictor + Send>> = wide_specs
             .iter()
             .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
@@ -451,18 +457,24 @@ fn main() {
             predictors,
         )
         .unwrap();
-        run_fleet_des(
-            &wide_profs,
-            &wide_slas,
-            10.0,
-            8.0,
-            SimConfig { seed: fleet_seed, legacy_clock, ..Default::default() },
+        run_fleet(
+            FleetDesParams {
+                profiles: &wide_profs,
+                slas: &wide_slas,
+                interval: 10.0,
+                apply_delay: 8.0,
+                sim: SimConfig { seed: fleet_seed, legacy_clock, ..Default::default() },
+                system: "dp-bench",
+                budget: wide_budget,
+                faults: &[],
+                router,
+                telemetry: None,
+            },
             &mut adapter,
             &wide_traces,
-            "dp-bench",
-            wide_budget,
         )
     };
+    let wide_run = |legacy_clock: bool| wide_run_routed(legacy_clock, None);
     // one parity pass before timing: both clocks must produce the very
     // same per-request outcomes on the bench workload
     {
@@ -499,7 +511,6 @@ fn main() {
     // within 10% of the telemetry-off run (IPA_TELEM_OVERHEAD_GATE
     // overrides on noisy hardware); a traced 8-member fleet DES row
     // shows the end-to-end cost with spans + decision journal on.
-    use ipa::simulator::sim::run_fleet_des_traced;
     use ipa::telemetry::{Telemetry, TelemetryConfig};
 
     let mut rows = Vec::new();
@@ -553,17 +564,21 @@ fn main() {
                 predictors,
             )
             .unwrap();
-            run_fleet_des_traced(
-                &wide_profs,
-                &wide_slas,
-                10.0,
-                8.0,
-                SimConfig { seed: fleet_seed, ..Default::default() },
+            run_fleet(
+                FleetDesParams {
+                    profiles: &wide_profs,
+                    slas: &wide_slas,
+                    interval: 10.0,
+                    apply_delay: 8.0,
+                    sim: SimConfig { seed: fleet_seed, ..Default::default() },
+                    system: "telem-bench",
+                    budget: wide_budget,
+                    faults: &[],
+                    router: None,
+                    telemetry: Some(&tel),
+                },
                 &mut adapter,
                 &wide_traces,
-                "telem-bench",
-                wide_budget,
-                &tel,
             )
         },
     ));
@@ -699,16 +714,25 @@ fn main() {
                 predictors,
             )
             .unwrap();
-            run_fleet_des(
-                &par_profs,
-                &par_slas,
-                10.0,
-                8.0,
-                SimConfig { seed: fleet_seed, sim_threads: threads, ..Default::default() },
+            run_fleet(
+                FleetDesParams {
+                    profiles: &par_profs,
+                    slas: &par_slas,
+                    interval: 10.0,
+                    apply_delay: 8.0,
+                    sim: SimConfig {
+                        seed: fleet_seed,
+                        sim_threads: threads,
+                        ..Default::default()
+                    },
+                    system: "par-bench",
+                    budget: par_budget,
+                    faults: &[],
+                    router: None,
+                    telemetry: None,
+                },
                 &mut adapter,
                 &par_traces,
-                "par-bench",
-                par_budget,
             )
         };
         // parity before timing: the worker count may not change the run
@@ -738,6 +762,60 @@ fn main() {
     print_section("sim parallel (epoch-parallel fleet DES vs 1 worker)", &rows);
     let sim_parallel_rows = rows.clone();
 
+    // Fleet front door: the same wide 8-member DES run pre-addressed
+    // (router off — the historical ingress), routed through the
+    // least-loaded policy, and routed with admission control on.  The
+    // rows bound what the per-arrival route/admit decision costs on top
+    // of the data plane; a counter check pins that the routed run
+    // actually routed every arrival.
+    let mut rows = Vec::new();
+    {
+        let routed = wide_run_routed(
+            false,
+            Some(RouterConfig { policy: RoutePolicy::LeastLoaded, ..RouterConfig::default() }),
+        );
+        let total: u64 = routed.router.iter().map(|s| s.total_routed()).sum();
+        assert_eq!(
+            total as usize,
+            routed.members.iter().map(|m| m.requests.len()).sum::<usize>(),
+            "routed bench run must route every arrival"
+        );
+    }
+    rows.push(b.run_throughput(
+        &format!("fleet_router/pre_addressed_{wide_n}m"),
+        wide_items,
+        || wide_run_routed(false, None),
+    ));
+    rows.push(b.run_throughput(
+        &format!("fleet_router/routed_least_loaded_{wide_n}m"),
+        wide_items,
+        || {
+            wide_run_routed(
+                false,
+                Some(RouterConfig {
+                    policy: RoutePolicy::LeastLoaded,
+                    ..RouterConfig::default()
+                }),
+            )
+        },
+    ));
+    rows.push(b.run_throughput(
+        &format!("fleet_router/routed_admission_{wide_n}m"),
+        wide_items,
+        || {
+            wide_run_routed(
+                false,
+                Some(RouterConfig {
+                    policy: RoutePolicy::LeastLoaded,
+                    admission: true,
+                    ..RouterConfig::default()
+                }),
+            )
+        },
+    ));
+    print_section("fleet router (front door cost vs pre-addressed ingress)", &rows);
+    let fleet_router_rows = rows.clone();
+
     // Perf baseline for future PRs: solver decision time + simulator
     // throughput (single-pipeline and fleet) + elastic control-plane
     // latencies, in a stable JSON shape.
@@ -753,6 +831,7 @@ fn main() {
             ("fleet_topology", &fleet_topology_rows[..]),
             ("fleet_scale", &fleet_scale_rows[..]),
             ("sim_parallel", &sim_parallel_rows[..]),
+            ("fleet_router", &fleet_router_rows[..]),
             ("data_plane", &data_plane_rows[..]),
             ("telemetry", &telemetry_rows[..]),
         ],

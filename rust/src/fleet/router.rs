@@ -1,0 +1,688 @@
+//! The fleet front door: per-member affinity-aware request routing +
+//! admission control.
+//!
+//! Until this module, every request arrived pre-addressed to its member
+//! pipeline and replicas were anonymous capacity slots.  A real
+//! multi-tenant ingress needs more: spread each arrival across the
+//! member's stage-0 replicas (PR 5's [`crate::fleet::nodes::Packing`]
+//! knows which node — and therefore which zone — each replica lives
+//! on), and decide *before* enqueueing whether the queue can still meet
+//! the SLA.  [`Router`] is that layer, shared verbatim by both clocks:
+//! the fleet DES owns one router per member lane (virtual time), the
+//! live engine one per member behind a mutex (wall time).
+//!
+//! **Routing policies** ([`RoutePolicy`]):
+//!
+//! * `RoundRobin` — the classic baseline; position depends only on the
+//!   member's arrival count, so DES and live runs of the same trace
+//!   route identically (pinned in `tests/fleet_router.rs`).
+//! * `LeastLoaded` — per-replica in-flight (queued) counters; always
+//!   picks a replica with the minimum count (lowest index on ties).
+//! * `ZoneLocalFirst` — each arrival carries an origin zone (derived
+//!   deterministically from its id over the inventory's zone universe);
+//!   the router prefers the least-loaded replica *in that zone* and
+//!   only crosses zones when the origin zone has no live replica —
+//!   paying [`RouterConfig::cross_zone_penalty`] extra exec latency on
+//!   the DES clock.
+//! * `StickySession` — `id / session_stride` is the session key; repeat
+//!   sessions hit their previous replica *warm*, modeled as a
+//!   [`RouterConfig::warm_scale`] exec-latency discount (the
+//!   cache-affinity idea: repeat traffic is cheaper).
+//!
+//! **Admission** (off unless [`RouterConfig::admission`]): the router
+//! predicts the stage-0 queue wait from its own in-flight counters and
+//! the active profile (`queued × l(b) / (b × replicas)`).  When the
+//! prediction crosses `admit_threshold × SLA` the request is *degraded*
+//! — still served, but as a brownout/cheaper response, modeled as a
+//! [`RouterConfig::brownout_scale`] exec discount — and only past
+//! `shed_threshold × SLA` is it shed into the §4.5 drop ledger
+//! (`record_arrival` + `record_drop`, never enqueued).  Degrade-first
+//! is the point: under a flash crowd the journal shows `degrade`
+//! events while completions keep flowing, not a wall of drops.
+//!
+//! **Determinism.**  No RNG anywhere: origin zones and session keys
+//! derive from request ids, ties break toward the lowest replica
+//! index, and all state lives per member (the epoch-parallel DES
+//! mutates it only inside that member's lane).  A routed DES run is
+//! byte-identical at any `IPA_SIM_THREADS` count.
+//!
+//! **Live caveat.**  On the wall clock the executor really sleeps the
+//! profiled latency, so warm/brownout/cross-zone *latency* adjustments
+//! are DES-only; the live engine still routes, admits, degrades and
+//! sheds with the same code and reports the same
+//! [`RouterStats`](crate::metrics::RouterStats).
+//!
+//! Tuning defaults come from [`RouterConfig::default`]; every field has
+//! an `IPA_ROUTE_*` environment override via
+//! [`RouterConfig::from_env`] (see the crate-level "Runtime knobs").
+
+use std::collections::HashMap;
+
+use crate::metrics::RouterStats;
+use crate::queueing::Request;
+
+/// How a [`Router`] picks the stage-0 replica for an arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Cycle replicas in arrival order (DES↔live identical).
+    #[default]
+    RoundRobin,
+    /// Minimum in-flight counter, lowest index on ties.
+    LeastLoaded,
+    /// Least-loaded within the arrival's origin zone; cross zones only
+    /// when that zone has no live replica.
+    ZoneLocalFirst,
+    /// Session-key hash → warm replica (exec-latency discount on hits).
+    StickySession,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI/env name (`round_robin`, `least_loaded`,
+    /// `zone_local`, `sticky`).
+    pub fn from_name(s: &str) -> Option<RoutePolicy> {
+        match s.trim() {
+            "round_robin" | "rr" => Some(RoutePolicy::RoundRobin),
+            "least_loaded" | "ll" => Some(RoutePolicy::LeastLoaded),
+            "zone_local" | "zone_local_first" => Some(RoutePolicy::ZoneLocalFirst),
+            "sticky" | "sticky_session" => Some(RoutePolicy::StickySession),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::LeastLoaded => "least_loaded",
+            RoutePolicy::ZoneLocalFirst => "zone_local",
+            RoutePolicy::StickySession => "sticky",
+        }
+    }
+}
+
+/// Front-door settings (one per fleet run; every member's router shares
+/// them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterConfig {
+    pub policy: RoutePolicy,
+    /// Enable the degrade-then-shed admission stage.
+    pub admission: bool,
+    /// Extra exec seconds a batch pays when any of its requests was
+    /// routed across zones (DES latency model).
+    pub cross_zone_penalty: f64,
+    /// Exec-latency multiplier for warm (sticky-hit) requests (< 1).
+    pub warm_scale: f64,
+    /// Exec-latency multiplier for degraded/brownout responses (< 1 —
+    /// a cheaper answer is also a faster one).
+    pub brownout_scale: f64,
+    /// Degrade when predicted queue wait exceeds this × the member's
+    /// class-scaled SLA.
+    pub admit_threshold: f64,
+    /// Shed (§4.5 drop ledger) past this × the class-scaled SLA.
+    pub shed_threshold: f64,
+    /// Consecutive request ids sharing one sticky-session key.
+    pub session_stride: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            policy: RoutePolicy::RoundRobin,
+            admission: false,
+            cross_zone_penalty: 0.002,
+            warm_scale: 0.7,
+            brownout_scale: 0.5,
+            admit_threshold: 0.6,
+            shed_threshold: 1.5,
+            session_stride: 16,
+        }
+    }
+}
+
+impl RouterConfig {
+    /// Defaults with every `IPA_ROUTE_*` environment override applied
+    /// (read once per call — construction-time, never on the hot
+    /// path): `IPA_ROUTE_POLICY`, `IPA_ROUTE_ADMISSION`,
+    /// `IPA_ROUTE_CROSS_ZONE_PENALTY`, `IPA_ROUTE_WARM_SCALE`,
+    /// `IPA_ROUTE_BROWNOUT_SCALE`, `IPA_ROUTE_ADMIT_THRESHOLD`,
+    /// `IPA_ROUTE_SHED_THRESHOLD`, `IPA_ROUTE_SESSION_STRIDE`.
+    pub fn from_env() -> RouterConfig {
+        fn env_f64(name: &str, default: f64) -> f64 {
+            std::env::var(name).ok().and_then(|v| v.trim().parse().ok()).unwrap_or(default)
+        }
+        let d = RouterConfig::default();
+        RouterConfig {
+            policy: std::env::var("IPA_ROUTE_POLICY")
+                .ok()
+                .and_then(|v| RoutePolicy::from_name(&v))
+                .unwrap_or(d.policy),
+            admission: std::env::var("IPA_ROUTE_ADMISSION")
+                .map(|v| v.trim() == "1")
+                .unwrap_or(d.admission),
+            cross_zone_penalty: env_f64("IPA_ROUTE_CROSS_ZONE_PENALTY", d.cross_zone_penalty),
+            warm_scale: env_f64("IPA_ROUTE_WARM_SCALE", d.warm_scale),
+            brownout_scale: env_f64("IPA_ROUTE_BROWNOUT_SCALE", d.brownout_scale),
+            admit_threshold: env_f64("IPA_ROUTE_ADMIT_THRESHOLD", d.admit_threshold),
+            shed_threshold: env_f64("IPA_ROUTE_SHED_THRESHOLD", d.shed_threshold),
+            session_stride: std::env::var("IPA_ROUTE_SESSION_STRIDE")
+                .ok()
+                .and_then(|v| v.trim().parse().ok())
+                .filter(|&s: &u64| s > 0)
+                .unwrap_or(d.session_stride),
+        }
+    }
+}
+
+/// The router's verdict for one arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouteOutcome {
+    /// Enqueue normally on `replica`.
+    Route { replica: usize, cross_zone: bool, warm: bool },
+    /// Enqueue on `replica` but serve the brownout/cheaper response.
+    Degrade { replica: usize },
+    /// Do not enqueue: book into the §4.5 drop ledger
+    /// (`record_arrival` + `record_drop`).
+    Shed,
+}
+
+/// Per-batch exec-latency adjustment from routing decisions:
+/// `service' = service × scale + extra`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchAdjust {
+    /// Mean per-request factor (warm/brownout discounts; 1.0 neutral).
+    pub scale: f64,
+    /// Max cross-zone hop penalty in the batch, seconds.
+    pub extra: f64,
+}
+
+impl BatchAdjust {
+    pub const NEUTRAL: BatchAdjust = BatchAdjust { scale: 1.0, extra: 0.0 };
+}
+
+/// Routing counters accumulated since the last control-plane tick (the
+/// journal's `route`/`admit`/`degrade` events are built from one of
+/// these per member per adaptation interval).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RouteTick {
+    pub routed: u64,
+    pub degraded: u64,
+    pub shed: u64,
+    pub cross_zone: u64,
+    pub warm_hits: u64,
+}
+
+/// A routed request's pending bookkeeping: which replica holds it and
+/// how its eventual batch should be priced.
+#[derive(Debug, Clone, Copy)]
+struct RouteTag {
+    replica: usize,
+    /// Arrival time — lets [`Router::expire`] reclaim tags whose
+    /// requests were dropped at batch formation (the router never sees
+    /// those ids again).
+    t: f64,
+    warm: bool,
+    degraded: bool,
+    cross_zone: bool,
+}
+
+/// One member's front door.  All state is per member: the DES keeps a
+/// router inside the member's lane (mutated only by that member's
+/// epoch worker, so parallel epochs stay byte-deterministic), the live
+/// engine behind a per-member mutex.
+#[derive(Debug)]
+pub struct Router {
+    cfg: RouterConfig,
+    /// Class-scaled SLA — the admission thresholds' base.
+    sla: f64,
+    /// Stage-0 replica slots currently routable.
+    replicas: usize,
+    /// Zone label per replica slot (from the packing; empty when the
+    /// pool is fungible/unzoned — zone policy then degenerates to
+    /// least-loaded with no cross-zone charges).
+    zones: Vec<String>,
+    /// Distinct zone labels of the full inventory — the origin-zone
+    /// universe arrivals are attributed to (fixed for the run: clients
+    /// in a dead zone keep sending).
+    zone_names: Vec<String>,
+    /// Estimated service seconds per queued request at the active
+    /// config (`l(b)/b`), refreshed at every topology sync.
+    service_per_item: f64,
+    /// Queued-request count per replica slot.
+    inflight: Vec<u32>,
+    /// Round-robin cursor (RoundRobin picks; StickySession cold picks).
+    rr: usize,
+    /// id → pending tag, consumed at batch formation.
+    assigned: HashMap<u64, RouteTag>,
+    /// Sticky session key → replica.
+    sessions: HashMap<u64, usize>,
+    stats: RouterStats,
+    tick: RouteTick,
+}
+
+impl Router {
+    /// A router for one member.  `sla` is the member's end-to-end SLA
+    /// already scaled by its SLA class (the same scaling the §4.5 drop
+    /// policy uses); `zone_names` the inventory's distinct zones.
+    pub fn new(cfg: RouterConfig, sla: f64, zone_names: Vec<String>) -> Router {
+        Router {
+            cfg,
+            sla: if sla.is_finite() && sla > 0.0 { sla } else { 1.0 },
+            replicas: 1,
+            zones: Vec::new(),
+            zone_names,
+            service_per_item: 0.0,
+            inflight: vec![0],
+            rr: 0,
+            assigned: HashMap::new(),
+            sessions: HashMap::new(),
+            stats: RouterStats { routed: vec![0], ..RouterStats::default() },
+            tick: RouteTick::default(),
+        }
+    }
+
+    /// Sync the routable topology after a reconfiguration, pool resize
+    /// or zone kill: stage-0 replica count, per-replica zone labels
+    /// (packing order; padded/truncated defensively if a rolling
+    /// transition briefly disagrees) and the per-request service
+    /// estimate of the active config.  In-flight tags on vanished
+    /// replicas are folded back onto the surviving slots.
+    pub fn set_topology(&mut self, replicas: usize, mut zones: Vec<String>, service_per_item: f64) {
+        let n = replicas.max(1);
+        if !zones.is_empty() {
+            zones.resize(n, String::new());
+        }
+        self.zones = zones;
+        self.service_per_item = if service_per_item.is_finite() && service_per_item > 0.0 {
+            service_per_item
+        } else {
+            0.0
+        };
+        if n != self.replicas {
+            self.replicas = n;
+            for tag in self.assigned.values_mut() {
+                if tag.replica >= n {
+                    tag.replica %= n;
+                }
+            }
+            let mut counts = vec![0u32; n];
+            for tag in self.assigned.values() {
+                counts[tag.replica] += 1;
+            }
+            self.inflight = counts;
+            self.sessions.retain(|_, r| *r < n);
+            if self.stats.routed.len() < n {
+                self.stats.routed.resize(n, 0);
+            }
+        }
+    }
+
+    /// Predicted stage-0 queue wait at the current occupancy, seconds.
+    pub fn est_wait(&self) -> f64 {
+        let queued: u32 = self.inflight.iter().sum();
+        queued as f64 * self.service_per_item / self.replicas.max(1) as f64
+    }
+
+    /// The arrival's origin zone (deterministic in its id), if the
+    /// inventory is zoned.
+    fn origin_zone(&self, id: u64) -> Option<&str> {
+        if self.zone_names.is_empty() {
+            None
+        } else {
+            Some(self.zone_names[(id % self.zone_names.len() as u64) as usize].as_str())
+        }
+    }
+
+    /// Least-loaded replica among `candidates` (lowest index on ties);
+    /// falls back over all replicas when the filter matches none.
+    fn least_loaded<F: Fn(usize) -> bool>(&self, keep: F) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for r in 0..self.replicas {
+            if !keep(r) {
+                continue;
+            }
+            match best {
+                Some(b) if self.inflight[r] >= self.inflight[b] => {}
+                _ => best = Some(r),
+            }
+        }
+        best
+    }
+
+    /// Pick a replica for `id`: `(replica, cross_zone, warm)`.
+    fn pick(&mut self, id: u64) -> (usize, bool, bool) {
+        let n = self.replicas;
+        match self.cfg.policy {
+            RoutePolicy::RoundRobin => {
+                let r = self.rr % n;
+                self.rr = (self.rr + 1) % n;
+                (r, false, false)
+            }
+            RoutePolicy::LeastLoaded => {
+                (self.least_loaded(|_| true).unwrap_or(0), false, false)
+            }
+            RoutePolicy::ZoneLocalFirst => {
+                let origin = self.origin_zone(id).map(str::to_string);
+                match &origin {
+                    Some(z) if !self.zones.is_empty() => {
+                        match self.least_loaded(|r| self.zones[r] == *z) {
+                            Some(r) => (r, false, false),
+                            // origin zone has no live replica: the hop
+                            // crosses zones and pays the penalty
+                            None => (self.least_loaded(|_| true).unwrap_or(0), true, false),
+                        }
+                    }
+                    _ => (self.least_loaded(|_| true).unwrap_or(0), false, false),
+                }
+            }
+            RoutePolicy::StickySession => {
+                let key = id / self.cfg.session_stride.max(1);
+                match self.sessions.get(&key) {
+                    Some(&r) if r < n => (r, false, true),
+                    _ => {
+                        let r = self.rr % n;
+                        self.rr = (self.rr + 1) % n;
+                        self.sessions.insert(key, r);
+                        (r, false, false)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Route one arrival at `now`.  The caller actuates the outcome:
+    /// `Route`/`Degrade` → ingest into stage 0; `Shed` → book the §4.5
+    /// drop (`record_arrival` + `record_drop`) without enqueueing.
+    pub fn route(&mut self, id: u64, now: f64) -> RouteOutcome {
+        if self.cfg.admission {
+            let est = self.est_wait();
+            if est > self.cfg.shed_threshold * self.sla {
+                self.stats.shed += 1;
+                self.tick.shed += 1;
+                return RouteOutcome::Shed;
+            }
+            if est > self.cfg.admit_threshold * self.sla {
+                let (replica, cross_zone, _) = self.pick(id);
+                self.commit(id, now, replica, cross_zone, false, true);
+                return RouteOutcome::Degrade { replica };
+            }
+        }
+        let (replica, cross_zone, warm) = self.pick(id);
+        self.commit(id, now, replica, cross_zone, warm, false);
+        RouteOutcome::Route { replica, cross_zone, warm }
+    }
+
+    fn commit(
+        &mut self,
+        id: u64,
+        now: f64,
+        replica: usize,
+        cross_zone: bool,
+        warm: bool,
+        degraded: bool,
+    ) {
+        self.inflight[replica] += 1;
+        self.assigned.insert(id, RouteTag { replica, t: now, warm, degraded, cross_zone });
+        if self.stats.routed.len() <= replica {
+            self.stats.routed.resize(replica + 1, 0);
+        }
+        self.stats.routed[replica] += 1;
+        self.tick.routed += 1;
+        if cross_zone {
+            self.stats.cross_zone += 1;
+            self.tick.cross_zone += 1;
+        }
+        if warm {
+            self.stats.warm_hits += 1;
+            self.tick.warm_hits += 1;
+        }
+        if degraded {
+            self.stats.degraded += 1;
+            self.tick.degraded += 1;
+        }
+    }
+
+    /// A stage-0 batch formed: consume the member requests' tags (they
+    /// leave the routed queue), free their in-flight slots and return
+    /// the exec-latency adjustment the routing decisions earned
+    /// (`service' = service × scale + extra`).  The live engine calls
+    /// this for bookkeeping only — its executor really sleeps.
+    pub fn on_batch(&mut self, requests: &[Request]) -> BatchAdjust {
+        if requests.is_empty() {
+            return BatchAdjust::NEUTRAL;
+        }
+        let mut scale_sum = 0.0;
+        let mut extra: f64 = 0.0;
+        for req in requests {
+            match self.assigned.remove(&req.id) {
+                Some(tag) => {
+                    if let Some(c) = self.inflight.get_mut(tag.replica) {
+                        *c = c.saturating_sub(1);
+                    }
+                    scale_sum += if tag.degraded {
+                        self.cfg.brownout_scale
+                    } else if tag.warm {
+                        self.cfg.warm_scale
+                    } else {
+                        1.0
+                    };
+                    if tag.cross_zone {
+                        extra = extra.max(self.cfg.cross_zone_penalty);
+                    }
+                }
+                // expired tag (see `expire`) or pre-router request:
+                // neutral pricing
+                None => scale_sum += 1.0,
+            }
+        }
+        BatchAdjust { scale: scale_sum / requests.len() as f64, extra }
+    }
+
+    /// Reclaim tags of requests the router will never see again —
+    /// §4.5 drops happen *inside* batch formation, invisible from
+    /// here, so anything older than the drop horizon (4× SLA) has
+    /// certainly left the queue.  Called at control-plane sync points;
+    /// effects are per-id and commutative, so map iteration order
+    /// never leaks into results.
+    pub fn expire(&mut self, now: f64) {
+        if self.assigned.is_empty() {
+            return;
+        }
+        let horizon = (4.0 * self.sla).max(1.0);
+        let stale: Vec<u64> = self
+            .assigned
+            .iter()
+            .filter(|(_, tag)| now - tag.t > horizon)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in stale {
+            if let Some(tag) = self.assigned.remove(&id) {
+                if let Some(c) = self.inflight.get_mut(tag.replica) {
+                    *c = c.saturating_sub(1);
+                }
+            }
+        }
+    }
+
+    /// Cumulative per-run counters.
+    pub fn stats(&self) -> &RouterStats {
+        &self.stats
+    }
+
+    /// Drain the since-last-tick counters (journal aggregation).
+    pub fn take_tick(&mut self) -> RouteTick {
+        std::mem::take(&mut self.tick)
+    }
+
+    /// Current per-replica queued counts (tests / diagnostics).
+    pub fn inflight(&self) -> &[u32] {
+        &self.inflight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request { id, arrival: 0.0, stage_arrival: 0.0 }
+    }
+
+    fn router(policy: RoutePolicy, replicas: usize) -> Router {
+        let cfg = RouterConfig { policy, ..RouterConfig::default() };
+        let mut r = Router::new(cfg, 1.0, Vec::new());
+        r.set_topology(replicas, Vec::new(), 0.01);
+        r
+    }
+
+    #[test]
+    fn round_robin_cycles_evenly() {
+        let mut r = router(RoutePolicy::RoundRobin, 3);
+        let mut hits = vec![0u32; 3];
+        for id in 0..9 {
+            match r.route(id, 0.0) {
+                RouteOutcome::Route { replica, .. } => hits[replica] += 1,
+                o => panic!("unexpected {o:?}"),
+            }
+        }
+        assert_eq!(hits, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_emptiest_slot() {
+        let mut r = router(RoutePolicy::LeastLoaded, 3);
+        // three arrivals spread 0,1,2; complete replica 1's request and
+        // the next arrival must land there
+        for id in 0..3 {
+            r.route(id, 0.0);
+        }
+        r.on_batch(&[req(1)]);
+        match r.route(3, 0.0) {
+            RouteOutcome::Route { replica, .. } => assert_eq!(replica, 1),
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    #[test]
+    fn sticky_sessions_rehit_their_replica_warm() {
+        let mut r = router(RoutePolicy::StickySession, 4);
+        let stride = RouterConfig::default().session_stride;
+        let first = match r.route(0, 0.0) {
+            RouteOutcome::Route { replica, warm } => {
+                assert!(!warm, "cold first hit");
+                replica
+            }
+            o => panic!("unexpected {o:?}"),
+        };
+        // same session (id within the stride) must rehit warm
+        match r.route(stride - 1, 0.0) {
+            RouteOutcome::Route { replica, warm, .. } => {
+                assert_eq!(replica, first);
+                assert!(warm);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+        assert_eq!(r.stats().warm_hits, 1);
+    }
+
+    #[test]
+    fn zone_local_crosses_only_when_zone_empty() {
+        let cfg = RouterConfig { policy: RoutePolicy::ZoneLocalFirst, ..RouterConfig::default() };
+        let mut r = Router::new(cfg, 1.0, vec!["east".into(), "west".into()]);
+        r.set_topology(3, vec!["east".into(), "east".into(), "west".into()], 0.01);
+        // id 0 → origin east (0 % 2), id 1 → west
+        match r.route(0, 0.0) {
+            RouteOutcome::Route { replica, cross_zone, .. } => {
+                assert!(replica < 2, "east-origin stays on an east replica");
+                assert!(!cross_zone);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+        match r.route(1, 0.0) {
+            RouteOutcome::Route { replica, cross_zone, .. } => {
+                assert_eq!(replica, 2);
+                assert!(!cross_zone);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+        // west zone dies: west-origin arrivals must cross
+        r.set_topology(2, vec!["east".into(), "east".into()], 0.01);
+        match r.route(3, 0.0) {
+            RouteOutcome::Route { cross_zone, .. } => assert!(cross_zone),
+            o => panic!("unexpected {o:?}"),
+        }
+        assert_eq!(r.stats().cross_zone, 1);
+    }
+
+    #[test]
+    fn admission_degrades_then_sheds() {
+        let cfg = RouterConfig {
+            policy: RoutePolicy::RoundRobin,
+            admission: true,
+            admit_threshold: 0.5,
+            shed_threshold: 2.0,
+            ..RouterConfig::default()
+        };
+        let mut r = Router::new(cfg, 1.0, Vec::new());
+        // 1 replica, 1s of service per queued item: est_wait = queued
+        r.set_topology(1, Vec::new(), 1.0);
+        assert!(matches!(r.route(0, 0.0), RouteOutcome::Route { .. }));
+        // est 1.0 > 0.5×sla → degrade; est still ≤ 2.0×sla → no shed
+        assert!(matches!(r.route(1, 0.0), RouteOutcome::Degrade { .. }));
+        assert!(matches!(r.route(2, 0.0), RouteOutcome::Shed));
+        assert_eq!(r.stats().degraded, 1);
+        assert_eq!(r.stats().shed, 1);
+        // batch pricing: the degraded request discounts the mean
+        let adj = r.on_batch(&[req(0), req(1)]);
+        assert!(adj.scale < 1.0 && adj.scale > 0.5);
+    }
+
+    #[test]
+    fn batch_adjust_prices_warm_and_cross_zone() {
+        let cfg = RouterConfig {
+            policy: RoutePolicy::ZoneLocalFirst,
+            cross_zone_penalty: 0.01,
+            ..RouterConfig::default()
+        };
+        let mut r = Router::new(cfg, 1.0, vec!["east".into(), "west".into()]);
+        r.set_topology(1, vec!["east".into()], 0.01);
+        // id 1 → west origin, but only east replicas exist
+        r.route(1, 0.0);
+        let adj = r.on_batch(&[req(1)]);
+        assert_eq!(adj.extra, 0.01);
+        assert_eq!(adj.scale, 1.0);
+    }
+
+    #[test]
+    fn expire_reclaims_dropped_requests() {
+        let mut r = router(RoutePolicy::LeastLoaded, 2);
+        r.route(0, 0.0);
+        r.route(1, 0.0);
+        assert_eq!(r.inflight().iter().sum::<u32>(), 2);
+        // neither request ever forms a batch (dropped inside §4.5);
+        // past the horizon the router reclaims them
+        r.expire(100.0);
+        assert_eq!(r.inflight().iter().sum::<u32>(), 0);
+    }
+
+    #[test]
+    fn shrink_folds_inflight_onto_survivors() {
+        let mut r = router(RoutePolicy::LeastLoaded, 4);
+        for id in 0..4 {
+            r.route(id, 0.0);
+        }
+        r.set_topology(2, Vec::new(), 0.01);
+        assert_eq!(r.inflight().len(), 2);
+        assert_eq!(r.inflight().iter().sum::<u32>(), 4);
+        // consuming the folded tags still balances
+        r.on_batch(&[req(0), req(1), req(2), req(3)]);
+        assert_eq!(r.inflight().iter().sum::<u32>(), 0);
+    }
+
+    #[test]
+    fn config_from_env_defaults_without_overrides() {
+        // (process env in tests is shared — only assert the defaults
+        // path is sane, not specific override values)
+        let c = RouterConfig::from_env();
+        assert!(c.session_stride > 0);
+        assert!(c.shed_threshold >= c.admit_threshold);
+    }
+}

@@ -1,0 +1,343 @@
+//! One front door for driving a whole fleet on either clock.
+//!
+//! Before this module the two fleet drivers had sprawled into eight
+//! near-duplicate entry points (`run_fleet_des{,_faults}{,_traced}` on
+//! the DES side, `serve_fleet_with`/`serve_fleet_traced` on the wall
+//! clock), each threading the same dozen arguments in a slightly
+//! different order.  [`FleetRun`] is the single builder both clocks
+//! share: construct it from a [`FleetSpec`] + [`FleetTuning`], chain
+//! the optional planes, and finish with [`FleetRun::sim`] (virtual
+//! time) or [`FleetRun::serve`] (wall clock):
+//!
+//! ```ignore
+//! let run = FleetRun::new(FleetSpec::demo3(), FleetTuning::default())
+//!     .seconds(240)
+//!     .faults(vec![ZoneFault { at: 60.0, zone: "east".into() }])
+//!     .router(RouterConfig::from_env())
+//!     .telemetry(tel);
+//! let des = run.sim(SimConfig { seed: 5, ..Default::default() })?;
+//! let live = run.serve(&serve_cfg, LoadGenConfig { time_scale: 0.05, seed: 5 })?;
+//! ```
+//!
+//! The builder resolves everything the old entry points made every
+//! caller assemble by hand: member [`PipelineSpec`]s and analytic
+//! profiles, end-to-end SLAs, correlated traces, the replica budget
+//! (inventory cap when the spec carries nodes), reactive per-member
+//! predictors, and — on the live clock — profile-sleeping
+//! [`SyntheticExecutor`]s over time-scaled profiles.  Callers that
+//! need real PJRT executors, custom predictors, or externally built
+//! traces drop one level down to the option-struct cores these same
+//! finishers call: [`run_fleet`] + [`FleetDesParams`] and
+//! [`serve_fleet`] + [`FleetServeParams`].
+//!
+//! `faults` ride the DES clock only (scripted virtual-time zone kills
+//! have no wall-clock analogue yet); every other plane — tuning,
+//! router, telemetry — drives both clocks identically.
+
+use std::sync::Arc;
+
+use crate::coordinator::adapter::AdapterConfig;
+use crate::fleet::router::RouterConfig;
+use crate::fleet::solver::{FleetAdapter, FleetTuning};
+use crate::fleet::spec::FleetSpec;
+use crate::models::accuracy::AccuracyMetric;
+use crate::models::pipelines::PipelineSpec;
+use crate::predictor::{Predictor, ReactivePredictor};
+use crate::profiler::analytic::pipeline_profiles;
+use crate::profiler::profile::PipelineProfiles;
+use crate::serving::engine::{
+    serve_fleet, BatchExecutor, FleetServeParams, FleetServeReport, ServeConfig,
+    SyntheticExecutor,
+};
+use crate::serving::loadgen::LoadGenConfig;
+use crate::simulator::sim::{run_fleet, FleetDesParams, FleetRunMetrics, SimConfig, ZoneFault};
+use crate::telemetry::Telemetry;
+use crate::util::error::{Error, Result};
+use crate::workload::trace::Trace;
+
+/// Builder for one fleet run — see the module docs for the shape.
+/// Cheap to keep around: one instance can finish on both clocks (the
+/// canonical demo runs `.sim(..)` then `.serve(..)`).
+#[derive(Clone)]
+pub struct FleetRun {
+    spec: FleetSpec,
+    tuning: FleetTuning,
+    metric: AccuracyMetric,
+    system: String,
+    interval: f64,
+    apply_delay: f64,
+    /// Trace length override; 0 = the spec's default.
+    seconds: usize,
+    faults: Vec<ZoneFault>,
+    router: Option<RouterConfig>,
+    telemetry: Option<Arc<Telemetry>>,
+}
+
+/// Everything [`FleetRun::sim`] returns: the run metrics plus the
+/// adapter it drove (solve counters, cache stats, node inventory —
+/// state the old entry points left in a caller-owned controller).
+pub struct FleetSimRun {
+    pub metrics: FleetRunMetrics,
+    pub adapter: FleetAdapter,
+}
+
+/// The spec-derived inputs both finishers resolve identically.
+struct Resolved {
+    specs: Vec<PipelineSpec>,
+    profiles: Vec<PipelineProfiles>,
+    slas: Vec<f64>,
+    traces: Vec<Trace>,
+    budget: u32,
+}
+
+impl FleetRun {
+    /// A run over `spec`'s members with `tuning`'s control plane
+    /// (priorities, autoscaler, preemption, nodes, SLA classes, spread;
+    /// `FleetTuning::default()` = the fixed-pool classless plane).
+    /// Defaults: PAS metric, `"fleet-ipa"` system label, 10 s
+    /// adaptation interval with an 8 s apply delay, the spec's trace
+    /// length, no faults, no router, no telemetry.
+    pub fn new(spec: FleetSpec, tuning: FleetTuning) -> FleetRun {
+        FleetRun {
+            spec,
+            tuning,
+            metric: AccuracyMetric::Pas,
+            system: "fleet-ipa".into(),
+            interval: 10.0,
+            apply_delay: 8.0,
+            seconds: 0,
+            faults: Vec::new(),
+            router: None,
+            telemetry: None,
+        }
+    }
+
+    /// Accuracy metric the joint solver maximizes (default PAS).
+    pub fn metric(mut self, metric: AccuracyMetric) -> FleetRun {
+        self.metric = metric;
+        self
+    }
+
+    /// Label stamped on every member's [`crate::metrics::RunMetrics::system`].
+    pub fn system(mut self, system: impl Into<String>) -> FleetRun {
+        self.system = system.into();
+        self
+    }
+
+    /// Adaptation-tick period and decision→activation delay (virtual
+    /// seconds on the DES clock; the live clock takes its cadence from
+    /// [`ServeConfig`] instead).
+    pub fn cadence(mut self, interval: f64, apply_delay: f64) -> FleetRun {
+        self.interval = interval;
+        self.apply_delay = apply_delay;
+        self
+    }
+
+    /// Trace length, seconds (0 = the spec's own default).
+    pub fn seconds(mut self, seconds: usize) -> FleetRun {
+        self.seconds = seconds;
+        self
+    }
+
+    /// Scripted failure-domain outages (DES clock only).
+    pub fn faults(mut self, faults: Vec<ZoneFault>) -> FleetRun {
+        self.faults = faults;
+        self
+    }
+
+    /// Attach the fleet front door (routing + admission) to both
+    /// clocks; see [`crate::fleet::router`].
+    pub fn router(mut self, router: RouterConfig) -> FleetRun {
+        self.router = Some(router);
+        self
+    }
+
+    /// Attach the flight recorder (spans + decision journal) to both
+    /// clocks.
+    pub fn telemetry(mut self, tel: Arc<Telemetry>) -> FleetRun {
+        self.telemetry = Some(tel);
+        self
+    }
+
+    fn resolve(&self) -> Result<Resolved> {
+        // Validation-time advisories (e.g. spread flags over a < 2-zone
+        // pool) land in the attached journal, ahead of any run event.
+        let journal = self.telemetry.as_ref().map(|t| t.journal());
+        self.spec
+            .validate_journaled(journal.as_deref())
+            .map_err(|e| crate::anyhow!("invalid fleet: {e}"))?;
+        let specs = self.spec.specs().map_err(Error::from)?;
+        let profiles: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+        let slas: Vec<f64> = specs.iter().map(PipelineSpec::sla_e2e).collect();
+        let traces = self.spec.traces(self.seconds);
+        let budget = self
+            .spec
+            .nodes
+            .as_ref()
+            .map_or(self.spec.replica_budget, |i| i.replica_cap());
+        Ok(Resolved { specs, profiles, slas, traces, budget })
+    }
+
+    fn predictors(n: usize) -> Vec<Box<dyn Predictor + Send>> {
+        (0..n)
+            .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+            .collect()
+    }
+
+    /// Finish on the DES clock: build the [`FleetAdapter`] (reactive
+    /// predictors, the tuning's control plane) and drive
+    /// [`run_fleet`] over the spec's correlated traces.
+    pub fn sim(&self, sim: SimConfig) -> Result<FleetSimRun> {
+        let r = self.resolve()?;
+        let mut adapter = FleetAdapter::new(
+            r.specs,
+            r.profiles.clone(),
+            self.metric,
+            r.budget,
+            AdapterConfig::default(),
+            Self::predictors(r.slas.len()),
+        )
+        .and_then(|a| a.with_tuning(self.tuning.clone()))
+        .map_err(Error::from)?;
+        let metrics = run_fleet(
+            FleetDesParams {
+                profiles: &r.profiles,
+                slas: &r.slas,
+                interval: self.interval,
+                apply_delay: self.apply_delay,
+                sim,
+                system: &self.system,
+                budget: r.budget,
+                faults: &self.faults,
+                router: self.router.clone(),
+                telemetry: self.telemetry.as_deref(),
+            },
+            &mut adapter,
+            &r.traces,
+        );
+        Ok(FleetSimRun { metrics, adapter })
+    }
+
+    /// Finish on the wall clock: time-scale the analytic profiles by
+    /// `lg.time_scale`, plug profile-sleeping [`SyntheticExecutor`]s
+    /// and reactive predictors into [`serve_fleet`], and replay the
+    /// spec's traces compressed onto real threads.  (Real-artifact
+    /// callers use [`serve_fleet`] directly with a
+    /// [`crate::serving::engine::PoolExecutor`].)
+    pub fn serve(&self, cfg: &ServeConfig, lg: LoadGenConfig) -> Result<FleetServeReport> {
+        let r = self.resolve()?;
+        let scaled: Vec<PipelineProfiles> =
+            r.profiles.iter().map(|p| p.scaled(lg.time_scale)).collect();
+        let executors: Vec<Arc<dyn BatchExecutor>> = scaled
+            .iter()
+            .map(|p| Arc::new(SyntheticExecutor::from_profiles(p, 1.0)) as Arc<dyn BatchExecutor>)
+            .collect();
+        serve_fleet(FleetServeParams {
+            specs: &r.specs,
+            profiles: scaled,
+            metric: self.metric,
+            budget: r.budget,
+            system: &self.system,
+            cfg,
+            lg,
+            traces: &r.traces,
+            executors,
+            predictors: Self::predictors(r.slas.len()),
+            tuning: self.tuning.clone(),
+            router: self.router.clone(),
+            telemetry: self.telemetry.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn short_demo() -> FleetSpec {
+        let mut f = FleetSpec::demo3();
+        f.seconds = 40;
+        f
+    }
+
+    #[test]
+    fn builder_runs_the_demo_fleet_on_the_des_clock() {
+        let run = FleetRun::new(short_demo(), FleetTuning::default()).system("builder");
+        let out = run.sim(SimConfig { seed: 5, ..Default::default() }).unwrap();
+        assert_eq!(out.metrics.members.len(), 3);
+        assert!(out.metrics.total_requests() > 0);
+        assert_eq!(out.metrics.members[0].system, "builder");
+        // no router attached → all-default front-door stats
+        assert!(out.metrics.router.iter().all(|s| s.total_routed() == 0));
+    }
+
+    #[test]
+    fn builder_matches_the_raw_params_path_byte_for_byte() {
+        let spec = short_demo();
+        let built = FleetRun::new(spec.clone(), FleetTuning::default())
+            .sim(SimConfig { seed: 5, ..Default::default() })
+            .unwrap();
+
+        // hand-assemble exactly what the builder resolves
+        let specs = spec.specs().unwrap();
+        let profs: Vec<PipelineProfiles> = specs.iter().map(pipeline_profiles).collect();
+        let slas: Vec<f64> = specs.iter().map(PipelineSpec::sla_e2e).collect();
+        let traces = spec.traces(0);
+        let mut adapter = FleetAdapter::new(
+            specs,
+            profs.clone(),
+            AccuracyMetric::Pas,
+            spec.replica_budget,
+            AdapterConfig::default(),
+            FleetRun::predictors(slas.len()),
+        )
+        .and_then(|a| a.with_tuning(FleetTuning::default()))
+        .unwrap();
+        let raw = run_fleet(
+            FleetDesParams {
+                profiles: &profs,
+                slas: &slas,
+                interval: 10.0,
+                apply_delay: 8.0,
+                sim: SimConfig { seed: 5, ..Default::default() },
+                system: "fleet-ipa",
+                budget: spec.replica_budget,
+                faults: &[],
+                router: None,
+                telemetry: None,
+            },
+            &mut adapter,
+            &traces,
+        );
+        assert_eq!(built.metrics.total_requests(), raw.total_requests());
+        for (b, r) in built.metrics.members.iter().zip(&raw.members) {
+            assert_eq!(b.requests, r.requests, "per-request outcomes must be identical");
+        }
+    }
+
+    #[test]
+    fn routed_builder_run_routes_every_arrival() {
+        let run = FleetRun::new(short_demo(), FleetTuning::default())
+            .router(RouterConfig::default());
+        let out = run.sim(SimConfig { seed: 5, ..Default::default() }).unwrap();
+        for (m, stats) in out.metrics.router.iter().enumerate() {
+            assert_eq!(
+                stats.total_routed() as usize,
+                out.metrics.members[m].requests.len(),
+                "admission off: member {m} routes every arrival"
+            );
+            assert_eq!(stats.shed, 0);
+        }
+    }
+
+    #[test]
+    fn builder_rejects_invalid_specs() {
+        let mut bad = FleetSpec::demo3();
+        bad.replica_budget = 1;
+        let err = FleetRun::new(bad, FleetTuning::default())
+            .sim(SimConfig::default())
+            .err()
+            .expect("under-floor budget must fail");
+        assert!(err.to_string().contains("invalid fleet"));
+    }
+}

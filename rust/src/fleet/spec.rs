@@ -181,8 +181,25 @@ impl FleetSpec {
     /// known pipelines, budget ≥ one replica per stage.  Names are the
     /// aliasing keys of reports/tables and trace labels, so blank or
     /// whitespace-padded names (visually identical rows) are rejected
-    /// alongside exact duplicates.
+    /// alongside exact duplicates.  Delegates to
+    /// [`FleetSpec::validate_journaled`] with no journal — advisory
+    /// findings go to the log only.
     pub fn validate(&self) -> Result<(), String> {
+        self.validate_journaled(None)
+    }
+
+    /// [`FleetSpec::validate`] plus advisory diagnostics surfaced at
+    /// validation time: structural problems still return `Err`, while
+    /// warning-grade findings — a spread-flagged member over a pool
+    /// with fewer than two failure-domain zones, where the ≥-2-zones
+    /// spread constraint cannot possibly be honored and the packer
+    /// silently degrades to single-zone placement — are recorded as
+    /// warning-level `"validate"` events on `journal` (and
+    /// `log_warn!`-ed) instead of failing the run.
+    pub fn validate_journaled(
+        &self,
+        journal: Option<&crate::telemetry::journal::Journal>,
+    ) -> Result<(), String> {
         if self.members.is_empty() {
             return Err("fleet has no members".into());
         }
@@ -224,6 +241,31 @@ impl FleetSpec {
                         "replica budget {} below the one-replica-per-stage floor {floor}",
                         self.replica_budget
                     ));
+                }
+            }
+        }
+        // Advisory: a spread flag is a no-op without ≥ 2 zones to
+        // spread across — surface it now, not mid-run.
+        let zones =
+            self.nodes.as_ref().map(|n| n.distinct_zones()).unwrap_or(1);
+        if zones < 2 {
+            for m in self.members.iter().filter(|m| m.spread) {
+                crate::log_warn!(
+                    "fleet::spec",
+                    "member {}: spread flag set but the pool has {zones} zone(s); \
+                     placement cannot spread",
+                    m.name
+                );
+                if let Some(j) = journal {
+                    j.record(
+                        0.0,
+                        "validate",
+                        Json::obj()
+                            .set("level", "warn")
+                            .set("member", m.name.as_str())
+                            .set("warning", "spread_without_zones")
+                            .set("zones", zones as i64),
+                    );
                 }
             }
         }
@@ -627,6 +669,42 @@ mod tests {
         assert_eq!(f.spreads(), vec![true, false]);
         let back = FleetSpec::parse(&f.to_json().to_string()).unwrap();
         assert_eq!(f, back);
+    }
+
+    #[test]
+    fn spread_without_zones_warns_into_the_journal() {
+        use crate::fleet::nodes::NodeInventory;
+        use crate::telemetry::journal::Journal;
+        // A spread member over a fungible (zoneless) pool: structurally
+        // valid, but the spread constraint can never be honored — one
+        // warning-level validate event per flagged member.
+        let mut f = FleetSpec::demo3();
+        f.members[0].spread = true;
+        let j = Journal::new();
+        f.validate_journaled(Some(&j)).unwrap();
+        let es = j.entries();
+        assert_eq!(es.len(), 1, "one spread member → one warning");
+        assert_eq!(es[0].kind, "validate");
+        assert_eq!(es[0].data.get("level").and_then(Json::as_str), Some("warn"));
+        assert_eq!(es[0].data.get("member").and_then(Json::as_str), Some("video-edge"));
+        assert_eq!(
+            es[0].data.get("warning").and_then(Json::as_str),
+            Some("spread_without_zones")
+        );
+        // Single-zone inventory: still cannot spread → still warns.
+        f.nodes = Some(NodeInventory::parse("8x(8c,32g,0a)@east").unwrap());
+        let j1 = Journal::new();
+        f.validate_journaled(Some(&j1)).unwrap();
+        assert_eq!(j1.len(), 1, "one named zone is still < 2");
+        // Two zones: the flag is honorable → no warning.
+        f.nodes =
+            Some(NodeInventory::parse("4x(8c,32g,0a)@east+4x(8c,32g,0a)@west").unwrap());
+        let j2 = Journal::new();
+        f.validate_journaled(Some(&j2)).unwrap();
+        assert!(j2.is_empty(), "two zones → nothing to warn about");
+        // And the journal-less path stays Ok (warning goes to log only).
+        f.nodes = None;
+        f.validate().unwrap();
     }
 
     #[test]

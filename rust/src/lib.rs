@@ -54,11 +54,15 @@
 //! even-split baseline; lexicographic over priority tiers), and
 //! [`fleet::core::FleetCore`] owns one cluster core per member while
 //! enforcing the budget invariant across rolling reconfigurations.
-//! Both clocks drive whole fleets: [`simulator::sim::run_fleet_des`]
+//! Both clocks drive whole fleets: [`simulator::sim::run_fleet`]
 //! interleaves every member's events in one virtual-time queue, and
-//! [`serving::engine::serve_fleet_with`] runs one wall-clock loop
+//! [`serving::engine::serve_fleet`] runs one wall-clock loop
 //! with per-member adapters — `tests/fleet.rs` pins them to each
 //! other and the allocator to its budget/even-split invariants.
+//! [`fleet::run::FleetRun`] is the one front door over both: a builder
+//! that resolves a [`fleet::spec::FleetSpec`] into specs, profiles,
+//! SLAs, traces and a budget once, then runs it on either clock
+//! (`.sim(SimConfig)` / `.serve(&ServeConfig, LoadGenConfig)`).
 //!
 //! The pool itself is *elastic* (InferLine-style slow/fast split,
 //! `tests/fleet_elastic.rs`): each tick the slow path may resize the
@@ -104,6 +108,29 @@
 //! [`fleet::nodes::NodeInventory::retarget_with`]) instead of always
 //! the cheapest — with the fleet core mirroring the controller's
 //! inventory on every resize.
+//!
+//! ## The fleet front door
+//!
+//! Arrivals enter the fleet through a per-member router + admission
+//! gate ([`fleet::router`], `tests/fleet_router.rs`): each request is
+//! spread across the member's stage-0 replica slots by a pluggable
+//! [`fleet::router::RoutePolicy`] — round-robin, least-loaded,
+//! zone-local-first (origin zones derive deterministically from the
+//! request id against the inventory's zone universe; crossing zones
+//! costs a latency penalty) or sticky-session (warm cache hits run a
+//! discounted service time) — reading replica→node→zone placement
+//! from the *same* [`fleet::nodes::Packing`] the solver produced.
+//! Admission degrades before it drops: past
+//! [`fleet::router::RouterConfig::admit_threshold`] of the SLA the
+//! request is *browned out* (served cheaper), and only past
+//! `shed_threshold` is it refused into the §4.5 drop ledger.  The
+//! router is observational on top of the clocks — `router: None`
+//! reproduces the pre-addressed ingress byte for byte, and routed DES
+//! runs stay byte-identical at any `IPA_SIM_THREADS` because router
+//! state lives in the member's lane and journals only at barriers.
+//! [`metrics::RouterStats`] (per-replica counts, skew, degrade/shed/
+//! cross-zone/warm counters) lands in both clocks' reports and
+//! [`reports::tables::router_table`].
 //!
 //! ## The sharded data plane
 //!
@@ -200,6 +227,17 @@
 //!   against the retained occupancy index
 //!   ([`fleet::nodes::delta_pack_enabled`]; default on).  `0` forces
 //!   full sticky first-fit-decreasing packs.
+//! * `IPA_ROUTE_*` — front-door defaults read by
+//!   [`fleet::router::RouterConfig::from_env`] (CLI flags and
+//!   programmatic configs override them): `IPA_ROUTE_POLICY`
+//!   (`round_robin|least_loaded|zone_local|sticky`),
+//!   `IPA_ROUTE_ADMISSION` (`1` enables degrade-then-shed),
+//!   `IPA_ROUTE_CROSS_ZONE_PENALTY` / `IPA_ROUTE_WARM_SCALE` /
+//!   `IPA_ROUTE_BROWNOUT_SCALE` (service-time adjustments),
+//!   `IPA_ROUTE_ADMIT_THRESHOLD` / `IPA_ROUTE_SHED_THRESHOLD`
+//!   (est-wait per SLA fractions) and `IPA_ROUTE_SESSION_STRIDE`
+//!   (ids per sticky session).  Unset = no router: both clocks run
+//!   the pre-addressed ingress unchanged.
 //! * `IPA_LOG` — diagnostic log level (`error|warn|info|debug|trace`;
 //!   default off).  Levels print to stderr, never to report files.
 //! * `IPA_BENCH_SECONDS` — trace length for `cargo bench` (default
@@ -318,14 +356,23 @@ pub mod fleet {
     //! sequential/flat A/B switches (`IPA_SOLVER_THREADS=1`,
     //! `IPA_CELL_THRESHOLD`, `IPA_DELTA_PACK=0`).
     //!
+    //! Arrivals pass through the per-member front door ([`router`] —
+    //! pluggable routing policies over the packing's replica→node→zone
+    //! placement plus degrade-then-shed admission; see the crate-level
+    //! "fleet front door"), and [`run::FleetRun`] is the one builder
+    //! entry point that resolves a spec and drives it on either clock.
+    //!
     //! The fleet drivers live
-    //! with their clocks: [`crate::simulator::sim::run_fleet_des`]
-    //! (plus [`crate::simulator::sim::run_fleet_des_faults`]) and
-    //! [`crate::serving::engine::serve_fleet_with`].
+    //! with their clocks: [`crate::simulator::sim::run_fleet`] (the
+    //! `FleetDesParams` option struct covers faults, tracing and the
+    //! router) and [`crate::serving::engine::serve_fleet`] (ditto via
+    //! `FleetServeParams`).
     pub mod autoscaler;
     pub mod cells;
     pub mod core;
     pub mod nodes;
+    pub mod router;
+    pub mod run;
     pub mod solver;
     pub mod spec;
 }
@@ -401,8 +448,9 @@ pub mod serving {
     //! thread-per-replica-slot workers behind the shared core, a
     //! pluggable [`engine::BatchExecutor`] (real PJRT artifacts or a
     //! synthetic profile-sleeper), and the adapter reconfiguring it on
-    //! a live clock.  [`engine::serve_fleet_with`] runs the same loop
-    //! over a whole fleet behind one replica budget.
+    //! a live clock.  [`engine::serve_fleet`] runs the same loop over a
+    //! whole fleet behind one replica budget (optionally through the
+    //! [`crate::fleet::router`] front door).
     pub mod engine;
     pub mod loadgen;
 }

@@ -46,6 +46,44 @@ pub struct IntervalRecord {
     pub variants: Vec<String>,
 }
 
+/// Front-door routing counters for one fleet member (cumulative over a
+/// run; produced by [`crate::fleet::router::Router`] on both clocks).
+/// `routed[r]` counts requests addressed to stage-0 replica slot `r` —
+/// [`RouterStats::utilization_skew`] is the per-replica imbalance the
+/// solver (and the report tables) can read.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RouterStats {
+    /// Requests routed per stage-0 replica slot.
+    pub routed: Vec<u64>,
+    /// Admitted but browned out (served the cheaper/degraded response).
+    pub degraded: u64,
+    /// Refused at the door into the §4.5 drop ledger.
+    pub shed: u64,
+    /// Routed outside the arrival's origin zone.
+    pub cross_zone: u64,
+    /// Sticky-session warm hits.
+    pub warm_hits: u64,
+}
+
+impl RouterStats {
+    pub fn total_routed(&self) -> u64 {
+        self.routed.iter().sum()
+    }
+
+    /// Hottest-replica overload relative to the mean: `max/mean − 1`
+    /// (0 = perfectly even; 0 for empty/unrouted runs).
+    pub fn utilization_skew(&self) -> f64 {
+        let n = self.routed.len();
+        let total = self.total_routed();
+        if n == 0 || total == 0 {
+            return 0.0;
+        }
+        let mean = total as f64 / n as f64;
+        let max = self.routed.iter().copied().max().unwrap_or(0) as f64;
+        max / mean - 1.0
+    }
+}
+
 /// Full result of one run (simulated or live).
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
@@ -256,6 +294,17 @@ mod tests {
         assert_eq!(h.min, s.min);
         assert_eq!(h.max, s.max);
         assert!((h.mean - s.mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn router_stats_skew() {
+        let s = RouterStats { routed: vec![10, 10, 10, 10], ..Default::default() };
+        assert_eq!(s.total_routed(), 40);
+        assert!(s.utilization_skew().abs() < 1e-9);
+        let hot = RouterStats { routed: vec![30, 10, 10, 10], ..Default::default() };
+        // mean 15, max 30 → skew 1.0
+        assert!((hot.utilization_skew() - 1.0).abs() < 1e-9);
+        assert_eq!(RouterStats::default().utilization_skew(), 0.0);
     }
 
     #[test]

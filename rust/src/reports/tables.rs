@@ -257,6 +257,58 @@ pub fn fleet_table(
     out
 }
 
+/// Fleet front-door accounting: one row per member with the routed /
+/// degraded / shed split, per-replica utilization skew and the
+/// cross-zone + sticky warm-hit counters, plus a totals row.  `names`
+/// and `stats` are per member in fleet order ([`RouterStats`] from
+/// either clock's report).  Returns a one-line notice when no request
+/// went through a router (pre-addressed ingress runs), so callers can
+/// print unconditionally.  Additive next to [`fleet_table`] — the
+/// pinned fleet-table layout is untouched.
+pub fn router_table(names: &[String], stats: &[crate::metrics::RouterStats]) -> String {
+    let mut out = String::new();
+    if stats.iter().all(|s| s.total_routed() == 0 && s.shed == 0) {
+        out.push_str("fleet front door: disabled (pre-addressed ingress)\n");
+        return out;
+    }
+    out.push_str("Fleet front door: per-member routing + admission outcomes\n");
+    out.push_str(&format!(
+        "{:<16} {:>8} {:>6} {:>7} {:>8} {:>6} {:>9} {:>6}\n",
+        "member", "routed", "repl", "skew%", "degraded", "shed", "crosszone", "warm"
+    ));
+    let mut tot = crate::metrics::RouterStats::default();
+    for (name, s) in names.iter().zip(stats) {
+        out.push_str(&format!(
+            "{:<16} {:>8} {:>6} {:>6.1}% {:>8} {:>6} {:>9} {:>6}\n",
+            name,
+            s.total_routed(),
+            s.routed.len(),
+            s.utilization_skew() * 100.0,
+            s.degraded,
+            s.shed,
+            s.cross_zone,
+            s.warm_hits,
+        ));
+        tot.routed.push(s.total_routed());
+        tot.degraded += s.degraded;
+        tot.shed += s.shed;
+        tot.cross_zone += s.cross_zone;
+        tot.warm_hits += s.warm_hits;
+    }
+    out.push_str(&format!(
+        "{:<16} {:>8} {:>6} {:>7} {:>8} {:>6} {:>9} {:>6}\n",
+        "TOTAL",
+        tot.total_routed(),
+        "-",
+        "-",
+        tot.degraded,
+        tot.shed,
+        tot.cross_zone,
+        tot.warm_hits,
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -400,5 +452,36 @@ mod tests {
         assert!(s.contains("pool zones: east=4 nodes, west=2 nodes"), "{s}");
         // the node lines keep the column-aligned table intact above
         assert!(s.contains("TOTAL"), "{s}");
+    }
+
+    #[test]
+    fn router_table_rows_and_disabled_notice() {
+        use crate::metrics::RouterStats;
+        let names = vec!["video-edge".to_string(), "nlp-batchline".to_string()];
+        // No routing at all → one-line notice, no table.
+        let off = router_table(&names, &[RouterStats::default(), RouterStats::default()]);
+        assert!(off.contains("disabled (pre-addressed ingress)"), "{off}");
+        assert_eq!(off.lines().count(), 1);
+        // Routed run → header + 2 member rows + TOTAL.
+        let a = RouterStats {
+            routed: vec![30, 10, 10, 10],
+            degraded: 5,
+            shed: 2,
+            cross_zone: 7,
+            warm_hits: 11,
+        };
+        let b = RouterStats { routed: vec![20, 20], ..Default::default() };
+        let s = router_table(&names, &[a, b]);
+        assert!(s.contains("video-edge"), "{s}");
+        assert!(s.contains("nlp-batchline"));
+        // member a: 60 routed over 4 replicas, skew 100% (mean 15, max 30)
+        assert!(s.contains("100.0%"), "{s}");
+        assert!(s.contains("TOTAL"), "{s}");
+        // totals: 100 routed, 5 degraded, 2 shed, 7 cross-zone, 11 warm
+        let total_line = s.lines().last().unwrap();
+        for v in ["100", "5", "2", "7", "11"] {
+            assert!(total_line.split_whitespace().any(|c| c == v), "{total_line}");
+        }
+        assert_eq!(s.lines().count(), 2 + 2 + 1);
     }
 }

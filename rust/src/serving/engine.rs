@@ -30,7 +30,7 @@
 //!   executing; lets the full threaded engine run without artifacts and
 //!   anchors the sim/live parity test.
 //!
-//! [`serve_fleet_with`] scales the same loop to a whole fleet: worker
+//! [`serve_fleet`] scales the same loop to a whole fleet: worker
 //! threads per (member, stage) claim batches from one budget-checked
 //! [`FleetCore`], and a single adapter thread runs the joint
 //! cross-pipeline solver each interval — splitting every interval in
@@ -51,8 +51,9 @@ use crate::data_plane::ingress::{self, LaneGrid, DEFAULT_LANE_CAPACITY};
 use crate::data_plane::snapshot::ConfigCell;
 use crate::data_plane::stop::StopGate;
 use crate::fleet::core::{FleetCore, FleetReconfig, MemberInit, PoolReport};
+use crate::fleet::router::{RouteOutcome, Router, RouterConfig};
 use crate::fleet::solver::{FleetAdapter, FleetController, FleetTuning};
-use crate::metrics::RunMetrics;
+use crate::metrics::{RouterStats, RunMetrics};
 use crate::models::accuracy::AccuracyMetric;
 use crate::models::pipelines::PipelineSpec;
 use crate::optimizer::ip::PipelineConfig;
@@ -63,6 +64,7 @@ use crate::runtime::pool::ExecutorPool;
 use crate::serving::loadgen::{self, LoadGenConfig};
 use crate::telemetry::{Hop, Span, Telemetry};
 use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 use crate::workload::trace::Trace;
 
 /// Live-engine settings.
@@ -607,13 +609,16 @@ struct FleetShared {
     fleet: Mutex<FleetCore>,
     cv: Condvar,
     monitors: Vec<Mutex<Monitor>>,
+    /// Per-member front door (one short lock per arrival; `None` runs
+    /// the classic pre-addressed ingress byte-for-byte).
+    routers: Option<Vec<Mutex<Router>>>,
     /// Lock-free per-(member, stage) arrival/forward lanes.
     grid: LaneGrid,
     /// Snapshot of every member's active config (workers read batch
     /// hints without the fleet lock).
     configs: ConfigCell<Vec<PipelineConfig>>,
     /// Span recorder (disabled — zero shards, allocation-free — unless
-    /// the caller came through [`serve_fleet_traced`]).
+    /// the caller attached one via [`FleetServeParams::telemetry`]).
     tel: Arc<Telemetry>,
     stop: StopGate,
     start: Instant,
@@ -642,43 +647,53 @@ pub struct FleetServeReport {
     /// Pool-size extremes, resize/preemption counts and the
     /// replica-seconds bought/used cost ledger.
     pub pool: PoolReport,
+    /// Per-member front-door counters (all-default when the run had no
+    /// router), index-aligned with `members`.
+    pub router: Vec<RouterStats>,
+}
+
+/// Everything one live fleet run needs — the wall-clock twin of
+/// [`crate::simulator::sim::FleetDesParams`], consumed by
+/// [`serve_fleet`].  `executors` and `predictors` are per member (same
+/// order as `specs` / `profiles` / `traces`); `system` labels the
+/// per-member [`RunMetrics`] so sim/live pairs group under one name.
+///
+/// Most callers should go through the [`crate::fleet::run::FleetRun`]
+/// builder, which assembles this struct (and its DES twin) from a
+/// [`crate::fleet::spec::FleetSpec`].
+pub struct FleetServeParams<'a> {
+    pub specs: &'a [PipelineSpec],
+    pub profiles: Vec<PipelineProfiles>,
+    pub metric: AccuracyMetric,
+    pub budget: u32,
+    pub system: &'a str,
+    pub cfg: &'a ServeConfig,
+    pub lg: LoadGenConfig,
+    pub traces: &'a [Trace],
+    pub executors: Vec<Arc<dyn BatchExecutor>>,
+    pub predictors: Vec<Box<dyn Predictor + Send>>,
+    /// Elastic control plane + pool description ([`FleetTuning::nodes`]
+    /// turns the budget into a node inventory replicas bin-pack onto;
+    /// [`FleetTuning::sla_classes`] keys drop policy and timeout caps);
+    /// `FleetTuning::default()` reproduces fixed-pool classless runs.
+    pub tuning: FleetTuning,
+    /// Front-door routing + admission (`None` = classic pre-addressed
+    /// ingress, byte-for-byte).
+    pub router: Option<RouterConfig>,
+    /// Span/journal plane; `None` (== `Telemetry::off()`) runs
+    /// allocation-free and byte-identical to untraced.
+    pub telemetry: Option<Arc<Telemetry>>,
 }
 
 /// Drive the wall-clock engine over a whole fleet: per-member worker
 /// threads claim batches from one budget-checked [`FleetCore`], the
-/// merged load generator replays every member trace on one clock, and
-/// a single adapter thread runs the joint cross-pipeline solver
-/// ([`FleetAdapter`]) each interval — the live twin of
-/// [`crate::simulator::sim::run_fleet_des`].
-///
-/// `executors` and `predictors` are per member (same order as `specs`
-/// / `profiles` / `traces`); `system` labels the per-member
-/// [`RunMetrics`] like [`run_fleet_des`]'s equally-named parameter, so
-/// sim/live pairs group under one name.  `tuning` switches on the
-/// elastic control plane (priority tiers, pool autoscaling,
-/// mid-interval preemption, incremental re-solves) plus the pool
-/// description — [`FleetTuning::nodes`] turns the budget into a
-/// heterogeneous node inventory that replicas bin-pack onto, and
-/// [`FleetTuning::sla_classes`] keys each member's drop policy and
-/// batch-timeout ceiling; `FleetTuning::default()` reproduces the
-/// fixed-pool classless behavior.
-///
-/// [`run_fleet_des`]: crate::simulator::sim::run_fleet_des
-#[allow(clippy::too_many_arguments)]
-pub fn serve_fleet_with(
-    specs: &[PipelineSpec],
-    profiles: Vec<PipelineProfiles>,
-    metric: AccuracyMetric,
-    budget: u32,
-    system: &str,
-    cfg: &ServeConfig,
-    lg: LoadGenConfig,
-    traces: &[Trace],
-    executors: Vec<Arc<dyn BatchExecutor>>,
-    predictors: Vec<Box<dyn Predictor + Send>>,
-    tuning: FleetTuning,
-) -> Result<FleetServeReport> {
-    serve_fleet_traced(
+/// merged load generator replays every member trace on one clock
+/// (through the per-member [`Router`] front door when
+/// [`FleetServeParams::router`] is set), and a single adapter thread
+/// runs the joint cross-pipeline solver ([`FleetAdapter`]) each
+/// interval — the live twin of [`crate::simulator::sim::run_fleet`].
+pub fn serve_fleet(p: FleetServeParams<'_>) -> Result<FleetServeReport> {
+    let FleetServeParams {
         specs,
         profiles,
         metric,
@@ -690,31 +705,10 @@ pub fn serve_fleet_with(
         executors,
         predictors,
         tuning,
-        Arc::new(Telemetry::off()),
-    )
-}
-
-/// [`serve_fleet_with`] with a telemetry plane attached: sampled
-/// per-request spans flow into `tel`'s lock-free per-member rings
-/// (wall-clock timestamps — the DES twin records virtual time), and the
-/// control-plane decision journal captures every solve, resize,
-/// preemption, stage and activation.  `Telemetry::off()` makes this
-/// byte-identical to the untraced entry point.
-#[allow(clippy::too_many_arguments)]
-pub fn serve_fleet_traced(
-    specs: &[PipelineSpec],
-    profiles: Vec<PipelineProfiles>,
-    metric: AccuracyMetric,
-    budget: u32,
-    system: &str,
-    cfg: &ServeConfig,
-    lg: LoadGenConfig,
-    traces: &[Trace],
-    executors: Vec<Arc<dyn BatchExecutor>>,
-    predictors: Vec<Box<dyn Predictor + Send>>,
-    tuning: FleetTuning,
-    tel: Arc<Telemetry>,
-) -> Result<FleetServeReport> {
+        router,
+        telemetry,
+    } = p;
+    let tel = telemetry.unwrap_or_else(|| Arc::new(Telemetry::off()));
     let n = specs.len();
     if profiles.len() != n || traces.len() != n || executors.len() != n || predictors.len() != n {
         return Err(crate::anyhow!(
@@ -804,10 +798,30 @@ pub fn serve_fleet_traced(
         }
     }
 
+    // Front door: one router per member (class-scaled SLA, shared zone
+    // universe), synced to the initial placement before the clock runs.
+    let routers: Option<Vec<Mutex<Router>>> = router.as_ref().map(|rc| {
+        let zone_names: Vec<String> = fleet
+            .inventory()
+            .map(|i| i.nodes_by_zone().into_iter().map(|(z, _)| z).collect())
+            .unwrap_or_default();
+        (0..n)
+            .map(|m| {
+                let scale = classes.as_ref().map_or(1.0, |c| c[m].drop_sla_scale());
+                Mutex::new(Router::new(rc.clone(), slas[m] * scale, zone_names.clone()))
+            })
+            .collect()
+    });
+    if let Some(rs) = &routers {
+        let init_cfgs: Vec<PipelineConfig> = inits.iter().map(|d| d.config.clone()).collect();
+        sync_live_routers(rs, &fleet, &init_cfgs, 0.0);
+    }
+
     let shared = Arc::new(FleetShared {
         fleet: Mutex::new(fleet),
         cv: Condvar::new(),
         monitors: (0..n).map(|_| Mutex::new(Monitor::new(600))).collect(),
+        routers,
         grid: LaneGrid::new(&n_stages, DEFAULT_LANE_CAPACITY),
         configs: ConfigCell::new(inits.iter().map(|d| d.config.clone()).collect()),
         tel: Arc::clone(&tel),
@@ -1023,6 +1037,19 @@ pub fn serve_fleet_traced(
                     }
                     sh.cv.notify_all();
                 }
+                // Front door: sync the routable topology to whatever
+                // this interval applied (replica counts, packing zones,
+                // active service estimate) and flush the per-member
+                // route/degrade/admit journal counters on the wall
+                // clock — the live mirror of the DES Adapt arm.
+                if let Some(rs) = &sh.routers {
+                    let tnow = sh.now();
+                    {
+                        let fleet = sh.fleet.lock().unwrap();
+                        sync_live_routers(rs, &fleet, &active, tnow);
+                    }
+                    journal_live_route_ticks(&sh.tel, tnow, rs);
+                }
             }
         })
     };
@@ -1042,7 +1069,28 @@ pub fn serve_fleet_traced(
                 value: 0.0,
             });
         }
-        if legacy_lock {
+        // Front door first: a Shed verdict books the §4.5 drop without
+        // ever enqueueing; Route/Degrade fall through to normal ingress
+        // (the router's on_batch prices them later).
+        let shed = shared
+            .routers
+            .as_ref()
+            .map(|rs| matches!(rs[m].lock().unwrap().route(id, t), RouteOutcome::Shed))
+            .unwrap_or(false);
+        if shed {
+            ingress::shed(shared.fleet.lock().unwrap().member_mut(m), id, t);
+            if shared.tel.enabled() && shared.tel.sampled(id) {
+                shared.tel.record(Span {
+                    trace: id,
+                    member: m as u32,
+                    stage: 0,
+                    hop: Hop::Drop,
+                    t,
+                    dur: 0.0,
+                    value: 0.0,
+                });
+            }
+        } else if legacy_lock {
             shared.fleet.lock().unwrap().member_mut(m).ingest(id, t);
         } else if !shared.grid.ingest(m, id, t) {
             ingress::shed(shared.fleet.lock().unwrap().member_mut(m), id, t);
@@ -1097,7 +1145,161 @@ pub fn serve_fleet_traced(
         .zip(&slas)
         .map(|((metrics, profiles), &sla)| ServeReport { metrics, profiles, sla })
         .collect();
-    Ok(FleetServeReport { members, budget: pool.budget, peak_in_use, final_replicas, pool })
+    let router_stats: Vec<RouterStats> = shared
+        .routers
+        .as_ref()
+        .map(|rs| rs.iter().map(|r| r.lock().unwrap().stats().clone()).collect())
+        .unwrap_or_else(|| vec![RouterStats::default(); n]);
+    Ok(FleetServeReport {
+        members,
+        budget: pool.budget,
+        peak_in_use,
+        final_replicas,
+        pool,
+        router: router_stats,
+    })
+}
+
+/// Compatibility shim for the pre-builder 11-argument entry point.
+#[deprecated(note = "use `serve_fleet` with `FleetServeParams`, or the \
+                     `fleet::run::FleetRun` builder")]
+#[allow(clippy::too_many_arguments)]
+pub fn serve_fleet_with(
+    specs: &[PipelineSpec],
+    profiles: Vec<PipelineProfiles>,
+    metric: AccuracyMetric,
+    budget: u32,
+    system: &str,
+    cfg: &ServeConfig,
+    lg: LoadGenConfig,
+    traces: &[Trace],
+    executors: Vec<Arc<dyn BatchExecutor>>,
+    predictors: Vec<Box<dyn Predictor + Send>>,
+    tuning: FleetTuning,
+) -> Result<FleetServeReport> {
+    serve_fleet(FleetServeParams {
+        specs,
+        profiles,
+        metric,
+        budget,
+        system,
+        cfg,
+        lg,
+        traces,
+        executors,
+        predictors,
+        tuning,
+        router: None,
+        telemetry: None,
+    })
+}
+
+/// Compatibility shim: [`serve_fleet`] with the telemetry plane as a
+/// trailing argument.
+#[deprecated(note = "use `serve_fleet` with `FleetServeParams`, or the \
+                     `fleet::run::FleetRun` builder")]
+#[allow(clippy::too_many_arguments)]
+pub fn serve_fleet_traced(
+    specs: &[PipelineSpec],
+    profiles: Vec<PipelineProfiles>,
+    metric: AccuracyMetric,
+    budget: u32,
+    system: &str,
+    cfg: &ServeConfig,
+    lg: LoadGenConfig,
+    traces: &[Trace],
+    executors: Vec<Arc<dyn BatchExecutor>>,
+    predictors: Vec<Box<dyn Predictor + Send>>,
+    tuning: FleetTuning,
+    tel: Arc<Telemetry>,
+) -> Result<FleetServeReport> {
+    serve_fleet(FleetServeParams {
+        specs,
+        profiles,
+        metric,
+        budget,
+        system,
+        cfg,
+        lg,
+        traces,
+        executors,
+        predictors,
+        tuning,
+        router: None,
+        telemetry: Some(tel),
+    })
+}
+
+/// Sync every member router's routable topology from the live fleet:
+/// stage-0 replica count, per-replica zone labels from the last
+/// packing, and the active config's per-request service estimate
+/// (`l(b)/b`) — then reclaim tags past the drop horizon.  The live
+/// mirror of the DES `resync_router`.
+fn sync_live_routers(
+    routers: &[Mutex<Router>],
+    fleet: &FleetCore,
+    active: &[PipelineConfig],
+    now: f64,
+) {
+    for (m, slot) in routers.iter().enumerate() {
+        let core = fleet.member(m);
+        let replicas = core.stages[0].replicas.max(1) as usize;
+        let zones: Vec<String> = match (fleet.last_packing(), fleet.inventory()) {
+            (Some(p), Some(inv)) => p
+                .placements
+                .iter()
+                .filter(|pl| pl.member == m && pl.stage == 0)
+                .map(|pl| inv.pools[p.shape_of[pl.node]].shape.zone.clone())
+                .collect(),
+            _ => Vec::new(),
+        };
+        let sc = &active[m].stages[0];
+        let spi = sc.latency / sc.batch.max(1) as f64;
+        let mut router = slot.lock().unwrap();
+        router.set_topology(replicas, zones, spi);
+        router.expire(now);
+    }
+}
+
+/// Flush each member router's since-last-tick counters into the
+/// journal (`route`/`degrade`/`admit` events on the wall clock) — the
+/// live mirror of the DES `journal_route_ticks`.
+fn journal_live_route_ticks(tel: &Telemetry, now: f64, routers: &[Mutex<Router>]) {
+    for (m, slot) in routers.iter().enumerate() {
+        let mut router = slot.lock().unwrap();
+        let tick = router.take_tick();
+        if tick.routed == 0 && tick.shed == 0 {
+            continue;
+        }
+        tel.journal().record(
+            now,
+            "route",
+            Json::obj()
+                .set("member", m as i64)
+                .set("routed", tick.routed as i64)
+                .set("cross_zone", tick.cross_zone as i64)
+                .set("warm", tick.warm_hits as i64)
+                .set("skew", router.stats().utilization_skew()),
+        );
+        if tick.degraded > 0 {
+            tel.journal().record(
+                now,
+                "degrade",
+                Json::obj()
+                    .set("member", m as i64)
+                    .set("count", tick.degraded as i64),
+            );
+        }
+        if tick.shed > 0 {
+            tel.journal().record(
+                now,
+                "admit",
+                Json::obj()
+                    .set("member", m as i64)
+                    .set("shed", tick.shed as i64),
+            );
+        }
+    }
 }
 
 /// One fleet replica-slot worker, legacy single-lock path: claim a
@@ -1135,6 +1337,14 @@ fn fleet_worker_loop(
                 }
             }
         };
+        // Front-door bookkeeping: a formed stage-0 batch frees its
+        // requests' in-flight slots (the wall clock ignores the
+        // returned latency adjustment — the executor really sleeps).
+        if stage == 0 {
+            if let Some(rs) = &sh.routers {
+                let _ = rs[member].lock().unwrap().on_batch(&fb.requests);
+            }
+        }
         match exec.execute(&fb.variant_key, fb.batch.max(1)) {
             Ok(()) => {
                 let done = sh.now();
@@ -1209,6 +1419,13 @@ fn fleet_worker_loop_sharded(
             }
         };
         let formed_at = sh.now();
+        // Front-door bookkeeping (see fleet_worker_loop): stage-0
+        // batches release their routed in-flight slots.
+        if stage == 0 {
+            if let Some(rs) = &sh.routers {
+                let _ = rs[member].lock().unwrap().on_batch(&fb.requests);
+            }
+        }
         if sh.tel.enabled() {
             for r in &fb.requests {
                 if sh.tel.sampled(r.id) {

@@ -19,7 +19,7 @@
 //! `simulator::replay` scripts a recorded [`Decision`] log through the
 //! identical loop.
 //!
-//! [`run_fleet_des`] is the same loop fanned out over a whole fleet:
+//! [`run_fleet`] is the same loop fanned out over a whole fleet:
 //! every member pipeline's events interleave on one deterministic
 //! virtual clock — SHARDED by default into per-member event wheels
 //! merged by a `next_due` tournament
@@ -69,8 +69,9 @@ use crate::coordinator::adapter::{Adapter, Decision};
 use crate::coordinator::monitoring::Monitor;
 use crate::data_plane::wheel::{EventWheel, ShardedClock, EPOCH_SEQ_STRIDE};
 use crate::fleet::core::{FleetCore, FleetReconfig, MemberInit, PoolReport};
+use crate::fleet::router::{RouteOutcome, Router, RouterConfig};
 use crate::fleet::solver::FleetController;
-use crate::metrics::RunMetrics;
+use crate::metrics::{RouterStats, RunMetrics};
 use crate::optimizer::ip::PipelineConfig;
 use crate::profiler::profile::PipelineProfiles;
 use crate::runtime::pool::scoped_map_mut;
@@ -185,6 +186,15 @@ pub struct DecisionLog {
     pub decisions: Vec<Decision>,
 }
 
+/// Options for one [`Simulation`] run.  `run`/`run_logged`/`run_traced`
+/// are thin views over [`Simulation::run_with`] — this struct is where
+/// new knobs land without growing another entry-point name.
+#[derive(Default)]
+pub struct RunOptions<'a> {
+    /// Flight recorder; `None` runs untraced (identical schedule).
+    pub telemetry: Option<&'a Telemetry>,
+}
+
 /// The adapter-driven simulator.
 pub struct Simulation {
     pub adapter: Adapter,
@@ -198,19 +208,24 @@ impl Simulation {
 
     /// Run the full trace; returns the collected metrics.
     pub fn run(&mut self, trace: &Trace) -> RunMetrics {
-        self.run_logged(trace).0
+        self.run_with(trace, RunOptions::default()).0
     }
 
     /// Run the full trace, also capturing the decision schedule for
     /// deterministic replay.
     pub fn run_logged(&mut self, trace: &Trace) -> (RunMetrics, DecisionLog) {
-        self.run_traced(trace, &Telemetry::off())
+        self.run_with(trace, RunOptions::default())
     }
 
     /// [`Simulation::run_logged`] with the flight recorder attached:
     /// sampled requests emit spans and every decision lands in the
     /// journal as a replayable `decision` entry.
     pub fn run_traced(&mut self, trace: &Trace, tel: &Telemetry) -> (RunMetrics, DecisionLog) {
+        self.run_with(trace, RunOptions { telemetry: Some(tel) })
+    }
+
+    /// The single run entry point the named variants delegate to.
+    pub fn run_with(&mut self, trace: &Trace, opts: RunOptions<'_>) -> (RunMetrics, DecisionLog) {
         let profiles = self.adapter.profiles.clone();
         let sla = self.adapter.spec.sla_e2e();
         let interval = self.adapter.config.interval;
@@ -218,8 +233,18 @@ impl Simulation {
         let system = self.adapter.policy.name().to_string();
         let sim = self.sim;
         let mut ctl = AdapterController { adapter: &mut self.adapter, log: Vec::new() };
-        let metrics = run_des_traced(
-            &profiles, sla, interval, apply_delay, sim, &mut ctl, trace, &system, tel,
+        let metrics = run_des_with(
+            DesParams {
+                profiles: &profiles,
+                sla,
+                interval,
+                apply_delay,
+                sim,
+                system: &system,
+                telemetry: opts.telemetry,
+            },
+            &mut ctl,
+            trace,
         );
         (metrics, DecisionLog { decisions: ctl.log })
     }
@@ -246,6 +271,20 @@ impl DesController for AdapterController<'_> {
     }
 }
 
+/// Options for one single-pipeline DES run — the one entry point
+/// ([`run_des_with`]) behind the historical [`run_des`]/
+/// [`run_des_traced`] names.
+pub struct DesParams<'a> {
+    pub profiles: &'a PipelineProfiles,
+    pub sla: f64,
+    pub interval: f64,
+    pub apply_delay: f64,
+    pub sim: SimConfig,
+    pub system: &'a str,
+    /// Flight recorder; `None` runs untraced (identical schedule).
+    pub telemetry: Option<&'a Telemetry>,
+}
+
 /// The discrete-event loop over the shared cluster core.
 ///
 /// Deterministic given (`trace`, `sim.seed`, controller decisions):
@@ -262,16 +301,10 @@ pub fn run_des(
     trace: &Trace,
     system: &str,
 ) -> RunMetrics {
-    run_des_traced(
-        profiles,
-        sla,
-        interval,
-        apply_delay,
-        sim,
+    run_des_with(
+        DesParams { profiles, sla, interval, apply_delay, sim, system, telemetry: None },
         ctl,
         trace,
-        system,
-        &Telemetry::off(),
     )
 }
 
@@ -306,6 +339,22 @@ pub fn run_des_traced(
     system: &str,
     tel: &Telemetry,
 ) -> RunMetrics {
+    run_des_with(
+        DesParams { profiles, sla, interval, apply_delay, sim, system, telemetry: Some(tel) },
+        ctl,
+        trace,
+    )
+}
+
+/// The single-pipeline DES entry point the named variants delegate to.
+pub fn run_des_with(
+    p: DesParams<'_>,
+    ctl: &mut dyn DesController,
+    trace: &Trace,
+) -> RunMetrics {
+    let DesParams { profiles, sla, interval, apply_delay, sim, system, telemetry } = p;
+    let off = Telemetry::off();
+    let tel = telemetry.unwrap_or(&off);
     let horizon = trace.seconds() as f64;
     let mut rng = SplitMix64::new(sim.seed ^ 0x51A7_E);
     let mut events = EventQueue::new();
@@ -357,6 +406,7 @@ pub fn run_des_traced(
                     sim.service_noise,
                     tel,
                     0,
+                    None,
                     &mut |s| tel.record(s),
                     &mut |t, e| events.push(t, e),
                 );
@@ -371,6 +421,7 @@ pub fn run_des_traced(
                     sim.service_noise,
                     tel,
                     0,
+                    None,
                     &mut |s| tel.record(s),
                     &mut |t, e| events.push(t, e),
                 );
@@ -415,6 +466,7 @@ pub fn run_des_traced(
                         sim.service_noise,
                         tel,
                         0,
+                        None,
                         &mut |s| tel.record(s),
                         &mut |t, e| events.push(t, e),
                     );
@@ -444,6 +496,7 @@ pub fn run_des_traced(
                     sim.service_noise,
                     tel,
                     0,
+                    None,
                     &mut |s| tel.record(s),
                     &mut |t, e| events.push(t, e),
                 );
@@ -475,6 +528,7 @@ pub fn run_des_traced(
                             sim.service_noise,
                             tel,
                             0,
+                            None,
                             &mut |s| tel.record(s),
                             &mut |t, e| events.push(t, e),
                         );
@@ -519,6 +573,7 @@ fn drive(
     noise: f64,
     tel: &Telemetry,
     member: u32,
+    mut router: Option<&mut Router>,
     sink: &mut dyn FnMut(Span),
     push: &mut dyn FnMut(f64, Event),
 ) {
@@ -539,6 +594,15 @@ fn drive(
                 if noise > 0.0 {
                     let f = 1.0 + noise * rng.next_normal();
                     service *= f.clamp(0.5, 2.0);
+                }
+                // Front-door pricing: a stage-0 batch consumes its
+                // requests' route tags — warm hits and brownouts
+                // discount exec, a cross-zone hop pays its penalty.
+                if stage == 0 {
+                    if let Some(r) = router.as_deref_mut() {
+                        let adj = r.on_batch(&fb.requests);
+                        service = service * adj.scale + adj.extra;
+                    }
                 }
                 if tel.enabled() {
                     let formed = fb.requests.len() as f64;
@@ -605,7 +669,7 @@ enum FleetEv {
 }
 
 /// A scripted failure-domain outage for
-/// [`run_fleet_des_faults`]: at `at` seconds of virtual time every
+/// [`FleetDesParams::faults`]: at `at` seconds of virtual time every
 /// node in `zone` drains from the pool and the controller re-plans the
 /// whole fleet on the survivors (applied immediately — an outage does
 /// not wait for the apply delay).
@@ -641,6 +705,10 @@ pub struct FleetRunMetrics {
     /// zone-spread constraint keeps ≥ 1 for flagged members).  Empty
     /// when no faults were scripted or the pool carries no placement.
     pub zone_fault_min_survivors: Vec<Vec<u32>>,
+    /// Per-member front-door counters (routed-per-replica, degraded,
+    /// shed, cross-zone, warm hits).  All-default entries when the run
+    /// had no router ([`FleetDesParams::router`] = `None`).
+    pub router: Vec<RouterStats>,
 }
 
 impl FleetRunMetrics {
@@ -688,6 +756,7 @@ impl FleetRunMetrics {
 /// move whole nodes) and [`FleetController::sla_classes`] keys each
 /// member's drop policy and batch-timeout ceiling.  Plain controllers
 /// leave both off and run the classic fungible/classless loop.
+#[deprecated(note = "use `run_fleet` with `FleetDesParams`, or the `fleet::run::FleetRun` builder")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_fleet_des(
     profiles: &[PipelineProfiles],
@@ -700,8 +769,21 @@ pub fn run_fleet_des(
     system: &str,
     budget: u32,
 ) -> FleetRunMetrics {
-    run_fleet_des_faults(
-        profiles, slas, interval, apply_delay, sim, ctl, traces, system, budget, &[],
+    run_fleet(
+        FleetDesParams {
+            profiles,
+            slas,
+            interval,
+            apply_delay,
+            sim,
+            system,
+            budget,
+            faults: &[],
+            router: None,
+            telemetry: None,
+        },
+        ctl,
+        traces,
     )
 }
 
@@ -713,6 +795,7 @@ pub fn run_fleet_des(
 /// on the survivor inventory ([`FleetController::fault`]) applied
 /// immediately — no apply delay, the zone is already gone.  Controllers
 /// that cannot re-plan (no node inventory) leave the pool untouched.
+#[deprecated(note = "use `run_fleet` with `FleetDesParams`, or the `fleet::run::FleetRun` builder")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_fleet_des_faults(
     profiles: &[PipelineProfiles],
@@ -726,22 +809,26 @@ pub fn run_fleet_des_faults(
     budget: u32,
     faults: &[ZoneFault],
 ) -> FleetRunMetrics {
-    run_fleet_des_faults_traced(
-        profiles,
-        slas,
-        interval,
-        apply_delay,
-        sim,
+    run_fleet(
+        FleetDesParams {
+            profiles,
+            slas,
+            interval,
+            apply_delay,
+            sim,
+            system,
+            budget,
+            faults,
+            router: None,
+            telemetry: None,
+        },
         ctl,
         traces,
-        system,
-        budget,
-        faults,
-        &Telemetry::off(),
     )
 }
 
 /// [`run_fleet_des`] with the flight recorder attached (no faults).
+#[deprecated(note = "use `run_fleet` with `FleetDesParams`, or the `fleet::run::FleetRun` builder")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_fleet_des_traced(
     profiles: &[PipelineProfiles],
@@ -755,17 +842,26 @@ pub fn run_fleet_des_traced(
     budget: u32,
     tel: &Telemetry,
 ) -> FleetRunMetrics {
-    run_fleet_des_faults_traced(
-        profiles, slas, interval, apply_delay, sim, ctl, traces, system, budget, &[], tel,
+    run_fleet(
+        FleetDesParams {
+            profiles,
+            slas,
+            interval,
+            apply_delay,
+            sim,
+            system,
+            budget,
+            faults: &[],
+            router: None,
+            telemetry: Some(tel),
+        },
+        ctl,
+        traces,
     )
 }
 
-/// [`run_fleet_des_faults`] with the flight recorder attached: sampled
-/// requests emit member-tagged spans, and the controller, fleet core
-/// and staged reconfig all write the shared decision journal.  Tracing
-/// is purely observational — the event schedule, RNG draws and metrics
-/// are byte-for-byte identical with telemetry on or off, and two traced
-/// runs produce byte-identical journals.
+/// [`run_fleet_des_faults`] with the flight recorder attached.
+#[deprecated(note = "use `run_fleet` with `FleetDesParams`, or the `fleet::run::FleetRun` builder")]
 #[allow(clippy::too_many_arguments)]
 pub fn run_fleet_des_faults_traced(
     profiles: &[PipelineProfiles],
@@ -780,6 +876,79 @@ pub fn run_fleet_des_faults_traced(
     faults: &[ZoneFault],
     tel: &Telemetry,
 ) -> FleetRunMetrics {
+    run_fleet(
+        FleetDesParams {
+            profiles,
+            slas,
+            interval,
+            apply_delay,
+            sim,
+            system,
+            budget,
+            faults,
+            router: None,
+            telemetry: Some(tel),
+        },
+        ctl,
+        traces,
+    )
+}
+
+/// Options for one fleet DES run — the single entry point
+/// ([`run_fleet`]) behind the four historical `run_fleet_des*` names
+/// and the [`crate::fleet::run::FleetRun`] builder.
+pub struct FleetDesParams<'a> {
+    pub profiles: &'a [PipelineProfiles],
+    pub slas: &'a [f64],
+    /// Adaptation-tick period, virtual seconds.
+    pub interval: f64,
+    /// Decision → activation delay, virtual seconds.
+    pub apply_delay: f64,
+    pub sim: SimConfig,
+    /// Label stamped on the per-member [`RunMetrics::system`].
+    pub system: &'a str,
+    /// Replica budget (a controller inventory overrides it with its
+    /// replica cap).
+    pub budget: u32,
+    /// Scripted failure-domain outages, in any order.
+    pub faults: &'a [ZoneFault],
+    /// Attach the fleet front door: every arrival routes across its
+    /// member's stage-0 replicas (and through admission control) before
+    /// ingesting.  `None` keeps the classic pre-addressed path,
+    /// byte-identical to previous releases.
+    pub router: Option<RouterConfig>,
+    /// Flight recorder; `None` runs untraced (identical schedule).
+    pub telemetry: Option<&'a Telemetry>,
+}
+
+/// The fleet DES entry point every named variant delegates to: the
+/// sampled requests emit member-tagged spans, and the controller, fleet
+/// core and staged reconfig all write the shared decision journal.
+/// Tracing is purely observational — the event schedule, RNG draws and
+/// metrics are byte-for-byte identical with telemetry on or off, and
+/// two traced runs produce byte-identical journals.  With a router
+/// attached, routing state lives in each member's lane and all journal
+/// aggregation happens at sequential barrier arms, so routed runs are
+/// byte-identical at any `IPA_SIM_THREADS` count too.
+pub fn run_fleet(
+    p: FleetDesParams<'_>,
+    ctl: &mut dyn FleetController,
+    traces: &[Trace],
+) -> FleetRunMetrics {
+    let FleetDesParams {
+        profiles,
+        slas,
+        interval,
+        apply_delay,
+        sim,
+        system,
+        budget,
+        faults,
+        router,
+        telemetry,
+    } = p;
+    let off = Telemetry::off();
+    let tel = telemetry.unwrap_or(&off);
     ctl.set_journal(tel.journal());
     let n = traces.len();
     assert_eq!(profiles.len(), n, "one profile set per member");
@@ -857,6 +1026,23 @@ pub fn run_fleet_des_faults_traced(
     let mut ctl_budget = budget;
     let mut fault_survivors: Vec<Vec<u32>> = Vec::new();
 
+    // The fleet front door: one router per member lane, so routing
+    // state is epoch-worker-private like the RNG stream.  SLAs feed
+    // admission pre-scaled by the member's class (the same scaling the
+    // drop policy uses); the origin-zone universe is fixed at start —
+    // clients in a zone keep sending after it dies.
+    if let Some(rc) = &router {
+        let zone_names: Vec<String> = fleet
+            .inventory()
+            .map(|i| i.nodes_by_zone().into_iter().map(|(z, _)| z).collect())
+            .unwrap_or_default();
+        for (m, lane) in lanes.iter_mut().enumerate() {
+            let scale = classes.as_ref().map_or(1.0, |c| c[m].drop_sla_scale());
+            lane.router = Some(Router::new(rc.clone(), slas[m] * scale, zone_names.clone()));
+        }
+        resync_router(&fleet, &mut lanes, &active, 0.0);
+    }
+
     events.push_global(interval, FleetEv::Adapt);
     // Plain fixed-pool controllers never preempt — don't even schedule
     // the mid-interval checks (and their per-member monitor scans).
@@ -919,6 +1105,7 @@ pub fn run_fleet_des_faults_traced(
                         tel,
                     );
                     resync_contrib(&fleet, &mut lanes, &mut cur);
+                    resync_router(&fleet, &mut lanes, &active, now);
                     if done {
                         break;
                     }
@@ -974,6 +1161,7 @@ pub fn run_fleet_des_faults_traced(
                 tel,
             );
             resync_contrib(&fleet, &mut lanes, &mut cur);
+            resync_router(&fleet, &mut lanes, &active, now);
             if done {
                 break;
             }
@@ -986,6 +1174,10 @@ pub fn run_fleet_des_faults_traced(
     let peak_in_use = fleet.peak_in_use();
     let final_replicas: Vec<u32> =
         (0..n).map(|m| fleet.member(m).configured_replicas()).collect();
+    let router_stats: Vec<RouterStats> = lanes
+        .iter()
+        .map(|l| l.router.as_ref().map(|r| r.stats().clone()).unwrap_or_default())
+        .collect();
     let members = fleet
         .into_accountings()
         .into_iter()
@@ -1005,6 +1197,7 @@ pub fn run_fleet_des_faults_traced(
         final_replicas,
         pool,
         zone_fault_min_survivors: fault_survivors,
+        router: router_stats,
     }
 }
 
@@ -1029,6 +1222,11 @@ struct MemberLane {
     contrib: Vec<(f64, u32)>,
     /// The contribution as of the last log entry (or barrier resync).
     last_contrib: u32,
+    /// The member's front door, when [`FleetDesParams::router`] is set:
+    /// lane-owned so routing decisions are worker-private in-epoch and
+    /// only read (journal ticks, topology resync) at sequential
+    /// barriers.
+    router: Option<Router>,
 }
 
 impl MemberLane {
@@ -1039,6 +1237,7 @@ impl MemberLane {
             spans: Vec::new(),
             contrib: Vec::new(),
             last_contrib: 0,
+            router: None,
         }
     }
 }
@@ -1066,7 +1265,7 @@ fn drive_lane(
     tel: &Telemetry,
     push: &mut dyn FnMut(f64, Event),
 ) {
-    let MemberLane { rng, spans, .. } = lane;
+    let MemberLane { rng, spans, router, .. } = lane;
     drive(
         core,
         profiles,
@@ -1076,6 +1275,7 @@ fn drive_lane(
         sim.service_noise,
         tel,
         member as u32,
+        router.as_mut(),
         &mut |s| spans.push(s),
         push,
     );
@@ -1114,8 +1314,32 @@ fn execute_member_event(
                     value: 0.0,
                 });
             }
-            core.ingest(id, now);
-            drive_lane(core, lane, profiles, 0, now, member, sim, tel, push);
+            // The front door decides before the queue sees the request:
+            // a shed books straight into the §4.5 drop ledger (arrival
+            // + drop, never enqueued — `ingress::shed` semantics);
+            // routed/degraded requests ingest normally with their tag
+            // held for stage-0 batch pricing.
+            if matches!(
+                lane.router.as_mut().map(|r| r.route(id, now)),
+                Some(RouteOutcome::Shed)
+            ) {
+                core.accounting.record_arrival(id, now);
+                core.accounting.record_drop(id);
+                if tel.enabled() && tel.sampled(id) {
+                    lane.spans.push(Span {
+                        trace: id,
+                        member: member as u32,
+                        stage: 0,
+                        hop: Hop::Drop,
+                        t: now,
+                        dur: 0.0,
+                        value: 0.0,
+                    });
+                }
+            } else {
+                core.ingest(id, now);
+                drive_lane(core, lane, profiles, 0, now, member, sim, tel, push);
+            }
         }
         Event::QueueCheck { stage } => {
             drive_lane(core, lane, profiles, stage, now, member, sim, tel, push);
@@ -1240,6 +1464,73 @@ fn resync_contrib(fleet: &FleetCore, lanes: &mut [MemberLane], cur: &mut [u32]) 
         let c = member_contrib(fleet.member(m));
         lane.last_contrib = c;
         cur[m] = c;
+    }
+}
+
+/// Re-sync every member's router to the post-global-event topology:
+/// stage-0 replica count from the live core, per-replica zone labels
+/// from the current packing (replica → node → zone), and the active
+/// configuration's per-request service estimate (`l(b)/b`) feeding the
+/// admission wait prediction.  Also reclaims tags of requests that were
+/// dropped inside batch formation (invisible to the router).  Runs only
+/// at sequential barrier arms — a no-op scan when routing is off.
+fn resync_router(fleet: &FleetCore, lanes: &mut [MemberLane], active: &[PipelineConfig], now: f64) {
+    for (m, lane) in lanes.iter_mut().enumerate() {
+        let Some(router) = lane.router.as_mut() else { continue };
+        let core = fleet.member(m);
+        let replicas = core.stages[0].replicas.max(1) as usize;
+        let zones: Vec<String> = match (fleet.last_packing(), fleet.inventory()) {
+            (Some(p), Some(inv)) => p
+                .placements
+                .iter()
+                .filter(|pl| pl.member == m && pl.stage == 0)
+                .map(|pl| inv.pools[p.shape_of[pl.node]].shape.zone.clone())
+                .collect(),
+            _ => Vec::new(),
+        };
+        let sc = &active[m].stages[0];
+        let spi = sc.latency / sc.batch.max(1) as f64;
+        router.set_topology(replicas, zones, spi);
+        router.expire(now);
+    }
+}
+
+/// Journal each member's front-door counters accumulated since the
+/// last adaptation tick: a `route` summary (with the cumulative
+/// utilization skew), plus `degrade`/`admit` events when those stages
+/// fired.  Runs only on the driver thread at the sequential Adapt arm,
+/// so routed journals stay byte-identical at any worker count.
+fn journal_route_ticks(tel: &Telemetry, now: f64, lanes: &mut [MemberLane]) {
+    for (m, lane) in lanes.iter_mut().enumerate() {
+        let Some(router) = lane.router.as_mut() else { continue };
+        let tick = router.take_tick();
+        if tick.routed == 0 && tick.shed == 0 {
+            continue;
+        }
+        tel.journal().record(
+            now,
+            "route",
+            Json::obj()
+                .set("member", m as i64)
+                .set("routed", tick.routed as i64)
+                .set("cross_zone", tick.cross_zone as i64)
+                .set("warm", tick.warm_hits as i64)
+                .set("skew", router.stats().utilization_skew()),
+        );
+        if tick.degraded > 0 {
+            tel.journal().record(
+                now,
+                "degrade",
+                Json::obj().set("member", m as i64).set("count", tick.degraded as i64),
+            );
+        }
+        if tick.shed > 0 {
+            tel.journal().record(
+                now,
+                "admit",
+                Json::obj().set("member", m as i64).set("shed", tick.shed as i64),
+            );
+        }
     }
 }
 
@@ -1369,6 +1660,7 @@ fn execute_global(
                     .accounting
                     .record_interval(now, &active[m], observed, &decisions[m]);
             }
+            journal_route_ticks(tel, now, lanes);
             let shrink_to = pool_to.filter(|&p| p < fleet.budget());
             // Price the decision's churn BEFORE staging it: every
             // replica the sticky re-pack would move charges one
@@ -1520,17 +1812,18 @@ fn drive_member(
     sim: SimConfig,
     tel: &Telemetry,
 ) {
-    let lane = &mut lanes[member];
+    let MemberLane { rng, router, .. } = &mut lanes[member];
     let mut formed = false;
     drive(
         fleet.member_mut(member),
         &profiles[member],
         stage,
         now,
-        &mut lane.rng,
+        rng,
         sim.service_noise,
         tel,
         member as u32,
+        router.as_mut(),
         &mut |s| tel.record(s),
         &mut |t, e| {
             formed |= matches!(e, Event::ServiceDone { .. });
@@ -1679,8 +1972,21 @@ mod tests {
         let (mut adapter, slas, traces) = fleet_fixture(24, 200);
         let profiles = adapter.profiles.clone();
         let sim = SimConfig { seed: 5, ..Default::default() };
-        let fm = run_fleet_des(
-            &profiles, &slas, 10.0, 8.0, sim, &mut adapter, &traces, "fleet-ipa", 24,
+        let fm = run_fleet(
+            FleetDesParams {
+                profiles: &profiles,
+                slas: &slas,
+                interval: 10.0,
+                apply_delay: 8.0,
+                sim,
+                system: "fleet-ipa",
+                budget: 24,
+                faults: &[],
+                router: None,
+                telemetry: None,
+            },
+            &mut adapter,
+            &traces,
         );
         assert_eq!(fm.members.len(), 3);
         for m in &fm.members {
@@ -1702,7 +2008,22 @@ mod tests {
             let (mut adapter, slas, traces) = fleet_fixture(20, 120);
             let profiles = adapter.profiles.clone();
             let sim = SimConfig { seed: 9, ..Default::default() };
-            run_fleet_des(&profiles, &slas, 10.0, 8.0, sim, &mut adapter, &traces, "fleet", 20)
+            run_fleet(
+                FleetDesParams {
+                    profiles: &profiles,
+                    slas: &slas,
+                    interval: 10.0,
+                    apply_delay: 8.0,
+                    sim,
+                    system: "fleet",
+                    budget: 20,
+                    faults: &[],
+                    router: None,
+                    telemetry: None,
+                },
+                &mut adapter,
+                &traces,
+            )
         };
         let a = run();
         let b = run();

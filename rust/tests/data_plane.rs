@@ -5,6 +5,10 @@
 //! live-engine smoke over both hot paths (sharded rings vs the legacy
 //! single lock).
 
+// The old fleet entry-point names (run_fleet_des* / serve_fleet_*)
+// are exercised on purpose until their deprecation window closes.
+#![allow(deprecated)]
+
 use std::collections::VecDeque;
 use std::sync::Arc;
 

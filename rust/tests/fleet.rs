@@ -11,6 +11,10 @@
 //!    drop/completion counts (the fleet twin of
 //!    `tests/cluster_parity.rs`).
 
+// The old fleet entry-point names (run_fleet_des* / serve_fleet_*)
+// are exercised on purpose until their deprecation window closes.
+#![allow(deprecated)]
+
 use std::sync::Arc;
 
 use ipa::coordinator::adapter::AdapterConfig;

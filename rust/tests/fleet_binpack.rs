@@ -17,6 +17,10 @@
 //!     uncapped batch waits, latency-critical members get capped waits,
 //!     keyed through `FleetTuning::sla_classes` on both drivers.
 
+// The old fleet entry-point names (run_fleet_des* / serve_fleet_*)
+// are exercised on purpose until their deprecation window closes.
+#![allow(deprecated)]
+
 use std::sync::Arc;
 
 use ipa::coordinator::adapter::AdapterConfig;

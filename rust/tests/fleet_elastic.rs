@@ -18,6 +18,10 @@
 //!     perturb the counts), plus a live-engine smoke run with real
 //!     ticks asserting the pool-bounds invariant on a wall clock.
 
+// The old fleet entry-point names (run_fleet_des* / serve_fleet_*)
+// are exercised on purpose until their deprecation window closes.
+#![allow(deprecated)]
+
 use std::sync::Arc;
 
 use ipa::cluster::drop_policy::DropPolicy;

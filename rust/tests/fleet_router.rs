@@ -1,0 +1,322 @@
+//! Fleet front door: the per-member router + admission gate, end to
+//! end on both clocks.
+//!
+//! (a) property: `LeastLoaded` always lands an arrival on a replica
+//!     whose in-flight count was minimal at pick time, across random
+//!     route/complete interleavings and topology sizes;
+//! (b) zone affinity: a spread member on a two-zone pool routes
+//!     zone-local while both zones live, and starts paying cross-zone
+//!     hops only after a mid-run `kill_zone` removes its local
+//!     replicas;
+//! (c) clock parity: the same routed fleet through the DES and the
+//!     live engine produces identical per-member routed counts;
+//! (d) determinism: a routed + admission-controlled DES run journals
+//!     and completes byte-identically at any epoch worker count;
+//! (e) admission: a 10× flash crowd is absorbed by degrading
+//!     (brownouts in the journal, completions keep flowing), not by
+//!     shedding.
+
+use std::sync::Arc;
+
+use ipa::coordinator::adapter::AdapterConfig;
+use ipa::fleet::nodes::NodeInventory;
+use ipa::fleet::router::{RoutePolicy, Router, RouterConfig};
+use ipa::fleet::run::FleetRun;
+use ipa::fleet::solver::{FleetAdapter, FleetTuning};
+use ipa::fleet::spec::FleetSpec;
+use ipa::models::accuracy::AccuracyMetric;
+use ipa::predictor::{Predictor, ReactivePredictor};
+use ipa::profiler::analytic::pipeline_profiles;
+use ipa::profiler::profile::PipelineProfiles;
+use ipa::queueing::Request;
+use ipa::serving::engine::ServeConfig;
+use ipa::serving::loadgen::LoadGenConfig;
+use ipa::simulator::sim::{run_fleet, FleetDesParams, SimConfig, ZoneFault};
+use ipa::telemetry::{Telemetry, TelemetryConfig};
+use ipa::util::quickcheck::{check, prop_assert};
+use ipa::workload::trace::Trace;
+use ipa::workload::tracegen::Pattern;
+
+fn predictors(n: usize) -> Vec<Box<dyn Predictor + Send>> {
+    (0..n)
+        .map(|_| Box::new(ReactivePredictor::default()) as Box<dyn Predictor + Send>)
+        .collect()
+}
+
+fn req(id: u64) -> Request {
+    Request { id, arrival: 0.0, stage_arrival: 0.0 }
+}
+
+// ---------------------------------------------------------------------------
+// (a) LeastLoaded invariant
+// ---------------------------------------------------------------------------
+
+/// Property: whatever interleaving of arrivals and batch completions a
+/// `LeastLoaded` router sees, every routed arrival lands on a replica
+/// whose in-flight count was the minimum across all replicas at pick
+/// time.
+#[test]
+fn prop_least_loaded_always_picks_a_min_inflight_replica() {
+    check("least-loaded picks a min-inflight replica", 200, |g| {
+        let n = g.usize(1, 6);
+        let cfg = RouterConfig { policy: RoutePolicy::LeastLoaded, ..RouterConfig::default() };
+        let mut r = Router::new(cfg, 1.0, Vec::new());
+        r.set_topology(n, Vec::new(), 0.01);
+        let mut outstanding: Vec<u64> = Vec::new();
+        let ops = g.usize(1, 60);
+        for id in 0..ops as u64 {
+            if g.bool() || outstanding.is_empty() {
+                let min = *r.inflight().iter().min().unwrap();
+                match r.route(id, 0.0) {
+                    ipa::fleet::router::RouteOutcome::Route { replica, .. } => {
+                        prop_assert(
+                            r.inflight()[replica] == min + 1,
+                            "routed replica was not least loaded",
+                        )?;
+                        outstanding.push(id);
+                    }
+                    o => return Err(format!("admission off, got {o:?}")),
+                }
+            } else {
+                // complete a random prefix of the outstanding requests
+                let k = g.usize(1, outstanding.len() + 1);
+                let batch: Vec<Request> = outstanding.drain(..k).map(req).collect();
+                r.on_batch(&batch);
+            }
+        }
+        prop_assert(
+            r.inflight().iter().sum::<u32>() as usize == outstanding.len(),
+            "in-flight total drifted from outstanding tags",
+        )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (b) zone affinity through a mid-run zone kill
+// ---------------------------------------------------------------------------
+
+/// A spread member keeps ≥ 1 stage-0 replica per zone while both zones
+/// live, so `ZoneLocalFirst` almost never crosses; after `kill_zone`
+/// drains `west`, every west-origin arrival is forced across.
+#[test]
+fn zone_local_first_crosses_only_after_the_local_zone_dies() {
+    let mut fleet = FleetSpec::demo3();
+    fleet.members.truncate(2); // video-edge + audio-social
+    fleet.members[0].spread = true;
+    fleet.members[0].pattern = Pattern::SteadyLow;
+    fleet.members[1].pattern = Pattern::SteadyLow;
+    let inv = NodeInventory::parse("3x(8c,32g,0a)@east+3x(8c,32g,0a)@west").unwrap();
+    fleet.nodes = Some(inv.clone());
+    let tuning = FleetTuning {
+        nodes: Some(inv),
+        spread: Some(fleet.spreads()),
+        ..Default::default()
+    };
+    let rc = RouterConfig { policy: RoutePolicy::ZoneLocalFirst, ..RouterConfig::default() };
+    let run = FleetRun::new(fleet, tuning).seconds(180).router(rc);
+
+    let calm = run.sim(SimConfig { seed: 11, ..Default::default() }).unwrap();
+    let faulted = run
+        .clone()
+        .faults(vec![ZoneFault { at: 75.0, zone: "west".into() }])
+        .sim(SimConfig { seed: 11, ..Default::default() })
+        .unwrap();
+
+    // both zones alive: the spread member's stage 0 spans east+west, so
+    // a local replica (nearly) always exists — transient rolling
+    // reconfigurations are the only slack allowed
+    let calm_stats = &calm.metrics.router[0];
+    assert!(calm_stats.total_routed() > 200, "thin trace: {}", calm_stats.total_routed());
+    assert!(
+        calm_stats.cross_zone * 20 <= calm_stats.total_routed(),
+        "calm run crossed zones for {} of {} arrivals",
+        calm_stats.cross_zone,
+        calm_stats.total_routed()
+    );
+
+    // west dead from t=75: ~half of later arrivals originate in west
+    // and MUST cross to the east survivors
+    assert_eq!(faulted.metrics.pool.zone_kills, 1, "the scripted fault fired");
+    let faulted_stats = &faulted.metrics.router[0];
+    assert!(
+        faulted_stats.cross_zone > 50,
+        "post-kill west-origin arrivals should cross: {} crossings of {}",
+        faulted_stats.cross_zone,
+        faulted_stats.total_routed()
+    );
+    assert!(
+        faulted_stats.cross_zone > calm_stats.cross_zone,
+        "the outage must increase cross-zone traffic"
+    );
+    // the door stayed open throughout (routing only, no admission)
+    assert_eq!(faulted_stats.shed, 0);
+    assert!(faulted.metrics.members[0].completed_count() > 100);
+}
+
+// ---------------------------------------------------------------------------
+// (c) DES ↔ live parity of routed counts
+// ---------------------------------------------------------------------------
+
+/// The same routed fleet spec through both clocks: per-member arrival
+/// counts are identical by construction (same trace, same seed), and
+/// with admission off the router must route every one of them —
+/// identical routed totals, zero shed, on both clocks.
+#[test]
+fn routed_counts_agree_across_des_and_live() {
+    let mut spec = FleetSpec::demo3();
+    spec.seconds = 40;
+    let rc = RouterConfig { policy: RoutePolicy::RoundRobin, ..RouterConfig::default() };
+    let run = FleetRun::new(spec, FleetTuning::default()).router(rc);
+
+    let des = run.sim(SimConfig { seed: 5, ..Default::default() }).unwrap();
+    let cfg = ServeConfig {
+        artifact_dir: String::new(),
+        executors: 0,
+        max_workers: 4,
+        interval: 4.0,
+        apply_delay: 0.5,
+        use_lstm: false,
+        profile_batches: vec![],
+        profile_reps: 0,
+        sla_floor: 0.0,
+        legacy_lock: false,
+    };
+    let live = run.serve(&cfg, LoadGenConfig { time_scale: 0.02, seed: 5 }).unwrap();
+
+    assert_eq!(des.metrics.members.len(), live.members.len());
+    for m in 0..des.metrics.members.len() {
+        let d = &des.metrics.router[m];
+        let l = &live.router[m];
+        let arrivals = des.metrics.members[m].requests.len();
+        assert!(arrivals > 40, "member {m}: thin trace ({arrivals})");
+        assert_eq!(
+            arrivals,
+            live.members[m].metrics.requests.len(),
+            "member {m}: arrival counts diverge"
+        );
+        assert_eq!(
+            d.total_routed() as usize, arrivals,
+            "member {m}: DES router must route every arrival"
+        );
+        assert_eq!(
+            d.total_routed(),
+            l.total_routed(),
+            "member {m}: routed counts diverge across clocks"
+        );
+        assert_eq!((d.shed, l.shed), (0, 0), "member {m}: admission is off");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (d) routed DES determinism at any worker count
+// ---------------------------------------------------------------------------
+
+/// A routed + admission-controlled + traced fleet DES run is
+/// byte-identical at 1, 2 and 8 epoch workers: same per-request
+/// outcomes, same router counters, same journal bytes.
+#[test]
+fn routed_des_run_is_byte_identical_at_any_worker_count() {
+    let mut spec = FleetSpec::demo3();
+    spec.seconds = 60;
+    let rc = RouterConfig {
+        policy: RoutePolicy::LeastLoaded,
+        admission: true,
+        ..RouterConfig::default()
+    };
+    let run_at = |threads: usize| {
+        let tel = Arc::new(Telemetry::new(TelemetryConfig::default(), 3));
+        let run = FleetRun::new(spec.clone(), FleetTuning::default())
+            .router(rc.clone())
+            .telemetry(Arc::clone(&tel));
+        let out = run
+            .sim(SimConfig { seed: 7, sim_threads: threads, ..Default::default() })
+            .unwrap();
+        (out, tel.journal().to_jsonl())
+    };
+
+    let (base, base_journal) = run_at(1);
+    for threads in [2usize, 8] {
+        let (other, journal) = run_at(threads);
+        assert_eq!(
+            base_journal, journal,
+            "journal bytes diverge at {threads} workers"
+        );
+        for m in 0..3 {
+            assert_eq!(
+                base.metrics.members[m].requests, other.metrics.members[m].requests,
+                "member {m}: per-request outcomes diverge at {threads} workers"
+            );
+            assert_eq!(
+                base.metrics.router[m], other.metrics.router[m],
+                "member {m}: router counters diverge at {threads} workers"
+            );
+        }
+    }
+    // the run actually exercised the door
+    assert!(base.metrics.router.iter().map(|s| s.total_routed()).sum::<u64>() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// (e) flash crowd: degrade, don't drop
+// ---------------------------------------------------------------------------
+
+/// A 10× flash crowd against a brownout-first door (low admit
+/// threshold, effectively-unreachable shed threshold): the router
+/// degrades under pressure and sheds nothing, completions keep
+/// flowing, and the journal records the brownouts.
+#[test]
+fn flash_crowd_degrades_but_never_sheds() {
+    let spec = FleetSpec::demo3().members[0].spec().unwrap(); // video
+    let profs: Vec<PipelineProfiles> = vec![pipeline_profiles(&spec)];
+    let slas = vec![spec.sla_e2e()];
+    let mut rates = vec![4.0; 30];
+    rates.extend(vec![40.0; 30]); // 10× flash crowd
+    rates.extend(vec![4.0; 20]);
+    let traces = vec![Trace::new("video-flash", rates)];
+    let mut adapter = FleetAdapter::new(
+        vec![spec],
+        profs.clone(),
+        AccuracyMetric::Pas,
+        8,
+        AdapterConfig::default(),
+        predictors(1),
+    )
+    .unwrap();
+    let tel = Telemetry::new(TelemetryConfig::default(), 1);
+    let fm = run_fleet(
+        FleetDesParams {
+            profiles: &profs,
+            slas: &slas,
+            interval: 10.0,
+            apply_delay: 8.0,
+            sim: SimConfig { seed: 9, ..Default::default() },
+            system: "flash",
+            budget: 8,
+            faults: &[],
+            router: Some(RouterConfig {
+                policy: RoutePolicy::LeastLoaded,
+                admission: true,
+                admit_threshold: 0.3,
+                shed_threshold: 1e6,
+                ..RouterConfig::default()
+            }),
+            telemetry: Some(&tel),
+        },
+        &mut adapter,
+        &traces,
+    );
+
+    let stats = &fm.router[0];
+    assert!(stats.degraded > 0, "the crowd must trip the brownout stage");
+    assert_eq!(stats.shed, 0, "shed threshold is unreachable by construction");
+    assert_eq!(
+        stats.total_routed() as usize,
+        fm.members[0].requests.len(),
+        "every arrival was still admitted"
+    );
+    assert!(fm.members[0].completed_count() > 100, "completions kept flowing");
+    let kinds: Vec<String> =
+        tel.journal().entries().iter().map(|e| e.kind.clone()).collect();
+    assert!(kinds.iter().any(|k| k == "degrade"), "journal records brownouts: {kinds:?}");
+    assert!(kinds.iter().any(|k| k == "route"), "journal records routing ticks");
+}

@@ -15,6 +15,10 @@
 //!     history reproduces `pack` byte for byte and the placed joint
 //!     solve equals the PR-4 packed solve.
 
+// The old fleet entry-point names (run_fleet_des* / serve_fleet_*)
+// are exercised on purpose until their deprecation window closes.
+#![allow(deprecated)]
+
 use ipa::coordinator::adapter::AdapterConfig;
 use ipa::fleet::core::FleetReconfig;
 use ipa::fleet::nodes::{NodeInventory, NodePool, NodeShape, PackItem};

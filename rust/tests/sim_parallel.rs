@@ -8,6 +8,10 @@
 //! histograms, control-plane journals and span dumps.  Zone faults
 //! landing mid-run must barrier identically too.
 
+// The old fleet entry-point names (run_fleet_des* / serve_fleet_*)
+// are exercised on purpose until their deprecation window closes.
+#![allow(deprecated)]
+
 use ipa::coordinator::adapter::AdapterConfig;
 use ipa::fleet::nodes::NodeInventory;
 use ipa::fleet::solver::{FleetAdapter, FleetTuning};

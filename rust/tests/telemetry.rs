@@ -6,6 +6,10 @@
 //! and tracing never perturbs the DES (traced == untraced == legacy
 //! clock, per-request).
 
+// The old fleet entry-point names (run_fleet_des* / serve_fleet_*)
+// are exercised on purpose until their deprecation window closes.
+#![allow(deprecated)]
+
 use ipa::coordinator::adapter::{Adapter, AdapterConfig, Policy};
 use ipa::fleet::solver::FleetAdapter;
 use ipa::metrics::RunMetrics;

@@ -6,8 +6,8 @@
 //! `fleet_binpack`, `fleet_topology`, `fleet_scale`, `sim_parallel`)
 //! regress when `mean_s` grows past
 //! `baseline × (1 + threshold)`; throughput sections (`simulator`,
-//! `fleet_sim`, `data_plane`, `telemetry`) regress when `items_per_s`
-//! falls below `baseline × (1 − threshold)`.  Rows or sections absent from the
+//! `fleet_sim`, `fleet_router`, `data_plane`, `telemetry`) regress when
+//! `items_per_s` falls below `baseline × (1 − threshold)`.  Rows or sections absent from the
 //! baseline are reported as new and never fail; a missing baseline
 //! FILE passes outright (the first run seeds the cache).
 //!
@@ -28,7 +28,8 @@ const TIME_SECTIONS: &[&str] = &[
     "sim_parallel",
 ];
 /// Sections judged on `items_per_s` (higher=better).
-const THROUGHPUT_SECTIONS: &[&str] = &["simulator", "fleet_sim", "data_plane", "telemetry"];
+const THROUGHPUT_SECTIONS: &[&str] =
+    &["simulator", "fleet_sim", "fleet_router", "data_plane", "telemetry"];
 
 struct Row {
     name: String,
